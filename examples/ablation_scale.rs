@@ -1,0 +1,106 @@
+//! Regenerates the error-measure ablation (Figs. 5 and 6): the
+//! error-aware power scale (delta_eps / lambda, Eq. 17) versus constant
+//! scales.
+//!
+//! The paper's point: no single constant exponent matches the adaptive
+//! one across NFE — the measured error feeds information the constant
+//! cannot have. Output is a CSV (one series per scale) plus a markdown
+//! summary.
+//!
+//! ```text
+//! cargo run --release --example ablation_scale -- \
+//!     --dataset checkerboard --out results/fig5_scale_church.md
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::experiments::report::{write_csv, write_markdown_table, Table};
+use era_solver::experiments::sweep::{run_sweep, EvalBackend, SweepConfig};
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::schedule::GridKind;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out", value: Some("path"), help: "markdown output" },
+    OptSpec { name: "samples", value: Some("n"), help: "samples per cell (default: 4096)" },
+    OptSpec { name: "scales", value: Some("a,b"), help: "constant scales (default: 0.25,0.5,1,2,4)" },
+    OptSpec { name: "seed", value: Some("n"), help: "base seed (default: 0)" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("ablation_scale: error-aware vs constant scale (Figs. 5/6)", OPTS)?;
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out = args.str_or("out", &format!("results/fig_scale_{dataset}.md"));
+    let n_samples = args.usize_or("samples", 4096)?;
+    let seed = args.u64_or("seed", 0)?;
+    let scales: Vec<f64> = args
+        .list_or("scales", &["0.25", "0.5", "1", "2", "4"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| format!("bad scale '{s}'")))
+        .collect::<Result<_, _>>()?;
+
+    // Paper protocol: Fig. 5 uses k=3 on LSUN-Church; Fig. 6 uses k=4 on
+    // CIFAR-10.
+    let (k, grid, lambda, t_end, title) = if dataset == "gmm8" {
+        (4, GridKind::LogSnr, 0.9, 1e-3, "Fig. 6 (CIFAR-10 -> gmm8, k=4)")
+    } else {
+        (3, GridKind::Uniform, 0.3, 1e-4, "Fig. 5 (LSUN-Church -> checkerboard, k=3)")
+    };
+    let nfes = vec![10usize, 15, 20, 40, 50];
+
+    let engine = Arc::new(PjRtEngine::new(args.str_or("artifacts", "artifacts"))?);
+    let backend = EvalBackend::pjrt(engine, &dataset)?;
+
+    let mut solvers = vec![format!("era-{k}@{lambda}")];
+    let mut row_order = vec!["error-aware (Eq. 17)".to_string()];
+    for s in &scales {
+        solvers.push(format!("era-const-{k}@{s}"));
+        row_order.push(format!("constant scale {s}"));
+    }
+    let cfg = SweepConfig {
+        solvers,
+        nfes: nfes.clone(),
+        grid,
+        t_end,
+        n_samples,
+        batch: 256,
+        seed,
+    };
+    let mut res = run_sweep(&backend, &cfg);
+    for cell in &mut res.cells {
+        cell.solver = if cell.solver.starts_with("era-const-") {
+            let scale = cell.solver.split('@').nth(1).unwrap();
+            format!("constant scale {scale}")
+        } else {
+            "error-aware (Eq. 17)".to_string()
+        };
+    }
+    let table = Table::from_sweep(title, &res, &row_order, &nfes);
+    write_markdown_table(&out, &table).map_err(|e| e.to_string())?;
+
+    // CSV series for the figure.
+    let mut header: Vec<&str> = vec!["nfe"];
+    let mut columns: Vec<Vec<f64>> = vec![nfes.iter().map(|&n| n as f64).collect()];
+    let owned_labels = row_order.clone();
+    for label in &owned_labels {
+        header.push(label);
+        columns.push(
+            nfes.iter()
+                .map(|&n| res.fid(label, n).unwrap_or(f64::NAN))
+                .collect(),
+        );
+    }
+    let csv_path = out.replace(".md", ".csv");
+    write_csv(&csv_path, &header, &columns).map_err(|e| e.to_string())?;
+    eprintln!("wrote {out} and {csv_path}");
+    Ok(())
+}

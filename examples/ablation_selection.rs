@@ -1,0 +1,127 @@
+//! Regenerates the ERS-vs-fixed selection ablation (Tabs. 4 and 5) and
+//! the Fig. 4 qualitative comparison.
+//!
+//! For each Lagrange order k = 3..6 the sweep runs ERA-Solver with the
+//! error-robust selection (ERS) and with the fixed last-k selection at
+//! the paper's NFE axis. The paper's signature result — fixed selection
+//! detonating at high order (k=6: FID 315 at NFE 20 on LSUN-Church)
+//! while ERS stays stable — is the shape to look for.
+//!
+//! ```text
+//! cargo run --release --example ablation_selection -- \
+//!     --dataset checkerboard --out results/table4_ers_church.md --dump
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::experiments::report::{ascii_density, write_markdown_table, Table};
+use era_solver::experiments::sweep::{generate, EvalBackend, SweepConfig, run_sweep};
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::schedule::GridKind;
+use era_solver::solvers::SolverKind;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out", value: Some("path"), help: "markdown output" },
+    OptSpec { name: "samples", value: Some("n"), help: "samples per cell (default: 4096)" },
+    OptSpec { name: "orders", value: Some("a,b"), help: "Lagrange orders (default: 3,4,5,6)" },
+    OptSpec { name: "dump", value: None, help: "also dump Fig. 4 density plots (k=5)" },
+    OptSpec { name: "lambda", value: Some("x"), help: "override ERS lambda (default: protocol)" },
+    OptSpec { name: "nfes", value: Some("a,b"), help: "override NFE axis" },
+    OptSpec { name: "seed", value: Some("n"), help: "base seed (default: 0)" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("ablation_selection: ERS vs fixed selection (Tabs. 4/5, Fig. 4)", OPTS)?;
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out = args.str_or("out", &format!("results/table_ers_{dataset}.md"));
+    let n_samples = args.usize_or("samples", 4096)?;
+    let seed = args.u64_or("seed", 0)?;
+    let orders: Vec<usize> = args
+        .list_or("orders", &["3", "4", "5", "6"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| format!("bad order '{s}'")))
+        .collect::<Result<_, _>>()?;
+
+    // Paper protocol: lambda 5 / uniform on LSUN stand-ins, lambda 15 /
+    // logSNR on the CIFAR stand-in; NFE axis matches Tab. 4 / Tab. 5.
+    let (grid, proto_lambda, proto_nfes, title) = if dataset == "gmm8" {
+        (GridKind::LogSnr, 0.9, vec![10usize, 15, 20, 50], "Tab. 5 (CIFAR-10 -> gmm8)")
+    } else {
+        (GridKind::Uniform, 0.3, vec![10usize, 15, 20, 40, 50], "Tab. 4 (LSUN-Church -> checkerboard)")
+    };
+    let lambda = args.f64_or("lambda", proto_lambda)?;
+    let nfes: Vec<usize> = match args.present("nfes") {
+        false => proto_nfes,
+        true => args
+            .list_or("nfes", &[])
+            .iter()
+            .map(|s| s.parse().map_err(|_| format!("bad nfe '{s}'")))
+            .collect::<Result<_, _>>()?,
+    };
+
+    let engine = Arc::new(PjRtEngine::new(args.str_or("artifacts", "artifacts"))?);
+    let backend = EvalBackend::pjrt(engine, &dataset)?;
+
+    let mut solvers = Vec::new();
+    let mut row_order = Vec::new();
+    for &k in &orders {
+        solvers.push(format!("era-fixed-{k}"));
+        solvers.push(format!("era-{k}@{lambda}"));
+        row_order.push(format!("ERA-Solver-{k} fixed"));
+        row_order.push(format!("ERA-Solver-{k} ERS"));
+    }
+    let cfg = SweepConfig {
+        solvers: solvers.clone(),
+        nfes: nfes.clone(),
+        grid,
+        t_end: if dataset == "gmm8" { 1e-3 } else { 1e-4 },
+        n_samples,
+        batch: 256,
+        seed,
+    };
+    let mut res = run_sweep(&backend, &cfg);
+    // Rename rows to the paper's labels.
+    for cell in &mut res.cells {
+        cell.solver = if let Some(k) = cell.solver.strip_prefix("era-fixed-") {
+            format!("ERA-Solver-{k} fixed")
+        } else if let Some(rest) = cell.solver.strip_prefix("era-") {
+            let k = rest.split('@').next().unwrap();
+            format!("ERA-Solver-{k} ERS")
+        } else {
+            cell.solver.clone()
+        };
+    }
+    let table = Table::from_sweep(title, &res, &row_order, &nfes);
+    write_markdown_table(&out, &table).map_err(|e| e.to_string())?;
+    eprintln!("wrote {out}");
+
+    if args.present("dump") && backend.dim() == 2 {
+        // Fig. 4: qualitative ERS-vs-fixed at k=5.
+        let nfe = 20;
+        for (name, solver) in [
+            ("fig4_fixed5", format!("era-fixed-5")),
+            ("fig4_ers5", format!("era-5@{lambda}")),
+        ] {
+            let kind = SolverKind::parse(&solver).unwrap();
+            let (samples, _) =
+                generate(&backend, &kind, nfe, grid, cfg.t_end, 2048, 256, seed);
+            let art = ascii_density(&samples, 33, 3.2);
+            let path = format!("results/{name}_{dataset}.txt");
+            std::fs::create_dir_all("results").map_err(|e| e.to_string())?;
+            std::fs::write(&path, &art).map_err(|e| e.to_string())?;
+            println!("\n{solver} @ {nfe} NFE ({dataset}):\n{art}");
+            eprintln!("wrote {path}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Regenerates the paper's error-analysis figures:
+//!
+//! * **Fig. 1** — training-time noise-estimation error vs t (from the
+//!   train reports written at `make artifacts` time), demonstrating the
+//!   premise that the error grows as t -> 0.
+//! * **Fig. 3** — sampling-time error measure delta_eps (Eq. 15) per
+//!   step plus the ERS-selected buffer indices, showing the selection
+//!   leaning toward early (accurate) estimates as the error rises.
+//! * **Fig. 7** — round-trip error (Eq. 18): diffuse generated samples
+//!   back to time t and measure ||eps - eps_theta(x_t^gen, t)|| per
+//!   solver; an error-robust solver stays closer to the model's own
+//!   denoising field.
+//!
+//! ```text
+//! cargo run --release --example error_analysis -- --out-dir results
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::experiments::report::write_csv;
+use era_solver::rng::Rng;
+use era_solver::runtime::{PjRtEngine, PjRtEps, TrainReport};
+use era_solver::solvers::era::{EraSolver, Selection};
+use era_solver::solvers::schedule::{make_grid, GridKind};
+use era_solver::solvers::{sample_with, SolverKind};
+use era_solver::tensor::Tensor;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out-dir", value: Some("dir"), help: "output directory (default: results)" },
+    OptSpec { name: "nfe", value: Some("n"), help: "NFE for Figs. 3/7 (default: 20)" },
+    OptSpec { name: "samples", value: Some("n"), help: "batch for Figs. 3/7 (default: 512)" },
+    OptSpec { name: "fig1", value: None, help: "only Fig. 1" },
+    OptSpec { name: "fig3", value: None, help: "only Fig. 3" },
+    OptSpec { name: "fig7", value: None, help: "only Fig. 7" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("error_analysis: Figs. 1/3/7", OPTS)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out_dir = args.str_or("out-dir", "results");
+    let nfe = args.usize_or("nfe", 20)?;
+    let n = args.usize_or("samples", 512)?;
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let all = !(args.present("fig1") || args.present("fig3") || args.present("fig7"));
+
+    let engine = Arc::new(PjRtEngine::new(&artifacts)?);
+    let sched = engine.manifest().schedule;
+    let dim = engine.dataset(&dataset)?.dim;
+
+    // ---- Fig. 1: training-time error curve -------------------------------
+    if all || args.present("fig1") {
+        let datasets: Vec<String> = engine.manifest().datasets.keys().cloned().collect();
+        let mut header: Vec<String> = vec!["t".into()];
+        let mut columns: Vec<Vec<f64>> = Vec::new();
+        for (i, ds) in datasets.iter().enumerate() {
+            let rep = TrainReport::load(&artifacts, ds)?;
+            if i == 0 {
+                columns.push(rep.error_curve.iter().map(|p| p.0).collect());
+            }
+            header.push(ds.clone());
+            columns.push(rep.error_curve.iter().map(|p| p.1).collect());
+        }
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let path = format!("{out_dir}/fig1_train_error.csv");
+        write_csv(&path, &href, &columns).map_err(|e| e.to_string())?;
+        // Print the trend check the paper's premise rests on.
+        for ds in &datasets {
+            let rep = TrainReport::load(&artifacts, ds)?;
+            let first = rep.error_curve.first().unwrap();
+            let last = rep.error_curve.last().unwrap();
+            println!(
+                "fig1 {ds}: err(t={:.3})={:.4} vs err(t={:.3})={:.4} (grows toward 0: {})",
+                first.0,
+                first.1,
+                last.0,
+                last.1,
+                first.1 > last.1
+            );
+        }
+        eprintln!("wrote {path}");
+    }
+
+    // ---- Fig. 3: sampling-time delta_eps + selected indices --------------
+    if all || args.present("fig3") {
+        let grid_kind = if dataset == "gmm8" { GridKind::LogSnr } else { GridKind::Uniform };
+        let grid = make_grid(&sched, grid_kind, nfe, 1.0, 1e-4);
+        let mut rng = Rng::new(0);
+        let mut solver = EraSolver::new(
+            sched,
+            grid,
+            rng.normal_tensor(n, dim),
+            4,
+            Selection::ErrorRobust { lambda: 0.3 },
+        );
+        let model = PjRtEps::new(&engine, &dataset)?;
+        let _ = sample_with(&mut solver, &model);
+
+        let steps: Vec<f64> = solver.selection_trace().iter().map(|t| t.step as f64).collect();
+        let errs: Vec<f64> = solver.selection_trace().iter().map(|t| t.delta_eps).collect();
+        let min_idx: Vec<f64> =
+            solver.selection_trace().iter().map(|t| t.indices[0] as f64).collect();
+        let span: Vec<f64> = solver
+            .selection_trace()
+            .iter()
+            .map(|t| (t.indices[t.indices.len() - 1] - t.indices[0]) as f64)
+            .collect();
+        let path = format!("{out_dir}/fig3_delta_eps_{dataset}.csv");
+        write_csv(
+            &path,
+            &["step", "delta_eps", "earliest_selected", "selection_span"],
+            &[steps, errs.clone(), min_idx, span],
+        )
+        .map_err(|e| e.to_string())?;
+        println!(
+            "fig3 {dataset}: delta_eps first={:.4} last={:.4} (sampling-time error rises: {})",
+            errs.first().unwrap(),
+            errs.last().unwrap(),
+            errs.last() > errs.first()
+        );
+        eprintln!("wrote {path}");
+    }
+
+    // ---- Fig. 7: round-trip error per solver ------------------------------
+    if all || args.present("fig7") {
+        let model = PjRtEps::new(&engine, &dataset)?;
+        let grid_kind = if dataset == "gmm8" { GridKind::LogSnr } else { GridKind::Uniform };
+        let solvers = ["iadams", "dpm-fast", "era-4@0.3"];
+        let ts: Vec<f64> = (1..=16).map(|i| i as f64 / 16.0).collect();
+        let mut columns: Vec<Vec<f64>> = vec![ts.clone()];
+        let mut header: Vec<String> = vec!["t".into()];
+
+        for sname in solvers {
+            let kind = SolverKind::parse(sname).unwrap();
+            let steps = kind.steps_for_nfe(nfe);
+            let grid = make_grid(&sched, grid_kind, steps, 1.0, 1e-4);
+            let mut rng = Rng::new(1);
+            let x0 = rng.normal_tensor(n, dim);
+            let mut solver = kind.build(sched, grid, x0, 1, nfe);
+            let gen = sample_with(&mut *solver, &model);
+
+            // Diffuse the generated batch back to each probe time with a
+            // *shared* noise draw (same seed across solvers) and measure
+            // Eq. 18 through the trained network.
+            let mut series = Vec::with_capacity(ts.len());
+            for &t in &ts {
+                let mut noise_rng = Rng::for_stream(99, (t * 1e6) as u64);
+                let eps_true = noise_rng.normal_tensor(n, dim);
+                let sab = sched.sqrt_alpha_bar(t) as f32;
+                let sig = sched.sigma(t) as f32;
+                let mut xt = gen.clone();
+                xt.scale(sab);
+                xt.axpy(sig, &eps_true);
+                let eps_hat = engine.eval_eps(&dataset, &xt, &vec![t as f32; n])?;
+                series.push(eps_hat.mean_row_dist(&eps_true) as f64);
+            }
+            let mean: f64 = series.iter().sum::<f64>() / series.len() as f64;
+            println!("fig7 {dataset} {sname}: mean round-trip error {mean:.4}");
+            header.push(sname.to_string());
+            columns.push(series);
+        }
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let path = format!("{out_dir}/fig7_roundtrip_{dataset}.csv");
+        write_csv(&path, &href, &columns).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

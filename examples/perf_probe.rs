@@ -1,0 +1,66 @@
+//! Perf probe: per-call cost of the PJRT hot-path primitives, used by
+//! the §Perf iteration log in EXPERIMENTS.md (quick, targeted numbers;
+//! the full suites live in `benches/`).
+//!
+//! ```text
+//! cargo run --release --example perf_probe
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::metrics::{self, Moments};
+use era_solver::rng::Rng;
+use era_solver::runtime::PjRtEngine;
+use era_solver::tensor::Tensor;
+
+fn main() {
+    let eng = Arc::new(PjRtEngine::new("artifacts").expect("run `make artifacts` first"));
+    eng.warmup("gmm8", &[256]).unwrap();
+    let mut rng = Rng::new(0);
+    let x = rng.normal_tensor(256, 2);
+    let t = vec![0.5f32; 256];
+    let n = 200u32;
+
+    // Denoiser artifact (the L2 graph incl. the L1 Pallas block).
+    for _ in 0..5 {
+        eng.eval_eps("gmm8", &x, &t).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        eng.eval_eps("gmm8", &x, &t).unwrap();
+    }
+    let per = t0.elapsed() / n;
+    // 3 res-blocks x 2 matmuls (128x128) x 256 rows ~ 50.3 MFLOP/eval.
+    let gflops = 50.33e6 / per.as_secs_f64() / 1e9;
+    println!("eval_eps 256x2 (W=128, 3 blocks): {per:?}/call  (~{gflops:.1} GFLOP/s)");
+
+    // Fused solver-update artifact vs its native Rust twin.
+    let e: Vec<Tensor> = (0..4).map(|_| rng.normal_tensor(256, 2)).collect();
+    let er: Vec<&Tensor> = e.iter().collect();
+    for _ in 0..5 {
+        eng.combine("gmm8", &er, &[0.25; 4], &x, (0.9, 0.1)).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        eng.combine("gmm8", &er, &[0.25; 4], &x, (0.9, 0.1)).unwrap();
+    }
+    println!("combine artifact 256x2 k=4: {:?}/call", t0.elapsed() / n);
+    let w32 = [0.25f32; 4];
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(Tensor::kernel_weighted_sum(&x, 0.9, 0.1, &er, &w32));
+    }
+    println!("native twin   256x2 k=4: {:?}/call", t0.elapsed() / n);
+
+    // FID at the high-dim stress point (sqrtm-bound).
+    let hi = rng.normal_tensor(2048, 64);
+    let rf = Moments::from_tensor(&rng.normal_tensor(2048, 64));
+    for _ in 0..3 {
+        metrics::fid(&hi, &rf);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..50 {
+        std::hint::black_box(metrics::fid(&hi, &rf));
+    }
+    println!("fid 2048x64: {:?}/call", t0.elapsed() / 50);
+}

@@ -1,0 +1,83 @@
+//! Qualitative sample comparison (Figs. 8–12 stand-in): density dumps of
+//! generated samples per solver and NFE, as ASCII plots + CSV point
+//! clouds. The paper's visual claim — ERA output is already on-manifold
+//! at NFE 10–15 where baselines still drift — shows up directly in the
+//! densities.
+//!
+//! ```text
+//! cargo run --release --example qualitative -- --dataset checkerboard
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::experiments::report::{ascii_density, write_csv};
+use era_solver::experiments::sweep::{generate, EvalBackend};
+use era_solver::metrics;
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::schedule::GridKind;
+use era_solver::solvers::SolverKind;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out-dir", value: Some("dir"), help: "output dir (default: results/qualitative)" },
+    OptSpec { name: "samples", value: Some("n"), help: "samples per plot (default: 2048)" },
+    OptSpec { name: "solvers", value: Some("a,b"), help: "solvers (default: ddim,dpm-fast,era-4@0.3)" },
+    OptSpec { name: "nfes", value: Some("a,b"), help: "NFE axis (default: 5,8,10,12,15,20)" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("qualitative: per-solver sample densities (Figs. 8-12)", OPTS)?;
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out_dir = args.str_or("out-dir", "results/qualitative");
+    let n = args.usize_or("samples", 2048)?;
+    let solvers = args.list_or("solvers", &["ddim", "dpm-fast", "era-4@0.3"]);
+    let nfes: Vec<usize> = args
+        .list_or("nfes", &["5", "8", "10", "12", "15", "20"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| format!("bad nfe '{s}'")))
+        .collect::<Result<_, _>>()?;
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+
+    let engine = Arc::new(PjRtEngine::new(args.str_or("artifacts", "artifacts"))?);
+    let backend = EvalBackend::pjrt(engine, &dataset)?;
+    let reference = backend.reference();
+    let grid = if dataset == "gmm8" { GridKind::LogSnr } else { GridKind::Uniform };
+
+    for solver in &solvers {
+        let kind = SolverKind::parse(solver).ok_or(format!("unknown solver '{solver}'"))?;
+        for &nfe in &nfes {
+            if nfe < kind.min_nfe() {
+                println!("-- {solver} @ {nfe} NFE: below minimum budget, skipped");
+                continue;
+            }
+            let (samples, _) = generate(&backend, &kind, nfe, grid, 1e-4, n, 256, 3);
+            let fid = metrics::fid(&samples, &reference);
+            let stem = format!("{out_dir}/{dataset}_{}_nfe{nfe}", solver.replace('@', "_"));
+            if samples.cols() == 2 {
+                let art = ascii_density(&samples, 33, 3.2);
+                std::fs::write(format!("{stem}.txt"), &art).map_err(|e| e.to_string())?;
+                println!("-- {solver} @ {nfe} NFE (FID {fid:.3}):\n{art}");
+            } else {
+                println!("-- {solver} @ {nfe} NFE (FID {fid:.3}, dim {})", samples.cols());
+            }
+            // Point cloud (first 512 rows) for external plotting.
+            let keep = samples.rows().min(512);
+            let cols: Vec<Vec<f64>> = (0..samples.cols().min(2))
+                .map(|c| (0..keep).map(|r| samples.row(r)[c] as f64).collect())
+                .collect();
+            let header: Vec<&str> = ["x", "y"][..cols.len()].to_vec();
+            write_csv(&format!("{stem}.csv"), &header, &cols).map_err(|e| e.to_string())?;
+        }
+    }
+    eprintln!("wrote plots under {out_dir}/");
+    Ok(())
+}

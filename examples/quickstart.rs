@@ -1,0 +1,91 @@
+//! Quickstart: the full stack in one file.
+//!
+//! 1. Load the AOT artifacts through PJRT (`make artifacts` first).
+//! 2. Start the continuous-batching coordinator and the TCP server.
+//! 3. Sample a batch with ERA-Solver at 10 NFE through a real network
+//!    connection, print FID against the manifest's reference moments and
+//!    an ASCII density of the generated 2-D samples.
+//!
+//! ```text
+//! cargo run --release --example quickstart -- --dataset gmm8 --nfe 10
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::coordinator::{Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::experiments::report::ascii_density;
+use era_solver::metrics;
+use era_solver::runtime::PjRtEngine;
+use era_solver::server::{client::Client, Server, ServerConfig};
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: gmm8)" },
+    OptSpec { name: "solver", value: Some("name"), help: "solver (default: era)" },
+    OptSpec { name: "nfe", value: Some("n"), help: "evaluation budget (default: 10)" },
+    OptSpec { name: "samples", value: Some("n"), help: "samples to generate (default: 2048)" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("quickstart: sample through the full serving stack", OPTS)?;
+    let dataset = args.str_or("dataset", "gmm8");
+    let solver = args.str_or("solver", "era");
+    let nfe = args.usize_or("nfe", 10)?;
+    let n_samples = args.usize_or("samples", 2048)?;
+
+    // --- Layer 3 bring-up -------------------------------------------------
+    let engine = Arc::new(PjRtEngine::new(args.str_or("artifacts", "artifacts"))?);
+    engine.warmup(&dataset, &engine.manifest().batch_buckets.clone())?;
+    let entry = engine.dataset(&dataset)?.clone();
+    println!(
+        "loaded '{dataset}' (stands in for {}; dim {}, final train loss {:.4})",
+        entry.stands_in_for, entry.dim, entry.final_loss
+    );
+
+    let coord = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let server = Server::start(coord.clone(), ServerConfig::default())
+        .map_err(|e| e.to_string())?;
+    let addr = server.local_addr();
+    println!("serving on {addr}");
+
+    // --- A real client request --------------------------------------------
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    client.ping()?;
+    let spec = RequestSpec {
+        dataset: dataset.clone(),
+        solver: solver.clone(),
+        nfe,
+        n_samples,
+        grid: if dataset == "gmm8" { "logsnr".into() } else { "uniform".into() },
+        t_end: 1e-3,
+        seed: 7,
+    };
+    let t0 = std::time::Instant::now();
+    let (samples, server_seconds) = client.sample(&spec)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let fid = metrics::fid(&samples, &entry.ref_stats);
+    println!(
+        "\n{} samples via {solver}@{nfe} NFE in {:.3}s wall ({:.3}s server): FID {:.4}",
+        samples.rows(),
+        wall,
+        server_seconds,
+        fid
+    );
+    if samples.cols() == 2 {
+        println!("\nsample density:\n{}", ascii_density(&samples, 33, 3.2));
+    }
+    let stats = client.stats()?;
+    println!("server stats: {}", stats.to_string());
+
+    server.shutdown();
+    Ok(())
+}

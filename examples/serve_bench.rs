@@ -1,0 +1,168 @@
+//! End-to-end serving benchmark (Tab. 7 reproduction): wall-clock per
+//! sampling run vs NFE per solver, measured through the full
+//! client -> TCP -> coordinator -> PJRT path, plus throughput/latency
+//! under concurrent load and a batching-policy ablation.
+//!
+//! This is the repository's end-to-end driver: it loads real trained
+//! artifacts, serves batched concurrent requests, and reports the
+//! latency/throughput numbers recorded in EXPERIMENTS.md.
+//!
+//! ```text
+//! cargo run --release --example serve_bench -- --out results/table7_serving.md
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::experiments::report::{write_markdown_table, Table};
+use era_solver::runtime::PjRtEngine;
+use era_solver::server::client::{generate_load, Client};
+use era_solver::server::{Server, ServerConfig};
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out", value: Some("path"), help: "markdown output (default: results/table7_serving.md)" },
+    OptSpec { name: "batch", value: Some("n"), help: "samples per request (default: 64)" },
+    OptSpec { name: "concurrency", value: Some("n"), help: "load-gen workers (default: 8)" },
+    OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+struct Stack {
+    server: Server,
+    coord: Arc<Coordinator>,
+}
+
+fn start_stack(artifacts: &str, dataset: &str, policy: BatchPolicy) -> Result<Stack, String> {
+    let engine = Arc::new(PjRtEngine::new(artifacts)?);
+    engine.warmup(dataset, &engine.manifest().batch_buckets.clone())?;
+    let coord = Arc::new(Coordinator::start(
+        engine,
+        CoordinatorConfig { max_active: 64, queue_capacity: 512, policy },
+    ));
+    let server = Server::start(coord.clone(), ServerConfig::default())
+        .map_err(|e| e.to_string())?;
+    Ok(Stack { server, coord })
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("serve_bench: Tab. 7 serving reproduction", OPTS)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out = args.str_or("out", "results/table7_serving.md");
+    let batch = args.usize_or("batch", 64)?;
+    let concurrency = args.usize_or("concurrency", 8)?;
+    let requests = args.usize_or("requests", 6)?;
+
+    // ---- Part 1: Tab. 7 — single-request wall clock per solver × NFE ----
+    let stack = start_stack(&artifacts, &dataset, BatchPolicy::default())?;
+    let addr = stack.server.local_addr();
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    client.ping()?;
+
+    let solvers = ["pndm", "dpm-fast", "era-4@0.3"];
+    let nfes = [15usize, 25, 50];
+    let mut rows = Vec::new();
+    for s in solvers {
+        let mut row = vec![s.to_string()];
+        for &nfe in &nfes {
+            let spec = RequestSpec {
+                dataset: dataset.clone(),
+                solver: s.into(),
+                nfe,
+                n_samples: batch,
+                grid: "uniform".into(),
+                t_end: 1e-4,
+                seed: 11,
+            };
+            // Median of 5 runs.
+            let mut times = Vec::new();
+            for _ in 0..5 {
+                let t0 = std::time::Instant::now();
+                let _ = client.sample(&spec)?;
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            row.push(format!("{:.3}", times[times.len() / 2]));
+            eprintln!("tab7 {s} nfe={nfe}: {:.3}s", times[times.len() / 2]);
+        }
+        rows.push(row);
+    }
+    let mut header = vec!["Sampling method \\ NFE (s/request)".to_string()];
+    header.extend(nfes.iter().map(|n| n.to_string()));
+    let t7 = Table {
+        title: format!("Tab. 7 (serving wall-clock, dataset={dataset}, batch={batch})"),
+        header,
+        rows,
+        footnote: "median of 5, single client, full TCP->coordinator->PJRT path".into(),
+    };
+    write_markdown_table(&out, &t7).map_err(|e| e.to_string())?;
+
+    // ---- Part 2: concurrent load — throughput/latency ----
+    let spec = RequestSpec {
+        dataset: dataset.clone(),
+        solver: "era-4@0.3".into(),
+        nfe: 15,
+        n_samples: batch,
+        grid: "uniform".into(),
+        t_end: 1e-4,
+        seed: 0,
+    };
+    let report = generate_load(addr, &spec, concurrency, requests);
+    println!(
+        "\nload: {} requests ({} errors) in {:.2}s -> {:.0} samples/s, \
+         p50 {:.0}ms p99 {:.0}ms",
+        report.requests,
+        report.errors,
+        report.wall_seconds,
+        report.throughput_rows,
+        1e3 * report.percentile(0.5),
+        1e3 * report.percentile(0.99),
+    );
+    println!("coordinator: {}", stack.coord.telemetry().summary());
+    let fused = stack.coord.telemetry().mean_batch_occupancy();
+    stack.server.shutdown();
+
+    // ---- Part 3: batching ablation — linger on vs off ----
+    let mut lines = vec![format!(
+        "| policy | samples/s | p50 ms | p99 ms | occupancy |\n|---|---|---|---|---|"
+    )];
+    for (name, policy) in [
+        ("no-linger (min_rows=1)", BatchPolicy {
+            max_rows: 256,
+            min_rows: 1,
+            max_wait: std::time::Duration::from_millis(0),
+        }),
+        ("linger (min_rows=128, 5ms)", BatchPolicy {
+            max_rows: 256,
+            min_rows: 128,
+            max_wait: std::time::Duration::from_millis(5),
+        }),
+    ] {
+        let stack = start_stack(&artifacts, &dataset, policy)?;
+        let report = generate_load(stack.server.local_addr(), &spec, concurrency, requests);
+        let occ = stack.coord.telemetry().mean_batch_occupancy();
+        lines.push(format!(
+            "| {name} | {:.0} | {:.0} | {:.0} | {:.1} |",
+            report.throughput_rows,
+            1e3 * report.percentile(0.5),
+            1e3 * report.percentile(0.99),
+            occ
+        ));
+        stack.server.shutdown();
+    }
+    let ablation = lines.join("\n");
+    println!("\nbatching policy ablation (concurrency={concurrency}):\n{ablation}");
+    let abl_path = out.replace(".md", "_policy.md");
+    std::fs::write(&abl_path, format!("{ablation}\n")).map_err(|e| e.to_string())?;
+    eprintln!("wrote {out} and {abl_path} (load occupancy {fused:.1})");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Regenerates the paper's FID-vs-NFE comparison tables (Tabs. 1/2/3/6).
+//!
+//! One dataset per invocation; the solver set and NFE axis follow the
+//! paper exactly. The gmm8 dataset (the CIFAR-10 stand-in) follows the
+//! paper's CIFAR-10 protocol: logSNR timestep grid, both t_N = 1e-3 and
+//! 1e-4 variants for DPM-Solver-fast and ERA-Solver, and lambda = 0.9 (paper 15 rescaled).
+//! The 256²-stand-ins (checkerboard/swissroll) use the LSUN protocol:
+//! uniform grid, t_N = 1e-4, lambda = 0.3 (paper 5 rescaled).
+//!
+//! ```text
+//! cargo run --release --example table_fid_sweep -- \
+//!     --dataset checkerboard --out results/table1_church.md
+//! ```
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::experiments::report::{write_markdown_table, Table};
+use era_solver::experiments::sweep::{run_sweep, Cell, EvalBackend, SweepConfig, SweepResult};
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::schedule::GridKind;
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "dataset", value: Some("name"), help: "dataset (default: checkerboard)" },
+    OptSpec { name: "out", value: Some("path"), help: "markdown output (default: results/table_<ds>.md)" },
+    OptSpec { name: "samples", value: Some("n"), help: "samples per cell (default: 4096)" },
+    OptSpec { name: "nfes", value: Some("a,b"), help: "NFE axis (default: paper's 5,10,12,15,20,40,50,100)" },
+    OptSpec { name: "seed", value: Some("n"), help: "base seed (default: 0)" },
+];
+
+/// The paper's per-dataset protocol.
+struct Protocol {
+    grid: GridKind,
+    /// (t_end, row-label suffix) variants; one for LSUN, two for CIFAR.
+    t_ends: Vec<(f64, &'static str)>,
+    era: &'static str,
+    table_name: &'static str,
+}
+
+fn protocol(dataset: &str) -> Protocol {
+    match dataset {
+        // CIFAR-10 stand-in (Tab. 3): logSNR grid, both t_N, lambda=15.
+        "gmm8" => Protocol {
+            grid: GridKind::LogSnr,
+            t_ends: vec![(1e-3, " (tN=1e-3)"), (1e-4, " (tN=1e-4)")],
+            era: "era-4@0.9",
+            table_name: "Tab. 3 (CIFAR-10 -> gmm8)",
+        },
+        // CelebA stand-in (Tab. 6).
+        "rings" => Protocol {
+            grid: GridKind::Quadratic,
+            t_ends: vec![(1e-4, "")],
+            era: "era-4@0.3",
+            table_name: "Tab. 6 (CelebA -> rings)",
+        },
+        "swissroll" => Protocol {
+            grid: GridKind::Uniform,
+            t_ends: vec![(1e-4, "")],
+            era: "era-3@0.3", // paper: k=3 on LSUN-Bedroom
+            table_name: "Tab. 2 (LSUN-Bedroom -> swissroll)",
+        },
+        _ => Protocol {
+            grid: GridKind::Uniform,
+            t_ends: vec![(1e-4, "")],
+            era: "era-4@0.3", // paper: k=4 on LSUN-Church
+            table_name: "Tab. 1 (LSUN-Church -> checkerboard)",
+        },
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("table_fid_sweep: regenerate the paper's FID-vs-NFE tables", OPTS)?;
+    let dataset = args.str_or("dataset", "checkerboard");
+    let out = args.str_or("out", &format!("results/table_{dataset}.md"));
+    let n_samples = args.usize_or("samples", 4096)?;
+    let seed = args.u64_or("seed", 0)?;
+    let nfes: Vec<usize> = args
+        .list_or("nfes", &["5", "10", "12", "15", "20", "40", "50", "100"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| format!("bad nfe '{s}'")))
+        .collect::<Result<_, _>>()?;
+
+    let engine = Arc::new(PjRtEngine::new(args.str_or("artifacts", "artifacts"))?);
+    let backend = EvalBackend::pjrt(engine.clone(), &dataset)?;
+    let proto = protocol(&dataset);
+
+    // Baselines: the paper's comparison set (DDPM's 1000-step protocol
+    // only appears in Tab. 3; we include it everywhere for completeness).
+    let baselines = ["ddpm", "ddim", "fon", "pndm", "dpm-2", "dpm-fast"];
+
+    let mut all_cells: Vec<Cell> = Vec::new();
+    let mut row_order: Vec<String> = Vec::new();
+    let mut run_one = |solvers: Vec<String>, t_end: f64, suffix: &str| {
+        let cfg = SweepConfig {
+            solvers,
+            nfes: nfes.clone(),
+            grid: proto.grid,
+            t_end,
+            n_samples,
+            batch: 256,
+            seed,
+        };
+        eprintln!("== {dataset} t_end={t_end} {suffix} ==");
+        let res = run_sweep(&backend, &cfg);
+        for mut cell in res.cells {
+            let label = format!("{}{}", cell.solver, suffix);
+            if !row_order.contains(&label) {
+                row_order.push(label.clone());
+            }
+            cell.solver = label;
+            all_cells.push(cell);
+        }
+    };
+
+    if proto.t_ends.len() == 1 {
+        // LSUN/CelebA layout: one t_N, every solver in one block.
+        let mut solvers: Vec<String> = baselines.iter().map(|s| s.to_string()).collect();
+        solvers.push(proto.era.to_string());
+        run_one(solvers, proto.t_ends[0].0, "");
+    } else {
+        // CIFAR-10 layout (Tab. 3): baselines unsuffixed at the first
+        // t_N; DPM-Solver-fast and ERA get one row per t_N variant.
+        let base: Vec<String> =
+            baselines.iter().filter(|s| **s != "dpm-fast").map(|s| s.to_string()).collect();
+        run_one(base, proto.t_ends[0].0, "");
+        for (t_end, suffix) in &proto.t_ends {
+            run_one(vec!["dpm-fast".into(), proto.era.to_string()], *t_end, suffix);
+        }
+    }
+
+    let sweep = SweepResult {
+        cells: all_cells,
+        config_label: format!(
+            "dataset={dataset} grid={:?} n={n_samples} seed={seed} (paper protocol)",
+            proto.grid
+        ),
+    };
+    let table = Table::from_sweep(proto.table_name, &sweep, &row_order, &nfes);
+    write_markdown_table(&out, &table).map_err(|e| e.to_string())?;
+    eprintln!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT pipeline: train -> lower -> HLO text artifacts + manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written under artifacts/<dataset>/:
+    eps_b<N>.hlo.txt       denoiser eps_theta at batch bucket N, trained
+                           weights baked in as HLO constants
+    combine_b<N>.hlo.txt   fused solver-update kernel (Layer 1) at bucket N
+    train_report.json      loss + Fig.1 noise-error curve
+plus artifacts/manifest.json describing everything (the Rust runtime's
+registry parses this).
+
+Usage: python -m compile.aot [--datasets a,b,c] [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets
+from .diffusion import BETA_MAX, BETA_MIN, VpSchedule
+from .kernels.solver_combine import K_MAX, solver_combine
+from .model import ModelConfig, eps_theta
+from .train import default_model_config, default_train_config, train
+
+#: Batch buckets compiled per model. The Rust batcher rounds every network
+#: evaluation up to the nearest bucket and pads (standard serving practice;
+#: XLA executables are shape-specialised).
+BATCH_BUCKETS = (1, 16, 64, 256)
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True).
+
+    print_large_constants=True is load-bearing: the trained weights are
+    closed over as constants, and the default printer elides anything big
+    as `constant({...})`, which parses back as garbage on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_eps(params, mcfg: ModelConfig, batch: int) -> str:
+    """Lower eps_theta with trained params closed over as constants."""
+
+    def fn(x, t):
+        # The exported graph routes through the Pallas kernel (Layer 1);
+        # interpret=True lowers it to plain HLO the CPU PJRT client runs.
+        return (eps_theta(params, mcfg, x, t, use_pallas=True),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, mcfg.dim), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(x_spec, t_spec))
+
+
+def export_combine(dim: int, batch: int) -> str:
+    """Lower the fused solver-update kernel at one (batch, dim) bucket."""
+
+    def fn(eps_buf, w, x, ab):
+        return (solver_combine(eps_buf, w, x, ab),)
+
+    specs = (
+        jax.ShapeDtypeStruct((K_MAX, batch, dim), jnp.float32),
+        jax.ShapeDtypeStruct((K_MAX,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _schedule_probe() -> dict:
+    """Reference values of alpha_bar(t) so Rust can self-test its mirror."""
+    sched = VpSchedule()
+    ts = np.linspace(1e-4, 1.0, 17)
+    return {
+        "t": ts.tolist(),
+        "alpha_bar": [float(sched.alpha_bar(t)) for t in ts],
+        "log_snr": [float(sched.log_snr(t)) for t in ts],
+    }
+
+
+def _sha256(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build_dataset(name: str, out_dir: str, buckets=BATCH_BUCKETS) -> dict:
+    """Train + export all artifacts for one dataset; returns manifest entry."""
+    ds_dir = os.path.join(out_dir, name)
+    os.makedirs(ds_dir, exist_ok=True)
+    mcfg = default_model_config(name)
+    tcfg = default_train_config(name)
+
+    print(f"=== {name}: training (dim={mcfg.dim}, width={mcfg.width}) ===",
+          flush=True)
+    params, mcfg, report = train(name, mcfg, tcfg)
+    with open(os.path.join(ds_dir, "train_report.json"), "w") as f:
+        json.dump(report, f)
+
+    entry = {
+        "dim": mcfg.dim,
+        "model": mcfg.to_json(),
+        "stands_in_for": datasets.spec(name).stands_in_for,
+        "final_loss": report["final_loss"],
+        "eps": {},
+        "combine": {},
+        "k_max": K_MAX,
+    }
+
+    for b in buckets:
+        t0 = time.time()
+        text = export_eps(params, mcfg, b)
+        rel = f"{name}/eps_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        entry["eps"][str(b)] = {"path": rel, "sha": _sha256(text)}
+        print(f"  eps_b{b}: {len(text) / 1e6:.1f} MB in {time.time() - t0:.0f}s",
+              flush=True)
+
+        text = export_combine(mcfg.dim, b)
+        rel = f"{name}/combine_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        entry["combine"][str(b)] = {"path": rel, "sha": _sha256(text)}
+
+    mean, cov = datasets.reference_stats(name)
+    entry["ref_stats"] = {
+        "n": 200_000,
+        "mean": mean.tolist(),
+        "cov": cov.reshape(-1).tolist(),
+    }
+    if name == "patches64":
+        entry["patches_basis"] = datasets.patches_basis().reshape(-1).tolist()
+    return entry
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--datasets", default=",".join(datasets.DATASETS))
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__),
+                                                      "..", "..", "artifacts"))
+    ap.add_argument("--buckets", default=",".join(map(str, BATCH_BUCKETS)))
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "created_unix": int(time.time()),
+        "schedule": {"kind": "vp", "beta_min": BETA_MIN, "beta_max": BETA_MAX,
+                     "probe": _schedule_probe()},
+        "batch_buckets": list(buckets),
+        "datasets": {},
+    }
+    for name in args.datasets.split(","):
+        manifest["datasets"][name] = build_dataset(name, out_dir, buckets)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

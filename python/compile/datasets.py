@@ -1,0 +1,159 @@
+"""Synthetic data manifolds standing in for the paper's image datasets.
+
+The paper evaluates on CIFAR-10 (32x32), LSUN-Church (256x256),
+LSUN-Bedroom (256x256) and CelebA (64x64) with pretrained DDPM UNets.
+Neither the checkpoints nor the GPUs exist in this environment, so each
+dataset is replaced by a synthetic manifold of matching *relative*
+complexity (see DESIGN.md section 2). ERA-Solver itself is training-free
+and dimension-agnostic: all it consumes is an imperfect eps_theta(x, t),
+which a small denoiser trained on these manifolds provides.
+
+Mapping (simple -> hard mirrors the paper's cross-dataset discussion):
+  gmm8         -> CIFAR-10      (low-res, model trains well, low error)
+  checkerboard -> LSUN-Church   (sharp discontinuous density)
+  swissroll    -> LSUN-Bedroom  (curved filament manifold)
+  rings        -> CelebA        (multi-scale radial structure)
+  patches64    -> a 64-dim "image patch" manifold for a higher-dim run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DATASETS = ("gmm8", "checkerboard", "swissroll", "rings", "patches64")
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Static description of a synthetic dataset."""
+
+    name: str
+    dim: int
+    #: paper dataset this manifold stands in for (documentation only)
+    stands_in_for: str
+
+
+SPECS = {
+    "gmm8": DatasetSpec("gmm8", 2, "CIFAR-10"),
+    "checkerboard": DatasetSpec("checkerboard", 2, "LSUN-Church"),
+    "swissroll": DatasetSpec("swissroll", 2, "LSUN-Bedroom"),
+    "rings": DatasetSpec("rings", 2, "CelebA"),
+    "patches64": DatasetSpec("patches64", 64, "high-dim stress test"),
+}
+
+#: Fixed seed for the low-rank basis of `patches64`; the basis is exported
+#: in the artifact manifest so the Rust side shares it exactly.
+_PATCHES_BASIS_SEED = 7
+
+
+def spec(name: str) -> DatasetSpec:
+    if name not in SPECS:
+        raise KeyError(f"unknown dataset {name!r}; available: {sorted(SPECS)}")
+    return SPECS[name]
+
+
+def patches_basis() -> np.ndarray:
+    """(64, 8) smooth low-rank basis shared with the Rust data module."""
+    rng = np.random.default_rng(_PATCHES_BASIS_SEED)
+    # Smooth columns: random coefficients over low-frequency cosines of a
+    # virtual 8x8 grid, mimicking correlated image patches.
+    xs, ys = np.meshgrid(np.arange(8), np.arange(8), indexing="ij")
+    cols = []
+    for k in range(8):
+        fx, fy = rng.integers(0, 3, size=2)
+        phase = rng.uniform(0, 2 * np.pi)
+        col = np.cos(np.pi * (fx * xs + fy * ys) / 8.0 + phase)
+        cols.append(col.reshape(-1))
+    basis = np.stack(cols, axis=1).astype(np.float32)
+    basis /= np.linalg.norm(basis, axis=0, keepdims=True)
+    return basis
+
+
+def sample(name: str, key: jax.Array, n: int) -> jnp.ndarray:
+    """Draw `n` samples from dataset `name`. Returns (n, dim) float32."""
+    if name == "gmm8":
+        return _sample_gmm8(key, n)
+    if name == "checkerboard":
+        return _sample_checkerboard(key, n)
+    if name == "swissroll":
+        return _sample_swissroll(key, n)
+    if name == "rings":
+        return _sample_rings(key, n)
+    if name == "patches64":
+        return _sample_patches64(key, n)
+    raise KeyError(name)
+
+
+def _sample_gmm8(key: jax.Array, n: int) -> jnp.ndarray:
+    """8 Gaussians, std 0.15, equally spaced on a circle of radius 2."""
+    k_mode, k_noise = jax.random.split(key)
+    modes = jax.random.randint(k_mode, (n,), 0, 8)
+    angles = 2.0 * jnp.pi * modes.astype(jnp.float32) / 8.0
+    centers = 2.0 * jnp.stack([jnp.cos(angles), jnp.sin(angles)], axis=-1)
+    return centers + 0.15 * jax.random.normal(k_noise, (n, 2))
+
+
+def _sample_checkerboard(key: jax.Array, n: int) -> jnp.ndarray:
+    """Uniform density on the black cells of a 4x4 checkerboard in [-2,2]^2."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    # x uniform over [-2, 2); y uniform within a unit cell, then shifted to
+    # the matching checker row.
+    x = jax.random.uniform(k1, (n,), minval=-2.0, maxval=2.0)
+    y_cell = jax.random.uniform(k2, (n,), minval=0.0, maxval=1.0)
+    row = jax.random.randint(k3, (n,), 0, 2).astype(jnp.float32)
+    col = jnp.floor(x + 2.0)  # 0..3
+    # Black cells: (row + col) even -> offset rows by column parity.
+    y = y_cell + 2.0 * row - 2.0 + jnp.mod(col, 2.0)
+    return jnp.stack([x, y], axis=-1)
+
+
+def _sample_swissroll(key: jax.Array, n: int) -> jnp.ndarray:
+    """2-D swiss roll scaled into [-2, 2]^2, tangential noise 0.1."""
+    k1, k2 = jax.random.split(key)
+    t = jnp.sqrt(jax.random.uniform(k1, (n,), minval=0.0, maxval=1.0))
+    theta = 3.0 * jnp.pi * t + 0.5 * jnp.pi
+    r = 0.6 * t + 0.08
+    pts = jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+    pts = pts * 2.4
+    return pts + 0.05 * jax.random.normal(k2, (n, 2))
+
+
+def _sample_rings(key: jax.Array, n: int) -> jnp.ndarray:
+    """Two concentric rings (radii 0.8 and 1.8), radial noise 0.07."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    which = jax.random.bernoulli(k1, 0.5, (n,)).astype(jnp.float32)
+    radius = 0.8 + which * 1.0
+    theta = jax.random.uniform(k2, (n,), minval=0.0, maxval=2.0 * jnp.pi)
+    r = radius + 0.07 * jax.random.normal(k3, (n,))
+    return jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=-1)
+
+
+def _sample_patches64(key: jax.Array, n: int) -> jnp.ndarray:
+    """64-dim correlated patches: tanh of a low-rank Gaussian field."""
+    basis = jnp.asarray(patches_basis())  # (64, 8)
+    z = jax.random.normal(key, (n, 8))
+    return jnp.tanh(1.5 * (z @ basis.T)).astype(jnp.float32)
+
+
+def reference_stats(name: str, n: int = 200_000, seed: int = 1234):
+    """Mean and covariance of the data distribution, for Frechet distance.
+
+    Exported into the artifact manifest; the Rust evaluation harness uses
+    these as the "real data" side of FID so Python and Rust agree exactly.
+    """
+    key = jax.random.PRNGKey(seed)
+    # Chunked to bound memory for the 64-dim dataset.
+    chunks = []
+    chunk = 50_000
+    for i in range(0, n, chunk):
+        key, sub = jax.random.split(key)
+        chunks.append(np.asarray(sample(name, sub, min(chunk, n - i))))
+    xs = np.concatenate(chunks, axis=0)
+    mean = xs.mean(axis=0)
+    cov = np.cov(xs, rowvar=False)
+    cov = np.atleast_2d(cov)
+    return mean.astype(np.float64), cov.astype(np.float64)

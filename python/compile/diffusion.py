@@ -1,0 +1,66 @@
+"""VP diffusion process shared by training (Python) and sampling (Rust).
+
+We use the continuous-time VP-SDE parameterisation of Song et al. 2020b,
+which is what the DDIM / DPM-Solver line of work (and therefore the paper)
+builds on. The closed form makes alpha_bar(t), logSNR(t) and its inverse
+available analytically on both sides of the language boundary; the Rust
+mirror lives in `rust/src/solvers/schedule.rs` and is tested against the
+values exported in the artifact manifest.
+
+    beta(t)      = beta_min + t * (beta_max - beta_min)
+    alpha_bar(t) = exp(-0.5 * t^2 * (beta_max - beta_min) - t * beta_min)
+    x_t          = sqrt(alpha_bar) * x_0 + sqrt(1 - alpha_bar) * eps
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+BETA_MIN = 0.1
+BETA_MAX = 20.0
+
+
+@dataclasses.dataclass(frozen=True)
+class VpSchedule:
+    """Continuous-time variance-preserving noise schedule."""
+
+    beta_min: float = BETA_MIN
+    beta_max: float = BETA_MAX
+
+    def log_alpha_bar(self, t):
+        return -0.25 * t**2 * (self.beta_max - self.beta_min) - 0.5 * t * self.beta_min
+
+    def alpha_bar(self, t):
+        """alpha_bar(t) = prod alpha_s in the discrete view; in (0, 1]."""
+        return jnp.exp(2.0 * self.log_alpha_bar(t))
+
+    def sqrt_alpha_bar(self, t):
+        return jnp.exp(self.log_alpha_bar(t))
+
+    def sigma(self, t):
+        """sqrt(1 - alpha_bar(t)) — the noise scale at time t."""
+        return jnp.sqrt(1.0 - self.alpha_bar(t))
+
+    def log_snr(self, t):
+        """logSNR(t) = log(alpha_bar / (1 - alpha_bar)).
+
+        Monotone decreasing in t; used for the logSNR timestep grid that
+        DPM-Solver (and the paper, on CIFAR-10) samples with.
+        """
+        ab = self.alpha_bar(t)
+        return jnp.log(ab) - jnp.log1p(-ab)
+
+    def q_sample(self, key: jax.Array, x0: jnp.ndarray, t: jnp.ndarray):
+        """Forward diffusion: returns (x_t, eps) with eps ~ N(0, I)."""
+        eps = jax.random.normal(key, x0.shape, dtype=x0.dtype)
+        sab = self.sqrt_alpha_bar(t)[..., None]
+        sig = self.sigma(t)[..., None]
+        return sab * x0 + sig * eps, eps
+
+
+def uniform_times(key: jax.Array, n: int, t_min: float = 1e-4, t_max: float = 1.0):
+    """Training-time draw of diffusion times, uniform on [t_min, t_max]."""
+    return jax.random.uniform(key, (n,), minval=t_min, maxval=t_max)

@@ -1,0 +1,90 @@
+"""Pallas kernel: fused FiLM-modulated residual MLP block.
+
+This is the compute hot-spot of the denoiser (Layer 2 calls it once per
+residual block per network evaluation, and network evaluations dominate
+sampling cost — the premise of the whole fast-sampler literature).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid over batch tiles; each step stages an (Bb, W) activation tile
+    plus both (W, W) weight matrices in VMEM,
+  * the two matmuls run back-to-back on the MXU with the SiLU fused
+    between them on the VPU — the (Bb, W) intermediate never touches HBM,
+  * W is chosen as a multiple of 128 (lane width) by the model config so
+    the MXU tiles cleanly.
+
+Runs under interpret=True here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and what the
+AOT pipeline lowers into the exported HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Batch tile. 64 rows of f32[W] activations keeps three activation tiles
+#: (h, scale, shift) + two W x W weight panels well inside the ~16 MiB of
+#: VMEM for W <= 512 (see vmem_bytes below).
+DEFAULT_BLOCK_B = 64
+
+
+def _kernel(h_ref, scale_ref, shift_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One batch tile: out = h + silu((h*(1+scale)+shift) @ w1 + b1) @ w2 + b2."""
+    h = h_ref[...]
+    u = h * (1.0 + scale_ref[...]) + shift_ref[...]
+    # First MXU matmul + fused VPU activation. Accumulate in f32 whatever
+    # the storage dtype (preferred_element_type pins the MXU accumulator).
+    mid = jnp.dot(u, w1_ref[...], preferred_element_type=jnp.float32)
+    mid = mid + b1_ref[...][None, :]
+    mid = mid * jax.nn.sigmoid(mid)  # SiLU, stays in VMEM
+    out = jnp.dot(mid, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (h + out + b2_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def pick_block_b(batch: int, block_b: int = DEFAULT_BLOCK_B) -> int:
+    """Largest tile <= block_b that divides `batch` (grids must tile exactly)."""
+    bb = min(batch, block_b)
+    while batch % bb != 0:
+        bb -= 1
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fused_resmlp(h, scale, shift, w1, b1, w2, b2, *, block_b: int = DEFAULT_BLOCK_B,
+                 interpret: bool = True):
+    """Fused residual block; same contract as kernels.ref.fused_resmlp_ref."""
+    batch, width = h.shape
+    bb = pick_block_b(batch, block_b)
+    grid = (batch // bb,)
+
+    act = pl.BlockSpec((bb, width), lambda i: (i, 0))
+    full_mat = pl.BlockSpec((width, width), lambda i: (0, 0))
+    full_vec = pl.BlockSpec((width,), lambda i: (0,))
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[act, act, act, full_mat, full_vec, full_mat, full_vec],
+        out_specs=act,
+        out_shape=jax.ShapeDtypeStruct((batch, width), h.dtype),
+        interpret=interpret,
+    )(h, scale, shift, w1, b1, w2, b2)
+
+
+def vmem_bytes(block_b: int, width: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf).
+
+    Tiles resident per step: h/scale/shift/out activation tiles (4 x Bb x W)
+    + intermediate (Bb x W) + both weight panels (2 x W x W) + biases.
+    """
+    act = 5 * block_b * width
+    wgt = 2 * width * width + 2 * width
+    return (act + wgt) * dtype_bytes
+
+
+def mxu_flops(batch: int, width: int) -> int:
+    """MACs*2 issued to the MXU per call (two W x W matmuls per row)."""
+    return 2 * 2 * batch * width * width

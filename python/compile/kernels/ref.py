@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here with the identical
+signature. pytest (and hypothesis sweeps) assert allclose between the
+Pallas interpret-mode kernel and these references — this is the core
+correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_resmlp_ref(h, scale, shift, w1, b1, w2, b2):
+    """FiLM-modulated residual MLP block (the denoiser's hot block).
+
+        u   = h * (1 + scale) + shift          # FiLM from the time embed
+        mid = silu(u @ w1 + b1)
+        out = h + mid @ w2 + b2
+
+    Shapes: h, scale, shift (B, W); w1, w2 (W, W); b1, b2 (W,).
+    """
+    u = h * (1.0 + scale) + shift
+    mid = jax.nn.silu(u @ w1 + b1)
+    return h + mid @ w2 + b2
+
+
+def solver_combine_ref(eps_buf, w, x, ab):
+    """Fused solver update used by the XLA-offloaded solver path.
+
+        out = a * x + b * sum_k w[k] * eps_buf[k]
+
+    `eps_buf` is the stacked Lagrange/Adams buffer (K, B, D); `w` holds the
+    combined predictor/corrector weights (K,), zero-padded to K_max so one
+    artifact serves every interpolation order; `ab = [a, b]` carries the
+    DDIM transition coefficients of Eq. 8.
+    """
+    a, b = ab[0], ab[1]
+    mixed = jnp.einsum("k,kbd->bd", w, eps_buf)
+    return a * x + b * mixed
+
+
+def time_embed_ref(t, dim):
+    """Sinusoidal time embedding (B,) -> (B, dim), dim even."""
+    half = dim // 2
+    freqs = jnp.exp(jnp.linspace(0.0, jnp.log(1000.0), half))
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

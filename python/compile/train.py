@@ -1,0 +1,167 @@
+"""Build-time training of the stand-in denoisers (one per dataset).
+
+Runs once under `make artifacts`; the resulting parameters are baked into
+the exported HLO as constants, so the Rust request path never sees Python.
+
+Besides the weights, training also records the *noise-estimation error
+curve* ||eps - eps_theta(x_t, t)|| as a function of t (paper Fig. 1): the
+empirical fact that the error grows as t -> 0 is the premise of the
+error-robust selection strategy, and EXPERIMENTS.md checks we actually
+reproduce it.
+
+No optax in this environment — Adam is hand-rolled below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .diffusion import VpSchedule, uniform_times
+from .model import ModelConfig, Params, eps_theta, init_params, param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 6000
+    batch: int = 512
+    lr: float = 2e-3
+    lr_final: float = 2e-4
+    t_min: float = 1e-4
+    seed: int = 0
+    #: evaluation grid for the Fig.1 error curve
+    err_bins: int = 32
+    err_samples: int = 4096
+
+
+def default_model_config(dataset: str) -> ModelConfig:
+    d = datasets.spec(dataset).dim
+    if d <= 2:
+        return ModelConfig(dim=d, width=128, n_blocks=3)
+    return ModelConfig(dim=d, width=256, n_blocks=3)
+
+
+def default_train_config(dataset: str) -> TrainConfig:
+    if datasets.spec(dataset).dim <= 2:
+        return TrainConfig()
+    return TrainConfig(steps=3000, batch=256)
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(state, grads, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), params, m, v
+    )
+    return {"m": m, "v": v, "step": step}, new_params
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train(dataset: str, mcfg: ModelConfig | None = None, tcfg: TrainConfig | None = None,
+          verbose: bool = True) -> Tuple[Params, ModelConfig, Dict[str, Any]]:
+    """Train the denoiser for `dataset`; returns (params, cfg, report)."""
+    mcfg = mcfg or default_model_config(dataset)
+    tcfg = tcfg or default_train_config(dataset)
+    sched = VpSchedule()
+    key = jax.random.PRNGKey(tcfg.seed)
+    key, k_init = jax.random.split(key)
+    params = init_params(k_init, mcfg)
+
+    def loss_fn(p, key):
+        k_data, k_t, k_eps = jax.random.split(key, 3)
+        x0 = datasets.sample(dataset, k_data, tcfg.batch)
+        t = uniform_times(k_t, tcfg.batch, t_min=tcfg.t_min)
+        x_t, eps = sched.q_sample(k_eps, x0, t)
+        # Training uses the jnp oracle path: identical math to the Pallas
+        # kernel (asserted in tests), much faster than interpret mode.
+        eps_hat = eps_theta(p, mcfg, x_t, t, use_pallas=False)
+        return jnp.mean((eps_hat - eps) ** 2)
+
+    @jax.jit
+    def step_fn(carry, key_lr):
+        p, opt = carry
+        key, lr = key_lr
+        loss, grads = jax.value_and_grad(loss_fn)(p, key)
+        opt, p = adam_update(opt, grads, p, lr)
+        return (p, opt), loss
+
+    opt = adam_init(params)
+    losses = []
+    t0 = time.time()
+    # Cosine LR decay.
+    lrs = tcfg.lr_final + 0.5 * (tcfg.lr - tcfg.lr_final) * (
+        1 + np.cos(np.pi * np.arange(tcfg.steps) / tcfg.steps)
+    )
+    carry = (params, opt)
+    for i in range(tcfg.steps):
+        key, sub = jax.random.split(key)
+        carry, loss = step_fn(carry, (sub, jnp.float32(lrs[i])))
+        if i % 250 == 0 or i == tcfg.steps - 1:
+            losses.append(float(loss))
+            if verbose:
+                print(f"[{dataset}] step {i:5d} loss {float(loss):.4f} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+    params, _ = carry
+
+    key, k_err = jax.random.split(key)
+    err_curve = noise_error_curve(params, mcfg, dataset, sched, k_err,
+                                  bins=tcfg.err_bins, n=tcfg.err_samples)
+    report = {
+        "dataset": dataset,
+        "loss_curve": losses,
+        "final_loss": losses[-1],
+        "param_count": param_count(params),
+        "train_seconds": time.time() - t0,
+        "error_curve": err_curve,
+        "train_config": dataclasses.asdict(tcfg),
+    }
+    return params, mcfg, report
+
+
+def noise_error_curve(params: Params, mcfg: ModelConfig, dataset: str,
+                      sched: VpSchedule, key: jax.Array, bins: int = 32,
+                      n: int = 4096) -> Dict[str, list]:
+    """Paper Fig. 1: mean ||eps - eps_hat||_2 per time bin on fresh data."""
+    ts = np.linspace(1.0 / bins, 1.0, bins).astype(np.float32)
+    errs = []
+
+    @jax.jit
+    def bin_err(key, t_scalar):
+        k_data, k_eps = jax.random.split(key)
+        x0 = datasets.sample(dataset, k_data, n)
+        t = jnp.full((n,), t_scalar)
+        x_t, eps = sched.q_sample(k_eps, x0, t)
+        eps_hat = eps_theta(params, mcfg, x_t, t, use_pallas=False)
+        return jnp.mean(jnp.linalg.norm(eps_hat - eps, axis=-1))
+
+    for t_scalar in ts:
+        key, sub = jax.random.split(key)
+        errs.append(float(bin_err(sub, jnp.float32(t_scalar))))
+    return {"t": ts.tolist(), "err": errs}

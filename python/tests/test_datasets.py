@@ -1,0 +1,92 @@
+"""Synthetic manifold sanity checks (shapes, supports, moments)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.mark.parametrize("name", datasets.DATASETS)
+def test_shapes_and_dtype(name):
+    x = datasets.sample(name, jax.random.PRNGKey(0), 257)
+    assert x.shape == (257, datasets.spec(name).dim)
+    assert x.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_unknown_dataset_raises():
+    with pytest.raises(KeyError):
+        datasets.spec("nope")
+    with pytest.raises(KeyError):
+        datasets.sample("nope", jax.random.PRNGKey(0), 1)
+
+
+class TestGmm8:
+    def test_modes_on_circle(self):
+        x = np.asarray(datasets.sample("gmm8", jax.random.PRNGKey(1), 8000))
+        r = np.linalg.norm(x, axis=1)
+        # Radius 2 modes with std 0.15 -> nearly all mass in [1.4, 2.6].
+        assert (np.abs(r - 2.0) < 0.6).mean() > 0.99
+
+    def test_centered(self):
+        x = np.asarray(datasets.sample("gmm8", jax.random.PRNGKey(2), 20000))
+        np.testing.assert_allclose(x.mean(axis=0), 0.0, atol=0.05)
+
+
+class TestCheckerboard:
+    def test_support(self):
+        x = np.asarray(datasets.sample("checkerboard", jax.random.PRNGKey(3), 20000))
+        assert np.all(np.abs(x) <= 2.0 + 1e-5)
+
+    def test_checker_parity(self):
+        """All samples land on black cells: floor(x)+floor(y) even."""
+        x = np.asarray(datasets.sample("checkerboard", jax.random.PRNGKey(4), 20000))
+        cx = np.floor(x[:, 0] + 2.0)
+        cy = np.floor(np.clip(x[:, 1] + 2.0, 0, 3.999))
+        assert ((cx + cy) % 2 == 0).mean() > 0.995
+
+
+class TestRings:
+    def test_two_radii(self):
+        x = np.asarray(datasets.sample("rings", jax.random.PRNGKey(5), 20000))
+        r = np.linalg.norm(x, axis=1)
+        inner = np.abs(r - 0.8) < 0.3
+        outer = np.abs(r - 1.8) < 0.3
+        assert (inner | outer).mean() > 0.99
+        assert 0.4 < inner.mean() < 0.6  # balanced mixture
+
+
+class TestPatches64:
+    def test_bounded(self):
+        x = np.asarray(datasets.sample("patches64", jax.random.PRNGKey(6), 4000))
+        assert np.all(np.abs(x) <= 1.0)
+
+    def test_basis_deterministic_and_normalised(self):
+        b1 = datasets.patches_basis()
+        b2 = datasets.patches_basis()
+        np.testing.assert_array_equal(b1, b2)
+        np.testing.assert_allclose(np.linalg.norm(b1, axis=0), 1.0, rtol=1e-5)
+
+    def test_low_rank_structure(self):
+        x = np.asarray(datasets.sample("patches64", jax.random.PRNGKey(7), 4000))
+        # tanh of rank-8 field: spectrum should be dominated by the top
+        # ~8 directions.
+        s = np.linalg.svd(x - x.mean(0), compute_uv=False)
+        assert s[:8].sum() / s.sum() > 0.8
+
+
+class TestReferenceStats:
+    def test_cov_symmetric_psd(self):
+        mean, cov = datasets.reference_stats("gmm8", n=20000)
+        assert mean.shape == (2,)
+        assert cov.shape == (2, 2)
+        np.testing.assert_allclose(cov, cov.T, atol=1e-12)
+        assert np.all(np.linalg.eigvalsh(cov) > 0)
+
+    def test_gmm8_known_moments(self):
+        """8 modes on radius-2 circle: E[x]=0, var = 2 + 0.15^2 per axis."""
+        mean, cov = datasets.reference_stats("gmm8", n=100000)
+        np.testing.assert_allclose(mean, 0.0, atol=0.03)
+        np.testing.assert_allclose(np.diag(cov), 2.0 + 0.15**2, rtol=0.05)

@@ -1,0 +1,90 @@
+"""VP schedule invariants; these same values pin the Rust mirror."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.diffusion import VpSchedule, uniform_times
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return VpSchedule()
+
+
+class TestAlphaBar:
+    def test_bounds(self, sched):
+        ts = jnp.linspace(1e-5, 1.0, 101)
+        ab = sched.alpha_bar(ts)
+        assert float(ab.min()) > 0.0
+        assert float(ab.max()) < 1.0
+
+    def test_near_identity_at_zero(self, sched):
+        assert float(sched.alpha_bar(jnp.float32(1e-6))) == pytest.approx(1.0, abs=1e-4)
+
+    def test_near_zero_at_one(self, sched):
+        # VP with beta_max=20: alpha_bar(1) = exp(-(20+0.1)/2) ~ 4e-5.
+        assert float(sched.alpha_bar(jnp.float32(1.0))) < 1e-4
+
+    @settings(max_examples=40, deadline=None)
+    @given(t1=st.floats(1e-5, 1.0), t2=st.floats(1e-5, 1.0))
+    def test_monotone_decreasing(self, sched, t1, t2):
+        lo, hi = sorted((t1, t2))
+        if hi - lo < 1e-7:
+            return
+        assert float(sched.alpha_bar(jnp.float32(hi))) <= float(
+            sched.alpha_bar(jnp.float32(lo))
+        ) + 1e-7
+
+    def test_closed_form_vs_quadrature(self, sched):
+        """alpha_bar(t) == exp(-int_0^t beta(s) ds), checked numerically."""
+        t = 0.37
+        s = np.linspace(0.0, t, 20001)
+        beta = sched.beta_min + s * (sched.beta_max - sched.beta_min)
+        integral = np.trapezoid(beta, s)
+        np.testing.assert_allclose(
+            float(sched.alpha_bar(jnp.float32(t))), np.exp(-integral), rtol=1e-4
+        )
+
+
+class TestLogSnr:
+    def test_monotone_decreasing(self, sched):
+        ts = jnp.linspace(1e-4, 1.0, 200)
+        snr = sched.log_snr(ts)
+        assert bool(jnp.all(jnp.diff(snr) < 0))
+
+    def test_sigma_sq_complement(self, sched):
+        ts = jnp.linspace(1e-4, 1.0, 50)
+        np.testing.assert_allclose(
+            sched.sigma(ts) ** 2 + sched.alpha_bar(ts), 1.0, atol=1e-6
+        )
+
+
+class TestQSample:
+    def test_statistics(self, sched):
+        """x_t | x0 has mean sqrt(ab)*x0 and var (1-ab) per coordinate."""
+        key = jax.random.PRNGKey(0)
+        x0 = jnp.full((20000, 2), 1.5)
+        t = jnp.full((20000,), 0.5)
+        x_t, eps = sched.q_sample(key, x0, t)
+        ab = float(sched.alpha_bar(jnp.float32(0.5)))
+        np.testing.assert_allclose(float(x_t.mean()), (ab**0.5) * 1.5, atol=0.02)
+        np.testing.assert_allclose(float(x_t.var()), 1 - ab, rtol=0.05)
+        np.testing.assert_allclose(float(eps.mean()), 0.0, atol=0.02)
+
+    def test_reconstruction(self, sched):
+        """(x_t - sigma*eps)/sqrt(ab) recovers x0 exactly."""
+        key = jax.random.PRNGKey(1)
+        x0 = jax.random.normal(key, (64, 2))
+        t = jnp.full((64,), 0.3)
+        x_t, eps = sched.q_sample(key, x0, t)
+        rec = (x_t - sched.sigma(t)[:, None] * eps) / sched.sqrt_alpha_bar(t)[:, None]
+        np.testing.assert_allclose(rec, x0, atol=1e-5)
+
+
+def test_uniform_times_range():
+    t = uniform_times(jax.random.PRNGKey(0), 10000, t_min=1e-4)
+    assert float(t.min()) >= 1e-4
+    assert float(t.max()) <= 1.0

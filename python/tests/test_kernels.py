@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes (and weight patterns) so the kernels are pinned
+to the references across the whole envelope the AOT pipeline exports.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_resmlp import (
+    DEFAULT_BLOCK_B,
+    fused_resmlp,
+    mxu_flops,
+    pick_block_b,
+    vmem_bytes,
+)
+from compile.kernels.ref import fused_resmlp_ref, solver_combine_ref, time_embed_ref
+from compile.kernels.solver_combine import K_MAX, hbm_bytes, solver_combine
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _resmlp_inputs(seed, b, w):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    return (
+        _rand(ks[0], b, w),
+        _rand(ks[1], b, w, scale=0.2),
+        _rand(ks[2], b, w, scale=0.2),
+        _rand(ks[3], w, w, scale=0.1),
+        _rand(ks[4], w),
+        _rand(ks[5], w, w, scale=0.1),
+        _rand(ks[6], w),
+    )
+
+
+class TestFusedResMlp:
+    @pytest.mark.parametrize("b", [1, 2, 16, 48, 64, 100])
+    @pytest.mark.parametrize("w", [8, 128])
+    def test_matches_ref(self, b, w):
+        args = _resmlp_inputs(0, b, w)
+        out = fused_resmlp(*args)
+        ref = fused_resmlp_ref(*args)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=96),
+        w=st.sampled_from([4, 16, 64, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, w, seed):
+        args = _resmlp_inputs(seed, b, w)
+        out = fused_resmlp(*args)
+        ref = fused_resmlp_ref(*args)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_block_b_divides(self):
+        for batch in range(1, 300):
+            bb = pick_block_b(batch)
+            assert batch % bb == 0
+            assert 1 <= bb <= min(batch, DEFAULT_BLOCK_B)
+
+    def test_zero_film_is_plain_resmlp(self):
+        """scale=shift=0 must reduce to an unmodulated residual block."""
+        h, _, _, w1, b1, w2, b2 = _resmlp_inputs(3, 32, 64)
+        z = jnp.zeros_like(h)
+        out = fused_resmlp(h, z, z, w1, b1, w2, b2)
+        mid = jax.nn.silu(h @ w1 + b1)
+        np.testing.assert_allclose(out, h + mid @ w2 + b2, atol=1e-4, rtol=1e-4)
+
+    def test_vmem_estimate_monotone(self):
+        assert vmem_bytes(64, 128) < vmem_bytes(64, 256) < vmem_bytes(128, 512)
+        # Default config fits comfortably in a 16 MiB VMEM budget.
+        assert vmem_bytes(DEFAULT_BLOCK_B, 512) < 16 * 2**20
+
+    def test_mxu_flops(self):
+        assert mxu_flops(64, 128) == 2 * 2 * 64 * 128 * 128
+
+
+class TestSolverCombine:
+    def _inputs(self, seed, k, b, d):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        return (
+            _rand(ks[0], k, b, d),
+            _rand(ks[1], k),
+            _rand(ks[2], b, d),
+            jnp.asarray(jax.random.normal(ks[3], (2,))),
+        )
+
+    @pytest.mark.parametrize("k", [1, 3, 4, 6, K_MAX])
+    @pytest.mark.parametrize("b,d", [(1, 2), (16, 2), (64, 64), (100, 3)])
+    def test_matches_ref(self, k, b, d):
+        args = self._inputs(0, k, b, d)
+        out = solver_combine(*args)
+        ref = solver_combine_ref(*args)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(min_value=1, max_value=K_MAX),
+        b=st.integers(min_value=1, max_value=64),
+        d=st.integers(min_value=1, max_value=16),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, k, b, d, seed):
+        args = self._inputs(seed, k, b, d)
+        out = solver_combine(*args)
+        ref = solver_combine_ref(*args)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_zero_padded_slots_inert(self):
+        """Zero weights on padded buffer slots must not change the result."""
+        eps_buf, w, x, ab = self._inputs(1, 4, 32, 2)
+        pad = jnp.zeros((K_MAX - 4, 32, 2))
+        eps_pad = jnp.concatenate([eps_buf, 1e6 * jnp.ones_like(pad)], axis=0)
+        w_pad = jnp.concatenate([w, jnp.zeros((K_MAX - 4,))])
+        out = solver_combine(eps_pad, w_pad, x, ab)
+        ref = solver_combine(eps_buf, w, x, ab)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+    def test_identity_update(self):
+        """a=1, b=0 is a no-op on x."""
+        eps_buf, w, x, _ = self._inputs(2, 3, 16, 2)
+        out = solver_combine(eps_buf, w, x, jnp.array([1.0, 0.0]))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    def test_hbm_estimate(self):
+        assert hbm_bytes(4, 256, 2) == 6 * 256 * 2 * 4
+
+
+class TestTimeEmbed:
+    def test_shape_and_range(self):
+        t = jnp.linspace(0.0, 1.0, 33)
+        emb = time_embed_ref(t, 64)
+        assert emb.shape == (33, 64)
+        assert float(jnp.abs(emb).max()) <= 1.0 + 1e-6
+
+    def test_distinguishes_times(self):
+        emb = time_embed_ref(jnp.array([0.1, 0.9]), 32)
+        assert float(jnp.linalg.norm(emb[0] - emb[1])) > 0.1

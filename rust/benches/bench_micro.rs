@@ -1,0 +1,97 @@
+//! Micro benchmarks over the L3 hot-path primitives: the solver-update
+//! kernels, Lagrange machinery, ERS selection, batch packing, metric
+//! evaluation and JSON framing. These are the §Perf iteration targets —
+//! run with `cargo bench --offline` and diff the BENCHLINEs.
+
+use era_solver::benchkit::{black_box, Bench};
+use era_solver::coordinator::batcher::{Batcher, BatchPolicy};
+use era_solver::json;
+use era_solver::metrics::{self, Moments};
+use era_solver::rng::Rng;
+use era_solver::solvers::era::select_indices;
+use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel};
+use era_solver::solvers::lagrange;
+use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use era_solver::solvers::{sample_with, EvalRequest, SolverKind};
+use era_solver::tensor::Tensor;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0);
+
+    // --- Tensor kernels (the per-step solver update) ---
+    let x = rng.normal_tensor(256, 64);
+    let eps: Vec<Tensor> = (0..4).map(|_| rng.normal_tensor(256, 64)).collect();
+    let refs: Vec<&Tensor> = eps.iter().collect();
+    let w = [0.4, 0.3, 0.2, 0.1];
+    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+    b.case("tensor/weighted_sum k=4 256x64", || {
+        Tensor::weighted_sum(black_box(&refs), black_box(&w))
+    });
+    b.case("tensor/kernel_weighted_sum k=4 256x64", || {
+        Tensor::kernel_weighted_sum(black_box(&x), 0.97, -0.1, black_box(&refs), &w32)
+    });
+    let mut xm = x.clone();
+    b.case("tensor/affine_inplace 256x64", || {
+        xm.affine_inplace(0.99, 0.01, black_box(&eps[0]));
+        xm.as_slice()[0]
+    });
+
+    // --- Lagrange predictor + ERS selection ---
+    let nodes = [0.9, 0.65, 0.4, 0.15];
+    b.case("lagrange/weights k=4", || lagrange::weights(black_box(&nodes), 0.05));
+    let vals: Vec<&Tensor> = eps.iter().collect();
+    b.case("lagrange/interpolate k=4 256x64", || {
+        lagrange::interpolate(black_box(&nodes), black_box(&vals), 0.05)
+    });
+    b.case("era/select_indices i=100 k=6", || select_indices(100, 6, black_box(2.7)));
+
+    // --- Full solver step loop (in-process model, no PJRT) ---
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    b.case("solver/era-4 nfe=10 batch=256 (analytic eps)", || {
+        let grid = make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3);
+        let mut lrng = Rng::new(1);
+        let kind = SolverKind::parse("era").unwrap();
+        let mut s = kind.build(sched, grid, lrng.normal_tensor(256, 2), 1, 10);
+        sample_with(&mut *s, &model)
+    });
+    b.case("solver/ddim nfe=10 batch=256 (analytic eps)", || {
+        let grid = make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3);
+        let mut lrng = Rng::new(1);
+        let kind = SolverKind::parse("ddim").unwrap();
+        let mut s = kind.build(sched, grid, lrng.normal_tensor(256, 2), 1, 10);
+        sample_with(&mut *s, &model)
+    });
+
+    // --- Coordinator packing ---
+    let reqs: Vec<EvalRequest> = (0..16)
+        .map(|i| EvalRequest { x: rng.normal_tensor(16 + i, 8), t: 0.5 })
+        .collect();
+    let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
+    let batcher = Batcher::new(BatchPolicy::default());
+    b.case("batcher/pack 16 reqs ~370 rows", || batcher.pack(black_box(&pending)));
+
+    // --- Metrics (per-table cost driver) ---
+    let samples = rng.normal_tensor(4096, 2);
+    let reference = Moments::new(vec![0.0, 0.0], vec![1.0, 0.0, 0.0, 1.0]);
+    b.case("metrics/fid 4096x2", || metrics::fid(black_box(&samples), &reference));
+    let hi = rng.normal_tensor(2048, 64);
+    let ref_hi = Moments::from_tensor(&rng.normal_tensor(2048, 64));
+    b.case("metrics/fid 2048x64 (sqrtm-bound)", || metrics::fid(black_box(&hi), &ref_hi));
+
+    // --- Wire framing ---
+    let payload = {
+        let rows: Vec<json::Json> =
+            (0..256).map(|r| json::Json::arr_f32(samples.row(r))).collect();
+        json::Json::obj(vec![("samples", json::Json::Arr(rows))]).to_string()
+    };
+    b.case("json/parse 256x2 sample payload", || json::parse(black_box(&payload)).unwrap());
+
+    // --- Analytic model eval (test-path baseline) ---
+    let xt = rng.normal_tensor(256, 2);
+    let ts = vec![0.5f32; 256];
+    b.case("model/analytic_gmm eval 256x2", || model.eval(black_box(&xt), &ts));
+
+    eprintln!("\n{} cases done", b.results().len());
+}

@@ -1,0 +1,82 @@
+//! Serving benches (Tab. 7's substrate): coordinator round-trip latency
+//! and fused-batch throughput, on both the in-process mock bank (isolates
+//! coordinator overhead) and the PJRT artifacts (end-to-end).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use era_solver::benchkit::Bench;
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+
+fn spec(n: usize, nfe: usize) -> RequestSpec {
+    RequestSpec { n_samples: n, nfe, ..Default::default() }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- Coordinator overhead with an in-process model ---
+    let sched = VpSchedule::default();
+    let bank: Arc<dyn ModelBank> =
+        Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
+    let coord = Coordinator::start(bank, CoordinatorConfig::default());
+    b.case("coord/mock single 64x10nfe round-trip", || {
+        coord.sample(spec(64, 10)).unwrap()
+    });
+    b.case("coord/mock 8 concurrent 64x10nfe", || {
+        let tickets: Vec<_> = (0..8).map(|_| coord.submit(spec(64, 10)).unwrap()).collect();
+        tickets.into_iter().map(|t| t.wait().unwrap().nfe).sum::<usize>()
+    });
+    drop(coord);
+
+    // --- End-to-end over PJRT artifacts ---
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_serving: no artifacts; PJRT section skipped");
+        return;
+    }
+    let engine = Arc::new(PjRtEngine::new("artifacts").expect("engine"));
+    engine.warmup("gmm8", &engine.manifest().batch_buckets.clone()).unwrap();
+    let coord = Coordinator::start(engine.clone(), CoordinatorConfig::default());
+
+    for (label, n, nfe) in [
+        ("pjrt single 16x10nfe", 16, 10),
+        ("pjrt single 256x10nfe", 256, 10),
+        ("pjrt single 256x50nfe", 256, 50),
+    ] {
+        b.case(&format!("coord/{label}"), || coord.sample(spec(n, nfe)).unwrap());
+    }
+    b.case("coord/pjrt 8 concurrent 64x10nfe (fused)", || {
+        let tickets: Vec<_> = (0..8).map(|_| coord.submit(spec(64, 10)).unwrap()).collect();
+        tickets.into_iter().map(|t| t.wait().unwrap().nfe).sum::<usize>()
+    });
+    println!("telemetry: {}", coord.telemetry().summary());
+    drop(coord);
+
+    // --- Linger policy impact (batch formation under trickle load) ---
+    for (label, policy) in [
+        (
+            "no-linger",
+            BatchPolicy { max_rows: 256, min_rows: 1, max_wait: Duration::from_millis(0) },
+        ),
+        (
+            "linger-2ms",
+            BatchPolicy { max_rows: 256, min_rows: 64, max_wait: Duration::from_millis(2) },
+        ),
+    ] {
+        let coord = Coordinator::start(
+            engine.clone(),
+            CoordinatorConfig { max_active: 32, queue_capacity: 128, policy },
+        );
+        b.case(&format!("coord/pjrt policy {label} 8x(32 rows)"), || {
+            let tickets: Vec<_> =
+                (0..8).map(|_| coord.submit(spec(32, 10)).unwrap()).collect();
+            tickets.into_iter().map(|t| t.wait().unwrap().nfe).sum::<usize>()
+        });
+        println!("  {label}: {}", coord.telemetry().summary());
+        drop(coord);
+    }
+}

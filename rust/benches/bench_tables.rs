@@ -1,0 +1,51 @@
+//! Table benches: one representative cell per paper table, end to end
+//! through the PJRT artifacts (the full generate + FID pipeline the
+//! `examples/table_*` drivers sweep). Skips gracefully when artifacts
+//! are missing. `ERA_BENCH_QUICK=1` shrinks iteration counts.
+
+use std::sync::Arc;
+
+use era_solver::benchkit::Bench;
+use era_solver::experiments::sweep::{generate, EvalBackend};
+use era_solver::metrics;
+use era_solver::runtime::PjRtEngine;
+use era_solver::solvers::schedule::GridKind;
+use era_solver::solvers::SolverKind;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_tables: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    let engine = Arc::new(PjRtEngine::new("artifacts").expect("engine"));
+    let mut b = Bench::new();
+    let n = 1024; // per-cell sample count for benching (tables use 4096+)
+
+    // (table, dataset, solver, nfe, grid, t_end)
+    let cells = [
+        ("tab1/church", "checkerboard", "era-4@0.3", 10, GridKind::Uniform, 1e-4),
+        ("tab2/bedroom", "swissroll", "era-3@0.3", 10, GridKind::Uniform, 1e-4),
+        ("tab3/cifar", "gmm8", "era-4@0.9", 10, GridKind::LogSnr, 1e-3),
+        ("tab6/celeba", "rings", "era-4@0.3", 10, GridKind::Quadratic, 1e-4),
+        ("tab4/ers-ablation", "checkerboard", "era-fixed-5", 10, GridKind::Uniform, 1e-4),
+        ("fig5/scale-ablation", "checkerboard", "era-const-3@1", 10, GridKind::Uniform, 1e-4),
+        ("baseline/ddim", "checkerboard", "ddim", 10, GridKind::Uniform, 1e-4),
+        ("baseline/dpm-fast", "checkerboard", "dpm-fast", 10, GridKind::Uniform, 1e-4),
+        ("highdim/patches64", "patches64", "era-4@0.3", 10, GridKind::Uniform, 1e-4),
+    ];
+    for (label, dataset, solver, nfe, grid, t_end) in cells {
+        let backend = EvalBackend::pjrt(engine.clone(), dataset).expect(dataset);
+        let reference = backend.reference();
+        let kind = SolverKind::parse(solver).unwrap();
+        b.case(&format!("{label} {solver}@{nfe} n={n}"), || {
+            let (samples, _) = generate(&backend, &kind, nfe, grid, t_end, n, 256, 0);
+            metrics::fid(&samples, &reference)
+        });
+    }
+    eprintln!(
+        "\nPJRT totals: {} executions, {} rows, {} compiles",
+        engine.eval_count(),
+        engine.rows_executed(),
+        engine.compile_count()
+    );
+}

@@ -1,0 +1,171 @@
+//! Minimal benchmarking harness (the offline registry ships no
+//! criterion). Used by the `harness = false` bench targets.
+//!
+//! Methodology: warmup runs, then adaptively sized measurement batches
+//! until either the time budget or the iteration cap is hit; reports
+//! min / median / mean / p90 over per-iteration times. Medians are
+//! robust to the one-core box's scheduler noise. Also prints a
+//! machine-greppable `BENCHLINE` per case so `make bench` output can be
+//! diffed across perf iterations (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub p90: f64,
+}
+
+impl Stats {
+    fn from_times(name: &str, mut times: Vec<f64>) -> Stats {
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            min: times[0],
+            median: times[n / 2],
+            mean,
+            p90: times[(n - 1).min(n * 9 / 10)],
+        }
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "BENCHLINE {name} iters={iters} min={min:.6e} median={median:.6e} \
+             mean={mean:.6e} p90={p90:.6e}",
+            name = self.name,
+            iters = self.iters,
+            min = self.min,
+            median = self.median,
+            mean = self.mean,
+            p90 = self.p90,
+        )
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub time_budget: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { warmup_iters: 3, max_iters: 200, time_budget: Duration::from_secs(5) }
+    }
+}
+
+/// Bench group: runs cases, pretty-prints, collects stats.
+pub struct Bench {
+    config: Config,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Respect a quick mode for CI-ish runs: ERA_BENCH_QUICK=1.
+        let quick = std::env::var("ERA_BENCH_QUICK").is_ok();
+        let config = if quick {
+            Config { warmup_iters: 1, max_iters: 10, time_budget: Duration::from_millis(500) }
+        } else {
+            Config::default()
+        };
+        Bench { config, results: Vec::new() }
+    }
+
+    pub fn with_config(config: Config) -> Bench {
+        Bench { config, results: Vec::new() }
+    }
+
+    /// Time `f` (which should return something to keep the optimiser
+    /// honest; its result is black-boxed).
+    pub fn case<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        for _ in 0..self.config.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let budget_end = Instant::now() + self.config.time_budget;
+        while times.len() < self.config.max_iters
+            && (times.len() < 5 || Instant::now() < budget_end)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_times(name, times);
+        println!("{:<48} median {:>10.3?}  (n={})", name, secs(stats.median), stats.iters);
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn secs(s: f64) -> Duration {
+    Duration::from_secs_f64(s.max(0.0))
+}
+
+/// Opaque value sink (stable alternative to `std::hint::black_box` for
+/// older toolchains; thin wrapper here).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench::with_config(Config {
+            warmup_iters: 1,
+            max_iters: 8,
+            time_budget: Duration::from_millis(200),
+        });
+        let s = b.case("noop", || 1 + 1).clone();
+        assert_eq!(s.name, "noop");
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.p90);
+        assert!(s.line().starts_with("BENCHLINE noop"));
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ordering_of_two_cases() {
+        let mut b = Bench::with_config(Config {
+            warmup_iters: 1,
+            max_iters: 6,
+            time_budget: Duration::from_millis(300),
+        });
+        let fast = b.case("fast", || 0u64).median;
+        let slow = b
+            .case("slow", || {
+                let mut acc = 0u64;
+                for i in 0..200_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .median;
+        assert!(slow > fast);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny CLI argument parser (the offline registry ships no clap).
+//!
+//! Supports `--flag`, `--key value` and `--key=value`; positionals are
+//! kept in order. Typed getters parse on access and surface readable
+//! errors; `usage()` output comes from the declared option table so the
+//! binaries' `--help` never drifts from what they actually accept.
+
+use std::collections::BTreeMap;
+
+/// Declared option (for help text + unknown-flag detection).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Declare the accepted options, then parse `std::env::args()`.
+    pub fn parse(about: &'static str, specs: &[OptSpec]) -> Result<Args, String> {
+        Self::parse_from(about, specs, std::env::args().collect())
+    }
+
+    pub fn parse_from(
+        about: &'static str,
+        specs: &[OptSpec],
+        argv: Vec<String>,
+    ) -> Result<Args, String> {
+        let mut out = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            about,
+            specs: specs.to_vec(),
+            ..Default::default()
+        };
+        let known = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut it = argv.into_iter().skip(1).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if name == "help" {
+                    return Err(out.usage());
+                }
+                let spec = known(&name).ok_or_else(|| {
+                    format!("unknown option --{name}\n\n{}", out.usage())
+                })?;
+                let value = match (spec.value, inline_val) {
+                    (None, None) => "true".to_string(),
+                    (None, Some(v)) => {
+                        return Err(format!("--{name} takes no value (got '{v}')"))
+                    }
+                    (Some(_), Some(v)) => v,
+                    (Some(placeholder), None) => it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects <{placeholder}>"))?,
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nUsage: {} [options]\n\nOptions:\n", self.about, self.program);
+        for spec in &self.specs {
+            let left = match spec.value {
+                Some(v) => format!("--{} <{}>", spec.name, v),
+                None => format!("--{}", spec.name),
+            };
+            s.push_str(&format!("  {left:<28} {}\n", spec.help));
+        }
+        s
+    }
+
+    pub fn present(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "dataset", value: Some("name"), help: "dataset to use" },
+            OptSpec { name: "nfe", value: Some("n"), help: "evaluation budget" },
+            OptSpec { name: "verbose", value: None, help: "chatty output" },
+            OptSpec { name: "solvers", value: Some("a,b"), help: "solver list" },
+        ]
+    }
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string()).chain(s.split_whitespace().map(String::from)).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse_from("t", &specs(), argv("--dataset gmm8 --nfe=20 --verbose pos1"))
+            .unwrap();
+        assert_eq!(a.str_or("dataset", "x"), "gmm8");
+        assert_eq!(a.usize_or("nfe", 5).unwrap(), 20);
+        assert!(a.present("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from("t", &specs(), argv("")).unwrap();
+        assert_eq!(a.str_or("dataset", "gmm8"), "gmm8");
+        assert_eq!(a.usize_or("nfe", 10).unwrap(), 10);
+        assert_eq!(a.f64_or("lambda", 5.0).unwrap(), 5.0);
+        assert!(!a.present("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        assert!(Args::parse_from("t", &specs(), argv("--wat 3")).is_err());
+        let a = Args::parse_from("t", &specs(), argv("--nfe banana")).unwrap();
+        assert!(a.usize_or("nfe", 1).is_err());
+        assert!(Args::parse_from("t", &specs(), argv("--verbose=yes")).is_err());
+        assert!(Args::parse_from("t", &specs(), argv("--dataset")).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let err = Args::parse_from("my tool", &specs(), argv("--help")).unwrap_err();
+        assert!(err.contains("my tool"));
+        assert!(err.contains("--dataset <name>"));
+        assert!(err.contains("--verbose"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse_from("t", &specs(), argv("--solvers era,ddim")).unwrap();
+        assert_eq!(a.list_or("solvers", &[]), vec!["era", "ddim"]);
+        let b = Args::parse_from("t", &specs(), argv("")).unwrap();
+        assert_eq!(b.list_or("solvers", &["era"]), vec!["era"]);
+    }
+}

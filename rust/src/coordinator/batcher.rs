@@ -1,0 +1,243 @@
+//! Batch assembly: fuse the pending evaluations of many requests —
+//! sitting at *different* diffusion timesteps — into bucket-sized slabs
+//! with per-row times, and route the model output back.
+//!
+//! Pure data-plumbing (no PJRT, no threads) so the packing policy is
+//! unit- and property-testable: every row must come back to its request
+//! exactly once, in order, regardless of how requests were split across
+//! slabs.
+
+use crate::solvers::EvalRequest;
+use crate::tensor::Tensor;
+
+/// Dispatch policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on rows per fused evaluation (≈ the top compiled batch
+    /// bucket; bigger slabs would be split by the engine anyway and
+    /// would blur the telemetry).
+    pub max_rows: usize,
+    /// Don't dispatch fewer than this many rows while more work may
+    /// arrive within `max_wait` (latency/throughput trade-off).
+    pub min_rows: usize,
+    /// Longest a pending evaluation may wait for batch-mates.
+    pub max_wait: std::time::Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_rows: 256,
+            min_rows: 1,
+            max_wait: std::time::Duration::from_millis(2),
+        }
+    }
+}
+
+/// One row-range of a slab belonging to one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlabSegment {
+    /// Index into the batcher's input list.
+    pub source: usize,
+    /// Row range inside the slab.
+    pub start: usize,
+    pub rows: usize,
+}
+
+/// A fused evaluation: concatenated inputs plus per-row times.
+pub struct Slab {
+    pub x: Tensor,
+    pub t: Vec<f32>,
+    pub segments: Vec<SlabSegment>,
+}
+
+/// The full dispatch plan for one round.
+pub struct BatchPlan {
+    pub slabs: Vec<Slab>,
+    /// Total rows packed this round.
+    pub rows: usize,
+}
+
+/// Stateless batcher (state lives in the service loop; this is the
+/// packing algorithm).
+pub struct Batcher {
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy }
+    }
+
+    /// Pack pending evaluations (one per request, identified by index)
+    /// into slabs of at most `max_rows` rows. Requests larger than
+    /// `max_rows` are split across consecutive slabs. First-come
+    /// first-packed; no reordering within a request.
+    pub fn pack(&self, pending: &[(usize, &EvalRequest)]) -> BatchPlan {
+        let mut slabs: Vec<Slab> = Vec::new();
+        let mut cur_rows: Vec<(usize, usize, usize)> = Vec::new(); // (source, row_off, n)
+        let mut cur_count = 0usize;
+        let mut total = 0usize;
+
+        let flush =
+            |cur: &mut Vec<(usize, usize, usize)>, count: &mut usize, slabs: &mut Vec<Slab>| {
+                if cur.is_empty() {
+                    return;
+                }
+                let dim = pending
+                    .iter()
+                    .find(|(i, _)| *i == cur[0].0)
+                    .map(|(_, r)| r.x.cols())
+                    .unwrap();
+                let mut x = Vec::with_capacity(*count * dim);
+                let mut t = Vec::with_capacity(*count);
+                let mut segments = Vec::with_capacity(cur.len());
+                let mut at = 0usize;
+                for &(src, off, n) in cur.iter() {
+                    let req = pending.iter().find(|(i, _)| *i == src).map(|(_, r)| r).unwrap();
+                    for r in off..off + n {
+                        x.extend_from_slice(req.x.row(r));
+                        t.push(req.t as f32);
+                    }
+                    segments.push(SlabSegment { source: src, start: at, rows: n });
+                    at += n;
+                }
+                slabs.push(Slab { x: Tensor::from_vec(x, *count, dim), t, segments });
+                cur.clear();
+                *count = 0;
+            };
+
+        for &(idx, req) in pending {
+            let mut off = 0;
+            let rows = req.x.rows();
+            while off < rows {
+                let space = self.policy.max_rows - cur_count;
+                if space == 0 {
+                    flush(&mut cur_rows, &mut cur_count, &mut slabs);
+                    continue;
+                }
+                let take = space.min(rows - off);
+                cur_rows.push((idx, off, take));
+                cur_count += take;
+                total += take;
+                off += take;
+            }
+        }
+        flush(&mut cur_rows, &mut cur_count, &mut slabs);
+        BatchPlan { slabs, rows: total }
+    }
+
+    /// Split one slab's model output back into per-source pieces,
+    /// returned as `(source, eps_rows)` in segment order. Pieces of a
+    /// split request arrive in row order and are stitched by the caller.
+    pub fn unpack(slab: &Slab, out: &Tensor) -> Vec<(usize, Tensor)> {
+        assert_eq!(out.rows(), slab.x.rows(), "model output rows mismatch");
+        slab.segments
+            .iter()
+            .map(|seg| (seg.source, out.slice_rows(seg.start, seg.rows)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(rows: usize, dim: usize, t: f64, fill: f32) -> EvalRequest {
+        EvalRequest { x: Tensor::from_vec(vec![fill; rows * dim], rows, dim), t }
+    }
+
+    fn batcher(max_rows: usize) -> Batcher {
+        Batcher::new(BatchPolicy { max_rows, ..Default::default() })
+    }
+
+    #[test]
+    fn packs_multiple_requests_into_one_slab() {
+        let a = req(3, 2, 0.9, 1.0);
+        let b = req(4, 2, 0.4, 2.0);
+        let plan = batcher(16).pack(&[(0, &a), (1, &b)]);
+        assert_eq!(plan.slabs.len(), 1);
+        assert_eq!(plan.rows, 7);
+        let slab = &plan.slabs[0];
+        assert_eq!(slab.x.rows(), 7);
+        // Per-row times follow the owning request.
+        assert_eq!(&slab.t[..3], &[0.9f32; 3]);
+        assert_eq!(&slab.t[3..], &[0.4f32; 4]);
+        assert_eq!(
+            slab.segments,
+            vec![
+                SlabSegment { source: 0, start: 0, rows: 3 },
+                SlabSegment { source: 1, start: 3, rows: 4 }
+            ]
+        );
+    }
+
+    #[test]
+    fn splits_at_max_rows() {
+        let a = req(5, 2, 0.5, 1.0);
+        let b = req(5, 2, 0.2, 2.0);
+        let plan = batcher(6).pack(&[(0, &a), (1, &b)]);
+        assert_eq!(plan.slabs.len(), 2);
+        assert_eq!(plan.slabs[0].x.rows(), 6);
+        assert_eq!(plan.slabs[1].x.rows(), 4);
+        // b is split 1 + 4 across the slabs.
+        assert_eq!(plan.slabs[0].segments[1], SlabSegment { source: 1, start: 5, rows: 1 });
+        assert_eq!(plan.slabs[1].segments[0], SlabSegment { source: 1, start: 0, rows: 4 });
+    }
+
+    #[test]
+    fn giant_request_spans_slabs() {
+        let a = req(20, 3, 0.7, 1.0);
+        let plan = batcher(8).pack(&[(0, &a)]);
+        assert_eq!(plan.slabs.len(), 3);
+        let rows: usize = plan.slabs.iter().map(|s| s.x.rows()).sum();
+        assert_eq!(rows, 20);
+    }
+
+    #[test]
+    fn unpack_routes_rows_back() {
+        let a = req(2, 2, 0.9, 1.0);
+        let b = req(3, 2, 0.4, 2.0);
+        let plan = batcher(16).pack(&[(7, &a), (9, &b)]);
+        let slab = &plan.slabs[0];
+        // Identity "model": eps = x.
+        let outs = Batcher::unpack(slab, &slab.x);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].0, 7);
+        assert_eq!(outs[0].1.as_slice(), a.x.as_slice());
+        assert_eq!(outs[1].0, 9);
+        assert_eq!(outs[1].1.as_slice(), b.x.as_slice());
+    }
+
+    #[test]
+    fn empty_pack_is_empty() {
+        let plan = batcher(8).pack(&[]);
+        assert_eq!(plan.slabs.len(), 0);
+        assert_eq!(plan.rows, 0);
+    }
+
+    #[test]
+    fn rows_conserved_many_shapes() {
+        // Property-style sweep: total packed rows always equals input
+        // rows and every segment maps to exactly one source range.
+        for max_rows in [1usize, 3, 7, 16, 64] {
+            let reqs: Vec<EvalRequest> = (1..8).map(|i| req(i * 2 + 1, 2, 0.5, i as f32)).collect();
+            let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
+            let plan = batcher(max_rows).pack(&pending);
+            let want: usize = reqs.iter().map(|r| r.x.rows()).sum();
+            assert_eq!(plan.rows, want);
+            let mut per_source = vec![0usize; reqs.len()];
+            for slab in &plan.slabs {
+                assert!(slab.x.rows() <= max_rows);
+                let seg_rows: usize = slab.segments.iter().map(|s| s.rows).sum();
+                assert_eq!(seg_rows, slab.x.rows());
+                for seg in &slab.segments {
+                    per_source[seg.source] += seg.rows;
+                }
+            }
+            for (i, r) in reqs.iter().enumerate() {
+                assert_eq!(per_source[i], r.x.rows(), "source {i} at max_rows {max_rows}");
+            }
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The serving coordinator: continuous dynamic batching of concurrent
+//! sampling requests over one denoiser artifact.
+//!
+//! Fast diffusion sampling is a serving problem (the paper's Tab. 7
+//! benchmarks solvers inside a sampler service): many clients ask for
+//! batches of samples with per-request solver/NFE settings, and the
+//! dominant cost is network evaluation. Because the denoiser takes the
+//! diffusion time as a *per-row* input, evaluations from requests sitting
+//! at **different timesteps** can be fused into one PJRT call — the
+//! diffusion analogue of vLLM-style continuous batching, where requests
+//! join and leave the running batch at step granularity.
+//!
+//! Module map:
+//! * [`request`] — the request/response types and per-request state
+//!   machine wrapper around a [`crate::solvers::Solver`].
+//! * [`batcher`]  — pure batch assembly: pack pending per-request
+//!   evaluations into bucket-sized slabs (with per-row times), unpack
+//!   model output back to requests. Unit-testable without PJRT.
+//! * [`telemetry`] — counters + latency/occupancy recorders feeding the
+//!   serving benches (Tab. 7).
+//! * [`service`] — the engine loop: admission queue with backpressure,
+//!   round-based stepping, dispatch policy (max-rows / max-wait), and
+//!   the public [`service::Coordinator`] handle.
+
+pub mod batcher;
+pub mod request;
+pub mod service;
+pub mod telemetry;
+
+pub use batcher::{BatchPlan, Batcher, BatchPolicy};
+pub use request::{RequestSpec, RequestState, SamplingResult};
+pub use service::{Coordinator, CoordinatorConfig, SubmitError};
+pub use telemetry::Telemetry;

@@ -1,0 +1,221 @@
+//! Request/response types and the per-request solver state machine.
+
+use std::time::Instant;
+
+use crate::rng::Rng;
+use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use crate::solvers::{EvalRequest, Solver, SolverKind};
+use crate::tensor::Tensor;
+
+/// What a client asks for: a batch of samples from one dataset's
+/// denoiser under a chosen solver at a chosen NFE budget.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    /// Dataset / model name ("gmm8", "checkerboard", ...).
+    pub dataset: String,
+    /// Solver name, parsed by [`SolverKind::parse`] ("era", "ddim",
+    /// "dpm-fast", "era-fixed-5", ...).
+    pub solver: String,
+    /// Network-evaluation budget.
+    pub nfe: usize,
+    /// Samples requested.
+    pub n_samples: usize,
+    /// Timestep grid flavour ("uniform" | "quadratic" | "logsnr").
+    pub grid: String,
+    /// Final time t_N (the paper's 1e-3 / 1e-4 settings).
+    pub t_end: f64,
+    /// Seed for the prior noise (and ancestral noise for DDPM).
+    pub seed: u64,
+}
+
+impl Default for RequestSpec {
+    fn default() -> Self {
+        RequestSpec {
+            dataset: "gmm8".into(),
+            solver: "era".into(),
+            nfe: 10,
+            n_samples: 16,
+            grid: "uniform".into(),
+            t_end: 1e-3,
+            seed: 0,
+        }
+    }
+}
+
+impl RequestSpec {
+    /// Validate and instantiate the solver state for this request.
+    pub fn build_solver(
+        &self,
+        sched: VpSchedule,
+        dim: usize,
+    ) -> Result<Box<dyn Solver>, String> {
+        let kind = SolverKind::parse(&self.solver)
+            .ok_or_else(|| format!("unknown solver '{}'", self.solver))?;
+        let grid_kind = GridKind::parse(&self.grid)
+            .ok_or_else(|| format!("unknown grid '{}'", self.grid))?;
+        if self.n_samples == 0 {
+            return Err("n_samples must be positive".into());
+        }
+        if !(self.t_end > 0.0 && self.t_end < 1.0) {
+            return Err(format!("t_end {} out of (0, 1)", self.t_end));
+        }
+        if self.nfe < kind.min_nfe() {
+            return Err(format!(
+                "nfe {} below minimum {} for solver '{}'",
+                self.nfe,
+                kind.min_nfe(),
+                self.solver
+            ));
+        }
+        let steps = kind.steps_for_nfe(self.nfe);
+        let grid = make_grid(&sched, grid_kind, steps, 1.0, self.t_end);
+        let mut rng = Rng::for_stream(self.seed, 0x5eed);
+        let x0 = rng.normal_tensor(self.n_samples, dim);
+        Ok(kind.build(sched, grid, x0, self.seed, self.nfe))
+    }
+}
+
+/// Terminal outcome of one request.
+#[derive(Debug)]
+pub struct SamplingResult {
+    pub id: u64,
+    pub samples: Tensor,
+    pub nfe: usize,
+    /// Time spent queued before the first solver step.
+    pub queue_seconds: f64,
+    /// Submit-to-finish wall time.
+    pub total_seconds: f64,
+}
+
+/// Lifecycle of an admitted request inside the engine loop.
+pub struct RequestState {
+    pub id: u64,
+    pub dataset: String,
+    pub solver: Box<dyn Solver>,
+    /// Evaluation handed out in the current round, if any.
+    pub pending: Option<EvalRequest>,
+    pub submitted_at: Instant,
+    pub started_at: Option<Instant>,
+}
+
+impl RequestState {
+    pub fn new(id: u64, dataset: String, solver: Box<dyn Solver>) -> Self {
+        RequestState {
+            id,
+            dataset,
+            solver,
+            pending: None,
+            submitted_at: Instant::now(),
+            started_at: None,
+        }
+    }
+
+    /// Pull the next evaluation from the solver into `pending`.
+    /// Returns false when the solver has finished.
+    pub fn pull(&mut self) -> bool {
+        if self.started_at.is_none() {
+            self.started_at = Some(Instant::now());
+        }
+        debug_assert!(self.pending.is_none(), "pull with an eval outstanding");
+        match self.solver.next_eval() {
+            Some(req) => {
+                self.pending = Some(req);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Rows this request contributes to the current round.
+    pub fn pending_rows(&self) -> usize {
+        self.pending.as_ref().map_or(0, |p| p.x.rows())
+    }
+
+    /// Consume the model output for the pending evaluation.
+    pub fn deliver(&mut self, eps: Tensor) {
+        debug_assert!(self.pending.is_some(), "deliver without pending eval");
+        self.pending = None;
+        self.solver.on_eval(eps);
+    }
+
+    pub fn finish(self) -> SamplingResult {
+        let now = Instant::now();
+        let started = self.started_at.unwrap_or(now);
+        SamplingResult {
+            id: self.id,
+            nfe: self.solver.nfe(),
+            samples: self.solver.current().clone(),
+            queue_seconds: (started - self.submitted_at).as_secs_f64(),
+            total_seconds: (now - self.submitted_at).as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::eps_model::{AnalyticGmm, EpsModel};
+
+    fn sched() -> VpSchedule {
+        VpSchedule::default()
+    }
+
+    #[test]
+    fn spec_builds_every_known_solver() {
+        for s in ["ddim", "ddpm", "iadams", "dpm-2", "dpm-fast", "era", "era-fixed-4"] {
+            let spec = RequestSpec { solver: s.into(), nfe: 15, ..Default::default() };
+            let solver = spec.build_solver(sched(), 2);
+            assert!(solver.is_ok(), "{s}: {:?}", solver.err());
+        }
+        // PNDM needs its RK warmup budget.
+        let spec = RequestSpec { solver: "pndm".into(), nfe: 15, ..Default::default() };
+        assert!(spec.build_solver(sched(), 2).is_ok());
+    }
+
+    #[test]
+    fn spec_rejects_bad_inputs() {
+        let bad_solver = RequestSpec { solver: "wat".into(), ..Default::default() };
+        assert!(bad_solver.build_solver(sched(), 2).is_err());
+        let bad_grid = RequestSpec { grid: "banana".into(), ..Default::default() };
+        assert!(bad_grid.build_solver(sched(), 2).is_err());
+        let bad_n = RequestSpec { n_samples: 0, ..Default::default() };
+        assert!(bad_n.build_solver(sched(), 2).is_err());
+        let bad_t = RequestSpec { t_end: 0.0, ..Default::default() };
+        assert!(bad_t.build_solver(sched(), 2).is_err());
+        let low_nfe = RequestSpec { solver: "pndm".into(), nfe: 5, ..Default::default() };
+        assert!(low_nfe.build_solver(sched(), 2).is_err());
+    }
+
+    #[test]
+    fn state_machine_runs_to_completion() {
+        let spec = RequestSpec { nfe: 10, n_samples: 4, ..Default::default() };
+        let solver = spec.build_solver(sched(), 2).unwrap();
+        let mut st = RequestState::new(7, "gmm8".into(), solver);
+        let model = AnalyticGmm::gmm8(sched());
+        let mut rounds = 0;
+        while st.pull() {
+            let req = st.pending.as_ref().unwrap();
+            let t = vec![req.t as f32; req.x.rows()];
+            let eps = model.eval(&req.x, &t);
+            st.deliver(eps);
+            rounds += 1;
+            assert!(rounds < 100, "runaway");
+        }
+        let res = st.finish();
+        assert_eq!(res.id, 7);
+        assert_eq!(res.nfe, 10);
+        assert_eq!(res.samples.rows(), 4);
+        assert!(res.total_seconds >= res.queue_seconds);
+    }
+
+    #[test]
+    fn deterministic_prior_per_seed() {
+        let spec = RequestSpec { seed: 42, ..Default::default() };
+        let a = spec.build_solver(sched(), 2).unwrap().current().clone();
+        let b = spec.build_solver(sched(), 2).unwrap().current().clone();
+        assert_eq!(a.as_slice(), b.as_slice());
+        let spec2 = RequestSpec { seed: 43, ..Default::default() };
+        let c = spec2.build_solver(sched(), 2).unwrap().current().clone();
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+}

@@ -1,0 +1,562 @@
+//! The coordinator engine loop: admission with backpressure, round-based
+//! continuous batching, and the public [`Coordinator`] handle.
+//!
+//! One dedicated loop thread owns every [`RequestState`]. Each round it
+//! (1) admits queued requests up to `max_active`, (2) pulls the next
+//! evaluation from every active solver, (3) optionally lingers up to
+//! `max_wait` for batch-mates when under `min_rows`, (4) packs all
+//! pending evaluations *per dataset* into slabs and runs them through the
+//! [`ModelBank`], (5) routes outputs back and retires finished requests.
+//! Requests join and leave the running batch at step granularity —
+//! continuous batching in the vLLM sense, applied to diffusion sampling.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, BatchPolicy};
+use crate::coordinator::request::{RequestSpec, RequestState, SamplingResult};
+use crate::coordinator::telemetry::Telemetry;
+use crate::runtime::PjRtEngine;
+use crate::solvers::schedule::VpSchedule;
+use crate::solvers::EpsModel;
+use crate::tensor::Tensor;
+
+/// What the loop evaluates against: a named family of denoisers.
+/// Implemented by [`PjRtEngine`] (production) and [`MockBank`] (tests,
+/// in-process benches).
+pub trait ModelBank: Send + Sync {
+    fn sched(&self) -> VpSchedule;
+    fn dim(&self, dataset: &str) -> Result<usize, String>;
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String>;
+    /// Rows the engine would actually execute for a slab of `rows`
+    /// (bucket rounding), for padding telemetry.
+    fn executed_rows(&self, rows: usize) -> usize {
+        rows
+    }
+}
+
+impl ModelBank for PjRtEngine {
+    fn sched(&self) -> VpSchedule {
+        self.manifest().schedule
+    }
+
+    fn dim(&self, dataset: &str) -> Result<usize, String> {
+        Ok(self.dataset(dataset)?.dim)
+    }
+
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        self.eval_eps(dataset, x, t)
+    }
+
+    fn executed_rows(&self, rows: usize) -> usize {
+        self.manifest().bucket_for(rows).max(rows)
+    }
+}
+
+/// Test/bench bank over in-process [`EpsModel`]s.
+pub struct MockBank {
+    sched: VpSchedule,
+    models: BTreeMap<String, Box<dyn EpsModel>>,
+}
+
+impl MockBank {
+    pub fn new(sched: VpSchedule) -> Self {
+        MockBank { sched, models: BTreeMap::new() }
+    }
+
+    pub fn with(mut self, name: &str, model: Box<dyn EpsModel>) -> Self {
+        self.models.insert(name.to_string(), model);
+        self
+    }
+}
+
+impl ModelBank for MockBank {
+    fn sched(&self) -> VpSchedule {
+        self.sched
+    }
+
+    fn dim(&self, dataset: &str) -> Result<usize, String> {
+        self.models
+            .get(dataset)
+            .map(|m| m.dim())
+            .ok_or_else(|| format!("unknown dataset '{dataset}'"))
+    }
+
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        let m = self.models.get(dataset).ok_or_else(|| format!("unknown dataset '{dataset}'"))?;
+        Ok(m.eval(x, t))
+    }
+}
+
+/// Coordinator construction knobs.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Max requests stepped concurrently (the running batch).
+    pub max_active: usize,
+    /// Admission queue bound; submits beyond this are rejected
+    /// immediately (backpressure surfaces to the client).
+    pub queue_capacity: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_active: 32, queue_capacity: 256, policy: BatchPolicy::default() }
+    }
+}
+
+/// Why a submit failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission queue full — shed load upstream.
+    QueueFull,
+    /// Coordinator is shutting down.
+    Shutdown,
+    /// Request invalid (unknown solver/dataset, bad budget, ...).
+    Invalid(String),
+}
+
+struct Envelope {
+    id: u64,
+    spec: RequestSpec,
+    reply: Sender<Result<SamplingResult, String>>,
+}
+
+/// Handle to a running coordinator. Cloneable submits are not needed —
+/// the handle itself is `Sync` (submit takes `&self`).
+pub struct Coordinator {
+    tx: Option<SyncSender<Envelope>>,
+    telemetry: Arc<Telemetry>,
+    next_id: AtomicU64,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pending response.
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Result<SamplingResult, String>>,
+}
+
+impl Ticket {
+    /// Block until the request finishes.
+    pub fn wait(self) -> Result<SamplingResult, String> {
+        self.rx.recv().map_err(|_| "coordinator dropped request".to_string())?
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<Result<SamplingResult, String>> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+impl Coordinator {
+    /// Spawn the engine loop over a model bank.
+    pub fn start(bank: Arc<dyn ModelBank>, config: CoordinatorConfig) -> Self {
+        let telemetry = Arc::new(Telemetry::new());
+        let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
+        let tele = telemetry.clone();
+        let handle = std::thread::Builder::new()
+            .name("era-coordinator".into())
+            .spawn(move || run_loop(bank, config, rx, tele))
+            .expect("spawn coordinator");
+        Coordinator { tx: Some(tx), telemetry, next_id: AtomicU64::new(1), handle: Some(handle) }
+    }
+
+    /// Validate cheaply and enqueue; returns a ticket for the reply.
+    pub fn submit(&self, spec: RequestSpec) -> Result<Ticket, SubmitError> {
+        if crate::solvers::SolverKind::parse(&spec.solver).is_none() {
+            return Err(SubmitError::Invalid(format!("unknown solver '{}'", spec.solver)));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let env = Envelope { id, spec, reply: reply_tx };
+        match self.tx.as_ref().ok_or(SubmitError::Shutdown)?.try_send(env) {
+            Ok(()) => Ok(Ticket { id, rx: reply_rx }),
+            Err(TrySendError::Full(_)) => {
+                self.telemetry.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Shutdown),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn sample(&self, spec: RequestSpec) -> Result<SamplingResult, String> {
+        self.submit(spec).map_err(|e| format!("{e:?}"))?.wait()
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Stop accepting work, drain in-flight requests, join the loop.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Active {
+    state: RequestState,
+    reply: Sender<Result<SamplingResult, String>>,
+}
+
+fn run_loop(
+    bank: Arc<dyn ModelBank>,
+    config: CoordinatorConfig,
+    rx: Receiver<Envelope>,
+    tele: Arc<Telemetry>,
+) {
+    let batcher = Batcher::new(config.policy);
+    let mut active: Vec<Active> = Vec::new();
+    let mut queue_open = true;
+
+    let admit = |env: Envelope, active: &mut Vec<Active>, tele: &Telemetry| {
+        let sched = bank.sched();
+        let solver = bank
+            .dim(&env.spec.dataset)
+            .and_then(|dim| env.spec.build_solver(sched, dim));
+        match solver {
+            Ok(s) => {
+                tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
+                active.push(Active {
+                    state: RequestState::new(env.id, env.spec.dataset.clone(), s),
+                    reply: env.reply,
+                });
+            }
+            Err(e) => {
+                let _ = env.reply.send(Err(e));
+            }
+        }
+    };
+
+    'outer: loop {
+        // ---- Admission ----
+        while queue_open && active.len() < config.max_active {
+            match rx.try_recv() {
+                Ok(env) => admit(env, &mut active, &tele),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    queue_open = false;
+                    break;
+                }
+            }
+        }
+        if active.is_empty() {
+            if !queue_open {
+                break 'outer; // drained and closed: exit
+            }
+            // Idle: block for work.
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(env) => {
+                    admit(env, &mut active, &tele);
+                    continue;
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    queue_open = false;
+                    continue;
+                }
+            }
+        }
+
+        tele.rounds.fetch_add(1, Ordering::Relaxed);
+
+        // ---- Pull next evaluations; retire finished solvers ----
+        let mut i = 0;
+        while i < active.len() {
+            let has_pending = active[i].state.pending.is_some();
+            if !has_pending && !active[i].state.pull() {
+                let done = active.swap_remove(i);
+                let res = done.state.finish();
+                tele.record_finish(res.total_seconds, res.queue_seconds);
+                let _ = done.reply.send(Ok(res));
+                continue;
+            }
+            i += 1;
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // ---- Linger under min_rows (max_wait policy) ----
+        let pending_rows: usize = active.iter().map(|a| a.state.pending_rows()).sum();
+        if pending_rows < config.policy.min_rows && queue_open {
+            let deadline = Instant::now() + config.policy.max_wait;
+            while Instant::now() < deadline && active.len() < config.max_active {
+                let left = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(env) => {
+                        admit(env, &mut active, &tele);
+                        // New arrivals join this round immediately.
+                        let n = active.len();
+                        if !active[n - 1].state.pull() {
+                            let done = active.swap_remove(n - 1);
+                            let res = done.state.finish();
+                            tele.record_finish(res.total_seconds, res.queue_seconds);
+                            let _ = done.reply.send(Ok(res));
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        queue_open = false;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- Pack per dataset and dispatch ----
+        let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (idx, a) in active.iter().enumerate() {
+            if a.state.pending.is_some() {
+                by_dataset.entry(a.state.dataset.as_str()).or_default().push(idx);
+            }
+        }
+        // Collect delivery list first (dataset grouping borrows `active`).
+        let mut deliveries: Vec<(usize, Tensor)> = Vec::new();
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        for (dataset, idxs) in by_dataset {
+            let pending: Vec<(usize, &crate::solvers::EvalRequest)> = idxs
+                .iter()
+                .map(|&i| (i, active[i].state.pending.as_ref().unwrap()))
+                .collect();
+            let plan = batcher.pack(&pending);
+            for slab in &plan.slabs {
+                let t0 = Instant::now();
+                match bank.eval(dataset, &slab.x, &slab.t) {
+                    Ok(out) => {
+                        tele.eval_nanos
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        tele.evals.fetch_add(1, Ordering::Relaxed);
+                        tele.rows.fetch_add(slab.x.rows(), Ordering::Relaxed);
+                        tele.padded_rows.fetch_add(
+                            bank.executed_rows(slab.x.rows()) - slab.x.rows(),
+                            Ordering::Relaxed,
+                        );
+                        deliveries.extend(Batcher::unpack(slab, &out));
+                    }
+                    Err(e) => {
+                        for seg in &slab.segments {
+                            failures.push((seg.source, e.clone()));
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- Route outputs back (stitch split requests in row order) ----
+        let mut per_source: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+        for (src, part) in deliveries {
+            per_source.entry(src).or_default().push(part);
+        }
+        for (src, parts) in per_source {
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let eps = if refs.len() == 1 { parts[0].clone() } else { Tensor::vstack(&refs) };
+            tele.steps.fetch_add(1, Ordering::Relaxed);
+            active[src].state.deliver(eps);
+        }
+
+        // ---- Fail requests whose evaluation errored (reverse index order
+        //      keeps earlier indices stable under swap_remove) ----
+        failures.sort_by(|a, b| b.0.cmp(&a.0));
+        failures.dedup_by_key(|f| f.0);
+        for (src, err) in failures {
+            let failed = active.swap_remove(src);
+            let _ = failed.reply.send(Err(format!("model evaluation failed: {err}")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::solvers::eps_model::AnalyticGmm;
+
+    fn bank() -> Arc<dyn ModelBank> {
+        let sched = VpSchedule::default();
+        Arc::new(
+            MockBank::new(sched)
+                .with("gmm8", Box::new(AnalyticGmm::gmm8(sched)))
+                .with("gmm8b", Box::new(AnalyticGmm::gmm8(sched))),
+        )
+    }
+
+    fn spec(solver: &str, n: usize, seed: u64) -> RequestSpec {
+        RequestSpec {
+            solver: solver.into(),
+            n_samples: n,
+            nfe: 10,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let res = c.sample(spec("era", 32, 1)).unwrap();
+        assert_eq!(res.samples.rows(), 32);
+        assert_eq!(res.nfe, 10);
+        assert!(res.samples.all_finite());
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let cfg = CoordinatorConfig {
+            policy: BatchPolicy { max_rows: 256, min_rows: 64, max_wait: Duration::from_millis(30) },
+            ..Default::default()
+        };
+        let c = Coordinator::start(bank(), cfg);
+        let tickets: Vec<_> =
+            (0..8).map(|i| c.submit(spec("era", 16, i)).unwrap()).collect();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.samples.rows(), 16);
+        }
+        // 8 requests x 16 rows with min_rows 64 must have fused: strictly
+        // fewer evals than 8 requests x 10 steps separately.
+        let evals = c.telemetry().evals.load(Ordering::Relaxed);
+        assert!(evals < 80, "no fusion happened: {evals} evals");
+        assert!(c.telemetry().mean_batch_occupancy() > 16.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_solvers_and_datasets() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let t1 = c.submit(spec("era", 8, 1)).unwrap();
+        let t2 = c.submit(spec("ddim", 8, 2)).unwrap();
+        let mut s3 = spec("dpm-2", 8, 3);
+        s3.dataset = "gmm8b".into();
+        let t3 = c.submit(s3).unwrap();
+        for t in [t1, t2, t3] {
+            assert!(t.wait().is_ok());
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_solver_rejected_at_submit() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        match c.submit(spec("frobnicate", 4, 0)) {
+            Err(SubmitError::Invalid(_)) => {}
+            Err(e) => panic!("expected Invalid, got {e:?}"),
+            Ok(_) => panic!("expected Invalid, got Ok"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_dataset_fails_via_reply() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let mut s = spec("era", 4, 0);
+        s.dataset = "nope".into();
+        let t = c.submit(s).unwrap();
+        assert!(t.wait().is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_budget_fails_via_reply() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let mut s = spec("pndm", 4, 0);
+        s.nfe = 5; // below PRK warmup minimum
+        match c.submit(s) {
+            Ok(t) => assert!(t.wait().is_err()),
+            Err(SubmitError::Invalid(_)) => {}
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn results_match_inprocess_sampling() {
+        // The coordinator path must be numerically identical to driving
+        // the solver directly (same seed, same model).
+        let sched = VpSchedule::default();
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let s = spec("era", 64, 9);
+        let via_coord = c.sample(s.clone()).unwrap();
+        c.shutdown();
+
+        let model = AnalyticGmm::gmm8(sched);
+        let mut solver = s.build_solver(sched, 2).unwrap();
+        let direct = crate::solvers::sample_with(&mut *solver, &model);
+        assert_eq!(via_coord.samples.as_slice(), direct.as_slice());
+    }
+
+    #[test]
+    fn samples_are_on_manifold() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let res = c.sample(spec("era", 400, 11)).unwrap();
+        let cov = metrics::mode_coverage(&res.samples, &crate::data::gmm8_modes(), 0.5);
+        assert!(cov > 0.9, "coverage {cov}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue + tiny active set: flooding must yield QueueFull.
+        let cfg = CoordinatorConfig {
+            max_active: 1,
+            queue_capacity: 1,
+            policy: BatchPolicy::default(),
+        };
+        let c = Coordinator::start(bank(), cfg);
+        let mut rejected = 0;
+        let mut tickets = Vec::new();
+        for i in 0..200 {
+            match c.submit(spec("era", 64, i)) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "queue never filled");
+        for t in tickets {
+            let _ = t.wait();
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let tickets: Vec<_> = (0..4).map(|i| c.submit(spec("ddim", 32, i)).unwrap()).collect();
+        c.shutdown(); // must drain, not drop
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn telemetry_counts_line_up() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        for i in 0..3 {
+            let _ = c.sample(spec("era", 8, i)).unwrap();
+        }
+        let t = c.telemetry();
+        assert_eq!(t.requests_admitted.load(Ordering::Relaxed), 3);
+        assert_eq!(t.requests_finished.load(Ordering::Relaxed), 3);
+        assert!(t.evals.load(Ordering::Relaxed) >= 10);
+        assert!(t.summary().contains("finished=3"));
+        c.shutdown();
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving telemetry: counters, latency recording, and batch-occupancy
+//! tracking for the Tab. 7 reproduction and the §Perf iteration log.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Shared counters (cheap, lock-free) + latency samples (mutex; only
+/// touched once per finished request).
+#[derive(Default)]
+pub struct Telemetry {
+    pub requests_admitted: AtomicUsize,
+    pub requests_finished: AtomicUsize,
+    pub requests_rejected: AtomicUsize,
+    /// Fused model evaluations dispatched.
+    pub evals: AtomicUsize,
+    /// Rows packed into those evaluations.
+    pub rows: AtomicUsize,
+    /// Sum over evals of (bucket - rows): padding waste, in rows.
+    pub padded_rows: AtomicUsize,
+    /// Total solver transitions stepped.
+    pub steps: AtomicUsize,
+    /// Busy-loop rounds executed.
+    pub rounds: AtomicUsize,
+    /// Nanoseconds spent inside model evaluation.
+    pub eval_nanos: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+    queue_waits: Mutex<Vec<f64>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_finish(&self, total_seconds: f64, queue_seconds: f64) {
+        self.requests_finished.fetch_add(1, Ordering::Relaxed);
+        self.latencies.lock().unwrap().push(total_seconds);
+        self.queue_waits.lock().unwrap().push(queue_seconds);
+    }
+
+    /// Latency percentile over finished requests (0.0..=1.0), seconds.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        percentile(&self.latencies.lock().unwrap(), q)
+    }
+
+    pub fn queue_wait_percentile(&self, q: f64) -> f64 {
+        percentile(&self.queue_waits.lock().unwrap(), q)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            0.0
+        } else {
+            l.iter().sum::<f64>() / l.len() as f64
+        }
+    }
+
+    /// Mean rows per fused evaluation (batching efficiency).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let evals = self.evals.load(Ordering::Relaxed);
+        if evals == 0 {
+            0.0
+        } else {
+            self.rows.load(Ordering::Relaxed) as f64 / evals as f64
+        }
+    }
+
+    /// Fraction of executed rows that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let rows = self.rows.load(Ordering::Relaxed);
+        let pad = self.padded_rows.load(Ordering::Relaxed);
+        if rows + pad == 0 {
+            0.0
+        } else {
+            pad as f64 / (rows + pad) as f64
+        }
+    }
+
+    /// One-line summary for logs / bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "finished={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
+             p50={:.1}ms p99={:.1}ms",
+            self.requests_finished.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.evals.load(Ordering::Relaxed),
+            self.rows.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            100.0 * self.padding_fraction(),
+            1e3 * self.latency_percentile(0.5),
+            1e3 * self.latency_percentile(0.99),
+        )
+    }
+}
+
+fn percentile(sorted_src: &[f64], q: f64) -> f64 {
+    if sorted_src.is_empty() {
+        return 0.0;
+    }
+    let mut v = sorted_src.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let t = Telemetry::new();
+        for i in 1..=100 {
+            t.record_finish(i as f64, 0.0);
+        }
+        assert_eq!(t.requests_finished.load(Ordering::Relaxed), 100);
+        assert!((t.latency_percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((t.latency_percentile(1.0) - 100.0).abs() < 1e-9);
+        assert!((t.latency_percentile(0.5) - 50.0).abs() <= 1.0);
+        assert!((t.mean_latency() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_and_padding() {
+        let t = Telemetry::new();
+        t.evals.fetch_add(2, Ordering::Relaxed);
+        t.rows.fetch_add(24, Ordering::Relaxed);
+        t.padded_rows.fetch_add(8, Ordering::Relaxed);
+        assert!((t.mean_batch_occupancy() - 12.0).abs() < 1e-9);
+        assert!((t.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_telemetry_is_zero() {
+        let t = Telemetry::new();
+        assert_eq!(t.latency_percentile(0.5), 0.0);
+        assert_eq!(t.mean_batch_occupancy(), 0.0);
+        assert_eq!(t.padding_fraction(), 0.0);
+        assert!(t.summary().contains("finished=0"));
+    }
+}

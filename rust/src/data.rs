@@ -1,0 +1,223 @@
+//! Rust mirrors of the Python synthetic manifolds (python/compile/datasets.py).
+//!
+//! Used by tests, the workload generator, and the qualitative figures.
+//! Distribution-level equality with the Python side is what matters (the
+//! FID reference moments ship in the manifest, computed once in Python);
+//! tests here pin the same moment/support invariants the pytest side pins.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Dataset identifiers matching the artifact manifest keys.
+pub const DATASETS: [&str; 5] = ["gmm8", "checkerboard", "swissroll", "rings", "patches64"];
+
+/// Data dimension per dataset.
+pub fn dim(name: &str) -> Option<usize> {
+    match name {
+        "gmm8" | "checkerboard" | "swissroll" | "rings" => Some(2),
+        "patches64" => Some(64),
+        _ => None,
+    }
+}
+
+/// The paper dataset each manifold stands in for (see DESIGN.md §2).
+pub fn stands_in_for(name: &str) -> &'static str {
+    match name {
+        "gmm8" => "CIFAR-10",
+        "checkerboard" => "LSUN-Church",
+        "swissroll" => "LSUN-Bedroom",
+        "rings" => "CelebA",
+        "patches64" => "high-dim stress test",
+        _ => "?",
+    }
+}
+
+/// Sample `n` points. `basis` is required for `patches64` (from the
+/// manifest; the Python exporter owns the canonical one).
+pub fn sample(name: &str, rng: &mut Rng, n: usize, basis: Option<&[f32]>) -> Tensor {
+    match name {
+        "gmm8" => gmm8(rng, n),
+        "checkerboard" => checkerboard(rng, n),
+        "swissroll" => swissroll(rng, n),
+        "rings" => rings(rng, n),
+        "patches64" => patches64(rng, n, basis.expect("patches64 needs a basis")),
+        _ => panic!("unknown dataset {name}"),
+    }
+}
+
+/// Mode centers of gmm8 (used by the coverage metric).
+pub fn gmm8_modes() -> Vec<Vec<f64>> {
+    (0..8)
+        .map(|i| {
+            let a = 2.0 * std::f64::consts::PI * i as f64 / 8.0;
+            vec![2.0 * a.cos(), 2.0 * a.sin()]
+        })
+        .collect()
+}
+
+fn gmm8(rng: &mut Rng, n: usize) -> Tensor {
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let mode = rng.below(8) as f64;
+        let a = 2.0 * std::f64::consts::PI * mode / 8.0;
+        data.push((2.0 * a.cos() + 0.15 * rng.normal()) as f32);
+        data.push((2.0 * a.sin() + 0.15 * rng.normal()) as f32);
+    }
+    Tensor::from_vec(data, n, 2)
+}
+
+fn checkerboard(rng: &mut Rng, n: usize) -> Tensor {
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let x = rng.uniform_in(-2.0, 2.0);
+        let y_cell = rng.uniform();
+        let row = rng.below(2) as f64;
+        let col = (x + 2.0).floor();
+        let y = y_cell + 2.0 * row - 2.0 + col.rem_euclid(2.0);
+        data.push(x as f32);
+        data.push(y as f32);
+    }
+    Tensor::from_vec(data, n, 2)
+}
+
+fn swissroll(rng: &mut Rng, n: usize) -> Tensor {
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let t = rng.uniform().sqrt();
+        let theta = 3.0 * std::f64::consts::PI * t + 0.5 * std::f64::consts::PI;
+        let r = 0.6 * t + 0.08;
+        data.push((2.4 * r * theta.cos() + 0.05 * rng.normal()) as f32);
+        data.push((2.4 * r * theta.sin() + 0.05 * rng.normal()) as f32);
+    }
+    Tensor::from_vec(data, n, 2)
+}
+
+fn rings(rng: &mut Rng, n: usize) -> Tensor {
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let radius = if rng.uniform() < 0.5 { 0.8 } else { 1.8 };
+        let theta = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+        let r = radius + 0.07 * rng.normal();
+        data.push((r * theta.cos()) as f32);
+        data.push((r * theta.sin()) as f32);
+    }
+    Tensor::from_vec(data, n, 2)
+}
+
+fn patches64(rng: &mut Rng, n: usize, basis: &[f32]) -> Tensor {
+    assert_eq!(basis.len(), 64 * 8, "patches64 basis must be 64x8 row-major");
+    let mut data = Vec::with_capacity(n * 64);
+    for _ in 0..n {
+        let z: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        for i in 0..64 {
+            let mut acc = 0.0f64;
+            for (k, &zk) in z.iter().enumerate() {
+                acc += basis[i * 8 + k] as f64 * zk;
+            }
+            data.push((1.5 * acc).tanh() as f32);
+        }
+    }
+    Tensor::from_vec(data, n, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match() {
+        for name in DATASETS {
+            assert!(dim(name).is_some(), "{name}");
+        }
+        assert_eq!(dim("gmm8"), Some(2));
+        assert_eq!(dim("patches64"), Some(64));
+        assert_eq!(dim("nope"), None);
+    }
+
+    #[test]
+    fn gmm8_on_circle() {
+        let mut rng = Rng::new(0);
+        let x = gmm8(&mut rng, 5000);
+        let mut near = 0;
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 2.0).abs() < 0.6 {
+                near += 1;
+            }
+        }
+        assert!(near as f64 / 5000.0 > 0.99);
+    }
+
+    #[test]
+    fn gmm8_covers_all_modes() {
+        let mut rng = Rng::new(1);
+        let x = gmm8(&mut rng, 4000);
+        assert!((crate::metrics::mode_coverage(&x, &gmm8_modes(), 0.45) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checkerboard_parity() {
+        let mut rng = Rng::new(2);
+        let x = checkerboard(&mut rng, 5000);
+        let mut ok = 0;
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            assert!(row[0].abs() <= 2.0 + 1e-5);
+            let cx = (row[0] as f64 + 2.0).floor();
+            let cy = (row[1] as f64 + 2.0).clamp(0.0, 3.999).floor();
+            if ((cx + cy) as i64) % 2 == 0 {
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 / 5000.0 > 0.995);
+    }
+
+    #[test]
+    fn rings_two_radii_balanced() {
+        let mut rng = Rng::new(3);
+        let x = rings(&mut rng, 8000);
+        let (mut inner, mut outer) = (0, 0);
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 0.8).abs() < 0.3 {
+                inner += 1;
+            } else if (rad - 1.8).abs() < 0.3 {
+                outer += 1;
+            }
+        }
+        assert!((inner + outer) as f64 / 8000.0 > 0.99);
+        let frac = inner as f64 / 8000.0;
+        assert!(frac > 0.45 && frac < 0.55, "{frac}");
+    }
+
+    #[test]
+    fn patches64_bounded() {
+        let mut rng = Rng::new(4);
+        // An arbitrary normalised basis works for the invariants.
+        let basis: Vec<f32> = (0..512).map(|i| ((i % 13) as f32 - 6.0) / 20.0).collect();
+        let x = patches64(&mut rng, 200, &basis);
+        assert_eq!(x.cols(), 64);
+        assert!(x.as_slice().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn gmm8_moments_match_python_reference() {
+        // Python: E[x]=0, var = 2 + 0.15^2 per axis (test_datasets.py).
+        let mut rng = Rng::new(5);
+        let x = gmm8(&mut rng, 50_000);
+        let mu = x.col_means();
+        let cov = x.covariance();
+        assert!(mu[0].abs() < 0.05 && mu[1].abs() < 0.05);
+        assert!((cov[0] - 2.0225).abs() < 0.1, "{}", cov[0]);
+        assert!((cov[3] - 2.0225).abs() < 0.1, "{}", cov[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dataset")]
+    fn unknown_dataset_panics() {
+        let mut rng = Rng::new(0);
+        let _ = sample("nope", &mut rng, 1, None);
+    }
+}

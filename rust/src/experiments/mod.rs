@@ -1,0 +1,13 @@
+//! Experiment machinery shared by the `examples/` drivers and the bench
+//! targets: solver sweeps, figure/table assembly, and report writing.
+//!
+//! Each paper table/figure has one driver binary (see DESIGN.md §5);
+//! they all call into here so the sweep logic — equal-NFE accounting,
+//! seeding, FID evaluation against the manifest's reference moments —
+//! is written (and tested) once.
+
+pub mod report;
+pub mod sweep;
+
+pub use report::{write_markdown_table, Table};
+pub use sweep::{EvalBackend, SweepConfig, SweepResult};

@@ -1,0 +1,219 @@
+//! Report writing: markdown tables (matching the paper's row/column
+//! layout), CSV series for the figures, and ASCII density plots for the
+//! qualitative comparisons.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::experiments::sweep::SweepResult;
+use crate::tensor::Tensor;
+
+/// A generic table: header row + body rows.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnote: String,
+}
+
+impl Table {
+    /// Paper-style layout from a sweep: one row per solver, one column
+    /// per NFE, `\` for cells the solver cannot fill.
+    pub fn from_sweep(title: &str, sweep: &SweepResult, solvers: &[String], nfes: &[usize]) -> Table {
+        let mut header = vec!["Sampling method \\ NFE".to_string()];
+        header.extend(nfes.iter().map(|n| n.to_string()));
+        let rows = solvers
+            .iter()
+            .map(|s| {
+                let mut row = vec![s.clone()];
+                for &nfe in nfes {
+                    row.push(match sweep.fid(s, nfe) {
+                        Some(f) => format!("{f:.3}"),
+                        None => "\\".to_string(),
+                    });
+                }
+                row
+            })
+            .collect();
+        Table {
+            title: title.to_string(),
+            header,
+            rows,
+            footnote: sweep.config_label.clone(),
+        }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        let widths: Vec<usize> = (0..self.header.len())
+            .map(|c| {
+                self.rows
+                    .iter()
+                    .map(|r| r.get(c).map_or(0, |v| v.len()))
+                    .chain(std::iter::once(self.header[c].len()))
+                    .max()
+                    .unwrap_or(1)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.header));
+        s.push('|');
+        for w in &widths {
+            s.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+        }
+        if !self.footnote.is_empty() {
+            s.push_str(&format!("\n*{}*\n", self.footnote));
+        }
+        s
+    }
+}
+
+/// Write a table to `path` (creating parent dirs) and echo it to stdout.
+pub fn write_markdown_table(path: &str, table: &Table) -> std::io::Result<()> {
+    let md = table.to_markdown();
+    print!("{md}");
+    if let Some(parent) = Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(md.as_bytes())
+}
+
+/// Write (x, series...) columns as CSV — the figure format.
+pub fn write_csv(
+    path: &str,
+    header: &[&str],
+    columns: &[Vec<f64>],
+) -> std::io::Result<()> {
+    assert_eq!(header.len(), columns.len(), "header/columns mismatch");
+    let rows = columns.first().map_or(0, |c| c.len());
+    assert!(columns.iter().all(|c| c.len() == rows), "ragged columns");
+    if let Some(parent) = Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in 0..rows {
+        let line: Vec<String> = columns.iter().map(|c| format!("{}", c[r])).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// ASCII density plot of 2-D samples over [-lim, lim]^2 (the qualitative
+/// "sample grid" stand-in; intensity ramp " .:-=+*#%@").
+pub fn ascii_density(samples: &Tensor, grid: usize, lim: f64) -> String {
+    assert_eq!(samples.cols(), 2, "ascii_density wants 2-D samples");
+    let mut counts = vec![0usize; grid * grid];
+    for r in 0..samples.rows() {
+        let row = samples.row(r);
+        let fx = ((row[0] as f64 + lim) / (2.0 * lim) * grid as f64).floor();
+        let fy = ((row[1] as f64 + lim) / (2.0 * lim) * grid as f64).floor();
+        if fx >= 0.0 && fy >= 0.0 && (fx as usize) < grid && (fy as usize) < grid {
+            counts[(grid - 1 - fy as usize) * grid + fx as usize] += 1;
+        }
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    let ramp: Vec<char> = " .:-=+*#%@".chars().collect();
+    let mut out = String::with_capacity(grid * (grid + 1));
+    for y in 0..grid {
+        for x in 0..grid {
+            let v = counts[y * grid + x];
+            let idx = if v == 0 {
+                0
+            } else {
+                1 + (v * (ramp.len() - 2)) / max
+            };
+            out.push(ramp[idx.min(ramp.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweep::{Cell, SweepResult};
+
+    fn sweep() -> SweepResult {
+        SweepResult {
+            cells: vec![
+                Cell {
+                    solver: "era".into(),
+                    nfe: 10,
+                    fid: Some(1.234567),
+                    mode_coverage: None,
+                    wall_seconds: 0.1,
+                    actual_nfe: 10,
+                },
+                Cell {
+                    solver: "pndm".into(),
+                    nfe: 10,
+                    fid: None,
+                    mode_coverage: None,
+                    wall_seconds: 0.0,
+                    actual_nfe: 0,
+                },
+            ],
+            config_label: "test".into(),
+        }
+    }
+
+    #[test]
+    fn table_layout_matches_paper() {
+        let t = Table::from_sweep(
+            "Tab. X",
+            &sweep(),
+            &["era".to_string(), "pndm".to_string()],
+            &[10],
+        );
+        let md = t.to_markdown();
+        assert!(md.contains("### Tab. X"));
+        assert!(md.contains("| era"));
+        assert!(md.contains("1.235"));
+        assert!(md.contains("\\")); // missing cell marker
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("era_test_csv");
+        let path = dir.join("fig.csv");
+        write_csv(
+            path.to_str().unwrap(),
+            &["nfe", "fid"],
+            &[vec![5.0, 10.0], vec![30.0, 9.0]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("nfe,fid"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn density_plot_shape() {
+        let samples = Tensor::from_vec(vec![0.0, 0.0, 2.0, 2.0, -2.0, -2.0], 3, 2);
+        let art = ascii_density(&samples, 8, 3.0);
+        assert_eq!(art.lines().count(), 8);
+        assert!(art.lines().all(|l| l.chars().count() == 8));
+        assert!(art.chars().any(|c| c != ' ' && c != '\n'));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn csv_rejects_ragged() {
+        let _ = write_csv("/tmp/x.csv", &["a", "b"], &[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,275 @@
+//! Solver × NFE sweeps with FID evaluation (the engine behind every
+//! table/figure reproduction).
+
+use std::sync::Arc;
+
+use crate::metrics::{self, Moments};
+use crate::rng::Rng;
+use crate::runtime::{PjRtEngine, PjRtEps};
+use crate::solvers::eps_model::EpsModel;
+use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use crate::solvers::{sample_with, Solver, SolverKind};
+use crate::tensor::Tensor;
+
+/// Where network evaluations come from during a sweep.
+pub enum EvalBackend {
+    /// Production path: AOT artifacts through PJRT.
+    Pjrt { engine: Arc<PjRtEngine>, dataset: String },
+    /// In-process analytic/mock model (tests, micro benches).
+    InProcess { model: Box<dyn EpsModel>, reference: Moments },
+}
+
+impl EvalBackend {
+    pub fn pjrt(engine: Arc<PjRtEngine>, dataset: &str) -> Result<EvalBackend, String> {
+        engine.dataset(dataset)?;
+        Ok(EvalBackend::Pjrt { engine, dataset: dataset.to_string() })
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            EvalBackend::Pjrt { engine, dataset } => engine.dataset(dataset).unwrap().dim,
+            EvalBackend::InProcess { model, .. } => model.dim(),
+        }
+    }
+
+    pub fn schedule(&self) -> VpSchedule {
+        match self {
+            EvalBackend::Pjrt { engine, .. } => engine.manifest().schedule,
+            EvalBackend::InProcess { .. } => VpSchedule::default(),
+        }
+    }
+
+    pub fn reference(&self) -> Moments {
+        match self {
+            EvalBackend::Pjrt { engine, dataset } => {
+                engine.dataset(dataset).unwrap().ref_stats.clone()
+            }
+            EvalBackend::InProcess { reference, .. } => reference.clone(),
+        }
+    }
+
+    fn run(&self, solver: &mut dyn Solver) -> Tensor {
+        match self {
+            EvalBackend::Pjrt { engine, dataset } => {
+                let eps = PjRtEps::new(engine, dataset).expect("dataset checked at build");
+                sample_with(solver, &eps)
+            }
+            EvalBackend::InProcess { model, .. } => sample_with(solver, model.as_ref()),
+        }
+    }
+}
+
+/// One sweep's parameters (defaults mirror the paper's LSUN settings).
+pub struct SweepConfig {
+    /// Solver names, [`SolverKind::parse`] syntax.
+    pub solvers: Vec<String>,
+    pub nfes: Vec<usize>,
+    pub grid: GridKind,
+    pub t_end: f64,
+    /// Samples generated per (solver, NFE) cell.
+    pub n_samples: usize,
+    /// Generation happens in batches of this many rows.
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            solvers: ["ddim", "pndm", "fon", "iadams", "dpm-2", "dpm-fast", "era"]
+                .map(String::from)
+                .to_vec(),
+            nfes: vec![5, 10, 12, 15, 20, 40, 50, 100],
+            grid: GridKind::Uniform,
+            t_end: 1e-3,
+            n_samples: 4096,
+            batch: 256,
+            seed: 0,
+        }
+    }
+}
+
+/// One (solver, NFE) cell outcome.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub solver: String,
+    pub nfe: usize,
+    /// `None` when the solver cannot run at this budget (paper's "\"
+    /// cells: PNDM/FON below the RK warmup minimum).
+    pub fid: Option<f64>,
+    pub mode_coverage: Option<f64>,
+    pub wall_seconds: f64,
+    pub actual_nfe: usize,
+}
+
+/// Full sweep outcome.
+pub struct SweepResult {
+    pub cells: Vec<Cell>,
+    pub config_label: String,
+}
+
+impl SweepResult {
+    pub fn cell(&self, solver: &str, nfe: usize) -> Option<&Cell> {
+        self.cells.iter().find(|c| c.solver == solver && c.nfe == nfe)
+    }
+
+    pub fn fid(&self, solver: &str, nfe: usize) -> Option<f64> {
+        self.cell(solver, nfe).and_then(|c| c.fid)
+    }
+}
+
+/// Generate `n_samples` from one solver at one NFE budget, in batches.
+pub fn generate(
+    backend: &EvalBackend,
+    kind: &SolverKind,
+    nfe: usize,
+    grid_kind: GridKind,
+    t_end: f64,
+    n_samples: usize,
+    batch: usize,
+    seed: u64,
+) -> (Tensor, usize) {
+    let sched = backend.schedule();
+    let dim = backend.dim();
+    let steps = kind.steps_for_nfe(nfe);
+    let mut parts = Vec::new();
+    let mut consumed_nfe = 0;
+    let mut produced = 0usize;
+    let mut chunk_idx = 0u64;
+    while produced < n_samples {
+        let rows = batch.min(n_samples - produced);
+        let grid = make_grid(&sched, grid_kind, steps, 1.0, t_end);
+        let mut rng = Rng::for_stream(seed, 0xc0ffee ^ chunk_idx);
+        let x0 = rng.normal_tensor(rows, dim);
+        let mut solver = kind.build(sched, grid, x0, seed ^ chunk_idx, nfe);
+        parts.push(backend.run(&mut *solver));
+        consumed_nfe = solver.nfe();
+        produced += rows;
+        chunk_idx += 1;
+    }
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    (Tensor::vstack(&refs), consumed_nfe)
+}
+
+/// Run the full sweep, printing progress to stderr.
+pub fn run_sweep(backend: &EvalBackend, cfg: &SweepConfig) -> SweepResult {
+    let reference = backend.reference();
+    let modes = crate::data::gmm8_modes();
+    let is_gmm8 = backend.dim() == 2 && reference.dim == 2;
+    let mut cells = Vec::new();
+    for solver_name in &cfg.solvers {
+        let kind = SolverKind::parse(solver_name)
+            .unwrap_or_else(|| panic!("unknown solver '{solver_name}'"));
+        for &nfe in &cfg.nfes {
+            if nfe < kind.min_nfe() {
+                cells.push(Cell {
+                    solver: solver_name.clone(),
+                    nfe,
+                    fid: None,
+                    mode_coverage: None,
+                    wall_seconds: 0.0,
+                    actual_nfe: 0,
+                });
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            let (samples, actual_nfe) = generate(
+                backend,
+                &kind,
+                nfe,
+                cfg.grid,
+                cfg.t_end,
+                cfg.n_samples,
+                cfg.batch,
+                cfg.seed,
+            );
+            let wall = t0.elapsed().as_secs_f64();
+            let fid = metrics::fid(&samples, &reference);
+            let cov = if is_gmm8 {
+                Some(metrics::mode_coverage(&samples, &modes, 0.5))
+            } else {
+                None
+            };
+            eprintln!(
+                "  {solver_name:<14} nfe={nfe:<4} fid={fid:<9.4} ({wall:.1}s, actual nfe {actual_nfe})"
+            );
+            cells.push(Cell {
+                solver: solver_name.clone(),
+                nfe,
+                fid: Some(fid),
+                mode_coverage: cov,
+                wall_seconds: wall,
+                actual_nfe,
+            });
+        }
+    }
+    SweepResult {
+        cells,
+        config_label: format!(
+            "grid={:?} t_end={} n={} seed={}",
+            cfg.grid, cfg.t_end, cfg.n_samples, cfg.seed
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::eps_model::AnalyticGmm;
+
+    fn backend() -> EvalBackend {
+        let sched = VpSchedule::default();
+        EvalBackend::InProcess {
+            model: Box::new(AnalyticGmm::gmm8(sched)),
+            reference: Moments::new(vec![0.0, 0.0], vec![2.0225, 0.0, 0.0, 2.0225]),
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_cells() {
+        let cfg = SweepConfig {
+            solvers: vec!["ddim".into(), "era".into(), "pndm".into()],
+            nfes: vec![5, 15],
+            n_samples: 128,
+            batch: 64,
+            ..Default::default()
+        };
+        let res = run_sweep(&backend(), &cfg);
+        assert_eq!(res.cells.len(), 6);
+        // PNDM at NFE 5 is below its warmup minimum -> empty cell.
+        assert!(res.fid("pndm", 5).is_none());
+        assert!(res.fid("pndm", 15).is_some());
+        assert!(res.fid("era", 15).unwrap().is_finite());
+    }
+
+    #[test]
+    fn generate_respects_sample_count_and_batches() {
+        let b = backend();
+        let kind = SolverKind::parse("ddim").unwrap();
+        let (samples, nfe) =
+            generate(&b, &kind, 8, GridKind::Uniform, 1e-3, 100, 32, 7);
+        assert_eq!(samples.rows(), 100);
+        assert_eq!(nfe, 8);
+    }
+
+    #[test]
+    fn equal_nfe_accounting_dpm() {
+        // dpm-2 at budget 10 must actually consume 10 evals.
+        let b = backend();
+        let kind = SolverKind::parse("dpm-2").unwrap();
+        let (_, nfe) = generate(&b, &kind, 10, GridKind::LogSnr, 1e-3, 32, 32, 1);
+        assert_eq!(nfe, 10);
+        let fast = SolverKind::parse("dpm-fast").unwrap();
+        let (_, nfe) = generate(&b, &fast, 10, GridKind::LogSnr, 1e-3, 32, 32, 1);
+        assert_eq!(nfe, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let b = backend();
+        let kind = SolverKind::parse("era").unwrap();
+        let (a, _) = generate(&b, &kind, 10, GridKind::Uniform, 1e-3, 64, 32, 3);
+        let (c, _) = generate(&b, &kind, 10, GridKind::Uniform, 1e-3, 64, 32, 3);
+        assert_eq!(a.as_slice(), c.as_slice());
+    }
+}

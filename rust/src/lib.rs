@@ -1,0 +1,51 @@
+//! # era-solver
+//!
+//! Production-grade reproduction of **ERA-Solver: Error-Robust Adams Solver
+//! for Fast Sampling of Diffusion Probabilistic Models** (Li et al., 2023)
+//! as a three-layer Rust + JAX + Pallas serving stack.
+//!
+//! Layering (see DESIGN.md):
+//! * **L1/L2 (build time)** — `python/compile/` trains small denoisers and
+//!   AOT-lowers them (Pallas kernels included) to HLO text artifacts.
+//! * **L3 (this crate)** — loads the artifacts through PJRT
+//!   ([`runtime`]), drives them with the paper's solver and every baseline
+//!   ([`solvers`]), and serves batched sampling requests through a
+//!   continuous-batching coordinator ([`coordinator`]) behind a TCP
+//!   JSON-lines server ([`server`]).
+//!
+//! Substrate modules ([`tensor`], [`rng`], [`linalg`], [`json`],
+//! [`metrics`], [`data`], [`benchkit`], [`cli`]) are hand-rolled: the
+//! offline registry closure carries no serde / rand / ndarray / criterion.
+//!
+//! Quickstart (in-process, no server):
+//!
+//! ```no_run
+//! use era_solver::solvers::{sample_with, SolverKind, GridKind, VpSchedule, make_grid};
+//! use era_solver::solvers::eps_model::AnalyticGmm;
+//! use era_solver::rng::Rng;
+//!
+//! let sched = VpSchedule::default();
+//! let kind = SolverKind::parse("era").unwrap();
+//! let grid = make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3);
+//! let mut rng = Rng::new(0);
+//! let mut solver = kind.build(sched, grid, rng.normal_tensor(64, 2), 0, 10);
+//! let samples = sample_with(&mut *solver, &AnalyticGmm::gmm8(sched));
+//! assert_eq!(samples.rows(), 64);
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod solvers;
+pub mod tensor;
+
+pub use solvers::{Solver, SolverKind};
+pub use tensor::Tensor;

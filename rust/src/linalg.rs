@@ -1,0 +1,305 @@
+//! Small dense linear-algebra substrate (f64), built for the Fréchet
+//! distance: symmetric eigendecomposition (cyclic Jacobi), PSD matrix
+//! square root, and plain matmul. Matrices are row-major `Vec<f64>`; the
+//! dimensions here are tiny (2 for the planar datasets, 64 for patches64),
+//! so O(n^3) Jacobi with guaranteed accuracy beats anything fancier.
+
+/// Row-major n x n matmul: `a @ b`.
+pub fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut c = vec![0.0; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Matrix transpose.
+pub fn transpose(a: &[f64], n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            t[j * n + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+/// Symmetric eigendecomposition via cyclic Jacobi rotations.
+///
+/// Returns `(eigvals, eigvecs)` with `a = V diag(w) V^T`, eigenvectors in
+/// the *columns* of `V` (row-major). Input must be symmetric; asymmetry
+/// above 1e-8 panics in debug to catch misuse.
+pub fn eigh(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    debug_assert!(
+        (0..n).all(|i| (0..n).all(|j| (m[i * n + j] - m[j * n + i]).abs() < 1e-8)),
+        "eigh requires a symmetric matrix"
+    );
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    if n == 1 {
+        return (vec![m[0]], v);
+    }
+
+    // Cyclic sweeps until the off-diagonal Frobenius mass is negligible.
+    // Threshold strategy after Numerical Recipes §11.1: early sweeps skip
+    // rotations below a coarse threshold (they would be redone anyway),
+    // late sweeps zero out elements that are negligible relative to
+    // their diagonals instead of rotating — measured 2-3x on the 64-dim
+    // FID path (§Perf).
+    for sweep in 0..100 {
+        let mut off = 0.0;
+        let mut sm = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+                sm += m[i * n + j].abs();
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + trace(&m, n).abs()) {
+            break;
+        }
+        let tresh = if sweep < 3 { 0.2 * sm / (n * n) as f64 } else { 0.0 };
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                let g = 100.0 * apq.abs();
+                if sweep > 3
+                    && m[p * n + p].abs() + g == m[p * n + p].abs()
+                    && m[q * n + q].abs() + g == m[q * n + q].abs()
+                {
+                    m[p * n + q] = 0.0;
+                    continue;
+                }
+                if apq.abs() <= tresh {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                // Stable tan of the rotation angle.
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                let tau = s / (1.0 + c);
+
+                // A <- J^T A J, upper triangle only (NR §11.1 `rotate`):
+                // the symmetric counterpart entries are never read again
+                // within the sweep, saving half the element updates.
+                let rot = |x: &mut f64, y: &mut f64| {
+                    let (g, h) = (*x, *y);
+                    *x = g - s * (h + g * tau);
+                    *y = h + s * (g - h * tau);
+                };
+                m[p * n + p] = app - t * apq;
+                m[q * n + q] = aqq + t * apq;
+                m[p * n + q] = 0.0;
+                for k in 0..p {
+                    let (i1, i2) = (k * n + p, k * n + q);
+                    let (mut x, mut y) = (m[i1], m[i2]);
+                    rot(&mut x, &mut y);
+                    m[i1] = x;
+                    m[i2] = y;
+                }
+                for k in p + 1..q {
+                    let (i1, i2) = (p * n + k, k * n + q);
+                    let (mut x, mut y) = (m[i1], m[i2]);
+                    rot(&mut x, &mut y);
+                    m[i1] = x;
+                    m[i2] = y;
+                }
+                for k in q + 1..n {
+                    let (i1, i2) = (p * n + k, q * n + k);
+                    let (mut x, mut y) = (m[i1], m[i2]);
+                    rot(&mut x, &mut y);
+                    m[i1] = x;
+                    m[i2] = y;
+                }
+                // Accumulate the eigenvector rotation.
+                for k in 0..n {
+                    let (mut x, mut y) = (v[k * n + p], v[k * n + q]);
+                    rot(&mut x, &mut y);
+                    v[k * n + p] = x;
+                    v[k * n + q] = y;
+                }
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    (w, v)
+}
+
+/// PSD matrix square root: `sqrtm(a) = V diag(sqrt(max(w,0))) V^T`.
+///
+/// Slightly negative eigenvalues (sampling noise in covariance estimates)
+/// are clamped to zero, matching the standard FID implementations.
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let (w, v) = eigh(a, n);
+    let mut out = vec![0.0; n * n];
+    for k in 0..n {
+        let s = w[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v[i * n + k] * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[i * n + j] += vik * v[j * n + k];
+            }
+        }
+    }
+    out
+}
+
+/// Symmetrise `(a + a^T) / 2` — used before sqrtm on products that are
+/// mathematically symmetric but numerically slightly off.
+pub fn symmetrize(a: &[f64], n: usize) -> Vec<f64> {
+    let mut s = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            s[i * n + j] = 0.5 * (a[i * n + j] + a[j * n + i]);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2), a);
+        assert_eq!(matmul(&i, &a, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn eigh_diagonal() {
+        let a = vec![3.0, 0.0, 0.0, 7.0];
+        let (mut w, _) = eigh(&a, 2);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_close(&w, &[3.0, 7.0], 1e-12);
+    }
+
+    #[test]
+    fn eigh_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (mut w, _) = eigh(&a, 2);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_close(&w, &[1.0, 3.0], 1e-10);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        // Random-ish symmetric 5x5; check V diag(w) V^T == A.
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        let mut s = 1u64;
+        for i in 0..n {
+            for j in i..n {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v = ((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0;
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let (w, v) = eigh(&a, n);
+        // rebuild
+        let mut rec = vec![0.0; n * n];
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    rec[i * n + j] += v[i * n + k] * w[k] * v[j * n + k];
+                }
+            }
+        }
+        assert_close(&rec, &a, 1e-9);
+        // orthonormal columns
+        let vt_v = matmul(&transpose(&v, n), &v, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vt_v[i * n + j] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // SPD matrix: A = B B^T + I.
+        let n = 4;
+        let mut b = vec![0.0; n * n];
+        for (i, x) in b.iter_mut().enumerate() {
+            *x = ((i * 7 + 3) % 11) as f64 / 11.0;
+        }
+        let mut a = matmul(&b, &transpose(&b, n), n);
+        for i in 0..n {
+            a[i * n + i] += 1.0;
+        }
+        let r = sqrtm_psd(&a, n);
+        let rr = matmul(&r, &r, n);
+        assert_close(&rr, &a, 1e-9);
+    }
+
+    #[test]
+    fn sqrtm_clamps_negative_eigs() {
+        // Nearly-PSD with a tiny negative eigenvalue must not produce NaN.
+        let a = vec![1.0, 0.0, 0.0, -1e-14];
+        let r = sqrtm_psd(&a, 2);
+        assert!(r.iter().all(|v| v.is_finite()));
+        assert!((r[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigh_1x1() {
+        let (w, v) = eigh(&[4.0], 1);
+        assert_eq!(w, vec![4.0]);
+        assert_eq!(v, vec![1.0]);
+    }
+
+    #[test]
+    fn trace_and_symmetrize() {
+        let a = vec![1.0, 2.0, 4.0, 3.0];
+        assert_eq!(trace(&a, 2), 4.0);
+        assert_eq!(symmetrize(&a, 2), vec![1.0, 3.0, 3.0, 3.0]);
+    }
+}

@@ -1,0 +1,84 @@
+//! `era-serve` — the serving leader: PJRT engine + continuous-batching
+//! coordinator + TCP JSON-lines front end.
+//!
+//! ```text
+//! era-serve --artifacts artifacts --addr 127.0.0.1:7437 \
+//!           --warmup gmm8,checkerboard --max-active 64
+//! ```
+//!
+//! Clients speak the one-JSON-object-per-line protocol of
+//! [`era_solver::server`]; `examples/quickstart.rs` and
+//! `examples/serve_bench.rs` are reference clients.
+
+use std::sync::Arc;
+
+use era_solver::cli::{Args, OptSpec};
+use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use era_solver::runtime::PjRtEngine;
+use era_solver::server::{Server, ServerConfig};
+
+const OPTS: &[OptSpec] = &[
+    OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
+    OptSpec { name: "addr", value: Some("host:port"), help: "bind address (default: 127.0.0.1:7437)" },
+    OptSpec { name: "warmup", value: Some("ds,ds"), help: "datasets to pre-compile (default: all)" },
+    OptSpec { name: "max-active", value: Some("n"), help: "running-batch request cap (default: 64)" },
+    OptSpec { name: "queue", value: Some("n"), help: "admission queue bound (default: 256)" },
+    OptSpec { name: "max-rows", value: Some("n"), help: "rows per fused eval (default: 256)" },
+    OptSpec { name: "min-rows", value: Some("n"), help: "linger threshold rows (default: 32)" },
+    OptSpec { name: "max-wait-ms", value: Some("ms"), help: "linger budget (default: 2)" },
+    OptSpec { name: "max-conns", value: Some("n"), help: "connection cap (default: 64)" },
+];
+
+fn run() -> Result<(), String> {
+    let args = Args::parse("era-serve: ERA-Solver diffusion sampling server", OPTS)?;
+
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let engine = Arc::new(PjRtEngine::new(&artifacts)?);
+    let manifest = engine.manifest().clone();
+    eprintln!(
+        "[era-serve] loaded manifest: {} datasets, buckets {:?}",
+        manifest.datasets.len(),
+        manifest.batch_buckets
+    );
+
+    let warmup: Vec<String> = match args.present("warmup") {
+        true => args.list_or("warmup", &[]),
+        false => manifest.datasets.keys().cloned().collect(),
+    };
+    for ds in &warmup {
+        let t0 = std::time::Instant::now();
+        engine.warmup(ds, &manifest.batch_buckets)?;
+        eprintln!("[era-serve] warmed {ds} in {:?}", t0.elapsed());
+    }
+
+    let config = CoordinatorConfig {
+        max_active: args.usize_or("max-active", 64)?,
+        queue_capacity: args.usize_or("queue", 256)?,
+        policy: BatchPolicy {
+            max_rows: args.usize_or("max-rows", 256)?,
+            min_rows: args.usize_or("min-rows", 32)?,
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+        },
+    };
+    let coord = Arc::new(Coordinator::start(engine, config));
+
+    let server_cfg = ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7437"),
+        max_connections: args.usize_or("max-conns", 64)?,
+    };
+    let server = Server::start(coord.clone(), server_cfg).map_err(|e| e.to_string())?;
+    eprintln!("[era-serve] listening on {}", server.local_addr());
+
+    // Periodic telemetry heartbeat until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(30));
+        eprintln!("[era-serve] {}", coord.telemetry().summary());
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}

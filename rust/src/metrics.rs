@@ -1,0 +1,230 @@
+//! Generation-quality metrics.
+//!
+//! The paper scores samplers with FID (Fréchet Inception Distance) over
+//! 50k samples. Inception-V3 does not exist here and the data is low-dim
+//! synthetic, so we compute the *Fréchet distance directly in data space*
+//! — the identical formula FID uses on feature moments:
+//!
+//! ```text
+//!     d^2 = ||mu1 - mu2||^2 + tr(C1 + C2 - 2 (C1^{1/2} C2 C1^{1/2})^{1/2})
+//!
+//! ```
+//! plus two auxiliary views (sliced W2, mode coverage) used by the
+//! qualitative figures. EXPERIMENTS.md reports the Fréchet numbers as the
+//! FID column of every reproduced table.
+
+use crate::linalg::{matmul, sqrtm_psd, symmetrize, trace};
+use crate::tensor::Tensor;
+
+/// First two moments of a sample set (f64 for metric stability).
+#[derive(Clone, Debug)]
+pub struct Moments {
+    pub mean: Vec<f64>,
+    /// Row-major d x d covariance.
+    pub cov: Vec<f64>,
+    pub dim: usize,
+}
+
+impl Moments {
+    pub fn from_tensor(x: &Tensor) -> Moments {
+        Moments { mean: x.col_means(), cov: x.covariance(), dim: x.cols() }
+    }
+
+    pub fn new(mean: Vec<f64>, cov: Vec<f64>) -> Moments {
+        let dim = mean.len();
+        assert_eq!(cov.len(), dim * dim, "covariance shape mismatch");
+        Moments { mean, cov, dim }
+    }
+}
+
+/// Squared Fréchet distance between two Gaussians (the FID formula).
+pub fn frechet_distance(a: &Moments, b: &Moments) -> f64 {
+    assert_eq!(a.dim, b.dim, "moment dimension mismatch");
+    let n = a.dim;
+
+    let mean_term: f64 = a
+        .mean
+        .iter()
+        .zip(&b.mean)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+
+    // tr(C1 + C2 - 2 sqrt(sqrt(C1) C2 sqrt(C1)))
+    let s1 = sqrtm_psd(&symmetrize(&a.cov, n), n);
+    let inner = matmul(&matmul(&s1, &symmetrize(&b.cov, n), n), &s1, n);
+    let cross = sqrtm_psd(&symmetrize(&inner, n), n);
+    let tr = trace(&a.cov, n) + trace(&b.cov, n) - 2.0 * trace(&cross, n);
+
+    // The analytic value is >= 0; clamp tiny negative numerical residue.
+    (mean_term + tr).max(0.0)
+}
+
+/// Fréchet distance between a generated tensor and reference moments.
+pub fn fid(gen: &Tensor, reference: &Moments) -> f64 {
+    frechet_distance(&Moments::from_tensor(gen), reference)
+}
+
+/// Sliced 2-Wasserstein distance: average 1-D W2 over `n_proj` random
+/// projections. Cheap, captures shape mismatch the moment-based Fréchet
+/// misses (e.g. a Gaussian vs a ring with equal moments).
+pub fn sliced_w2(a: &Tensor, b: &Tensor, n_proj: usize, seed: u64) -> f64 {
+    assert_eq!(a.cols(), b.cols());
+    let d = a.cols();
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut total = 0.0f64;
+    for _ in 0..n_proj {
+        // Random unit direction.
+        let mut dir = vec![0.0f64; d];
+        let mut norm = 0.0;
+        for v in dir.iter_mut() {
+            *v = rng.normal();
+            norm += *v * *v;
+        }
+        let norm = norm.sqrt().max(1e-12);
+        dir.iter_mut().for_each(|v| *v /= norm);
+
+        let mut pa = project(a, &dir);
+        let mut pb = project(b, &dir);
+        pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        // 1-D W2^2 between equal-size empirical measures = mean squared
+        // difference of order statistics (resample the longer by index
+        // scaling when sizes differ).
+        let n = pa.len().min(pb.len());
+        let mut acc = 0.0;
+        for i in 0..n {
+            let qa = pa[i * pa.len() / n.max(1)];
+            let qb = pb[i * pb.len() / n.max(1)];
+            acc += (qa - qb) * (qa - qb);
+        }
+        total += acc / n.max(1) as f64;
+    }
+    (total / n_proj as f64).sqrt()
+}
+
+fn project(x: &Tensor, dir: &[f64]) -> Vec<f64> {
+    (0..x.rows())
+        .map(|r| {
+            x.row(r)
+                .iter()
+                .zip(dir)
+                .map(|(&v, &d)| v as f64 * d)
+                .sum::<f64>()
+        })
+        .collect()
+}
+
+/// Fraction of reference modes hit by at least one generated sample within
+/// `radius` (mode-coverage view used in the qualitative analysis).
+pub fn mode_coverage(gen: &Tensor, modes: &[Vec<f64>], radius: f64) -> f64 {
+    if modes.is_empty() {
+        return 1.0;
+    }
+    let mut hit = vec![false; modes.len()];
+    for r in 0..gen.rows() {
+        let row = gen.row(r);
+        for (m, center) in modes.iter().enumerate() {
+            if hit[m] {
+                continue;
+            }
+            let d2: f64 = row
+                .iter()
+                .zip(center)
+                .map(|(&v, &c)| {
+                    let d = v as f64 - c;
+                    d * d
+                })
+                .sum();
+            if d2.sqrt() <= radius {
+                hit[m] = true;
+            }
+        }
+    }
+    hit.iter().filter(|&&h| h).count() as f64 / modes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn frechet_zero_for_identical() {
+        let m = Moments::new(vec![1.0, 2.0], vec![2.0, 0.3, 0.3, 1.0]);
+        assert!(frechet_distance(&m, &m) < 1e-9);
+    }
+
+    #[test]
+    fn frechet_mean_shift_only() {
+        // Equal covariance, mean shift d: distance = ||d||^2.
+        let c = vec![1.0, 0.0, 0.0, 1.0];
+        let a = Moments::new(vec![0.0, 0.0], c.clone());
+        let b = Moments::new(vec![3.0, 4.0], c);
+        assert!((frechet_distance(&a, &b) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frechet_isotropic_scale() {
+        // N(0, I) vs N(0, 4I) in 2-D: tr(1+4-2*2) per axis = 1 per axis.
+        let a = Moments::new(vec![0.0, 0.0], vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Moments::new(vec![0.0, 0.0], vec![4.0, 0.0, 0.0, 4.0]);
+        assert!((frechet_distance(&a, &b) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frechet_symmetric() {
+        let a = Moments::new(vec![0.0, 1.0], vec![1.5, 0.2, 0.2, 0.7]);
+        let b = Moments::new(vec![0.5, 0.0], vec![0.9, -0.1, -0.1, 2.0]);
+        let d1 = frechet_distance(&a, &b);
+        let d2 = frechet_distance(&b, &a);
+        assert!((d1 - d2).abs() < 1e-9);
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn fid_of_matched_samples_is_small() {
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(20_000, 2);
+        let reference = Moments::new(vec![0.0, 0.0], vec![1.0, 0.0, 0.0, 1.0]);
+        let d = fid(&x, &reference);
+        assert!(d < 0.01, "fid {d}");
+    }
+
+    #[test]
+    fn fid_detects_mismatch() {
+        let mut rng = Rng::new(0);
+        let mut x = rng.normal_tensor(5_000, 2);
+        x.scale(3.0);
+        let reference = Moments::new(vec![0.0, 0.0], vec![1.0, 0.0, 0.0, 1.0]);
+        assert!(fid(&x, &reference) > 1.0);
+    }
+
+    #[test]
+    fn sliced_w2_zero_for_same_samples() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_tensor(2_000, 2);
+        assert!(sliced_w2(&x, &x, 16, 7) < 1e-9);
+    }
+
+    #[test]
+    fn sliced_w2_orders_distances() {
+        let mut rng = Rng::new(2);
+        let x = rng.normal_tensor(4_000, 2);
+        let mut y_near = rng.normal_tensor(4_000, 2);
+        y_near.scale(1.1);
+        let mut y_far = rng.normal_tensor(4_000, 2);
+        y_far.scale(3.0);
+        let d_near = sliced_w2(&x, &y_near, 24, 7);
+        let d_far = sliced_w2(&x, &y_far, 24, 7);
+        assert!(d_near < d_far);
+    }
+
+    #[test]
+    fn coverage_full_and_partial() {
+        let gen = Tensor::from_vec(vec![0.0, 0.0, 2.0, 0.0], 2, 2);
+        let modes = vec![vec![0.0, 0.0], vec![2.0, 0.0], vec![-2.0, 0.0]];
+        let c = mode_coverage(&gen, &modes, 0.5);
+        assert!((c - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mode_coverage(&gen, &[], 0.5), 1.0);
+    }
+}

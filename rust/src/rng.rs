@@ -1,0 +1,163 @@
+//! Deterministic PRNG substrate (the offline registry ships no `rand`).
+//!
+//! SplitMix64 for the integer stream — tiny state, passes BigCrush for the
+//! purposes of a sampling workload, and trivially splittable so concurrent
+//! requests get independent streams from a request id. Gaussians via
+//! Box–Muller in f64, cast to f32.
+
+use crate::tensor::Tensor;
+
+/// SplitMix64 generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Independent stream derived from this seed and a stream id; used by
+    /// the coordinator to give each request its own generator.
+    pub fn for_stream(seed: u64, stream: u64) -> Self {
+        let mut r = Rng::new(seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+        r.next_u64(); // decorrelate trivially related seeds
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Multiply-shift; bias is negligible for the n used here (<=2^32).
+        ((self.next_u64() >> 32).wrapping_mul(n)) >> 32
+    }
+
+    /// Standard normal via Box–Muller (one of the pair is discarded for
+    /// simplicity — generation is not a hot path relative to PJRT calls).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-300 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// (rows x cols) tensor of iid standard normals.
+    pub fn normal_tensor(&mut self, rows: usize, cols: usize) -> Tensor {
+        let mut data = Vec::with_capacity(rows * cols);
+        // Consume Box–Muller pairs to halve the transcendental count.
+        let n = rows * cols;
+        while data.len() + 2 <= n {
+            let u1 = self.uniform().max(1e-300);
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            data.push((r * c) as f32);
+            data.push((r * s) as f32);
+        }
+        while data.len() < n {
+            data.push(self.normal() as f32);
+        }
+        Tensor::from_vec(data, rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::for_stream(7, 0);
+        let mut b = Rng::for_stream(7, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / N as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let v = r.below(8) as usize;
+            assert!(v < 8);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let t = r.normal_tensor(1000, 16);
+        let n = t.len() as f64;
+        let mean: f64 = t.as_slice().iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = t.as_slice().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        assert!(t.all_finite());
+    }
+
+    #[test]
+    fn normal_tensor_odd_len() {
+        let mut r = Rng::new(6);
+        let t = r.normal_tensor(3, 3); // odd element count hits the tail path
+        assert_eq!(t.len(), 9);
+        assert!(t.all_finite());
+    }
+}

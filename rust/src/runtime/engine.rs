@@ -1,0 +1,312 @@
+//! PJRT CPU engine: compile-on-first-use executable cache + the
+//! [`PjRtEps`] adapter that makes a compiled denoiser artifact look like
+//! any other [`EpsModel`].
+//!
+//! Threading: the `xla` crate's handles wrap raw PJRT C-API pointers and
+//! are `!Send`. The engine serialises *all* PJRT access behind one
+//! `Mutex` and is then declared `Send + Sync`: the PJRT CPU client has no
+//! thread affinity (any thread may drive it, one at a time), which is the
+//! same discipline a single dedicated engine thread would impose, without
+//! forcing every caller through a channel hop.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::manifest::{DatasetEntry, Manifest};
+use crate::solvers::EpsModel;
+use crate::tensor::Tensor;
+
+/// Which artifact family an executable came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum Kind {
+    Eps,
+    Combine,
+}
+
+/// Interior (mutex-guarded) state: the client plus compiled executables.
+struct Inner {
+    client: xla::PjRtClient,
+    /// (dataset, kind, bucket) -> compiled executable.
+    cache: HashMap<(String, Kind, usize), xla::PjRtLoadedExecutable>,
+}
+
+/// PJRT CPU engine over one artifact tree.
+pub struct PjRtEngine {
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+    evals: AtomicUsize,
+    rows: AtomicUsize,
+    compiles: AtomicUsize,
+}
+
+// SAFETY: every use of the !Send PJRT handles is serialised by
+// `inner: Mutex<_>`; the PJRT CPU client is not thread-affine.
+unsafe impl Send for PjRtEngine {}
+unsafe impl Sync for PjRtEngine {}
+
+impl PjRtEngine {
+    /// Create an engine over `artifacts/` (validates the manifest and the
+    /// schedule probe, but compiles nothing yet).
+    pub fn new(artifacts_root: impl AsRef<Path>) -> Result<Self, String> {
+        let manifest = Manifest::load(artifacts_root)?;
+        let probe_err = manifest.schedule_probe_error();
+        if probe_err > 1e-5 {
+            return Err(format!(
+                "schedule mirror deviates from python probe by {probe_err:e}"
+            ));
+        }
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjRtEngine {
+            manifest,
+            inner: Mutex::new(Inner { client, cache: HashMap::new() }),
+            evals: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+            compiles: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Total artifact executions so far.
+    pub fn eval_count(&self) -> usize {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Total (padded) rows pushed through artifacts.
+    pub fn rows_executed(&self) -> usize {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Distinct executables compiled so far.
+    pub fn compile_count(&self) -> usize {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Pre-compile the given buckets of a dataset's denoiser (serving
+    /// startup does this so no request pays first-compile latency).
+    pub fn warmup(&self, dataset: &str, buckets: &[usize]) -> Result<(), String> {
+        for &b in buckets {
+            self.with_exe(dataset, Kind::Eps, b, |_| Ok(()))?;
+        }
+        Ok(())
+    }
+
+    fn artifact_path(&self, dataset: &str, kind: Kind, bucket: usize) -> Result<String, String> {
+        let d = self.manifest.dataset(dataset)?;
+        let map = match kind {
+            Kind::Eps => &d.eps,
+            Kind::Combine => &d.combine,
+        };
+        let art = map.get(&bucket).ok_or_else(|| {
+            format!("{dataset}: no {kind:?} artifact for bucket {bucket}")
+        })?;
+        Ok(self.manifest.resolve(art).display().to_string())
+    }
+
+    /// Run `f` with the compiled executable for (dataset, kind, bucket),
+    /// compiling and caching it on first use.
+    fn with_exe<R>(
+        &self,
+        dataset: &str,
+        kind: Kind,
+        bucket: usize,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R, String>,
+    ) -> Result<R, String> {
+        let path = self.artifact_path(dataset, kind, bucket)?;
+        let mut inner = self.inner.lock().unwrap();
+        let key = (dataset.to_string(), kind, bucket);
+        if !inner.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| format!("load {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                inner.client.compile(&comp).map_err(|e| format!("compile {path}: {e:?}"))?;
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            inner.cache.insert(key.clone(), exe);
+        }
+        f(inner.cache.get(&key).unwrap())
+    }
+
+    /// Evaluate the denoiser `eps_theta(x, t)` for a whole batch, with
+    /// per-row times. Pads to the nearest compiled bucket and slices the
+    /// padding back off; batches larger than the top bucket are split.
+    pub fn eval_eps(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        assert_eq!(x.rows(), t.len(), "x rows / t length mismatch");
+        let d = self.manifest.dataset(dataset)?;
+        assert_eq!(x.cols(), d.dim, "dim mismatch for {dataset}");
+        let top = *self.manifest.batch_buckets.last().unwrap();
+        if x.rows() > top {
+            // Split into top-bucket chunks.
+            let mut parts: Vec<Tensor> = Vec::new();
+            let mut start = 0;
+            while start < x.rows() {
+                let n = top.min(x.rows() - start);
+                let part = x.slice_rows(start, n);
+                let tpart = &t[start..start + n];
+                parts.push(self.eval_eps(dataset, &part, tpart)?);
+                start += n;
+            }
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            return Ok(Tensor::vstack(&refs));
+        }
+
+        let bucket = self.manifest.bucket_for(x.rows());
+        let rows = x.rows();
+        let dim = x.cols();
+
+        // Pad x (replicating the final row keeps the network inputs
+        // in-distribution; outputs beyond `rows` are discarded).
+        let mut xbuf = Vec::with_capacity(bucket * dim);
+        xbuf.extend_from_slice(x.as_slice());
+        let mut tbuf = Vec::with_capacity(bucket);
+        tbuf.extend_from_slice(t);
+        for _ in rows..bucket {
+            xbuf.extend_from_slice(x.row(rows - 1));
+            tbuf.push(t[rows - 1]);
+        }
+
+        let out = self.with_exe(dataset, Kind::Eps, bucket, |exe| {
+            let xl = xla::Literal::vec1(&xbuf)
+                .reshape(&[bucket as i64, dim as i64])
+                .map_err(|e| format!("reshape x: {e:?}"))?;
+            let tl = xla::Literal::vec1(&tbuf);
+            let res = exe
+                .execute::<xla::Literal>(&[xl, tl])
+                .map_err(|e| format!("execute eps: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("to_literal: {e:?}"))?;
+            let tup = res.to_tuple1().map_err(|e| format!("to_tuple1: {e:?}"))?;
+            tup.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+        })?;
+
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(bucket, Ordering::Relaxed);
+        let full = Tensor::from_vec(out, bucket, dim);
+        Ok(if rows == bucket { full } else { full.slice_rows(0, rows) })
+    }
+
+    /// Run the fused solver-update artifact:
+    /// `out = ab[0] * x + ab[1] * sum_k w[k] * eps[k]` (zero-padded to the
+    /// artifact's K_MAX). The in-process twin is
+    /// [`Tensor::kernel_weighted_sum`]; an integration test pins them to
+    /// each other.
+    pub fn combine(
+        &self,
+        dataset: &str,
+        eps: &[&Tensor],
+        w: &[f64],
+        x: &Tensor,
+        ab: (f64, f64),
+    ) -> Result<Tensor, String> {
+        assert_eq!(eps.len(), w.len());
+        let d = self.manifest.dataset(dataset)?;
+        let k_max = d.k_max;
+        assert!(eps.len() <= k_max, "k={} exceeds artifact K_MAX={k_max}", eps.len());
+        let rows = x.rows();
+        let dim = x.cols();
+        let bucket = self.manifest.bucket_for(rows);
+        if rows > *self.manifest.batch_buckets.last().unwrap() {
+            return Err(format!("combine batch {rows} exceeds top bucket"));
+        }
+
+        // Stack + zero-pad the buffer to (K_MAX, bucket, dim).
+        let mut buf = vec![0.0f32; k_max * bucket * dim];
+        for (kidx, e) in eps.iter().enumerate() {
+            assert_eq!((e.rows(), e.cols()), (rows, dim));
+            let base = kidx * bucket * dim;
+            buf[base..base + rows * dim].copy_from_slice(e.as_slice());
+        }
+        let mut wbuf = vec![0.0f32; k_max];
+        for (i, &wi) in w.iter().enumerate() {
+            wbuf[i] = wi as f32;
+        }
+        let mut xbuf = vec![0.0f32; bucket * dim];
+        xbuf[..rows * dim].copy_from_slice(x.as_slice());
+        let abv = [ab.0 as f32, ab.1 as f32];
+
+        let out = self.with_exe(dataset, Kind::Combine, bucket, |exe| {
+            let ebl = xla::Literal::vec1(&buf)
+                .reshape(&[k_max as i64, bucket as i64, dim as i64])
+                .map_err(|e| format!("reshape eps_buf: {e:?}"))?;
+            let wl = xla::Literal::vec1(&wbuf);
+            let xl = xla::Literal::vec1(&xbuf)
+                .reshape(&[bucket as i64, dim as i64])
+                .map_err(|e| format!("reshape x: {e:?}"))?;
+            let al = xla::Literal::vec1(&abv);
+            let res = exe
+                .execute::<xla::Literal>(&[ebl, wl, xl, al])
+                .map_err(|e| format!("execute combine: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("to_literal: {e:?}"))?;
+            let tup = res.to_tuple1().map_err(|e| format!("to_tuple1: {e:?}"))?;
+            tup.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+        })?;
+        let full = Tensor::from_vec(out, bucket, dim);
+        Ok(if rows == bucket { full } else { full.slice_rows(0, rows) })
+    }
+
+    /// Borrow a dataset's manifest entry.
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry, String> {
+        self.manifest.dataset(name)
+    }
+}
+
+/// [`EpsModel`] adapter over one dataset's compiled denoiser. Holds the
+/// engine by `Arc` so it can be handed to the coordinator's loop thread.
+pub struct PjRtEps {
+    engine: std::sync::Arc<PjRtEngine>,
+    dataset: String,
+    dim: usize,
+}
+
+impl PjRtEps {
+    pub fn new(engine: &std::sync::Arc<PjRtEngine>, dataset: &str) -> Result<Self, String> {
+        let dim = engine.dataset(dataset)?.dim;
+        Ok(PjRtEps { engine: engine.clone(), dataset: dataset.to_string(), dim })
+    }
+}
+
+impl EpsModel for PjRtEps {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        self.engine
+            .eval_eps(&self.dataset, x, t)
+            .unwrap_or_else(|e| panic!("PJRT eval failed ({}): {e}", self.dataset))
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_count(&self) -> usize {
+        self.engine.eval_count()
+    }
+}
+
+/// Handle for driving the fused solver-update artifact of one dataset
+/// (used by the perf benches to compare against the native Rust path).
+pub struct CombineExec {
+    engine: std::sync::Arc<PjRtEngine>,
+    dataset: String,
+}
+
+impl CombineExec {
+    pub fn new(engine: &std::sync::Arc<PjRtEngine>, dataset: &str) -> Result<Self, String> {
+        engine.dataset(dataset)?;
+        Ok(CombineExec { engine: engine.clone(), dataset: dataset.to_string() })
+    }
+
+    pub fn run(
+        &self,
+        eps: &[&Tensor],
+        w: &[f64],
+        x: &Tensor,
+        ab: (f64, f64),
+    ) -> Result<Tensor, String> {
+        self.engine.combine(&self.dataset, eps, w, x, ab)
+    }
+}

@@ -1,0 +1,300 @@
+//! Artifact registry: `artifacts/manifest.json` parsing + validation.
+//!
+//! The manifest is the contract between the build-time Python layers and
+//! the Rust runtime. Everything the runtime needs to serve a dataset is
+//! described here: which batch buckets were compiled, where each HLO
+//! artifact lives, the noise schedule the model was trained under (with
+//! probe values so the Rust mirror can be cross-checked to float
+//! precision), and the reference moments used for FID.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Json};
+use crate::metrics::Moments;
+use crate::solvers::schedule::VpSchedule;
+
+/// Supported manifest schema version (bump in lockstep with aot.py).
+pub const MANIFEST_VERSION: usize = 3;
+
+/// One artifact file: path relative to the artifacts root + content hash.
+#[derive(Clone, Debug)]
+pub struct ArtifactRef {
+    pub path: PathBuf,
+    pub sha: String,
+}
+
+/// Everything built for one dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub dim: usize,
+    /// Which paper dataset this synthetic manifold stands in for.
+    pub stands_in_for: String,
+    pub final_loss: f64,
+    /// Denoiser artifacts per batch bucket.
+    pub eps: BTreeMap<usize, ArtifactRef>,
+    /// Fused solver-update artifacts per batch bucket.
+    pub combine: BTreeMap<usize, ArtifactRef>,
+    /// Max interpolation order the combine kernel was compiled for.
+    pub k_max: usize,
+    /// Reference moments of the data distribution (for FID).
+    pub ref_stats: Moments,
+    pub ref_n: usize,
+}
+
+/// Schedule probe: (t, alpha_bar, log_snr) triples from the Python side.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleProbe {
+    pub t: Vec<f64>,
+    pub alpha_bar: Vec<f64>,
+    pub log_snr: Vec<f64>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub root: PathBuf,
+    pub schedule: VpSchedule,
+    pub probe: ScheduleProbe,
+    pub batch_buckets: Vec<usize>,
+    pub datasets: BTreeMap<String, DatasetEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest, String> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`?)", path.display()))?;
+        let j = json::parse(&text).map_err(|e| format!("parse {}: {e:?}", path.display()))?;
+        Self::from_json(&j, root)
+    }
+
+    pub fn from_json(j: &Json, root: PathBuf) -> Result<Manifest, String> {
+        let version = j.get("version").as_usize().ok_or("missing version")?;
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "manifest version {version} != supported {MANIFEST_VERSION}; \
+                 rebuild with `make artifacts`"
+            ));
+        }
+        let sched_j = j.get("schedule");
+        if sched_j.get("kind").as_str() != Some("vp") {
+            return Err("unsupported schedule kind".into());
+        }
+        let schedule = VpSchedule::new(
+            sched_j.get("beta_min").as_f64().ok_or("beta_min")?,
+            sched_j.get("beta_max").as_f64().ok_or("beta_max")?,
+        );
+        let probe_j = sched_j.get("probe");
+        let probe = ScheduleProbe {
+            t: probe_j.get("t").as_f64_vec().unwrap_or_default(),
+            alpha_bar: probe_j.get("alpha_bar").as_f64_vec().unwrap_or_default(),
+            log_snr: probe_j.get("log_snr").as_f64_vec().unwrap_or_default(),
+        };
+        let batch_buckets: Vec<usize> = j
+            .get("batch_buckets")
+            .as_arr()
+            .ok_or("batch_buckets")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        if batch_buckets.is_empty() || batch_buckets.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("batch_buckets must be non-empty and ascending".into());
+        }
+
+        let mut datasets = BTreeMap::new();
+        let ds_obj = j.get("datasets").as_obj().ok_or("datasets")?;
+        for (name, d) in ds_obj {
+            datasets.insert(name.clone(), parse_dataset(name, d)?);
+        }
+        Ok(Manifest { version, root, schedule, probe, batch_buckets, datasets })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry, String> {
+        self.datasets.get(name).ok_or_else(|| {
+            format!(
+                "dataset '{name}' not in manifest (have: {})",
+                self.datasets.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Smallest compiled bucket that fits `rows`, or the largest bucket
+    /// if nothing fits (the caller then splits the batch).
+    pub fn bucket_for(&self, rows: usize) -> usize {
+        for &b in &self.batch_buckets {
+            if rows <= b {
+                return b;
+            }
+        }
+        *self.batch_buckets.last().unwrap()
+    }
+
+    /// Absolute path of an artifact.
+    pub fn resolve(&self, art: &ArtifactRef) -> PathBuf {
+        self.root.join(&art.path)
+    }
+
+    /// Cross-check the Rust schedule mirror against the Python probe.
+    /// Returns the max |alpha_bar| deviation.
+    pub fn schedule_probe_error(&self) -> f64 {
+        self.probe
+            .t
+            .iter()
+            .zip(&self.probe.alpha_bar)
+            .map(|(&t, &ab)| (self.schedule.alpha_bar(t) - ab).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+fn parse_artifact_map(j: &Json) -> Result<BTreeMap<usize, ArtifactRef>, String> {
+    let obj = j.as_obj().ok_or("artifact map not an object")?;
+    let mut out = BTreeMap::new();
+    for (bucket, v) in obj {
+        let b: usize = bucket.parse().map_err(|_| format!("bad bucket key {bucket}"))?;
+        let path = v.get("path").as_str().ok_or("artifact path")?;
+        let sha = v.get("sha").as_str().unwrap_or("").to_string();
+        out.insert(b, ArtifactRef { path: PathBuf::from(path), sha });
+    }
+    Ok(out)
+}
+
+fn parse_dataset(name: &str, d: &Json) -> Result<DatasetEntry, String> {
+    let dim = d.get("dim").as_usize().ok_or("dim")?;
+    let rs = d.get("ref_stats");
+    let mean = rs.get("mean").as_f64_vec().ok_or("ref mean")?;
+    let cov = rs.get("cov").as_f64_vec().ok_or("ref cov")?;
+    if mean.len() != dim || cov.len() != dim * dim {
+        return Err(format!("{name}: ref_stats shape mismatch (dim {dim})"));
+    }
+    Ok(DatasetEntry {
+        name: name.to_string(),
+        dim,
+        stands_in_for: d.get("stands_in_for").as_str().unwrap_or("").to_string(),
+        final_loss: d.get("final_loss").as_f64().unwrap_or(f64::NAN),
+        eps: parse_artifact_map(d.get("eps"))?,
+        combine: parse_artifact_map(d.get("combine"))?,
+        k_max: d.get("k_max").as_usize().ok_or("k_max")?,
+        ref_stats: Moments::new(mean, cov),
+        ref_n: rs.get("n").as_usize().unwrap_or(0),
+    })
+}
+
+/// Per-dataset training report (loss + the Fig. 1 noise-error curve).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub dataset: String,
+    pub final_loss: f64,
+    /// (t, mean ||eps - eps_hat||) pairs, t ascending — the paper's Fig. 1.
+    pub error_curve: Vec<(f64, f64)>,
+}
+
+impl TrainReport {
+    pub fn load(root: impl AsRef<Path>, dataset: &str) -> Result<TrainReport, String> {
+        let path = root.as_ref().join(dataset).join("train_report.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| format!("parse train_report: {e:?}"))?;
+        let ec = j.get("error_curve");
+        let ts = ec.get("t").as_f64_vec().ok_or("error_curve.t")?;
+        let es = ec.get("err").as_f64_vec().ok_or("error_curve.err")?;
+        Ok(TrainReport {
+            dataset: dataset.to_string(),
+            final_loss: j.get("final_loss").as_f64().unwrap_or(f64::NAN),
+            error_curve: ts.into_iter().zip(es).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "version": 3,
+          "schedule": {"kind": "vp", "beta_min": 0.1, "beta_max": 20.0,
+                       "probe": {"t": [0.5], "alpha_bar": [0.07906381245316065], "log_snr": [-2.455]}},
+          "batch_buckets": [1, 16],
+          "datasets": {
+            "toy": {
+              "dim": 2,
+              "stands_in_for": "CIFAR-10",
+              "final_loss": 0.5,
+              "eps": {"1": {"path": "toy/eps_b1.hlo.txt", "sha": "aa"},
+                      "16": {"path": "toy/eps_b16.hlo.txt", "sha": "bb"}},
+              "combine": {"1": {"path": "toy/combine_b1.hlo.txt", "sha": "cc"}},
+              "k_max": 8,
+              "ref_stats": {"n": 10, "mean": [0.0, 0.0], "cov": [1.0, 0.0, 0.0, 1.0]}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_tiny_manifest() {
+        let j = json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.version, 3);
+        assert_eq!(m.batch_buckets, vec![1, 16]);
+        let d = m.dataset("toy").unwrap();
+        assert_eq!(d.dim, 2);
+        assert_eq!(d.eps.len(), 2);
+        assert_eq!(d.stands_in_for, "CIFAR-10");
+        assert!(m.dataset("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let j = json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(2), 16);
+        assert_eq!(m.bucket_for(16), 16);
+        assert_eq!(m.bucket_for(400), 16); // caller splits
+    }
+
+    #[test]
+    fn probe_error_small() {
+        let j = json::parse(&tiny_manifest_json()).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.schedule_probe_error() < 1e-6, "{}", m.schedule_probe_error());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = tiny_manifest_json().replace("\"version\": 3", "\"version\": 2");
+        let j = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        let text = tiny_manifest_json().replace("[1, 16]", "[16, 1]");
+        let j = json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        // Integration-level check against the actual artifacts when they
+        // exist (`make artifacts`); skipped silently otherwise so unit
+        // runs don't depend on the build.
+        let root = std::path::Path::new("artifacts");
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(root).unwrap();
+        assert!(m.schedule_probe_error() < 1e-5);
+        for (name, d) in &m.datasets {
+            for b in m.batch_buckets.iter() {
+                assert!(d.eps.contains_key(b), "{name} missing eps bucket {b}");
+            }
+        }
+    }
+}

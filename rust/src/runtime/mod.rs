@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the serving hot path.
+//!
+//! * [`manifest`] — registry of everything `make artifacts` built
+//!   (datasets, batch buckets, artifact paths + hashes, schedule probe,
+//!   reference moments), parsed from `artifacts/manifest.json`.
+//! * [`engine`] — the PJRT CPU client wrapper: compile-on-first-use
+//!   executable cache keyed by (dataset, artifact kind, batch bucket),
+//!   batch padding/unpadding, and the [`engine::PjRtEps`] adapter that
+//!   plugs compiled denoisers into the [`crate::solvers::EpsModel`]
+//!   abstraction the solvers and the coordinator consume.
+//!
+//! Python never runs here: after `make artifacts` the `.hlo.txt` files
+//! are the only interface between the layers.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{CombineExec, PjRtEngine, PjRtEps};
+pub use manifest::{DatasetEntry, Manifest, TrainReport};

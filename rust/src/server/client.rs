@@ -1,0 +1,166 @@
+//! Blocking TCP client + a multi-threaded load generator for the
+//! serving benches (Tab. 7).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::RequestSpec;
+use crate::json::{self, Json};
+use crate::server::protocol::samples_from_json;
+use crate::tensor::Tensor;
+
+/// One client connection (one JSON line per call, blocking).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    fn call(&mut self, req: &Json) -> Result<Json, String> {
+        writeln!(self.stream, "{}", req.to_string()).map_err(|e| e.to_string())?;
+        self.stream.flush().map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let j = json::parse(&line).map_err(|e| format!("{e:?}"))?;
+        if j.get("ok").as_bool() != Some(true) {
+            return Err(j.get("error").as_str().unwrap_or("unknown error").to_string());
+        }
+        Ok(j)
+    }
+
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).map(|_| ())
+    }
+
+    pub fn stats(&mut self) -> Result<Json, String> {
+        self.call(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+    }
+
+    /// Request samples; returns (samples, server-reported total seconds).
+    pub fn sample(&mut self, spec: &RequestSpec) -> Result<(Tensor, f64), String> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("sample".into())),
+            ("dataset", Json::Str(spec.dataset.clone())),
+            ("solver", Json::Str(spec.solver.clone())),
+            ("nfe", Json::Num(spec.nfe as f64)),
+            ("n_samples", Json::Num(spec.n_samples as f64)),
+            ("grid", Json::Str(spec.grid.clone())),
+            ("t_end", Json::Num(spec.t_end)),
+            ("seed", Json::Num(spec.seed as f64)),
+            ("return_samples", Json::Bool(true)),
+        ]);
+        let resp = self.call(&req)?;
+        let samples = samples_from_json(&resp)?;
+        let total = resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3;
+        Ok((samples, total))
+    }
+}
+
+/// Aggregate results of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub errors: usize,
+    pub wall_seconds: f64,
+    /// Client-observed latencies, seconds (sorted).
+    pub latencies: Vec<f64>,
+    /// Samples produced per wall-second.
+    pub throughput_rows: f64,
+}
+
+impl LoadReport {
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.latencies.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        self.latencies[idx]
+    }
+}
+
+/// Closed-loop load generator: `concurrency` threads each issue
+/// `requests_per_worker` sampling calls back-to-back.
+pub fn generate_load(
+    addr: std::net::SocketAddr,
+    base_spec: &RequestSpec,
+    concurrency: usize,
+    requests_per_worker: usize,
+) -> LoadReport {
+    let errors = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..concurrency {
+        let spec = base_spec.clone();
+        let errors = errors.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lats = Vec::with_capacity(requests_per_worker);
+            let mut rows = 0usize;
+            let Ok(mut client) = Client::connect(addr) else {
+                errors.fetch_add(requests_per_worker, Ordering::Relaxed);
+                return (lats, rows);
+            };
+            for i in 0..requests_per_worker {
+                let mut s = spec.clone();
+                s.seed = (w * 10_007 + i) as u64;
+                let t = Instant::now();
+                match client.sample(&s) {
+                    Ok((samples, _)) => {
+                        lats.push(t.elapsed().as_secs_f64());
+                        rows += samples.rows();
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        // brief backoff on rejection
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+            (lats, rows)
+        }));
+    }
+    let mut latencies = Vec::new();
+    let mut rows = 0usize;
+    for h in handles {
+        let (l, r) = h.join().expect("load worker");
+        latencies.extend(l);
+        rows += r;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LoadReport {
+        requests: latencies.len(),
+        errors: errors.load(Ordering::Relaxed),
+        wall_seconds: wall,
+        throughput_rows: rows as f64 / wall,
+        latencies,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_report_percentiles() {
+        let r = LoadReport {
+            requests: 3,
+            errors: 0,
+            wall_seconds: 1.0,
+            latencies: vec![0.1, 0.2, 0.3],
+            throughput_rows: 10.0,
+        };
+        assert_eq!(r.percentile(0.0), 0.1);
+        assert_eq!(r.percentile(1.0), 0.3);
+        assert_eq!(r.percentile(0.5), 0.2);
+    }
+}

@@ -1,0 +1,213 @@
+//! TCP JSON-lines serving front end over the coordinator.
+//!
+//! Wire protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"op":"sample","dataset":"gmm8","solver":"era","nfe":10,
+//!     "n_samples":64,"grid":"logsnr","t_end":0.001,"seed":7,
+//!     "return_samples":true}
+//! <- {"ok":true,"id":3,"nfe":10,"rows":64,"dim":2,
+//!     "queue_ms":0.1,"total_ms":41.0,"samples":[[..],[..],...]}
+//!
+//! -> {"op":"stats"}
+//! <- {"ok":true,"finished":12,"evals":180,...}
+//!
+//! -> {"op":"ping"}            <- {"ok":true,"pong":true}
+//! ```
+//!
+//! Threads + channels, no async runtime (the offline registry closure
+//! carries no tokio): one acceptor, one handler thread per connection,
+//! all sharing the [`Coordinator`] handle. Handler threads block on
+//! their request's ticket, so slow requests never head-of-line-block
+//! other connections; the coordinator's admission queue is the only
+//! shared backpressure point.
+
+pub mod client;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, SubmitError};
+use crate::json::Json;
+use protocol::{parse_request, result_to_json, Request};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:7437" (port 0 picks a free port).
+    pub addr: String,
+    /// Cap on simultaneously served connections.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 64 }
+    }
+}
+
+/// A running server; dropping it stops the acceptor.
+pub struct Server {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on a background acceptor thread.
+    pub fn start(coord: Arc<Coordinator>, config: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let live = Arc::new(AtomicUsize::new(0));
+
+        let acceptor = std::thread::Builder::new()
+            .name("era-acceptor".into())
+            .spawn(move || {
+                let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if live.load(Ordering::Relaxed) >= config.max_connections {
+                                let _ = reject_overloaded(&stream);
+                                continue;
+                            }
+                            live.fetch_add(1, Ordering::Relaxed);
+                            let coord = coord.clone();
+                            let live2 = live.clone();
+                            let stop3 = stop2.clone();
+                            handlers.push(
+                                std::thread::Builder::new()
+                                    .name("era-conn".into())
+                                    .spawn(move || {
+                                        let _ = handle_connection(stream, &coord, &stop3);
+                                        live2.fetch_sub(1, Ordering::Relaxed);
+                                    })
+                                    .expect("spawn handler"),
+                            );
+                            handlers.retain(|h| !h.is_finished());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in handlers {
+                    let _ = h.join();
+                }
+            })
+            .expect("spawn acceptor");
+
+        Ok(Server { local_addr, stop, acceptor: Some(acceptor) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the acceptor (open connections finish
+    /// their in-flight line and exit on the next read).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reject_overloaded(mut stream: &TcpStream) -> std::io::Result<()> {
+    let msg = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("server overloaded".into())),
+    ]);
+    writeln!(stream, "{}", msg.to_string())
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    // Bounded reads so an idle connection cannot pin the acceptor's join
+    // at shutdown: on timeout we re-check the stop flag and keep reading.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let response = dispatch(&line, coord);
+                writeln!(writer, "{}", response.to_string())?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Handle one protocol line. Split out for direct unit testing.
+pub fn dispatch(line: &str, coord: &Coordinator) -> Json {
+    match parse_request(line) {
+        Err(e) => err_json(&format!("bad request: {e}")),
+        Ok(Request::Ping) => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
+        }
+        Ok(Request::Stats) => {
+            let t = coord.telemetry();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("finished", Json::Num(t.requests_finished.load(Ordering::Relaxed) as f64)),
+                ("admitted", Json::Num(t.requests_admitted.load(Ordering::Relaxed) as f64)),
+                ("rejected", Json::Num(t.requests_rejected.load(Ordering::Relaxed) as f64)),
+                ("evals", Json::Num(t.evals.load(Ordering::Relaxed) as f64)),
+                ("rows", Json::Num(t.rows.load(Ordering::Relaxed) as f64)),
+                ("occupancy", Json::Num(t.mean_batch_occupancy())),
+                ("padding_fraction", Json::Num(t.padding_fraction())),
+                ("p50_ms", Json::Num(1e3 * t.latency_percentile(0.5))),
+                ("p99_ms", Json::Num(1e3 * t.latency_percentile(0.99))),
+            ])
+        }
+        Ok(Request::Sample { spec, return_samples }) => match coord.submit(spec) {
+            Err(SubmitError::QueueFull) => err_json("busy: queue full"),
+            Err(SubmitError::Shutdown) => err_json("shutting down"),
+            Err(SubmitError::Invalid(e)) => err_json(&format!("invalid: {e}")),
+            Ok(ticket) => match ticket.wait() {
+                Err(e) => err_json(&e),
+                Ok(res) => result_to_json(&res, return_samples),
+            },
+        },
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}

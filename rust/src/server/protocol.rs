@@ -1,0 +1,137 @@
+//! Wire protocol: JSON-line <-> typed request/response mapping.
+
+use crate::coordinator::{RequestSpec, SamplingResult};
+use crate::json::{self, Json};
+
+/// Parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    Ping,
+    Stats,
+    Sample { spec: RequestSpec, return_samples: bool },
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = json::parse(line).map_err(|e| format!("{e:?}"))?;
+    let op = j.get("op").as_str().ok_or("missing op")?;
+    match op {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "sample" => {
+            let d = RequestSpec::default();
+            let spec = RequestSpec {
+                dataset: j.get("dataset").as_str().unwrap_or(&d.dataset).to_string(),
+                solver: j.get("solver").as_str().unwrap_or(&d.solver).to_string(),
+                nfe: j.get("nfe").as_usize().unwrap_or(d.nfe),
+                n_samples: j.get("n_samples").as_usize().unwrap_or(d.n_samples),
+                grid: j.get("grid").as_str().unwrap_or(&d.grid).to_string(),
+                t_end: j.get("t_end").as_f64().unwrap_or(d.t_end),
+                seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
+            };
+            let return_samples = j.get("return_samples").as_bool().unwrap_or(false);
+            Ok(Request::Sample { spec, return_samples })
+        }
+        other => Err(format!("unknown op '{other}'")),
+    }
+}
+
+/// Serialise a finished request. Samples are included row-by-row only on
+/// demand (they dominate the payload for large batches).
+pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
+    let mut obj = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(res.id as f64)),
+        ("nfe", Json::Num(res.nfe as f64)),
+        ("rows", Json::Num(res.samples.rows() as f64)),
+        ("dim", Json::Num(res.samples.cols() as f64)),
+        ("queue_ms", Json::Num(1e3 * res.queue_seconds)),
+        ("total_ms", Json::Num(1e3 * res.total_seconds)),
+    ]);
+    if return_samples {
+        let rows: Vec<Json> = (0..res.samples.rows())
+            .map(|r| Json::arr_f32(res.samples.row(r)))
+            .collect();
+        obj.set("samples", Json::Arr(rows));
+    }
+    obj
+}
+
+/// Parse a response's samples back into a tensor (client side).
+pub fn samples_from_json(j: &Json) -> Result<crate::tensor::Tensor, String> {
+    let rows = j.get("rows").as_usize().ok_or("rows")?;
+    let dim = j.get("dim").as_usize().ok_or("dim")?;
+    let arr = j.get("samples").as_arr().ok_or("samples missing")?;
+    if arr.len() != rows {
+        return Err(format!("expected {rows} rows, got {}", arr.len()));
+    }
+    let mut data = Vec::with_capacity(rows * dim);
+    for row in arr {
+        let v = row.as_f32_vec().ok_or("bad row")?;
+        if v.len() != dim {
+            return Err("row dim mismatch".into());
+        }
+        data.extend(v);
+    }
+    Ok(crate::tensor::Tensor::from_vec(data, rows, dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sample_request_with_defaults() {
+        let r = parse_request(r#"{"op":"sample","solver":"era-5@15","nfe":20}"#).unwrap();
+        match r {
+            Request::Sample { spec, return_samples } => {
+                assert_eq!(spec.solver, "era-5@15");
+                assert_eq!(spec.nfe, 20);
+                assert_eq!(spec.dataset, "gmm8");
+                assert!(!return_samples);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parses_ping_and_stats() {
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#), Ok(Request::Ping)));
+        assert!(matches!(parse_request(r#"{"op":"stats"}"#), Ok(Request::Stats)));
+        assert!(parse_request(r#"{"op":"selfdestruct"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"nop":"ping"}"#).is_err());
+    }
+
+    #[test]
+    fn result_roundtrip_with_samples() {
+        let res = SamplingResult {
+            id: 5,
+            samples: crate::tensor::Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2, 2),
+            nfe: 10,
+            queue_seconds: 0.001,
+            total_seconds: 0.05,
+        };
+        let j = result_to_json(&res, true);
+        let text = j.to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("ok").as_bool(), Some(true));
+        assert_eq!(back.get("nfe").as_usize(), Some(10));
+        let t = samples_from_json(&back).unwrap();
+        assert_eq!(t.as_slice(), res.samples.as_slice());
+    }
+
+    #[test]
+    fn result_omits_samples_by_default() {
+        let res = SamplingResult {
+            id: 1,
+            samples: crate::tensor::Tensor::zeros(4, 2),
+            nfe: 10,
+            queue_seconds: 0.0,
+            total_seconds: 0.0,
+        };
+        let j = result_to_json(&res, false);
+        assert!(samples_from_json(&j).is_err());
+        assert_eq!(j.get("rows").as_usize(), Some(4));
+    }
+}

@@ -1,0 +1,359 @@
+//! Explicit linear-multistep baselines from Liu et al. 2021:
+//!
+//! * **PNDM** — pseudo linear multistep: the Adams–Bashforth-4 noise
+//!   combination (paper Eq. 9) pushed through the DDIM transfer (Eq. 8),
+//!   warmed up with 3 pseudo-Runge–Kutta steps (4 evals each — this is
+//!   why the paper's PNDM rows start at NFE 13/15).
+//! * **FON** — classic fourth-order explicit Adams applied directly to
+//!   the probability-flow ODE
+//!       dx/dt = -0.5 beta(t) x + 0.5 beta(t) eps_theta(x,t) / sigma(t),
+//!   warmed up with plain RK4. Uses fixed AB4 coefficients, i.e. assumes
+//!   a uniform grid (the configuration the paper runs it in).
+
+use std::collections::VecDeque;
+
+use crate::solvers::schedule::VpSchedule;
+use crate::solvers::{EvalRequest, Solver};
+use crate::tensor::Tensor;
+
+/// AB4 weights (Eq. 9), newest history first.
+pub const AB4: [f64; 4] = [55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0];
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Variant {
+    Pndm,
+    Fon,
+}
+
+/// Progress inside one pseudo-RK warmup step (4 evaluations).
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Stage {
+    S1,
+    S2,
+    S3,
+    S4,
+    /// Past warmup: one eval per multistep transition.
+    Multi,
+}
+
+pub struct ExplicitAdams {
+    sched: VpSchedule,
+    grid: Vec<f64>,
+    variant: Variant,
+    x: Tensor,
+    i: usize,
+    nfe: usize,
+    stage: Stage,
+    /// Newest-first history: eps values (PNDM) or f values (FON).
+    hist: VecDeque<Tensor>,
+    /// RK intermediates of the current warmup step.
+    rk: Vec<Tensor>,
+    /// x at the start of the current warmup step.
+    x_base: Option<Tensor>,
+    /// Outstanding request (x, t), kept to derive f from eps for FON.
+    pending: Option<(Tensor, f64)>,
+    warmup_steps: usize,
+}
+
+impl ExplicitAdams {
+    pub fn new_pndm(sched: VpSchedule, grid: Vec<f64>, x0: Tensor) -> Self {
+        Self::new(sched, grid, x0, Variant::Pndm)
+    }
+
+    pub fn new_fon(sched: VpSchedule, grid: Vec<f64>, x0: Tensor) -> Self {
+        Self::new(sched, grid, x0, Variant::Fon)
+    }
+
+    fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor, variant: Variant) -> Self {
+        assert!(grid.len() >= 5, "PNDM/FON need >= 4 transitions (>= 13 NFE)");
+        ExplicitAdams {
+            sched,
+            grid,
+            variant,
+            x: x0,
+            i: 0,
+            nfe: 0,
+            stage: Stage::S1,
+            hist: VecDeque::with_capacity(4),
+            rk: Vec::with_capacity(3),
+            x_base: None,
+            pending: None,
+            warmup_steps: 3,
+        }
+    }
+
+    /// DDIM transfer phi(x, eps, t_from -> t_to).
+    fn phi(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
+        let (a, b) = self.sched.ddim_coeffs(t_from, t_to);
+        x.affine(a as f32, b as f32, eps)
+    }
+
+    /// Probability-flow drift f(x, t) from an eps evaluation.
+    fn drift(&self, x: &Tensor, eps: &Tensor, t: f64) -> Tensor {
+        let beta = self.sched.beta_min + t * (self.sched.beta_max - self.sched.beta_min);
+        let sigma = self.sched.sigma(t).max(1e-12);
+        // f = -0.5 beta x + 0.5 beta eps / sigma
+        let mut f = x.clone();
+        f.scale((-0.5 * beta) as f32);
+        f.axpy((0.5 * beta / sigma) as f32, eps);
+        f
+    }
+
+    fn in_warmup(&self) -> bool {
+        self.i < self.warmup_steps
+    }
+
+    /// The (x, t) to evaluate next given the current stage.
+    fn request(&self) -> (Tensor, f64) {
+        let t_cur = self.grid[self.i];
+        let t_next = self.grid[self.i + 1];
+        if !self.in_warmup() {
+            return (self.x.clone(), t_cur);
+        }
+        match self.variant {
+            Variant::Pndm => {
+                let t_mid = 0.5 * (t_cur + t_next);
+                let base = self.x_base.as_ref().unwrap_or(&self.x);
+                match self.stage {
+                    Stage::S1 => (self.x.clone(), t_cur),
+                    // x1 = phi(x, e1, t, t_mid)
+                    Stage::S2 => (self.phi(base, &self.rk[0], t_cur, t_mid), t_mid),
+                    // x2 = phi(x, e2, t, t_mid)
+                    Stage::S3 => (self.phi(base, &self.rk[1], t_cur, t_mid), t_mid),
+                    // x3 = phi(x, e3, t, t_next)
+                    Stage::S4 => (self.phi(base, &self.rk[2], t_cur, t_next), t_next),
+                    Stage::Multi => unreachable!(),
+                }
+            }
+            Variant::Fon => {
+                let h = t_next - t_cur; // negative
+                let base = self.x_base.as_ref().unwrap_or(&self.x);
+                match self.stage {
+                    Stage::S1 => (self.x.clone(), t_cur),
+                    Stage::S2 => {
+                        let mut u = base.clone();
+                        u.axpy((0.5 * h) as f32, &self.rk[0]);
+                        (u, t_cur + 0.5 * h)
+                    }
+                    Stage::S3 => {
+                        let mut u = base.clone();
+                        u.axpy((0.5 * h) as f32, &self.rk[1]);
+                        (u, t_cur + 0.5 * h)
+                    }
+                    Stage::S4 => {
+                        let mut u = base.clone();
+                        u.axpy(h as f32, &self.rk[2]);
+                        (u, t_next)
+                    }
+                    Stage::Multi => unreachable!(),
+                }
+            }
+        }
+    }
+
+    fn push_hist(&mut self, v: Tensor) {
+        self.hist.push_front(v);
+        if self.hist.len() > 4 {
+            self.hist.pop_back();
+        }
+    }
+}
+
+impl Solver for ExplicitAdams {
+    fn name(&self) -> String {
+        match self.variant {
+            Variant::Pndm => "pndm".into(),
+            Variant::Fon => "fon".into(),
+        }
+    }
+
+    fn next_eval(&mut self) -> Option<EvalRequest> {
+        if self.is_done() {
+            return None;
+        }
+        assert!(self.pending.is_none(), "next_eval called with an eval outstanding");
+        if self.in_warmup() && self.stage == Stage::S1 {
+            self.x_base = Some(self.x.clone());
+        }
+        let (x, t) = self.request();
+        self.pending = Some((x.clone(), t));
+        Some(EvalRequest { x, t })
+    }
+
+    fn on_eval(&mut self, eps: Tensor) {
+        let (x_req, t_req) = self.pending.take().expect("on_eval without a pending request");
+        self.nfe += 1;
+        let t_cur = self.grid[self.i];
+        let t_next = self.grid[self.i + 1];
+
+        // Convert the raw eps into this variant's working quantity.
+        let val = match self.variant {
+            Variant::Pndm => eps,
+            Variant::Fon => self.drift(&x_req, &eps, t_req),
+        };
+
+        if self.in_warmup() {
+            match self.stage {
+                Stage::S1 => {
+                    // First slope of this step also feeds the multistep
+                    // history (the PNDM convention).
+                    self.push_hist(val.clone());
+                    self.rk.push(val);
+                    self.stage = Stage::S2;
+                }
+                Stage::S2 | Stage::S3 => {
+                    self.rk.push(val);
+                    self.stage = if self.stage == Stage::S2 { Stage::S3 } else { Stage::S4 };
+                }
+                Stage::S4 => {
+                    // Combine: (v1 + 2 v2 + 2 v3 + v4) / 6.
+                    let combo = Tensor::weighted_sum(
+                        &[&self.rk[0], &self.rk[1], &self.rk[2], &val],
+                        &[1.0 / 6.0, 2.0 / 6.0, 2.0 / 6.0, 1.0 / 6.0],
+                    );
+                    let base = self.x_base.take().expect("warmup base missing");
+                    self.x = match self.variant {
+                        Variant::Pndm => self.phi(&base, &combo, t_cur, t_next),
+                        Variant::Fon => {
+                            let mut x = base;
+                            x.axpy((t_next - t_cur) as f32, &combo);
+                            x
+                        }
+                    };
+                    self.rk.clear();
+                    self.i += 1;
+                    self.stage = if self.in_warmup() { Stage::S1 } else { Stage::Multi };
+                }
+                Stage::Multi => unreachable!(),
+            }
+            return;
+        }
+
+        // Multistep phase: push the new slope, AB4-combine, transfer.
+        self.push_hist(val);
+        let n = self.hist.len().min(4);
+        assert!(n == 4, "multistep phase requires a full history");
+        let refs: Vec<&Tensor> = self.hist.iter().take(4).collect();
+        let combo = Tensor::weighted_sum(&refs, &AB4);
+        self.x = match self.variant {
+            Variant::Pndm => self.phi(&self.x, &combo, t_cur, t_next),
+            Variant::Fon => {
+                let mut x = self.x.clone();
+                x.axpy((t_next - t_cur) as f32, &combo);
+                x
+            }
+        };
+        self.i += 1;
+    }
+
+    fn current(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn is_done(&self) -> bool {
+        self.i + 1 >= self.grid.len()
+    }
+
+    fn nfe(&self) -> usize {
+        self.nfe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::solvers::eps_model::{AnalyticGmm, CountingEps};
+    use crate::solvers::sample_with;
+    use crate::solvers::schedule::{make_grid, GridKind};
+
+    fn run(variant: &str, steps: usize, batch: usize) -> (Tensor, usize) {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let mut rng = Rng::new(0);
+        let x0 = rng.normal_tensor(batch, 2);
+        let mut s: Box<dyn Solver> = match variant {
+            "pndm" => Box::new(ExplicitAdams::new_pndm(sched, grid, x0)),
+            _ => Box::new(ExplicitAdams::new_fon(sched, grid, x0)),
+        };
+        let m = CountingEps::new(AnalyticGmm::gmm8(sched));
+        let out = sample_with(s.as_mut(), &m);
+        (out, s.nfe())
+    }
+
+    #[test]
+    fn pndm_nfe_accounting() {
+        // 3 warmup steps x 4 evals + (steps-3) x 1 eval.
+        let (_, nfe) = run("pndm", 10, 8);
+        assert_eq!(nfe, 12 + 7);
+    }
+
+    #[test]
+    fn fon_nfe_accounting() {
+        let (_, nfe) = run("fon", 8, 8);
+        assert_eq!(nfe, 12 + 5);
+    }
+
+    #[test]
+    fn pndm_converges_exact_model() {
+        let (out, _) = run("pndm", 25, 200);
+        assert!(out.all_finite());
+        let mut on_ring = 0;
+        for r in 0..out.rows() {
+            let row = out.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 2.0).abs() < 0.5 {
+                on_ring += 1;
+            }
+        }
+        assert!(on_ring > 185, "{on_ring}/200 on ring");
+    }
+
+    #[test]
+    fn fon_converges_exact_model() {
+        let (out, _) = run("fon", 40, 200);
+        assert!(out.all_finite());
+        let mut on_ring = 0;
+        for r in 0..out.rows() {
+            let row = out.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 2.0).abs() < 0.6 {
+                on_ring += 1;
+            }
+        }
+        assert!(on_ring > 170, "{on_ring}/200 on ring");
+    }
+
+    #[test]
+    fn pndm_beats_ddim_at_equal_nfe() {
+        // The headline property of multistep methods on smooth models.
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let reference =
+            crate::metrics::Moments::new(vec![0.0, 0.0], vec![2.0225, 0.0, 0.0, 2.0225]);
+        let nfe = 20;
+
+        let mut rng = Rng::new(3);
+        let x0 = rng.normal_tensor(2000, 2);
+        let grid_p = make_grid(&sched, GridKind::Uniform, nfe - 9, 1.0, 1e-3);
+        let mut pndm = ExplicitAdams::new_pndm(sched, grid_p, x0.clone());
+        let out_p = sample_with(&mut pndm, &model);
+        assert_eq!(pndm.nfe(), nfe);
+
+        let grid_d = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+        let mut ddim = crate::solvers::ddim::Ddim::new(sched, grid_d, x0);
+        let out_d = sample_with(&mut ddim, &model);
+
+        let fid_p = crate::metrics::fid(&out_p, &reference);
+        let fid_d = crate::metrics::fid(&out_d, &reference);
+        assert!(fid_p < fid_d * 1.5, "pndm {fid_p} vs ddim {fid_d}");
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 4 transitions")]
+    fn too_few_steps_panics() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 3, 1.0, 1e-3);
+        let _ = ExplicitAdams::new_pndm(sched, grid, Tensor::zeros(1, 2));
+    }
+}

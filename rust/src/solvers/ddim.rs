@@ -1,0 +1,147 @@
+//! DDIM (Song et al. 2020a), the deterministic baseline and Eq. 8 of the
+//! paper: every other solver in this crate reuses its transition
+//!
+//! ```text
+//!     x_{i+1} = a_i x_i + b_i eps,   a_i = sab(t_{i+1})/sab(t_i),
+//!                                    b_i = sigma(t_{i+1}) - a_i sigma(t_i)
+//!
+//! ```
+//! with its own choice of `eps`.
+
+use crate::solvers::schedule::VpSchedule;
+use crate::solvers::{EvalRequest, Solver};
+use crate::tensor::Tensor;
+
+pub struct Ddim {
+    sched: VpSchedule,
+    /// Decreasing timesteps t_0 > ... > t_N.
+    grid: Vec<f64>,
+    x: Tensor,
+    /// Index of the *next transition* (x at grid[i] currently).
+    i: usize,
+    nfe: usize,
+    pending: bool,
+}
+
+impl Ddim {
+    pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor) -> Self {
+        assert!(grid.len() >= 2, "grid needs at least one transition");
+        Ddim { sched, grid, x: x0, i: 0, nfe: 0, pending: false }
+    }
+}
+
+impl Solver for Ddim {
+    fn name(&self) -> String {
+        "ddim".into()
+    }
+
+    fn next_eval(&mut self) -> Option<EvalRequest> {
+        if self.is_done() {
+            return None;
+        }
+        assert!(!self.pending, "next_eval called with an eval outstanding");
+        self.pending = true;
+        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+    }
+
+    fn on_eval(&mut self, eps: Tensor) {
+        assert!(self.pending, "on_eval without a pending request");
+        self.pending = false;
+        self.nfe += 1;
+        let (a, b) = self.sched.ddim_coeffs(self.grid[self.i], self.grid[self.i + 1]);
+        self.x.affine_inplace(a as f32, b as f32, &eps);
+        self.i += 1;
+    }
+
+    fn current(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn is_done(&self) -> bool {
+        self.i + 1 >= self.grid.len()
+    }
+
+    fn nfe(&self) -> usize {
+        self.nfe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::eps_model::{AnalyticGmm, CountingEps};
+    use crate::solvers::schedule::{make_grid, GridKind};
+    use crate::solvers::sample_with;
+    use crate::rng::Rng;
+
+    fn setup(n_steps: usize, batch: usize) -> (Ddim, CountingEps<AnalyticGmm>) {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, n_steps, 1.0, 1e-3);
+        let mut rng = Rng::new(0);
+        let x0 = rng.normal_tensor(batch, 2);
+        (Ddim::new(sched, grid, x0), CountingEps::new(AnalyticGmm::gmm8(sched)))
+    }
+
+    #[test]
+    fn nfe_equals_steps() {
+        let (mut s, m) = setup(10, 32);
+        let _ = sample_with(&mut s, &m);
+        assert_eq!(s.nfe(), 10);
+        assert_eq!(m.calls(), 10);
+        assert!(s.is_done());
+        assert!(s.next_eval().is_none());
+    }
+
+    #[test]
+    fn converges_to_modes_with_exact_model() {
+        // With the exact eps, 100 DDIM steps must land essentially every
+        // sample on the gmm8 ring.
+        let (mut s, m) = setup(100, 256);
+        let out = sample_with(&mut s, &m);
+        assert!(out.all_finite());
+        let mut on_ring = 0;
+        for r in 0..out.rows() {
+            let row = out.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 2.0).abs() < 0.5 {
+                on_ring += 1;
+            }
+        }
+        assert!(on_ring as f64 / 256.0 > 0.95, "{on_ring}/256 on ring");
+    }
+
+    #[test]
+    fn more_steps_better_fid() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let reference = crate::metrics::Moments::new(
+            vec![0.0, 0.0],
+            vec![2.0225, 0.0, 0.0, 2.0225],
+        );
+        let mut fids = Vec::new();
+        for n in [5usize, 20, 80] {
+            let grid = make_grid(&sched, GridKind::Uniform, n, 1.0, 1e-3);
+            let mut rng = Rng::new(1);
+            let x0 = rng.normal_tensor(2000, 2);
+            let mut s = Ddim::new(sched, grid, x0);
+            let out = sample_with(&mut s, &model);
+            fids.push(crate::metrics::fid(&out, &reference));
+        }
+        assert!(fids[2] < fids[0], "fid must improve with steps: {fids:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "outstanding")]
+    fn double_next_eval_panics() {
+        let (mut s, _) = setup(5, 2);
+        let _ = s.next_eval();
+        let _ = s.next_eval();
+    }
+
+    #[test]
+    #[should_panic(expected = "pending")]
+    fn on_eval_without_request_panics() {
+        let (mut s, _) = setup(5, 2);
+        s.on_eval(Tensor::zeros(2, 2));
+    }
+}

@@ -1,0 +1,146 @@
+//! Ancestral DDPM sampling (Ho et al. 2020) — the stochastic baseline of
+//! the paper's Tab. 3. One posterior-sampling transition per step:
+//!
+//! ```text
+//!     alpha_i = alpha_bar(t_i) / alpha_bar(t_{i+1})        (t decreasing)
+//!     mu      = (x - (1 - alpha_i)/sqrt(1 - ab(t_i)) eps) / sqrt(alpha_i)
+//!     var     = (1 - ab(t_{i+1}))/(1 - ab(t_i)) (1 - alpha_i)
+//!     x'      = mu + sqrt(var) z,  z ~ N(0, I)   (no noise on final step)
+//! ```
+
+use crate::rng::Rng;
+use crate::solvers::schedule::VpSchedule;
+use crate::solvers::{EvalRequest, Solver};
+use crate::tensor::Tensor;
+
+pub struct Ddpm {
+    sched: VpSchedule,
+    grid: Vec<f64>,
+    x: Tensor,
+    i: usize,
+    nfe: usize,
+    pending: bool,
+    rng: Rng,
+}
+
+impl Ddpm {
+    pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor, seed: u64) -> Self {
+        assert!(grid.len() >= 2);
+        Ddpm { sched, grid, x: x0, i: 0, nfe: 0, pending: false, rng: Rng::for_stream(seed, 0xD0) }
+    }
+}
+
+impl Solver for Ddpm {
+    fn name(&self) -> String {
+        "ddpm".into()
+    }
+
+    fn next_eval(&mut self) -> Option<EvalRequest> {
+        if self.is_done() {
+            return None;
+        }
+        assert!(!self.pending, "next_eval called with an eval outstanding");
+        self.pending = true;
+        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+    }
+
+    fn on_eval(&mut self, eps: Tensor) {
+        assert!(self.pending, "on_eval without a pending request");
+        self.pending = false;
+        self.nfe += 1;
+
+        let t_cur = self.grid[self.i];
+        let t_next = self.grid[self.i + 1];
+        let ab_cur = self.sched.alpha_bar(t_cur);
+        let ab_next = self.sched.alpha_bar(t_next);
+        let alpha = ab_cur / ab_next; // in (0, 1)
+
+        // Posterior mean.
+        let coef = ((1.0 - alpha) / (1.0 - ab_cur).sqrt()) as f32;
+        let inv_sqrt_alpha = (1.0 / alpha.sqrt()) as f32;
+        self.x.axpy(-coef, &eps);
+        self.x.scale(inv_sqrt_alpha);
+
+        // Posterior noise except on the last transition (the paper
+        // withdraws the final-step denoising trick; deterministic output).
+        let last = self.i + 2 == self.grid.len();
+        if !last {
+            let var = (1.0 - ab_next) / (1.0 - ab_cur) * (1.0 - alpha);
+            if var > 0.0 {
+                let z = self.rng.normal_tensor(self.x.rows(), self.x.cols());
+                self.x.axpy(var.sqrt() as f32, &z);
+            }
+        }
+        self.i += 1;
+    }
+
+    fn current(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn is_done(&self) -> bool {
+        self.i + 1 >= self.grid.len()
+    }
+
+    fn nfe(&self) -> usize {
+        self.nfe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::eps_model::AnalyticGmm;
+    use crate::solvers::sample_with;
+    use crate::solvers::schedule::{make_grid, GridKind};
+
+    #[test]
+    fn runs_and_counts_nfe() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 20, 1.0, 1e-3);
+        let mut rng = Rng::new(0);
+        let mut s = Ddpm::new(sched, grid, rng.normal_tensor(64, 2), 1);
+        let m = AnalyticGmm::gmm8(sched);
+        let out = sample_with(&mut s, &m);
+        assert_eq!(s.nfe(), 20);
+        assert!(out.all_finite());
+    }
+
+    #[test]
+    fn many_steps_reach_ring() {
+        // DDPM needs many steps (the paper's Tab. 3: terrible at low NFE,
+        // decent at 100+); with the exact model 300 steps should do.
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 300, 1.0, 1e-3);
+        let mut rng = Rng::new(2);
+        let mut s = Ddpm::new(sched, grid, rng.normal_tensor(200, 2), 3);
+        let m = AnalyticGmm::gmm8(sched);
+        let out = sample_with(&mut s, &m);
+        let mut on_ring = 0;
+        for r in 0..out.rows() {
+            let row = out.row(r);
+            let rad = ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt();
+            if (rad - 2.0).abs() < 0.6 {
+                on_ring += 1;
+            }
+        }
+        assert!(on_ring > 180, "{on_ring}/200");
+    }
+
+    #[test]
+    fn stochastic_but_seed_deterministic() {
+        let sched = VpSchedule::default();
+        let m = AnalyticGmm::gmm8(sched);
+        let run = |seed: u64| {
+            let grid = make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3);
+            let mut rng = Rng::new(5);
+            let mut s = Ddpm::new(sched, grid, rng.normal_tensor(8, 2), seed);
+            sample_with(&mut s, &m)
+        };
+        let a = run(1);
+        let b = run(1);
+        let c = run(2);
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+}

@@ -1,0 +1,303 @@
+//! The noise-prediction model abstraction.
+//!
+//! Solvers never talk to PJRT directly; they see `EpsModel`. Three
+//! implementations exist:
+//!   * `runtime::PjRtEps` — the production path (AOT HLO artifacts),
+//!   * `AnalyticGmm` — the *exact* eps for a Gaussian-mixture data
+//! ```text
+//!     distribution (closed-form score), used by convergence tests: with a
+//!     perfect model every solver must drive samples onto the mixture,
+//! ```
+//!   * `NoisyEps` — wraps any model with a smooth, deterministic,
+//! ```text
+//!     t-dependent error field that *grows as t -> 0*, reproducing the
+//!     paper's Fig. 1 premise in a controlled way for robustness tests.
+//! ```
+
+use crate::solvers::schedule::VpSchedule;
+use crate::tensor::Tensor;
+
+/// A noise-prediction network eps_theta(x, t) with per-sample times.
+pub trait EpsModel: Send + Sync {
+    /// Evaluate the model. `x` is (batch, dim); `t` has length batch.
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor;
+
+    /// Data dimension.
+    fn dim(&self) -> usize;
+
+    /// Count of evaluations so far (for NFE accounting), if tracked.
+    fn eval_count(&self) -> usize {
+        0
+    }
+}
+
+/// Exact eps for a GMM data distribution with isotropic component noise.
+///
+/// For data `x0 ~ (1/J) sum_j N(c_j, s^2 I)` the marginal at time t is
+/// `q_t = (1/J) sum_j N(sqrt_ab c_j, (ab s^2 + 1 - ab) I)`, whose score is
+/// available in closed form; `eps*(x, t) = -sigma_t * score(x, t)` is the
+/// unique noise prediction that makes the probability-flow ODE exact.
+pub struct AnalyticGmm {
+    pub sched: VpSchedule,
+    /// Component means, each of length `dim`.
+    pub centers: Vec<Vec<f64>>,
+    /// Component standard deviation (isotropic).
+    pub std: f64,
+    dim: usize,
+    evals: std::sync::atomic::AtomicUsize,
+}
+
+impl AnalyticGmm {
+    pub fn new(sched: VpSchedule, centers: Vec<Vec<f64>>, std: f64) -> Self {
+        assert!(!centers.is_empty());
+        let dim = centers[0].len();
+        assert!(centers.iter().all(|c| c.len() == dim));
+        AnalyticGmm { sched, centers, std, dim, evals: Default::default() }
+    }
+
+    /// The standard 8-mode ring used by tests (mirrors data::gmm8).
+    pub fn gmm8(sched: VpSchedule) -> Self {
+        AnalyticGmm::new(sched, crate::data::gmm8_modes(), 0.15)
+    }
+}
+
+impl EpsModel for AnalyticGmm {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        assert_eq!(x.rows(), t.len());
+        assert_eq!(x.cols(), self.dim);
+        self.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut out = Tensor::zeros(x.rows(), x.cols());
+        for r in 0..x.rows() {
+            let tr = t[r] as f64;
+            let sab = self.sched.sqrt_alpha_bar(tr);
+            let ab = sab * sab;
+            let var = ab * self.std * self.std + (1.0 - ab);
+            let sigma = self.sched.sigma(tr);
+            let row = x.row(r);
+
+            // Log-sum-exp responsibilities over components.
+            let mut logw: Vec<f64> = Vec::with_capacity(self.centers.len());
+            for c in &self.centers {
+                let d2: f64 = row
+                    .iter()
+                    .zip(c)
+                    .map(|(&xv, &cv)| {
+                        let d = xv as f64 - sab * cv;
+                        d * d
+                    })
+                    .sum();
+                logw.push(-0.5 * d2 / var);
+            }
+            let m = logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut wsum = 0.0;
+            let w: Vec<f64> = logw
+                .iter()
+                .map(|&l| {
+                    let e = (l - m).exp();
+                    wsum += e;
+                    e
+                })
+                .collect();
+
+            // score = sum_j w_j (m_j - x) / var;  eps = -sigma * score.
+            let orow = out.row_mut(r);
+            for (j, c) in self.centers.iter().enumerate() {
+                let wj = w[j] / wsum;
+                for (k, &cv) in c.iter().enumerate() {
+                    let diff = sab * cv - row[k] as f64;
+                    orow[k] += (wj * diff / var) as f32;
+                }
+            }
+            for v in orow.iter_mut() {
+                *v *= -(sigma as f32);
+            }
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_count(&self) -> usize {
+        self.evals.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Wraps an `EpsModel` with a smooth deterministic error field:
+///
+/// ```text
+///     eps'(x, t) = eps(x, t) + amp(t) * sin(W x + phi)
+///
+/// ```
+/// with `amp(t) = amp0 * (1 - t)^power`, so the error grows as t -> 0 the
+/// way the measured curves in artifacts/<ds>/train_report.json do. The
+/// field is smooth in x (fixed random W, phi), so it perturbs high-order
+/// solvers the way a consistently-wrong network does, not like iid noise.
+pub struct NoisyEps<M: EpsModel> {
+    pub inner: M,
+    pub amp0: f64,
+    pub power: f64,
+    w: Vec<f64>,
+    phi: Vec<f64>,
+}
+
+impl<M: EpsModel> NoisyEps<M> {
+    pub fn new(inner: M, amp0: f64, power: f64, seed: u64) -> Self {
+        let dim = inner.dim();
+        let mut rng = crate::rng::Rng::new(seed);
+        let w: Vec<f64> = (0..dim * dim).map(|_| rng.normal() * 1.5).collect();
+        let phi: Vec<f64> = (0..dim).map(|_| rng.uniform_in(0.0, 6.28)).collect();
+        NoisyEps { inner, amp0, power, w, phi }
+    }
+
+    fn amp(&self, t: f64) -> f64 {
+        self.amp0 * (1.0 - t).max(0.0).powf(self.power)
+    }
+}
+
+impl<M: EpsModel> EpsModel for NoisyEps<M> {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        let mut out = self.inner.eval(x, t);
+        let d = self.dim();
+        for r in 0..x.rows() {
+            let amp = self.amp(t[r] as f64);
+            if amp == 0.0 {
+                continue;
+            }
+            let row = x.row(r);
+            let orow = out.row_mut(r);
+            for k in 0..d {
+                let mut arg = self.phi[k];
+                for (j, &xv) in row.iter().enumerate() {
+                    arg += self.w[k * d + j] * xv as f64;
+                }
+                orow[k] += (amp * arg.sin()) as f32;
+            }
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_count(&self) -> usize {
+        self.inner.eval_count()
+    }
+}
+
+/// Counts evaluations and rows through to an inner model; used by tests
+/// and the NFE accounting assertions.
+pub struct CountingEps<M: EpsModel> {
+    pub inner: M,
+    calls: std::sync::atomic::AtomicUsize,
+    rows: std::sync::atomic::AtomicUsize,
+}
+
+impl<M: EpsModel> CountingEps<M> {
+    pub fn new(inner: M) -> Self {
+        CountingEps { inner, calls: Default::default(), rows: Default::default() }
+    }
+
+    pub fn calls(&self) -> usize {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn rows_evaluated(&self) -> usize {
+        self.rows.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<M: EpsModel> EpsModel for CountingEps<M> {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.rows.fetch_add(x.rows(), std::sync::atomic::Ordering::Relaxed);
+        self.inner.eval(x, t)
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gmm() -> AnalyticGmm {
+        AnalyticGmm::gmm8(VpSchedule::default())
+    }
+
+    #[test]
+    fn analytic_eps_shape() {
+        let m = gmm();
+        let x = Tensor::zeros(5, 2);
+        let out = m.eval(&x, &[0.5; 5]);
+        assert_eq!((out.rows(), out.cols()), (5, 2));
+        assert!(out.all_finite());
+        assert_eq!(m.eval_count(), 1);
+    }
+
+    #[test]
+    fn analytic_eps_points_away_from_modes() {
+        // At a point displaced from a mode, eps ~ (x - sab*c)/sigma-ish:
+        // the noise estimate should reconstruct the displacement direction.
+        let m = gmm();
+        let t = 0.3f64;
+        let sab = m.sched.sqrt_alpha_bar(t) as f32;
+        // x slightly right of mode (2, 0) scaled to time t.
+        let x = Tensor::from_vec(vec![2.0 * sab + 0.1, 0.0], 1, 2);
+        let eps = m.eval(&x, &[t as f32]);
+        assert!(eps.as_slice()[0] > 0.0, "eps_x should be positive");
+        assert!(eps.as_slice()[1].abs() < 0.2);
+    }
+
+    #[test]
+    fn analytic_eps_is_gaussian_limit_at_t1() {
+        // At t=1 alpha_bar ~ 0: q_1 ~ N(0, I) (std contributions vanish),
+        // so eps(x, 1) ~ x for moderate x.
+        let m = gmm();
+        let x = Tensor::from_vec(vec![0.7, -0.4], 1, 2);
+        let eps = m.eval(&x, &[1.0]);
+        assert!((eps.as_slice()[0] - 0.7).abs() < 0.05, "{:?}", eps.as_slice());
+        assert!((eps.as_slice()[1] + 0.4).abs() < 0.05);
+    }
+
+    #[test]
+    fn noisy_eps_error_grows_toward_zero_t() {
+        let noisy = NoisyEps::new(gmm(), 0.5, 2.0, 7);
+        let clean = gmm();
+        let x = Tensor::from_vec(vec![1.0, 1.0, -0.5, 0.3], 2, 2);
+        let d_hi = {
+            let a = noisy.eval(&x, &[0.9, 0.9]);
+            let b = clean.eval(&x, &[0.9, 0.9]);
+            a.mean_row_dist(&b)
+        };
+        let d_lo = {
+            let a = noisy.eval(&x, &[0.05, 0.05]);
+            let b = clean.eval(&x, &[0.05, 0.05]);
+            a.mean_row_dist(&b)
+        };
+        assert!(d_lo > d_hi, "error should grow as t->0: {d_lo} vs {d_hi}");
+    }
+
+    #[test]
+    fn noisy_eps_deterministic() {
+        let noisy = NoisyEps::new(gmm(), 0.3, 1.0, 9);
+        let x = Tensor::from_vec(vec![0.2, -0.8], 1, 2);
+        let a = noisy.eval(&x, &[0.4]);
+        let b = noisy.eval(&x, &[0.4]);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn counting_wrapper() {
+        let m = CountingEps::new(gmm());
+        let x = Tensor::zeros(3, 2);
+        let _ = m.eval(&x, &[0.5; 3]);
+        let _ = m.eval(&x, &[0.2; 3]);
+        assert_eq!(m.calls(), 2);
+        assert_eq!(m.rows_evaluated(), 6);
+    }
+}

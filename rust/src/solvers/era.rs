@@ -1,0 +1,525 @@
+//! ERA-Solver (the paper's contribution, Alg. 1).
+//!
+//! Predictor–corrector on the diffusion ODE where
+//! * the **predictor** is a Lagrange interpolation (Eq. 13/14) over `k`
+//!   noise estimates chosen from the *Lagrange buffer* of everything
+//!   observed so far (Eq. 12) — zero extra network evaluations;
+//! * the buffer indices are chosen by the **error-robust selection**
+//!   (ERS): uniform initial indices (Eq. 16) warped through a power
+//!   function whose exponent is the measured prediction error
+//!   `delta_eps / lambda` (Eq. 17), biasing toward *earlier* (more
+//!   accurate, per Fig. 1) estimates when the error grows;
+//! * the **error measure** `delta_eps` is the distance between what the
+//!   predictor said the noise at `t_i` would be and what the network
+//!   actually returned there (Eq. 15) — a reference-free proxy for the
+//!   network's estimation error, validated against the training-time
+//!   error curve (Fig. 3 vs Fig. 1);
+//! * the **corrector** is Adams–Moulton order 4 (Eq. 11) with the
+//!   predicted noise in the implicit slot.
+//!
+//! The first `k-1` transitions bootstrap the buffer with plain DDIM
+//! (Alg. 1 line 5-7). Each transition costs exactly one network
+//! evaluation — at the *new* point `(x_{t_{i+1}}, t_{i+1})`, which both
+//! refreshes the buffer and scores the predictor — except the final one,
+//! whose evaluation no future step would consume and is therefore
+//! skipped; total NFE equals the number of grid transitions.
+
+use crate::solvers::adams_implicit::am_weights;
+use crate::solvers::lagrange;
+use crate::solvers::schedule::VpSchedule;
+use crate::solvers::{EvalRequest, Solver};
+use crate::tensor::Tensor;
+
+/// How the Lagrange bases are selected from the buffer (the paper's
+/// ablation axis: Tab. 4/5 and Fig. 5/6).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    /// Eq. 16/17 with exponent `delta_eps / lambda` (the contribution).
+    ErrorRobust { lambda: f64 },
+    /// `tau_m = i - m`: always the newest k entries (Tab. 4/5 "fixed").
+    FixedLast,
+    /// Eq. 17 with a constant exponent instead of the error measure
+    /// (Fig. 5/6 "constant scale" ablation).
+    ConstantScale { scale: f64 },
+}
+
+/// A record of one ERS decision, kept for the Fig. 3 diagnostics.
+#[derive(Clone, Debug)]
+pub struct SelectionTrace {
+    /// Solver step index i at which the selection was made.
+    pub step: usize,
+    /// Measured error (Eq. 15) in force at that step.
+    pub delta_eps: f64,
+    /// Buffer indices chosen as Lagrange bases (ascending).
+    pub indices: Vec<usize>,
+}
+
+/// Compute the selected buffer indices for buffer length `i + 1`
+/// (entries `0..=i`), interpolation order `k` and power-function
+/// exponent `p` (Eq. 16/17). Exposed for property tests.
+///
+/// Indices are returned ascending, pairwise distinct, within `0..=i`,
+/// and always include `i` (the newest estimate anchors the interpolant
+/// at the current time). Floor-induced collisions are resolved by
+/// shifting the earlier index down — this preserves the "lean earlier
+/// when the error is high" intent while keeping the Lagrange system
+/// nonsingular.
+pub fn select_indices(i: usize, k: usize, p: f64) -> Vec<usize> {
+    assert!(k >= 1 && i + 1 >= k, "buffer too short: i={i}, k={k}");
+    let mut idx = Vec::with_capacity(k);
+    if i == 0 {
+        return vec![0];
+    }
+    // Eq. 16: uniform cover tau_hat_m = (i/k)*m for m = 1..=k, then
+    // Eq. 17: tau_m = floor((tau_hat_m / i)^p * i). Note tau_hat_m / i
+    // is exactly m/k, which keeps m = k pinned at 1.0 (computing
+    // (i/k)*m / i in floats can round below 1 and unanchor the newest
+    // entry — caught by prop_select_indices_invariants).
+    for m in 1..=k {
+        let frac = m as f64 / k as f64;
+        let tau = (frac.powf(p) * i as f64).floor() as usize;
+        idx.push(tau.min(i));
+    }
+    // The newest estimate always anchors the interpolant at the current
+    // time; resolve floor collisions by pushing earlier entries down
+    // (backward pass keeps the "lean earlier when error is high" intent
+    // and the Lagrange system nonsingular). Pre-clamp each slot into the
+    // band that leaves room for its neighbours — extreme exponents
+    // collapse every warped index to 0 (p >> 1) or i (p << 1), and the
+    // band is what guarantees the backward pass cannot underflow.
+    idx[k - 1] = i;
+    for (m, v) in idx.iter_mut().enumerate() {
+        *v = (*v).clamp(m, i - (k - 1 - m));
+    }
+    for m in (0..k - 1).rev() {
+        if idx[m] >= idx[m + 1] {
+            idx[m] = idx[m + 1] - 1;
+        }
+    }
+    debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    debug_assert_eq!(*idx.last().unwrap(), i);
+    idx
+}
+
+/// ERA-Solver state machine (one concurrent sampling request).
+pub struct EraSolver {
+    sched: VpSchedule,
+    grid: Vec<f64>,
+    x: Tensor,
+    i: usize,
+    nfe: usize,
+    k: usize,
+    selection: Selection,
+    /// Lagrange buffer Omega (Eq. 12): `times[n]`/`eps[n]` is the noise
+    /// the network returned at grid point n. Grows one entry per eval.
+    times: Vec<f64>,
+    eps: Vec<Tensor>,
+    /// Eq. 15, initialised to lambda so the first exponent is 1
+    /// (identity warp), per Alg. 1 line 2.
+    delta_eps: f64,
+    /// Predictor output awaiting scoring against the next observation.
+    pending_pred: Option<Tensor>,
+    pending: bool,
+    done: bool,
+    trace: Vec<SelectionTrace>,
+}
+
+impl EraSolver {
+    pub fn new(
+        sched: VpSchedule,
+        grid: Vec<f64>,
+        x0: Tensor,
+        k: usize,
+        selection: Selection,
+    ) -> Self {
+        assert!(grid.len() >= 2, "need at least one transition");
+        assert!(k >= 2, "interpolation order k must be >= 2");
+        assert!(
+            grid.len() > k,
+            "NFE budget {} too small for order k={k} (needs > k transitions)",
+            grid.len() - 1
+        );
+        let lambda = match selection {
+            Selection::ErrorRobust { lambda } => lambda,
+            _ => 1.0,
+        };
+        EraSolver {
+            sched,
+            grid,
+            x: x0,
+            i: 0,
+            nfe: 0,
+            k,
+            selection,
+            times: Vec::new(),
+            eps: Vec::new(),
+            delta_eps: lambda,
+            pending_pred: None,
+            pending: false,
+            done: false,
+            trace: Vec::new(),
+        }
+    }
+
+    /// DDIM transition (Eq. 8).
+    fn phi(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
+        let (a, b) = self.sched.ddim_coeffs(t_from, t_to);
+        x.affine(a as f32, b as f32, eps)
+    }
+
+    /// The power-function exponent of Eq. 17 under the active selection.
+    fn exponent(&self) -> f64 {
+        match &self.selection {
+            Selection::ErrorRobust { lambda } => self.delta_eps / lambda,
+            Selection::ConstantScale { scale } => *scale,
+            Selection::FixedLast => 1.0, // unused
+        }
+    }
+
+    /// Selected buffer indices for the current step.
+    fn indices(&self) -> Vec<usize> {
+        let i = self.times.len() - 1;
+        match &self.selection {
+            Selection::FixedLast => {
+                // tau_m = i - m, ascending.
+                ((i + 1 - self.k)..=i).collect()
+            }
+            _ => select_indices(i, self.k, self.exponent()),
+        }
+    }
+
+    /// Predictor (Eq. 13/14): interpolate the selected bases at `t`.
+    fn predict(&mut self, t: f64) -> Tensor {
+        let idx = self.indices();
+        self.trace.push(SelectionTrace {
+            step: self.i,
+            delta_eps: self.delta_eps,
+            indices: idx.clone(),
+        });
+        let nodes: Vec<f64> = idx.iter().map(|&n| self.times[n]).collect();
+        let vals: Vec<&Tensor> = idx.iter().map(|&n| &self.eps[n]).collect();
+        lagrange::interpolate(&nodes, &vals, t)
+    }
+
+    /// One transition x_{t_i} -> x_{t_{i+1}} using everything buffered.
+    /// Returns the predictor output when in the main (corrected) phase.
+    fn advance(&mut self) -> Option<Tensor> {
+        let t_cur = self.grid[self.i];
+        let t_next = self.grid[self.i + 1];
+        let newest = self.eps.last().expect("advance before first eval");
+
+        if self.i < self.k - 1 {
+            // Warmup (Alg. 1 line 5-7): plain DDIM with the newest eps.
+            self.x = self.phi(&self.x.clone(), newest, t_cur, t_next);
+            self.i += 1;
+            return None;
+        }
+
+        // Predictor (line 9-12).
+        let eps_pred = self.predict(t_next);
+        // Corrector (line 13, Eq. 11): AM4 with eps_pred in the implicit
+        // slot and the newest buffered estimates in the explicit slots.
+        let n = self.eps.len();
+        let order = n.min(3) + 1; // implicit slot + up to 3 history slots
+        let w = am_weights(order);
+        let mut tensors: Vec<&Tensor> = vec![&eps_pred];
+        for back in 0..order - 1 {
+            tensors.push(&self.eps[n - 1 - back]);
+        }
+        let eps_c = Tensor::weighted_sum(&tensors, w);
+        self.x = self.phi(&self.x.clone(), &eps_c, t_cur, t_next);
+        self.i += 1;
+        Some(eps_pred)
+    }
+
+    /// ERS decision log (Fig. 3 diagnostics).
+    pub fn selection_trace(&self) -> &[SelectionTrace] {
+        &self.trace
+    }
+
+    /// Current Eq. 15 error measure.
+    pub fn delta_eps(&self) -> f64 {
+        self.delta_eps
+    }
+}
+
+impl Solver for EraSolver {
+    fn name(&self) -> String {
+        match &self.selection {
+            Selection::ErrorRobust { .. } => format!("era-{}", self.k),
+            Selection::FixedLast => format!("era-fixed-{}", self.k),
+            Selection::ConstantScale { .. } => format!("era-const-{}", self.k),
+        }
+    }
+
+    fn next_eval(&mut self) -> Option<EvalRequest> {
+        if self.done {
+            return None;
+        }
+        assert!(!self.pending, "next_eval called with an eval outstanding");
+        if self.eps.is_empty() {
+            // Alg. 1 line 3: seed the buffer at (x_{t_0}, t_0).
+            self.pending = true;
+            return Some(EvalRequest { x: self.x.clone(), t: self.grid[0] });
+        }
+        // Advance one transition; the evaluation (if any) happens at the
+        // *new* point, which feeds both the buffer and the error measure.
+        self.pending_pred = self.advance();
+        if self.i + 1 >= self.grid.len() {
+            // Final iterate reached; its evaluation would never be used.
+            self.done = true;
+            return None;
+        }
+        self.pending = true;
+        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+    }
+
+    fn on_eval(&mut self, eps: Tensor) {
+        assert!(self.pending, "on_eval without a pending request");
+        self.pending = false;
+        self.nfe += 1;
+        // Update the error measure (Eq. 15 / Alg. 1 line 16) against what
+        // the predictor claimed this noise would be.
+        if let Some(pred) = self.pending_pred.take() {
+            self.delta_eps = eps.mean_row_dist(&pred) as f64;
+        }
+        self.times.push(self.grid[self.i]);
+        self.eps.push(eps);
+    }
+
+    fn current(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn nfe(&self) -> usize {
+        self.nfe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::rng::Rng;
+    use crate::solvers::eps_model::{AnalyticGmm, CountingEps, NoisyEps};
+    use crate::solvers::sample_with;
+    use crate::solvers::schedule::{make_grid, GridKind};
+
+    fn gmm_reference() -> metrics::Moments {
+        metrics::Moments::new(vec![0.0, 0.0], vec![2.0225, 0.0, 0.0, 2.0225])
+    }
+
+    #[test]
+    fn select_indices_identity_exponent_is_uniform() {
+        // p = 1 leaves Eq. 16's uniform cover untouched.
+        let idx = select_indices(12, 4, 1.0);
+        assert_eq!(idx, vec![3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn select_indices_high_error_leans_early() {
+        // Larger exponent pushes all non-anchor indices toward 0.
+        let lo = select_indices(12, 4, 1.0);
+        let hi = select_indices(12, 4, 3.0);
+        assert_eq!(*hi.last().unwrap(), 12);
+        for (a, b) in hi.iter().zip(lo.iter()).take(3) {
+            assert!(a <= b, "{hi:?} vs {lo:?}");
+        }
+        assert!(hi[0] < lo[0]);
+    }
+
+    #[test]
+    fn select_indices_low_scale_leans_late() {
+        // Exponent < 1 warps toward the newest entries.
+        let lo = select_indices(12, 4, 0.3);
+        assert!(lo[0] >= 3, "{lo:?}");
+    }
+
+    #[test]
+    fn select_indices_always_valid() {
+        // Distinct, ascending, in range, anchored at i — across the whole
+        // operating envelope (also exercised by proptests at larger scale).
+        for i in 1..60 {
+            for k in 2..=6.min(i + 1) {
+                for &p in &[0.1, 0.5, 1.0, 2.0, 5.0, 20.0] {
+                    let idx = select_indices(i, k, p);
+                    assert_eq!(idx.len(), k);
+                    assert!(idx.windows(2).all(|w| w[0] < w[1]), "i={i} k={k} p={p}: {idx:?}");
+                    assert!(*idx.last().unwrap() == i);
+                    assert!(idx[0] <= i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_nfe_per_transition() {
+        let sched = VpSchedule::default();
+        let nfe = 10;
+        let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+        let mut rng = Rng::new(0);
+        let mut s = EraSolver::new(
+            sched,
+            grid,
+            rng.normal_tensor(8, 2),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+        );
+        let m = CountingEps::new(AnalyticGmm::gmm8(sched));
+        let _ = sample_with(&mut s, &m);
+        assert_eq!(s.nfe(), nfe);
+        assert_eq!(m.calls(), nfe);
+    }
+
+    #[test]
+    fn converges_with_exact_model() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 20, 1.0, 1e-3);
+        let mut rng = Rng::new(1);
+        let mut s = EraSolver::new(
+            sched,
+            grid,
+            rng.normal_tensor(500, 2),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+        );
+        let out = sample_with(&mut s, &AnalyticGmm::gmm8(sched));
+        assert!(out.all_finite());
+        let cov = metrics::mode_coverage(&out, &crate::data::gmm8_modes(), 0.5);
+        assert!(cov > 0.95, "mode coverage {cov}");
+    }
+
+    #[test]
+    fn beats_ddim_at_low_nfe_exact_model() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let reference = gmm_reference();
+        let nfe = 10;
+        let mut rng = Rng::new(2);
+        let x0 = rng.normal_tensor(2000, 2);
+        let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+
+        let mut era = EraSolver::new(
+            sched,
+            grid.clone(),
+            x0.clone(),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+        );
+        let fid_era = metrics::fid(&sample_with(&mut era, &model), &reference);
+        let mut dd = crate::solvers::ddim::Ddim::new(sched, grid, x0);
+        let fid_ddim = metrics::fid(&sample_with(&mut dd, &model), &reference);
+        assert!(fid_era < fid_ddim, "era {fid_era} vs ddim {fid_ddim}");
+    }
+
+    #[test]
+    fn ers_beats_fixed_under_error_high_order() {
+        // The paper's Tab. 4 contrast: with a noisy model and a
+        // high-order predictor (k=6), fixed selection destabilises
+        // (paper: FID 315 at NFE 20) while ERS stays usable.
+        let sched = VpSchedule::default();
+        let model = NoisyEps::new(AnalyticGmm::gmm8(sched), 1.5, 2.0, 5);
+        let reference = gmm_reference();
+        let run = |selection: Selection| {
+            let grid = make_grid(&sched, GridKind::Uniform, 15, 1.0, 1e-3);
+            let mut rng = Rng::new(3);
+            let mut s =
+                EraSolver::new(sched, grid, rng.normal_tensor(1500, 2), 6, selection);
+            metrics::fid(&sample_with(&mut s, &model), &reference)
+        };
+        let fid_ers = run(Selection::ErrorRobust { lambda: 5.0 });
+        let fid_fixed = run(Selection::FixedLast);
+        assert!(
+            fid_ers < fid_fixed / 3.0,
+            "ERS {fid_ers} should decisively beat fixed {fid_fixed} under error"
+        );
+    }
+
+    #[test]
+    fn trace_records_every_corrected_step() {
+        let sched = VpSchedule::default();
+        let nfe = 12;
+        let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+        let mut rng = Rng::new(4);
+        let mut s = EraSolver::new(
+            sched,
+            grid,
+            rng.normal_tensor(4, 2),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+        );
+        let _ = sample_with(&mut s, &AnalyticGmm::gmm8(sched));
+        // Corrected steps: transitions k-1 .. nfe-1.
+        assert_eq!(s.selection_trace().len(), nfe - (4 - 1));
+        for tr in s.selection_trace() {
+            assert!(tr.delta_eps >= 0.0);
+            assert_eq!(tr.indices.len(), 4);
+        }
+    }
+
+    #[test]
+    fn delta_eps_small_for_exact_model() {
+        // With a perfect model the predictor converges on the truth and
+        // the measured error stays small relative to a noisy model's.
+        let sched = VpSchedule::default();
+        let run = |noisy: bool| {
+            let grid = make_grid(&sched, GridKind::Uniform, 15, 1.0, 1e-3);
+            let mut rng = Rng::new(6);
+            let mut s = EraSolver::new(
+                sched,
+                grid,
+                rng.normal_tensor(64, 2),
+                4,
+                Selection::ErrorRobust { lambda: 5.0 },
+            );
+            let clean = AnalyticGmm::gmm8(sched);
+            if noisy {
+                let m = NoisyEps::new(AnalyticGmm::gmm8(sched), 0.8, 2.0, 8);
+                let _ = sample_with(&mut s, &m);
+            } else {
+                let _ = sample_with(&mut s, &clean);
+            }
+            let sum: f64 = s.selection_trace().iter().skip(1).map(|t| t.delta_eps).sum();
+            sum / (s.selection_trace().len() - 1) as f64
+        };
+        assert!(run(false) < run(true));
+    }
+
+    #[test]
+    fn constant_scale_matches_error_robust_shape() {
+        // ConstantScale is the Fig. 5/6 ablation: it must run end to end
+        // and produce finite samples for a range of scales.
+        let sched = VpSchedule::default();
+        for &scale in &[0.25, 0.5, 1.0, 2.0, 4.0] {
+            let grid = make_grid(&sched, GridKind::Uniform, 12, 1.0, 1e-3);
+            let mut rng = Rng::new(7);
+            let mut s = EraSolver::new(
+                sched,
+                grid,
+                rng.normal_tensor(32, 2),
+                3,
+                Selection::ConstantScale { scale },
+            );
+            let out = sample_with(&mut s, &AnalyticGmm::gmm8(sched));
+            assert!(out.all_finite(), "scale {scale}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn rejects_budget_below_order() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 3, 1.0, 1e-3);
+        let _ = EraSolver::new(
+            sched,
+            grid,
+            Tensor::zeros(1, 2),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+        );
+    }
+}

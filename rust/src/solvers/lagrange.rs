@@ -1,0 +1,124 @@
+//! Lagrange interpolation machinery (paper Eq. 13/14).
+//!
+//! The ERA predictor interpolates the buffered noise estimates
+//! `{(t_{tau_m}, eps_{tau_m})}` with the classic Lagrange basis
+//!
+//! ```text
+//!     l_m(t) = prod_{l != m} (t - t_{tau_l}) / (t_{tau_m} - t_{tau_l})
+//!
+//! ```
+//! and evaluates `L_eps(t) = sum_m l_m(t) eps_{tau_m}` at the next grid
+//! time. Weights are computed in f64 (nearby nodes at small t produce
+//! large alternating-sign weights; f32 accumulation visibly degrades the
+//! high-order ablations) and the tensor combination reuses the fused
+//! weighted-sum path shared with the `solver_combine` artifact.
+
+use crate::tensor::Tensor;
+
+/// Lagrange basis weights `l_m(t)` for the given nodes at evaluation
+/// point `t`. Panics if nodes are not pairwise distinct.
+pub fn weights(nodes: &[f64], t: f64) -> Vec<f64> {
+    assert!(!nodes.is_empty(), "lagrange::weights over no nodes");
+    let k = nodes.len();
+    let mut w = Vec::with_capacity(k);
+    for m in 0..k {
+        let mut lm = 1.0f64;
+        for l in 0..k {
+            if l == m {
+                continue;
+            }
+            let denom = nodes[m] - nodes[l];
+            assert!(
+                denom != 0.0,
+                "duplicate lagrange nodes at index {m}/{l}: t={}",
+                nodes[m]
+            );
+            lm *= (t - nodes[l]) / denom;
+        }
+        w.push(lm);
+    }
+    w
+}
+
+/// Evaluate the interpolant `L_eps(t)` over tensor-valued samples
+/// (Eq. 14). `values[m]` is the noise tensor observed at `nodes[m]`.
+pub fn interpolate(nodes: &[f64], values: &[&Tensor], t: f64) -> Tensor {
+    assert_eq!(nodes.len(), values.len(), "nodes/values length mismatch");
+    Tensor::weighted_sum(values, &weights(nodes, t))
+}
+
+/// Scalar interpolation (used by tests and the selection diagnostics).
+pub fn interpolate_scalar(nodes: &[f64], values: &[f64], t: f64) -> f64 {
+    assert_eq!(nodes.len(), values.len());
+    weights(nodes, t)
+        .iter()
+        .zip(values)
+        .map(|(&w, &v)| w * v)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        // Interpolating the constant function 1 must be exact, i.e. the
+        // basis is a partition of unity at every t.
+        let nodes = [0.9, 0.6, 0.35, 0.1];
+        for &t in &[0.05, 0.2, 0.5, 1.0, -0.3] {
+            let s: f64 = weights(&nodes, t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "t={t} sum={s}");
+        }
+    }
+
+    #[test]
+    fn weights_are_kronecker_at_nodes() {
+        let nodes = [1.0, 0.7, 0.4, 0.2];
+        for (m, &tm) in nodes.iter().enumerate() {
+            let w = weights(&nodes, tm);
+            for (l, &wl) in w.iter().enumerate() {
+                let want = if l == m { 1.0 } else { 0.0 };
+                assert!((wl - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_on_polynomials_up_to_degree() {
+        // k nodes reproduce polynomials of degree <= k-1 exactly.
+        let nodes = [0.95, 0.7, 0.45, 0.15];
+        let poly = |t: f64| 2.0 - 3.0 * t + 0.5 * t * t - 4.0 * t * t * t;
+        let vals: Vec<f64> = nodes.iter().map(|&n| poly(n)).collect();
+        for &t in &[0.05, 0.3, 0.6, 1.2] {
+            let got = interpolate_scalar(&nodes, &vals, t);
+            assert!((got - poly(t)).abs() < 1e-9, "t={t}: {got} vs {}", poly(t));
+        }
+    }
+
+    #[test]
+    fn tensor_interpolation_matches_scalar_per_element() {
+        let nodes = [0.8, 0.5, 0.2];
+        let a = Tensor::from_vec(vec![1.0, 2.0], 1, 2);
+        let b = Tensor::from_vec(vec![0.0, -1.0], 1, 2);
+        let c = Tensor::from_vec(vec![3.0, 0.5], 1, 2);
+        let out = interpolate(&nodes, &[&a, &b, &c], 0.1);
+        for j in 0..2 {
+            let vals = [a.as_slice()[j] as f64, b.as_slice()[j] as f64, c.as_slice()[j] as f64];
+            let want = interpolate_scalar(&nodes, &vals, 0.1);
+            assert!((out.as_slice()[j] as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_node_is_constant() {
+        let w = weights(&[0.4], 0.05);
+        assert_eq!(w, vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_nodes_panic() {
+        let _ = weights(&[0.5, 0.5], 0.1);
+    }
+}

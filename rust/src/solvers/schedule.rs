@@ -1,0 +1,279 @@
+//! VP noise schedule + timestep grids (Rust mirror of python/compile/diffusion.py).
+//!
+//! The continuous-time variance-preserving schedule of Song et al. 2020b:
+//!
+//! ```text
+//!     beta(t)      = beta_min + t (beta_max - beta_min)
+//!     alpha_bar(t) = exp(-0.5 t^2 (beta_max - beta_min) - t beta_min)
+//!
+//! ```
+//! `lambda(t) = log(alpha/sigma)` (half-logSNR) drives both the logSNR
+//! timestep grid (used by DPM-Solver and by the paper on CIFAR-10) and the
+//! DPM-Solver exponential-integrator steps. The artifact manifest carries
+//! probe values from the Python side; integration tests assert this mirror
+//! matches them to float precision.
+
+/// Continuous-time VP schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct VpSchedule {
+    pub beta_min: f64,
+    pub beta_max: f64,
+}
+
+impl Default for VpSchedule {
+    fn default() -> Self {
+        VpSchedule { beta_min: 0.1, beta_max: 20.0 }
+    }
+}
+
+impl VpSchedule {
+    pub fn new(beta_min: f64, beta_max: f64) -> Self {
+        assert!(beta_max > beta_min && beta_min > 0.0);
+        VpSchedule { beta_min, beta_max }
+    }
+
+    /// log sqrt(alpha_bar(t)) — the "log alpha" of the DPM-Solver papers.
+    #[inline]
+    pub fn log_alpha(&self, t: f64) -> f64 {
+        -0.25 * t * t * (self.beta_max - self.beta_min) - 0.5 * t * self.beta_min
+    }
+
+    /// alpha_bar(t) in (0, 1].
+    #[inline]
+    pub fn alpha_bar(&self, t: f64) -> f64 {
+        (2.0 * self.log_alpha(t)).exp()
+    }
+
+    /// sqrt(alpha_bar(t)).
+    #[inline]
+    pub fn sqrt_alpha_bar(&self, t: f64) -> f64 {
+        self.log_alpha(t).exp()
+    }
+
+    /// sigma(t) = sqrt(1 - alpha_bar(t)).
+    #[inline]
+    pub fn sigma(&self, t: f64) -> f64 {
+        (1.0 - self.alpha_bar(t)).max(0.0).sqrt()
+    }
+
+    /// Half-logSNR lambda(t) = log(alpha(t) / sigma(t)), monotone decreasing.
+    #[inline]
+    pub fn lambda(&self, t: f64) -> f64 {
+        let log_ab = 2.0 * self.log_alpha(t);
+        // log(alpha/sigma) = 0.5*(log ab - log(1-ab)); ln_1p for stability.
+        0.5 * (log_ab - (-(log_ab).exp_m1()).ln())
+    }
+
+    /// Inverse of `lambda` by bisection on [t_lo, t_hi]. lambda is strictly
+    /// decreasing, so this is well-posed; 80 iterations gives ~1e-24
+    /// interval width, far below f64 noise.
+    pub fn t_of_lambda(&self, lam: f64) -> f64 {
+        let (mut lo, mut hi) = (1e-9, 1.0);
+        // Clamp outside the representable range.
+        if lam >= self.lambda(lo) {
+            return lo;
+        }
+        if lam <= self.lambda(hi) {
+            return hi;
+        }
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.lambda(mid) > lam {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// DDIM transition coefficients (Eq. 8): `x' = a x + b eps`.
+    #[inline]
+    pub fn ddim_coeffs(&self, t_cur: f64, t_next: f64) -> (f64, f64) {
+        let a = self.sqrt_alpha_bar(t_next) / self.sqrt_alpha_bar(t_cur);
+        let b = self.sigma(t_next) - a * self.sigma(t_cur);
+        (a, b)
+    }
+}
+
+/// Timestep grid flavours from the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// Uniform in t (paper's LSUN setting).
+    Uniform,
+    /// Quadratic spacing, denser near t_end.
+    Quadratic,
+    /// Uniform in logSNR (paper's CIFAR-10 setting, after DPM-Solver).
+    LogSnr,
+}
+
+impl GridKind {
+    pub fn parse(s: &str) -> Option<GridKind> {
+        match s {
+            "uniform" => Some(GridKind::Uniform),
+            "quadratic" => Some(GridKind::Quadratic),
+            "logsnr" => Some(GridKind::LogSnr),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridKind::Uniform => "uniform",
+            GridKind::Quadratic => "quadratic",
+            GridKind::LogSnr => "logsnr",
+        }
+    }
+}
+
+/// Build the decreasing timestep sequence {t_i}_{i=0}^{N}: t_0 = t_start
+/// (max noise), t_N = t_end (the paper's 1e-3 / 1e-4). `n_steps = N` is
+/// the number of solver transitions (== NFE for 1-eval/step solvers).
+pub fn make_grid(
+    sched: &VpSchedule,
+    kind: GridKind,
+    n_steps: usize,
+    t_start: f64,
+    t_end: f64,
+) -> Vec<f64> {
+    assert!(n_steps >= 1, "need at least one step");
+    assert!(t_start > t_end && t_end > 0.0, "grid must decrease to t_end > 0");
+    let n = n_steps;
+    let mut ts = Vec::with_capacity(n + 1);
+    match kind {
+        GridKind::Uniform => {
+            for i in 0..=n {
+                let f = i as f64 / n as f64;
+                ts.push(t_start + (t_end - t_start) * f);
+            }
+        }
+        GridKind::Quadratic => {
+            let (rs, re) = (t_start.sqrt(), t_end.sqrt());
+            for i in 0..=n {
+                let f = i as f64 / n as f64;
+                let r = rs + (re - rs) * f;
+                ts.push(r * r);
+            }
+        }
+        GridKind::LogSnr => {
+            let (ls, le) = (sched.lambda(t_start), sched.lambda(t_end));
+            for i in 0..=n {
+                let f = i as f64 / n as f64;
+                ts.push(sched.t_of_lambda(ls + (le - ls) * f));
+            }
+        }
+    }
+    // Pin endpoints exactly regardless of inversion round-off.
+    ts[0] = t_start;
+    ts[n] = t_end;
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_bar_bounds_and_endpoints() {
+        let s = VpSchedule::default();
+        assert!((s.alpha_bar(1e-6) - 1.0).abs() < 1e-4);
+        assert!(s.alpha_bar(1.0) < 1e-4);
+        for i in 1..100 {
+            let t = i as f64 / 100.0;
+            let ab = s.alpha_bar(t);
+            assert!(ab > 0.0 && ab < 1.0);
+        }
+    }
+
+    #[test]
+    fn alpha_bar_monotone_decreasing() {
+        let s = VpSchedule::default();
+        let mut prev = s.alpha_bar(1e-5);
+        for i in 1..=1000 {
+            let ab = s.alpha_bar(i as f64 / 1000.0);
+            assert!(ab < prev);
+            prev = ab;
+        }
+    }
+
+    #[test]
+    fn matches_python_closed_form() {
+        // Values computed from the python VpSchedule (test_diffusion.py's
+        // quadrature check pins the same closed form).
+        let s = VpSchedule::default();
+        let t: f64 = 0.37;
+        let expect = (-0.5 * t * t * (20.0 - 0.1) - t * 0.1f64).exp();
+        assert!((s.alpha_bar(0.37) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_monotone_and_inverts() {
+        let s = VpSchedule::default();
+        let mut prev = f64::INFINITY;
+        for i in 1..=50 {
+            let t = i as f64 / 50.0;
+            let lam = s.lambda(t);
+            assert!(lam < prev, "lambda must decrease");
+            prev = lam;
+            let t_back = s.t_of_lambda(lam);
+            assert!((t_back - t).abs() < 1e-9, "t={t} back={t_back}");
+        }
+    }
+
+    #[test]
+    fn lambda_clamps_out_of_range() {
+        let s = VpSchedule::default();
+        assert!(s.t_of_lambda(1e9) <= 1e-8);
+        assert!((s.t_of_lambda(-1e9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ddim_coeffs_identity_when_static() {
+        let s = VpSchedule::default();
+        let (a, b) = s.ddim_coeffs(0.5, 0.5);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!(b.abs() < 1e-12);
+    }
+
+    #[test]
+    fn grids_shape_and_endpoints() {
+        let s = VpSchedule::default();
+        for kind in [GridKind::Uniform, GridKind::Quadratic, GridKind::LogSnr] {
+            let ts = make_grid(&s, kind, 10, 1.0, 1e-3);
+            assert_eq!(ts.len(), 11);
+            assert_eq!(ts[0], 1.0);
+            assert_eq!(ts[10], 1e-3);
+            for w in ts.windows(2) {
+                assert!(w[1] < w[0], "{kind:?} grid must strictly decrease");
+            }
+        }
+    }
+
+    #[test]
+    fn logsnr_grid_uniform_in_lambda() {
+        let s = VpSchedule::default();
+        let ts = make_grid(&s, GridKind::LogSnr, 8, 1.0, 1e-3);
+        let lams: Vec<f64> = ts.iter().map(|&t| s.lambda(t)).collect();
+        let step = lams[1] - lams[0];
+        for w in lams.windows(2) {
+            assert!(((w[1] - w[0]) - step).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quadratic_denser_near_end() {
+        let s = VpSchedule::default();
+        let ts = make_grid(&s, GridKind::Quadratic, 10, 1.0, 1e-3);
+        let first = ts[0] - ts[1];
+        let last = ts[9] - ts[10];
+        assert!(last < first);
+    }
+
+    #[test]
+    fn grid_kind_parse_roundtrip() {
+        for k in [GridKind::Uniform, GridKind::Quadratic, GridKind::LogSnr] {
+            assert_eq!(GridKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(GridKind::parse("nope"), None);
+    }
+}

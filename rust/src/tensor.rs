@@ -1,0 +1,350 @@
+//! Minimal dense 2-D f32 tensor used throughout the sampling hot path.
+//!
+//! The solver state is a batch of samples `(rows = batch, cols = data dim)`
+//! stored row-major. The offline registry ships no ndarray, and the ops the
+//! solvers need are few: affine combinations, norms, and buffer stacking —
+//! all written as straight loops the compiler auto-vectorises.
+
+use std::fmt;
+
+/// Dense row-major `rows x cols` f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor[{}x{}]", self.rows, self.cols)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a flat row-major buffer. Panics on length mismatch.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "tensor shape/data mismatch");
+        Tensor { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// `self = a * self + b * other`, elementwise (the DDIM transition).
+    pub fn affine_inplace(&mut self, a: f32, b: f32, other: &Tensor) {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        for (x, &e) in self.data.iter_mut().zip(other.data.iter()) {
+            *x = a * *x + b * e;
+        }
+    }
+
+    /// `out = a * self + b * other` (allocating variant).
+    pub fn affine(&self, a: f32, b: f32, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.affine_inplace(a, b, other);
+        out
+    }
+
+    /// `self += s * other`.
+    pub fn axpy(&mut self, s: f32, other: &Tensor) {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        for (x, &e) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += s * e;
+        }
+    }
+
+    /// `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Weighted sum `sum_k w[k] * ts[k]` of equally-shaped tensors.
+    ///
+    /// This is the Rust-native mirror of the `solver_combine` Pallas
+    /// kernel's inner reduction; `kernel_weighted_sum` below is the
+    /// cache-friendlier fused form the hot path uses.
+    pub fn weighted_sum(ts: &[&Tensor], w: &[f64]) -> Tensor {
+        assert_eq!(ts.len(), w.len(), "weights/tensors length mismatch");
+        assert!(!ts.is_empty(), "weighted_sum of nothing");
+        let mut out = Tensor::zeros(ts[0].rows, ts[0].cols);
+        for (t, &wi) in ts.iter().zip(w.iter()) {
+            out.axpy(wi as f32, t);
+        }
+        out
+    }
+
+    /// Fused `a * x + b * (sum_k w[k] * eps[k])` with a single pass over
+    /// the output — the in-process twin of the `solver_combine` artifact.
+    pub fn kernel_weighted_sum(x: &Tensor, a: f32, b: f32, eps: &[&Tensor], w: &[f32]) -> Tensor {
+        assert_eq!(eps.len(), w.len());
+        // Iterator zips, not indexed loops: bounds checks defeat
+        // auto-vectorisation here (measured 4x in bench_micro before the
+        // §Perf pass — see EXPERIMENTS.md).
+        let mut out: Vec<f32> = match eps.len() {
+            0 => x.data.iter().map(|&xv| a * xv).collect(),
+            _ => {
+                let bw0 = b * w[0];
+                x.data
+                    .iter()
+                    .zip(eps[0].data.iter())
+                    .map(|(&xv, &ev)| a * xv + bw0 * ev)
+                    .collect()
+            }
+        };
+        for (ek, &wk) in eps.iter().zip(w.iter()).skip(1) {
+            let bwk = b * wk;
+            debug_assert_eq!(ek.data.len(), out.len());
+            for (o, &ev) in out.iter_mut().zip(ek.data.iter()) {
+                *o += bwk * ev;
+            }
+        }
+        Tensor::from_vec(out, x.rows, x.cols)
+    }
+
+    /// Mean per-row L2 norm: `mean_r ||self[r]||_2` (Eq. 15's batch form).
+    pub fn mean_row_norm(&self) -> f32 {
+        if self.rows == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            let s: f64 = self.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            acc += s.sqrt();
+        }
+        (acc / self.rows as f64) as f32
+    }
+
+    /// Mean per-row L2 distance to `other`.
+    pub fn mean_row_dist(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        if self.rows == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            let s: f64 = self
+                .row(r)
+                .iter()
+                .zip(other.row(r))
+                .map(|(&a, &b)| {
+                    let d = (a - b) as f64;
+                    d * d
+                })
+                .sum();
+            acc += s.sqrt();
+        }
+        (acc / self.rows as f64) as f32
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f32 {
+        let s: f64 = self.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        s.sqrt() as f32
+    }
+
+    /// Column means (length `cols`), in f64 for metric stability.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0f64; self.cols];
+        for r in 0..self.rows {
+            for (mc, &v) in m.iter_mut().zip(self.row(r)) {
+                *mc += v as f64;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        m.iter_mut().for_each(|v| *v /= n);
+        m
+    }
+
+    /// Sample covariance (cols x cols, row-major, f64, denominator n-1).
+    pub fn covariance(&self) -> Vec<f64> {
+        let d = self.cols;
+        let mu = self.col_means();
+        let mut cov = vec![0.0f64; d * d];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..d {
+                let di = row[i] as f64 - mu[i];
+                for j in i..d {
+                    cov[i * d + j] += di * (row[j] as f64 - mu[j]);
+                }
+            }
+        }
+        let n = (self.rows.max(2) - 1) as f64;
+        for i in 0..d {
+            for j in i..d {
+                cov[i * d + j] /= n;
+                cov[j * d + i] = cov[i * d + j];
+            }
+        }
+        cov
+    }
+
+    /// Vertically stack rows of `parts` into one tensor.
+    pub fn vstack(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::from_vec(data, rows, cols)
+    }
+
+    /// Copy of rows `[start, start+n)`.
+    pub fn slice_rows(&self, start: usize, n: usize) -> Tensor {
+        assert!(start + n <= self.rows, "slice_rows out of range");
+        let data = self.data[start * self.cols..(start + n) * self.cols].to_vec();
+        Tensor::from_vec(data, n, self.cols)
+    }
+
+    /// True if every element is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32], r: usize, c: usize) -> Tensor {
+        Tensor::from_vec(v.to_vec(), r, c)
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let z = Tensor::zeros(3, 2);
+        assert_eq!((z.rows(), z.cols(), z.len()), (3, 2, 6));
+        assert!(z.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_checks_len() {
+        let _ = Tensor::from_vec(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn affine_matches_manual() {
+        let mut x = t(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        let e = t(&[1.0, 1.0, 1.0, 1.0], 2, 2);
+        x.affine_inplace(2.0, -1.0, &e);
+        assert_eq!(x.as_slice(), &[1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn weighted_sum_two() {
+        let a = t(&[1.0, 0.0], 1, 2);
+        let b = t(&[0.0, 2.0], 1, 2);
+        let s = Tensor::weighted_sum(&[&a, &b], &[3.0, 0.5]);
+        assert_eq!(s.as_slice(), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn kernel_weighted_sum_matches_unfused() {
+        let x = t(&[1.0, -2.0, 0.5, 4.0], 2, 2);
+        let e1 = t(&[0.1, 0.2, 0.3, 0.4], 2, 2);
+        let e2 = t(&[-1.0, 1.0, -1.0, 1.0], 2, 2);
+        let fused = Tensor::kernel_weighted_sum(&x, 0.9, 0.3, &[&e1, &e2], &[2.0, -0.5]);
+        let mut want = Tensor::weighted_sum(&[&e1, &e2], &[2.0, -0.5]);
+        want.scale(0.3);
+        want.axpy(0.9, &x);
+        for (a, b) in fused.as_slice().iter().zip(want.as_slice()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernel_weighted_sum_empty_buffers() {
+        let x = t(&[2.0, 4.0], 1, 2);
+        let out = Tensor::kernel_weighted_sum(&x, 0.5, 1.0, &[], &[]);
+        assert_eq!(out.as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_row_norm_known() {
+        let x = t(&[3.0, 4.0, 0.0, 0.0], 2, 2);
+        assert!((x.mean_row_norm() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_row_dist_zero_for_self() {
+        let x = t(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(x.mean_row_dist(&x), 0.0);
+    }
+
+    #[test]
+    fn col_means_and_cov() {
+        // Two points (0,0) and (2,2): mean (1,1), cov [[2,2],[2,2]].
+        let x = t(&[0.0, 0.0, 2.0, 2.0], 2, 2);
+        assert_eq!(x.col_means(), vec![1.0, 1.0]);
+        let cov = x.covariance();
+        assert_eq!(cov, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn vstack_and_slice_roundtrip() {
+        let a = t(&[1.0, 2.0], 1, 2);
+        let b = t(&[3.0, 4.0, 5.0, 6.0], 2, 2);
+        let s = Tensor::vstack(&[&a, &b]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.slice_rows(1, 2).as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn all_finite_detects_nan() {
+        let mut x = Tensor::zeros(1, 2);
+        assert!(x.all_finite());
+        x.as_mut_slice()[1] = f32::NAN;
+        assert!(!x.all_finite());
+    }
+}

@@ -1,0 +1,196 @@
+//! Integration tests over the PJRT runtime + real AOT artifacts.
+//!
+//! These need `make artifacts` to have run; every test skips (returns
+//! early) when `artifacts/manifest.json` is absent so `cargo test` still
+//! passes on a fresh checkout.
+
+use era_solver::metrics;
+use era_solver::rng::Rng;
+use era_solver::runtime::{Manifest, PjRtEngine, PjRtEps, TrainReport};
+use era_solver::solvers::era::Selection;
+use era_solver::solvers::eps_model::EpsModel;
+use era_solver::solvers::schedule::{make_grid, GridKind};
+use era_solver::solvers::{sample_with, SolverKind};
+use era_solver::tensor::Tensor;
+
+fn engine() -> Option<std::sync::Arc<PjRtEngine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return None;
+    }
+    Some(std::sync::Arc::new(PjRtEngine::new("artifacts").expect("engine")))
+}
+
+#[test]
+fn manifest_matches_rust_schedule_mirror() {
+    let Some(eng) = engine() else { return };
+    assert!(eng.manifest().schedule_probe_error() < 1e-5);
+    // log_snr probe too: lambda(t) is half-logSNR, probe stores full.
+    let m = eng.manifest();
+    // Tolerance is loose at the t->0 end: the python probe computes
+    // 1 - alpha_bar in f32 where alpha_bar ~ 1 - 5e-6 (catastrophic
+    // cancellation costs ~1e-2 relative there); the rust mirror is f64.
+    for (&t, &ls) in m.probe.t.iter().zip(&m.probe.log_snr) {
+        let mine = 2.0 * m.schedule.lambda(t);
+        assert!((mine - ls).abs() < 5e-3, "t={t}: {mine} vs {ls}");
+    }
+}
+
+#[test]
+fn eps_artifact_executes_all_buckets() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(0);
+    for &bucket in &eng.manifest().batch_buckets.clone() {
+        let x = rng.normal_tensor(bucket, 2);
+        let t = vec![0.5f32; bucket];
+        let out = eng.eval_eps("gmm8", &x, &t).expect("eval");
+        assert_eq!((out.rows(), out.cols()), (bucket, 2));
+        assert!(out.all_finite());
+    }
+}
+
+#[test]
+fn eps_padding_is_transparent() {
+    // A 5-row batch must produce the same leading rows as the padded
+    // 16-row bucket evaluated directly.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let x16 = rng.normal_tensor(16, 2);
+    let t16 = vec![0.3f32; 16];
+    let full = eng.eval_eps("gmm8", &x16, &t16).unwrap();
+
+    let x5 = x16.slice_rows(0, 5);
+    let out5 = eng.eval_eps("gmm8", &x5, &t16[..5]).unwrap();
+    assert_eq!(out5.rows(), 5);
+    for r in 0..5 {
+        for c in 0..2 {
+            let a = out5.row(r)[c];
+            let b = full.row(r)[c];
+            assert!((a - b).abs() < 1e-5, "row {r} col {c}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn oversize_batch_splits() {
+    let Some(eng) = engine() else { return };
+    let top = *eng.manifest().batch_buckets.last().unwrap();
+    let mut rng = Rng::new(2);
+    let x = rng.normal_tensor(top + 7, 2);
+    let t = vec![0.4f32; top + 7];
+    let out = eng.eval_eps("gmm8", &x, &t).unwrap();
+    assert_eq!(out.rows(), top + 7);
+    assert!(out.all_finite());
+}
+
+#[test]
+fn combine_artifact_matches_native_twin() {
+    // The Pallas solver_combine artifact and Tensor::kernel_weighted_sum
+    // are the same computation; pin them to each other through PJRT.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let x = rng.normal_tensor(16, 2);
+    let e1 = rng.normal_tensor(16, 2);
+    let e2 = rng.normal_tensor(16, 2);
+    let e3 = rng.normal_tensor(16, 2);
+    let w = [0.8, -0.3, 0.5];
+    let ab = (0.97, -0.12);
+
+    let via_pjrt = eng.combine("gmm8", &[&e1, &e2, &e3], &w, &x, ab).unwrap();
+    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+    let native =
+        Tensor::kernel_weighted_sum(&x, ab.0 as f32, ab.1 as f32, &[&e1, &e2, &e3], &w32);
+    assert_eq!(via_pjrt.rows(), 16);
+    for (a, b) in via_pjrt.as_slice().iter().zip(native.as_slice()) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn trained_denoiser_is_gaussian_limit_at_t1() {
+    // At t=1 the marginal is ~N(0, I) and the trained eps should roughly
+    // reproduce the input (the identity on noise) — a loose sanity band.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let x = rng.normal_tensor(64, 2);
+    let t = vec![1.0f32; 64];
+    let eps = eng.eval_eps("gmm8", &x, &t).unwrap();
+    let rel = eps.mean_row_dist(&x) / x.mean_row_norm();
+    assert!(rel < 0.5, "relative eps-vs-x deviation at t=1: {rel}");
+}
+
+#[test]
+fn era_solver_samples_through_pjrt() {
+    // Full L3->PJRT->L2/L1 path: ERA-Solver at NFE 10 on the trained
+    // gmm8 denoiser must land near the reference moments.
+    let Some(eng) = engine() else { return };
+    let model = PjRtEps::new(&eng, "gmm8").unwrap();
+    let sched = eng.manifest().schedule;
+    let grid = make_grid(&sched, GridKind::LogSnr, 10, 1.0, 1e-3);
+    let mut rng = Rng::new(5);
+    let kind = SolverKind::Era { k: 4, selection: Selection::ErrorRobust { lambda: 15.0 } };
+    let mut solver = kind.build(sched, grid, rng.normal_tensor(256, 2), 5, 10);
+    let out = sample_with(&mut *solver, &model);
+    assert!(out.all_finite());
+    assert_eq!(model.eval_count(), 10);
+
+    let entry = eng.dataset("gmm8").unwrap();
+    let fid = metrics::fid(&out, &entry.ref_stats);
+    assert!(fid < 1.0, "PJRT-backed ERA FID {fid} too high");
+}
+
+#[test]
+fn executable_cache_compiles_once_per_bucket() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(6);
+    let x = rng.normal_tensor(16, 2);
+    let t = vec![0.5f32; 16];
+    let _ = eng.eval_eps("gmm8", &x, &t).unwrap();
+    let after_first = eng.compile_count();
+    for _ in 0..3 {
+        let _ = eng.eval_eps("gmm8", &x, &t).unwrap();
+    }
+    assert_eq!(eng.compile_count(), after_first, "recompiled a cached bucket");
+}
+
+#[test]
+fn warmup_precompiles() {
+    let Some(eng) = engine() else { return };
+    eng.warmup("gmm8", &[1, 16]).unwrap();
+    assert!(eng.compile_count() >= 2);
+}
+
+#[test]
+fn train_report_error_curve_grows_toward_zero_t() {
+    // The paper's Fig. 1 premise, measured on our actual trained model:
+    // noise-estimation error increases as t -> 0.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    for name in m.datasets.keys() {
+        let rep = TrainReport::load("artifacts", name).unwrap();
+        assert!(rep.error_curve.len() >= 8, "{name}: curve too short");
+        let n = rep.error_curve.len();
+        let lo_t: f64 = rep.error_curve[..n / 4].iter().map(|p| p.1).sum::<f64>() / (n / 4) as f64;
+        let hi_t: f64 =
+            rep.error_curve[3 * n / 4..].iter().map(|p| p.1).sum::<f64>() / (n - 3 * n / 4) as f64;
+        assert!(
+            lo_t > hi_t,
+            "{name}: error at small t ({lo_t}) should exceed error at large t ({hi_t})"
+        );
+    }
+}
+
+#[test]
+fn all_datasets_eval() {
+    let Some(eng) = engine() else { return };
+    let names: Vec<String> = eng.manifest().datasets.keys().cloned().collect();
+    let mut rng = Rng::new(7);
+    for name in names {
+        let dim = eng.dataset(&name).unwrap().dim;
+        let x = rng.normal_tensor(4, dim);
+        let out = eng.eval_eps(&name, &x, &[0.7; 4]).unwrap();
+        assert_eq!((out.rows(), out.cols()), (4, dim), "{name}");
+        assert!(out.all_finite(), "{name}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration tests over the TCP serving path: real sockets, real
+//! threads, the mock model bank (no artifacts needed so these always
+//! run), plus one full-stack PJRT test when artifacts exist.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use era_solver::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec,
+};
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::metrics;
+use era_solver::server::client::{generate_load, Client};
+use era_solver::server::{Server, ServerConfig};
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+
+fn mock_stack(config: CoordinatorConfig) -> (Server, Arc<Coordinator>) {
+    let sched = VpSchedule::default();
+    let bank: Arc<dyn ModelBank> =
+        Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
+    let coord = Arc::new(Coordinator::start(bank, config));
+    let server = Server::start(coord.clone(), ServerConfig::default()).expect("bind");
+    (server, coord)
+}
+
+fn spec(n: usize, seed: u64) -> RequestSpec {
+    RequestSpec { n_samples: n, seed, ..Default::default() }
+}
+
+#[test]
+fn ping_and_stats_roundtrip() {
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.ping().unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("finished").as_usize(), Some(0));
+    server.shutdown();
+}
+
+#[test]
+fn sample_over_the_wire_is_on_manifold() {
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let (samples, secs) = c.sample(&spec(300, 4)).unwrap();
+    assert_eq!((samples.rows(), samples.cols()), (300, 2));
+    assert!(secs >= 0.0);
+    let cov = metrics::mode_coverage(&samples, &era_solver::data::gmm8_modes(), 0.5);
+    assert!(cov > 0.9, "coverage {cov}");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_lines_get_error_responses() {
+    use std::io::{BufRead, BufReader, Write};
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    let stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for bad in ["not json", "{\"op\":\"nope\"}", "{\"op\":\"sample\",\"solver\":\"wat\"}"] {
+        writeln!(writer, "{bad}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = era_solver::json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false), "line: {bad}");
+        assert!(j.get("error").as_str().is_some());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let cfg = CoordinatorConfig {
+        max_active: 16,
+        queue_capacity: 64,
+        policy: BatchPolicy {
+            max_rows: 256,
+            min_rows: 32,
+            max_wait: Duration::from_millis(5),
+        },
+    };
+    let (server, coord) = mock_stack(cfg);
+    let report = generate_load(server.local_addr(), &spec(32, 0), 6, 4);
+    assert_eq!(report.errors, 0, "all requests should succeed");
+    assert_eq!(report.requests, 24);
+    assert!(report.throughput_rows > 0.0);
+    // Cross-request fusion must have happened under this load.
+    assert!(
+        coord.telemetry().mean_batch_occupancy() > 32.0,
+        "occupancy {}",
+        coord.telemetry().mean_batch_occupancy()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn per_request_solver_and_nfe_respected() {
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for (solver, nfe) in [("ddim", 8), ("era-3@5", 12), ("dpm-fast", 9)] {
+        let mut s = spec(16, 2);
+        s.solver = solver.into();
+        s.nfe = nfe;
+        let (samples, _) = c.sample(&s).unwrap();
+        assert_eq!(samples.rows(), 16, "{solver}");
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("finished").as_usize(), Some(3));
+    server.shutdown();
+}
+
+#[test]
+fn invalid_request_over_wire_errors_cleanly() {
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut s = spec(8, 0);
+    s.dataset = "missing".into();
+    assert!(c.sample(&s).is_err());
+    // Connection still usable afterwards.
+    c.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn server_survives_client_disconnect_mid_session() {
+    let (server, _coord) = mock_stack(CoordinatorConfig::default());
+    {
+        let mut c = Client::connect(server.local_addr()).unwrap();
+        c.ping().unwrap();
+        // drop without closing politely
+    }
+    let mut c2 = Client::connect(server.local_addr()).unwrap();
+    let (samples, _) = c2.sample(&spec(8, 1)).unwrap();
+    assert_eq!(samples.rows(), 8);
+    server.shutdown();
+}
+
+#[test]
+fn full_stack_pjrt_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let engine = Arc::new(era_solver::runtime::PjRtEngine::new("artifacts").unwrap());
+    let entry = engine.dataset("gmm8").unwrap().clone();
+    let coord = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let server = Server::start(coord.clone(), ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut s = spec(256, 3);
+    s.grid = "logsnr".into();
+    let (samples, _) = c.sample(&s).unwrap();
+    let fid = metrics::fid(&samples, &entry.ref_stats);
+    assert!(fid < 1.0, "PJRT-served FID {fid}");
+    server.shutdown();
+}

@@ -1,0 +1,321 @@
+//! Property-based tests (hand-rolled generators over the [`Rng`]
+//! substrate; the offline registry ships no proptest). Each property
+//! runs a few hundred randomized cases with the failing seed printed so
+//! a reproduction is one `Rng::new(seed)` away.
+
+use era_solver::coordinator::batcher::{Batcher, BatchPolicy};
+use era_solver::json::{self, Json};
+use era_solver::linalg;
+use era_solver::metrics::{self, Moments};
+use era_solver::rng::Rng;
+use era_solver::solvers::era::select_indices;
+use era_solver::solvers::lagrange;
+use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use era_solver::solvers::EvalRequest;
+use era_solver::tensor::Tensor;
+
+const CASES: usize = 300;
+
+#[test]
+fn prop_lagrange_partition_of_unity() {
+    // Interpolating a constant is exact for any distinct node set.
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let k = 2 + (rng.below(5) as usize);
+        let mut nodes: Vec<f64> = (0..k).map(|_| rng.uniform_in(1e-3, 1.0)).collect();
+        nodes.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        nodes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        if nodes.len() < 2 {
+            continue;
+        }
+        let t = rng.uniform_in(-0.5, 1.5);
+        let s: f64 = lagrange::weights(&nodes, t).iter().sum();
+        assert!((s - 1.0).abs() < 1e-6, "case {case}: sum {s} nodes {nodes:?} t {t}");
+    }
+}
+
+#[test]
+fn prop_lagrange_exact_on_random_polynomials() {
+    let mut rng = Rng::new(0xB0B);
+    for case in 0..CASES {
+        let k = 2 + (rng.below(4) as usize);
+        // Well-separated nodes to keep the Vandermonde conditioned.
+        let mut nodes = Vec::with_capacity(k);
+        let mut t = rng.uniform_in(0.6, 1.0);
+        for _ in 0..k {
+            nodes.push(t);
+            t -= rng.uniform_in(0.08, 0.25);
+        }
+        let coeffs: Vec<f64> = (0..k).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let poly = |x: f64| coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c);
+        let vals: Vec<f64> = nodes.iter().map(|&n| poly(n)).collect();
+        let probe = rng.uniform_in(-0.2, 1.2);
+        let got = lagrange::interpolate_scalar(&nodes, &vals, probe);
+        let want = poly(probe);
+        assert!(
+            (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+            "case {case}: {got} vs {want} (k={k})"
+        );
+    }
+}
+
+#[test]
+fn prop_select_indices_invariants() {
+    // Ascending, distinct, in range, anchored at the newest entry, for
+    // random buffer lengths, orders and exponents (incl. extremes).
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..CASES * 3 {
+        let i = 1 + (rng.below(200) as usize);
+        let k = 2 + (rng.below(7) as usize);
+        if k > i + 1 {
+            continue;
+        }
+        let p = match rng.below(4) {
+            0 => rng.uniform_in(1e-3, 1.0),
+            1 => rng.uniform_in(1.0, 5.0),
+            2 => rng.uniform_in(5.0, 100.0),
+            _ => rng.uniform_in(0.0, 1e-3),
+        };
+        let idx = select_indices(i, k, p);
+        assert_eq!(idx.len(), k, "case {case}: i={i} k={k} p={p}");
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "case {case}: not ascending {idx:?}");
+        assert_eq!(*idx.last().unwrap(), i, "case {case}: anchor missing {idx:?}");
+    }
+}
+
+#[test]
+fn prop_select_indices_monotone_in_exponent() {
+    // Higher measured error (bigger exponent) never selects a *later*
+    // earliest-base than lower error: the selection leans earlier.
+    let mut rng = Rng::new(0xD1CE);
+    for case in 0..CASES {
+        let i = 6 + (rng.below(100) as usize);
+        let k = 3 + (rng.below(3) as usize);
+        let p_lo = rng.uniform_in(0.2, 2.0);
+        let p_hi = p_lo + rng.uniform_in(0.1, 5.0);
+        let lo = select_indices(i, k, p_lo);
+        let hi = select_indices(i, k, p_hi);
+        assert!(
+            hi[0] <= lo[0],
+            "case {case}: i={i} k={k} p {p_lo}->{p_hi}: {lo:?} -> {hi:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_and_routes_rows() {
+    // Random request mixes: every row comes back to its source exactly
+    // once, in order, with the identity model.
+    let mut rng = Rng::new(0xBA7C);
+    for case in 0..CASES {
+        let n_req = 1 + (rng.below(8) as usize);
+        let dim = 1 + (rng.below(4) as usize);
+        let max_rows = 1 + (rng.below(64) as usize);
+        let reqs: Vec<EvalRequest> = (0..n_req)
+            .map(|_| {
+                let rows = 1 + (rng.below(80) as usize);
+                EvalRequest { x: rng.normal_tensor(rows, dim), t: rng.uniform_in(1e-3, 1.0) }
+            })
+            .collect();
+        let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
+        let batcher = Batcher::new(BatchPolicy {
+            max_rows,
+            ..Default::default()
+        });
+        let plan = batcher.pack(&pending);
+        assert_eq!(
+            plan.rows,
+            reqs.iter().map(|r| r.x.rows()).sum::<usize>(),
+            "case {case}: rows lost"
+        );
+        let mut reassembled: Vec<Vec<f32>> = vec![Vec::new(); n_req];
+        for slab in &plan.slabs {
+            assert!(slab.x.rows() <= max_rows, "case {case}: slab too big");
+            // Per-row times must match the owning request.
+            for seg in &slab.segments {
+                for r in seg.start..seg.start + seg.rows {
+                    assert!(
+                        (slab.t[r] as f64 - reqs[seg.source].t).abs() < 1e-6,
+                        "case {case}: time routed wrong"
+                    );
+                }
+            }
+            for (src, part) in Batcher::unpack(slab, &slab.x) {
+                reassembled[src].extend_from_slice(part.as_slice());
+            }
+        }
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(
+                reassembled[i],
+                req.x.as_slice(),
+                "case {case}: request {i} content mangled"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_weighted_sum_matches_unfused() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let rows = 1 + (rng.below(32) as usize);
+        let cols = 1 + (rng.below(16) as usize);
+        let k = rng.below(6) as usize;
+        let x = rng.normal_tensor(rows, cols);
+        let eps: Vec<Tensor> = (0..k).map(|_| rng.normal_tensor(rows, cols)).collect();
+        let refs: Vec<&Tensor> = eps.iter().collect();
+        let w: Vec<f64> = (0..k).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let (a, b) = (rng.uniform_in(-1.5, 1.5), rng.uniform_in(-1.5, 1.5));
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let fused = Tensor::kernel_weighted_sum(&x, a as f32, b as f32, &refs, &w32);
+        let mut want = if k == 0 {
+            Tensor::zeros(rows, cols)
+        } else {
+            Tensor::weighted_sum(&refs, &w)
+        };
+        want.scale(b as f32);
+        want.axpy(a as f32, &x);
+        for (f, u) in fused.as_slice().iter().zip(want.as_slice()) {
+            assert!((f - u).abs() < 1e-4, "case {case}: {f} vs {u}");
+        }
+    }
+}
+
+#[test]
+fn prop_grids_decrease_and_hit_endpoints() {
+    let mut rng = Rng::new(0x6121D);
+    let sched = VpSchedule::default();
+    for case in 0..CASES {
+        let n = 1 + (rng.below(120) as usize);
+        let t_end = rng.uniform_in(1e-5, 0.05);
+        let kind = match rng.below(3) {
+            0 => GridKind::Uniform,
+            1 => GridKind::Quadratic,
+            _ => GridKind::LogSnr,
+        };
+        let g = make_grid(&sched, kind, n, 1.0, t_end);
+        assert_eq!(g.len(), n + 1, "case {case}");
+        assert_eq!(g[0], 1.0);
+        assert_eq!(g[n], t_end);
+        assert!(g.windows(2).all(|w| w[1] < w[0]), "case {case}: {kind:?} not decreasing");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // to_string -> parse is the identity on random JSON trees.
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.uniform_in(-1e6, 1e6) * 1e3).round() / 1e3),
+            3 => {
+                let len = rng.below(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::new(0x150);
+    for case in 0..CASES {
+        let j = gen(&mut rng, 3);
+        let text = j.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e:?} on {text}"));
+        assert_eq!(back, j, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_sqrtm_squares_back() {
+    // sqrtm(A)^2 ~ A on random PSD matrices (the FID substrate).
+    let mut rng = Rng::new(0x5157);
+    for case in 0..100 {
+        let d = 2 + (rng.below(6) as usize);
+        // A = B B^T + eps I is PSD.
+        let b: Vec<f64> = (0..d * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut a = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += b[i * d + k] * b[j * d + k];
+                }
+                a[i * d + j] = s + if i == j { 1e-6 } else { 0.0 };
+            }
+        }
+        let r = linalg::sqrtm_psd(&a, d);
+        let r2 = linalg::matmul(&r, &r, d);
+        let scale: f64 = a.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+        for (x, y) in r2.iter().zip(a.iter()) {
+            assert!(
+                (x - y).abs() < 1e-6 * scale,
+                "case {case}: sqrtm^2 deviates {x} vs {y} (d={d})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fid_zero_on_self_and_positive_on_shift() {
+    let mut rng = Rng::new(0xF1D);
+    for case in 0..60 {
+        let d = 2 + (rng.below(4) as usize);
+        let n = 200 + rng.below(200) as usize;
+        let x = rng.normal_tensor(n, d);
+        let m = Moments::from_tensor(&x);
+        let self_fid = metrics::fid(&x, &m);
+        assert!(self_fid.abs() < 1e-4, "case {case}: FID(X,X) = {self_fid}");
+
+        // Shift one coordinate: FID must increase roughly like the
+        // squared mean displacement.
+        let mut y = x.clone();
+        for r in 0..y.rows() {
+            y.row_mut(r)[0] += 2.0;
+        }
+        let shifted = metrics::fid(&y, &m);
+        assert!(shifted > 3.0, "case {case}: shifted FID {shifted}");
+    }
+}
+
+#[test]
+fn prop_frechet_symmetric_nonnegative() {
+    let mut rng = Rng::new(0x5F3);
+    for case in 0..60 {
+        let d = 2 + (rng.below(3) as usize);
+        let a = Moments::from_tensor(&rng.normal_tensor(150, d));
+        let b = Moments::from_tensor(&rng.normal_tensor(150, d));
+        let ab = metrics::frechet_distance(&a, &b);
+        let ba = metrics::frechet_distance(&b, &a);
+        assert!(ab >= -1e-8, "case {case}: negative distance {ab}");
+        assert!((ab - ba).abs() < 1e-6 * (1.0 + ab.abs()), "case {case}: {ab} vs {ba}");
+    }
+}
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    // Distinct streams from one seed must decorrelate (the coordinator
+    // seeds each request chunk independently).
+    let mut a = Rng::for_stream(7, 1);
+    let mut b = Rng::for_stream(7, 2);
+    let mut same = 0;
+    for _ in 0..1000 {
+        if a.next_u64() == b.next_u64() {
+            same += 1;
+        }
+    }
+    assert_eq!(same, 0);
+}
