@@ -13,9 +13,10 @@
 use std::sync::Arc;
 
 use era_solver::cli::{Args, OptSpec};
-use era_solver::coordinator::{Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::coordinator::{ModelBank, RequestSpec};
 use era_solver::experiments::report::ascii_density;
 use era_solver::metrics;
+use era_solver::pool::{PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
 use era_solver::server::{client::Client, Server, ServerConfig};
 
@@ -50,8 +51,9 @@ fn run() -> Result<(), String> {
         entry.stands_in_for, entry.dim, entry.final_loss
     );
 
-    let coord = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
-    let server = Server::start(coord.clone(), ServerConfig::default())
+    let bank: Arc<dyn ModelBank> = engine;
+    let pool = Arc::new(WorkerPool::start(bank, PoolConfig::default()));
+    let server = Server::start(pool.clone(), ServerConfig::default())
         .map_err(|e| e.to_string())?;
     let addr = server.local_addr();
     println!("serving on {addr}");
@@ -67,6 +69,7 @@ fn run() -> Result<(), String> {
         grid: if dataset == "gmm8" { "logsnr".into() } else { "uniform".into() },
         t_end: 1e-3,
         seed: 7,
+        deadline_ms: None,
     };
     let t0 = std::time::Instant::now();
     let (samples, server_seconds) = client.sample(&spec)?;

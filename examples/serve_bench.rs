@@ -14,8 +14,9 @@
 use std::sync::Arc;
 
 use era_solver::cli::{Args, OptSpec};
-use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, ModelBank, RequestSpec};
 use era_solver::experiments::report::{write_markdown_table, Table};
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
 use era_solver::server::client::{generate_load, Client};
 use era_solver::server::{Server, ServerConfig};
@@ -27,6 +28,7 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "batch", value: Some("n"), help: "samples per request (default: 64)" },
     OptSpec { name: "concurrency", value: Some("n"), help: "load-gen workers (default: 8)" },
     OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
+    OptSpec { name: "shards", value: Some("n"), help: "pool shards (default: 1)" },
 ];
 
 fn main() {
@@ -38,19 +40,35 @@ fn main() {
 
 struct Stack {
     server: Server,
-    coord: Arc<Coordinator>,
+    pool: Arc<WorkerPool>,
 }
 
-fn start_stack(artifacts: &str, dataset: &str, policy: BatchPolicy) -> Result<Stack, String> {
+fn start_stack(
+    artifacts: &str,
+    dataset: &str,
+    policy: BatchPolicy,
+    shards: usize,
+) -> Result<Stack, String> {
     let engine = Arc::new(PjRtEngine::new(artifacts)?);
     engine.warmup(dataset, &engine.manifest().batch_buckets.clone())?;
-    let coord = Arc::new(Coordinator::start(
-        engine,
-        CoordinatorConfig { max_active: 64, queue_capacity: 512, policy },
+    let bank: Arc<dyn ModelBank> = engine;
+    let pool = Arc::new(WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards,
+            placement: PlacementPolicy::LeastLoaded,
+            shard: CoordinatorConfig {
+                max_active: 64,
+                queue_capacity: 512,
+                policy,
+                ..Default::default()
+            },
+            max_inflight_rows: 0,
+        },
     ));
-    let server = Server::start(coord.clone(), ServerConfig::default())
+    let server = Server::start(pool.clone(), ServerConfig::default())
         .map_err(|e| e.to_string())?;
-    Ok(Stack { server, coord })
+    Ok(Stack { server, pool })
 }
 
 fn run() -> Result<(), String> {
@@ -61,9 +79,10 @@ fn run() -> Result<(), String> {
     let batch = args.usize_or("batch", 64)?;
     let concurrency = args.usize_or("concurrency", 8)?;
     let requests = args.usize_or("requests", 6)?;
+    let shards = args.usize_or("shards", 1)?.max(1);
 
     // ---- Part 1: Tab. 7 — single-request wall clock per solver × NFE ----
-    let stack = start_stack(&artifacts, &dataset, BatchPolicy::default())?;
+    let stack = start_stack(&artifacts, &dataset, BatchPolicy::default(), shards)?;
     let addr = stack.server.local_addr();
     let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
     client.ping()?;
@@ -82,6 +101,7 @@ fn run() -> Result<(), String> {
                 grid: "uniform".into(),
                 t_end: 1e-4,
                 seed: 11,
+                deadline_ms: None,
             };
             // Median of 5 runs.
             let mut times = Vec::new();
@@ -115,6 +135,7 @@ fn run() -> Result<(), String> {
         grid: "uniform".into(),
         t_end: 1e-4,
         seed: 0,
+        deadline_ms: None,
     };
     let report = generate_load(addr, &spec, concurrency, requests);
     println!(
@@ -127,8 +148,8 @@ fn run() -> Result<(), String> {
         1e3 * report.percentile(0.5),
         1e3 * report.percentile(0.99),
     );
-    println!("coordinator: {}", stack.coord.telemetry().summary());
-    let fused = stack.coord.telemetry().mean_batch_occupancy();
+    println!("pool: {}", stack.pool.stats().summary());
+    let fused = stack.pool.stats().occupancy();
     stack.server.shutdown();
 
     // ---- Part 3: batching ablation — linger on vs off ----
@@ -147,9 +168,9 @@ fn run() -> Result<(), String> {
             max_wait: std::time::Duration::from_millis(5),
         }),
     ] {
-        let stack = start_stack(&artifacts, &dataset, policy)?;
+        let stack = start_stack(&artifacts, &dataset, policy, shards)?;
         let report = generate_load(stack.server.local_addr(), &spec, concurrency, requests);
-        let occ = stack.coord.telemetry().mean_batch_occupancy();
+        let occ = stack.pool.stats().occupancy();
         lines.push(format!(
             "| {name} | {:.0} | {:.0} | {:.0} | {:.1} |",
             report.throughput_rows,

@@ -1,0 +1,126 @@
+//! Pool scaling bench: sampling throughput at 1/2/4 coordinator shards
+//! over a `MockBank` whose evaluation cost is proportional to the rows
+//! it executes (emulating a device-bound denoiser, where a slab's cost
+//! scales with its batch). With one shard every round's row mass runs
+//! through one loop thread; with N shards the same mass runs N-wide, so
+//! throughput should scale until cores (or the row mass) run out.
+//!
+//! Acceptance target (ISSUE 1): >= 2x throughput at 4 shards vs 1.
+//!
+//! ```text
+//! cargo bench --bench bench_pool
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{CoordinatorConfig, RequestSpec};
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+use era_solver::tensor::Tensor;
+
+/// MockBank wrapper whose eval latency is `per_row * rows` — the cost
+/// model of a throughput-bound accelerator (sleeping, not spinning, so
+/// N shards overlap even on few cores).
+struct RowCostBank {
+    inner: MockBank,
+    per_row: Duration,
+}
+
+impl RowCostBank {
+    fn gmm8(per_row: Duration) -> RowCostBank {
+        let sched = VpSchedule::default();
+        RowCostBank {
+            inner: MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+            per_row,
+        }
+    }
+}
+
+impl ModelBank for RowCostBank {
+    fn sched(&self) -> VpSchedule {
+        self.inner.sched()
+    }
+
+    fn dim(&self, dataset: &str) -> Result<usize, String> {
+        self.inner.dim(dataset)
+    }
+
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        std::thread::sleep(self.per_row * x.rows() as u32);
+        self.inner.eval(dataset, x, t)
+    }
+}
+
+const REQUESTS: usize = 16;
+const ROWS: usize = 64;
+const NFE: usize = 10;
+
+/// Drive the fixed workload through a pool with `shards` shards and
+/// return samples/second.
+fn run_once(shards: usize) -> f64 {
+    let bank: Arc<dyn ModelBank> = Arc::new(RowCostBank::gmm8(Duration::from_micros(20)));
+    let pool = WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards,
+            placement: PlacementPolicy::RoundRobin,
+            shard: CoordinatorConfig::default(),
+            max_inflight_rows: 0,
+        },
+    );
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            pool.submit(RequestSpec {
+                n_samples: ROWS,
+                nfe: NFE,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("sample");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+    (REQUESTS * ROWS) as f64 / wall
+}
+
+fn median_throughput(shards: usize, reps: usize) -> f64 {
+    let mut runs: Vec<f64> = (0..reps).map(|_| run_once(shards)).collect();
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    runs[runs.len() / 2]
+}
+
+fn main() {
+    println!(
+        "pool scaling: {REQUESTS} requests x {ROWS} rows x {NFE} NFE, \
+         row-proportional eval cost (20us/row)"
+    );
+    let mut base = 0.0;
+    let mut at4 = 0.0;
+    for shards in [1usize, 2, 4] {
+        let thpt = median_throughput(shards, 3);
+        if shards == 1 {
+            base = thpt;
+        }
+        if shards == 4 {
+            at4 = thpt;
+        }
+        let speedup = if base > 0.0 { thpt / base } else { 1.0 };
+        println!(
+            "BENCHLINE pool/shards={shards} throughput={thpt:.0} samples/s speedup={speedup:.2}x"
+        );
+    }
+    let target = 2.0;
+    let speedup = if base > 0.0 { at4 / base } else { 0.0 };
+    println!(
+        "pool 4-shard speedup {speedup:.2}x vs 1 shard — target >= {target:.1}x: {}",
+        if speedup >= target { "PASS" } else { "FAIL" }
+    );
+}

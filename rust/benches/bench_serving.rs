@@ -69,7 +69,7 @@ fn main() {
     ] {
         let coord = Coordinator::start(
             engine.clone(),
-            CoordinatorConfig { max_active: 32, queue_capacity: 128, policy },
+            CoordinatorConfig { max_active: 32, queue_capacity: 128, policy, ..Default::default() },
         );
         b.case(&format!("coord/pjrt policy {label} 8x(32 rows)"), || {
             let tickets: Vec<_> =

@@ -29,5 +29,7 @@ pub mod telemetry;
 
 pub use batcher::{BatchPlan, Batcher, BatchPolicy};
 pub use request::{RequestSpec, RequestState, SamplingResult};
-pub use service::{Coordinator, CoordinatorConfig, SubmitError};
+pub use service::{
+    CancelHandle, Coordinator, CoordinatorConfig, MockBank, ModelBank, SubmitError, Ticket,
+};
 pub use telemetry::Telemetry;

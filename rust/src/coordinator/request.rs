@@ -26,6 +26,11 @@ pub struct RequestSpec {
     pub t_end: f64,
     /// Seed for the prior noise (and ancestral noise for DDPM).
     pub seed: u64,
+    /// Per-request deadline, milliseconds from submit. When it expires
+    /// the shard loop retires the solver mid-trajectory and replies with
+    /// a partial, `cancelled` result. `None` falls back to the
+    /// coordinator's `default_deadline` (which may also be none).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for RequestSpec {
@@ -38,6 +43,7 @@ impl Default for RequestSpec {
             grid: "uniform".into(),
             t_end: 1e-3,
             seed: 0,
+            deadline_ms: None,
         }
     }
 }
@@ -85,6 +91,10 @@ pub struct SamplingResult {
     pub queue_seconds: f64,
     /// Submit-to-finish wall time.
     pub total_seconds: f64,
+    /// True when the request was retired early (client cancellation or
+    /// deadline expiry); `samples` then holds the partial iterate and
+    /// `nfe` the evaluations actually consumed.
+    pub cancelled: bool,
 }
 
 /// Lifecycle of an admitted request inside the engine loop.
@@ -147,6 +157,7 @@ impl RequestState {
             samples: self.solver.current().clone(),
             queue_seconds: (started - self.submitted_at).as_secs_f64(),
             total_seconds: (now - self.submitted_at).as_secs_f64(),
+            cancelled: false,
         }
     }
 }

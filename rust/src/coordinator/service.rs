@@ -2,16 +2,22 @@
 //! continuous batching, and the public [`Coordinator`] handle.
 //!
 //! One dedicated loop thread owns every [`RequestState`]. Each round it
-//! (1) admits queued requests up to `max_active`, (2) pulls the next
-//! evaluation from every active solver, (3) optionally lingers up to
-//! `max_wait` for batch-mates when under `min_rows`, (4) packs all
-//! pending evaluations *per dataset* into slabs and runs them through the
-//! [`ModelBank`], (5) routes outputs back and retires finished requests.
-//! Requests join and leave the running batch at step granularity —
-//! continuous batching in the vLLM sense, applied to diffusion sampling.
+//! (1) admits queued requests up to `max_active`, (2) retires requests
+//! whose [`CancelHandle`] fired or whose deadline expired (mid-trajectory,
+//! without touching batch-mates), (3) pulls the next evaluation from every
+//! active solver, (4) optionally lingers up to `max_wait` for batch-mates
+//! when under `min_rows`, (5) packs all pending evaluations *per dataset*
+//! into slabs and runs them through the [`ModelBank`], (6) routes outputs
+//! back and retires finished requests. Requests join and leave the
+//! running batch at step granularity — continuous batching in the vLLM
+//! sense, applied to diffusion sampling.
+//!
+//! A [`crate::pool::WorkerPool`] runs N of these loops as shards behind
+//! one router; the `inflight_*` telemetry gauges updated here are what
+//! its least-loaded placement and global admission control read.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -101,11 +107,48 @@ pub struct CoordinatorConfig {
     /// immediately (backpressure surfaces to the client).
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
+    /// Deadline applied to requests whose spec carries none
+    /// (`None` = requests without their own deadline never expire).
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_active: 32, queue_capacity: 256, policy: BatchPolicy::default() }
+        CoordinatorConfig {
+            max_active: 32,
+            queue_capacity: 256,
+            policy: BatchPolicy::default(),
+            default_deadline: None,
+        }
+    }
+}
+
+/// Cooperative cancellation flag shared by the client handle and the
+/// shard loop. Cancelling is a one-way latch: the loop retires the
+/// request at its next round boundary (between solver steps), replies
+/// with the partial iterate, and batch-mates are untouched.
+#[derive(Clone, Debug, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    pub fn new() -> CancelHandle {
+        CancelHandle(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation. Idempotent; safe after completion.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// True when both handles latch the same request (same underlying
+    /// flag). The pool's tag registry uses this to avoid evicting a
+    /// *different* request's registration when a tag is reused.
+    pub fn same_as(&self, other: &CancelHandle) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
     }
 }
 
@@ -124,6 +167,8 @@ struct Envelope {
     id: u64,
     spec: RequestSpec,
     reply: Sender<Result<SamplingResult, String>>,
+    cancel: CancelHandle,
+    deadline: Option<Instant>,
 }
 
 /// Handle to a running coordinator. Cloneable submits are not needed —
@@ -132,6 +177,7 @@ pub struct Coordinator {
     tx: Option<SyncSender<Envelope>>,
     telemetry: Arc<Telemetry>,
     next_id: AtomicU64,
+    default_deadline: Option<Duration>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -139,6 +185,7 @@ pub struct Coordinator {
 pub struct Ticket {
     pub id: u64,
     rx: Receiver<Result<SamplingResult, String>>,
+    cancel: CancelHandle,
 }
 
 impl Ticket {
@@ -150,6 +197,17 @@ impl Ticket {
     pub fn wait_timeout(&self, d: Duration) -> Option<Result<SamplingResult, String>> {
         self.rx.recv_timeout(d).ok()
     }
+
+    /// Ask the loop to retire this request at its next round boundary.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clonable handle for cancelling from another thread (the pool's
+    /// tag registry hands these to `cancel` protocol ops).
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
 }
 
 impl Coordinator {
@@ -158,28 +216,64 @@ impl Coordinator {
         let telemetry = Arc::new(Telemetry::new());
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
         let tele = telemetry.clone();
+        let default_deadline = config.default_deadline;
         let handle = std::thread::Builder::new()
             .name("era-coordinator".into())
             .spawn(move || run_loop(bank, config, rx, tele))
             .expect("spawn coordinator");
-        Coordinator { tx: Some(tx), telemetry, next_id: AtomicU64::new(1), handle: Some(handle) }
+        Coordinator {
+            tx: Some(tx),
+            telemetry,
+            next_id: AtomicU64::new(1),
+            default_deadline,
+            handle: Some(handle),
+        }
     }
 
     /// Validate cheaply and enqueue; returns a ticket for the reply.
     pub fn submit(&self, spec: RequestSpec) -> Result<Ticket, SubmitError> {
+        self.submit_with_cancel(spec, CancelHandle::new())
+    }
+
+    /// Like [`Coordinator::submit`] but adopting a caller-created
+    /// [`CancelHandle`] — the pool registers the handle in its tag
+    /// registry *before* the envelope becomes visible to the loop, so a
+    /// wire-level cancel can never miss an already-admitted request.
+    pub fn submit_with_cancel(
+        &self,
+        spec: RequestSpec,
+        cancel: CancelHandle,
+    ) -> Result<Ticket, SubmitError> {
         if crate::solvers::SolverKind::parse(&spec.solver).is_none() {
             return Err(SubmitError::Invalid(format!("unknown solver '{}'", spec.solver)));
         }
+        let tx = self.tx.as_ref().ok_or(SubmitError::Shutdown)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let env = Envelope { id, spec, reply: reply_tx };
-        match self.tx.as_ref().ok_or(SubmitError::Shutdown)?.try_send(env) {
-            Ok(()) => Ok(Ticket { id, rx: reply_rx }),
+        let deadline = spec
+            .deadline_ms
+            .map(Duration::from_millis)
+            .or(self.default_deadline)
+            .map(|d| Instant::now() + d);
+        let rows = spec.n_samples;
+        // Gauge up before the envelope becomes visible to the loop so
+        // the loop's retire-side decrement can never race it negative.
+        self.telemetry.inflight_requests.fetch_add(1, Ordering::SeqCst);
+        self.telemetry.inflight_rows.fetch_add(rows, Ordering::SeqCst);
+        let env = Envelope { id, spec, reply: reply_tx, cancel: cancel.clone(), deadline };
+        match tx.try_send(env) {
+            Ok(()) => Ok(Ticket { id, rx: reply_rx, cancel }),
             Err(TrySendError::Full(_)) => {
+                self.telemetry.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+                self.telemetry.inflight_rows.fetch_sub(rows, Ordering::SeqCst);
                 self.telemetry.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::QueueFull)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Shutdown),
+            Err(TrySendError::Disconnected(_)) => {
+                self.telemetry.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+                self.telemetry.inflight_rows.fetch_sub(rows, Ordering::SeqCst);
+                Err(SubmitError::Shutdown)
+            }
         }
     }
 
@@ -213,6 +307,33 @@ impl Drop for Coordinator {
 struct Active {
     state: RequestState,
     reply: Sender<Result<SamplingResult, String>>,
+    cancel: CancelHandle,
+    deadline: Option<Instant>,
+    /// Rows this request pinned in the inflight gauges at submit.
+    rows: usize,
+}
+
+/// Retire a request with a result (normal completion or cancellation),
+/// releasing its inflight gauges.
+fn retire_ok(done: Active, tele: &Telemetry, cancelled: bool) {
+    let rows = done.rows;
+    let mut res = done.state.finish();
+    res.cancelled = cancelled;
+    if cancelled {
+        tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+    } else {
+        tele.record_finish(res.total_seconds, res.queue_seconds);
+    }
+    tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+    tele.inflight_rows.fetch_sub(rows, Ordering::SeqCst);
+    let _ = done.reply.send(Ok(res));
+}
+
+/// Retire a request with an error, releasing its inflight gauges.
+fn retire_err(done: Active, tele: &Telemetry, err: String) {
+    tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+    tele.inflight_rows.fetch_sub(done.rows, Ordering::SeqCst);
+    let _ = done.reply.send(Err(err));
 }
 
 fn run_loop(
@@ -226,6 +347,24 @@ fn run_loop(
     let mut queue_open = true;
 
     let admit = |env: Envelope, active: &mut Vec<Active>, tele: &Telemetry| {
+        // Requests cancelled (or expired) while still queued never cost
+        // a solver build or an evaluation.
+        let dead_on_arrival = env.cancel.is_cancelled()
+            || env.deadline.is_some_and(|d| Instant::now() >= d);
+        if dead_on_arrival {
+            tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+            tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+            tele.inflight_rows.fetch_sub(env.spec.n_samples, Ordering::SeqCst);
+            let _ = env.reply.send(Ok(SamplingResult {
+                id: env.id,
+                samples: Tensor::zeros(0, 0),
+                nfe: 0,
+                queue_seconds: 0.0,
+                total_seconds: 0.0,
+                cancelled: true,
+            }));
+            return;
+        }
         let sched = bank.sched();
         let solver = bank
             .dim(&env.spec.dataset)
@@ -234,11 +373,16 @@ fn run_loop(
             Ok(s) => {
                 tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
                 active.push(Active {
+                    rows: env.spec.n_samples,
                     state: RequestState::new(env.id, env.spec.dataset.clone(), s),
                     reply: env.reply,
+                    cancel: env.cancel,
+                    deadline: env.deadline,
                 });
             }
             Err(e) => {
+                tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+                tele.inflight_rows.fetch_sub(env.spec.n_samples, Ordering::SeqCst);
                 let _ = env.reply.send(Err(e));
             }
         }
@@ -276,15 +420,31 @@ fn run_loop(
 
         tele.rounds.fetch_add(1, Ordering::Relaxed);
 
+        // ---- Cancellation / deadline sweep ----
+        // Round boundaries are the cancellation points: every pending
+        // eval from the previous round has been delivered, so a retired
+        // solver leaves no orphan rows in any slab and batch-mates are
+        // untouched.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < active.len() {
+            let expired = active[i].cancel.is_cancelled()
+                || active[i].deadline.is_some_and(|d| now >= d);
+            if expired && active[i].state.pending.is_none() {
+                let done = active.swap_remove(i);
+                retire_ok(done, &tele, true);
+                continue;
+            }
+            i += 1;
+        }
+
         // ---- Pull next evaluations; retire finished solvers ----
         let mut i = 0;
         while i < active.len() {
             let has_pending = active[i].state.pending.is_some();
             if !has_pending && !active[i].state.pull() {
                 let done = active.swap_remove(i);
-                let res = done.state.finish();
-                tele.record_finish(res.total_seconds, res.queue_seconds);
-                let _ = done.reply.send(Ok(res));
+                retire_ok(done, &tele, false);
                 continue;
             }
             i += 1;
@@ -301,14 +461,16 @@ fn run_loop(
                 let left = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(left) {
                     Ok(env) => {
+                        let before = active.len();
                         admit(env, &mut active, &tele);
+                        if active.len() == before {
+                            continue; // rejected or dead on arrival
+                        }
                         // New arrivals join this round immediately.
                         let n = active.len();
                         if !active[n - 1].state.pull() {
                             let done = active.swap_remove(n - 1);
-                            let res = done.state.finish();
-                            tele.record_finish(res.total_seconds, res.queue_seconds);
-                            let _ = done.reply.send(Ok(res));
+                            retire_ok(done, &tele, false);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => break,
@@ -377,7 +539,7 @@ fn run_loop(
         failures.dedup_by_key(|f| f.0);
         for (src, err) in failures {
             let failed = active.swap_remove(src);
-            let _ = failed.reply.send(Err(format!("model evaluation failed: {err}")));
+            retire_err(failed, &tele, format!("model evaluation failed: {err}"));
         }
     }
 }
@@ -514,11 +676,7 @@ mod tests {
     #[test]
     fn backpressure_rejects_when_full() {
         // Tiny queue + tiny active set: flooding must yield QueueFull.
-        let cfg = CoordinatorConfig {
-            max_active: 1,
-            queue_capacity: 1,
-            policy: BatchPolicy::default(),
-        };
+        let cfg = CoordinatorConfig { max_active: 1, queue_capacity: 1, ..Default::default() };
         let c = Coordinator::start(bank(), cfg);
         let mut rejected = 0;
         let mut tickets = Vec::new();
@@ -533,6 +691,64 @@ mod tests {
         for t in tickets {
             let _ = t.wait();
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_cancels_before_start() {
+        // A deadline that is already expired at submit must retire the
+        // request at admission: no solver build, no evaluations.
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let mut s = spec("era", 32, 1);
+        s.deadline_ms = Some(0);
+        let res = c.submit(s).unwrap().wait().unwrap();
+        assert!(res.cancelled);
+        assert_eq!(res.nfe, 0);
+        assert_eq!(res.samples.rows(), 0);
+        let t = c.telemetry();
+        assert_eq!(t.requests_cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(t.requests_admitted.load(Ordering::Relaxed), 0);
+        // Gauges must drain back to zero.
+        assert_eq!(t.inflight_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(t.inflight_rows.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_applies_when_spec_has_none() {
+        let cfg = CoordinatorConfig {
+            default_deadline: Some(Duration::from_millis(0)),
+            ..Default::default()
+        };
+        let c = Coordinator::start(bank(), cfg);
+        let res = c.sample(spec("era", 8, 1)).unwrap();
+        assert!(res.cancelled);
+        assert_eq!(res.nfe, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn cancel_after_completion_is_harmless() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let ticket = c.submit(spec("era", 16, 3)).unwrap();
+        let handle = ticket.cancel_handle();
+        let res = ticket.wait().unwrap();
+        assert!(!res.cancelled);
+        assert_eq!(res.nfe, 10);
+        handle.cancel(); // latched after the fact; nothing to retire
+        assert!(handle.is_cancelled());
+        c.shutdown();
+    }
+
+    #[test]
+    fn inflight_gauges_return_to_zero() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let tickets: Vec<_> = (0..4).map(|i| c.submit(spec("era", 8, i)).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert_eq!(c.telemetry().inflight_requests.load(Ordering::Relaxed), 0);
+        assert_eq!(c.telemetry().inflight_rows.load(Ordering::Relaxed), 0);
         c.shutdown();
     }
 

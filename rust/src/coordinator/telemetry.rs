@@ -11,6 +11,13 @@ pub struct Telemetry {
     pub requests_admitted: AtomicUsize,
     pub requests_finished: AtomicUsize,
     pub requests_rejected: AtomicUsize,
+    /// Requests retired early by client cancellation or deadline expiry.
+    pub requests_cancelled: AtomicUsize,
+    /// Gauge: requests submitted but not yet retired (queued + active).
+    /// The pool router reads this for least-loaded placement.
+    pub inflight_requests: AtomicUsize,
+    /// Gauge: rows (n_samples) belonging to in-flight requests.
+    pub inflight_rows: AtomicUsize,
     /// Fused model evaluations dispatched.
     pub evals: AtomicUsize,
     /// Rows packed into those evaluations.
@@ -41,6 +48,17 @@ impl Telemetry {
     /// Latency percentile over finished requests (0.0..=1.0), seconds.
     pub fn latency_percentile(&self, q: f64) -> f64 {
         percentile(&self.latencies.lock().unwrap(), q)
+    }
+
+    /// Snapshot of raw per-request latencies, seconds (unsorted). The
+    /// pool merges these across shards for exact pooled percentiles.
+    pub fn latency_samples(&self) -> Vec<f64> {
+        self.latencies.lock().unwrap().clone()
+    }
+
+    /// Snapshot of raw per-request queue waits, seconds (unsorted).
+    pub fn queue_wait_samples(&self) -> Vec<f64> {
+        self.queue_waits.lock().unwrap().clone()
     }
 
     pub fn queue_wait_percentile(&self, q: f64) -> f64 {
@@ -80,9 +98,10 @@ impl Telemetry {
     /// One-line summary for logs / bench output.
     pub fn summary(&self) -> String {
         format!(
-            "finished={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
+            "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
              p50={:.1}ms p99={:.1}ms",
             self.requests_finished.load(Ordering::Relaxed),
+            self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
             self.evals.load(Ordering::Relaxed),
             self.rows.load(Ordering::Relaxed),
@@ -94,14 +113,21 @@ impl Telemetry {
     }
 }
 
-fn percentile(sorted_src: &[f64], q: f64) -> f64 {
-    if sorted_src.is_empty() {
+fn percentile(src: &[f64], q: f64) -> f64 {
+    let mut v = src.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted_percentile(&v, q)
+}
+
+/// Nearest-rank percentile over an already-sorted slice (0.0..=1.0).
+/// Shared with the pool's merged stats so per-shard and pool-wide
+/// quantiles can never drift onto different index conventions.
+pub(crate) fn sorted_percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v = sorted_src.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-    v[idx]
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
 }
 
 #[cfg(test)]
@@ -129,6 +155,16 @@ mod tests {
         t.padded_rows.fetch_add(8, Ordering::Relaxed);
         assert!((t.mean_batch_occupancy() - 12.0).abs() < 1e-9);
         assert!((t.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_snapshots_match_counts() {
+        let t = Telemetry::new();
+        t.record_finish(1.0, 0.5);
+        t.record_finish(2.0, 0.25);
+        assert_eq!(t.latency_samples().len(), 2);
+        assert_eq!(t.queue_wait_samples().len(), 2);
+        assert!(t.summary().contains("cancelled=0"));
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //! * **L3 (this crate)** — loads the artifacts through PJRT
 //!   ([`runtime`]), drives them with the paper's solver and every baseline
 //!   ([`solvers`]), and serves batched sampling requests through a
-//!   continuous-batching coordinator ([`coordinator`]) behind a TCP
-//!   JSON-lines server ([`server`]).
+//!   continuous-batching coordinator ([`coordinator`]), scaled out across
+//!   N coordinator shards by the worker pool ([`pool`]: routing policies,
+//!   global admission control, per-request deadlines and cancellation,
+//!   merged telemetry) behind a TCP JSON-lines server ([`server`]).
 //!
 //! Substrate modules ([`tensor`], [`rng`], [`linalg`], [`json`],
 //! [`metrics`], [`data`], [`benchkit`], [`cli`]) are hand-rolled: the
@@ -41,6 +43,7 @@ pub mod experiments;
 pub mod json;
 pub mod linalg;
 pub mod metrics;
+pub mod pool;
 pub mod rng;
 pub mod runtime;
 pub mod server;

@@ -1,9 +1,10 @@
-//! `era-serve` — the serving leader: PJRT engine + continuous-batching
-//! coordinator + TCP JSON-lines front end.
+//! `era-serve` — the serving leader: PJRT engine + sharded worker pool
+//! of continuous-batching coordinators + TCP JSON-lines front end.
 //!
 //! ```text
 //! era-serve --artifacts artifacts --addr 127.0.0.1:7437 \
-//!           --warmup gmm8,checkerboard --max-active 64
+//!           --warmup gmm8,checkerboard --shards 4 --placement affinity \
+//!           --deadline-ms 2000 --max-active 64
 //! ```
 //!
 //! Clients speak the one-JSON-object-per-line protocol of
@@ -13,7 +14,8 @@
 use std::sync::Arc;
 
 use era_solver::cli::{Args, OptSpec};
-use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, ModelBank};
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
 use era_solver::server::{Server, ServerConfig};
 
@@ -21,8 +23,12 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
     OptSpec { name: "addr", value: Some("host:port"), help: "bind address (default: 127.0.0.1:7437)" },
     OptSpec { name: "warmup", value: Some("ds,ds"), help: "datasets to pre-compile (default: all)" },
-    OptSpec { name: "max-active", value: Some("n"), help: "running-batch request cap (default: 64)" },
-    OptSpec { name: "queue", value: Some("n"), help: "admission queue bound (default: 256)" },
+    OptSpec { name: "shards", value: Some("n"), help: "coordinator shards (default: 1)" },
+    OptSpec { name: "placement", value: Some("policy"), help: "round-robin | least-loaded | affinity (default: least-loaded)" },
+    OptSpec { name: "deadline-ms", value: Some("ms"), help: "default per-request deadline, 0 = none (default: 0)" },
+    OptSpec { name: "max-inflight-rows", value: Some("n"), help: "global admission cap in rows, 0 = unbounded (default: 0)" },
+    OptSpec { name: "max-active", value: Some("n"), help: "running-batch request cap per shard (default: 64)" },
+    OptSpec { name: "queue", value: Some("n"), help: "admission queue bound per shard (default: 256)" },
     OptSpec { name: "max-rows", value: Some("n"), help: "rows per fused eval (default: 256)" },
     OptSpec { name: "min-rows", value: Some("n"), help: "linger threshold rows (default: 32)" },
     OptSpec { name: "max-wait-ms", value: Some("ms"), help: "linger budget (default: 2)" },
@@ -51,7 +57,8 @@ fn run() -> Result<(), String> {
         eprintln!("[era-serve] warmed {ds} in {:?}", t0.elapsed());
     }
 
-    let config = CoordinatorConfig {
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let shard_config = CoordinatorConfig {
         max_active: args.usize_or("max-active", 64)?,
         queue_capacity: args.usize_or("queue", 256)?,
         policy: BatchPolicy {
@@ -59,20 +66,38 @@ fn run() -> Result<(), String> {
             min_rows: args.usize_or("min-rows", 32)?,
             max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
         },
+        default_deadline: match deadline_ms {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
     };
-    let coord = Arc::new(Coordinator::start(engine, config));
+    let placement_name = args.str_or("placement", "least-loaded");
+    let pool_config = PoolConfig {
+        shards: args.usize_or("shards", 1)?.max(1),
+        placement: PlacementPolicy::parse(&placement_name)
+            .ok_or_else(|| format!("unknown placement policy '{placement_name}'"))?,
+        shard: shard_config,
+        max_inflight_rows: args.usize_or("max-inflight-rows", 0)?,
+    };
+    eprintln!(
+        "[era-serve] pool: {} shard(s), placement {}",
+        pool_config.shards,
+        pool_config.placement.label()
+    );
+    let bank: Arc<dyn ModelBank> = engine;
+    let pool = Arc::new(WorkerPool::start(bank, pool_config));
 
     let server_cfg = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7437"),
         max_connections: args.usize_or("max-conns", 64)?,
     };
-    let server = Server::start(coord.clone(), server_cfg).map_err(|e| e.to_string())?;
+    let server = Server::start(pool.clone(), server_cfg).map_err(|e| e.to_string())?;
     eprintln!("[era-serve] listening on {}", server.local_addr());
 
     // Periodic telemetry heartbeat until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
-        eprintln!("[era-serve] {}", coord.telemetry().summary());
+        eprintln!("[era-serve] {}", pool.stats().summary());
     }
 }
 

@@ -172,6 +172,17 @@ mod tests {
     }
 
     #[test]
+    fn frechet_diagonal_closed_form() {
+        // For diagonal covariances A = diag(a_i), B = diag(b_i):
+        //   d^2 = ||mu1 - mu2||^2 + sum_i (sqrt(a_i) - sqrt(b_i))^2.
+        // Here: mean term (1-3)^2 + (2-5)^2 = 13; covariance term
+        // (1-3)^2 + (2-4)^2 = 8; total 21.
+        let a = Moments::new(vec![1.0, 2.0], vec![1.0, 0.0, 0.0, 4.0]);
+        let b = Moments::new(vec![3.0, 5.0], vec![9.0, 0.0, 0.0, 16.0]);
+        assert!((frechet_distance(&a, &b) - 21.0).abs() < 1e-8);
+    }
+
+    #[test]
     fn frechet_symmetric() {
         let a = Moments::new(vec![0.0, 1.0], vec![1.5, 0.2, 0.2, 0.7]);
         let b = Moments::new(vec![0.5, 0.0], vec![0.9, -0.1, -0.1, 2.0]);

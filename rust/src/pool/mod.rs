@@ -1,0 +1,446 @@
+//! Sharded worker-pool serving layer: N coordinator shards behind one
+//! router.
+//!
+//! A single [`Coordinator`] loop thread serialises every model
+//! evaluation, so one engine pipeline caps throughput no matter how many
+//! cores or engine replicas exist. The [`WorkerPool`] scales out by
+//! running N shards — each a full coordinator (own loop thread,
+//! [`CoordinatorConfig`], and [`ModelBank`] handle: one shared
+//! `Arc<dyn ModelBank>` or per-shard replicas) — fronted by:
+//!
+//! * a **router** with pluggable [`PlacementPolicy`]s ([`placement`]):
+//!   round-robin, least-loaded by in-flight rows, and dataset-affinity
+//!   hashing (per-dataset slabs stay dense because cross-request fusion
+//!   only happens within a shard);
+//! * **global admission control**: a cap on total in-flight rows across
+//!   shards, surfaced to clients as the same
+//!   [`SubmitError::QueueFull`] backpressure the shard queues use, plus
+//!   queue-full failover from the preferred shard to its neighbours;
+//! * **deadlines and cancellation**: every submit carries a
+//!   [`CancelHandle`] and optional deadline that propagate into the
+//!   shard loop, which retires the solver mid-trajectory (partial
+//!   iterate, NFE consumed < budget) without poisoning batch-mates; a
+//!   tag registry lets one connection cancel another connection's
+//!   in-flight request over the wire;
+//! * an aggregated [`PoolStats`] snapshot ([`stats`]) merging per-shard
+//!   [`crate::coordinator::Telemetry`].
+//!
+//! The TCP server ([`crate::server`]) serves from a pool; a pool with
+//! one shard behaves exactly like the bare coordinator it wraps.
+
+pub mod placement;
+pub mod stats;
+
+pub use placement::PlacementPolicy;
+pub use stats::{PoolStats, ShardStats};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::service::Ticket;
+use crate::coordinator::{
+    CancelHandle, Coordinator, CoordinatorConfig, ModelBank, RequestSpec, SamplingResult,
+    SubmitError,
+};
+
+/// Pool construction knobs.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Number of coordinator shards (>= 1).
+    pub shards: usize,
+    pub placement: PlacementPolicy,
+    /// Per-shard coordinator configuration (queue bound, batch policy,
+    /// default deadline).
+    pub shard: CoordinatorConfig,
+    /// Global cap on in-flight rows across all shards; submits beyond
+    /// it are rejected with [`SubmitError::QueueFull`]. 0 = unbounded.
+    pub max_inflight_rows: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            shards: 1,
+            placement: PlacementPolicy::LeastLoaded,
+            shard: CoordinatorConfig::default(),
+            max_inflight_rows: 0,
+        }
+    }
+}
+
+/// A running pool of coordinator shards.
+pub struct WorkerPool {
+    shards: Vec<Coordinator>,
+    placement: PlacementPolicy,
+    max_inflight_rows: usize,
+    rr: AtomicUsize,
+    pool_rejected: AtomicUsize,
+    /// Serialises the global-cap check against the shard-side gauge
+    /// increments: held across check + shard submit so two concurrent
+    /// submits cannot both read a stale load sum and overshoot the cap.
+    /// Only taken when `max_inflight_rows > 0`.
+    admission: Mutex<()>,
+    /// Wire-level cancellation registry: client-chosen tag -> cancel
+    /// handle of the in-flight request carrying it.
+    tags: Mutex<HashMap<u64, CancelHandle>>,
+}
+
+/// A pending pool response: the shard ticket plus where it was placed.
+pub struct PoolTicket {
+    /// Shard index the request was routed to.
+    pub shard: usize,
+    inner: Ticket,
+}
+
+impl PoolTicket {
+    /// Shard-local request id (unique within `shard`, not pool-wide).
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// Block until the request finishes (or is retired by
+    /// cancellation/deadline, yielding a `cancelled` result).
+    pub fn wait(self) -> Result<SamplingResult, String> {
+        self.inner.wait()
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<Result<SamplingResult, String>> {
+        self.inner.wait_timeout(d)
+    }
+
+    /// Ask the owning shard to retire this request at its next round.
+    pub fn cancel(&self) {
+        self.inner.cancel();
+    }
+
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.inner.cancel_handle()
+    }
+}
+
+impl WorkerPool {
+    /// Start `config.shards` shards over one shared model bank (the
+    /// common case: [`crate::runtime::PjRtEngine`] serialises internally,
+    /// `MockBank` is stateless).
+    pub fn start(bank: Arc<dyn ModelBank>, config: PoolConfig) -> WorkerPool {
+        assert!(config.shards >= 1, "pool needs at least one shard");
+        let banks = (0..config.shards).map(|_| bank.clone()).collect();
+        WorkerPool::start_with_banks(banks, config)
+    }
+
+    /// Start one shard per bank (per-shard engine replicas). The
+    /// `config.shards` field is ignored in favour of `banks.len()`.
+    pub fn start_with_banks(banks: Vec<Arc<dyn ModelBank>>, config: PoolConfig) -> WorkerPool {
+        assert!(!banks.is_empty(), "pool needs at least one bank");
+        let shards = banks
+            .into_iter()
+            .map(|b| Coordinator::start(b, config.shard.clone()))
+            .collect();
+        WorkerPool {
+            shards,
+            placement: config.placement,
+            max_inflight_rows: config.max_inflight_rows,
+            rr: AtomicUsize::new(0),
+            pool_rejected: AtomicUsize::new(0),
+            admission: Mutex::new(()),
+            tags: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn placement(&self) -> PlacementPolicy {
+        self.placement
+    }
+
+    /// Per-shard in-flight row gauges (the router's load view).
+    fn loads(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|c| c.telemetry().inflight_rows.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Route and enqueue one request.
+    pub fn submit(&self, spec: RequestSpec) -> Result<PoolTicket, SubmitError> {
+        self.submit_tagged(spec, None)
+    }
+
+    /// Route and enqueue, optionally registering a client-chosen `tag`
+    /// under which [`WorkerPool::cancel_tag`] (and the server's `cancel`
+    /// op) can reach this request from another connection. A re-used
+    /// tag displaces the previous registration.
+    pub fn submit_tagged(
+        &self,
+        spec: RequestSpec,
+        tag: Option<u64>,
+    ) -> Result<PoolTicket, SubmitError> {
+        // Register the cancel handle under the tag *before* any shard
+        // can admit the request, so a concurrent `cancel` that observes
+        // the request in flight always finds the tag. Cancels landing
+        // in the pre-enqueue window simply make the envelope dead on
+        // arrival.
+        let cancel = CancelHandle::new();
+        if let Some(tag) = tag {
+            self.tags.lock().unwrap().insert(tag, cancel.clone());
+        }
+        let result = self.route_and_submit(&spec, &cancel);
+        if result.is_err() {
+            if let Some(tag) = tag {
+                self.deregister_tag(tag, &cancel);
+            }
+        }
+        result
+    }
+
+    fn route_and_submit(
+        &self,
+        spec: &RequestSpec,
+        cancel: &CancelHandle,
+    ) -> Result<PoolTicket, SubmitError> {
+        // Under a global cap, hold the admission lock across the
+        // check *and* the shard submit (which bumps the inflight
+        // gauges synchronously) — otherwise two concurrent submits
+        // could both pass a stale check and overshoot the cap.
+        let _admission_guard = if self.max_inflight_rows > 0 {
+            let guard = self.admission.lock().unwrap();
+            let total: usize = self.loads().iter().sum();
+            if total + spec.n_samples > self.max_inflight_rows {
+                self.pool_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::QueueFull);
+            }
+            Some(guard)
+        } else {
+            None
+        };
+        let loads = self.loads();
+        let n = self.shards.len();
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        let first = placement::place(self.placement, &spec.dataset, rr, &loads);
+        for k in 0..n {
+            let idx = (first + k) % n;
+            match self.shards[idx].submit_with_cancel(spec.clone(), cancel.clone()) {
+                Ok(ticket) => return Ok(PoolTicket { shard: idx, inner: ticket }),
+                // Queue-full fails over to the next shard; anything else
+                // (invalid spec, shutdown) is terminal.
+                Err(SubmitError::QueueFull) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.pool_rejected.fetch_add(1, Ordering::Relaxed);
+        Err(SubmitError::QueueFull)
+    }
+
+    /// Cancel the in-flight request registered under `tag`. Returns
+    /// false when no such tag is live.
+    pub fn cancel_tag(&self, tag: u64) -> bool {
+        match self.tags.lock().unwrap().remove(&tag) {
+            Some(handle) => {
+                handle.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a tag registration without cancelling (called after the
+    /// tagged request completes). Identity-checked: only removes the
+    /// entry if it still belongs to `handle`'s request, so a tag that
+    /// was re-used by a newer request is left alone.
+    pub fn deregister_tag(&self, tag: u64, handle: &CancelHandle) {
+        let mut tags = self.tags.lock().unwrap();
+        if tags.get(&tag).is_some_and(|h| h.same_as(handle)) {
+            tags.remove(&tag);
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn sample(&self, spec: RequestSpec) -> Result<SamplingResult, String> {
+        self.submit(spec).map_err(|e| format!("{e:?}"))?.wait()
+    }
+
+    /// Merged snapshot across shards.
+    pub fn stats(&self) -> PoolStats {
+        let teles: Vec<&crate::coordinator::Telemetry> =
+            self.shards.iter().map(|c| c.telemetry()).collect();
+        PoolStats::collect(
+            self.placement.label(),
+            &teles,
+            self.pool_rejected.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop accepting work, drain every shard, join the loop threads.
+    pub fn shutdown(self) {
+        for shard in self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockBank;
+    use crate::solvers::eps_model::AnalyticGmm;
+    use crate::solvers::schedule::VpSchedule;
+
+    fn bank() -> Arc<dyn ModelBank> {
+        let sched = VpSchedule::default();
+        Arc::new(
+            MockBank::new(sched)
+                .with("gmm8", Box::new(AnalyticGmm::gmm8(sched)))
+                .with("gmm8b", Box::new(AnalyticGmm::gmm8(sched))),
+        )
+    }
+
+    fn spec(n: usize, seed: u64) -> RequestSpec {
+        RequestSpec { n_samples: n, seed, ..Default::default() }
+    }
+
+    fn pool(shards: usize, placement: PlacementPolicy) -> WorkerPool {
+        WorkerPool::start(bank(), PoolConfig { shards, placement, ..Default::default() })
+    }
+
+    #[test]
+    fn single_shard_pool_matches_bare_coordinator() {
+        // The pool path must be numerically identical to the in-process
+        // solver drive (same seed, same model) — same invariant the
+        // coordinator keeps.
+        let sched = VpSchedule::default();
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let s = spec(64, 9);
+        let via_pool = p.sample(s.clone()).unwrap();
+        p.shutdown();
+
+        let model = AnalyticGmm::gmm8(sched);
+        let mut solver = s.build_solver(sched, 2).unwrap();
+        let direct = crate::solvers::sample_with(&mut *solver, &model);
+        assert_eq!(via_pool.samples.as_slice(), direct.as_slice());
+        assert!(!via_pool.cancelled);
+    }
+
+    #[test]
+    fn round_robin_spreads_sequential_requests() {
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        for i in 0..4 {
+            p.sample(spec(8, i)).unwrap();
+        }
+        let stats = p.stats();
+        assert_eq!(stats.per_shard[0].admitted, 2);
+        assert_eq!(stats.per_shard[1].admitted, 2);
+        assert_eq!(stats.finished(), 4);
+        p.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_ties_break_to_first_shard() {
+        // Sequential requests always see idle shards, so the tie-break
+        // must deterministically pick shard 0 every time.
+        let p = pool(3, PlacementPolicy::LeastLoaded);
+        for i in 0..3 {
+            p.sample(spec(8, i)).unwrap();
+        }
+        let stats = p.stats();
+        assert_eq!(stats.per_shard[0].admitted, 3);
+        assert_eq!(stats.per_shard[1].admitted, 0);
+        assert_eq!(stats.per_shard[2].admitted, 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn affinity_pins_a_dataset_to_one_shard() {
+        let p = pool(4, PlacementPolicy::DatasetAffinity);
+        for i in 0..6 {
+            p.sample(spec(8, i)).unwrap();
+        }
+        let stats = p.stats();
+        let hot: Vec<&ShardStats> =
+            stats.per_shard.iter().filter(|s| s.admitted > 0).collect();
+        assert_eq!(hot.len(), 1, "one dataset must land on exactly one shard");
+        assert_eq!(hot[0].admitted, 6);
+        p.shutdown();
+    }
+
+    #[test]
+    fn invalid_spec_is_not_failed_over() {
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        let mut s = spec(4, 0);
+        s.solver = "frobnicate".into();
+        match p.submit(s) {
+            Err(SubmitError::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {:?}", other.map(|t| t.shard)),
+        }
+        assert_eq!(p.stats().pool_rejected, 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn tag_registry_cancels_and_clears() {
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let t = p.submit_tagged(spec(8, 0), Some(42)).unwrap();
+        let handle = t.cancel_handle();
+        // Whatever the request's fate, the tag must be cancellable once
+        // and gone after.
+        assert!(p.cancel_tag(42));
+        assert!(!p.cancel_tag(42));
+        let _ = t.wait();
+        p.deregister_tag(42, &handle); // idempotent on a cleared tag
+        p.shutdown();
+    }
+
+    #[test]
+    fn reused_tag_is_not_evicted_by_stale_deregister() {
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let old = p.submit_tagged(spec(8, 0), Some(7)).unwrap();
+        let old_handle = old.cancel_handle();
+        let _ = old.wait();
+        // A newer request re-uses the tag before the old one's handler
+        // deregisters; the stale deregister must leave it alone.
+        let newer = p.submit_tagged(spec(8, 1), Some(7)).unwrap();
+        p.deregister_tag(7, &old_handle);
+        assert!(p.cancel_tag(7), "re-used tag must survive a stale deregister");
+        let _ = newer.wait();
+        p.shutdown();
+    }
+
+    #[test]
+    fn failed_submit_does_not_leak_tag() {
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let mut s = spec(4, 0);
+        s.solver = "frobnicate".into();
+        assert!(p.submit_tagged(s, Some(9)).is_err());
+        assert!(!p.cancel_tag(9), "tag from a failed submit must be cleaned up");
+        p.shutdown();
+    }
+
+    #[test]
+    fn pool_stats_merge_across_shards() {
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        for i in 0..4 {
+            p.sample(spec(16, i)).unwrap();
+        }
+        let s = p.stats();
+        assert_eq!(s.shards(), 2);
+        assert_eq!(s.finished(), 4);
+        assert_eq!(s.admitted(), 4);
+        assert!(s.evals() >= 20, "evals {}", s.evals());
+        assert_eq!(s.inflight_rows(), 0);
+        assert!(s.summary().contains("placement=round-robin"));
+        p.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_every_shard() {
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        let tickets: Vec<_> = (0..4).map(|i| p.submit(spec(16, i)).unwrap()).collect();
+        p.shutdown();
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+    }
+}

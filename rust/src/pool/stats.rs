@@ -1,0 +1,257 @@
+//! Aggregated pool statistics: one merged view over N shard
+//! [`Telemetry`] instances.
+//!
+//! Counters add; occupancy/padding re-derive from the summed rows and
+//! evals; percentiles are computed over the *pooled* raw latency
+//! samples (averaging per-shard percentiles would be wrong whenever
+//! shards carry uneven load).
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::telemetry::sorted_percentile;
+use crate::coordinator::Telemetry;
+use crate::json::Json;
+
+/// One shard's counters at snapshot time.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub admitted: usize,
+    pub finished: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+    pub evals: usize,
+    pub rows: usize,
+    pub padded_rows: usize,
+    pub inflight_requests: usize,
+    pub inflight_rows: usize,
+}
+
+impl ShardStats {
+    pub fn from_telemetry(shard: usize, t: &Telemetry) -> ShardStats {
+        ShardStats {
+            shard,
+            admitted: t.requests_admitted.load(Ordering::Relaxed),
+            finished: t.requests_finished.load(Ordering::Relaxed),
+            cancelled: t.requests_cancelled.load(Ordering::Relaxed),
+            rejected: t.requests_rejected.load(Ordering::Relaxed),
+            evals: t.evals.load(Ordering::Relaxed),
+            rows: t.rows.load(Ordering::Relaxed),
+            padded_rows: t.padded_rows.load(Ordering::Relaxed),
+            inflight_requests: t.inflight_requests.load(Ordering::Relaxed),
+            inflight_rows: t.inflight_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mean rows per fused evaluation on this shard.
+    pub fn occupancy(&self) -> f64 {
+        if self.evals == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.evals as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("finished", Json::Num(self.finished as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("evals", Json::Num(self.evals as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("inflight_requests", Json::Num(self.inflight_requests as f64)),
+            ("inflight_rows", Json::Num(self.inflight_rows as f64)),
+            ("occupancy", Json::Num(self.occupancy())),
+        ])
+    }
+}
+
+/// Merged snapshot over every shard of a pool.
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    pub placement: &'static str,
+    pub per_shard: Vec<ShardStats>,
+    /// Requests the pool itself refused (global admission control or
+    /// every shard's queue full) — shard-level queue rejections are in
+    /// `per_shard[i].rejected`.
+    pub pool_rejected: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl PoolStats {
+    /// Snapshot and merge the given shards' telemetry.
+    pub fn collect(
+        placement: &'static str,
+        telemetries: &[&Telemetry],
+        pool_rejected: usize,
+    ) -> PoolStats {
+        let per_shard: Vec<ShardStats> = telemetries
+            .iter()
+            .enumerate()
+            .map(|(i, t)| ShardStats::from_telemetry(i, t))
+            .collect();
+        let mut lat: Vec<f64> = Vec::new();
+        for t in telemetries {
+            lat.extend(t.latency_samples());
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        PoolStats {
+            placement,
+            per_shard,
+            pool_rejected,
+            p50_ms: 1e3 * sorted_percentile(&lat, 0.5),
+            p99_ms: 1e3 * sorted_percentile(&lat, 0.99),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.per_shard.iter().map(|s| s.admitted).sum()
+    }
+
+    pub fn finished(&self) -> usize {
+        self.per_shard.iter().map(|s| s.finished).sum()
+    }
+
+    pub fn cancelled(&self) -> usize {
+        self.per_shard.iter().map(|s| s.cancelled).sum()
+    }
+
+    /// Shard queue rejections plus pool-level rejections.
+    pub fn rejected(&self) -> usize {
+        self.per_shard.iter().map(|s| s.rejected).sum::<usize>() + self.pool_rejected
+    }
+
+    pub fn evals(&self) -> usize {
+        self.per_shard.iter().map(|s| s.evals).sum()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.per_shard.iter().map(|s| s.rows).sum()
+    }
+
+    pub fn inflight_rows(&self) -> usize {
+        self.per_shard.iter().map(|s| s.inflight_rows).sum()
+    }
+
+    /// Pool-wide mean rows per fused evaluation.
+    pub fn occupancy(&self) -> f64 {
+        let evals = self.evals();
+        if evals == 0 {
+            0.0
+        } else {
+            self.rows() as f64 / evals as f64
+        }
+    }
+
+    /// Pool-wide fraction of executed rows that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let rows = self.rows();
+        let pad: usize = self.per_shard.iter().map(|s| s.padded_rows).sum();
+        if rows + pad == 0 {
+            0.0
+        } else {
+            pad as f64 / (rows + pad) as f64
+        }
+    }
+
+    /// One-line summary for heartbeat logs / bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} placement={} finished={} cancelled={} rejected={} evals={} rows={} \
+             occupancy={:.1} pad={:.1}% p50={:.1}ms p99={:.1}ms",
+            self.shards(),
+            self.placement,
+            self.finished(),
+            self.cancelled(),
+            self.rejected(),
+            self.evals(),
+            self.rows(),
+            self.occupancy(),
+            100.0 * self.padding_fraction(),
+            self.p50_ms,
+            self.p99_ms,
+        )
+    }
+
+    /// The `stats` protocol response (field names kept compatible with
+    /// the single-coordinator server).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("shards", Json::Num(self.shards() as f64)),
+            ("placement", Json::Str(self.placement.to_string())),
+            ("finished", Json::Num(self.finished() as f64)),
+            ("admitted", Json::Num(self.admitted() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
+            ("cancelled", Json::Num(self.cancelled() as f64)),
+            ("evals", Json::Num(self.evals() as f64)),
+            ("rows", Json::Num(self.rows() as f64)),
+            ("inflight_rows", Json::Num(self.inflight_rows() as f64)),
+            ("occupancy", Json::Num(self.occupancy())),
+            ("padding_fraction", Json::Num(self.padding_fraction())),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_sum_across_shards() {
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.requests_admitted.fetch_add(3, Ordering::Relaxed);
+        b.requests_admitted.fetch_add(5, Ordering::Relaxed);
+        a.evals.fetch_add(2, Ordering::Relaxed);
+        b.evals.fetch_add(2, Ordering::Relaxed);
+        a.rows.fetch_add(20, Ordering::Relaxed);
+        b.rows.fetch_add(60, Ordering::Relaxed);
+        a.record_finish(0.010, 0.0);
+        b.record_finish(0.030, 0.0);
+        let s = PoolStats::collect("round-robin", &[&a, &b], 1);
+        assert_eq!(s.shards(), 2);
+        assert_eq!(s.admitted(), 8);
+        assert_eq!(s.finished(), 2);
+        assert_eq!(s.evals(), 4);
+        assert_eq!(s.rows(), 80);
+        assert_eq!(s.rejected(), 1); // pool-level only here
+        assert!((s.occupancy() - 20.0).abs() < 1e-9);
+        assert!(s.summary().contains("shards=2"));
+        assert_eq!(s.to_json().get("finished").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn percentiles_are_pooled_not_averaged() {
+        // Shard a: 49 fast requests; shard b: 1 slow one. The pooled
+        // p50 must sit with the fast mass, not between the shards.
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        for _ in 0..49 {
+            a.record_finish(0.010, 0.0);
+        }
+        b.record_finish(1.0, 0.0);
+        let s = PoolStats::collect("least-loaded", &[&a, &b], 0);
+        assert!((s.p50_ms - 10.0).abs() < 1e-6, "p50 {}", s.p50_ms);
+        assert!(s.p99_ms > 500.0, "p99 {}", s.p99_ms);
+    }
+
+    #[test]
+    fn empty_pool_stats_are_zero() {
+        let a = Telemetry::new();
+        let s = PoolStats::collect("affinity", &[&a], 0);
+        assert_eq!(s.finished(), 0);
+        assert_eq!(s.occupancy(), 0.0);
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.to_json().get("shards").as_usize(), Some(1));
+    }
+}

@@ -15,6 +15,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::manifest::{DatasetEntry, Manifest};
+// The registry closure ships no `xla` crate; the stub mirrors its API
+// and fails at PjRtClient construction (see xla_stub.rs).
+use crate::runtime::xla_stub as xla;
 use crate::solvers::EpsModel;
 use crate::tensor::Tensor;
 

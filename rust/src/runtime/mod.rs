@@ -15,6 +15,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub(crate) mod xla_stub;
 
 pub use engine::{CombineExec, PjRtEngine, PjRtEps};
 pub use manifest::{DatasetEntry, Manifest, TrainReport};

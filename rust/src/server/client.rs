@@ -46,9 +46,37 @@ impl Client {
         self.call(&Json::obj(vec![("op", Json::Str("stats".into()))]))
     }
 
+    /// Per-shard telemetry breakdown of the serving pool.
+    pub fn shards(&mut self) -> Result<Json, String> {
+        self.call(&Json::obj(vec![("op", Json::Str("shards".into()))]))
+    }
+
+    /// Cancel the request registered under `tag` (typically submitted by
+    /// a *different* connection, whose blocked `sample` call then
+    /// returns its partial result). Ok(false) when no such tag is live.
+    pub fn cancel(&mut self, tag: u64) -> Result<bool, String> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("cancel".into())),
+            ("tag", Json::Num(tag as f64)),
+        ]);
+        let resp = self.call(&req)?;
+        Ok(resp.get("cancelled").as_bool().unwrap_or(false))
+    }
+
     /// Request samples; returns (samples, server-reported total seconds).
     pub fn sample(&mut self, spec: &RequestSpec) -> Result<(Tensor, f64), String> {
-        let req = Json::obj(vec![
+        let out = self.sample_tagged(spec, None)?;
+        Ok((out.samples, out.seconds))
+    }
+
+    /// Request samples with an optional cancellation tag; returns the
+    /// full outcome including the `cancelled` flag and NFE consumed.
+    pub fn sample_tagged(
+        &mut self,
+        spec: &RequestSpec,
+        tag: Option<u64>,
+    ) -> Result<SampleOutcome, String> {
+        let mut pairs = vec![
             ("op", Json::Str("sample".into())),
             ("dataset", Json::Str(spec.dataset.clone())),
             ("solver", Json::Str(spec.solver.clone())),
@@ -58,12 +86,33 @@ impl Client {
             ("t_end", Json::Num(spec.t_end)),
             ("seed", Json::Num(spec.seed as f64)),
             ("return_samples", Json::Bool(true)),
-        ]);
-        let resp = self.call(&req)?;
+        ];
+        if let Some(ms) = spec.deadline_ms {
+            pairs.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        if let Some(tag) = tag {
+            pairs.push(("tag", Json::Num(tag as f64)));
+        }
+        let resp = self.call(&Json::obj(pairs))?;
         let samples = samples_from_json(&resp)?;
-        let total = resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3;
-        Ok((samples, total))
+        Ok(SampleOutcome {
+            samples,
+            seconds: resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3,
+            nfe: resp.get("nfe").as_usize().unwrap_or(0),
+            cancelled: resp.get("cancelled").as_bool().unwrap_or(false),
+        })
     }
+}
+
+/// Full outcome of one `sample` call (cancellation-aware clients).
+#[derive(Debug)]
+pub struct SampleOutcome {
+    pub samples: Tensor,
+    /// Server-reported submit-to-finish seconds.
+    pub seconds: f64,
+    /// Network evaluations actually consumed (< budget when cancelled).
+    pub nfe: usize,
+    pub cancelled: bool,
 }
 
 /// Aggregate results of one load-generation run.

@@ -1,26 +1,39 @@
-//! TCP JSON-lines serving front end over the coordinator.
+//! TCP JSON-lines serving front end over the sharded worker pool.
 //!
 //! Wire protocol (one JSON object per line, both directions):
 //!
 //! ```text
 //! -> {"op":"sample","dataset":"gmm8","solver":"era","nfe":10,
 //!     "n_samples":64,"grid":"logsnr","t_end":0.001,"seed":7,
-//!     "return_samples":true}
-//! <- {"ok":true,"id":3,"nfe":10,"rows":64,"dim":2,
+//!     "return_samples":true,"deadline_ms":500,"tag":42}
+//! <- {"ok":true,"id":3,"nfe":10,"rows":64,"dim":2,"cancelled":false,
 //!     "queue_ms":0.1,"total_ms":41.0,"samples":[[..],[..],...]}
 //!
+//! -> {"op":"cancel","tag":42}
+//! <- {"ok":true,"cancelled":true}
+//!
 //! -> {"op":"stats"}
-//! <- {"ok":true,"finished":12,"evals":180,...}
+//! <- {"ok":true,"shards":4,"finished":12,"evals":180,...}
+//!
+//! -> {"op":"shards"}
+//! <- {"ok":true,"shards":4,"placement":"least-loaded",
+//!     "per_shard":[{"shard":0,"admitted":3,...},...]}
 //!
 //! -> {"op":"ping"}            <- {"ok":true,"pong":true}
 //! ```
 //!
+//! `deadline_ms` bounds one request's wall time; the owning shard
+//! retires it mid-trajectory when it expires. `tag` registers the
+//! request in the pool's cancellation registry so *any* connection can
+//! cancel it — the blocked submitter then receives its partial,
+//! `cancelled:true` result.
+//!
 //! Threads + channels, no async runtime (the offline registry closure
 //! carries no tokio): one acceptor, one handler thread per connection,
-//! all sharing the [`Coordinator`] handle. Handler threads block on
+//! all sharing the [`WorkerPool`] handle. Handler threads block on
 //! their request's ticket, so slow requests never head-of-line-block
-//! other connections; the coordinator's admission queue is the only
-//! shared backpressure point.
+//! other connections; the pool's global admission control and the
+//! per-shard queues are the shared backpressure points.
 
 pub mod client;
 pub mod protocol;
@@ -30,8 +43,9 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, SubmitError};
+use crate::coordinator::SubmitError;
 use crate::json::Json;
+use crate::pool::WorkerPool;
 use protocol::{parse_request, result_to_json, Request};
 
 /// Server configuration.
@@ -58,7 +72,7 @@ pub struct Server {
 
 impl Server {
     /// Bind and start serving on a background acceptor thread.
-    pub fn start(coord: Arc<Coordinator>, config: ServerConfig) -> std::io::Result<Server> {
+    pub fn start(pool: Arc<WorkerPool>, config: ServerConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(&config.addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -78,14 +92,14 @@ impl Server {
                                 continue;
                             }
                             live.fetch_add(1, Ordering::Relaxed);
-                            let coord = coord.clone();
+                            let pool = pool.clone();
                             let live2 = live.clone();
                             let stop3 = stop2.clone();
                             handlers.push(
                                 std::thread::Builder::new()
                                     .name("era-conn".into())
                                     .spawn(move || {
-                                        let _ = handle_connection(stream, &coord, &stop3);
+                                        let _ = handle_connection(stream, &pool, &stop3);
                                         live2.fetch_sub(1, Ordering::Relaxed);
                                     })
                                     .expect("spawn handler"),
@@ -140,7 +154,7 @@ fn reject_overloaded(mut stream: &TcpStream) -> std::io::Result<()> {
 
 fn handle_connection(
     stream: TcpStream,
-    coord: &Coordinator,
+    pool: &WorkerPool,
     stop: &AtomicBool,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
@@ -158,7 +172,7 @@ fn handle_connection(
                 if line.trim().is_empty() {
                     continue;
                 }
-                let response = dispatch(&line, coord);
+                let response = dispatch(&line, pool);
                 writeln!(writer, "{}", response.to_string())?;
                 writer.flush()?;
             }
@@ -175,36 +189,47 @@ fn handle_connection(
 }
 
 /// Handle one protocol line. Split out for direct unit testing.
-pub fn dispatch(line: &str, coord: &Coordinator) -> Json {
+pub fn dispatch(line: &str, pool: &WorkerPool) -> Json {
     match parse_request(line) {
         Err(e) => err_json(&format!("bad request: {e}")),
         Ok(Request::Ping) => {
             Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
         }
-        Ok(Request::Stats) => {
-            let t = coord.telemetry();
+        Ok(Request::Stats) => pool.stats().to_json(),
+        Ok(Request::Shards) => {
+            let stats = pool.stats();
+            let per_shard: Vec<Json> = stats.per_shard.iter().map(|s| s.to_json()).collect();
             Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                ("finished", Json::Num(t.requests_finished.load(Ordering::Relaxed) as f64)),
-                ("admitted", Json::Num(t.requests_admitted.load(Ordering::Relaxed) as f64)),
-                ("rejected", Json::Num(t.requests_rejected.load(Ordering::Relaxed) as f64)),
-                ("evals", Json::Num(t.evals.load(Ordering::Relaxed) as f64)),
-                ("rows", Json::Num(t.rows.load(Ordering::Relaxed) as f64)),
-                ("occupancy", Json::Num(t.mean_batch_occupancy())),
-                ("padding_fraction", Json::Num(t.padding_fraction())),
-                ("p50_ms", Json::Num(1e3 * t.latency_percentile(0.5))),
-                ("p99_ms", Json::Num(1e3 * t.latency_percentile(0.99))),
+                ("shards", Json::Num(stats.shards() as f64)),
+                ("placement", Json::Str(stats.placement.to_string())),
+                ("per_shard", Json::Arr(per_shard)),
             ])
         }
-        Ok(Request::Sample { spec, return_samples }) => match coord.submit(spec) {
-            Err(SubmitError::QueueFull) => err_json("busy: queue full"),
-            Err(SubmitError::Shutdown) => err_json("shutting down"),
-            Err(SubmitError::Invalid(e)) => err_json(&format!("invalid: {e}")),
-            Ok(ticket) => match ticket.wait() {
-                Err(e) => err_json(&e),
-                Ok(res) => result_to_json(&res, return_samples),
-            },
-        },
+        Ok(Request::Cancel { tag }) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cancelled", Json::Bool(pool.cancel_tag(tag))),
+        ]),
+        Ok(Request::Sample { spec, return_samples, tag }) => {
+            match pool.submit_tagged(spec, tag) {
+                Err(SubmitError::QueueFull) => err_json("busy: queue full"),
+                Err(SubmitError::Shutdown) => err_json("shutting down"),
+                Err(SubmitError::Invalid(e)) => err_json(&format!("invalid: {e}")),
+                Ok(ticket) => {
+                    let handle = ticket.cancel_handle();
+                    let out = ticket.wait();
+                    // Identity-checked: a tag re-used by a newer request
+                    // in the meantime is not evicted.
+                    if let Some(tag) = tag {
+                        pool.deregister_tag(tag, &handle);
+                    }
+                    match out {
+                        Err(e) => err_json(&e),
+                        Ok(res) => result_to_json(&res, return_samples),
+                    }
+                }
+            }
+        }
     }
 }
 

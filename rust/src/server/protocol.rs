@@ -8,7 +8,12 @@ use crate::json::{self, Json};
 pub enum Request {
     Ping,
     Stats,
-    Sample { spec: RequestSpec, return_samples: bool },
+    /// Per-shard telemetry breakdown of the serving pool.
+    Shards,
+    /// Cancel the in-flight request registered under `tag` (see the
+    /// `tag` field of `sample`). Any connection may cancel any tag.
+    Cancel { tag: u64 },
+    Sample { spec: RequestSpec, return_samples: bool, tag: Option<u64> },
 }
 
 /// Parse one request line.
@@ -18,6 +23,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     match op {
         "ping" => Ok(Request::Ping),
         "stats" => Ok(Request::Stats),
+        "shards" => Ok(Request::Shards),
+        "cancel" => {
+            let tag = j.get("tag").as_usize().ok_or("cancel needs a numeric tag")? as u64;
+            Ok(Request::Cancel { tag })
+        }
         "sample" => {
             let d = RequestSpec::default();
             let spec = RequestSpec {
@@ -28,16 +38,20 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 grid: j.get("grid").as_str().unwrap_or(&d.grid).to_string(),
                 t_end: j.get("t_end").as_f64().unwrap_or(d.t_end),
                 seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
+                deadline_ms: j.get("deadline_ms").as_usize().map(|v| v as u64),
             };
             let return_samples = j.get("return_samples").as_bool().unwrap_or(false);
-            Ok(Request::Sample { spec, return_samples })
+            let tag = j.get("tag").as_usize().map(|v| v as u64);
+            Ok(Request::Sample { spec, return_samples, tag })
         }
         other => Err(format!("unknown op '{other}'")),
     }
 }
 
 /// Serialise a finished request. Samples are included row-by-row only on
-/// demand (they dominate the payload for large batches).
+/// demand (they dominate the payload for large batches). A `cancelled`
+/// response still carries `ok:true` — the partial iterate and the NFE
+/// actually consumed are real data.
 pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
     let mut obj = Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -45,6 +59,7 @@ pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
         ("nfe", Json::Num(res.nfe as f64)),
         ("rows", Json::Num(res.samples.rows() as f64)),
         ("dim", Json::Num(res.samples.cols() as f64)),
+        ("cancelled", Json::Bool(res.cancelled)),
         ("queue_ms", Json::Num(1e3 * res.queue_seconds)),
         ("total_ms", Json::Num(1e3 * res.total_seconds)),
     ]);
@@ -84,11 +99,28 @@ mod tests {
     fn parses_sample_request_with_defaults() {
         let r = parse_request(r#"{"op":"sample","solver":"era-5@15","nfe":20}"#).unwrap();
         match r {
-            Request::Sample { spec, return_samples } => {
+            Request::Sample { spec, return_samples, tag } => {
                 assert_eq!(spec.solver, "era-5@15");
                 assert_eq!(spec.nfe, 20);
                 assert_eq!(spec.dataset, "gmm8");
+                assert_eq!(spec.deadline_ms, None);
                 assert!(!return_samples);
+                assert_eq!(tag, None);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn parses_deadline_and_tag() {
+        let r = parse_request(
+            r#"{"op":"sample","solver":"era","deadline_ms":250,"tag":7}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample { spec, tag, .. } => {
+                assert_eq!(spec.deadline_ms, Some(250));
+                assert_eq!(tag, Some(7));
             }
             _ => panic!("wrong variant"),
         }
@@ -104,6 +136,17 @@ mod tests {
     }
 
     #[test]
+    fn parses_shards_and_cancel() {
+        assert!(matches!(parse_request(r#"{"op":"shards"}"#), Ok(Request::Shards)));
+        match parse_request(r#"{"op":"cancel","tag":42}"#).unwrap() {
+            Request::Cancel { tag } => assert_eq!(tag, 42),
+            _ => panic!("wrong variant"),
+        }
+        // A cancel without a tag is malformed.
+        assert!(parse_request(r#"{"op":"cancel"}"#).is_err());
+    }
+
+    #[test]
     fn result_roundtrip_with_samples() {
         let res = SamplingResult {
             id: 5,
@@ -111,12 +154,14 @@ mod tests {
             nfe: 10,
             queue_seconds: 0.001,
             total_seconds: 0.05,
+            cancelled: false,
         };
         let j = result_to_json(&res, true);
         let text = j.to_string();
         let back = json::parse(&text).unwrap();
         assert_eq!(back.get("ok").as_bool(), Some(true));
         assert_eq!(back.get("nfe").as_usize(), Some(10));
+        assert_eq!(back.get("cancelled").as_bool(), Some(false));
         let t = samples_from_json(&back).unwrap();
         assert_eq!(t.as_slice(), res.samples.as_slice());
     }
@@ -129,9 +174,26 @@ mod tests {
             nfe: 10,
             queue_seconds: 0.0,
             total_seconds: 0.0,
+            cancelled: false,
         };
         let j = result_to_json(&res, false);
         assert!(samples_from_json(&j).is_err());
         assert_eq!(j.get("rows").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn cancelled_result_marks_flag_and_partial_nfe() {
+        let res = SamplingResult {
+            id: 9,
+            samples: crate::tensor::Tensor::zeros(4, 2),
+            nfe: 3,
+            queue_seconds: 0.0,
+            total_seconds: 0.01,
+            cancelled: true,
+        };
+        let j = result_to_json(&res, false);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("cancelled").as_bool(), Some(true));
+        assert_eq!(j.get("nfe").as_usize(), Some(3));
     }
 }

@@ -129,15 +129,26 @@ impl SolverKind {
             }
             return None;
         }
+        // All `era-*` variants: k = 0 would mean zero Lagrange basis
+        // points and panics downstream in the predictor; reject at parse
+        // so the error surfaces as an invalid request, not a dead loop
+        // thread.
         if let Some(rest) = s.strip_prefix("era-fixed-") {
             let k: usize = rest.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
             return Some(SolverKind::Era { k, selection: era::Selection::FixedLast });
         }
         if let Some(rest) = s.strip_prefix("era-const-") {
             // era-const-<k>@<scale>
             let (k_str, c_str) = rest.split_once('@')?;
+            let k: usize = k_str.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
             return Some(SolverKind::Era {
-                k: k_str.parse().ok()?,
+                k,
                 selection: era::Selection::ConstantScale { scale: c_str.parse().ok()? },
             });
         }
@@ -147,8 +158,12 @@ impl SolverKind {
                 Some((a, b)) => (a, b.parse().ok()?),
                 None => (rest, 0.3),
             };
+            let k: usize = k_str.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
             return Some(SolverKind::Era {
-                k: k_str.parse().ok()?,
+                k,
                 selection: era::Selection::ErrorRobust { lambda: lam },
             });
         }
@@ -265,8 +280,21 @@ mod tests {
             assert_eq!(k2.label(), l1);
         }
         assert!(SolverKind::parse("dpm-4").is_none());
+        assert!(SolverKind::parse("dpm-0").is_none());
         assert!(SolverKind::parse("wat").is_none());
         assert!(SolverKind::parse("era-x").is_none());
+        // k = 0 means zero Lagrange bases — must be rejected for every
+        // era variant, not panic downstream.
+        assert!(SolverKind::parse("era-0").is_none());
+        assert!(SolverKind::parse("era-0@0.3").is_none());
+        assert!(SolverKind::parse("era-fixed-0").is_none());
+        assert!(SolverKind::parse("era-const-0@0.5").is_none());
+        // Malformed suffixes stay rejected.
+        assert!(SolverKind::parse("era-fixed-").is_none());
+        assert!(SolverKind::parse("era-const-3").is_none());
+        assert!(SolverKind::parse("era-const-3@").is_none());
+        assert!(SolverKind::parse("era-3@").is_none());
+        assert!(SolverKind::parse("era-").is_none());
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Integration tests for the sharded worker pool: mid-trajectory
+//! cancellation, deadlines, global admission control, linger-policy
+//! fusion through the pool path, and wire-level cancel over TCP.
+//!
+//! A `PacedBank` adds a fixed latency per model evaluation (emulating a
+//! device-bound denoiser) so requests are slow enough to cancel
+//! mid-trajectory deterministically while tests stay fast.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec, SubmitError};
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
+use era_solver::server::client::Client;
+use era_solver::server::{Server, ServerConfig};
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+use era_solver::tensor::Tensor;
+
+/// A model bank with a fixed per-evaluation latency.
+struct PacedBank {
+    inner: MockBank,
+    per_eval: Duration,
+}
+
+impl PacedBank {
+    fn gmm8(per_eval: Duration) -> PacedBank {
+        let sched = VpSchedule::default();
+        PacedBank {
+            inner: MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+            per_eval,
+        }
+    }
+}
+
+impl ModelBank for PacedBank {
+    fn sched(&self) -> VpSchedule {
+        self.inner.sched()
+    }
+
+    fn dim(&self, dataset: &str) -> Result<usize, String> {
+        self.inner.dim(dataset)
+    }
+
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        std::thread::sleep(self.per_eval);
+        self.inner.eval(dataset, x, t)
+    }
+}
+
+fn paced_pool(per_eval_ms: u64, shards: usize, shard: CoordinatorConfig) -> WorkerPool {
+    let bank: Arc<dyn ModelBank> =
+        Arc::new(PacedBank::gmm8(Duration::from_millis(per_eval_ms)));
+    WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards,
+            placement: PlacementPolicy::RoundRobin,
+            shard,
+            max_inflight_rows: 0,
+        },
+    )
+}
+
+fn spec(n: usize, nfe: usize, seed: u64) -> RequestSpec {
+    RequestSpec { n_samples: n, nfe, seed, ..Default::default() }
+}
+
+/// The acceptance scenario: a cancelled request retires early (NFE
+/// consumed < budget) while a batch-mate on the same shard completes
+/// unaffected (bit-identical to an undisturbed run).
+#[test]
+fn cancelled_request_retires_early_batchmates_unaffected() {
+    let pool = paced_pool(10, 1, CoordinatorConfig::default());
+
+    // Victim: a long trajectory we cancel a few rounds in.
+    let victim = pool.submit(spec(8, 60, 1)).unwrap();
+    // Batch-mate on the same (only) shard: short trajectory, runs in the
+    // same fused slabs as the victim for its first rounds.
+    let mate = pool.submit(spec(8, 10, 2)).unwrap();
+    assert_eq!(victim.shard, mate.shard, "both must share the one shard");
+
+    // Let a few evaluation rounds happen (poll rather than guess a
+    // sleep so a loaded box cannot cancel before admission), then
+    // cancel the victim.
+    for _ in 0..400 {
+        if pool.stats().evals() >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(pool.stats().evals() >= 2, "shard never started evaluating");
+    victim.cancel();
+
+    let v = victim.wait().unwrap();
+    assert!(v.cancelled, "victim must report cancellation");
+    assert!(v.nfe < 60, "victim consumed its whole budget ({} evals)", v.nfe);
+    assert_eq!(v.samples.rows(), 8, "partial iterate still has the batch rows");
+    assert!(v.samples.all_finite());
+
+    let m = mate.wait().unwrap();
+    assert!(!m.cancelled);
+    assert_eq!(m.nfe, 10, "batch-mate must complete its full budget");
+    assert_eq!(m.samples.rows(), 8);
+
+    // The mate's result must be exactly what an undisturbed run yields.
+    let solo = paced_pool(0, 1, CoordinatorConfig::default());
+    let undisturbed = solo.sample(spec(8, 10, 2)).unwrap();
+    assert_eq!(m.samples.as_slice(), undisturbed.samples.as_slice());
+    solo.shutdown();
+
+    let stats = pool.stats();
+    assert_eq!(stats.cancelled(), 1);
+    assert_eq!(stats.finished(), 1);
+    pool.shutdown();
+}
+
+#[test]
+fn deadline_expires_mid_trajectory() {
+    let pool = paced_pool(10, 1, CoordinatorConfig::default());
+    let mut s = spec(8, 60, 3);
+    s.deadline_ms = Some(45);
+    let res = pool.sample(s).unwrap();
+    assert!(res.cancelled, "deadline must retire the request");
+    // Typically a handful of evaluations happen before expiry; on a
+    // stalled box it may be zero, but it can never reach the budget.
+    assert!(res.nfe < 60, "nfe {} should be far below budget", res.nfe);
+    pool.shutdown();
+}
+
+#[test]
+fn queued_request_cancelled_before_admission_costs_nothing() {
+    // One shard, one active slot: the second request waits in the queue
+    // while the first runs; cancelling it there must cost zero evals.
+    let cfg = CoordinatorConfig { max_active: 1, ..Default::default() };
+    let pool = paced_pool(10, 1, cfg);
+    let first = pool.submit(spec(8, 10, 1)).unwrap();
+    let queued = pool.submit(spec(8, 10, 2)).unwrap();
+    queued.cancel();
+    let q = queued.wait().unwrap();
+    assert!(q.cancelled);
+    assert_eq!(q.nfe, 0);
+    assert_eq!(q.samples.rows(), 0);
+    assert!(!first.wait().unwrap().cancelled);
+    pool.shutdown();
+}
+
+#[test]
+fn global_admission_cap_rejects_and_recovers() {
+    let bank: Arc<dyn ModelBank> = Arc::new(PacedBank::gmm8(Duration::from_millis(10)));
+    let pool = WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards: 2,
+            placement: PlacementPolicy::RoundRobin,
+            shard: CoordinatorConfig::default(),
+            max_inflight_rows: 8,
+        },
+    );
+    let first = pool.submit(spec(8, 10, 1)).unwrap();
+    // The gauge already carries 8 rows, so any further rows must bounce.
+    match pool.submit(spec(8, 10, 2)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {:?}", other.map(|t| t.shard)),
+    }
+    assert_eq!(pool.stats().pool_rejected, 1);
+    first.wait().unwrap();
+    // Load drained: admission opens again.
+    assert!(pool.submit(spec(8, 10, 3)).is_ok());
+    pool.shutdown();
+}
+
+#[test]
+fn linger_policy_fuses_across_requests_through_the_pool() {
+    // Mirrors the coordinator's fusion test but through the pool path:
+    // 8 concurrent 16-row requests under a min_rows=64 linger policy
+    // must fuse into large slabs on the one shard.
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 256,
+            min_rows: 64,
+            max_wait: Duration::from_millis(30),
+        },
+        ..Default::default()
+    };
+    let pool = paced_pool(0, 1, cfg);
+    let tickets: Vec<_> = (0..8).map(|i| pool.submit(spec(16, 10, i)).unwrap()).collect();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.samples.rows(), 16);
+    }
+    let stats = pool.stats();
+    assert!(stats.evals() < 80, "no fusion happened: {} evals", stats.evals());
+    assert!(stats.occupancy() > 16.0, "occupancy {}", stats.occupancy());
+    pool.shutdown();
+}
+
+#[test]
+fn throughput_scales_with_shards_on_a_paced_bank() {
+    // Smoke-level scaling check (the full sweep lives in
+    // benches/bench_pool.rs): with a per-eval latency dominating, four
+    // shards must finish a fixed workload materially faster than one.
+    let run = |shards: usize| -> Duration {
+        let pool = paced_pool(5, shards, CoordinatorConfig::default());
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> =
+            (0..8).map(|i| pool.submit(spec(4, 10, i)).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let dt = t0.elapsed();
+        pool.shutdown();
+        dt
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    // One shard fuses everything into ~10 rounds of 5ms; four shards
+    // run ~10 rounds each in parallel over 2 requests apiece. Wall time
+    // must not degrade; allow generous scheduler noise.
+    assert!(
+        t4 <= t1 * 3,
+        "4 shards ({t4:?}) dramatically slower than 1 shard ({t1:?})"
+    );
+}
+
+#[test]
+fn wire_level_cancel_from_second_connection() {
+    let bank: Arc<dyn ModelBank> = Arc::new(PacedBank::gmm8(Duration::from_millis(10)));
+    let pool = Arc::new(WorkerPool::start(bank, PoolConfig::default()));
+    let server = Server::start(pool.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let submitter = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.sample_tagged(&spec(8, 60, 1), Some(77)).unwrap()
+    });
+
+    // Second connection cancels the tagged request once it is visibly
+    // in flight (poll stats rather than guessing a sleep).
+    let mut c2 = Client::connect(addr).unwrap();
+    let mut cancelled = false;
+    for _ in 0..200 {
+        let stats = c2.stats().unwrap();
+        if stats.get("admitted").as_usize() == Some(1) {
+            cancelled = c2.cancel(77).unwrap();
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(cancelled, "tag 77 was never cancellable");
+
+    let outcome = submitter.join().expect("submitter thread");
+    assert!(outcome.cancelled);
+    assert!(outcome.nfe < 60, "nfe {} should be below budget", outcome.nfe);
+    // The registry forgets the tag once the request is done.
+    assert!(!c2.cancel(77).unwrap());
+    server.shutdown();
+}

@@ -1,27 +1,40 @@
 //! Integration tests over the TCP serving path: real sockets, real
 //! threads, the mock model bank (no artifacts needed so these always
-//! run), plus one full-stack PJRT test when artifacts exist.
+//! run), plus one full-stack PJRT test when artifacts exist. The server
+//! fronts a [`WorkerPool`]; a one-shard pool reproduces the old bare
+//! coordinator behaviour exactly.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use era_solver::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec,
-};
 use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec};
 use era_solver::metrics;
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::server::client::{generate_load, Client};
 use era_solver::server::{Server, ServerConfig};
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
 
-fn mock_stack(config: CoordinatorConfig) -> (Server, Arc<Coordinator>) {
+fn mock_pool_stack(shards: usize, config: CoordinatorConfig) -> (Server, Arc<WorkerPool>) {
     let sched = VpSchedule::default();
     let bank: Arc<dyn ModelBank> =
         Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
-    let coord = Arc::new(Coordinator::start(bank, config));
-    let server = Server::start(coord.clone(), ServerConfig::default()).expect("bind");
-    (server, coord)
+    let pool = Arc::new(WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards,
+            placement: PlacementPolicy::RoundRobin,
+            shard: config,
+            max_inflight_rows: 0,
+        },
+    ));
+    let server = Server::start(pool.clone(), ServerConfig::default()).expect("bind");
+    (server, pool)
+}
+
+fn mock_stack(config: CoordinatorConfig) -> (Server, Arc<WorkerPool>) {
+    mock_pool_stack(1, config)
 }
 
 fn spec(n: usize, seed: u64) -> RequestSpec {
@@ -78,17 +91,18 @@ fn concurrent_clients_all_served() {
             min_rows: 32,
             max_wait: Duration::from_millis(5),
         },
+        ..Default::default()
     };
-    let (server, coord) = mock_stack(cfg);
+    let (server, pool) = mock_stack(cfg);
     let report = generate_load(server.local_addr(), &spec(32, 0), 6, 4);
     assert_eq!(report.errors, 0, "all requests should succeed");
     assert_eq!(report.requests, 24);
     assert!(report.throughput_rows > 0.0);
     // Cross-request fusion must have happened under this load.
     assert!(
-        coord.telemetry().mean_batch_occupancy() > 32.0,
+        pool.stats().occupancy() > 32.0,
         "occupancy {}",
-        coord.telemetry().mean_batch_occupancy()
+        pool.stats().occupancy()
     );
     server.shutdown();
 }
@@ -136,14 +150,56 @@ fn server_survives_client_disconnect_mid_session() {
 }
 
 #[test]
+fn stats_report_pool_shape() {
+    let (server, _pool) = mock_pool_stack(2, CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let (samples, _) = c.sample(&spec(16, 5)).unwrap();
+    assert_eq!(samples.rows(), 16);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("shards").as_usize(), Some(2));
+    assert_eq!(stats.get("finished").as_usize(), Some(1));
+    let shards = c.shards().unwrap();
+    assert_eq!(shards.get("shards").as_usize(), Some(2));
+    assert_eq!(shards.get("per_shard").as_arr().map(|a| a.len()), Some(2));
+    server.shutdown();
+}
+
+#[test]
+fn cancel_of_unknown_tag_is_false() {
+    let (server, _pool) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    assert!(!c.cancel(12345).unwrap());
+    server.shutdown();
+}
+
+#[test]
+fn deadline_zero_round_trips_as_cancelled() {
+    // deadline_ms=0 expires before admission: the wire response must be
+    // ok:true, cancelled:true, nfe 0, zero rows.
+    let (server, _pool) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let mut s = spec(32, 1);
+    s.deadline_ms = Some(0);
+    let out = c.sample_tagged(&s, None).unwrap();
+    assert!(out.cancelled);
+    assert_eq!(out.nfe, 0);
+    assert_eq!(out.samples.rows(), 0);
+    // Connection still serves normal requests afterwards.
+    let (samples, _) = c.sample(&spec(8, 2)).unwrap();
+    assert_eq!(samples.rows(), 8);
+    server.shutdown();
+}
+
+#[test]
 fn full_stack_pjrt_when_artifacts_exist() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         return;
     }
     let engine = Arc::new(era_solver::runtime::PjRtEngine::new("artifacts").unwrap());
     let entry = engine.dataset("gmm8").unwrap().clone();
-    let coord = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
-    let server = Server::start(coord.clone(), ServerConfig::default()).unwrap();
+    let bank: Arc<dyn ModelBank> = engine;
+    let pool = Arc::new(WorkerPool::start(bank, PoolConfig::default()));
+    let server = Server::start(pool.clone(), ServerConfig::default()).unwrap();
     let mut c = Client::connect(server.local_addr()).unwrap();
     let mut s = spec(256, 3);
     s.grid = "logsnr".into();
