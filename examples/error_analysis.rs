@@ -106,12 +106,13 @@ fn run() -> Result<(), String> {
         let model = PjRtEps::new(&engine, &dataset)?;
         let _ = sample_with(&mut solver, &model);
 
-        let steps: Vec<f64> = solver.selection_trace().iter().map(|t| t.step as f64).collect();
-        let errs: Vec<f64> = solver.selection_trace().iter().map(|t| t.delta_eps).collect();
-        let min_idx: Vec<f64> =
-            solver.selection_trace().iter().map(|t| t.indices[0] as f64).collect();
-        let span: Vec<f64> = solver
-            .selection_trace()
+        // selection_trace() materialises the flat per-step log; bind it
+        // once for the four plot columns.
+        let trace = solver.selection_trace();
+        let steps: Vec<f64> = trace.iter().map(|t| t.step as f64).collect();
+        let errs: Vec<f64> = trace.iter().map(|t| t.delta_eps).collect();
+        let min_idx: Vec<f64> = trace.iter().map(|t| t.indices[0] as f64).collect();
+        let span: Vec<f64> = trace
             .iter()
             .map(|t| (t.indices[t.indices.len() - 1] - t.indices[0]) as f64)
             .collect();

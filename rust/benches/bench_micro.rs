@@ -31,6 +31,19 @@ fn main() {
     b.case("tensor/kernel_weighted_sum k=4 256x64", || {
         Tensor::kernel_weighted_sum(black_box(&x), 0.97, -0.1, black_box(&refs), &w32)
     });
+    let parts: Vec<&[f32]> = eps.iter().map(|e| e.as_slice()).collect();
+    let mut fused_out = vec![0.0f32; x.len()];
+    b.case("kernels/fused_affine_sum_into k=4 256x64", || {
+        era_solver::kernels::fused::fused_affine_sum_into(
+            black_box(&mut fused_out),
+            0.97,
+            x.as_slice(),
+            -0.1,
+            black_box(&parts),
+            &w32,
+        );
+        fused_out[0]
+    });
     let mut xm = x.clone();
     b.case("tensor/affine_inplace 256x64", || {
         xm.affine_inplace(0.99, 0.01, black_box(&eps[0]));
@@ -66,7 +79,7 @@ fn main() {
 
     // --- Coordinator packing ---
     let reqs: Vec<EvalRequest> = (0..16)
-        .map(|i| EvalRequest { x: rng.normal_tensor(16 + i, 8), t: 0.5 })
+        .map(|i| EvalRequest { x: std::sync::Arc::new(rng.normal_tensor(16 + i, 8)), t: 0.5 })
         .collect();
     let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
     let batcher = Batcher::new(BatchPolicy::default());

@@ -6,7 +6,16 @@
 //! unit- and property-testable: every row must come back to its request
 //! exactly once, in order, regardless of how requests were split across
 //! slabs.
+//!
+//! Zero-copy fast path: a slab whose rows are exactly one whole request
+//! ships the request's own `Arc<Tensor>` ([`SlabX::Shared`]) — no row
+//! copies at all, which is the common serving case at low concurrency.
+//! Mixed slabs gather segments through the kernel layer: one contiguous
+//! memcpy per request segment instead of one per row.
 
+use std::sync::Arc;
+
+use crate::kernels::fused;
 use crate::solvers::EvalRequest;
 use crate::tensor::Tensor;
 
@@ -44,11 +53,39 @@ pub struct SlabSegment {
     pub rows: usize,
 }
 
+/// Slab input: shared view of a single request's tensor, or rows
+/// gathered from several requests.
+pub enum SlabX {
+    /// A single whole request: the request's own iterate by refcount.
+    Shared(Arc<Tensor>),
+    /// Rows gathered (copied) from multiple requests / split requests.
+    Packed(Tensor),
+}
+
 /// A fused evaluation: concatenated inputs plus per-row times.
 pub struct Slab {
-    pub x: Tensor,
+    x: SlabX,
     pub t: Vec<f32>,
     pub segments: Vec<SlabSegment>,
+}
+
+impl Slab {
+    /// The fused input tensor (either view resolves to `&Tensor`).
+    pub fn x(&self) -> &Tensor {
+        match &self.x {
+            SlabX::Shared(arc) => arc,
+            SlabX::Packed(t) => t,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.x().rows()
+    }
+
+    /// True when this slab shipped a request tensor without copying.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.x, SlabX::Shared(_))
+    }
 }
 
 /// The full dispatch plan for one round.
@@ -79,30 +116,48 @@ impl Batcher {
         let mut cur_count = 0usize;
         let mut total = 0usize;
 
+        let find = |src: usize| pending.iter().find(|(i, _)| *i == src).map(|(_, r)| *r).unwrap();
         let flush =
             |cur: &mut Vec<(usize, usize, usize)>, count: &mut usize, slabs: &mut Vec<Slab>| {
                 if cur.is_empty() {
                     return;
                 }
-                let dim = pending
-                    .iter()
-                    .find(|(i, _)| *i == cur[0].0)
-                    .map(|(_, r)| r.x.cols())
-                    .unwrap();
+                // Zero-copy fast path: one segment covering one whole
+                // request ships the request's Arc directly.
+                if cur.len() == 1 {
+                    let (src, off, n) = cur[0];
+                    let req = find(src);
+                    if off == 0 && n == req.x.rows() {
+                        let t = vec![req.t as f32; n];
+                        slabs.push(Slab {
+                            x: SlabX::Shared(Arc::clone(&req.x)),
+                            t,
+                            segments: vec![SlabSegment { source: src, start: 0, rows: n }],
+                        });
+                        cur.clear();
+                        *count = 0;
+                        return;
+                    }
+                }
+                let dim = find(cur[0].0).x.cols();
                 let mut x = Vec::with_capacity(*count * dim);
                 let mut t = Vec::with_capacity(*count);
                 let mut segments = Vec::with_capacity(cur.len());
                 let mut at = 0usize;
                 for &(src, off, n) in cur.iter() {
-                    let req = pending.iter().find(|(i, _)| *i == src).map(|(_, r)| r).unwrap();
-                    for r in off..off + n {
-                        x.extend_from_slice(req.x.row(r));
-                        t.push(req.t as f32);
-                    }
+                    let req = find(src);
+                    // One contiguous copy per segment (rows are adjacent
+                    // in the row-major layout).
+                    fused::gather_rows(&mut x, &req.x, off, n);
+                    t.resize(t.len() + n, req.t as f32);
                     segments.push(SlabSegment { source: src, start: at, rows: n });
                     at += n;
                 }
-                slabs.push(Slab { x: Tensor::from_vec(x, *count, dim), t, segments });
+                slabs.push(Slab {
+                    x: SlabX::Packed(Tensor::from_vec(x, *count, dim)),
+                    t,
+                    segments,
+                });
                 cur.clear();
                 *count = 0;
             };
@@ -130,8 +185,11 @@ impl Batcher {
     /// Split one slab's model output back into per-source pieces,
     /// returned as `(source, eps_rows)` in segment order. Pieces of a
     /// split request arrive in row order and are stitched by the caller.
+    /// (The service loop scatters directly into per-request buffers via
+    /// [`fused::scatter_rows`]; this allocating form serves tests and
+    /// external callers.)
     pub fn unpack(slab: &Slab, out: &Tensor) -> Vec<(usize, Tensor)> {
-        assert_eq!(out.rows(), slab.x.rows(), "model output rows mismatch");
+        assert_eq!(out.rows(), slab.rows(), "model output rows mismatch");
         slab.segments
             .iter()
             .map(|seg| (seg.source, out.slice_rows(seg.start, seg.rows)))
@@ -144,7 +202,7 @@ mod tests {
     use super::*;
 
     fn req(rows: usize, dim: usize, t: f64, fill: f32) -> EvalRequest {
-        EvalRequest { x: Tensor::from_vec(vec![fill; rows * dim], rows, dim), t }
+        EvalRequest { x: Arc::new(Tensor::from_vec(vec![fill; rows * dim], rows, dim)), t }
     }
 
     fn batcher(max_rows: usize) -> Batcher {
@@ -159,7 +217,8 @@ mod tests {
         assert_eq!(plan.slabs.len(), 1);
         assert_eq!(plan.rows, 7);
         let slab = &plan.slabs[0];
-        assert_eq!(slab.x.rows(), 7);
+        assert_eq!(slab.rows(), 7);
+        assert!(!slab.is_shared(), "mixed slab must be packed");
         // Per-row times follow the owning request.
         assert_eq!(&slab.t[..3], &[0.9f32; 3]);
         assert_eq!(&slab.t[3..], &[0.4f32; 4]);
@@ -173,14 +232,30 @@ mod tests {
     }
 
     #[test]
+    fn single_whole_request_ships_shared_zero_copy() {
+        let a = req(5, 3, 0.7, 1.5);
+        let plan = batcher(16).pack(&[(3, &a)]);
+        assert_eq!(plan.slabs.len(), 1);
+        let slab = &plan.slabs[0];
+        assert!(slab.is_shared(), "whole-request slab must not copy");
+        // Same allocation, not an equal copy.
+        assert!(std::ptr::eq(slab.x().as_slice().as_ptr(), a.x.as_slice().as_ptr()));
+        assert_eq!(slab.t, vec![0.7f32; 5]);
+        assert_eq!(slab.segments, vec![SlabSegment { source: 3, start: 0, rows: 5 }]);
+    }
+
+    #[test]
     fn splits_at_max_rows() {
         let a = req(5, 2, 0.5, 1.0);
         let b = req(5, 2, 0.2, 2.0);
         let plan = batcher(6).pack(&[(0, &a), (1, &b)]);
         assert_eq!(plan.slabs.len(), 2);
-        assert_eq!(plan.slabs[0].x.rows(), 6);
-        assert_eq!(plan.slabs[1].x.rows(), 4);
-        // b is split 1 + 4 across the slabs.
+        assert_eq!(plan.slabs[0].rows(), 6);
+        assert_eq!(plan.slabs[1].rows(), 4);
+        // b is split 1 + 4 across the slabs; neither slab is a single
+        // whole request, so both gather.
+        assert!(!plan.slabs[0].is_shared());
+        assert!(!plan.slabs[1].is_shared());
         assert_eq!(plan.slabs[0].segments[1], SlabSegment { source: 1, start: 5, rows: 1 });
         assert_eq!(plan.slabs[1].segments[0], SlabSegment { source: 1, start: 0, rows: 4 });
     }
@@ -190,8 +265,18 @@ mod tests {
         let a = req(20, 3, 0.7, 1.0);
         let plan = batcher(8).pack(&[(0, &a)]);
         assert_eq!(plan.slabs.len(), 3);
-        let rows: usize = plan.slabs.iter().map(|s| s.x.rows()).sum();
+        let rows: usize = plan.slabs.iter().map(|s| s.rows()).sum();
         assert_eq!(rows, 20);
+    }
+
+    #[test]
+    fn exactly_full_request_stays_shared() {
+        // A request that exactly fills max_rows alone in its slab still
+        // takes the zero-copy path.
+        let a = req(8, 2, 0.6, 1.0);
+        let plan = batcher(8).pack(&[(0, &a)]);
+        assert_eq!(plan.slabs.len(), 1);
+        assert!(plan.slabs[0].is_shared());
     }
 
     #[test]
@@ -201,7 +286,7 @@ mod tests {
         let plan = batcher(16).pack(&[(7, &a), (9, &b)]);
         let slab = &plan.slabs[0];
         // Identity "model": eps = x.
-        let outs = Batcher::unpack(slab, &slab.x);
+        let outs = Batcher::unpack(slab, slab.x());
         assert_eq!(outs.len(), 2);
         assert_eq!(outs[0].0, 7);
         assert_eq!(outs[0].1.as_slice(), a.x.as_slice());
@@ -228,9 +313,9 @@ mod tests {
             assert_eq!(plan.rows, want);
             let mut per_source = vec![0usize; reqs.len()];
             for slab in &plan.slabs {
-                assert!(slab.x.rows() <= max_rows);
+                assert!(slab.rows() <= max_rows);
                 let seg_rows: usize = slab.segments.iter().map(|s| s.rows).sum();
-                assert_eq!(seg_rows, slab.x.rows());
+                assert_eq!(seg_rows, slab.rows());
                 for seg in &slab.segments {
                     per_source[seg.source] += seg.rows;
                 }

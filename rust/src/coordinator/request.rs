@@ -1,7 +1,9 @@
 //! Request/response types and the per-request solver state machine.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::kernels::PlanCache;
 use crate::rng::Rng;
 use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
 use crate::solvers::{EvalRequest, Solver, SolverKind};
@@ -49,11 +51,35 @@ impl Default for RequestSpec {
 }
 
 impl RequestSpec {
-    /// Validate and instantiate the solver state for this request.
+    /// Validate and instantiate the solver state for this request with
+    /// a private trajectory plan (tests / one-off drivers).
     pub fn build_solver(
         &self,
         sched: VpSchedule,
         dim: usize,
+    ) -> Result<Box<dyn Solver>, String> {
+        self.build_solver_impl(sched, dim, None)
+    }
+
+    /// Like [`RequestSpec::build_solver`] but sharing the precomputed
+    /// [`crate::kernels::TrajectoryPlan`] through `plans` — the serving
+    /// path: every request with the same `(solver, nfe, grid, t_end)`
+    /// on one schedule reuses one plan across the shard (and, with the
+    /// pool's shared cache, across shards).
+    pub fn build_solver_with_plans(
+        &self,
+        sched: VpSchedule,
+        dim: usize,
+        plans: &PlanCache,
+    ) -> Result<Box<dyn Solver>, String> {
+        self.build_solver_impl(sched, dim, Some(plans))
+    }
+
+    fn build_solver_impl(
+        &self,
+        sched: VpSchedule,
+        dim: usize,
+        plans: Option<&PlanCache>,
     ) -> Result<Box<dyn Solver>, String> {
         let kind = SolverKind::parse(&self.solver)
             .ok_or_else(|| format!("unknown solver '{}'", self.solver))?;
@@ -73,11 +99,19 @@ impl RequestSpec {
                 self.solver
             ));
         }
-        let steps = kind.steps_for_nfe(self.nfe);
-        let grid = make_grid(&sched, grid_kind, steps, 1.0, self.t_end);
+        let plan = match plans {
+            Some(cache) => {
+                kind.plan_from_cache(cache, sched, grid_kind, self.nfe, 1.0, self.t_end)
+            }
+            None => {
+                let steps = kind.steps_for_nfe(self.nfe);
+                let grid = make_grid(&sched, grid_kind, steps, 1.0, self.t_end);
+                Arc::new(kind.make_plan(sched, grid, self.nfe))
+            }
+        };
         let mut rng = Rng::for_stream(self.seed, 0x5eed);
         let x0 = rng.normal_tensor(self.n_samples, dim);
-        Ok(kind.build(sched, grid, x0, self.seed, self.nfe))
+        Ok(kind.build_with_plan(plan, x0, self.seed))
     }
 }
 

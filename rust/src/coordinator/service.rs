@@ -16,7 +16,7 @@
 //! one router; the `inflight_*` telemetry gauges updated here are what
 //! its least-loaded placement and global admission control read.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::{Batcher, BatchPolicy};
 use crate::coordinator::request::{RequestSpec, RequestState, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
+use crate::kernels::{fused, PlanCache};
 use crate::runtime::PjRtEngine;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::EpsModel;
@@ -176,6 +177,7 @@ struct Envelope {
 pub struct Coordinator {
     tx: Option<SyncSender<Envelope>>,
     telemetry: Arc<Telemetry>,
+    plans: Arc<PlanCache>,
     next_id: AtomicU64,
     default_deadline: Option<Duration>,
     handle: Option<JoinHandle<()>>,
@@ -211,23 +213,41 @@ impl Ticket {
 }
 
 impl Coordinator {
-    /// Spawn the engine loop over a model bank.
+    /// Spawn the engine loop over a model bank (private plan cache).
     pub fn start(bank: Arc<dyn ModelBank>, config: CoordinatorConfig) -> Self {
+        Coordinator::start_with_plans(bank, config, Arc::new(PlanCache::new()))
+    }
+
+    /// Spawn the engine loop sharing an external [`PlanCache`] — the
+    /// pool hands every shard the same cache so trajectory plans are
+    /// computed once per configuration across the whole deployment.
+    pub fn start_with_plans(
+        bank: Arc<dyn ModelBank>,
+        config: CoordinatorConfig,
+        plans: Arc<PlanCache>,
+    ) -> Self {
         let telemetry = Arc::new(Telemetry::new());
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
         let tele = telemetry.clone();
+        let loop_plans = plans.clone();
         let default_deadline = config.default_deadline;
         let handle = std::thread::Builder::new()
             .name("era-coordinator".into())
-            .spawn(move || run_loop(bank, config, rx, tele))
+            .spawn(move || run_loop(bank, config, rx, tele, loop_plans))
             .expect("spawn coordinator");
         Coordinator {
             tx: Some(tx),
             telemetry,
+            plans,
             next_id: AtomicU64::new(1),
             default_deadline,
             handle: Some(handle),
         }
+    }
+
+    /// The trajectory-plan cache this coordinator admits requests with.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
     }
 
     /// Validate cheaply and enqueue; returns a ticket for the reply.
@@ -341,6 +361,7 @@ fn run_loop(
     config: CoordinatorConfig,
     rx: Receiver<Envelope>,
     tele: Arc<Telemetry>,
+    plans: Arc<PlanCache>,
 ) {
     let batcher = Batcher::new(config.policy);
     let mut active: Vec<Active> = Vec::new();
@@ -368,7 +389,7 @@ fn run_loop(
         let sched = bank.sched();
         let solver = bank
             .dim(&env.spec.dataset)
-            .and_then(|dim| env.spec.build_solver(sched, dim));
+            .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, &plans));
         match solver {
             Ok(s) => {
                 tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
@@ -489,8 +510,12 @@ fn run_loop(
                 by_dataset.entry(a.state.dataset.as_str()).or_default().push(idx);
             }
         }
-        // Collect delivery list first (dataset grouping borrows `active`).
-        let mut deliveries: Vec<(usize, Tensor)> = Vec::new();
+        // Assemble each request's eps directly from slab outputs
+        // (`source -> (buffer, rows filled)`): a single whole-request
+        // slab adopts the engine output tensor outright; split requests
+        // scatter each segment into one preallocated buffer — no
+        // intermediate slices, no vstack.
+        let mut assembled: BTreeMap<usize, (Tensor, usize)> = BTreeMap::new();
         let mut failures: Vec<(usize, String)> = Vec::new();
         for (dataset, idxs) in by_dataset {
             let pending: Vec<(usize, &crate::solvers::EvalRequest)> = idxs
@@ -500,17 +525,43 @@ fn run_loop(
             let plan = batcher.pack(&pending);
             for slab in &plan.slabs {
                 let t0 = Instant::now();
-                match bank.eval(dataset, &slab.x, &slab.t) {
+                match bank.eval(dataset, slab.x(), &slab.t) {
                     Ok(out) => {
+                        // Row-count contract with the engine: a silent
+                        // mismatch would truncate or misalign eps rows.
+                        assert_eq!(out.rows(), slab.rows(), "model output rows mismatch");
                         tele.eval_nanos
                             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         tele.evals.fetch_add(1, Ordering::Relaxed);
-                        tele.rows.fetch_add(slab.x.rows(), Ordering::Relaxed);
+                        tele.rows.fetch_add(slab.rows(), Ordering::Relaxed);
                         tele.padded_rows.fetch_add(
-                            bank.executed_rows(slab.x.rows()) - slab.x.rows(),
+                            bank.executed_rows(slab.rows()) - slab.rows(),
                             Ordering::Relaxed,
                         );
-                        deliveries.extend(Batcher::unpack(slab, &out));
+                        let whole = slab.segments.len() == 1
+                            && slab.segments[0].start == 0
+                            && slab.segments[0].rows
+                                == active[slab.segments[0].source].state.pending_rows()
+                            && !assembled.contains_key(&slab.segments[0].source);
+                        if whole {
+                            let seg = &slab.segments[0];
+                            assembled.insert(seg.source, (out, seg.rows));
+                        } else {
+                            for seg in &slab.segments {
+                                let total = active[seg.source].state.pending_rows();
+                                let entry = assembled.entry(seg.source).or_insert_with(|| {
+                                    (Tensor::zeros(total, out.cols()), 0)
+                                });
+                                fused::scatter_rows(
+                                    &mut entry.0,
+                                    entry.1,
+                                    &out,
+                                    seg.start,
+                                    seg.rows,
+                                );
+                                entry.1 += seg.rows;
+                            }
+                        }
                     }
                     Err(e) => {
                         for seg in &slab.segments {
@@ -521,14 +572,15 @@ fn run_loop(
             }
         }
 
-        // ---- Route outputs back (stitch split requests in row order) ----
-        let mut per_source: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-        for (src, part) in deliveries {
-            per_source.entry(src).or_default().push(part);
-        }
-        for (src, parts) in per_source {
-            let refs: Vec<&Tensor> = parts.iter().collect();
-            let eps = if refs.len() == 1 { parts[0].clone() } else { Tensor::vstack(&refs) };
+        // ---- Route assembled outputs back ----
+        // Requests with any failed slab are retired below, not delivered
+        // (a partial assembly would feed a truncated eps to the solver).
+        let failed_srcs: BTreeSet<usize> = failures.iter().map(|f| f.0).collect();
+        for (src, (eps, filled)) in assembled {
+            if failed_srcs.contains(&src) {
+                continue;
+            }
+            debug_assert_eq!(filled, eps.rows(), "request assembly incomplete");
             tele.steps.fetch_add(1, Ordering::Relaxed);
             active[src].state.deliver(eps);
         }
@@ -662,6 +714,22 @@ mod tests {
         let mut solver = s.build_solver(sched, 2).unwrap();
         let direct = crate::solvers::sample_with(&mut *solver, &model);
         assert_eq!(via_coord.samples.as_slice(), direct.as_slice());
+    }
+
+    #[test]
+    fn identical_requests_share_one_trajectory_plan() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        for seed in 0..3 {
+            let _ = c.sample(spec("era", 16, seed)).unwrap();
+        }
+        // One configuration -> one plan build, later requests hit.
+        assert_eq!(c.plan_cache().misses(), 1);
+        assert_eq!(c.plan_cache().hits(), 2);
+        assert_eq!(c.plan_cache().len(), 1);
+        // A different solver kind is its own plan.
+        let _ = c.sample(spec("ddim", 16, 0)).unwrap();
+        assert_eq!(c.plan_cache().len(), 2);
+        c.shutdown();
     }
 
     #[test]

@@ -132,16 +132,19 @@ pub fn generate(
     let sched = backend.schedule();
     let dim = backend.dim();
     let steps = kind.steps_for_nfe(nfe);
+    // One trajectory plan for every chunk of this cell (all chunks share
+    // the same (solver, grid, schedule) configuration).
+    let grid = make_grid(&sched, grid_kind, steps, 1.0, t_end);
+    let plan = Arc::new(kind.make_plan(sched, grid, nfe));
     let mut parts = Vec::new();
     let mut consumed_nfe = 0;
     let mut produced = 0usize;
     let mut chunk_idx = 0u64;
     while produced < n_samples {
         let rows = batch.min(n_samples - produced);
-        let grid = make_grid(&sched, grid_kind, steps, 1.0, t_end);
         let mut rng = Rng::for_stream(seed, 0xc0ffee ^ chunk_idx);
         let x0 = rng.normal_tensor(rows, dim);
-        let mut solver = kind.build(sched, grid, x0, seed ^ chunk_idx, nfe);
+        let mut solver = kind.build_with_plan(plan.clone(), x0, seed ^ chunk_idx);
         parts.push(backend.run(&mut *solver));
         consumed_nfe = solver.nfe();
         produced += rows;

@@ -1,0 +1,155 @@
+//! Per-solver scratch memory: a recycling arena for step buffers and a
+//! bounded newest-first history ring.
+//!
+//! Both exist so a solver's steady-state step touches the allocator
+//! zero times: scratch tensors are taken once and given back (or held
+//! as named fields), and history slots adopt the model's output tensors
+//! by move, handing evicted slots back for reuse as the next scratch.
+
+use std::collections::VecDeque;
+
+use crate::tensor::Tensor;
+
+/// A pool of equally-shaped scratch tensors. `take` pops a recycled
+/// buffer (or allocates on first use), `give` returns it for reuse.
+/// Shape is fixed at construction — solvers know their batch geometry
+/// up front.
+pub struct ScratchArena {
+    rows: usize,
+    cols: usize,
+    free: Vec<Tensor>,
+    allocated: usize,
+}
+
+impl ScratchArena {
+    pub fn new(rows: usize, cols: usize) -> ScratchArena {
+        ScratchArena { rows, cols, free: Vec::new(), allocated: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Tensors handed out over the arena's lifetime that required a
+    /// fresh allocation (steady state: stops growing after warmup).
+    pub fn allocations(&self) -> usize {
+        self.allocated
+    }
+
+    /// Pop a scratch tensor (contents unspecified — callers overwrite).
+    pub fn take(&mut self) -> Tensor {
+        match self.free.pop() {
+            Some(t) => t,
+            None => {
+                self.allocated += 1;
+                Tensor::zeros(self.rows, self.cols)
+            }
+        }
+    }
+
+    /// Return a tensor for reuse. Shape-checked: recycling a foreign
+    /// buffer would corrupt every later `take`.
+    pub fn give(&mut self, t: Tensor) {
+        assert_eq!(
+            (t.rows(), t.cols()),
+            (self.rows, self.cols),
+            "arena given a tensor of the wrong shape"
+        );
+        self.free.push(t);
+    }
+}
+
+/// Bounded newest-first tensor history (the Adams multistep window).
+///
+/// `push` adopts the tensor by move and returns the evicted oldest slot
+/// once the ring is full — callers reuse it as their next scratch
+/// buffer, closing the allocation loop. Index 0 is the newest entry.
+pub struct HistoryRing {
+    slots: VecDeque<Tensor>,
+    cap: usize,
+}
+
+impl HistoryRing {
+    pub fn new(cap: usize) -> HistoryRing {
+        assert!(cap >= 1, "history ring needs at least one slot");
+        // +1: push_front momentarily holds cap+1 before pop_back.
+        HistoryRing { slots: VecDeque::with_capacity(cap + 1), cap }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Newest-first entry (`get(0)` is the most recent push).
+    pub fn get(&self, newest_back: usize) -> &Tensor {
+        &self.slots[newest_back]
+    }
+
+    /// Newest-first iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &Tensor> {
+        self.slots.iter()
+    }
+
+    /// Push the newest entry; returns the evicted oldest one when full.
+    pub fn push(&mut self, t: Tensor) -> Option<Tensor> {
+        self.slots.push_front(t);
+        if self.slots.len() > self.cap {
+            self.slots.pop_back()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_recycles() {
+        let mut a = ScratchArena::new(2, 3);
+        let t1 = a.take();
+        let t2 = a.take();
+        assert_eq!(a.allocations(), 2);
+        a.give(t1);
+        a.give(t2);
+        let _t3 = a.take();
+        let _t4 = a.take();
+        assert_eq!(a.allocations(), 2, "recycled takes must not allocate");
+        assert_eq!((_t3.rows(), _t3.cols()), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong shape")]
+    fn arena_rejects_foreign_shapes() {
+        let mut a = ScratchArena::new(2, 3);
+        a.give(Tensor::zeros(3, 2));
+    }
+
+    #[test]
+    fn ring_orders_newest_first_and_evicts() {
+        let mut r = HistoryRing::new(3);
+        for v in 0..3 {
+            assert!(r.push(Tensor::from_vec(vec![v as f32], 1, 1)).is_none());
+        }
+        assert_eq!(r.len(), 3);
+        let evicted = r.push(Tensor::from_vec(vec![3.0], 1, 1)).expect("full ring evicts");
+        assert_eq!(evicted.as_slice(), &[0.0]);
+        assert_eq!(r.get(0).as_slice(), &[3.0]);
+        assert_eq!(r.get(2).as_slice(), &[1.0]);
+        let newest_first: Vec<f32> = r.iter().map(|t| t.as_slice()[0]).collect();
+        assert_eq!(newest_first, vec![3.0, 2.0, 1.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! In-place fused f32 slice kernels for the solver hot path.
+//!
+//! Every op writes into a caller-owned buffer — no allocation, one pass
+//! where fusion allows it. Iterator zips (not indexed loops) keep the
+//! bounds checks out of the inner loops so the compiler auto-vectorises;
+//! the arithmetic and accumulation order mirror the original
+//! [`crate::tensor::Tensor`] methods exactly, so switching a solver to
+//! these kernels changes performance, never numerics (pinned by
+//! `tests/golden_trajectories.rs`).
+
+use crate::tensor::Tensor;
+
+/// `out[i] += s * x[i]`.
+#[inline]
+pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o += s * v;
+    }
+}
+
+/// `out[i] *= s`.
+#[inline]
+pub fn scale(out: &mut [f32], s: f32) {
+    for o in out.iter_mut() {
+        *o *= s;
+    }
+}
+
+/// `out[i] = 0`.
+#[inline]
+pub fn zero(out: &mut [f32]) {
+    out.fill(0.0);
+}
+
+/// `out[i] = a * out[i] + b * e[i]` — the DDIM transition, in place.
+#[inline]
+pub fn affine_inplace(out: &mut [f32], a: f32, b: f32, e: &[f32]) {
+    debug_assert_eq!(out.len(), e.len());
+    for (o, &v) in out.iter_mut().zip(e.iter()) {
+        *o = a * *o + b * v;
+    }
+}
+
+/// `out[i] = a * x[i] + b * e[i]` — the DDIM transition into a scratch
+/// buffer (predicted eval points, DPM intermediate stages).
+#[inline]
+pub fn affine_into(out: &mut [f32], a: f32, x: &[f32], b: f32, e: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    debug_assert_eq!(out.len(), e.len());
+    for ((o, &xv), &ev) in out.iter_mut().zip(x.iter()).zip(e.iter()) {
+        *o = a * xv + b * ev;
+    }
+}
+
+/// `out = sum_k w[k] * parts[k]`, zeroing `out` first. Accumulation
+/// order matches [`Tensor::weighted_sum`] (zero, then axpy in index
+/// order) so results are bit-identical to the allocating path.
+pub fn weighted_sum_into(out: &mut [f32], parts: &[&[f32]], w: &[f64]) {
+    assert_eq!(parts.len(), w.len(), "weights/parts length mismatch");
+    zero(out);
+    for (p, &wk) in parts.iter().zip(w.iter()) {
+        axpy(out, wk as f32, p);
+    }
+}
+
+/// Fused `out = a * x + b * (sum_k w[k] * parts[k])` with a single pass
+/// for the first term — the non-allocating twin of
+/// [`Tensor::kernel_weighted_sum`].
+pub fn fused_affine_sum_into(
+    out: &mut [f32],
+    a: f32,
+    x: &[f32],
+    b: f32,
+    parts: &[&[f32]],
+    w: &[f32],
+) {
+    assert_eq!(parts.len(), w.len());
+    debug_assert_eq!(out.len(), x.len());
+    match parts.first() {
+        None => {
+            for (o, &xv) in out.iter_mut().zip(x.iter()) {
+                *o = a * xv;
+            }
+        }
+        Some(p0) => {
+            let bw0 = b * w[0];
+            for ((o, &xv), &ev) in out.iter_mut().zip(x.iter()).zip(p0.iter()) {
+                *o = a * xv + bw0 * ev;
+            }
+        }
+    }
+    for (pk, &wk) in parts.iter().zip(w.iter()).skip(1) {
+        axpy(out, b * wk, pk);
+    }
+}
+
+/// Mean per-row L2 distance between two `rows x cols` buffers — Eq. 15's
+/// batch form, identical accumulation to [`Tensor::mean_row_dist`]
+/// (f64 row sums, per-row sqrt, f64 mean) without touching the heap.
+pub fn mean_row_dist(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(b.len(), rows * cols);
+    if rows == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for r in 0..rows {
+        let (ra, rb) = (&a[r * cols..(r + 1) * cols], &b[r * cols..(r + 1) * cols]);
+        let s: f64 = ra
+            .iter()
+            .zip(rb.iter())
+            .map(|(&x, &y)| {
+                let d = (x - y) as f64;
+                d * d
+            })
+            .sum();
+        acc += s.sqrt();
+    }
+    (acc / rows as f64) as f32
+}
+
+/// Append rows `[start, start + n)` of `src` onto `dst` — one contiguous
+/// memcpy per call (the rows of a row-major tensor are adjacent), used
+/// by the batcher to gather request segments into fused slabs.
+pub fn gather_rows(dst: &mut Vec<f32>, src: &Tensor, start: usize, n: usize) {
+    dst.extend_from_slice(src.row_span(start, n));
+}
+
+/// Copy rows `[src_row, src_row + n)` of `src` into `dst` starting at
+/// `dst_row` — the scatter half: slab outputs land directly in the
+/// per-request eps buffer, no intermediate slice tensors.
+pub fn scatter_rows(dst: &mut Tensor, dst_row: usize, src: &Tensor, src_row: usize, n: usize) {
+    assert_eq!(dst.cols(), src.cols(), "scatter_rows column mismatch");
+    assert!(dst_row + n <= dst.rows(), "scatter_rows dst overflow");
+    assert!(src_row + n <= src.rows(), "scatter_rows src overflow");
+    dst.row_span_mut(dst_row, n).copy_from_slice(src.row_span(src_row, n));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_scale_zero() {
+        let mut out = vec![1.0, 2.0, 3.0];
+        axpy(&mut out, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(out, vec![3.0, 4.0, 5.0]);
+        scale(&mut out, 0.5);
+        assert_eq!(out, vec![1.5, 2.0, 2.5]);
+        zero(&mut out);
+        assert_eq!(out, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn affine_matches_tensor_path() {
+        let e = [1.0f32, -1.0, 0.5, 2.0];
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut t = Tensor::from_vec(a.clone(), 2, 2);
+        affine_inplace(&mut a, 0.9, -0.2, &e);
+        t.affine_inplace(0.9, -0.2, &Tensor::from_vec(e.to_vec(), 2, 2));
+        assert_eq!(a.as_slice(), t.as_slice());
+
+        let x = [0.3f32, 0.7, -0.1, 1.1];
+        let mut out = vec![0.0f32; 4];
+        affine_into(&mut out, 2.0, &x, 3.0, &e);
+        for i in 0..4 {
+            assert!((out[i] - (2.0 * x[i] + 3.0 * e[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weighted_sum_into_matches_tensor_weighted_sum() {
+        let a = Tensor::from_vec(vec![1.0, 0.0, 2.0, -1.0], 2, 2);
+        let b = Tensor::from_vec(vec![0.5, 2.0, -0.5, 1.0], 2, 2);
+        let w = [0.75, -1.25];
+        let want = Tensor::weighted_sum(&[&a, &b], &w);
+        let mut out = vec![9.0f32; 4]; // stale contents must be overwritten
+        weighted_sum_into(&mut out, &[a.as_slice(), b.as_slice()], &w);
+        assert_eq!(out.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn fused_affine_sum_matches_kernel_weighted_sum() {
+        let x = Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0], 2, 2);
+        let e1 = Tensor::from_vec(vec![0.1, 0.2, 0.3, 0.4], 2, 2);
+        let e2 = Tensor::from_vec(vec![-1.0, 1.0, -1.0, 1.0], 2, 2);
+        let w32 = [2.0f32, -0.5];
+        let want = Tensor::kernel_weighted_sum(&x, 0.9, 0.3, &[&e1, &e2], &w32);
+        let mut out = vec![0.0f32; 4];
+        fused_affine_sum_into(
+            &mut out,
+            0.9,
+            x.as_slice(),
+            0.3,
+            &[e1.as_slice(), e2.as_slice()],
+            &w32,
+        );
+        assert_eq!(out.as_slice(), want.as_slice());
+
+        // Empty part list degenerates to out = a * x.
+        fused_affine_sum_into(&mut out, 0.5, x.as_slice(), 1.0, &[], &[]);
+        for (o, &xv) in out.iter().zip(x.as_slice()) {
+            assert_eq!(*o, 0.5 * xv);
+        }
+    }
+
+    #[test]
+    fn mean_row_dist_matches_tensor() {
+        let a = Tensor::from_vec(vec![3.0, 4.0, 1.0, 1.0, 0.0, 2.0], 3, 2);
+        let b = Tensor::from_vec(vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0], 3, 2);
+        let got = mean_row_dist(a.as_slice(), b.as_slice(), 3, 2);
+        assert_eq!(got, a.mean_row_dist(&b));
+        assert_eq!(mean_row_dist(&[], &[], 0, 2), 0.0);
+    }
+
+    #[test]
+    fn gather_then_scatter_roundtrips() {
+        let src = Tensor::from_vec((0..12).map(|v| v as f32).collect(), 4, 3);
+        let mut flat = Vec::new();
+        gather_rows(&mut flat, &src, 1, 2);
+        assert_eq!(flat, &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let gathered = Tensor::from_vec(flat, 2, 3);
+        let mut dst = Tensor::zeros(4, 3);
+        scatter_rows(&mut dst, 2, &gathered, 0, 2);
+        assert_eq!(dst.row(2), src.row(1));
+        assert_eq!(dst.row(3), src.row(2));
+        assert_eq!(dst.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn scatter_rows_checks_bounds() {
+        let src = Tensor::zeros(2, 2);
+        let mut dst = Tensor::zeros(2, 2);
+        scatter_rows(&mut dst, 1, &src, 0, 2);
+    }
+}

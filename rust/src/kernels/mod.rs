@@ -1,0 +1,37 @@
+//! Zero-copy solver kernel layer: the allocation-free primitives behind
+//! every solver step, plus the shared per-trajectory plan cache.
+//!
+//! The sampling hot path used to pay three avoidable costs per step:
+//! full-iterate clones into [`crate::solvers::EvalRequest`], re-derived
+//! schedule/coefficient math (DDIM transfer coefficients, Adams–Moulton
+//! weights, DPM exponential-integrator coefficients, Lagrange basis
+//! weights) that depends only on `(solver kind, grid, schedule)`, and
+//! per-row copies when the batcher assembled fused slabs. This module
+//! removes all three:
+//!
+//! * [`fused`] — in-place fused f32 slice ops (axpy chains, k-way affine
+//!   combinations, scaled-diff error norms, row-slab gather/scatter).
+//!   They are the Rust-native mirror of the `solver_combine` Pallas
+//!   kernel family: one pass over the output, no intermediate tensors.
+//! * [`arena`] — [`ScratchArena`] (recycled step buffers) and
+//!   [`HistoryRing`] (bounded newest-first history that moves model
+//!   outputs in and hands evicted slots back for reuse), so solvers run
+//!   with zero steady-state heap allocations per step.
+//! * [`plan`] — [`TrajectoryPlan`]: the grid, VP-schedule samples,
+//!   per-transition DDIM coefficients, AM corrector weights, per-step
+//!   DPM coefficients and a concurrent per-`(step, indices)` Lagrange
+//!   weight memo, computed once per `(solver kind, NFE, grid kind,
+//!   schedule, t_end)` and shared across requests and coordinator
+//!   shards through [`PlanCache`].
+//!
+//! Solvers own their iterate as `Arc<Tensor>`; `EvalRequest` hands out a
+//! reference-counted view instead of a deep clone, and the batcher ships
+//! the `Arc` itself through to the engine when a request's rows form a
+//! whole slab (the true zero-copy path).
+
+pub mod arena;
+pub mod fused;
+pub mod plan;
+
+pub use arena::{HistoryRing, ScratchArena};
+pub use plan::{DpmStepPlan, PlanCache, PlanKey, TrajectoryPlan};

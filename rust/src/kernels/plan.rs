@@ -1,0 +1,528 @@
+//! Per-trajectory precomputation and the shared plan cache.
+//!
+//! Everything a solver derives from `(solver kind, grid, schedule)` —
+//! and nothing that depends on the iterate — is computed once into a
+//! [`TrajectoryPlan`] and shared: the timestep grid, VP-schedule samples
+//! at every grid point, per-transition DDIM transfer coefficients,
+//! Adams–Moulton corrector weights, per-step DPM exponential-integrator
+//! coefficients, and a concurrent memo of Lagrange basis weights keyed
+//! by `(target step, selected buffer indices)` — the ERA predictor's
+//! weights repeat across requests whenever the error-robust selection
+//! lands on the same index set, which is the common case for similar
+//! error levels.
+//!
+//! [`PlanCache`] keys plans by `(solver label, NFE, grid kind, schedule,
+//! t-range)` and is shared by every request of a coordinator shard and —
+//! through the pool — across shards: DPM-Solver and SA-Solver both
+//! precompute their coefficient schedules once per trajectory; this
+//! moves that to once per *configuration*.
+//!
+//! Every value is computed with the exact f64 expressions the solvers
+//! used inline pre-refactor, so plan-backed stepping is bit-identical
+//! (pinned by `tests/golden_trajectories.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::solvers::lagrange;
+use crate::solvers::schedule::{GridKind, VpSchedule};
+
+/// Largest interpolation order memoised per-(step, indices); higher
+/// orders fall back to direct computation (no fixed-size key fits).
+pub const MAX_MEMO_K: usize = 8;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct LagKey {
+    target: u32,
+    k: u32,
+    idx: [u32; MAX_MEMO_K],
+}
+
+/// Precomputed coefficients for one DPM-Solver transition (Lu et al.
+/// Algorithms 1/2 with r1 = 1/3, r2 = 2/3). Fields unused at a given
+/// order stay zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DpmStepPlan {
+    pub order: usize,
+    /// Stage-1 intermediate point and its order-1 transfer (order >= 2).
+    pub t_s1: f64,
+    pub a_s1: f64,
+    pub b_s1: f64,
+    /// Stage-2 intermediate point and coefficients (order 3):
+    /// `u2 = a_s2 x + b_s2 e0 + c_s2 (e1 - e0)`.
+    pub t_s2: f64,
+    pub a_s2: f64,
+    pub b_s2: f64,
+    pub c_s2: f64,
+    /// Final combination: order 1/2 use `x' = a_f x + b_f e_last`;
+    /// order 3 uses `x' = a_f x + b_f e0 + c_f (e_last - e0)`.
+    pub a_f: f64,
+    pub b_f: f64,
+    pub c_f: f64,
+}
+
+/// All per-trajectory constants for one `(solver kind, grid, schedule)`.
+pub struct TrajectoryPlan {
+    sched: VpSchedule,
+    grid: Vec<f64>,
+    /// `alpha_bar` sampled at every grid point — the one raw VP sample
+    /// a solver consumes directly (DDPM's posterior); everything else
+    /// the schedule would provide is already folded into the DDIM / AM
+    /// / DPM coefficient tables below.
+    alpha_bar: Vec<f64>,
+    /// DDIM transfer `(a, b)` per transition (`grid.len() - 1` entries).
+    ddim: Vec<(f64, f64)>,
+    /// Adams–Moulton corrector weights, orders 2..=4 (index `order - 2`).
+    am: [Vec<f64>; 3],
+    am_builds: AtomicUsize,
+    /// DPM per-step coefficients (only for DPM solver kinds).
+    dpm: Option<Vec<DpmStepPlan>>,
+    /// Lagrange basis-weight memo: `(target grid index, buffer indices)`
+    /// -> weights. Concurrent reads; deterministic values.
+    lagrange: RwLock<HashMap<LagKey, Arc<Vec<f64>>>>,
+    lagrange_builds: AtomicUsize,
+    lagrange_hits: AtomicUsize,
+}
+
+impl TrajectoryPlan {
+    /// Precompute schedule samples and transition coefficients for a
+    /// decreasing timestep grid.
+    pub fn new(sched: VpSchedule, grid: Vec<f64>) -> TrajectoryPlan {
+        assert!(grid.len() >= 2, "plan needs at least one transition");
+        debug_assert!(grid.windows(2).all(|w| w[1] < w[0]), "grid must decrease");
+        let alpha_bar: Vec<f64> = grid.iter().map(|&t| sched.alpha_bar(t)).collect();
+        let ddim: Vec<(f64, f64)> =
+            grid.windows(2).map(|w| sched.ddim_coeffs(w[0], w[1])).collect();
+        // The single AM-weight computation of this trajectory (the
+        // regression test pins builds == 1 however many steps consume
+        // these).
+        let am = [
+            vec![0.5, 0.5],
+            vec![5.0 / 12.0, 8.0 / 12.0, -1.0 / 12.0],
+            vec![9.0 / 24.0, 19.0 / 24.0, -5.0 / 24.0, 1.0 / 24.0],
+        ];
+        TrajectoryPlan {
+            sched,
+            grid,
+            alpha_bar,
+            ddim,
+            am,
+            am_builds: AtomicUsize::new(1),
+            dpm: None,
+            lagrange: RwLock::new(HashMap::new()),
+            lagrange_builds: AtomicUsize::new(0),
+            lagrange_hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Attach the per-step DPM-Solver coefficients for an order
+    /// schedule (`orders.len()` must equal the transition count).
+    pub fn with_dpm_orders(mut self, orders: &[usize]) -> TrajectoryPlan {
+        assert_eq!(orders.len() + 1, self.grid.len(), "orders must match grid transitions");
+        assert!(orders.iter().all(|&o| (1..=3).contains(&o)));
+        let steps = orders
+            .iter()
+            .enumerate()
+            .map(|(i, &order)| self.dpm_step_plan(i, order))
+            .collect();
+        self.dpm = Some(steps);
+        self
+    }
+
+    /// Order-1 transfer coefficients from `t_from` to `t_to` — the exact
+    /// expressions of the singlestep DPM update.
+    fn dpm_order1(&self, t_from: f64, t_to: f64) -> (f64, f64) {
+        let h = self.sched.lambda(t_to) - self.sched.lambda(t_from);
+        let a = self.sched.sqrt_alpha_bar(t_to) / self.sched.sqrt_alpha_bar(t_from);
+        let b = -self.sched.sigma(t_to) * h.exp_m1();
+        (a, b)
+    }
+
+    fn dpm_step_plan(&self, i: usize, order: usize) -> DpmStepPlan {
+        let (tc, tn) = (self.grid[i], self.grid[i + 1]);
+        let (lc, ln) = (self.sched.lambda(tc), self.sched.lambda(tn));
+        let h = ln - lc;
+        let t_mid = |r: f64| self.sched.t_of_lambda(lc + r * h);
+        let mut sp = DpmStepPlan { order, ..Default::default() };
+        match order {
+            1 => {
+                let (a, b) = self.dpm_order1(tc, tn);
+                sp.a_f = a;
+                sp.b_f = b;
+            }
+            2 => {
+                let s = t_mid(0.5);
+                let (a1, b1) = self.dpm_order1(tc, s);
+                sp.t_s1 = s;
+                sp.a_s1 = a1;
+                sp.b_s1 = b1;
+                let (a, b) = self.dpm_order1(tc, tn);
+                sp.a_f = a;
+                sp.b_f = b;
+            }
+            3 => {
+                let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
+                let s1 = t_mid(r1);
+                let (a1, b1) = self.dpm_order1(tc, s1);
+                sp.t_s1 = s1;
+                sp.a_s1 = a1;
+                sp.b_s1 = b1;
+                let s2 = t_mid(r2);
+                let sig2 = self.sched.sigma(s2);
+                let em = (r2 * h).exp_m1();
+                sp.t_s2 = s2;
+                sp.a_s2 = self.sched.sqrt_alpha_bar(s2) / self.sched.sqrt_alpha_bar(tc);
+                sp.b_s2 = -sig2 * em;
+                sp.c_s2 = -(sig2 * r2 / r1) * (em / (r2 * h) - 1.0);
+                let sig_n = self.sched.sigma(tn);
+                let em_h = h.exp_m1();
+                sp.a_f = self.sched.sqrt_alpha_bar(tn) / self.sched.sqrt_alpha_bar(tc);
+                sp.b_f = -sig_n * em_h;
+                sp.c_f = -(sig_n / r2) * (em_h / h - 1.0);
+            }
+            _ => unreachable!("dpm order out of range"),
+        }
+        sp
+    }
+
+    pub fn sched(&self) -> VpSchedule {
+        self.sched
+    }
+
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
+    /// Grid transition count (solver steps).
+    pub fn steps(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    /// Timestep at grid point `i`.
+    #[inline]
+    pub fn t(&self, i: usize) -> f64 {
+        self.grid[i]
+    }
+
+    /// DDIM transfer `(a, b)` for transition `i` (grid[i] -> grid[i+1]).
+    #[inline]
+    pub fn ddim_coeffs(&self, i: usize) -> (f64, f64) {
+        self.ddim[i]
+    }
+
+    #[inline]
+    pub fn alpha_bar_at(&self, i: usize) -> f64 {
+        self.alpha_bar[i]
+    }
+
+    /// Adams–Moulton weights by order (2..=4; higher orders clamp to 4,
+    /// matching the pre-refactor `am_weights` free function). Index 0
+    /// multiplies the implicit (newest) slot.
+    #[inline]
+    pub fn am_weights(&self, order: usize) -> &[f64] {
+        match order {
+            2 => &self.am[0],
+            3 => &self.am[1],
+            _ => &self.am[2],
+        }
+    }
+
+    /// How many times this plan computed its AM weight tables (always 1;
+    /// the regression test pins it).
+    pub fn am_builds(&self) -> usize {
+        self.am_builds.load(Ordering::Relaxed)
+    }
+
+    /// Per-step DPM coefficients; panics when the plan was not built for
+    /// a DPM solver kind.
+    #[inline]
+    pub fn dpm_step(&self, i: usize) -> DpmStepPlan {
+        self.dpm.as_ref().expect("plan has no DPM coefficients")[i]
+    }
+
+    pub fn has_dpm(&self) -> bool {
+        self.dpm.is_some()
+    }
+
+    /// Lagrange basis weights for interpolating the buffered estimates
+    /// at grid point `target` from buffer entries `indices` (ascending
+    /// grid indices). Memoised per plan and therefore shared across
+    /// every request using this plan; concurrent lookups return the
+    /// same `Arc` deterministically.
+    pub fn lagrange_weights(&self, target: usize, indices: &[usize]) -> Arc<Vec<f64>> {
+        assert!(!indices.is_empty(), "lagrange over no indices");
+        assert!(target < self.grid.len(), "lagrange target off grid");
+        let compute = || {
+            let nodes: Vec<f64> = indices.iter().map(|&n| self.grid[n]).collect();
+            Arc::new(lagrange::weights(&nodes, self.grid[target]))
+        };
+        if indices.len() > MAX_MEMO_K {
+            self.lagrange_builds.fetch_add(1, Ordering::Relaxed);
+            return compute();
+        }
+        let mut idx = [0u32; MAX_MEMO_K];
+        for (slot, &n) in idx.iter_mut().zip(indices.iter()) {
+            *slot = n as u32;
+        }
+        let key = LagKey { target: target as u32, k: indices.len() as u32, idx };
+        if let Some(w) = self.lagrange.read().unwrap().get(&key) {
+            self.lagrange_hits.fetch_add(1, Ordering::Relaxed);
+            return w.clone();
+        }
+        // Compute outside the write lock (deterministic value: a racing
+        // builder produces the identical vector; first insert wins).
+        let w = compute();
+        self.lagrange_builds.fetch_add(1, Ordering::Relaxed);
+        self.lagrange.write().unwrap().entry(key).or_insert_with(|| w.clone()).clone()
+    }
+
+    pub fn lagrange_builds(&self) -> usize {
+        self.lagrange_builds.load(Ordering::Relaxed)
+    }
+
+    pub fn lagrange_hits(&self) -> usize {
+        self.lagrange_hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Cache key: everything the plan contents depend on.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Solver label (`SolverKind::label()` — distinct kinds carry
+    /// distinct precomputes, e.g. DPM order schedules).
+    pub solver: String,
+    pub nfe: usize,
+    pub grid: GridKind,
+    pub t_start_bits: u64,
+    pub t_end_bits: u64,
+    pub beta_min_bits: u64,
+    pub beta_max_bits: u64,
+}
+
+impl PlanKey {
+    pub fn new(
+        solver: String,
+        nfe: usize,
+        grid: GridKind,
+        sched: &VpSchedule,
+        t_start: f64,
+        t_end: f64,
+    ) -> PlanKey {
+        PlanKey {
+            solver,
+            nfe,
+            grid,
+            t_start_bits: t_start.to_bits(),
+            t_end_bits: t_end.to_bits(),
+            beta_min_bits: sched.beta_min.to_bits(),
+            beta_max_bits: sched.beta_max.to_bits(),
+        }
+    }
+}
+
+/// Concurrent plan cache shared across requests and coordinator shards.
+///
+/// Bounded: the key embeds client-controlled fields (`nfe`, `t_end`
+/// bits), so an unbounded map would let wire traffic with per-request
+/// parameter sweeps grow process memory forever. At `max_plans`
+/// retained configurations a miss evicts an arbitrary entry before
+/// inserting — the cache tracks current traffic instead of fossilising
+/// whichever configurations arrived first.
+pub struct PlanCache {
+    plans: RwLock<HashMap<PlanKey, Arc<TrajectoryPlan>>>,
+    max_plans: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    /// Entries evicted to admit newer configurations (cache at cap).
+    evicted: AtomicUsize,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(512)
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cache retaining at most `max_plans` distinct configurations.
+    pub fn with_capacity(max_plans: usize) -> PlanCache {
+        PlanCache {
+            plans: RwLock::new(HashMap::new()),
+            max_plans: max_plans.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evicted: AtomicUsize::new(0),
+        }
+    }
+
+    /// Look up the plan for `key`, building it with `build` on a miss.
+    /// Racing builders are benign: plans for one key are deterministic
+    /// and the first insert wins.
+    pub fn get_or_build(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> TrajectoryPlan,
+    ) -> Arc<TrajectoryPlan> {
+        if let Some(p) = self.plans.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return p.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build());
+        let mut plans = self.plans.write().unwrap();
+        if let Some(p) = plans.get(&key) {
+            // Raced with another builder; keep the retained one.
+            return p.clone();
+        }
+        if plans.len() >= self.max_plans {
+            // Arbitrary victim; in-flight holders keep their Arc alive.
+            if let Some(victim) = plans.keys().next().cloned() {
+                plans.remove(&victim);
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        plans.insert(key, built.clone());
+        built
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// Entries evicted past the retention cap.
+    pub fn evicted(&self) -> usize {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::schedule::make_grid;
+
+    fn plan(steps: usize) -> TrajectoryPlan {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        TrajectoryPlan::new(sched, grid)
+    }
+
+    #[test]
+    fn samples_match_schedule_closed_form() {
+        let p = plan(12);
+        let sched = p.sched();
+        for (i, &t) in p.grid().iter().enumerate() {
+            assert_eq!(p.alpha_bar_at(i), sched.alpha_bar(t));
+        }
+        for i in 0..p.steps() {
+            assert_eq!(p.ddim_coeffs(i), sched.ddim_coeffs(p.t(i), p.t(i + 1)));
+        }
+    }
+
+    #[test]
+    fn am_weights_built_once_and_sum_to_one() {
+        let p = plan(8);
+        for order in 2..=5 {
+            let s: f64 = p.am_weights(order).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "order {order}");
+        }
+        // Many consumers, one computation.
+        assert_eq!(p.am_builds(), 1);
+        assert_eq!(p.am_weights(5), p.am_weights(4), "orders clamp to 4");
+    }
+
+    #[test]
+    fn lagrange_memo_hits_and_matches_direct() {
+        let p = plan(12);
+        let idx = [2usize, 5, 8, 10];
+        let w1 = p.lagrange_weights(11, &idx);
+        let w2 = p.lagrange_weights(11, &idx);
+        assert!(Arc::ptr_eq(&w1, &w2), "second lookup must hit the memo");
+        assert_eq!(p.lagrange_builds(), 1);
+        assert_eq!(p.lagrange_hits(), 1);
+        let nodes: Vec<f64> = idx.iter().map(|&n| p.grid()[n]).collect();
+        assert_eq!(*w1, lagrange::weights(&nodes, p.grid()[11]));
+        // A different index set is its own entry.
+        let _ = p.lagrange_weights(11, &[1, 5, 8, 10]);
+        assert_eq!(p.lagrange_builds(), 2);
+    }
+
+    #[test]
+    fn oversized_orders_bypass_memo() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 16, 1.0, 1e-3);
+        let p = TrajectoryPlan::new(sched, grid);
+        let idx: Vec<usize> = (0..MAX_MEMO_K + 2).collect();
+        let w1 = p.lagrange_weights(MAX_MEMO_K + 3, &idx);
+        let w2 = p.lagrange_weights(MAX_MEMO_K + 3, &idx);
+        assert_eq!(*w1, *w2);
+        assert!(!Arc::ptr_eq(&w1, &w2), "above MAX_MEMO_K computes directly");
+    }
+
+    #[test]
+    fn dpm_step_plans_match_manual_math() {
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::LogSnr, 4, 1.0, 1e-3);
+        let p = TrajectoryPlan::new(sched, grid.clone()).with_dpm_orders(&[3, 2, 1, 3]);
+        assert!(p.has_dpm());
+        let sp = p.dpm_step(0);
+        assert_eq!(sp.order, 3);
+        let (tc, tn) = (grid[0], grid[1]);
+        let h = sched.lambda(tn) - sched.lambda(tc);
+        assert!((sp.a_f - sched.sqrt_alpha_bar(tn) / sched.sqrt_alpha_bar(tc)).abs() < 1e-15);
+        assert!((sp.b_f - (-sched.sigma(tn) * h.exp_m1())).abs() < 1e-15);
+        let s1 = sched.t_of_lambda(sched.lambda(tc) + h / 3.0);
+        assert!((sp.t_s1 - s1).abs() < 1e-12);
+        let sp1 = p.dpm_step(2);
+        assert_eq!(sp1.order, 1);
+        assert_eq!(sp1.t_s1, 0.0, "order-1 steps have no intermediate stage");
+    }
+
+    #[test]
+    fn cache_shares_plans_by_key() {
+        let cache = PlanCache::new();
+        let sched = VpSchedule::default();
+        let key = PlanKey::new("era-4@0.3".into(), 10, GridKind::Uniform, &sched, 1.0, 1e-3);
+        let p1 = cache.get_or_build(key.clone(), || plan(10));
+        let p2 = cache.get_or_build(key, || plan(10));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!((cache.len(), cache.hits(), cache.misses()), (1, 1, 1));
+        let other = PlanKey::new("ddim".into(), 10, GridKind::Uniform, &sched, 1.0, 1e-3);
+        let _ = cache.get_or_build(other, || plan(10));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_past_capacity() {
+        let cache = PlanCache::with_capacity(2);
+        let sched = VpSchedule::default();
+        for nfe in [4usize, 5, 6, 7] {
+            let key = PlanKey::new("ddim".into(), nfe, GridKind::Uniform, &sched, 1.0, 1e-3);
+            let p = cache.get_or_build(key, || plan(nfe));
+            assert_eq!(p.steps(), nfe, "capped cache must still serve correct plans");
+        }
+        assert_eq!(cache.len(), 2, "size stays bounded at the cap");
+        assert_eq!(cache.evicted(), 2);
+        // The newest configuration is always the retained one: steady
+        // traffic ends up cached no matter what arrived before it.
+        let key = PlanKey::new("ddim".into(), 7, GridKind::Uniform, &sched, 1.0, 1e-3);
+        let _ = cache.get_or_build(key, || plan(7));
+        assert_eq!(cache.hits(), 1);
+    }
+}

@@ -15,6 +15,12 @@
 //!   global admission control, per-request deadlines and cancellation,
 //!   merged telemetry) behind a TCP JSON-lines server ([`server`]).
 //!
+//! The sampling hot path runs on the zero-copy kernel layer
+//! ([`kernels`]): in-place fused slice ops, per-solver scratch arenas
+//! and ring-buffer history, and a shared [`kernels::TrajectoryPlan`]
+//! cache that precomputes schedule samples and solver coefficients once
+//! per `(solver, NFE, grid, schedule)` across requests and shards.
+//!
 //! Substrate modules ([`tensor`], [`rng`], [`linalg`], [`json`],
 //! [`metrics`], [`data`], [`benchkit`], [`cli`]) are hand-rolled: the
 //! offline registry closure carries no serde / rand / ndarray / criterion.
@@ -41,6 +47,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod json;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod pool;

@@ -44,6 +44,7 @@ use crate::coordinator::{
     CancelHandle, Coordinator, CoordinatorConfig, ModelBank, RequestSpec, SamplingResult,
     SubmitError,
 };
+use crate::kernels::PlanCache;
 
 /// Pool construction knobs.
 #[derive(Clone, Debug)]
@@ -74,6 +75,9 @@ impl Default for PoolConfig {
 pub struct WorkerPool {
     shards: Vec<Coordinator>,
     placement: PlacementPolicy,
+    /// Trajectory plans shared by every shard: one plan build per
+    /// `(solver, nfe, grid, t_end, schedule)` across the whole pool.
+    plans: Arc<PlanCache>,
     max_inflight_rows: usize,
     rr: AtomicUsize,
     pool_rejected: AtomicUsize,
@@ -134,13 +138,15 @@ impl WorkerPool {
     /// `config.shards` field is ignored in favour of `banks.len()`.
     pub fn start_with_banks(banks: Vec<Arc<dyn ModelBank>>, config: PoolConfig) -> WorkerPool {
         assert!(!banks.is_empty(), "pool needs at least one bank");
+        let plans = Arc::new(PlanCache::new());
         let shards = banks
             .into_iter()
-            .map(|b| Coordinator::start(b, config.shard.clone()))
+            .map(|b| Coordinator::start_with_plans(b, config.shard.clone(), plans.clone()))
             .collect();
         WorkerPool {
             shards,
             placement: config.placement,
+            plans,
             max_inflight_rows: config.max_inflight_rows,
             rr: AtomicUsize::new(0),
             pool_rejected: AtomicUsize::new(0),
@@ -151,6 +157,11 @@ impl WorkerPool {
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The pool-wide trajectory-plan cache every shard admits with.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
     }
 
     pub fn placement(&self) -> PlacementPolicy {
@@ -415,6 +426,21 @@ mod tests {
         s.solver = "frobnicate".into();
         assert!(p.submit_tagged(s, Some(9)).is_err());
         assert!(!p.cancel_tag(9), "tag from a failed submit must be cleaned up");
+        p.shutdown();
+    }
+
+    #[test]
+    fn shards_share_one_plan_cache() {
+        // Round-robin over 2 shards: both shards admit the same spec
+        // shape, yet the configuration is planned exactly once pool-wide.
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        for i in 0..4 {
+            p.sample(spec(8, i)).unwrap();
+        }
+        let stats = p.stats();
+        assert!(stats.per_shard.iter().all(|s| s.admitted == 2), "requests must spread");
+        assert_eq!(p.plan_cache().misses(), 1, "one plan build across shards");
+        assert_eq!(p.plan_cache().hits(), 3);
         p.shutdown();
     }
 

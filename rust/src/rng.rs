@@ -69,22 +69,34 @@ impl Rng {
         }
     }
 
-    /// (rows x cols) tensor of iid standard normals.
-    pub fn normal_tensor(&mut self, rows: usize, cols: usize) -> Tensor {
-        let mut data = Vec::with_capacity(rows * cols);
+    /// Fill `out` with iid standard normals, consuming the stream in
+    /// exactly the pattern of [`Rng::normal_tensor`] (Box–Muller pairs,
+    /// odd tail via [`Rng::normal`]) — the allocation-free form the
+    /// solvers' preallocated noise scratch uses; per-seed trajectories
+    /// are identical either way.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        let n = out.len();
+        let mut i = 0;
         // Consume Box–Muller pairs to halve the transcendental count.
-        let n = rows * cols;
-        while data.len() + 2 <= n {
+        while i + 2 <= n {
             let u1 = self.uniform().max(1e-300);
             let u2 = self.uniform();
             let r = (-2.0 * u1.ln()).sqrt();
             let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
-            data.push((r * c) as f32);
-            data.push((r * s) as f32);
+            out[i] = (r * c) as f32;
+            out[i + 1] = (r * s) as f32;
+            i += 2;
         }
-        while data.len() < n {
-            data.push(self.normal() as f32);
+        while i < n {
+            out[i] = self.normal() as f32;
+            i += 1;
         }
+    }
+
+    /// (rows x cols) tensor of iid standard normals.
+    pub fn normal_tensor(&mut self, rows: usize, cols: usize) -> Tensor {
+        let mut data = vec![0.0f32; rows * cols];
+        self.fill_normal(&mut data);
         Tensor::from_vec(data, rows, cols)
     }
 }
@@ -114,6 +126,22 @@ mod tests {
         let mut a = Rng::for_stream(7, 0);
         let mut b = Rng::for_stream(7, 1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fill_normal_matches_normal_tensor_stream() {
+        // Same seed, same stream consumption: the in-place fill and the
+        // allocating constructor must produce identical values (odd
+        // lengths exercise the Box–Muller tail).
+        for n in [1usize, 2, 5, 8, 33] {
+            let mut a = Rng::new(77);
+            let mut b = Rng::new(77);
+            let t = a.normal_tensor(n, 1);
+            let mut buf = vec![0.0f32; n];
+            b.fill_normal(&mut buf);
+            assert_eq!(t.as_slice(), buf.as_slice(), "n={n}");
+            assert_eq!(a.next_u64(), b.next_u64(), "stream position diverged at n={n}");
+        }
     }
 
     #[test]

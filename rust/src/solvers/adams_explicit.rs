@@ -9,9 +9,16 @@
 //!       dx/dt = -0.5 beta(t) x + 0.5 beta(t) eps_theta(x,t) / sigma(t),
 //!   warmed up with plain RK4. Uses fixed AB4 coefficients, i.e. assumes
 //!   a uniform grid (the configuration the paper runs it in).
+//!
+//! The warmup stages evaluate at off-grid midpoints and may allocate;
+//! the multistep phase (everything after the first 3 steps) runs
+//! allocation-free: AB4 combinations into a reusable scratch, the
+//! transfer in place with plan coefficients, and history in a
+//! [`HistoryRing`] whose evicted slot becomes FON's next drift scratch.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
+use crate::kernels::{fused, HistoryRing, ScratchArena, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
@@ -36,23 +43,41 @@ enum Stage {
     Multi,
 }
 
+/// Probability-flow drift `f = -0.5 beta x + 0.5 beta eps / sigma` into
+/// a caller-owned buffer (FON's working quantity).
+fn drift_into(sched: &VpSchedule, out: &mut [f32], x: &[f32], eps: &[f32], t: f64) {
+    let beta = sched.beta_min + t * (sched.beta_max - sched.beta_min);
+    let sigma = sched.sigma(t).max(1e-12);
+    out.copy_from_slice(x);
+    fused::scale(out, (-0.5 * beta) as f32);
+    fused::axpy(out, (0.5 * beta / sigma) as f32, eps);
+}
+
 pub struct ExplicitAdams {
-    sched: VpSchedule,
-    grid: Vec<f64>,
+    plan: Arc<TrajectoryPlan>,
     variant: Variant,
-    x: Tensor,
+    x: Arc<Tensor>,
     i: usize,
     nfe: usize,
     stage: Stage,
     /// Newest-first history: eps values (PNDM) or f values (FON).
-    hist: VecDeque<Tensor>,
+    hist: HistoryRing,
     /// RK intermediates of the current warmup step.
     rk: Vec<Tensor>,
     /// x at the start of the current warmup step.
-    x_base: Option<Tensor>,
+    x_base: Option<Arc<Tensor>>,
     /// Outstanding request (x, t), kept to derive f from eps for FON.
-    pending: Option<(Tensor, f64)>,
+    pending: Option<(Arc<Tensor>, f64)>,
     warmup_steps: usize,
+    /// AB4 combination scratch (multistep phase).
+    combo: Tensor,
+    /// FON drift scratch; swaps through the history ring so steady
+    /// steps reuse the evicted slot instead of allocating.
+    drift_scratch: Tensor,
+    /// Warmup-stage point buffers: each RK stage takes one, and the
+    /// stage's evaluated point is given back in `on_eval` once its
+    /// `Arc` unwinds to a single owner (balanced take/give).
+    arena: ScratchArena,
 }
 
 impl ExplicitAdams {
@@ -65,96 +90,95 @@ impl ExplicitAdams {
     }
 
     fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor, variant: Variant) -> Self {
-        assert!(grid.len() >= 5, "PNDM/FON need >= 4 transitions (>= 13 NFE)");
+        Self::with_plan(Arc::new(TrajectoryPlan::new(sched, grid)), x0, variant)
+    }
+
+    /// Build over a shared precomputed plan (the serving path).
+    pub fn with_plan_pndm(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        Self::with_plan(plan, x0, Variant::Pndm)
+    }
+
+    pub fn with_plan_fon(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        Self::with_plan(plan, x0, Variant::Fon)
+    }
+
+    fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, variant: Variant) -> Self {
+        assert!(plan.grid().len() >= 5, "PNDM/FON need >= 4 transitions (>= 13 NFE)");
+        let (rows, cols) = (x0.rows(), x0.cols());
         ExplicitAdams {
-            sched,
-            grid,
+            plan,
             variant,
-            x: x0,
+            x: Arc::new(x0),
             i: 0,
             nfe: 0,
             stage: Stage::S1,
-            hist: VecDeque::with_capacity(4),
+            hist: HistoryRing::new(4),
             rk: Vec::with_capacity(3),
             x_base: None,
             pending: None,
             warmup_steps: 3,
+            combo: Tensor::zeros(rows, cols),
+            // Only FON converts eps -> drift; PNDM never touches this.
+            drift_scratch: match variant {
+                Variant::Fon => Tensor::zeros(rows, cols),
+                Variant::Pndm => Tensor::zeros(0, 0),
+            },
+            arena: ScratchArena::new(rows, cols),
         }
-    }
-
-    /// DDIM transfer phi(x, eps, t_from -> t_to).
-    fn phi(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
-        let (a, b) = self.sched.ddim_coeffs(t_from, t_to);
-        x.affine(a as f32, b as f32, eps)
-    }
-
-    /// Probability-flow drift f(x, t) from an eps evaluation.
-    fn drift(&self, x: &Tensor, eps: &Tensor, t: f64) -> Tensor {
-        let beta = self.sched.beta_min + t * (self.sched.beta_max - self.sched.beta_min);
-        let sigma = self.sched.sigma(t).max(1e-12);
-        // f = -0.5 beta x + 0.5 beta eps / sigma
-        let mut f = x.clone();
-        f.scale((-0.5 * beta) as f32);
-        f.axpy((0.5 * beta / sigma) as f32, eps);
-        f
     }
 
     fn in_warmup(&self) -> bool {
         self.i < self.warmup_steps
     }
 
-    /// The (x, t) to evaluate next given the current stage.
-    fn request(&self) -> (Tensor, f64) {
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
+    /// The (x, t) to evaluate next given the current stage. Warmup
+    /// stage points are built into arena buffers (`u = a·base + b·slope`
+    /// through the fused kernels — elementwise identical to the old
+    /// clone-then-update form).
+    fn request(&mut self) -> (Arc<Tensor>, f64) {
+        let t_cur = self.plan.t(self.i);
+        let t_next = self.plan.t(self.i + 1);
         if !self.in_warmup() {
-            return (self.x.clone(), t_cur);
+            return (Arc::clone(&self.x), t_cur);
         }
+        if self.stage == Stage::S1 {
+            return (Arc::clone(&self.x), t_cur);
+        }
+        let sched = self.plan.sched();
+        let mut u = self.arena.take();
+        let base = self.x_base.as_ref().unwrap_or(&self.x);
         match self.variant {
             Variant::Pndm => {
                 let t_mid = 0.5 * (t_cur + t_next);
-                let base = self.x_base.as_ref().unwrap_or(&self.x);
-                match self.stage {
-                    Stage::S1 => (self.x.clone(), t_cur),
-                    // x1 = phi(x, e1, t, t_mid)
-                    Stage::S2 => (self.phi(base, &self.rk[0], t_cur, t_mid), t_mid),
-                    // x2 = phi(x, e2, t, t_mid)
-                    Stage::S3 => (self.phi(base, &self.rk[1], t_cur, t_mid), t_mid),
-                    // x3 = phi(x, e3, t, t_next)
-                    Stage::S4 => (self.phi(base, &self.rk[2], t_cur, t_next), t_next),
-                    Stage::Multi => unreachable!(),
-                }
+                // x_s = phi(base, e_s, t -> t_s) for the stage's slope.
+                let (slope, t_to) = match self.stage {
+                    Stage::S2 => (&self.rk[0], t_mid),
+                    Stage::S3 => (&self.rk[1], t_mid),
+                    Stage::S4 => (&self.rk[2], t_next),
+                    _ => unreachable!(),
+                };
+                let (a, b) = sched.ddim_coeffs(t_cur, t_to);
+                fused::affine_into(
+                    u.as_mut_slice(),
+                    a as f32,
+                    base.as_slice(),
+                    b as f32,
+                    slope.as_slice(),
+                );
+                (Arc::new(u), t_to)
             }
             Variant::Fon => {
                 let h = t_next - t_cur; // negative
-                let base = self.x_base.as_ref().unwrap_or(&self.x);
-                match self.stage {
-                    Stage::S1 => (self.x.clone(), t_cur),
-                    Stage::S2 => {
-                        let mut u = base.clone();
-                        u.axpy((0.5 * h) as f32, &self.rk[0]);
-                        (u, t_cur + 0.5 * h)
-                    }
-                    Stage::S3 => {
-                        let mut u = base.clone();
-                        u.axpy((0.5 * h) as f32, &self.rk[1]);
-                        (u, t_cur + 0.5 * h)
-                    }
-                    Stage::S4 => {
-                        let mut u = base.clone();
-                        u.axpy(h as f32, &self.rk[2]);
-                        (u, t_next)
-                    }
-                    Stage::Multi => unreachable!(),
-                }
+                let (slope, step, t_to) = match self.stage {
+                    Stage::S2 => (&self.rk[0], 0.5 * h, t_cur + 0.5 * h),
+                    Stage::S3 => (&self.rk[1], 0.5 * h, t_cur + 0.5 * h),
+                    Stage::S4 => (&self.rk[2], h, t_next),
+                    _ => unreachable!(),
+                };
+                u.as_mut_slice().copy_from_slice(base.as_slice());
+                fused::axpy(u.as_mut_slice(), step as f32, slope.as_slice());
+                (Arc::new(u), t_to)
             }
-        }
-    }
-
-    fn push_hist(&mut self, v: Tensor) {
-        self.hist.push_front(v);
-        if self.hist.len() > 4 {
-            self.hist.pop_back();
         }
     }
 }
@@ -173,31 +197,49 @@ impl Solver for ExplicitAdams {
         }
         assert!(self.pending.is_none(), "next_eval called with an eval outstanding");
         if self.in_warmup() && self.stage == Stage::S1 {
-            self.x_base = Some(self.x.clone());
+            self.x_base = Some(Arc::clone(&self.x));
         }
         let (x, t) = self.request();
-        self.pending = Some((x.clone(), t));
+        self.pending = Some((Arc::clone(&x), t));
         Some(EvalRequest { x, t })
     }
 
     fn on_eval(&mut self, eps: Tensor) {
         let (x_req, t_req) = self.pending.take().expect("on_eval without a pending request");
         self.nfe += 1;
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
-
-        // Convert the raw eps into this variant's working quantity.
-        let val = match self.variant {
-            Variant::Pndm => eps,
-            Variant::Fon => self.drift(&x_req, &eps, t_req),
-        };
+        let sched = self.plan.sched();
+        let t_cur = self.plan.t(self.i);
+        let t_next = self.plan.t(self.i + 1);
 
         if self.in_warmup() {
+            // Convert the raw eps into this variant's working quantity
+            // (warmup may allocate; the multistep phase below does not).
+            let val = match self.variant {
+                Variant::Pndm => eps,
+                Variant::Fon => {
+                    let mut f = Tensor::zeros(eps.rows(), eps.cols());
+                    drift_into(
+                        &sched,
+                        f.as_mut_slice(),
+                        x_req.as_slice(),
+                        eps.as_slice(),
+                        t_req,
+                    );
+                    f
+                }
+            };
+            // Recycle the stage point: S2-S4 requests came from the
+            // arena, and once the caller has dropped its view the Arc
+            // unwinds to a single owner. S1 shares the iterate itself,
+            // so try_unwrap fails there and the clone just drops.
+            if let Ok(buf) = Arc::try_unwrap(x_req) {
+                self.arena.give(buf);
+            }
             match self.stage {
                 Stage::S1 => {
                     // First slope of this step also feeds the multistep
                     // history (the PNDM convention).
-                    self.push_hist(val.clone());
+                    self.hist.push(val.clone());
                     self.rk.push(val);
                     self.stage = Stage::S2;
                 }
@@ -211,15 +253,23 @@ impl Solver for ExplicitAdams {
                         &[&self.rk[0], &self.rk[1], &self.rk[2], &val],
                         &[1.0 / 6.0, 2.0 / 6.0, 2.0 / 6.0, 1.0 / 6.0],
                     );
-                    let base = self.x_base.take().expect("warmup base missing");
-                    self.x = match self.variant {
-                        Variant::Pndm => self.phi(&base, &combo, t_cur, t_next),
-                        Variant::Fon => {
-                            let mut x = base;
-                            x.axpy((t_next - t_cur) as f32, &combo);
-                            x
+                    let mut base = self.x_base.take().expect("warmup base missing");
+                    {
+                        let b = Arc::make_mut(&mut base);
+                        match self.variant {
+                            Variant::Pndm => {
+                                let (a, bb) = sched.ddim_coeffs(t_cur, t_next);
+                                fused::affine_inplace(
+                                    b.as_mut_slice(),
+                                    a as f32,
+                                    bb as f32,
+                                    combo.as_slice(),
+                                );
+                            }
+                            Variant::Fon => b.axpy((t_next - t_cur) as f32, &combo),
                         }
-                    };
+                    }
+                    self.x = base;
                     self.rk.clear();
                     self.i += 1;
                     self.stage = if self.in_warmup() { Stage::S1 } else { Stage::Multi };
@@ -229,20 +279,50 @@ impl Solver for ExplicitAdams {
             return;
         }
 
-        // Multistep phase: push the new slope, AB4-combine, transfer.
-        self.push_hist(val);
-        let n = self.hist.len().min(4);
-        assert!(n == 4, "multistep phase requires a full history");
-        let refs: Vec<&Tensor> = self.hist.iter().take(4).collect();
-        let combo = Tensor::weighted_sum(&refs, &AB4);
-        self.x = match self.variant {
-            Variant::Pndm => self.phi(&self.x, &combo, t_cur, t_next),
+        // Multistep phase: push the new slope, AB4-combine, transfer —
+        // all in place.
+        let (rows, cols) = (self.x.rows(), self.x.cols());
+        let val = match self.variant {
+            Variant::Pndm => eps,
             Variant::Fon => {
-                let mut x = self.x.clone();
-                x.axpy((t_next - t_cur) as f32, &combo);
-                x
+                drift_into(
+                    &sched,
+                    self.drift_scratch.as_mut_slice(),
+                    x_req.as_slice(),
+                    eps.as_slice(),
+                    t_req,
+                );
+                std::mem::replace(&mut self.drift_scratch, Tensor::zeros(0, 0))
             }
         };
+        // x_req aliases self.x in the multistep phase; release it before
+        // the in-place update below or Arc::make_mut would deep-copy the
+        // iterate every step (the exact clone this layer removes).
+        drop(x_req);
+        let evicted = self.hist.push(val);
+        if self.variant == Variant::Fon {
+            // Adopt the evicted slot as the next drift scratch (steady
+            // state: the ring is full, so this never allocates).
+            self.drift_scratch = evicted.unwrap_or_else(|| Tensor::zeros(rows, cols));
+        }
+        assert!(self.hist.len() == 4, "multistep phase requires a full history");
+        {
+            let out = self.combo.as_mut_slice();
+            fused::zero(out);
+            for (h, &wm) in self.hist.iter().take(4).zip(AB4.iter()) {
+                fused::axpy(out, wm as f32, h.as_slice());
+            }
+        }
+        let x = Arc::make_mut(&mut self.x);
+        match self.variant {
+            Variant::Pndm => {
+                let (a, b) = self.plan.ddim_coeffs(self.i);
+                fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, self.combo.as_slice());
+            }
+            Variant::Fon => {
+                fused::axpy(x.as_mut_slice(), (t_next - t_cur) as f32, self.combo.as_slice());
+            }
+        }
         self.i += 1;
     }
 
@@ -251,7 +331,7 @@ impl Solver for ExplicitAdams {
     }
 
     fn is_done(&self) -> bool {
-        self.i + 1 >= self.grid.len()
+        self.i + 1 >= self.plan.grid().len()
     }
 
     fn nfe(&self) -> usize {

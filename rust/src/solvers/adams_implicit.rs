@@ -13,16 +13,25 @@
 //! The corrector order ramps 2 -> 4 while the history fills; the first
 //! step is plain DDIM. This gives the method the same 1-NFE/step budget
 //! as DDIM and ERA, which is how the paper compares them.
+//!
+//! History lives in a preallocated [`HistoryRing`] that adopts each
+//! model output by move; the predictor/corrector combinations and both
+//! transfers run in place through the kernel layer with coefficients
+//! from the shared [`TrajectoryPlan`] — zero allocations per steady
+//! step.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
+use crate::kernels::{fused, HistoryRing, TrajectoryPlan};
 use crate::solvers::adams_explicit::AB4;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
 /// Adams–Moulton weights by order; index 0 multiplies the *implicit*
-/// (newest, predicted-point) evaluation. Orders 2..4.
+/// (newest, predicted-point) evaluation. Orders 2..4. (The serving path
+/// reads the same tables from the [`TrajectoryPlan`]; this free
+/// function remains for tests and external callers.)
 pub fn am_weights(order: usize) -> &'static [f64] {
     match order {
         2 => &[0.5, 0.5],
@@ -32,45 +41,60 @@ pub fn am_weights(order: usize) -> &'static [f64] {
 }
 
 pub struct ImplicitAdamsPc {
-    sched: VpSchedule,
-    grid: Vec<f64>,
-    x: Tensor,
+    plan: Arc<TrajectoryPlan>,
+    x: Arc<Tensor>,
     i: usize,
     nfe: usize,
-    /// Newest-first eps history.
-    hist: VecDeque<Tensor>,
+    /// Newest-first eps history (ring adopts model outputs by move).
+    hist: HistoryRing,
+    /// Predictor/corrector combination scratch.
+    comb: Tensor,
+    /// Predicted evaluation point handed out through [`EvalRequest`].
+    x_pred: Arc<Tensor>,
     pending: bool,
 }
 
 impl ImplicitAdamsPc {
     pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor) -> Self {
         assert!(grid.len() >= 2);
+        ImplicitAdamsPc::with_plan(Arc::new(TrajectoryPlan::new(sched, grid)), x0)
+    }
+
+    /// Build over a shared precomputed plan (the serving path).
+    pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        let (rows, cols) = (x0.rows(), x0.cols());
         ImplicitAdamsPc {
-            sched,
-            grid,
-            x: x0,
+            plan,
+            x: Arc::new(x0),
             i: 0,
             nfe: 0,
-            hist: VecDeque::with_capacity(4),
+            hist: HistoryRing::new(4),
+            comb: Tensor::zeros(rows, cols),
+            x_pred: Arc::new(Tensor::zeros(rows, cols)),
             pending: false,
         }
     }
 
-    fn phi(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
-        let (a, b) = self.sched.ddim_coeffs(t_from, t_to);
-        x.affine(a as f32, b as f32, eps)
-    }
-
-    /// AB predictor combination from history (order adapts to fill level).
-    fn predict_eps(&self) -> Tensor {
+    /// AB predictor combination from history into `comb` (order adapts
+    /// to fill level); accumulation order matches the allocating
+    /// `weighted_sum` path exactly. The part list lives on the stack —
+    /// the history ring never exceeds 4 slots.
+    fn predict_eps(&mut self) {
         let n = self.hist.len();
-        let refs: Vec<&Tensor> = self.hist.iter().collect();
-        match n {
-            1 => refs[0].clone(),
-            2 => Tensor::weighted_sum(&refs[..2], &[1.5, -0.5]),
-            3 => Tensor::weighted_sum(&refs[..3], &[23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0]),
-            _ => Tensor::weighted_sum(&refs[..4], &AB4),
+        if n == 1 {
+            self.comb.as_mut_slice().copy_from_slice(self.hist.get(0).as_slice());
+            return;
         }
+        let w: &[f64] = match n {
+            2 => &[1.5, -0.5],
+            3 => &[23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0],
+            _ => &AB4,
+        };
+        let mut parts: [&[f32]; 4] = [&[]; 4];
+        for (slot, h) in parts.iter_mut().zip(self.hist.iter()) {
+            *slot = h.as_slice();
+        }
+        fused::weighted_sum_into(self.comb.as_mut_slice(), &parts[..w.len()], w);
     }
 }
 
@@ -85,17 +109,23 @@ impl Solver for ImplicitAdamsPc {
         }
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
         if self.hist.is_empty() {
             // First step: evaluate at the current point (plain DDIM).
-            Some(EvalRequest { x: self.x.clone(), t: t_cur })
+            Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
         } else {
             // Predict x at t_{i+1} with the explicit-Adams combination and
             // evaluate there (the single evaluation of this step).
-            let eps_p = self.predict_eps();
-            let x_pred = self.phi(&self.x, &eps_p, t_cur, t_next);
-            Some(EvalRequest { x: x_pred, t: t_next })
+            self.predict_eps();
+            let (a, b) = self.plan.ddim_coeffs(self.i);
+            let xp = Arc::make_mut(&mut self.x_pred);
+            fused::affine_into(
+                xp.as_mut_slice(),
+                a as f32,
+                self.x.as_slice(),
+                b as f32,
+                self.comb.as_slice(),
+            );
+            Some(EvalRequest { x: Arc::clone(&self.x_pred), t: self.plan.t(self.i + 1) })
         }
     }
 
@@ -103,13 +133,13 @@ impl Solver for ImplicitAdamsPc {
         assert!(self.pending, "on_eval without a pending request");
         self.pending = false;
         self.nfe += 1;
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
+        let (a, b) = self.plan.ddim_coeffs(self.i);
 
         if self.hist.is_empty() {
             // DDIM bootstrap step; eps is at (x_i, t_i).
-            self.x = self.phi(&self.x, &eps, t_cur, t_next);
-            self.hist.push_front(eps);
+            let x = Arc::make_mut(&mut self.x);
+            fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, eps.as_slice());
+            self.hist.push(eps);
             self.i += 1;
             return;
         }
@@ -117,17 +147,18 @@ impl Solver for ImplicitAdamsPc {
         // Corrector: AM mix of the predicted-point eval (implicit slot)
         // and the history; order ramps with available history.
         let order = (self.hist.len() + 1).min(4);
-        let w = am_weights(order);
-        let mut tensors: Vec<&Tensor> = vec![&eps];
-        tensors.extend(self.hist.iter().take(order - 1));
-        let eps_c = Tensor::weighted_sum(&tensors, w);
-        self.x = self.phi(&self.x, &eps_c, t_cur, t_next);
+        let w = self.plan.am_weights(order);
+        let out = self.comb.as_mut_slice();
+        fused::zero(out);
+        fused::axpy(out, w[0] as f32, eps.as_slice());
+        for (h, &wm) in self.hist.iter().take(order - 1).zip(w[1..].iter()) {
+            fused::axpy(out, wm as f32, h.as_slice());
+        }
+        let x = Arc::make_mut(&mut self.x);
+        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, self.comb.as_slice());
 
         // PECE: the predicted-point evaluation becomes history for t_{i+1}.
-        self.hist.push_front(eps);
-        if self.hist.len() > 4 {
-            self.hist.pop_back();
-        }
+        self.hist.push(eps); // evicted oldest slot is simply dropped
         self.i += 1;
     }
 
@@ -136,7 +167,7 @@ impl Solver for ImplicitAdamsPc {
     }
 
     fn is_done(&self) -> bool {
-        self.i + 1 >= self.grid.len()
+        self.i + 1 >= self.plan.grid().len()
     }
 
     fn nfe(&self) -> usize {

@@ -6,17 +6,20 @@
 //!                                    b_i = sigma(t_{i+1}) - a_i sigma(t_i)
 //!
 //! ```
-//! with its own choice of `eps`.
+//! with its own choice of `eps`. The `(a_i, b_i)` pairs come precomputed
+//! from the [`TrajectoryPlan`]; the transition runs in place through the
+//! kernel layer, so a step is one fused pass and zero allocations.
 
+use std::sync::Arc;
+
+use crate::kernels::{fused, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
 pub struct Ddim {
-    sched: VpSchedule,
-    /// Decreasing timesteps t_0 > ... > t_N.
-    grid: Vec<f64>,
-    x: Tensor,
+    plan: Arc<TrajectoryPlan>,
+    x: Arc<Tensor>,
     /// Index of the *next transition* (x at grid[i] currently).
     i: usize,
     nfe: usize,
@@ -26,7 +29,12 @@ pub struct Ddim {
 impl Ddim {
     pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor) -> Self {
         assert!(grid.len() >= 2, "grid needs at least one transition");
-        Ddim { sched, grid, x: x0, i: 0, nfe: 0, pending: false }
+        Ddim::with_plan(Arc::new(TrajectoryPlan::new(sched, grid)), x0)
+    }
+
+    /// Build over a shared precomputed plan (the serving path).
+    pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        Ddim { plan, x: Arc::new(x0), i: 0, nfe: 0, pending: false }
     }
 }
 
@@ -41,15 +49,17 @@ impl Solver for Ddim {
         }
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
-        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
     }
 
     fn on_eval(&mut self, eps: Tensor) {
         assert!(self.pending, "on_eval without a pending request");
         self.pending = false;
         self.nfe += 1;
-        let (a, b) = self.sched.ddim_coeffs(self.grid[self.i], self.grid[self.i + 1]);
-        self.x.affine_inplace(a as f32, b as f32, &eps);
+        let (a, b) = self.plan.ddim_coeffs(self.i);
+        let x = Arc::make_mut(&mut self.x);
+        debug_assert_eq!(x.len(), eps.len());
+        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, eps.as_slice());
         self.i += 1;
     }
 
@@ -58,7 +68,7 @@ impl Solver for Ddim {
     }
 
     fn is_done(&self) -> bool {
-        self.i + 1 >= self.grid.len()
+        self.i + 1 >= self.plan.grid().len()
     }
 
     fn nfe(&self) -> usize {
@@ -69,10 +79,10 @@ impl Solver for Ddim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solvers::eps_model::{AnalyticGmm, CountingEps};
-    use crate::solvers::schedule::{make_grid, GridKind};
-    use crate::solvers::sample_with;
     use crate::rng::Rng;
+    use crate::solvers::eps_model::{AnalyticGmm, CountingEps, EpsModel};
+    use crate::solvers::sample_with;
+    use crate::solvers::schedule::{make_grid, GridKind};
 
     fn setup(n_steps: usize, batch: usize) -> (Ddim, CountingEps<AnalyticGmm>) {
         let sched = VpSchedule::default();
@@ -128,6 +138,20 @@ mod tests {
             fids.push(crate::metrics::fid(&out, &reference));
         }
         assert!(fids[2] < fids[0], "fid must improve with steps: {fids:?}");
+    }
+
+    #[test]
+    fn outstanding_view_forces_copy_not_corruption() {
+        // Holding the EvalRequest across on_eval is legal: the solver
+        // copies on write and the held view keeps its pre-step contents.
+        let (mut s, m) = setup(5, 4);
+        let req = s.next_eval().unwrap();
+        let before = req.x.as_slice().to_vec();
+        let t = vec![req.t as f32; 4];
+        let eps = m.eval(&req.x, &t);
+        s.on_eval(eps); // req still alive here
+        assert_eq!(req.x.as_slice(), before.as_slice(), "held view mutated");
+        assert_ne!(s.current().as_slice(), before.as_slice(), "step had no effect");
     }
 
     #[test]

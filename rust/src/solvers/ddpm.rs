@@ -7,26 +7,48 @@
 //!     var     = (1 - ab(t_{i+1}))/(1 - ab(t_i)) (1 - alpha_i)
 //!     x'      = mu + sqrt(var) z,  z ~ N(0, I)   (no noise on final step)
 //! ```
+//!
+//! `alpha_bar` samples come from the shared [`TrajectoryPlan`]; the
+//! posterior update runs in place and the ancestral noise fills a
+//! preallocated scratch tensor, so steps are allocation-free.
 
+use std::sync::Arc;
+
+use crate::kernels::{fused, TrajectoryPlan};
 use crate::rng::Rng;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
 pub struct Ddpm {
-    sched: VpSchedule,
-    grid: Vec<f64>,
-    x: Tensor,
+    plan: Arc<TrajectoryPlan>,
+    x: Arc<Tensor>,
     i: usize,
     nfe: usize,
     pending: bool,
     rng: Rng,
+    /// Ancestral-noise scratch, refilled in place each step.
+    z: Tensor,
 }
 
 impl Ddpm {
     pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor, seed: u64) -> Self {
         assert!(grid.len() >= 2);
-        Ddpm { sched, grid, x: x0, i: 0, nfe: 0, pending: false, rng: Rng::for_stream(seed, 0xD0) }
+        Ddpm::with_plan(Arc::new(TrajectoryPlan::new(sched, grid)), x0, seed)
+    }
+
+    /// Build over a shared precomputed plan (the serving path).
+    pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, seed: u64) -> Self {
+        let z = Tensor::zeros(x0.rows(), x0.cols());
+        Ddpm {
+            plan,
+            x: Arc::new(x0),
+            i: 0,
+            nfe: 0,
+            pending: false,
+            rng: Rng::for_stream(seed, 0xD0),
+            z,
+        }
     }
 }
 
@@ -41,7 +63,7 @@ impl Solver for Ddpm {
         }
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
-        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
     }
 
     fn on_eval(&mut self, eps: Tensor) {
@@ -49,26 +71,25 @@ impl Solver for Ddpm {
         self.pending = false;
         self.nfe += 1;
 
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
-        let ab_cur = self.sched.alpha_bar(t_cur);
-        let ab_next = self.sched.alpha_bar(t_next);
+        let ab_cur = self.plan.alpha_bar_at(self.i);
+        let ab_next = self.plan.alpha_bar_at(self.i + 1);
         let alpha = ab_cur / ab_next; // in (0, 1)
 
-        // Posterior mean.
+        // Posterior mean, in place.
         let coef = ((1.0 - alpha) / (1.0 - ab_cur).sqrt()) as f32;
         let inv_sqrt_alpha = (1.0 / alpha.sqrt()) as f32;
-        self.x.axpy(-coef, &eps);
-        self.x.scale(inv_sqrt_alpha);
+        let x = Arc::make_mut(&mut self.x);
+        fused::axpy(x.as_mut_slice(), -coef, eps.as_slice());
+        fused::scale(x.as_mut_slice(), inv_sqrt_alpha);
 
         // Posterior noise except on the last transition (the paper
         // withdraws the final-step denoising trick; deterministic output).
-        let last = self.i + 2 == self.grid.len();
+        let last = self.i + 2 == self.plan.grid().len();
         if !last {
             let var = (1.0 - ab_next) / (1.0 - ab_cur) * (1.0 - alpha);
             if var > 0.0 {
-                let z = self.rng.normal_tensor(self.x.rows(), self.x.cols());
-                self.x.axpy(var.sqrt() as f32, &z);
+                self.rng.fill_normal(self.z.as_mut_slice());
+                fused::axpy(x.as_mut_slice(), var.sqrt() as f32, self.z.as_slice());
             }
         }
         self.i += 1;
@@ -79,7 +100,7 @@ impl Solver for Ddpm {
     }
 
     fn is_done(&self) -> bool {
-        self.i + 1 >= self.grid.len()
+        self.i + 1 >= self.plan.grid().len()
     }
 
     fn nfe(&self) -> usize {

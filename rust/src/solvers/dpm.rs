@@ -6,7 +6,17 @@
 //! Order 1 is algebraically identical to DDIM (a unit test pins this).
 //! The singlestep formulas follow Lu et al. Algorithms 1 and 2 with
 //! r1 = 1/3, r2 = 2/3.
+//!
+//! All exponential-integrator coefficients (and the logSNR midpoint
+//! inversions they require) are precomputed per step in the shared
+//! [`TrajectoryPlan`] — they depend only on `(order schedule, grid,
+//! schedule)`, exactly the DPM-Solver observation that its coefficient
+//! schedule is computable once per trajectory. Steps run in place; the
+//! intermediate-stage evaluation point reuses one scratch tensor.
 
+use std::sync::Arc;
+
+use crate::kernels::{fused, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
@@ -67,29 +77,21 @@ struct StepState {
 }
 
 pub struct DpmSolver {
-    sched: VpSchedule,
-    grid: Vec<f64>,
-    /// Per-step solver order; len == grid.len() - 1.
-    orders: Vec<usize>,
-    x: Tensor,
+    plan: Arc<TrajectoryPlan>,
+    x: Arc<Tensor>,
     i: usize,
     nfe: usize,
     st: StepState,
     pending: bool,
     label: String,
+    /// Intermediate-stage evaluation point (reused each step).
+    u: Arc<Tensor>,
 }
 
 impl DpmSolver {
-    /// Fixed-order solver spending exactly `nfe` evaluations across the
-    /// grid (the grid must have `fixed_order_schedule(order, nfe).len()`
-    /// transitions).
+    /// Fixed-order solver over every transition of the grid.
     pub fn new(sched: VpSchedule, grid: Vec<f64>, x0: Tensor, order: usize) -> Self {
-        let orders = {
-            // grid has K+1 points; distribute the order over K steps with
-            // the final step possibly truncated by the caller's budget.
-            let k = grid.len() - 1;
-            vec![order; k]
-        };
+        let orders = vec![order; grid.len() - 1];
         Self::with_orders(sched, grid, x0, orders, format!("dpm-{order}"))
     }
 
@@ -108,75 +110,62 @@ impl DpmSolver {
         orders: Vec<usize>,
         label: String,
     ) -> Self {
-        assert_eq!(orders.len() + 1, grid.len(), "orders must match grid transitions");
-        assert!(orders.iter().all(|&o| (1..=3).contains(&o)));
+        let plan = TrajectoryPlan::new(sched, grid).with_dpm_orders(&orders);
+        Self::with_plan(Arc::new(plan), x0, label)
+    }
+
+    /// Build over a shared precomputed plan (must carry DPM step
+    /// coefficients — i.e. come from a DPM [`crate::solvers::SolverKind`]).
+    pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, label: String) -> Self {
+        assert!(plan.has_dpm(), "DpmSolver needs a plan with DPM coefficients");
+        let u = Arc::new(Tensor::zeros(x0.rows(), x0.cols()));
         DpmSolver {
-            sched,
-            grid,
-            orders,
-            x: x0,
+            plan,
+            x: Arc::new(x0),
             i: 0,
             nfe: 0,
             st: StepState { e0: None, e1: None, stage: 0 },
             pending: false,
             label,
+            u,
         }
     }
 
-    fn lam(&self, t: f64) -> f64 {
-        self.sched.lambda(t)
-    }
-
-    fn alpha(&self, t: f64) -> f64 {
-        self.sched.sqrt_alpha_bar(t)
-    }
-
-    /// Intermediate time at lambda(t_cur) + r*h.
-    fn t_mid(&self, r: f64) -> f64 {
-        let (tc, tn) = (self.grid[self.i], self.grid[self.i + 1]);
-        let h = self.lam(tn) - self.lam(tc);
-        self.sched.t_of_lambda(self.lam(tc) + r * h)
-    }
-
-    /// First-order transition from (x, t_from) to t_to with a given eps.
-    fn order1(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
-        let h = self.lam(t_to) - self.lam(t_from);
-        let a = (self.alpha(t_to) / self.alpha(t_from)) as f32;
-        let b = (-self.sched.sigma(t_to) * h.exp_m1()) as f32;
-        x.affine(a as f32, b, eps)
-    }
-
-    /// The (x, t) this step needs at its current stage.
-    fn request(&self) -> (Tensor, f64) {
-        let order = self.orders[self.i];
-        let (tc, tn) = (self.grid[self.i], self.grid[self.i + 1]);
-        match (order, self.st.stage) {
-            (_, 0) => (self.x.clone(), tc),
-            (2, 1) => {
-                let s = self.t_mid(0.5);
-                (self.order1(&self.x, self.st.e0.as_ref().unwrap(), tc, s), s)
-            }
-            (3, 1) => {
-                let s1 = self.t_mid(1.0 / 3.0);
-                (self.order1(&self.x, self.st.e0.as_ref().unwrap(), tc, s1), s1)
+    /// The (x, t) this step needs at its current stage. Intermediate
+    /// points are built in place into the `u` scratch.
+    fn request(&mut self) -> (Arc<Tensor>, f64) {
+        let sp = self.plan.dpm_step(self.i);
+        match (sp.order, self.st.stage) {
+            (_, 0) => (Arc::clone(&self.x), self.plan.t(self.i)),
+            (2, 1) | (3, 1) => {
+                // u = a_s1 x + b_s1 e0 (order-1 transfer to the midpoint).
+                let e0 = self.st.e0.as_ref().unwrap();
+                let u = Arc::make_mut(&mut self.u);
+                fused::affine_into(
+                    u.as_mut_slice(),
+                    sp.a_s1 as f32,
+                    self.x.as_slice(),
+                    sp.b_s1 as f32,
+                    e0.as_slice(),
+                );
+                (Arc::clone(&self.u), sp.t_s1)
             }
             (3, 2) => {
-                // u2 = a x - sigma_s2 (e^{r2 h} - 1) e0
-                //      - (sigma_s2 r2/r1)((e^{r2 h}-1)/(r2 h) - 1) D1
-                let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
-                let h = self.lam(tn) - self.lam(tc);
-                let s2 = self.t_mid(r2);
-                let a = self.alpha(s2) / self.alpha(tc);
-                let sig = self.sched.sigma(s2);
-                let em = (r2 * h).exp_m1();
+                // u2 = a_s2 x + b_s2 e0 + c_s2 (e1 - e0).
                 let e0 = self.st.e0.as_ref().unwrap();
                 let e1 = self.st.e1.as_ref().unwrap();
-                let mut u2 = self.x.affine(a as f32, (-sig * em) as f32, e0);
-                let c = -(sig * r2 / r1) * (em / (r2 * h) - 1.0);
-                // D1 = e1 - e0.
-                u2.axpy(c as f32, e1);
-                u2.axpy(-c as f32, e0);
-                (u2, s2)
+                let u = Arc::make_mut(&mut self.u);
+                fused::affine_into(
+                    u.as_mut_slice(),
+                    sp.a_s2 as f32,
+                    self.x.as_slice(),
+                    sp.b_s2 as f32,
+                    e0.as_slice(),
+                );
+                let c = sp.c_s2 as f32;
+                fused::axpy(u.as_mut_slice(), c, e1.as_slice());
+                fused::axpy(u.as_mut_slice(), -c, e0.as_slice());
+                (Arc::clone(&self.u), sp.t_s2)
             }
             _ => unreachable!("invalid dpm stage"),
         }
@@ -184,29 +173,31 @@ impl DpmSolver {
 
     /// Complete the current step with its final evaluation `e_last`.
     fn finish_step(&mut self, e_last: Tensor) {
-        let order = self.orders[self.i];
-        let (tc, tn) = (self.grid[self.i], self.grid[self.i + 1]);
-        match order {
-            1 => {
-                self.x = self.order1(&self.x, &e_last, tc, tn);
-            }
-            2 => {
-                // x_next = a x - sigma_n (e^h - 1) eps(u, s).
-                self.x = self.order1(&self.x, &e_last, tc, tn);
+        let sp = self.plan.dpm_step(self.i);
+        let x = Arc::make_mut(&mut self.x);
+        match sp.order {
+            1 | 2 => {
+                // x_next = a x + b e_last (order 2's e_last sits at the
+                // midpoint; same transfer shape).
+                fused::affine_inplace(
+                    x.as_mut_slice(),
+                    sp.a_f as f32,
+                    sp.b_f as f32,
+                    e_last.as_slice(),
+                );
             }
             3 => {
-                let r2 = 2.0 / 3.0;
-                let h = self.lam(tn) - self.lam(tc);
-                let a = self.alpha(tn) / self.alpha(tc);
-                let sig = self.sched.sigma(tn);
-                let em = h.exp_m1();
+                // x_next = a x + b e0 + c (e_last - e0).
                 let e0 = self.st.e0.as_ref().unwrap();
-                let mut x = self.x.affine(a as f32, (-sig * em) as f32, e0);
-                let c = -(sig / r2) * (em / h - 1.0);
-                // D2 = e_last - e0.
-                x.axpy(c as f32, &e_last);
-                x.axpy(-c as f32, e0);
-                self.x = x;
+                fused::affine_inplace(
+                    x.as_mut_slice(),
+                    sp.a_f as f32,
+                    sp.b_f as f32,
+                    e0.as_slice(),
+                );
+                let c = sp.c_f as f32;
+                fused::axpy(x.as_mut_slice(), c, e_last.as_slice());
+                fused::axpy(x.as_mut_slice(), -c, e0.as_slice());
             }
             _ => unreachable!(),
         }
@@ -234,7 +225,7 @@ impl Solver for DpmSolver {
         assert!(self.pending, "on_eval without a pending request");
         self.pending = false;
         self.nfe += 1;
-        let order = self.orders[self.i];
+        let order = self.plan.dpm_step(self.i).order;
         match (order, self.st.stage) {
             (1, 0) => self.finish_step(eps),
             (2, 0) | (3, 0) => {
@@ -255,7 +246,7 @@ impl Solver for DpmSolver {
     }
 
     fn is_done(&self) -> bool {
-        self.i >= self.orders.len()
+        self.i >= self.plan.steps()
     }
 
     fn nfe(&self) -> usize {

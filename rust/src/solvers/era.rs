@@ -23,9 +23,18 @@
 //! refreshes the buffer and scores the predictor — except the final one,
 //! whose evaluation no future step would consume and is therefore
 //! skipped; total NFE equals the number of grid transitions.
+//!
+//! Hot-path layout: all interpolation math is amortised off the network
+//! *and* off the step. DDIM/AM coefficients and the per-`(step,
+//! indices)` Lagrange weights come from the shared [`TrajectoryPlan`]
+//! (weights are memoised across requests); the iterate, predictor and
+//! corrector buffers update in place; buffer entries are adopted by
+//! move into preallocated storage. A steady-state ERA step performs
+//! zero heap allocations (pinned by `benches/bench_step_overhead.rs`).
 
-use crate::solvers::adams_implicit::am_weights;
-use crate::solvers::lagrange;
+use std::sync::Arc;
+
+use crate::kernels::{fused, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
@@ -65,10 +74,19 @@ pub struct SelectionTrace {
 /// when the error is high" intent while keeping the Lagrange system
 /// nonsingular.
 pub fn select_indices(i: usize, k: usize, p: f64) -> Vec<usize> {
-    assert!(k >= 1 && i + 1 >= k, "buffer too short: i={i}, k={k}");
     let mut idx = Vec::with_capacity(k);
+    select_indices_into(&mut idx, i, k, p);
+    idx
+}
+
+/// In-place form of [`select_indices`]: fills `idx` (cleared first) so
+/// the per-step selection reuses one scratch vector.
+pub fn select_indices_into(idx: &mut Vec<usize>, i: usize, k: usize, p: f64) {
+    assert!(k >= 1 && i + 1 >= k, "buffer too short: i={i}, k={k}");
+    idx.clear();
     if i == 0 {
-        return vec![0];
+        idx.push(0);
+        return;
     }
     // Eq. 16: uniform cover tau_hat_m = (i/k)*m for m = 1..=k, then
     // Eq. 17: tau_m = floor((tau_hat_m / i)^p * i). Note tau_hat_m / i
@@ -98,30 +116,37 @@ pub fn select_indices(i: usize, k: usize, p: f64) -> Vec<usize> {
     }
     debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
     debug_assert_eq!(*idx.last().unwrap(), i);
-    idx
 }
 
 /// ERA-Solver state machine (one concurrent sampling request).
 pub struct EraSolver {
-    sched: VpSchedule,
-    grid: Vec<f64>,
-    x: Tensor,
+    plan: Arc<TrajectoryPlan>,
+    x: Arc<Tensor>,
     i: usize,
     nfe: usize,
     k: usize,
     selection: Selection,
-    /// Lagrange buffer Omega (Eq. 12): `times[n]`/`eps[n]` is the noise
-    /// the network returned at grid point n. Grows one entry per eval.
-    times: Vec<f64>,
+    /// Lagrange buffer Omega (Eq. 12): `eps[n]` is the noise the network
+    /// returned at grid point n (entries adopt the model's output by
+    /// move; storage preallocated for the whole trajectory).
     eps: Vec<Tensor>,
     /// Eq. 15, initialised to lambda so the first exponent is 1
     /// (identity warp), per Alg. 1 line 2.
     delta_eps: f64,
     /// Predictor output awaiting scoring against the next observation.
-    pending_pred: Option<Tensor>,
+    pred: Tensor,
+    has_pred: bool,
+    /// Corrector combination scratch.
+    eps_c: Tensor,
+    /// ERS selection scratch (capacity k).
+    idx_buf: Vec<usize>,
     pending: bool,
     done: bool,
-    trace: Vec<SelectionTrace>,
+    /// Flat preallocated ERS decision log: `(step, delta_eps)` plus k
+    /// indices per corrected step (Fig. 3 diagnostics without per-step
+    /// allocation).
+    trace_meta: Vec<(usize, f64)>,
+    trace_idx: Vec<usize>,
 }
 
 impl EraSolver {
@@ -133,38 +158,49 @@ impl EraSolver {
         selection: Selection,
     ) -> Self {
         assert!(grid.len() >= 2, "need at least one transition");
+        EraSolver::with_plan(Arc::new(TrajectoryPlan::new(sched, grid)), x0, k, selection)
+    }
+
+    /// Build over a shared precomputed plan (the serving path; the
+    /// plan's Lagrange memo is then shared across requests).
+    pub fn with_plan(
+        plan: Arc<TrajectoryPlan>,
+        x0: Tensor,
+        k: usize,
+        selection: Selection,
+    ) -> Self {
+        let n_points = plan.grid().len();
+        assert!(n_points >= 2, "need at least one transition");
         assert!(k >= 2, "interpolation order k must be >= 2");
         assert!(
-            grid.len() > k,
+            n_points > k,
             "NFE budget {} too small for order k={k} (needs > k transitions)",
-            grid.len() - 1
+            n_points - 1
         );
         let lambda = match selection {
             Selection::ErrorRobust { lambda } => lambda,
             _ => 1.0,
         };
+        let (rows, cols) = (x0.rows(), x0.cols());
+        let steps = n_points - 1;
         EraSolver {
-            sched,
-            grid,
-            x: x0,
+            plan,
+            x: Arc::new(x0),
             i: 0,
             nfe: 0,
             k,
             selection,
-            times: Vec::new(),
-            eps: Vec::new(),
+            eps: Vec::with_capacity(n_points),
             delta_eps: lambda,
-            pending_pred: None,
+            pred: Tensor::zeros(rows, cols),
+            has_pred: false,
+            eps_c: Tensor::zeros(rows, cols),
+            idx_buf: Vec::with_capacity(k),
             pending: false,
             done: false,
-            trace: Vec::new(),
+            trace_meta: Vec::with_capacity(steps),
+            trace_idx: Vec::with_capacity(steps * k),
         }
-    }
-
-    /// DDIM transition (Eq. 8).
-    fn phi(&self, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
-        let (a, b) = self.sched.ddim_coeffs(t_from, t_to);
-        x.affine(a as f32, b as f32, eps)
     }
 
     /// The power-function exponent of Eq. 17 under the active selection.
@@ -176,65 +212,77 @@ impl EraSolver {
         }
     }
 
-    /// Selected buffer indices for the current step.
-    fn indices(&self) -> Vec<usize> {
-        let i = self.times.len() - 1;
-        match &self.selection {
-            Selection::FixedLast => {
-                // tau_m = i - m, ascending.
-                ((i + 1 - self.k)..=i).collect()
-            }
-            _ => select_indices(i, self.k, self.exponent()),
-        }
-    }
-
-    /// Predictor (Eq. 13/14): interpolate the selected bases at `t`.
-    fn predict(&mut self, t: f64) -> Tensor {
-        let idx = self.indices();
-        self.trace.push(SelectionTrace {
-            step: self.i,
-            delta_eps: self.delta_eps,
-            indices: idx.clone(),
-        });
-        let nodes: Vec<f64> = idx.iter().map(|&n| self.times[n]).collect();
-        let vals: Vec<&Tensor> = idx.iter().map(|&n| &self.eps[n]).collect();
-        lagrange::interpolate(&nodes, &vals, t)
-    }
-
     /// One transition x_{t_i} -> x_{t_{i+1}} using everything buffered.
-    /// Returns the predictor output when in the main (corrected) phase.
-    fn advance(&mut self) -> Option<Tensor> {
-        let t_cur = self.grid[self.i];
-        let t_next = self.grid[self.i + 1];
-        let newest = self.eps.last().expect("advance before first eval");
+    /// Returns true when the predictor ran (main, corrected phase).
+    fn advance(&mut self) -> bool {
+        let (a, b) = self.plan.ddim_coeffs(self.i);
 
         if self.i < self.k - 1 {
             // Warmup (Alg. 1 line 5-7): plain DDIM with the newest eps.
-            self.x = self.phi(&self.x.clone(), newest, t_cur, t_next);
+            let newest = self.eps.last().expect("advance before first eval");
+            let x = Arc::make_mut(&mut self.x);
+            fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, newest.as_slice());
             self.i += 1;
-            return None;
+            return false;
         }
 
-        // Predictor (line 9-12).
-        let eps_pred = self.predict(t_next);
+        // ERS selection (Eq. 16/17) over buffer entries 0..=bi.
+        let bi = self.eps.len() - 1;
+        match &self.selection {
+            Selection::FixedLast => {
+                // tau_m = i - m, ascending.
+                self.idx_buf.clear();
+                self.idx_buf.extend((bi + 1 - self.k)..=bi);
+            }
+            _ => {
+                let p = self.exponent();
+                select_indices_into(&mut self.idx_buf, bi, self.k, p);
+            }
+        }
+        self.trace_meta.push((self.i, self.delta_eps));
+        self.trace_idx.extend_from_slice(&self.idx_buf);
+
+        // Predictor (Eq. 13/14, Alg. 1 line 9-12): interpolate the
+        // selected bases at t_{i+1}. Basis weights are memoised in the
+        // plan and shared across every request on this configuration.
+        let w = self.plan.lagrange_weights(self.i + 1, &self.idx_buf);
+        fused::zero(self.pred.as_mut_slice());
+        for (&n, &wm) in self.idx_buf.iter().zip(w.iter()) {
+            fused::axpy(self.pred.as_mut_slice(), wm as f32, self.eps[n].as_slice());
+        }
+
         // Corrector (line 13, Eq. 11): AM4 with eps_pred in the implicit
         // slot and the newest buffered estimates in the explicit slots.
         let n = self.eps.len();
         let order = n.min(3) + 1; // implicit slot + up to 3 history slots
-        let w = am_weights(order);
-        let mut tensors: Vec<&Tensor> = vec![&eps_pred];
+        let amw = self.plan.am_weights(order);
+        fused::zero(self.eps_c.as_mut_slice());
+        fused::axpy(self.eps_c.as_mut_slice(), amw[0] as f32, self.pred.as_slice());
         for back in 0..order - 1 {
-            tensors.push(&self.eps[n - 1 - back]);
+            fused::axpy(
+                self.eps_c.as_mut_slice(),
+                amw[back + 1] as f32,
+                self.eps[n - 1 - back].as_slice(),
+            );
         }
-        let eps_c = Tensor::weighted_sum(&tensors, w);
-        self.x = self.phi(&self.x.clone(), &eps_c, t_cur, t_next);
+        let x = Arc::make_mut(&mut self.x);
+        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, self.eps_c.as_slice());
         self.i += 1;
-        Some(eps_pred)
+        true
     }
 
-    /// ERS decision log (Fig. 3 diagnostics).
-    pub fn selection_trace(&self) -> &[SelectionTrace] {
-        &self.trace
+    /// ERS decision log (Fig. 3 diagnostics), materialised from the
+    /// flat per-step records.
+    pub fn selection_trace(&self) -> Vec<SelectionTrace> {
+        self.trace_meta
+            .iter()
+            .enumerate()
+            .map(|(j, &(step, delta_eps))| SelectionTrace {
+                step,
+                delta_eps,
+                indices: self.trace_idx[j * self.k..(j + 1) * self.k].to_vec(),
+            })
+            .collect()
     }
 
     /// Current Eq. 15 error measure.
@@ -260,18 +308,18 @@ impl Solver for EraSolver {
         if self.eps.is_empty() {
             // Alg. 1 line 3: seed the buffer at (x_{t_0}, t_0).
             self.pending = true;
-            return Some(EvalRequest { x: self.x.clone(), t: self.grid[0] });
+            return Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(0) });
         }
         // Advance one transition; the evaluation (if any) happens at the
         // *new* point, which feeds both the buffer and the error measure.
-        self.pending_pred = self.advance();
-        if self.i + 1 >= self.grid.len() {
+        self.has_pred = self.advance();
+        if self.i + 1 >= self.plan.grid().len() {
             // Final iterate reached; its evaluation would never be used.
             self.done = true;
             return None;
         }
         self.pending = true;
-        Some(EvalRequest { x: self.x.clone(), t: self.grid[self.i] })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
     }
 
     fn on_eval(&mut self, eps: Tensor) {
@@ -280,10 +328,15 @@ impl Solver for EraSolver {
         self.nfe += 1;
         // Update the error measure (Eq. 15 / Alg. 1 line 16) against what
         // the predictor claimed this noise would be.
-        if let Some(pred) = self.pending_pred.take() {
-            self.delta_eps = eps.mean_row_dist(&pred) as f64;
+        if self.has_pred {
+            self.has_pred = false;
+            self.delta_eps = fused::mean_row_dist(
+                eps.as_slice(),
+                self.pred.as_slice(),
+                eps.rows(),
+                eps.cols(),
+            ) as f64;
         }
-        self.times.push(self.grid[self.i]);
         self.eps.push(eps);
     }
 
@@ -354,6 +407,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn select_indices_into_reuses_buffer() {
+        let mut buf = Vec::with_capacity(4);
+        select_indices_into(&mut buf, 12, 4, 1.0);
+        assert_eq!(buf, vec![3, 6, 9, 12]);
+        select_indices_into(&mut buf, 20, 3, 2.0);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(*buf.last().unwrap(), 20);
     }
 
     #[test]
@@ -507,6 +570,31 @@ mod tests {
             let out = sample_with(&mut s, &AnalyticGmm::gmm8(sched));
             assert!(out.all_finite(), "scale {scale}");
         }
+    }
+
+    #[test]
+    fn shared_plan_requests_agree_with_private_plans() {
+        // Two requests over one shared plan (the serving path, memo
+        // shared) must match a run with a private plan bit for bit.
+        let sched = VpSchedule::default();
+        let grid = make_grid(&sched, GridKind::Uniform, 12, 1.0, 1e-3);
+        let model = AnalyticGmm::gmm8(sched);
+        let shared = Arc::new(TrajectoryPlan::new(sched, grid.clone()));
+        // Identical seeds: the second request replays the first's ERS
+        // decisions, so its Lagrange lookups must hit the shared memo.
+        for seed in [11u64, 11] {
+            let mut rng = Rng::new(seed);
+            let x0 = rng.normal_tensor(16, 2);
+            let sel = Selection::ErrorRobust { lambda: 5.0 };
+            let mut a = EraSolver::with_plan(shared.clone(), x0.clone(), 4, sel.clone());
+            let mut b = EraSolver::new(sched, grid.clone(), x0, 4, sel);
+            assert_eq!(
+                sample_with(&mut a, &model).as_slice(),
+                sample_with(&mut b, &model).as_slice(),
+                "seed {seed}"
+            );
+        }
+        assert!(shared.lagrange_hits() > 0, "second request must hit the shared memo");
     }
 
     #[test]

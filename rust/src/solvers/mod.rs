@@ -32,14 +32,23 @@ pub mod eps_model;
 pub mod lagrange;
 pub mod schedule;
 
+use std::sync::Arc;
+
+use crate::kernels::{PlanCache, PlanKey, TrajectoryPlan};
 use crate::tensor::Tensor;
 pub use eps_model::EpsModel;
 pub use schedule::{make_grid, GridKind, VpSchedule};
 
 /// One pending network evaluation: run `eps_theta(x, t)` for every row.
+///
+/// `x` is a reference-counted view of the solver's iterate (or its
+/// predicted evaluation point) — handing it out costs a refcount bump,
+/// not a deep clone. Callers drop the request before `on_eval` so the
+/// solver can update the buffer in place (a still-outstanding view is
+/// safe but forces one copy-on-write).
 #[derive(Clone, Debug)]
 pub struct EvalRequest {
-    pub x: Tensor,
+    pub x: Arc<Tensor>,
     /// Diffusion time shared by the whole tensor (one solver step).
     pub t: f64,
 }
@@ -73,9 +82,17 @@ pub trait Solver: Send {
 /// tests, examples and the benches; the serving path lives in
 /// `coordinator`).
 pub fn sample_with(solver: &mut dyn Solver, model: &dyn EpsModel) -> Tensor {
+    // One reusable time buffer for the whole trajectory instead of a
+    // fresh `vec![t; rows]` per evaluation.
+    let mut t_buf: Vec<f32> = Vec::new();
     while let Some(req) = solver.next_eval() {
-        let t = vec![req.t as f32; req.x.rows()];
-        solver.on_eval(model.eval(&req.x, &t));
+        t_buf.clear();
+        t_buf.resize(req.x.rows(), req.t as f32);
+        let eps = model.eval(&req.x, &t_buf);
+        // Release the borrowed view before feeding the result back so
+        // the solver's in-place update never pays copy-on-write.
+        drop(req);
+        solver.on_eval(eps);
     }
     solver.current().clone()
 }
@@ -113,7 +130,7 @@ impl SolverKind {
             "dpm-fast" => return Some(SolverKind::DpmFast),
             // Default lambda 0.3 — the paper's 5.0 rescaled to this
             // repo's delta_eps units (per-row mean norm instead of the
-            // raw image-tensor L2 norm; see DESIGN.md §7).
+            // raw image-tensor L2 norm; see DESIGN.md §8).
             "era" => {
                 return Some(SolverKind::Era {
                     k: 4,
@@ -204,6 +221,10 @@ impl SolverKind {
     /// sequence (sized via [`SolverKind::steps_for_nfe`]), `nfe_budget`
     /// the network-evaluation budget the grid was sized for (used by
     /// solvers whose step count != NFE, e.g. DPM-Solver-fast).
+    ///
+    /// Builds a private [`TrajectoryPlan`] for the grid; the serving
+    /// path shares plans across requests via
+    /// [`SolverKind::build_with_plan`] and a [`PlanCache`] instead.
     pub fn build(
         &self,
         sched: VpSchedule,
@@ -212,31 +233,97 @@ impl SolverKind {
         seed: u64,
         nfe_budget: usize,
     ) -> Box<dyn Solver> {
+        let plan = Arc::new(self.make_plan(sched, grid, nfe_budget));
+        self.build_with_plan(plan, x0, seed)
+    }
+
+    /// Precompute the trajectory plan for this solver kind over an
+    /// explicit grid (schedule samples, DDIM/AM/DPM coefficients,
+    /// Lagrange memo storage).
+    pub fn make_plan(
+        &self,
+        sched: VpSchedule,
+        grid: Vec<f64>,
+        nfe_budget: usize,
+    ) -> TrajectoryPlan {
+        let base = TrajectoryPlan::new(sched, grid);
         match self {
-            SolverKind::Ddpm => Box::new(ddpm::Ddpm::new(sched, grid, x0, seed)),
-            SolverKind::Ddim => Box::new(ddim::Ddim::new(sched, grid, x0)),
-            SolverKind::Pndm => {
-                Box::new(adams_explicit::ExplicitAdams::new_pndm(sched, grid, x0))
-            }
-            SolverKind::Fon => Box::new(adams_explicit::ExplicitAdams::new_fon(sched, grid, x0)),
-            SolverKind::ImplicitAdams => {
-                Box::new(adams_implicit::ImplicitAdamsPc::new(sched, grid, x0))
-            }
             SolverKind::Dpm { order } => {
                 // Spend the budget exactly (the last step may drop order).
                 let orders = dpm::fixed_order_schedule(*order, nfe_budget);
-                if orders.len() + 1 == grid.len() {
-                    let label = format!("dpm-{order}");
-                    Box::new(dpm::DpmSolver::with_orders(sched, grid, x0, orders, label))
+                if orders.len() + 1 == base.grid().len() {
+                    base.with_dpm_orders(&orders)
                 } else {
-                    Box::new(dpm::DpmSolver::new(sched, grid, x0, *order))
+                    let orders = vec![*order; base.steps()];
+                    base.with_dpm_orders(&orders)
                 }
             }
             SolverKind::DpmFast => {
-                Box::new(dpm::DpmSolver::new_fast(sched, grid, x0, nfe_budget))
+                let orders = dpm::fast_order_schedule(nfe_budget);
+                base.with_dpm_orders(&orders)
             }
+            _ => base,
+        }
+    }
+
+    /// Cache key for this kind's plan — everything
+    /// [`SolverKind::make_plan`] depends on besides the grid values
+    /// themselves (which `(grid kind, steps, t-range, schedule)`
+    /// determine).
+    pub fn plan_key(
+        &self,
+        sched: &VpSchedule,
+        grid: GridKind,
+        nfe: usize,
+        t_start: f64,
+        t_end: f64,
+    ) -> PlanKey {
+        PlanKey::new(self.label(), nfe, grid, sched, t_start, t_end)
+    }
+
+    /// Fetch-or-build this kind's plan from a shared cache.
+    pub fn plan_from_cache(
+        &self,
+        cache: &PlanCache,
+        sched: VpSchedule,
+        grid_kind: GridKind,
+        nfe: usize,
+        t_start: f64,
+        t_end: f64,
+    ) -> Arc<TrajectoryPlan> {
+        let key = self.plan_key(&sched, grid_kind, nfe, t_start, t_end);
+        cache.get_or_build(key, || {
+            let steps = self.steps_for_nfe(nfe);
+            let grid = make_grid(&sched, grid_kind, steps, t_start, t_end);
+            self.make_plan(sched, grid, nfe)
+        })
+    }
+
+    /// Build a solver over a precomputed (typically cached and shared)
+    /// plan. The plan must come from [`SolverKind::make_plan`] for the
+    /// same kind — DPM kinds require their per-step coefficients.
+    pub fn build_with_plan(
+        &self,
+        plan: Arc<TrajectoryPlan>,
+        x0: Tensor,
+        seed: u64,
+    ) -> Box<dyn Solver> {
+        match self {
+            SolverKind::Ddpm => Box::new(ddpm::Ddpm::with_plan(plan, x0, seed)),
+            SolverKind::Ddim => Box::new(ddim::Ddim::with_plan(plan, x0)),
+            SolverKind::Pndm => {
+                Box::new(adams_explicit::ExplicitAdams::with_plan_pndm(plan, x0))
+            }
+            SolverKind::Fon => Box::new(adams_explicit::ExplicitAdams::with_plan_fon(plan, x0)),
+            SolverKind::ImplicitAdams => {
+                Box::new(adams_implicit::ImplicitAdamsPc::with_plan(plan, x0))
+            }
+            SolverKind::Dpm { order } => {
+                Box::new(dpm::DpmSolver::with_plan(plan, x0, format!("dpm-{order}")))
+            }
+            SolverKind::DpmFast => Box::new(dpm::DpmSolver::with_plan(plan, x0, "dpm-fast".into())),
             SolverKind::Era { k, selection } => {
-                Box::new(era::EraSolver::new(sched, grid, x0, *k, selection.clone()))
+                Box::new(era::EraSolver::with_plan(plan, x0, *k, selection.clone()))
             }
         }
     }

@@ -97,7 +97,7 @@ impl VpSchedule {
 }
 
 /// Timestep grid flavours from the paper's experiments.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum GridKind {
     /// Uniform in t (paper's LSUN setting).
     Uniform,

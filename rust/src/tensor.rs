@@ -75,12 +75,25 @@ impl Tensor {
         &mut self.data[r * c..(r + 1) * c]
     }
 
+    /// Borrowed view of rows `[start, start + n)` — the zero-copy
+    /// sibling of [`Tensor::slice_rows`] (rows are contiguous in the
+    /// row-major layout). The batcher's gather kernel reads these.
+    pub fn row_span(&self, start: usize, n: usize) -> &[f32] {
+        assert!(start + n <= self.rows, "row_span out of range");
+        &self.data[start * self.cols..(start + n) * self.cols]
+    }
+
+    /// Mutable view of rows `[start, start + n)` (scatter target).
+    pub fn row_span_mut(&mut self, start: usize, n: usize) -> &mut [f32] {
+        assert!(start + n <= self.rows, "row_span out of range");
+        let c = self.cols;
+        &mut self.data[start * c..(start + n) * c]
+    }
+
     /// `self = a * self + b * other`, elementwise (the DDIM transition).
     pub fn affine_inplace(&mut self, a: f32, b: f32, other: &Tensor) {
         debug_assert_eq!(self.data.len(), other.data.len());
-        for (x, &e) in self.data.iter_mut().zip(other.data.iter()) {
-            *x = a * *x + b * e;
-        }
+        crate::kernels::fused::affine_inplace(&mut self.data, a, b, &other.data);
     }
 
     /// `out = a * self + b * other` (allocating variant).
@@ -93,16 +106,12 @@ impl Tensor {
     /// `self += s * other`.
     pub fn axpy(&mut self, s: f32, other: &Tensor) {
         debug_assert_eq!(self.data.len(), other.data.len());
-        for (x, &e) in self.data.iter_mut().zip(other.data.iter()) {
-            *x += s * e;
-        }
+        crate::kernels::fused::axpy(&mut self.data, s, &other.data);
     }
 
     /// `self *= s`.
     pub fn scale(&mut self, s: f32) {
-        for x in self.data.iter_mut() {
-            *x *= s;
-        }
+        crate::kernels::fused::scale(&mut self.data, s);
     }
 
     /// Weighted sum `sum_k w[k] * ts[k]` of equally-shaped tensors.
@@ -329,6 +338,23 @@ mod tests {
         assert_eq!(x.col_means(), vec![1.0, 1.0]);
         let cov = x.covariance();
         assert_eq!(cov, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn row_span_views_match_slice_rows() {
+        let x = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        assert_eq!(x.row_span(1, 2), x.slice_rows(1, 2).as_slice());
+        assert_eq!(x.row_span(0, 3), x.as_slice());
+        let mut y = x.clone();
+        y.row_span_mut(2, 1).copy_from_slice(&[9.0, 9.0]);
+        assert_eq!(y.row(2), &[9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn row_span_checks_bounds() {
+        let x = t(&[1.0, 2.0], 1, 2);
+        let _ = x.row_span(1, 1);
     }
 
     #[test]

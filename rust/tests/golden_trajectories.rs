@@ -1,0 +1,463 @@
+//! Golden-trajectory equivalence: the kernel/plan refactor changes
+//! performance, never numerics.
+//!
+//! Each solver kind is driven twice from the same prior noise:
+//! * the **production path** — `SolverKind::build` (plan-backed,
+//!   in-place kernels, Arc'd iterate, ring-buffer history);
+//! * a **reference driver** below that restates the pre-refactor step
+//!   math verbatim: per-step `sched.*` coefficient evaluation,
+//!   allocating `Tensor::affine`/`weighted_sum`/`lagrange::interpolate`
+//!   combinations, per-step `rng.normal_tensor` noise.
+//!
+//! The two must agree within 1e-6 elementwise (they are bit-identical
+//! in practice — the kernels replicate the accumulation order — but the
+//! contract is 1e-6). A drift here means the refactor changed the
+//! solver, not just its cost.
+
+use era_solver::rng::Rng;
+use era_solver::solvers::adams_explicit::AB4;
+use era_solver::solvers::adams_implicit::am_weights;
+use era_solver::solvers::dpm::{fast_order_schedule, fixed_order_schedule};
+use era_solver::solvers::era::{select_indices, Selection};
+use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel, NoisyEps};
+use era_solver::solvers::lagrange;
+use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use era_solver::solvers::{sample_with, SolverKind};
+use era_solver::tensor::Tensor;
+
+fn eval(model: &dyn EpsModel, x: &Tensor, t: f64) -> Tensor {
+    model.eval(x, &vec![t as f32; x.rows()])
+}
+
+/// DDIM transfer (Eq. 8), allocating, straight off the schedule.
+fn phi(sched: &VpSchedule, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
+    let (a, b) = sched.ddim_coeffs(t_from, t_to);
+    x.affine(a as f32, b as f32, eps)
+}
+
+fn ref_ddim(sched: &VpSchedule, grid: &[f64], mut x: Tensor, model: &dyn EpsModel) -> Tensor {
+    for i in 0..grid.len() - 1 {
+        let eps = eval(model, &x, grid[i]);
+        x = phi(sched, &x, &eps, grid[i], grid[i + 1]);
+    }
+    x
+}
+
+fn ref_ddpm(
+    sched: &VpSchedule,
+    grid: &[f64],
+    mut x: Tensor,
+    model: &dyn EpsModel,
+    seed: u64,
+) -> Tensor {
+    let mut rng = Rng::for_stream(seed, 0xD0);
+    for i in 0..grid.len() - 1 {
+        let eps = eval(model, &x, grid[i]);
+        let ab_cur = sched.alpha_bar(grid[i]);
+        let ab_next = sched.alpha_bar(grid[i + 1]);
+        let alpha = ab_cur / ab_next;
+        let coef = ((1.0 - alpha) / (1.0 - ab_cur).sqrt()) as f32;
+        x.axpy(-coef, &eps);
+        x.scale((1.0 / alpha.sqrt()) as f32);
+        let last = i + 2 == grid.len();
+        if !last {
+            let var = (1.0 - ab_next) / (1.0 - ab_cur) * (1.0 - alpha);
+            if var > 0.0 {
+                let z = rng.normal_tensor(x.rows(), x.cols());
+                x.axpy(var.sqrt() as f32, &z);
+            }
+        }
+    }
+    x
+}
+
+fn ref_iadams(sched: &VpSchedule, grid: &[f64], mut x: Tensor, model: &dyn EpsModel) -> Tensor {
+    let mut hist: Vec<Tensor> = Vec::new(); // newest first
+    for i in 0..grid.len() - 1 {
+        let (t_cur, t_next) = (grid[i], grid[i + 1]);
+        if hist.is_empty() {
+            let eps = eval(model, &x, t_cur);
+            x = phi(sched, &x, &eps, t_cur, t_next);
+            hist.insert(0, eps);
+            continue;
+        }
+        // AB predictor (order ramps with fill level).
+        let refs: Vec<&Tensor> = hist.iter().collect();
+        let eps_p = match hist.len() {
+            1 => refs[0].clone(),
+            2 => Tensor::weighted_sum(&refs[..2], &[1.5, -0.5]),
+            3 => Tensor::weighted_sum(&refs[..3], &[23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0]),
+            _ => Tensor::weighted_sum(&refs[..4], &AB4),
+        };
+        let x_pred = phi(sched, &x, &eps_p, t_cur, t_next);
+        let eps_new = eval(model, &x_pred, t_next);
+        // AM corrector with the predicted-point eval in the implicit slot.
+        let order = (hist.len() + 1).min(4);
+        let w = am_weights(order);
+        let mut tensors: Vec<&Tensor> = vec![&eps_new];
+        tensors.extend(hist.iter().take(order - 1));
+        let eps_c = Tensor::weighted_sum(&tensors, w);
+        x = phi(sched, &x, &eps_c, t_cur, t_next);
+        hist.insert(0, eps_new);
+        hist.truncate(4);
+    }
+    x
+}
+
+fn ref_era(
+    sched: &VpSchedule,
+    grid: &[f64],
+    mut x: Tensor,
+    model: &dyn EpsModel,
+    k: usize,
+    selection: &Selection,
+) -> Tensor {
+    let mut times: Vec<f64> = Vec::new();
+    let mut buf: Vec<Tensor> = Vec::new();
+    let mut delta = match selection {
+        Selection::ErrorRobust { lambda } => *lambda,
+        _ => 1.0,
+    };
+    // Alg. 1 line 3: seed the buffer at (x_{t_0}, t_0).
+    let e0 = eval(model, &x, grid[0]);
+    times.push(grid[0]);
+    buf.push(e0);
+    let mut i = 0usize;
+    loop {
+        let (t_cur, t_next) = (grid[i], grid[i + 1]);
+        let pred = if i < k - 1 {
+            // Warmup: plain DDIM with the newest estimate.
+            x = phi(sched, &x, buf.last().unwrap(), t_cur, t_next);
+            i += 1;
+            None
+        } else {
+            let bi = times.len() - 1;
+            let idx: Vec<usize> = match selection {
+                Selection::FixedLast => ((bi + 1 - k)..=bi).collect(),
+                Selection::ErrorRobust { lambda } => select_indices(bi, k, delta / lambda),
+                Selection::ConstantScale { scale } => select_indices(bi, k, *scale),
+            };
+            let nodes: Vec<f64> = idx.iter().map(|&n| times[n]).collect();
+            let vals: Vec<&Tensor> = idx.iter().map(|&n| &buf[n]).collect();
+            let eps_pred = lagrange::interpolate(&nodes, &vals, t_next);
+            let n = buf.len();
+            let order = n.min(3) + 1;
+            let w = am_weights(order);
+            let mut tensors: Vec<&Tensor> = vec![&eps_pred];
+            for back in 0..order - 1 {
+                tensors.push(&buf[n - 1 - back]);
+            }
+            let eps_c = Tensor::weighted_sum(&tensors, w);
+            x = phi(sched, &x, &eps_c, t_cur, t_next);
+            i += 1;
+            Some(eps_pred)
+        };
+        if i + 1 >= grid.len() {
+            break; // final evaluation skipped, as in Alg. 1
+        }
+        let e = eval(model, &x, grid[i]);
+        if let Some(p) = pred {
+            delta = e.mean_row_dist(&p) as f64;
+        }
+        times.push(grid[i]);
+        buf.push(e);
+    }
+    x
+}
+
+fn drift(sched: &VpSchedule, x: &Tensor, eps: &Tensor, t: f64) -> Tensor {
+    let beta = sched.beta_min + t * (sched.beta_max - sched.beta_min);
+    let sigma = sched.sigma(t).max(1e-12);
+    let mut f = x.clone();
+    f.scale((-0.5 * beta) as f32);
+    f.axpy((0.5 * beta / sigma) as f32, eps);
+    f
+}
+
+fn ref_explicit_adams(
+    sched: &VpSchedule,
+    grid: &[f64],
+    mut x: Tensor,
+    model: &dyn EpsModel,
+    pndm: bool,
+) -> Tensor {
+    let mut hist: Vec<Tensor> = Vec::new(); // newest first
+    let push = |hist: &mut Vec<Tensor>, v: Tensor| {
+        hist.insert(0, v);
+        hist.truncate(4);
+    };
+    let mut i = 0usize;
+    // Pseudo-RK warmup, 3 steps of 4 evaluations.
+    for _ in 0..3 {
+        let (t_cur, t_next) = (grid[i], grid[i + 1]);
+        if pndm {
+            let t_mid = 0.5 * (t_cur + t_next);
+            let e1 = eval(model, &x, t_cur);
+            push(&mut hist, e1.clone());
+            let x1 = phi(sched, &x, &e1, t_cur, t_mid);
+            let e2 = eval(model, &x1, t_mid);
+            let x2 = phi(sched, &x, &e2, t_cur, t_mid);
+            let e3 = eval(model, &x2, t_mid);
+            let x3 = phi(sched, &x, &e3, t_cur, t_next);
+            let e4 = eval(model, &x3, t_next);
+            let combo = Tensor::weighted_sum(
+                &[&e1, &e2, &e3, &e4],
+                &[1.0 / 6.0, 2.0 / 6.0, 2.0 / 6.0, 1.0 / 6.0],
+            );
+            x = phi(sched, &x, &combo, t_cur, t_next);
+        } else {
+            let h = t_next - t_cur; // negative
+            let f1 = drift(sched, &x, &eval(model, &x, t_cur), t_cur);
+            push(&mut hist, f1.clone());
+            let mut u = x.clone();
+            u.axpy((0.5 * h) as f32, &f1);
+            let f2 = drift(sched, &u, &eval(model, &u, t_cur + 0.5 * h), t_cur + 0.5 * h);
+            let mut u = x.clone();
+            u.axpy((0.5 * h) as f32, &f2);
+            let f3 = drift(sched, &u, &eval(model, &u, t_cur + 0.5 * h), t_cur + 0.5 * h);
+            let mut u = x.clone();
+            u.axpy(h as f32, &f3);
+            let f4 = drift(sched, &u, &eval(model, &u, t_next), t_next);
+            let combo = Tensor::weighted_sum(
+                &[&f1, &f2, &f3, &f4],
+                &[1.0 / 6.0, 2.0 / 6.0, 2.0 / 6.0, 1.0 / 6.0],
+            );
+            x.axpy(h as f32, &combo);
+        }
+        i += 1;
+    }
+    // AB4 multistep phase.
+    while i + 1 < grid.len() {
+        let (t_cur, t_next) = (grid[i], grid[i + 1]);
+        let val = if pndm {
+            eval(model, &x, t_cur)
+        } else {
+            drift(sched, &x, &eval(model, &x, t_cur), t_cur)
+        };
+        push(&mut hist, val);
+        assert_eq!(hist.len(), 4);
+        let refs: Vec<&Tensor> = hist.iter().collect();
+        let combo = Tensor::weighted_sum(&refs, &AB4);
+        if pndm {
+            x = phi(sched, &x, &combo, t_cur, t_next);
+        } else {
+            x.axpy((t_next - t_cur) as f32, &combo);
+        }
+        i += 1;
+    }
+    x
+}
+
+/// Order-1 DPM transfer (identical to the seed's `order1`).
+fn dpm_order1(sched: &VpSchedule, x: &Tensor, eps: &Tensor, t_from: f64, t_to: f64) -> Tensor {
+    let h = sched.lambda(t_to) - sched.lambda(t_from);
+    let a = (sched.sqrt_alpha_bar(t_to) / sched.sqrt_alpha_bar(t_from)) as f32;
+    let b = (-sched.sigma(t_to) * h.exp_m1()) as f32;
+    x.affine(a, b, eps)
+}
+
+fn ref_dpm(
+    sched: &VpSchedule,
+    grid: &[f64],
+    mut x: Tensor,
+    model: &dyn EpsModel,
+    orders: &[usize],
+) -> Tensor {
+    assert_eq!(orders.len() + 1, grid.len());
+    for (i, &order) in orders.iter().enumerate() {
+        let (tc, tn) = (grid[i], grid[i + 1]);
+        let h = sched.lambda(tn) - sched.lambda(tc);
+        let t_mid = |r: f64| sched.t_of_lambda(sched.lambda(tc) + r * h);
+        match order {
+            1 => {
+                let e0 = eval(model, &x, tc);
+                x = dpm_order1(sched, &x, &e0, tc, tn);
+            }
+            2 => {
+                let e0 = eval(model, &x, tc);
+                let s = t_mid(0.5);
+                let u = dpm_order1(sched, &x, &e0, tc, s);
+                let e1 = eval(model, &u, s);
+                x = dpm_order1(sched, &x, &e1, tc, tn);
+            }
+            3 => {
+                let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
+                let e0 = eval(model, &x, tc);
+                let s1 = t_mid(r1);
+                let u1 = dpm_order1(sched, &x, &e0, tc, s1);
+                let e1 = eval(model, &u1, s1);
+                let s2 = t_mid(r2);
+                let a = sched.sqrt_alpha_bar(s2) / sched.sqrt_alpha_bar(tc);
+                let sig = sched.sigma(s2);
+                let em = (r2 * h).exp_m1();
+                let mut u2 = x.affine(a as f32, (-sig * em) as f32, &e0);
+                let c = -(sig * r2 / r1) * (em / (r2 * h) - 1.0);
+                u2.axpy(c as f32, &e1);
+                u2.axpy(-c as f32, &e0);
+                let e2 = eval(model, &u2, s2);
+                let a_f = sched.sqrt_alpha_bar(tn) / sched.sqrt_alpha_bar(tc);
+                let sig_n = sched.sigma(tn);
+                let em_h = h.exp_m1();
+                let mut xn = x.affine(a_f as f32, (-sig_n * em_h) as f32, &e0);
+                let c_f = -(sig_n / r2) * (em_h / h - 1.0);
+                xn.axpy(c_f as f32, &e2);
+                xn.axpy(-c_f as f32, &e0);
+                x = xn;
+            }
+            _ => unreachable!(),
+        }
+    }
+    x
+}
+
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.len(), b.len(), "shape mismatch");
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Drive the production solver for `name` and its reference twin from
+/// identical priors; assert 1e-6 agreement.
+fn check(name: &str, nfe: usize, grid_kind: GridKind, t_end: f64, model: &dyn EpsModel) {
+    let sched = VpSchedule::default();
+    let kind = SolverKind::parse(name).unwrap();
+    let steps = kind.steps_for_nfe(nfe);
+    let grid = make_grid(&sched, grid_kind, steps, 1.0, t_end);
+    let seed = 42u64;
+    let mut rng = Rng::new(9);
+    let x0 = rng.normal_tensor(8, 2);
+
+    let mut solver = kind.build(sched, grid.clone(), x0.clone(), seed, nfe);
+    let got = sample_with(&mut *solver, model);
+
+    let want = match &kind {
+        SolverKind::Ddim => ref_ddim(&sched, &grid, x0, model),
+        SolverKind::Ddpm => ref_ddpm(&sched, &grid, x0, model, seed),
+        SolverKind::ImplicitAdams => ref_iadams(&sched, &grid, x0, model),
+        SolverKind::Era { k, selection } => ref_era(&sched, &grid, x0, model, *k, selection),
+        SolverKind::Pndm => ref_explicit_adams(&sched, &grid, x0, model, true),
+        SolverKind::Fon => ref_explicit_adams(&sched, &grid, x0, model, false),
+        SolverKind::Dpm { order } => {
+            // Mirror SolverKind::make_plan's order-schedule choice.
+            let orders = fixed_order_schedule(*order, nfe);
+            let orders = if orders.len() + 1 == grid.len() {
+                orders
+            } else {
+                vec![*order; grid.len() - 1]
+            };
+            ref_dpm(&sched, &grid, x0, model, &orders)
+        }
+        SolverKind::DpmFast => {
+            let orders = fast_order_schedule(nfe);
+            ref_dpm(&sched, &grid, x0, model, &orders)
+        }
+    };
+    let d = max_abs_diff(&got, &want);
+    assert!(
+        d <= 1e-6,
+        "{name} (nfe={nfe}, {grid_kind:?}, t_end={t_end}): max |diff| = {d}"
+    );
+}
+
+#[test]
+fn golden_every_solver_kind_exact_model() {
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    for name in [
+        "ddim",
+        "ddpm",
+        "iadams",
+        "era",
+        "era-3",
+        "era-fixed-4",
+        "era-const-3@0.5",
+        "dpm-1",
+        "dpm-2",
+        "dpm-3",
+        "dpm-fast",
+    ] {
+        check(name, 12, GridKind::Uniform, 1e-3, &model);
+    }
+    for name in ["pndm", "fon"] {
+        check(name, 15, GridKind::Uniform, 1e-3, &model);
+    }
+}
+
+#[test]
+fn golden_logsnr_grid_and_tight_t_end() {
+    // The paper's CIFAR-10 configuration (logSNR grid, t_end 1e-4) for
+    // the solvers the comparison runs there.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    for name in ["ddim", "era", "dpm-2", "dpm-3", "dpm-fast", "iadams"] {
+        check(name, 12, GridKind::LogSnr, 1e-4, &model);
+    }
+}
+
+#[test]
+fn golden_era_under_model_error() {
+    // The ERS selection path reacts to the measured error; a noisy
+    // (deterministic) model exercises exponent warps the exact model
+    // never reaches. Equivalence must hold along the whole decision
+    // sequence, or the selections themselves diverged.
+    let sched = VpSchedule::default();
+    let model = NoisyEps::new(AnalyticGmm::gmm8(sched), 1.2, 2.0, 7);
+    for name in ["era", "era-6@5", "era-fixed-5", "era-const-4@2"] {
+        check(name, 15, GridKind::Uniform, 1e-3, &model);
+    }
+}
+
+#[test]
+fn golden_shared_plan_equals_private_plan() {
+    // build() (private plan) vs build_with_plan() over a warm shared
+    // cache: the cached plan must not drift from a freshly computed one.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let cache = era_solver::kernels::PlanCache::new();
+    for name in ["era", "ddim", "dpm-fast", "iadams"] {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 12;
+        let steps = kind.steps_for_nfe(nfe);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let mut rng = Rng::new(4);
+        let x0 = rng.normal_tensor(16, 2);
+
+        let mut direct = kind.build(sched, grid, x0.clone(), 4, nfe);
+        let want = sample_with(&mut *direct, &model);
+        for round in 0..2 {
+            // Round 0 populates the cache; round 1 must hit it.
+            let plan =
+                kind.plan_from_cache(&cache, sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+            let mut cached = kind.build_with_plan(plan, x0.clone(), 4);
+            let got = sample_with(&mut *cached, &model);
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "{name} round {round}: cached plan diverged"
+            );
+        }
+    }
+    assert!(cache.hits() >= 4, "second rounds must hit the cache");
+}
+
+#[test]
+fn golden_am_weights_computed_once_per_trajectory() {
+    // Regression for the satellite: a full ERA trajectory consumes AM
+    // weights at every corrected step, but the plan computes the table
+    // exactly once; a second request on the shared plan adds zero.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let kind = SolverKind::parse("era").unwrap();
+    let nfe = 12;
+    let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+    let plan = std::sync::Arc::new(kind.make_plan(sched, grid, nfe));
+    for seed in [1u64, 2] {
+        let mut rng = Rng::new(seed);
+        let mut s = kind.build_with_plan(plan.clone(), rng.normal_tensor(8, 2), seed);
+        let _ = sample_with(&mut *s, &model);
+    }
+    assert_eq!(plan.am_builds(), 1, "AM weights must be computed once per plan");
+}

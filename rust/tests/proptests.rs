@@ -3,8 +3,11 @@
 //! runs a few hundred randomized cases with the failing seed printed so
 //! a reproduction is one `Rng::new(seed)` away.
 
+use std::sync::Arc;
+
 use era_solver::coordinator::batcher::{Batcher, BatchPolicy};
 use era_solver::json::{self, Json};
+use era_solver::kernels::TrajectoryPlan;
 use era_solver::linalg;
 use era_solver::metrics::{self, Moments};
 use era_solver::rng::Rng;
@@ -114,7 +117,10 @@ fn prop_batcher_conserves_and_routes_rows() {
         let reqs: Vec<EvalRequest> = (0..n_req)
             .map(|_| {
                 let rows = 1 + (rng.below(80) as usize);
-                EvalRequest { x: rng.normal_tensor(rows, dim), t: rng.uniform_in(1e-3, 1.0) }
+                EvalRequest {
+                    x: Arc::new(rng.normal_tensor(rows, dim)),
+                    t: rng.uniform_in(1e-3, 1.0),
+                }
             })
             .collect();
         let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
@@ -130,7 +136,7 @@ fn prop_batcher_conserves_and_routes_rows() {
         );
         let mut reassembled: Vec<Vec<f32>> = vec![Vec::new(); n_req];
         for slab in &plan.slabs {
-            assert!(slab.x.rows() <= max_rows, "case {case}: slab too big");
+            assert!(slab.rows() <= max_rows, "case {case}: slab too big");
             // Per-row times must match the owning request.
             for seg in &slab.segments {
                 for r in seg.start..seg.start + seg.rows {
@@ -140,7 +146,7 @@ fn prop_batcher_conserves_and_routes_rows() {
                     );
                 }
             }
-            for (src, part) in Batcher::unpack(slab, &slab.x) {
+            for (src, part) in Batcher::unpack(slab, slab.x()) {
                 reassembled[src].extend_from_slice(part.as_slice());
             }
         }
@@ -151,6 +157,73 @@ fn prop_batcher_conserves_and_routes_rows() {
                 "case {case}: request {i} content mangled"
             );
         }
+    }
+}
+
+#[test]
+fn prop_plan_lagrange_concurrent_lookups_deterministic() {
+    // The shared TrajectoryPlan's Lagrange memo is read and populated
+    // concurrently by every request on a configuration. Property: for a
+    // random pool of (target, indices) queries, N threads racing on one
+    // plan all observe exactly the weights a single thread computes.
+    let mut rng = Rng::new(0x9_1A9);
+    for case in 0..20 {
+        let sched = VpSchedule::default();
+        let steps = 8 + (rng.below(24) as usize);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let plan = Arc::new(TrajectoryPlan::new(sched, grid.clone()));
+
+        // Random query pool (ascending distinct indices, valid targets).
+        let mut queries: Vec<(usize, Vec<usize>)> = Vec::new();
+        for _ in 0..24 {
+            let k = 2 + (rng.below(4) as usize);
+            let mut idx: Vec<usize> = (0..k)
+                .map(|_| rng.below((grid.len() - 1) as u64) as usize)
+                .collect();
+            idx.sort_unstable();
+            idx.dedup();
+            if idx.len() < 2 {
+                continue;
+            }
+            let target = grid.len() - 1;
+            queries.push((target, idx));
+        }
+
+        // Ground truth, single-threaded on a fresh plan.
+        let reference = Arc::new(TrajectoryPlan::new(sched, grid));
+        let want: Vec<Vec<f64>> = queries
+            .iter()
+            .map(|(t, idx)| reference.lagrange_weights(*t, idx).as_ref().clone())
+            .collect();
+
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let plan = plan.clone();
+                let queries = queries.clone();
+                std::thread::spawn(move || {
+                    queries
+                        .iter()
+                        .map(|(t, idx)| plan.lagrange_weights(*t, idx).as_ref().clone())
+                        .collect::<Vec<Vec<f64>>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().expect("lookup thread panicked");
+            assert_eq!(got, want, "case {case}: concurrent lookup diverged");
+        }
+        // Memo coherence: every distinct query was built at most once
+        // per (target, indices) key... racing builders may double-build,
+        // but lookups after the race must all hit.
+        let before = plan.lagrange_hits();
+        for (t, idx) in &queries {
+            let _ = plan.lagrange_weights(*t, idx);
+        }
+        assert_eq!(
+            plan.lagrange_hits() - before,
+            queries.len(),
+            "case {case}: settled memo must serve every query from cache"
+        );
     }
 }
 
