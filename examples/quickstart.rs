@@ -70,6 +70,7 @@ fn run() -> Result<(), String> {
         t_end: 1e-3,
         seed: 7,
         deadline_ms: None,
+        task: Default::default(),
     };
     let t0 = std::time::Instant::now();
     let (samples, server_seconds) = client.sample(&spec)?;

@@ -20,6 +20,7 @@ use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
 use era_solver::server::client::{generate_load, Client};
 use era_solver::server::{Server, ServerConfig};
+use era_solver::solvers::TaskSpec;
 
 const OPTS: &[OptSpec] = &[
     OptSpec { name: "artifacts", value: Some("dir"), help: "artifact tree (default: artifacts)" },
@@ -29,6 +30,9 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "concurrency", value: Some("n"), help: "load-gen workers (default: 8)" },
     OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
     OptSpec { name: "shards", value: Some("n"), help: "pool shards (default: 1)" },
+    OptSpec { name: "guidance", value: Some("s"), help: "CFG scale for the load phase, 0 = off (default: 0)" },
+    OptSpec { name: "guide-class", value: Some("c"), help: "class id for guided rows (default: 0)" },
+    OptSpec { name: "churn", value: Some("s"), help: "stochastic-ERA churn for the load phase (default: 0)" },
 ];
 
 fn main() {
@@ -80,6 +84,14 @@ fn run() -> Result<(), String> {
     let concurrency = args.usize_or("concurrency", 8)?;
     let requests = args.usize_or("requests", 6)?;
     let shards = args.usize_or("shards", 1)?.max(1);
+    // Workload knobs for the concurrent-load phase: guided rows double
+    // the eval row mass per request; churn exercises stochastic ERA.
+    let load_task = TaskSpec {
+        guidance_scale: args.f64_or("guidance", 0.0)?,
+        guide_class: args.usize_or("guide-class", 0)?,
+        churn: args.f64_or("churn", 0.0)?,
+        ..Default::default()
+    };
 
     // ---- Part 1: Tab. 7 — single-request wall clock per solver × NFE ----
     let stack = start_stack(&artifacts, &dataset, BatchPolicy::default(), shards)?;
@@ -102,6 +114,7 @@ fn run() -> Result<(), String> {
                 t_end: 1e-4,
                 seed: 11,
                 deadline_ms: None,
+                task: TaskSpec::default(),
             };
             // Median of 5 runs.
             let mut times = Vec::new();
@@ -136,6 +149,7 @@ fn run() -> Result<(), String> {
         t_end: 1e-4,
         seed: 0,
         deadline_ms: None,
+        task: load_task,
     };
     let report = generate_load(addr, &spec, concurrency, requests);
     println!(

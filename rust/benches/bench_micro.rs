@@ -79,7 +79,11 @@ fn main() {
 
     // --- Coordinator packing ---
     let reqs: Vec<EvalRequest> = (0..16)
-        .map(|i| EvalRequest { x: std::sync::Arc::new(rng.normal_tensor(16 + i, 8)), t: 0.5 })
+        .map(|i| EvalRequest {
+            x: std::sync::Arc::new(rng.normal_tensor(16 + i, 8)),
+            t: 0.5,
+            cond: None,
+        })
         .collect();
     let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
     let batcher = Batcher::new(BatchPolicy::default());

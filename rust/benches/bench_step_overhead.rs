@@ -32,7 +32,7 @@ use era_solver::solvers::era::select_indices;
 use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel};
 use era_solver::solvers::lagrange;
 use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
-use era_solver::solvers::SolverKind;
+use era_solver::solvers::{SolverKind, TaskSpec};
 use era_solver::tensor::Tensor;
 
 struct CountingAlloc;
@@ -89,6 +89,19 @@ impl StepCost {
 /// excluded from the statistics, mirroring "after warmup" in the
 /// acceptance criterion.
 fn measure_solver(name: &str, rows: usize, nfe: usize, trials: usize) -> StepCost {
+    measure_task_solver(name, rows, nfe, trials, &TaskSpec::default())
+}
+
+/// Like [`measure_solver`] but building the full workload stack for
+/// `task` (guided wrapping, churn) — the guided case pins the paired-row
+/// combine path at zero steady-state allocations.
+fn measure_task_solver(
+    name: &str,
+    rows: usize,
+    nfe: usize,
+    trials: usize,
+    task: &TaskSpec,
+) -> StepCost {
     let sched = VpSchedule::default();
     let model = AnalyticGmm::gmm8(sched);
     let kind = SolverKind::parse(name).unwrap();
@@ -110,8 +123,11 @@ fn measure_solver(name: &str, rows: usize, nfe: usize, trials: usize) -> StepCos
     for trial in 0..=trials {
         let warm_trial = trial == 0;
         let mut rng = Rng::new(7);
-        let mut s = kind.build_with_plan(plan.clone(), rng.normal_tensor(rows, 2), 7);
-        let mut t_buf: Vec<f32> = Vec::with_capacity(rows);
+        let mut s = kind
+            .build_task(plan.clone(), rng.normal_tensor(rows, 2), 7, task)
+            .expect("build workload solver");
+        let mut t_buf: Vec<f32> = Vec::with_capacity(2 * rows);
+        let mut c_buf: Vec<f32> = Vec::with_capacity(2 * rows);
         let mut step = 0usize;
         loop {
             let a0 = allocs();
@@ -123,10 +139,18 @@ fn measure_solver(name: &str, rows: usize, nfe: usize, trials: usize) -> StepCos
             let ns_next = t0.elapsed().as_nanos();
             let a1 = allocs();
 
-            // Model evaluation: outside both windows.
+            // Model evaluation: outside both windows (the coordinator
+            // side owns the t/c buffers, not the solver).
             t_buf.clear();
             t_buf.resize(req.x.rows(), req.t as f32);
-            let eps = model.eval(&req.x, &t_buf);
+            let eps = match &req.cond {
+                None => model.eval(&req.x, &t_buf),
+                Some(c) => {
+                    c_buf.clear();
+                    c_buf.extend_from_slice(c);
+                    model.eval_cond(&req.x, &t_buf, &c_buf)
+                }
+            };
             drop(req);
 
             let a2 = allocs();
@@ -150,8 +174,13 @@ fn measure_solver(name: &str, rows: usize, nfe: usize, trials: usize) -> StepCos
         }
         black_box(s.current().as_slice()[0]);
     }
+    let label = if *task == TaskSpec::default() {
+        format!("{name} rows={rows}")
+    } else {
+        format!("{name}[{}] rows={rows}", task.label())
+    };
     StepCost {
-        label: format!("{name} rows={rows}"),
+        label,
         steps: total_steps,
         ns_per_step: total_ns as f64 / total_steps.max(1) as f64,
         allocs_per_step: steady_allocs_sum as f64 / steady_steps.max(1) as f64,
@@ -281,6 +310,28 @@ fn main() {
     for name in ["ddim", "ddpm", "iadams", "dpm-3", "dpm-fast", "pndm"] {
         let c = measure_solver(name, rows, nfe, trials);
         println!("{}", c.line());
+    }
+
+    println!("-- workload step paths (guided paired-row combine, stochastic churn) --");
+    let guided = TaskSpec { guidance_scale: 2.0, guide_class: 3, ..Default::default() };
+    let mut workload_costs: Vec<StepCost> = Vec::new();
+    for name in ["era-4", "ddim"] {
+        let c = measure_task_solver(name, rows, nfe, trials, &guided);
+        println!("{}", c.line());
+        workload_costs.push(c);
+    }
+    let sde = TaskSpec { churn: 0.4, ..Default::default() };
+    let c = measure_task_solver("era-4", rows, nfe, trials, &sde);
+    println!("{}", c.line());
+    workload_costs.push(c);
+    // Acceptance (workload satellite): the paired-row guided combine and
+    // the churn injection must not allocate in the steady state either.
+    for c in &workload_costs {
+        assert_eq!(
+            c.steady_max_allocs, 0,
+            "{}: workload steady-state step must not allocate",
+            c.label
+        );
     }
 
     println!("-- simulated pre-refactor ERA step (allocating path) --");

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::kernels::fused;
-use crate::solvers::EvalRequest;
+use crate::solvers::{EvalRequest, UNCOND};
 use crate::tensor::Tensor;
 
 /// Dispatch policy knobs.
@@ -62,10 +62,22 @@ pub enum SlabX {
     Packed(Tensor),
 }
 
-/// A fused evaluation: concatenated inputs plus per-row times.
+/// Per-row conditioning channel of a slab: a whole guided request ships
+/// its trajectory-constant channel by refcount (the [`SlabX::Shared`]
+/// twin — no per-step copy); mixed/split slabs gather a fresh vector.
+pub enum SlabC {
+    Shared(Arc<Vec<f32>>),
+    Packed(Vec<f32>),
+}
+
+/// A fused evaluation: concatenated inputs plus per-row times and the
+/// per-row conditioning channel (guided requests contribute paired
+/// cond/uncond rows; unconditional rows carry [`UNCOND`]).
 pub struct Slab {
     x: SlabX,
     pub t: Vec<f32>,
+    /// Per-row conditioning channel, same length as `t`.
+    c: SlabC,
     pub segments: Vec<SlabSegment>,
 }
 
@@ -75,6 +87,15 @@ impl Slab {
         match &self.x {
             SlabX::Shared(arc) => arc,
             SlabX::Packed(t) => t,
+        }
+    }
+
+    /// The per-row conditioning channel (either representation resolves
+    /// to a slice aligned with `t`).
+    pub fn c(&self) -> &[f32] {
+        match &self.c {
+            SlabC::Shared(arc) => arc,
+            SlabC::Packed(v) => v,
         }
     }
 
@@ -129,9 +150,15 @@ impl Batcher {
                     let req = find(src);
                     if off == 0 && n == req.x.rows() {
                         let t = vec![req.t as f32; n];
+                        let c = match &req.cond {
+                            // Trajectory-constant channel: refcount, not copy.
+                            Some(cond) => SlabC::Shared(Arc::clone(cond)),
+                            None => SlabC::Packed(vec![UNCOND; n]),
+                        };
                         slabs.push(Slab {
                             x: SlabX::Shared(Arc::clone(&req.x)),
                             t,
+                            c,
                             segments: vec![SlabSegment { source: src, start: 0, rows: n }],
                         });
                         cur.clear();
@@ -142,6 +169,7 @@ impl Batcher {
                 let dim = find(cur[0].0).x.cols();
                 let mut x = Vec::with_capacity(*count * dim);
                 let mut t = Vec::with_capacity(*count);
+                let mut c = Vec::with_capacity(*count);
                 let mut segments = Vec::with_capacity(cur.len());
                 let mut at = 0usize;
                 for &(src, off, n) in cur.iter() {
@@ -150,12 +178,21 @@ impl Batcher {
                     // in the row-major layout).
                     fused::gather_rows(&mut x, &req.x, off, n);
                     t.resize(t.len() + n, req.t as f32);
+                    // The conditioning channel follows the same row
+                    // split as the tensor, so cond/uncond pairing is a
+                    // pure function of row order and survives any slab
+                    // mix (pinned by the pairing proptest).
+                    match &req.cond {
+                        Some(cond) => c.extend_from_slice(&cond[off..off + n]),
+                        None => c.resize(c.len() + n, UNCOND),
+                    }
                     segments.push(SlabSegment { source: src, start: at, rows: n });
                     at += n;
                 }
                 slabs.push(Slab {
                     x: SlabX::Packed(Tensor::from_vec(x, *count, dim)),
                     t,
+                    c: SlabC::Packed(c),
                     segments,
                 });
                 cur.clear();
@@ -202,7 +239,24 @@ mod tests {
     use super::*;
 
     fn req(rows: usize, dim: usize, t: f64, fill: f32) -> EvalRequest {
-        EvalRequest { x: Arc::new(Tensor::from_vec(vec![fill; rows * dim], rows, dim)), t }
+        EvalRequest {
+            x: Arc::new(Tensor::from_vec(vec![fill; rows * dim], rows, dim)),
+            t,
+            cond: None,
+        }
+    }
+
+    /// A guided-style request: first half cond rows (class), second half
+    /// uncond rows.
+    fn paired_req(pairs: usize, dim: usize, t: f64, class: f32) -> EvalRequest {
+        let rows = pairs * 2;
+        let mut cond = vec![class; pairs];
+        cond.resize(rows, crate::solvers::UNCOND);
+        EvalRequest {
+            x: Arc::new(Tensor::from_vec(vec![class; rows * dim], rows, dim)),
+            t,
+            cond: Some(Arc::new(cond)),
+        }
     }
 
     fn batcher(max_rows: usize) -> Batcher {
@@ -292,6 +346,39 @@ mod tests {
         assert_eq!(outs[0].1.as_slice(), a.x.as_slice());
         assert_eq!(outs[1].0, 9);
         assert_eq!(outs[1].1.as_slice(), b.x.as_slice());
+    }
+
+    #[test]
+    fn cond_channel_routes_like_times() {
+        // Mixed slab: an unconditional request and a paired request; the
+        // per-row conditioning channel must follow each row exactly as
+        // the per-row times do, across slab splits.
+        let a = req(3, 2, 0.9, 1.0);
+        let b = paired_req(2, 2, 0.4, 5.0);
+        let plan = batcher(16).pack(&[(0, &a), (1, &b)]);
+        assert_eq!(plan.slabs.len(), 1);
+        let slab = &plan.slabs[0];
+        assert_eq!(slab.c().len(), slab.t.len());
+        assert_eq!(&slab.c()[..3], &[crate::solvers::UNCOND; 3]);
+        assert_eq!(&slab.c()[3..5], &[5.0, 5.0]);
+        assert_eq!(&slab.c()[5..], &[crate::solvers::UNCOND; 2]);
+
+        // Shared fast path: a lone paired request ships its own channel
+        // by refcount (same allocation, not an equal copy).
+        let plan = batcher(16).pack(&[(0, &b)]);
+        assert!(plan.slabs[0].is_shared());
+        let cond = b.cond.as_ref().unwrap();
+        assert!(std::ptr::eq(plan.slabs[0].c().as_ptr(), cond.as_ptr()));
+        assert_eq!(
+            plan.slabs[0].c(),
+            &[5.0, 5.0, crate::solvers::UNCOND, crate::solvers::UNCOND]
+        );
+
+        // Split across slabs: the channel splits at the same rows.
+        let plan = batcher(3).pack(&[(0, &b)]);
+        assert_eq!(plan.slabs.len(), 2);
+        assert_eq!(plan.slabs[0].c(), &[5.0, 5.0, crate::solvers::UNCOND]);
+        assert_eq!(plan.slabs[1].c(), &[crate::solvers::UNCOND]);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::time::Instant;
 use crate::kernels::PlanCache;
 use crate::rng::Rng;
 use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
-use crate::solvers::{EvalRequest, Solver, SolverKind};
+use crate::solvers::{EvalRequest, Solver, SolverKind, TaskSpec};
 use crate::tensor::Tensor;
 
 /// What a client asks for: a batch of samples from one dataset's
@@ -33,6 +33,10 @@ pub struct RequestSpec {
     /// a partial, `cancelled` result. `None` falls back to the
     /// coordinator's `default_deadline` (which may also be none).
     pub deadline_ms: Option<u64>,
+    /// Workload description: classifier-free guidance, img2img partial
+    /// trajectory, stochastic churn. Defaults to the plain unconditional
+    /// full trajectory.
+    pub task: TaskSpec,
 }
 
 impl Default for RequestSpec {
@@ -46,11 +50,19 @@ impl Default for RequestSpec {
             t_end: 1e-3,
             seed: 0,
             deadline_ms: None,
+            task: TaskSpec::default(),
         }
     }
 }
 
 impl RequestSpec {
+    /// Model-eval rows this request pins in the admission gauges: a
+    /// guided request evaluates paired cond/uncond rows, so it counts
+    /// (and is admission-controlled as) twice its `n_samples`.
+    pub fn admission_rows(&self) -> usize {
+        self.n_samples * self.task.rows_per_sample()
+    }
+
     /// Validate and instantiate the solver state for this request with
     /// a private trajectory plan (tests / one-off drivers).
     pub fn build_solver(
@@ -111,7 +123,7 @@ impl RequestSpec {
         };
         let mut rng = Rng::for_stream(self.seed, 0x5eed);
         let x0 = rng.normal_tensor(self.n_samples, dim);
-        Ok(kind.build_with_plan(plan, x0, self.seed))
+        kind.build_task(plan, x0, self.seed, &self.task)
     }
 }
 
@@ -229,6 +241,64 @@ mod tests {
         assert!(bad_t.build_solver(sched(), 2).is_err());
         let low_nfe = RequestSpec { solver: "pndm".into(), nfe: 5, ..Default::default() };
         assert!(low_nfe.build_solver(sched(), 2).is_err());
+    }
+
+    #[test]
+    fn guided_spec_counts_double_rows_and_builds() {
+        let spec = RequestSpec {
+            task: TaskSpec { guidance_scale: 2.0, guide_class: 1, ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!(spec.admission_rows(), 32, "16 samples x 2 paired rows");
+        let solver = spec.build_solver(sched(), 2).unwrap();
+        assert_eq!(solver.current().rows(), 16, "iterate keeps requested rows");
+        assert_eq!(RequestSpec::default().admission_rows(), 16);
+    }
+
+    #[test]
+    fn task_spec_rejections_surface_as_errors() {
+        // Interior strength without an init.
+        let s = RequestSpec {
+            task: TaskSpec { strength: 0.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(s.build_solver(sched(), 2).is_err());
+        // Churn on a non-ERA solver.
+        let s = RequestSpec {
+            solver: "ddim".into(),
+            task: TaskSpec { churn: 0.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(s.build_solver(sched(), 2).is_err());
+        // Out-of-range guidance.
+        let s = RequestSpec {
+            task: TaskSpec { guidance_scale: -3.0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(s.build_solver(sched(), 2).is_err());
+    }
+
+    #[test]
+    fn img2img_spec_builds_suffix_trajectory() {
+        let init = Tensor::from_vec(vec![0.5f32; 8], 4, 2);
+        let spec = RequestSpec {
+            n_samples: 4,
+            task: TaskSpec { strength: 0.5, init: Some(init), ..Default::default() },
+            ..Default::default()
+        };
+        let mut st = RequestState::new(1, "gmm8".into(), spec.build_solver(sched(), 2).unwrap());
+        let model = AnalyticGmm::gmm8(sched());
+        while st.pull() {
+            let req = st.pending.as_ref().unwrap();
+            let t = vec![req.t as f32; req.x.rows()];
+            let eps = model.eval(&req.x, &t);
+            st.deliver(eps);
+        }
+        let res = st.finish();
+        // strength 0.5 over a 10-step grid = 5 remaining transitions.
+        assert_eq!(res.nfe, 5);
+        assert_eq!(res.samples.rows(), 4);
+        assert!(res.samples.all_finite());
     }
 
     #[test]

@@ -39,6 +39,22 @@ pub trait ModelBank: Send + Sync {
     fn sched(&self) -> VpSchedule;
     fn dim(&self, dataset: &str) -> Result<usize, String>;
     fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String>;
+    /// Conditional evaluation with a per-row class channel `c` (rows
+    /// `< 0` unconditional — [`crate::solvers::UNCOND`]). Banks without
+    /// conditional heads may ignore the channel; the loop always routes
+    /// through this method so guided rows reach conditional banks.
+    fn eval_cond(&self, dataset: &str, x: &Tensor, t: &[f32], c: &[f32]) -> Result<Tensor, String> {
+        let _ = c;
+        self.eval(dataset, x, t)
+    }
+    /// True when `dataset`'s denoiser honours conditioned rows. Guided
+    /// requests against a bank that answers false are rejected at
+    /// admission — never allowed into a fused slab, where a conditional
+    /// failure would take unconditional batch-mates down with it.
+    fn supports_cond(&self, dataset: &str) -> bool {
+        let _ = dataset;
+        true
+    }
     /// Rows the engine would actually execute for a slab of `rows`
     /// (bucket rounding), for padding telemetry.
     fn executed_rows(&self, rows: usize) -> usize {
@@ -57,6 +73,23 @@ impl ModelBank for PjRtEngine {
 
     fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
         self.eval_eps(dataset, x, t)
+    }
+
+    fn eval_cond(&self, dataset: &str, x: &Tensor, t: &[f32], c: &[f32]) -> Result<Tensor, String> {
+        // Defence in depth: admission already rejects guided requests
+        // against this bank (supports_cond = false); a conditioned row
+        // reaching a slab anyway is a routing bug, and failing loudly
+        // beats silently sampling the unconditional model under a
+        // guidance scale.
+        if c.iter().any(|&v| v >= 0.0) {
+            return Err(format!("dataset '{dataset}' has no conditional denoiser artifact"));
+        }
+        self.eval_eps(dataset, x, t)
+    }
+
+    /// The AOT artifacts carry no conditional head yet.
+    fn supports_cond(&self, _dataset: &str) -> bool {
+        false
     }
 
     fn executed_rows(&self, rows: usize) -> usize {
@@ -96,6 +129,11 @@ impl ModelBank for MockBank {
     fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
         let m = self.models.get(dataset).ok_or_else(|| format!("unknown dataset '{dataset}'"))?;
         Ok(m.eval(x, t))
+    }
+
+    fn eval_cond(&self, dataset: &str, x: &Tensor, t: &[f32], c: &[f32]) -> Result<Tensor, String> {
+        let m = self.models.get(dataset).ok_or_else(|| format!("unknown dataset '{dataset}'"))?;
+        Ok(m.eval_cond(x, t, c))
     }
 }
 
@@ -275,7 +313,10 @@ impl Coordinator {
             .map(Duration::from_millis)
             .or(self.default_deadline)
             .map(|d| Instant::now() + d);
-        let rows = spec.n_samples;
+        // Guided requests pin paired rows: admission control, the pool's
+        // global cap and least-loaded placement all see the real eval
+        // row mass, not the sample count.
+        let rows = spec.admission_rows();
         // Gauge up before the envelope becomes visible to the loop so
         // the loop's retire-side decrement can never race it negative.
         self.telemetry.inflight_requests.fetch_add(1, Ordering::SeqCst);
@@ -375,7 +416,7 @@ fn run_loop(
         if dead_on_arrival {
             tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
             tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-            tele.inflight_rows.fetch_sub(env.spec.n_samples, Ordering::SeqCst);
+            tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
             let _ = env.reply.send(Ok(SamplingResult {
                 id: env.id,
                 samples: Tensor::zeros(0, 0),
@@ -387,14 +428,32 @@ fn run_loop(
             return;
         }
         let sched = bank.sched();
-        let solver = bank
-            .dim(&env.spec.dataset)
-            .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, &plans));
+        let solver = if env.spec.task.is_guided() && !bank.supports_cond(&env.spec.dataset) {
+            // Known-unservable at admission: a guided request must never
+            // enter a fused slab whose conditional evaluation would fail
+            // and retire unconditional batch-mates along with it.
+            Err(format!(
+                "dataset '{}' has no conditional denoiser; guided sampling unavailable",
+                env.spec.dataset
+            ))
+        } else {
+            bank.dim(&env.spec.dataset)
+                .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, &plans))
+        };
         match solver {
             Ok(s) => {
                 tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
+                if env.spec.task.is_guided() {
+                    tele.guided_requests.fetch_add(1, Ordering::Relaxed);
+                }
+                if env.spec.task.is_img2img() {
+                    tele.img2img_requests.fetch_add(1, Ordering::Relaxed);
+                }
+                if env.spec.task.is_stochastic() {
+                    tele.stochastic_requests.fetch_add(1, Ordering::Relaxed);
+                }
                 active.push(Active {
-                    rows: env.spec.n_samples,
+                    rows: env.spec.admission_rows(),
                     state: RequestState::new(env.id, env.spec.dataset.clone(), s),
                     reply: env.reply,
                     cancel: env.cancel,
@@ -403,7 +462,7 @@ fn run_loop(
             }
             Err(e) => {
                 tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-                tele.inflight_rows.fetch_sub(env.spec.n_samples, Ordering::SeqCst);
+                tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
                 let _ = env.reply.send(Err(e));
             }
         }
@@ -525,7 +584,7 @@ fn run_loop(
             let plan = batcher.pack(&pending);
             for slab in &plan.slabs {
                 let t0 = Instant::now();
-                match bank.eval(dataset, slab.x(), &slab.t) {
+                match bank.eval_cond(dataset, slab.x(), &slab.t, slab.c()) {
                     Ok(out) => {
                         // Row-count contract with the engine: a silent
                         // mismatch would truncate or misalign eps rows.
@@ -697,6 +756,84 @@ mod tests {
             Err(SubmitError::Invalid(_)) => {}
             Err(e) => panic!("unexpected {e:?}"),
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn guided_request_matches_inprocess_guided_run() {
+        // The paired-row serving path (slab cond channel, guided_combine
+        // after reassembly) must equal driving the guided solver stack
+        // directly against the same model.
+        let sched = VpSchedule::default();
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let mut s = spec("era", 16, 4);
+        s.task = crate::solvers::TaskSpec {
+            guidance_scale: 2.0,
+            guide_class: 2,
+            ..Default::default()
+        };
+        let via_coord = c.sample(s.clone()).unwrap();
+        assert_eq!(via_coord.samples.rows(), 16);
+        assert_eq!(via_coord.nfe, 20, "10 paired steps = 20 evaluations");
+        c.shutdown();
+
+        let model = AnalyticGmm::gmm8(sched);
+        let mut solver = s.build_solver(sched, 2).unwrap();
+        let direct = crate::solvers::sample_with(&mut *solver, &model);
+        assert_eq!(via_coord.samples.as_slice(), direct.as_slice());
+    }
+
+    #[test]
+    fn guided_request_rejected_when_bank_has_no_conditional_head() {
+        // A bank without a conditional head (PjRtEngine's situation)
+        // must refuse guided requests at admission with a clear error,
+        // and an unconditional batch-mate submitted alongside must be
+        // completely unaffected.
+        struct UncondOnly(MockBank);
+        impl ModelBank for UncondOnly {
+            fn sched(&self) -> VpSchedule {
+                self.0.sched()
+            }
+            fn dim(&self, dataset: &str) -> Result<usize, String> {
+                self.0.dim(dataset)
+            }
+            fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+                self.0.eval(dataset, x, t)
+            }
+            fn supports_cond(&self, _dataset: &str) -> bool {
+                false
+            }
+        }
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> = Arc::new(UncondOnly(
+            MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+        ));
+        let c = Coordinator::start(bank, CoordinatorConfig::default());
+        let mut guided = spec("era", 8, 1);
+        guided.task = crate::solvers::TaskSpec { guidance_scale: 2.0, ..Default::default() };
+        let gt = c.submit(guided).unwrap();
+        let plain = c.submit(spec("era", 8, 2)).unwrap();
+        let err = gt.wait().expect_err("guided must be refused");
+        assert!(err.contains("no conditional denoiser"), "{err}");
+        let ok = plain.wait().unwrap();
+        assert!(!ok.cancelled);
+        assert_eq!(ok.nfe, 10);
+        // Gauges drain despite the rejection.
+        assert_eq!(c.telemetry().inflight_rows.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn guided_scale_zero_is_the_unconditional_path() {
+        // scale 0 must not wrap, not double rows, and reproduce the
+        // plain trajectory bitwise.
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let mut s = spec("era", 8, 5);
+        s.task = crate::solvers::TaskSpec { guidance_scale: 0.0, ..Default::default() };
+        let guided_zero = c.sample(s).unwrap();
+        let plain = c.sample(spec("era", 8, 5)).unwrap();
+        assert_eq!(guided_zero.samples.as_slice(), plain.samples.as_slice());
+        assert_eq!(guided_zero.nfe, plain.nfe);
         c.shutdown();
     }
 

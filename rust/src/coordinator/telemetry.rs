@@ -13,6 +13,12 @@ pub struct Telemetry {
     pub requests_rejected: AtomicUsize,
     /// Requests retired early by client cancellation or deadline expiry.
     pub requests_cancelled: AtomicUsize,
+    /// Workload mix: admitted requests using classifier-free guidance
+    /// (each pins 2x its sample rows), img2img partial trajectories, and
+    /// stochastic (churned) sampling. One request may count in several.
+    pub guided_requests: AtomicUsize,
+    pub img2img_requests: AtomicUsize,
+    pub stochastic_requests: AtomicUsize,
     /// Gauge: requests submitted but not yet retired (queued + active).
     /// The pool router reads this for least-loaded placement.
     pub inflight_requests: AtomicUsize,
@@ -99,7 +105,7 @@ impl Telemetry {
     pub fn summary(&self) -> String {
         format!(
             "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
-             p50={:.1}ms p99={:.1}ms",
+             guided={} img2img={} sde={} p50={:.1}ms p99={:.1}ms",
             self.requests_finished.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -107,6 +113,9 @@ impl Telemetry {
             self.rows.load(Ordering::Relaxed),
             self.mean_batch_occupancy(),
             100.0 * self.padding_fraction(),
+            self.guided_requests.load(Ordering::Relaxed),
+            self.img2img_requests.load(Ordering::Relaxed),
+            self.stochastic_requests.load(Ordering::Relaxed),
             1e3 * self.latency_percentile(0.5),
             1e3 * self.latency_percentile(0.99),
         )

@@ -120,6 +120,21 @@ pub fn mean_row_dist(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
     (acc / rows as f64) as f32
 }
 
+/// Classifier-free guidance combination, in place over the cond half:
+/// `cond[i] = uncond[i] + scale * (cond[i] - uncond[i])`.
+///
+/// The guided workload evaluates each solver step as paired rows (cond
+/// rows then uncond rows in one slab); the wrapper splits the model
+/// output down the middle and collapses it here — one pass, no
+/// allocation, the cond half becomes the guided eps.
+#[inline]
+pub fn guided_combine(cond: &mut [f32], uncond: &[f32], scale: f32) {
+    debug_assert_eq!(cond.len(), uncond.len());
+    for (c, &u) in cond.iter_mut().zip(uncond.iter()) {
+        *c = u + scale * (*c - u);
+    }
+}
+
 /// Append rows `[start, start + n)` of `src` onto `dst` — one contiguous
 /// memcpy per call (the rows of a row-major tensor are adjacent), used
 /// by the batcher to gather request segments into fused slabs.
@@ -212,6 +227,28 @@ mod tests {
         let got = mean_row_dist(a.as_slice(), b.as_slice(), 3, 2);
         assert_eq!(got, a.mean_row_dist(&b));
         assert_eq!(mean_row_dist(&[], &[], 0, 2), 0.0);
+    }
+
+    #[test]
+    fn guided_combine_interpolates_and_hits_endpoints() {
+        let uncond = [1.0f32, -2.0, 0.5, 4.0];
+        // scale 1 recovers cond up to the lerp arithmetic (u + (c - u)).
+        let mut c = [3.0f32, 0.0, -1.0, 2.0];
+        let cond_orig = c;
+        guided_combine(&mut c, &uncond, 1.0);
+        for (got, (co, u)) in c.iter().zip(cond_orig.iter().zip(uncond.iter())) {
+            assert_eq!(*got, u + (co - u));
+        }
+        // scale 0 collapses to uncond exactly.
+        let mut c0 = cond_orig;
+        guided_combine(&mut c0, &uncond, 0.0);
+        assert_eq!(c0, uncond);
+        // Generic scale matches the manual expression.
+        let mut c2 = cond_orig;
+        guided_combine(&mut c2, &uncond, 2.5);
+        for i in 0..4 {
+            assert_eq!(c2[i], uncond[i] + 2.5 * (cond_orig[i] - uncond[i]));
+        }
     }
 
     #[test]

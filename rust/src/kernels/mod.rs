@@ -34,4 +34,4 @@ pub mod fused;
 pub mod plan;
 
 pub use arena::{HistoryRing, ScratchArena};
-pub use plan::{DpmStepPlan, PlanCache, PlanKey, TrajectoryPlan};
+pub use plan::{DpmStepPlan, PlanCache, PlanKey, PlanView, TrajectoryPlan};

@@ -286,6 +286,113 @@ impl TrajectoryPlan {
     }
 }
 
+/// A (possibly suffix) window into a shared [`TrajectoryPlan`].
+///
+/// The img2img workload starts a trajectory at an *interior* grid index
+/// (`strength` quantized to a transition); everything the solver reads —
+/// timesteps, DDIM/DPM coefficients, schedule samples — is the full
+/// plan's data offset by `base`, so the [`PlanCache`] keeps exactly one
+/// plan per configuration no matter how many strengths are in flight.
+/// `base = 0` is the full trajectory and adds no indirection cost beyond
+/// one `usize` add per accessor.
+///
+/// Lagrange memo lookups translate relative indices to absolute grid
+/// indices, so suffix requests share the same memo (and can never alias
+/// a full request's entries: the absolute indices differ).
+#[derive(Clone)]
+pub struct PlanView {
+    plan: Arc<TrajectoryPlan>,
+    base: usize,
+}
+
+impl PlanView {
+    /// The whole trajectory (what every pre-existing path uses).
+    pub fn full(plan: Arc<TrajectoryPlan>) -> PlanView {
+        PlanView { plan, base: 0 }
+    }
+
+    /// Suffix starting at grid index `base` (must leave >= 1 transition).
+    pub fn suffix(plan: Arc<TrajectoryPlan>, base: usize) -> PlanView {
+        assert!(
+            base + 2 <= plan.grid().len(),
+            "suffix base {base} leaves no transition (grid has {} points)",
+            plan.grid().len()
+        );
+        PlanView { plan, base }
+    }
+
+    /// Grid index this view starts at (0 = full trajectory).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// The shared full plan behind this view.
+    pub fn plan(&self) -> &Arc<TrajectoryPlan> {
+        &self.plan
+    }
+
+    pub fn sched(&self) -> VpSchedule {
+        self.plan.sched()
+    }
+
+    /// The visible (suffix) grid.
+    pub fn grid(&self) -> &[f64] {
+        &self.plan.grid()[self.base..]
+    }
+
+    /// Visible transition count.
+    pub fn steps(&self) -> usize {
+        self.plan.steps() - self.base
+    }
+
+    #[inline]
+    pub fn t(&self, i: usize) -> f64 {
+        self.plan.t(self.base + i)
+    }
+
+    #[inline]
+    pub fn ddim_coeffs(&self, i: usize) -> (f64, f64) {
+        self.plan.ddim_coeffs(self.base + i)
+    }
+
+    #[inline]
+    pub fn alpha_bar_at(&self, i: usize) -> f64 {
+        self.plan.alpha_bar_at(self.base + i)
+    }
+
+    #[inline]
+    pub fn am_weights(&self, order: usize) -> &[f64] {
+        self.plan.am_weights(order)
+    }
+
+    #[inline]
+    pub fn dpm_step(&self, i: usize) -> DpmStepPlan {
+        self.plan.dpm_step(self.base + i)
+    }
+
+    pub fn has_dpm(&self) -> bool {
+        self.plan.has_dpm()
+    }
+
+    /// Lagrange basis weights with view-relative `target`/`indices`.
+    /// `abs` is a caller-owned scratch for the translated indices so the
+    /// suffix path stays allocation-free after warmup; the full view
+    /// skips the translation entirely.
+    pub fn lagrange_weights_into(
+        &self,
+        target: usize,
+        indices: &[usize],
+        abs: &mut Vec<usize>,
+    ) -> Arc<Vec<f64>> {
+        if self.base == 0 {
+            return self.plan.lagrange_weights(target, indices);
+        }
+        abs.clear();
+        abs.extend(indices.iter().map(|&n| n + self.base));
+        self.plan.lagrange_weights(target + self.base, abs)
+    }
+}
+
 /// Cache key: everything the plan contents depend on.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
@@ -492,6 +599,49 @@ mod tests {
         let sp1 = p.dpm_step(2);
         assert_eq!(sp1.order, 1);
         assert_eq!(sp1.t_s1, 0.0, "order-1 steps have no intermediate stage");
+    }
+
+    #[test]
+    fn suffix_view_offsets_every_accessor() {
+        let p = Arc::new(plan(10));
+        let v = PlanView::suffix(p.clone(), 4);
+        assert_eq!(v.base(), 4);
+        assert_eq!(v.steps(), 6);
+        assert_eq!(v.grid(), &p.grid()[4..]);
+        for i in 0..v.steps() {
+            assert_eq!(v.t(i), p.t(4 + i));
+            assert_eq!(v.ddim_coeffs(i), p.ddim_coeffs(4 + i));
+            assert_eq!(v.alpha_bar_at(i), p.alpha_bar_at(4 + i));
+        }
+        // The suffix never aliases the full plan's early transitions.
+        assert_ne!(v.ddim_coeffs(0), p.ddim_coeffs(0));
+        // Full view is transparent.
+        let f = PlanView::full(p.clone());
+        assert_eq!(f.base(), 0);
+        assert_eq!(f.steps(), p.steps());
+        assert_eq!(f.t(0), p.t(0));
+    }
+
+    #[test]
+    fn suffix_view_lagrange_shares_absolute_memo() {
+        let p = Arc::new(plan(12));
+        let v = PlanView::suffix(p.clone(), 3);
+        let mut scratch = Vec::new();
+        // Relative (target 8, indices 2/4/6) == absolute (11, 5/7/9).
+        let w_rel = v.lagrange_weights_into(8, &[2, 4, 6], &mut scratch);
+        let w_abs = p.lagrange_weights(11, &[5, 7, 9]);
+        assert!(Arc::ptr_eq(&w_rel, &w_abs), "suffix lookups must hit the shared memo");
+        // A full view bypasses the translation and still shares.
+        let f = PlanView::full(p.clone());
+        let w_full = f.lagrange_weights_into(11, &[5, 7, 9], &mut scratch);
+        assert!(Arc::ptr_eq(&w_full, &w_abs));
+    }
+
+    #[test]
+    #[should_panic(expected = "no transition")]
+    fn suffix_view_rejects_empty_window() {
+        let p = Arc::new(plan(5));
+        let _ = PlanView::suffix(p, 5); // grid has 6 points; base 5 leaves 0 transitions
     }
 
     #[test]

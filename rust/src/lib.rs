@@ -21,6 +21,15 @@
 //! cache that precomputes schedule samples and solver coefficients once
 //! per `(solver, NFE, grid, schedule)` across requests and shards.
 //!
+//! Requests carry a [`solvers::TaskSpec`] selecting the workload
+//! (DESIGN.md §8): classifier-free guidance (paired cond/uncond eval
+//! rows fused into the same slabs, combined in place by
+//! `kernels::fused::guided_combine`), img2img partial trajectories
+//! (suffix [`kernels::PlanView`]s into the one shared plan per
+//! configuration), and stochastic ERA (per-request churn noise streams,
+//! stable under batching and sharding). The defaults reproduce the
+//! plain unconditional trajectory bit for bit.
+//!
 //! Substrate modules ([`tensor`], [`rng`], [`linalg`], [`json`],
 //! [`metrics`], [`data`], [`benchkit`], [`cli`]) are hand-rolled: the
 //! offline registry closure carries no serde / rand / ndarray / criterion.
@@ -57,5 +66,5 @@ pub mod server;
 pub mod solvers;
 pub mod tensor;
 
-pub use solvers::{Solver, SolverKind};
+pub use solvers::{Solver, SolverKind, TaskSpec};
 pub use tensor::Tensor;

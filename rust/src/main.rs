@@ -9,7 +9,11 @@
 //!
 //! Clients speak the one-JSON-object-per-line protocol of
 //! [`era_solver::server`]; `examples/quickstart.rs` and
-//! `examples/serve_bench.rs` are reference clients.
+//! `examples/serve_bench.rs` are reference clients. `sample` ops accept
+//! per-request workload fields (`guidance_scale`/`guide_class`,
+//! `strength` + `init`, `churn` — DESIGN.md §8); guided requests are
+//! admission-charged as paired rows, and the heartbeat summary reports
+//! the running guided/img2img/sde mix.
 
 use std::sync::Arc;
 

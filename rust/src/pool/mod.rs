@@ -220,7 +220,11 @@ impl WorkerPool {
         let _admission_guard = if self.max_inflight_rows > 0 {
             let guard = self.admission.lock().unwrap();
             let total: usize = self.loads().iter().sum();
-            if total + spec.n_samples > self.max_inflight_rows {
+            // Admission is charged in model-eval rows: a guided request
+            // costs paired cond/uncond rows, i.e. 2x its sample count
+            // (`RequestSpec::admission_rows`), matching the shard-side
+            // inflight_rows gauge this cap is compared against.
+            if total + spec.admission_rows() > self.max_inflight_rows {
                 self.pool_rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::QueueFull);
             }

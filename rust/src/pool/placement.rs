@@ -5,7 +5,10 @@
 //! threads. Loads are the shards' `inflight_rows` telemetry gauges —
 //! rows submitted but not yet retired — which makes least-loaded
 //! placement track the actual row mass each shard is carrying rather
-//! than a request count that ignores batch size.
+//! than a request count that ignores batch size. The gauge is charged
+//! in *model-eval rows* (`RequestSpec::admission_rows`), so a guided
+//! request's paired cond/uncond rows weigh double and the router sees
+//! the true per-shard evaluation load under mixed workloads.
 
 /// How the pool routes requests across shards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +107,10 @@ mod tests {
         assert_eq!(place(PlacementPolicy::LeastLoaded, "x", 0, &[5, 2, 9, 2]), 1);
         assert_eq!(place(PlacementPolicy::LeastLoaded, "x", 0, &[0, 0, 0]), 0);
         assert_eq!(place(PlacementPolicy::LeastLoaded, "x", 7, &[3]), 0);
+        // A guided request's paired rows weigh double in the gauge: a
+        // shard holding one guided 16-sample request (32 rows) loses to
+        // one holding a plain 16-row request.
+        assert_eq!(place(PlacementPolicy::LeastLoaded, "x", 0, &[32, 16]), 1);
     }
 
     #[test]

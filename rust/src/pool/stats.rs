@@ -25,6 +25,11 @@ pub struct ShardStats {
     pub padded_rows: usize,
     pub inflight_requests: usize,
     pub inflight_rows: usize,
+    /// Workload mix (see [`Telemetry`]): guided / img2img / stochastic
+    /// requests admitted on this shard.
+    pub guided: usize,
+    pub img2img: usize,
+    pub stochastic: usize,
 }
 
 impl ShardStats {
@@ -40,6 +45,9 @@ impl ShardStats {
             padded_rows: t.padded_rows.load(Ordering::Relaxed),
             inflight_requests: t.inflight_requests.load(Ordering::Relaxed),
             inflight_rows: t.inflight_rows.load(Ordering::Relaxed),
+            guided: t.guided_requests.load(Ordering::Relaxed),
+            img2img: t.img2img_requests.load(Ordering::Relaxed),
+            stochastic: t.stochastic_requests.load(Ordering::Relaxed),
         }
     }
 
@@ -64,6 +72,9 @@ impl ShardStats {
             ("inflight_requests", Json::Num(self.inflight_requests as f64)),
             ("inflight_rows", Json::Num(self.inflight_rows as f64)),
             ("occupancy", Json::Num(self.occupancy())),
+            ("guided", Json::Num(self.guided as f64)),
+            ("img2img", Json::Num(self.img2img as f64)),
+            ("stochastic", Json::Num(self.stochastic as f64)),
         ])
     }
 }
@@ -140,6 +151,15 @@ impl PoolStats {
         self.per_shard.iter().map(|s| s.inflight_rows).sum()
     }
 
+    /// Pool-wide workload mix: (guided, img2img, stochastic) admissions.
+    pub fn workloads(&self) -> (usize, usize, usize) {
+        (
+            self.per_shard.iter().map(|s| s.guided).sum(),
+            self.per_shard.iter().map(|s| s.img2img).sum(),
+            self.per_shard.iter().map(|s| s.stochastic).sum(),
+        )
+    }
+
     /// Pool-wide mean rows per fused evaluation.
     pub fn occupancy(&self) -> f64 {
         let evals = self.evals();
@@ -196,6 +216,9 @@ impl PoolStats {
             ("inflight_rows", Json::Num(self.inflight_rows() as f64)),
             ("occupancy", Json::Num(self.occupancy())),
             ("padding_fraction", Json::Num(self.padding_fraction())),
+            ("guided", Json::Num(self.workloads().0 as f64)),
+            ("img2img", Json::Num(self.workloads().1 as f64)),
+            ("stochastic", Json::Num(self.workloads().2 as f64)),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
         ])

@@ -93,6 +93,23 @@ impl Client {
         if let Some(tag) = tag {
             pairs.push(("tag", Json::Num(tag as f64)));
         }
+        // Workload fields ride only when they deviate from the plain
+        // task, keeping the wire format of unconditional requests (and
+        // old servers' view of them) unchanged.
+        let task = &spec.task;
+        if task.is_guided() {
+            pairs.push(("guidance_scale", Json::Num(task.guidance_scale)));
+            pairs.push(("guide_class", Json::Num(task.guide_class as f64)));
+        }
+        if task.is_img2img() {
+            pairs.push(("strength", Json::Num(task.strength)));
+        }
+        if let Some(init) = &task.init {
+            pairs.push(("init", crate::server::protocol::rows_to_json(init)));
+        }
+        if task.is_stochastic() {
+            pairs.push(("churn", Json::Num(task.churn)));
+        }
         let resp = self.call(&Json::obj(pairs))?;
         let samples = samples_from_json(&resp)?;
         Ok(SampleOutcome {

@@ -28,6 +28,15 @@
 //! cancel it — the blocked submitter then receives its partial,
 //! `cancelled:true` result.
 //!
+//! `sample` also accepts workload fields (DESIGN.md §8):
+//! `guidance_scale` + `guide_class` (classifier-free guidance; the
+//! request is admission-charged as paired rows and `nfe` in the reply
+//! counts both halves), `strength` + `init` (img2img partial
+//! trajectory over a suffix of the shared plan; `init` is a raw
+//! `[[f32,...],...]` row array of shape `n_samples x dim`), and
+//! `churn` (stochastic ERA). All default to the plain unconditional
+//! trajectory.
+//!
 //! Threads + channels, no async runtime (the offline registry closure
 //! carries no tokio): one acceptor, one handler thread per connection,
 //! all sharing the [`WorkerPool`] handle. Handler threads block on

@@ -2,6 +2,8 @@
 
 use crate::coordinator::{RequestSpec, SamplingResult};
 use crate::json::{self, Json};
+use crate::solvers::TaskSpec;
+use crate::tensor::Tensor;
 
 /// Parsed client request.
 #[derive(Debug)]
@@ -30,6 +32,17 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }
         "sample" => {
             let d = RequestSpec::default();
+            let init = match j.get("init") {
+                Json::Null => None,
+                rows => Some(tensor_from_rows(rows)?),
+            };
+            let task = TaskSpec {
+                guidance_scale: j.get("guidance_scale").as_f64().unwrap_or(0.0),
+                guide_class: j.get("guide_class").as_usize().unwrap_or(0),
+                strength: j.get("strength").as_f64().unwrap_or(1.0),
+                init,
+                churn: j.get("churn").as_f64().unwrap_or(0.0),
+            };
             let spec = RequestSpec {
                 dataset: j.get("dataset").as_str().unwrap_or(&d.dataset).to_string(),
                 solver: j.get("solver").as_str().unwrap_or(&d.solver).to_string(),
@@ -39,6 +52,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 t_end: j.get("t_end").as_f64().unwrap_or(d.t_end),
                 seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
                 deadline_ms: j.get("deadline_ms").as_usize().map(|v| v as u64),
+                task,
             };
             let return_samples = j.get("return_samples").as_bool().unwrap_or(false);
             let tag = j.get("tag").as_usize().map(|v| v as u64);
@@ -46,6 +60,37 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }
         other => Err(format!("unknown op '{other}'")),
     }
+}
+
+/// Parse a raw `[[f32,...],...]` row array (the `init` payload of
+/// img2img sample requests) into a tensor. Rows must be nonempty and of
+/// equal length.
+pub fn tensor_from_rows(j: &Json) -> Result<Tensor, String> {
+    let arr = j.as_arr().ok_or("init must be an array of rows")?;
+    if arr.is_empty() {
+        return Err("init has no rows".into());
+    }
+    let first = arr[0].as_f32_vec().ok_or("init rows must be numeric arrays")?;
+    let dim = first.len();
+    if dim == 0 {
+        return Err("init rows are empty".into());
+    }
+    let mut data = Vec::with_capacity(arr.len() * dim);
+    data.extend(first);
+    for row in &arr[1..] {
+        let v = row.as_f32_vec().ok_or("init rows must be numeric arrays")?;
+        if v.len() != dim {
+            return Err("init row dim mismatch".into());
+        }
+        data.extend(v);
+    }
+    Ok(Tensor::from_vec(data, arr.len(), dim))
+}
+
+/// Serialise a tensor as the raw row array `tensor_from_rows` parses
+/// (client-side `init` payloads).
+pub fn rows_to_json(t: &Tensor) -> Json {
+    Json::Arr((0..t.rows()).map(|r| Json::arr_f32(t.row(r))).collect())
 }
 
 /// Serialise a finished request. Samples are included row-by-row only on
@@ -124,6 +169,51 @@ mod tests {
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn parses_task_fields_with_defaults() {
+        // Absent task fields resolve to the plain unconditional task.
+        let r = parse_request(r#"{"op":"sample","solver":"era"}"#).unwrap();
+        match r {
+            Request::Sample { spec, .. } => {
+                assert_eq!(spec.task, TaskSpec::default());
+                assert_eq!(spec.admission_rows(), spec.n_samples);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Full workload request: guidance + img2img init + churn.
+        let r = parse_request(
+            r#"{"op":"sample","solver":"era","guidance_scale":2.5,"guide_class":3,
+                "strength":0.5,"churn":0.3,"init":[[1.0,2.0],[3.0,4.0]]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample { spec, .. } => {
+                assert_eq!(spec.task.guidance_scale, 2.5);
+                assert_eq!(spec.task.guide_class, 3);
+                assert_eq!(spec.task.strength, 0.5);
+                assert_eq!(spec.task.churn, 0.3);
+                let init = spec.task.init.as_ref().unwrap();
+                assert_eq!((init.rows(), init.cols()), (2, 2));
+                assert_eq!(init.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+                assert_eq!(spec.admission_rows(), 2 * spec.n_samples);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Malformed init payloads are rejected, not defaulted.
+        assert!(parse_request(r#"{"op":"sample","init":[[1.0],[2.0,3.0]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"sample","init":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"op":"sample","init":[]}"#).is_err());
+    }
+
+    #[test]
+    fn init_rows_roundtrip() {
+        let t = crate::tensor::Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0, 0.0, 9.0], 3, 2);
+        let j = rows_to_json(&t);
+        let back = tensor_from_rows(&j).unwrap();
+        assert_eq!(back.as_slice(), t.as_slice());
+        assert_eq!((back.rows(), back.cols()), (3, 2));
     }
 
     #[test]

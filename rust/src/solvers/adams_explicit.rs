@@ -18,7 +18,7 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, HistoryRing, ScratchArena, TrajectoryPlan};
+use crate::kernels::{fused, HistoryRing, PlanView, ScratchArena, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
@@ -54,7 +54,7 @@ fn drift_into(sched: &VpSchedule, out: &mut [f32], x: &[f32], eps: &[f32], t: f6
 }
 
 pub struct ExplicitAdams {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     variant: Variant,
     x: Arc<Tensor>,
     i: usize,
@@ -102,7 +102,20 @@ impl ExplicitAdams {
         Self::with_plan(plan, x0, Variant::Fon)
     }
 
+    /// Build over a (possibly suffix) window of a shared plan.
+    pub fn with_view_pndm(view: PlanView, x0: Tensor) -> Self {
+        Self::with_view(view, x0, Variant::Pndm)
+    }
+
+    pub fn with_view_fon(view: PlanView, x0: Tensor) -> Self {
+        Self::with_view(view, x0, Variant::Fon)
+    }
+
     fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, variant: Variant) -> Self {
+        Self::with_view(PlanView::full(plan), x0, variant)
+    }
+
+    fn with_view(plan: PlanView, x0: Tensor, variant: Variant) -> Self {
         assert!(plan.grid().len() >= 5, "PNDM/FON need >= 4 transitions (>= 13 NFE)");
         let (rows, cols) = (x0.rows(), x0.cols());
         ExplicitAdams {
@@ -201,7 +214,7 @@ impl Solver for ExplicitAdams {
         }
         let (x, t) = self.request();
         self.pending = Some((Arc::clone(&x), t));
-        Some(EvalRequest { x, t })
+        Some(EvalRequest { x, t, cond: None })
     }
 
     fn on_eval(&mut self, eps: Tensor) {

@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, HistoryRing, TrajectoryPlan};
+use crate::kernels::{fused, HistoryRing, PlanView, TrajectoryPlan};
 use crate::solvers::adams_explicit::AB4;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
@@ -41,7 +41,7 @@ pub fn am_weights(order: usize) -> &'static [f64] {
 }
 
 pub struct ImplicitAdamsPc {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     x: Arc<Tensor>,
     i: usize,
     nfe: usize,
@@ -62,6 +62,11 @@ impl ImplicitAdamsPc {
 
     /// Build over a shared precomputed plan (the serving path).
     pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        ImplicitAdamsPc::with_view(PlanView::full(plan), x0)
+    }
+
+    /// Build over a (possibly suffix) window of a shared plan.
+    pub fn with_view(plan: PlanView, x0: Tensor) -> Self {
         let (rows, cols) = (x0.rows(), x0.cols());
         ImplicitAdamsPc {
             plan,
@@ -111,7 +116,7 @@ impl Solver for ImplicitAdamsPc {
         self.pending = true;
         if self.hist.is_empty() {
             // First step: evaluate at the current point (plain DDIM).
-            Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
+            Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i), cond: None })
         } else {
             // Predict x at t_{i+1} with the explicit-Adams combination and
             // evaluate there (the single evaluation of this step).
@@ -125,7 +130,11 @@ impl Solver for ImplicitAdamsPc {
                 b as f32,
                 self.comb.as_slice(),
             );
-            Some(EvalRequest { x: Arc::clone(&self.x_pred), t: self.plan.t(self.i + 1) })
+            Some(EvalRequest {
+                x: Arc::clone(&self.x_pred),
+                t: self.plan.t(self.i + 1),
+                cond: None,
+            })
         }
     }
 

@@ -12,13 +12,13 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, TrajectoryPlan};
+use crate::kernels::{fused, PlanView, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
 pub struct Ddim {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     x: Arc<Tensor>,
     /// Index of the *next transition* (x at grid[i] currently).
     i: usize,
@@ -34,6 +34,12 @@ impl Ddim {
 
     /// Build over a shared precomputed plan (the serving path).
     pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor) -> Self {
+        Ddim::with_view(PlanView::full(plan), x0)
+    }
+
+    /// Build over a (possibly suffix) window of a shared plan — the
+    /// img2img path enters the trajectory at an interior grid index.
+    pub fn with_view(plan: PlanView, x0: Tensor) -> Self {
         Ddim { plan, x: Arc::new(x0), i: 0, nfe: 0, pending: false }
     }
 }
@@ -49,7 +55,7 @@ impl Solver for Ddim {
         }
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
-        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i), cond: None })
     }
 
     fn on_eval(&mut self, eps: Tensor) {

@@ -14,14 +14,14 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, TrajectoryPlan};
+use crate::kernels::{fused, PlanView, TrajectoryPlan};
 use crate::rng::Rng;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
 pub struct Ddpm {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     x: Arc<Tensor>,
     i: usize,
     nfe: usize,
@@ -39,6 +39,11 @@ impl Ddpm {
 
     /// Build over a shared precomputed plan (the serving path).
     pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, seed: u64) -> Self {
+        Ddpm::with_view(PlanView::full(plan), x0, seed)
+    }
+
+    /// Build over a (possibly suffix) window of a shared plan.
+    pub fn with_view(plan: PlanView, x0: Tensor, seed: u64) -> Self {
         let z = Tensor::zeros(x0.rows(), x0.cols());
         Ddpm {
             plan,
@@ -63,7 +68,7 @@ impl Solver for Ddpm {
         }
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
-        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i), cond: None })
     }
 
     fn on_eval(&mut self, eps: Tensor) {

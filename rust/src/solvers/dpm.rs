@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, TrajectoryPlan};
+use crate::kernels::{fused, PlanView, TrajectoryPlan};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
@@ -77,7 +77,7 @@ struct StepState {
 }
 
 pub struct DpmSolver {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     x: Arc<Tensor>,
     i: usize,
     nfe: usize,
@@ -117,6 +117,12 @@ impl DpmSolver {
     /// Build over a shared precomputed plan (must carry DPM step
     /// coefficients — i.e. come from a DPM [`crate::solvers::SolverKind`]).
     pub fn with_plan(plan: Arc<TrajectoryPlan>, x0: Tensor, label: String) -> Self {
+        DpmSolver::with_view(PlanView::full(plan), x0, label)
+    }
+
+    /// Build over a (possibly suffix) window of a shared plan; the view's
+    /// transitions use their own precomputed per-step coefficients.
+    pub fn with_view(plan: PlanView, x0: Tensor, label: String) -> Self {
         assert!(plan.has_dpm(), "DpmSolver needs a plan with DPM coefficients");
         let u = Arc::new(Tensor::zeros(x0.rows(), x0.cols()));
         DpmSolver {
@@ -218,7 +224,7 @@ impl Solver for DpmSolver {
         assert!(!self.pending, "next_eval called with an eval outstanding");
         self.pending = true;
         let (x, t) = self.request();
-        Some(EvalRequest { x, t })
+        Some(EvalRequest { x, t, cond: None })
     }
 
     fn on_eval(&mut self, eps: Tensor) {

@@ -17,10 +17,26 @@
 use crate::solvers::schedule::VpSchedule;
 use crate::tensor::Tensor;
 
+/// Per-row conditioning sentinel: any channel value `< 0` means "this
+/// row is unconditional". The guided workload ships cond rows carrying a
+/// class id and uncond rows carrying this value in one fused slab.
+pub const UNCOND: f32 = -1.0;
+
 /// A noise-prediction network eps_theta(x, t) with per-sample times.
 pub trait EpsModel: Send + Sync {
     /// Evaluate the model. `x` is (batch, dim); `t` has length batch.
     fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor;
+
+    /// Conditional evaluation with a per-row class channel `c` (length
+    /// batch; rows with `c < 0` are unconditional — see [`UNCOND`]).
+    /// Models without a conditional head ignore the channel, so plain
+    /// workloads are unaffected; rows a conditional model *does* honour
+    /// must produce the same values for unconditional rows as
+    /// [`EpsModel::eval`] would (the guided golden tests pin this).
+    fn eval_cond(&self, x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        let _ = c;
+        self.eval(x, t)
+    }
 
     /// Data dimension.
     fn dim(&self) -> usize;
@@ -59,6 +75,68 @@ impl AnalyticGmm {
     pub fn gmm8(sched: VpSchedule) -> Self {
         AnalyticGmm::new(sched, crate::data::gmm8_modes(), 0.15)
     }
+
+    /// One row of the exact eps. `class = None` is the full-mixture
+    /// score (the original unconditional path, op-for-op); `Some(j)`
+    /// conditions on component `j` (responsibilities collapse to that
+    /// mode — the closed-form "class-conditional" denoiser the guided
+    /// workload steers with). Both [`EpsModel::eval`] and
+    /// [`EpsModel::eval_cond`] route through here, so an unconditional
+    /// row is bitwise identical whichever entry point (and whatever
+    /// batch mix) evaluated it.
+    fn eps_row(&self, row: &[f32], tr: f64, orow: &mut [f32], class: Option<usize>) {
+        let sab = self.sched.sqrt_alpha_bar(tr);
+        let ab = sab * sab;
+        let var = ab * self.std * self.std + (1.0 - ab);
+        let sigma = self.sched.sigma(tr);
+        match class {
+            Some(j) => {
+                // Single-component posterior: w_j = 1.
+                let c = &self.centers[j % self.centers.len()];
+                for (k, &cv) in c.iter().enumerate() {
+                    let diff = sab * cv - row[k] as f64;
+                    orow[k] += (diff / var) as f32;
+                }
+            }
+            None => {
+                // Log-sum-exp responsibilities over components.
+                let mut logw: Vec<f64> = Vec::with_capacity(self.centers.len());
+                for c in &self.centers {
+                    let d2: f64 = row
+                        .iter()
+                        .zip(c)
+                        .map(|(&xv, &cv)| {
+                            let d = xv as f64 - sab * cv;
+                            d * d
+                        })
+                        .sum();
+                    logw.push(-0.5 * d2 / var);
+                }
+                let m = logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut wsum = 0.0;
+                let w: Vec<f64> = logw
+                    .iter()
+                    .map(|&l| {
+                        let e = (l - m).exp();
+                        wsum += e;
+                        e
+                    })
+                    .collect();
+
+                // score = sum_j w_j (m_j - x) / var;  eps = -sigma * score.
+                for (j, c) in self.centers.iter().enumerate() {
+                    let wj = w[j] / wsum;
+                    for (k, &cv) in c.iter().enumerate() {
+                        let diff = sab * cv - row[k] as f64;
+                        orow[k] += (wj * diff / var) as f32;
+                    }
+                }
+            }
+        }
+        for v in orow.iter_mut() {
+            *v *= -(sigma as f32);
+        }
+    }
 }
 
 impl EpsModel for AnalyticGmm {
@@ -68,49 +146,20 @@ impl EpsModel for AnalyticGmm {
         self.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut out = Tensor::zeros(x.rows(), x.cols());
         for r in 0..x.rows() {
-            let tr = t[r] as f64;
-            let sab = self.sched.sqrt_alpha_bar(tr);
-            let ab = sab * sab;
-            let var = ab * self.std * self.std + (1.0 - ab);
-            let sigma = self.sched.sigma(tr);
-            let row = x.row(r);
+            self.eps_row(x.row(r), t[r] as f64, out.row_mut(r), None);
+        }
+        out
+    }
 
-            // Log-sum-exp responsibilities over components.
-            let mut logw: Vec<f64> = Vec::with_capacity(self.centers.len());
-            for c in &self.centers {
-                let d2: f64 = row
-                    .iter()
-                    .zip(c)
-                    .map(|(&xv, &cv)| {
-                        let d = xv as f64 - sab * cv;
-                        d * d
-                    })
-                    .sum();
-                logw.push(-0.5 * d2 / var);
-            }
-            let m = logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let mut wsum = 0.0;
-            let w: Vec<f64> = logw
-                .iter()
-                .map(|&l| {
-                    let e = (l - m).exp();
-                    wsum += e;
-                    e
-                })
-                .collect();
-
-            // score = sum_j w_j (m_j - x) / var;  eps = -sigma * score.
-            let orow = out.row_mut(r);
-            for (j, c) in self.centers.iter().enumerate() {
-                let wj = w[j] / wsum;
-                for (k, &cv) in c.iter().enumerate() {
-                    let diff = sab * cv - row[k] as f64;
-                    orow[k] += (wj * diff / var) as f32;
-                }
-            }
-            for v in orow.iter_mut() {
-                *v *= -(sigma as f32);
-            }
+    fn eval_cond(&self, x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        assert_eq!(x.rows(), t.len());
+        assert_eq!(x.rows(), c.len());
+        assert_eq!(x.cols(), self.dim);
+        self.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut out = Tensor::zeros(x.rows(), x.cols());
+        for r in 0..x.rows() {
+            let class = if c[r] < 0.0 { None } else { Some(c[r] as usize) };
+            self.eps_row(x.row(r), t[r] as f64, out.row_mut(r), class);
         }
         out
     }
@@ -154,11 +203,11 @@ impl<M: EpsModel> NoisyEps<M> {
     fn amp(&self, t: f64) -> f64 {
         self.amp0 * (1.0 - t).max(0.0).powf(self.power)
     }
-}
 
-impl<M: EpsModel> EpsModel for NoisyEps<M> {
-    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
-        let mut out = self.inner.eval(x, t);
+    /// Add the smooth error field to `out` (independent of conditioning,
+    /// so the guided cond/uncond halves see the *same* wrongness — the
+    /// regime ERS is designed for).
+    fn perturb(&self, x: &Tensor, t: &[f32], out: &mut Tensor) {
         let d = self.dim();
         for r in 0..x.rows() {
             let amp = self.amp(t[r] as f64);
@@ -175,6 +224,19 @@ impl<M: EpsModel> EpsModel for NoisyEps<M> {
                 orow[k] += (amp * arg.sin()) as f32;
             }
         }
+    }
+}
+
+impl<M: EpsModel> EpsModel for NoisyEps<M> {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        let mut out = self.inner.eval(x, t);
+        self.perturb(x, t, &mut out);
+        out
+    }
+
+    fn eval_cond(&self, x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        let mut out = self.inner.eval_cond(x, t, c);
+        self.perturb(x, t, &mut out);
         out
     }
 
@@ -214,6 +276,12 @@ impl<M: EpsModel> EpsModel for CountingEps<M> {
         self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.rows.fetch_add(x.rows(), std::sync::atomic::Ordering::Relaxed);
         self.inner.eval(x, t)
+    }
+
+    fn eval_cond(&self, x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.rows.fetch_add(x.rows(), std::sync::atomic::Ordering::Relaxed);
+        self.inner.eval_cond(x, t, c)
     }
 
     fn dim(&self) -> usize {
@@ -289,6 +357,70 @@ mod tests {
         let a = noisy.eval(&x, &[0.4]);
         let b = noisy.eval(&x, &[0.4]);
         assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn eval_cond_uncond_rows_bitwise_match_eval() {
+        // Unconditional rows must be identical whether they ride the
+        // plain path or a mixed cond/uncond slab — the invariant that
+        // lets guided requests batch with unconditional batch-mates.
+        let m = gmm();
+        let x = Tensor::from_vec(vec![0.3, -0.8, 1.2, 0.4, -1.5, 0.9], 3, 2);
+        let t = [0.7f32, 0.4, 0.1];
+        let plain = m.eval(&x, &t);
+        let mixed = m.eval_cond(&x, &t, &[UNCOND, 2.0, UNCOND]);
+        assert_eq!(plain.row(0), mixed.row(0));
+        assert_eq!(plain.row(2), mixed.row(2));
+        // The conditioned row genuinely differs.
+        assert_ne!(plain.row(1), mixed.row(1));
+        let all_uncond = m.eval_cond(&x, &t, &[UNCOND; 3]);
+        assert_eq!(plain.as_slice(), all_uncond.as_slice());
+    }
+
+    #[test]
+    fn eval_cond_points_toward_the_conditioned_mode() {
+        // Conditioning on mode j collapses the score onto that single
+        // component: from the origin at moderate t, eps should push x
+        // opposite the mode direction (eps ~ -(sab*c - x)/... * -sigma).
+        let m = gmm();
+        let t = 0.3f32;
+        let x = Tensor::zeros(1, 2);
+        for j in 0..8usize {
+            let e = m.eval_cond(&x, &[t], &[j as f32]);
+            let c = &m.centers[j];
+            // eps = -sigma * (sab*c - 0)/var: anti-parallel to the mode.
+            let dot = e.as_slice()[0] as f64 * c[0] + e.as_slice()[1] as f64 * c[1];
+            assert!(dot < 0.0, "mode {j}: eps should point away, dot {dot}");
+        }
+        // Class ids wrap modulo the component count.
+        let a = m.eval_cond(&x, &[t], &[1.0]);
+        let b = m.eval_cond(&x, &[t], &[9.0]);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn noisy_and_counting_wrappers_forward_cond() {
+        let noisy = NoisyEps::new(gmm(), 0.3, 1.0, 9);
+        let x = Tensor::from_vec(vec![0.2, -0.8], 1, 2);
+        let t = [0.4f32];
+        // Same perturbation field on both paths: the cond/uncond delta
+        // survives the wrapper exactly.
+        let d_inner = {
+            let a = noisy.inner.eval_cond(&x, &t, &[3.0]);
+            let b = noisy.inner.eval(&x, &t);
+            a.as_slice()[0] - b.as_slice()[0]
+        };
+        let d_noisy = {
+            let a = noisy.eval_cond(&x, &t, &[3.0]);
+            let b = noisy.eval(&x, &t);
+            a.as_slice()[0] - b.as_slice()[0]
+        };
+        assert!((d_inner - d_noisy).abs() < 1e-6);
+
+        let counting = CountingEps::new(gmm());
+        let _ = counting.eval_cond(&x, &t, &[UNCOND]);
+        assert_eq!(counting.calls(), 1);
+        assert_eq!(counting.rows_evaluated(), 1);
     }
 
     #[test]

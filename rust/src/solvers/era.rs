@@ -34,10 +34,18 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{fused, TrajectoryPlan};
+use crate::kernels::{fused, PlanView, TrajectoryPlan};
+use crate::rng::Rng;
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
+
+/// RNG stream id for the stochastic-ERA churn noise. Per-request:
+/// `Rng::for_stream(seed, CHURN_STREAM)` — independent of the prior
+/// noise (0x5eed) and DDPM ancestral (0xD0) streams, and consumed in a
+/// fixed per-transition order, so the trajectory is bit-reproducible
+/// however the request is batched or sharded.
+pub const CHURN_STREAM: u64 = 0x5DE0;
 
 /// How the Lagrange bases are selected from the buffer (the paper's
 /// ablation axis: Tab. 4/5 and Fig. 5/6).
@@ -120,7 +128,7 @@ pub fn select_indices_into(idx: &mut Vec<usize>, i: usize, k: usize, p: f64) {
 
 /// ERA-Solver state machine (one concurrent sampling request).
 pub struct EraSolver {
-    plan: Arc<TrajectoryPlan>,
+    plan: PlanView,
     x: Arc<Tensor>,
     i: usize,
     nfe: usize,
@@ -140,6 +148,16 @@ pub struct EraSolver {
     eps_c: Tensor,
     /// ERS selection scratch (capacity k).
     idx_buf: Vec<usize>,
+    /// Absolute-index scratch for suffix-view Lagrange memo lookups.
+    abs_buf: Vec<usize>,
+    /// SDE churn level (0 = deterministic ERA). When positive, each
+    /// interior transition is followed by `churn * sqrt(var_ddpm)`-scaled
+    /// Gaussian noise from the per-request stream (SA-Solver-style
+    /// stochastic Adams sampling on top of the error-robust predictor).
+    churn: f64,
+    /// Churn stream + preallocated noise scratch (empty when churn = 0).
+    noise_rng: Rng,
+    z: Tensor,
     pending: bool,
     done: bool,
     /// Flat preallocated ERS decision log: `(step, delta_eps)` plus k
@@ -169,6 +187,20 @@ impl EraSolver {
         k: usize,
         selection: Selection,
     ) -> Self {
+        EraSolver::with_view(PlanView::full(plan), x0, k, selection, 0.0, 0)
+    }
+
+    /// Build over a (possibly suffix) window of a shared plan, with an
+    /// optional stochastic churn level. `seed` feeds only the churn
+    /// stream; deterministic trajectories (`churn = 0`) ignore it.
+    pub fn with_view(
+        plan: PlanView,
+        x0: Tensor,
+        k: usize,
+        selection: Selection,
+        churn: f64,
+        seed: u64,
+    ) -> Self {
         let n_points = plan.grid().len();
         assert!(n_points >= 2, "need at least one transition");
         assert!(k >= 2, "interpolation order k must be >= 2");
@@ -177,6 +209,7 @@ impl EraSolver {
             "NFE budget {} too small for order k={k} (needs > k transitions)",
             n_points - 1
         );
+        assert!(churn >= 0.0, "churn must be nonnegative");
         let lambda = match selection {
             Selection::ErrorRobust { lambda } => lambda,
             _ => 1.0,
@@ -196,6 +229,10 @@ impl EraSolver {
             has_pred: false,
             eps_c: Tensor::zeros(rows, cols),
             idx_buf: Vec::with_capacity(k),
+            abs_buf: Vec::with_capacity(k),
+            churn,
+            noise_rng: Rng::for_stream(seed, CHURN_STREAM),
+            z: if churn > 0.0 { Tensor::zeros(rows, cols) } else { Tensor::zeros(0, 0) },
             pending: false,
             done: false,
             trace_meta: Vec::with_capacity(steps),
@@ -217,58 +254,82 @@ impl EraSolver {
     fn advance(&mut self) -> bool {
         let (a, b) = self.plan.ddim_coeffs(self.i);
 
-        if self.i < self.k - 1 {
+        let ran_predictor = if self.i < self.k - 1 {
             // Warmup (Alg. 1 line 5-7): plain DDIM with the newest eps.
             let newest = self.eps.last().expect("advance before first eval");
             let x = Arc::make_mut(&mut self.x);
             fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, newest.as_slice());
-            self.i += 1;
-            return false;
-        }
-
-        // ERS selection (Eq. 16/17) over buffer entries 0..=bi.
-        let bi = self.eps.len() - 1;
-        match &self.selection {
-            Selection::FixedLast => {
-                // tau_m = i - m, ascending.
-                self.idx_buf.clear();
-                self.idx_buf.extend((bi + 1 - self.k)..=bi);
+            false
+        } else {
+            // ERS selection (Eq. 16/17) over buffer entries 0..=bi.
+            let bi = self.eps.len() - 1;
+            match &self.selection {
+                Selection::FixedLast => {
+                    // tau_m = i - m, ascending.
+                    self.idx_buf.clear();
+                    self.idx_buf.extend((bi + 1 - self.k)..=bi);
+                }
+                _ => {
+                    let p = self.exponent();
+                    select_indices_into(&mut self.idx_buf, bi, self.k, p);
+                }
             }
-            _ => {
-                let p = self.exponent();
-                select_indices_into(&mut self.idx_buf, bi, self.k, p);
+            self.trace_meta.push((self.i, self.delta_eps));
+            self.trace_idx.extend_from_slice(&self.idx_buf);
+
+            // Predictor (Eq. 13/14, Alg. 1 line 9-12): interpolate the
+            // selected bases at t_{i+1}. Basis weights are memoised in
+            // the shared plan (suffix views translate to absolute grid
+            // indices, so all strengths share one memo).
+            let w = self.plan.lagrange_weights_into(self.i + 1, &self.idx_buf, &mut self.abs_buf);
+            fused::zero(self.pred.as_mut_slice());
+            for (&n, &wm) in self.idx_buf.iter().zip(w.iter()) {
+                fused::axpy(self.pred.as_mut_slice(), wm as f32, self.eps[n].as_slice());
             }
-        }
-        self.trace_meta.push((self.i, self.delta_eps));
-        self.trace_idx.extend_from_slice(&self.idx_buf);
 
-        // Predictor (Eq. 13/14, Alg. 1 line 9-12): interpolate the
-        // selected bases at t_{i+1}. Basis weights are memoised in the
-        // plan and shared across every request on this configuration.
-        let w = self.plan.lagrange_weights(self.i + 1, &self.idx_buf);
-        fused::zero(self.pred.as_mut_slice());
-        for (&n, &wm) in self.idx_buf.iter().zip(w.iter()) {
-            fused::axpy(self.pred.as_mut_slice(), wm as f32, self.eps[n].as_slice());
-        }
-
-        // Corrector (line 13, Eq. 11): AM4 with eps_pred in the implicit
-        // slot and the newest buffered estimates in the explicit slots.
-        let n = self.eps.len();
-        let order = n.min(3) + 1; // implicit slot + up to 3 history slots
-        let amw = self.plan.am_weights(order);
-        fused::zero(self.eps_c.as_mut_slice());
-        fused::axpy(self.eps_c.as_mut_slice(), amw[0] as f32, self.pred.as_slice());
-        for back in 0..order - 1 {
-            fused::axpy(
-                self.eps_c.as_mut_slice(),
-                amw[back + 1] as f32,
-                self.eps[n - 1 - back].as_slice(),
-            );
-        }
-        let x = Arc::make_mut(&mut self.x);
-        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, self.eps_c.as_slice());
+            // Corrector (line 13, Eq. 11): AM4 with eps_pred in the
+            // implicit slot and the newest buffered estimates in the
+            // explicit slots.
+            let n = self.eps.len();
+            let order = n.min(3) + 1; // implicit slot + up to 3 history slots
+            let amw = self.plan.am_weights(order);
+            fused::zero(self.eps_c.as_mut_slice());
+            fused::axpy(self.eps_c.as_mut_slice(), amw[0] as f32, self.pred.as_slice());
+            for back in 0..order - 1 {
+                fused::axpy(
+                    self.eps_c.as_mut_slice(),
+                    amw[back + 1] as f32,
+                    self.eps[n - 1 - back].as_slice(),
+                );
+            }
+            let x = Arc::make_mut(&mut self.x);
+            fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, self.eps_c.as_slice());
+            true
+        };
         self.i += 1;
-        true
+
+        // Stochastic variant: ancestral-scale churn after every interior
+        // transition (never on the final one — the endpoint stays a data
+        // sample). The scale is the DDPM posterior std of the transition
+        // just taken, multiplied by the churn factor; the predictor's
+        // next error measurement then sees the perturbation, which is
+        // exactly the estimation-error regime ERS is built for.
+        if self.churn > 0.0 && self.i + 1 < self.plan.grid().len() {
+            let ab_prev = self.plan.alpha_bar_at(self.i - 1);
+            let ab_cur = self.plan.alpha_bar_at(self.i);
+            let alpha = ab_prev / ab_cur;
+            let var = (1.0 - ab_cur) / (1.0 - ab_prev) * (1.0 - alpha);
+            if var > 0.0 {
+                self.noise_rng.fill_normal(self.z.as_mut_slice());
+                let x = Arc::make_mut(&mut self.x);
+                fused::axpy(
+                    x.as_mut_slice(),
+                    (self.churn * var.sqrt()) as f32,
+                    self.z.as_slice(),
+                );
+            }
+        }
+        ran_predictor
     }
 
     /// ERS decision log (Fig. 3 diagnostics), materialised from the
@@ -293,10 +354,15 @@ impl EraSolver {
 
 impl Solver for EraSolver {
     fn name(&self) -> String {
-        match &self.selection {
+        let base = match &self.selection {
             Selection::ErrorRobust { .. } => format!("era-{}", self.k),
             Selection::FixedLast => format!("era-fixed-{}", self.k),
             Selection::ConstantScale { .. } => format!("era-const-{}", self.k),
+        };
+        if self.churn > 0.0 {
+            format!("sde-{base}")
+        } else {
+            base
         }
     }
 
@@ -308,7 +374,7 @@ impl Solver for EraSolver {
         if self.eps.is_empty() {
             // Alg. 1 line 3: seed the buffer at (x_{t_0}, t_0).
             self.pending = true;
-            return Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(0) });
+            return Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(0), cond: None });
         }
         // Advance one transition; the evaluation (if any) happens at the
         // *new* point, which feeds both the buffer and the error measure.
@@ -319,7 +385,7 @@ impl Solver for EraSolver {
             return None;
         }
         self.pending = true;
-        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i) })
+        Some(EvalRequest { x: Arc::clone(&self.x), t: self.plan.t(self.i), cond: None })
     }
 
     fn on_eval(&mut self, eps: Tensor) {
@@ -595,6 +661,75 @@ mod tests {
             );
         }
         assert!(shared.lagrange_hits() > 0, "second request must hit the shared memo");
+    }
+
+    #[test]
+    fn stochastic_era_is_seed_deterministic_and_differs_from_ode() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let run = |churn: f64, seed: u64| {
+            let grid = make_grid(&sched, GridKind::Uniform, 14, 1.0, 1e-3);
+            let plan = Arc::new(TrajectoryPlan::new(sched, grid));
+            let mut rng = Rng::new(9);
+            let x0 = rng.normal_tensor(16, 2);
+            let mut s = EraSolver::with_view(
+                crate::kernels::PlanView::full(plan),
+                x0,
+                4,
+                Selection::ErrorRobust { lambda: 5.0 },
+                churn,
+                seed,
+            );
+            sample_with(&mut s, &model)
+        };
+        let a = run(0.4, 1);
+        let b = run(0.4, 1);
+        let c = run(0.4, 2);
+        let ode = run(0.0, 1);
+        assert_eq!(a.as_slice(), b.as_slice(), "same seed must replay exactly");
+        assert_ne!(a.as_slice(), c.as_slice(), "distinct seeds must differ");
+        assert_ne!(a.as_slice(), ode.as_slice(), "churn must perturb the ODE path");
+        assert!(a.all_finite());
+        // The churned trajectory still lands on the data manifold.
+        let big = {
+            let grid = make_grid(&sched, GridKind::Uniform, 20, 1.0, 1e-3);
+            let plan = Arc::new(TrajectoryPlan::new(sched, grid));
+            let mut rng = Rng::new(10);
+            let mut s = EraSolver::with_view(
+                crate::kernels::PlanView::full(plan),
+                rng.normal_tensor(400, 2),
+                4,
+                Selection::ErrorRobust { lambda: 5.0 },
+                0.3,
+                7,
+            );
+            sample_with(&mut s, &model)
+        };
+        let cov = metrics::mode_coverage(&big, &crate::data::gmm8_modes(), 0.5);
+        assert!(cov > 0.9, "stochastic coverage {cov}");
+    }
+
+    #[test]
+    fn suffix_view_runs_the_tail_of_the_grid() {
+        // An ERA trajectory over a suffix view consumes exactly the
+        // remaining transitions and shares the full plan's memo.
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let grid = make_grid(&sched, GridKind::Uniform, 16, 1.0, 1e-3);
+        let plan = Arc::new(TrajectoryPlan::new(sched, grid));
+        let view = crate::kernels::PlanView::suffix(plan.clone(), 6);
+        let mut rng = Rng::new(12);
+        let mut s = EraSolver::with_view(
+            view,
+            rng.normal_tensor(8, 2),
+            4,
+            Selection::ErrorRobust { lambda: 5.0 },
+            0.0,
+            0,
+        );
+        let out = sample_with(&mut s, &model);
+        assert_eq!(s.nfe(), 10, "suffix of 10 transitions = 10 evals");
+        assert!(out.all_finite());
     }
 
     #[test]

@@ -29,14 +29,16 @@ pub mod ddpm;
 pub mod dpm;
 pub mod era;
 pub mod eps_model;
+pub mod guided;
 pub mod lagrange;
 pub mod schedule;
 
 use std::sync::Arc;
 
-use crate::kernels::{PlanCache, PlanKey, TrajectoryPlan};
+use crate::kernels::{PlanCache, PlanKey, PlanView, TrajectoryPlan};
 use crate::tensor::Tensor;
-pub use eps_model::EpsModel;
+pub use eps_model::{EpsModel, UNCOND};
+pub use guided::Guided;
 pub use schedule::{make_grid, GridKind, VpSchedule};
 
 /// One pending network evaluation: run `eps_theta(x, t)` for every row.
@@ -46,11 +48,19 @@ pub use schedule::{make_grid, GridKind, VpSchedule};
 /// not a deep clone. Callers drop the request before `on_eval` so the
 /// solver can update the buffer in place (a still-outstanding view is
 /// safe but forces one copy-on-write).
+///
+/// `cond` is the optional per-row conditioning channel (class id per
+/// row, [`UNCOND`] for unconditional rows). It is constant across a
+/// trajectory, so guided solvers build it once and hand out refcounts;
+/// the batcher threads it through fused slabs exactly like the per-row
+/// times.
 #[derive(Clone, Debug)]
 pub struct EvalRequest {
     pub x: Arc<Tensor>,
     /// Diffusion time shared by the whole tensor (one solver step).
     pub t: f64,
+    /// Per-row conditioning channel; `None` = all rows unconditional.
+    pub cond: Option<Arc<Vec<f32>>>,
 }
 
 /// A diffusion-ODE solver driving one batch of samples from noise to data.
@@ -80,7 +90,9 @@ pub trait Solver: Send {
 
 /// Drive a solver to completion against a model (in-process path used by
 /// tests, examples and the benches; the serving path lives in
-/// `coordinator`).
+/// `coordinator`). Requests carrying a conditioning channel route
+/// through [`EpsModel::eval_cond`]; plain requests keep the exact
+/// pre-existing `eval` path.
 pub fn sample_with(solver: &mut dyn Solver, model: &dyn EpsModel) -> Tensor {
     // One reusable time buffer for the whole trajectory instead of a
     // fresh `vec![t; rows]` per evaluation.
@@ -88,13 +100,210 @@ pub fn sample_with(solver: &mut dyn Solver, model: &dyn EpsModel) -> Tensor {
     while let Some(req) = solver.next_eval() {
         t_buf.clear();
         t_buf.resize(req.x.rows(), req.t as f32);
-        let eps = model.eval(&req.x, &t_buf);
+        let eps = match &req.cond {
+            None => model.eval(&req.x, &t_buf),
+            Some(c) => model.eval_cond(&req.x, &t_buf, c),
+        };
         // Release the borrowed view before feeding the result back so
         // the solver's in-place update never pays copy-on-write.
         drop(req);
         solver.on_eval(eps);
     }
     solver.current().clone()
+}
+
+/// Per-request workload description, threaded from the wire protocol
+/// through admission, the batcher and into the solver layer. The
+/// default is the plain unconditional full trajectory, and every
+/// default field is guaranteed not to change a request's numerics: the
+/// golden tests pin `guidance_scale = 0` and `strength = 1.0` bitwise
+/// against the pre-existing paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    /// Classifier-free guidance scale. `0` = unconditional (no paired
+    /// rows, no extra evaluations); any other value evaluates paired
+    /// cond/uncond rows each step and combines them as
+    /// `uncond + scale * (cond - uncond)` ([`Guided`]).
+    pub guidance_scale: f64,
+    /// Class id the cond rows condition on (dataset-interpreted).
+    pub guide_class: usize,
+    /// img2img strength in `[0, 1]`. `1.0` = full trajectory from pure
+    /// noise; smaller values enter the shared trajectory plan at an
+    /// interior grid index (quantized to a transition — the "strength
+    /// bucket") starting from `init` noised to that time; `0.0` runs no
+    /// transitions and returns the re-noised init.
+    pub strength: f64,
+    /// Initial sample batch for img2img (required when the strength
+    /// bucket is interior; shape must be `n_samples x dim`).
+    pub init: Option<Tensor>,
+    /// Stochastic-ERA churn level. `0` = deterministic; `> 0` injects
+    /// ancestral-scale noise scaled by this factor after every interior
+    /// transition, from a per-request RNG stream (stream-stable under
+    /// batching and sharding). ERA solvers only.
+    pub churn: f64,
+}
+
+impl Default for TaskSpec {
+    fn default() -> Self {
+        TaskSpec {
+            guidance_scale: 0.0,
+            guide_class: 0,
+            strength: 1.0,
+            init: None,
+            churn: 0.0,
+        }
+    }
+}
+
+impl TaskSpec {
+    /// True when this request evaluates paired cond/uncond rows.
+    pub fn is_guided(&self) -> bool {
+        self.guidance_scale != 0.0
+    }
+
+    /// True when the trajectory starts at an interior grid index.
+    pub fn is_img2img(&self) -> bool {
+        self.strength < 1.0
+    }
+
+    pub fn is_stochastic(&self) -> bool {
+        self.churn > 0.0
+    }
+
+    /// Model-eval rows each requested sample costs per step — what
+    /// admission control, the global row cap and the batcher see. A
+    /// guided request is 2 rows per sample (cond + uncond).
+    pub fn rows_per_sample(&self) -> usize {
+        if self.is_guided() {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// The "strength bucket": grid index a trajectory of `steps`
+    /// transitions enters at. Continuous strengths quantize to the
+    /// nearest transition; the mapping is injective over buckets
+    /// (`strength = 1 - j/steps  <->  start = j`), `1.0` maps to 0
+    /// (full trajectory) and `0.0` to `steps` (no transitions). Any
+    /// strength `< 1` clamps to an *interior* start (>= 1) so an
+    /// img2img request always consumes its init — a strength rounding
+    /// to the full trajectory would otherwise silently ignore it.
+    pub fn suffix_start(&self, steps: usize) -> usize {
+        if self.strength >= 1.0 {
+            return 0;
+        }
+        let start = ((1.0 - self.strength) * steps as f64).round() as usize;
+        start.clamp(1, steps)
+    }
+
+    /// Cheap parameter validation (shape checks against the plan happen
+    /// at build time in [`TaskSpec::start_state`]).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.guidance_scale.is_finite() || self.guidance_scale < 0.0 {
+            return Err(format!("guidance_scale {} out of range", self.guidance_scale));
+        }
+        if !(0.0..=1.0).contains(&self.strength) {
+            return Err(format!("strength {} out of [0, 1]", self.strength));
+        }
+        if !self.churn.is_finite() || self.churn < 0.0 {
+            return Err(format!("churn {} out of range", self.churn));
+        }
+        Ok(())
+    }
+
+    /// Short label for stats/telemetry ("uncond", "guided@2", combos).
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.is_guided() {
+            parts.push(format!("guided@{}", self.guidance_scale));
+        }
+        if self.is_img2img() {
+            parts.push(format!("img2img@{}", self.strength));
+        }
+        if self.is_stochastic() {
+            parts.push(format!("sde@{}", self.churn));
+        }
+        if parts.is_empty() {
+            "uncond".into()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Resolve the start grid index and start iterate for this task over
+    /// `plan`, given the request's prior noise batch (the same noise the
+    /// full trajectory would start from, so `strength = 1.0` is bitwise
+    /// the pre-existing path). Interior starts forward-noise the init:
+    /// `x = sqrt(alpha_bar(t_start)) * init + sigma(t_start) * noise`.
+    pub fn start_state(
+        &self,
+        plan: &TrajectoryPlan,
+        noise: Tensor,
+    ) -> Result<(usize, Tensor), String> {
+        let start = self.suffix_start(plan.steps());
+        if start == 0 {
+            return Ok((0, noise));
+        }
+        let init = self.init.as_ref().ok_or_else(|| {
+            format!("strength {} needs an init batch (none provided)", self.strength)
+        })?;
+        if init.rows() != noise.rows() || init.cols() != noise.cols() {
+            return Err(format!(
+                "init shape {}x{} does not match request shape {}x{}",
+                init.rows(),
+                init.cols(),
+                noise.rows(),
+                noise.cols()
+            ));
+        }
+        let t_start = plan.t(start);
+        let sched = plan.sched();
+        let a = sched.sqrt_alpha_bar(t_start) as f32;
+        let b = sched.sigma(t_start) as f32;
+        let mut x = Tensor::zeros(noise.rows(), noise.cols());
+        crate::kernels::fused::affine_into(
+            x.as_mut_slice(),
+            a,
+            init.as_slice(),
+            b,
+            noise.as_slice(),
+        );
+        Ok((start, x))
+    }
+}
+
+/// Zero-transition solver: already done, `current` is the start state.
+/// Backs the `strength = 0.0` img2img bucket (return the re-noised init
+/// without consuming any evaluations).
+struct Noop {
+    x: Tensor,
+}
+
+impl Solver for Noop {
+    fn name(&self) -> String {
+        "noop".into()
+    }
+
+    fn next_eval(&mut self) -> Option<EvalRequest> {
+        None
+    }
+
+    fn on_eval(&mut self, _eps: Tensor) {
+        panic!("noop solver received an evaluation");
+    }
+
+    fn current(&self) -> &Tensor {
+        &self.x
+    }
+
+    fn is_done(&self) -> bool {
+        true
+    }
+
+    fn nfe(&self) -> usize {
+        0
+    }
 }
 
 /// Which solver to build (the paper's comparison set).
@@ -130,7 +339,7 @@ impl SolverKind {
             "dpm-fast" => return Some(SolverKind::DpmFast),
             // Default lambda 0.3 — the paper's 5.0 rescaled to this
             // repo's delta_eps units (per-row mean norm instead of the
-            // raw image-tensor L2 norm; see DESIGN.md §8).
+            // raw image-tensor L2 norm; see DESIGN.md §9).
             "era" => {
                 return Some(SolverKind::Era {
                     k: 4,
@@ -308,23 +517,103 @@ impl SolverKind {
         x0: Tensor,
         seed: u64,
     ) -> Box<dyn Solver> {
+        self.build_with_view(PlanView::full(plan), x0, seed, 0.0)
+    }
+
+    /// Build over an explicit [`PlanView`] (full or suffix window into a
+    /// shared plan). `churn > 0` selects the stochastic-ERA variant and
+    /// is only meaningful for ERA kinds ([`SolverKind::build_task`]
+    /// rejects it elsewhere before reaching here).
+    pub fn build_with_view(
+        &self,
+        view: PlanView,
+        x0: Tensor,
+        seed: u64,
+        churn: f64,
+    ) -> Box<dyn Solver> {
         match self {
-            SolverKind::Ddpm => Box::new(ddpm::Ddpm::with_plan(plan, x0, seed)),
-            SolverKind::Ddim => Box::new(ddim::Ddim::with_plan(plan, x0)),
+            SolverKind::Ddpm => Box::new(ddpm::Ddpm::with_view(view, x0, seed)),
+            SolverKind::Ddim => Box::new(ddim::Ddim::with_view(view, x0)),
             SolverKind::Pndm => {
-                Box::new(adams_explicit::ExplicitAdams::with_plan_pndm(plan, x0))
+                Box::new(adams_explicit::ExplicitAdams::with_view_pndm(view, x0))
             }
-            SolverKind::Fon => Box::new(adams_explicit::ExplicitAdams::with_plan_fon(plan, x0)),
+            SolverKind::Fon => Box::new(adams_explicit::ExplicitAdams::with_view_fon(view, x0)),
             SolverKind::ImplicitAdams => {
-                Box::new(adams_implicit::ImplicitAdamsPc::with_plan(plan, x0))
+                Box::new(adams_implicit::ImplicitAdamsPc::with_view(view, x0))
             }
             SolverKind::Dpm { order } => {
-                Box::new(dpm::DpmSolver::with_plan(plan, x0, format!("dpm-{order}")))
+                Box::new(dpm::DpmSolver::with_view(view, x0, format!("dpm-{order}")))
             }
-            SolverKind::DpmFast => Box::new(dpm::DpmSolver::with_plan(plan, x0, "dpm-fast".into())),
-            SolverKind::Era { k, selection } => {
-                Box::new(era::EraSolver::with_plan(plan, x0, *k, selection.clone()))
+            SolverKind::DpmFast => Box::new(dpm::DpmSolver::with_view(view, x0, "dpm-fast".into())),
+            SolverKind::Era { k, selection } => Box::new(era::EraSolver::with_view(
+                view,
+                x0,
+                *k,
+                selection.clone(),
+                churn,
+                seed,
+            )),
+        }
+    }
+
+    /// Minimum *visible* transitions a (suffix) trajectory needs for
+    /// this kind to run — the img2img counterpart of
+    /// [`SolverKind::min_nfe`].
+    fn min_steps(&self) -> usize {
+        match self {
+            SolverKind::Pndm | SolverKind::Fon => 4,
+            SolverKind::Era { k, .. } => (*k).max(3),
+            _ => 1,
+        }
+    }
+
+    /// Build the full workload-aware solver stack for one request:
+    /// resolve the task's strength bucket into a suffix [`PlanView`] of
+    /// the shared `plan` (noising `task.init` to the start time),
+    /// instantiate this kind over it (stochastic churn for ERA), and
+    /// wrap with classifier-free guidance when requested. `x0_noise` is
+    /// the request's prior noise batch; with a default task this is
+    /// behaviourally identical to [`SolverKind::build_with_plan`].
+    pub fn build_task(
+        &self,
+        plan: Arc<TrajectoryPlan>,
+        x0_noise: Tensor,
+        seed: u64,
+        task: &TaskSpec,
+    ) -> Result<Box<dyn Solver>, String> {
+        task.validate()?;
+        if task.is_stochastic() && !matches!(self, SolverKind::Era { .. }) {
+            return Err(format!(
+                "churn {} requires an era solver, got '{}'",
+                task.churn,
+                self.label()
+            ));
+        }
+        let (start, x_start) = task.start_state(&plan, x0_noise)?;
+        let steps = plan.steps();
+        let inner: Box<dyn Solver> = if start == steps {
+            Box::new(Noop { x: x_start })
+        } else {
+            let remaining = steps - start;
+            if remaining < self.min_steps() {
+                return Err(format!(
+                    "strength {} leaves {remaining} transitions, below minimum {} for '{}'",
+                    task.strength,
+                    self.min_steps(),
+                    self.label()
+                ));
             }
+            let view = if start == 0 {
+                PlanView::full(plan)
+            } else {
+                PlanView::suffix(plan, start)
+            };
+            self.build_with_view(view, x_start, seed, task.churn)
+        };
+        if task.is_guided() {
+            Ok(Box::new(Guided::new(inner, task.guidance_scale as f32, task.guide_class)))
+        } else {
+            Ok(inner)
         }
     }
 
@@ -390,5 +679,87 @@ mod tests {
         assert_eq!(SolverKind::Pndm.steps_for_nfe(15), 6); // 12 warmup + 3 plms... 15-9
         assert_eq!(SolverKind::Dpm { order: 2 }.steps_for_nfe(10), 5);
         assert_eq!(SolverKind::Dpm { order: 3 }.steps_for_nfe(10), 4);
+    }
+
+    #[test]
+    fn task_spec_defaults_and_buckets() {
+        let d = TaskSpec::default();
+        assert!(!d.is_guided() && !d.is_img2img() && !d.is_stochastic());
+        assert_eq!(d.rows_per_sample(), 1);
+        assert_eq!(d.suffix_start(10), 0);
+        assert_eq!(d.label(), "uncond");
+        // Buckets: strength 1 - j/steps -> start j, injective, clamped.
+        for steps in [4usize, 10, 17] {
+            for j in 0..=steps {
+                let t = TaskSpec {
+                    strength: 1.0 - j as f64 / steps as f64,
+                    ..Default::default()
+                };
+                assert_eq!(t.suffix_start(steps), j, "steps {steps} bucket {j}");
+            }
+        }
+        let g = TaskSpec { guidance_scale: 2.0, ..Default::default() };
+        assert_eq!(g.rows_per_sample(), 2);
+        assert!(g.label().contains("guided@2"));
+    }
+
+    #[test]
+    fn task_spec_validation_and_build_rejections() {
+        assert!(TaskSpec { guidance_scale: -1.0, ..Default::default() }.validate().is_err());
+        assert!(TaskSpec { strength: 1.5, ..Default::default() }.validate().is_err());
+        assert!(TaskSpec { strength: -0.1, ..Default::default() }.validate().is_err());
+        assert!(TaskSpec { churn: f64::NAN, ..Default::default() }.validate().is_err());
+
+        let sched = VpSchedule::default();
+        let kind = SolverKind::Ddim;
+        let grid = make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3);
+        let plan = Arc::new(kind.make_plan(sched, grid, 10));
+        let noise = Tensor::zeros(4, 2);
+        // Churn on a non-ERA solver is rejected.
+        let churn = TaskSpec { churn: 0.5, ..Default::default() };
+        assert!(kind.build_task(plan.clone(), noise.clone(), 0, &churn).is_err());
+        // Interior strength without an init is rejected.
+        let no_init = TaskSpec { strength: 0.5, ..Default::default() };
+        assert!(kind.build_task(plan.clone(), noise.clone(), 0, &no_init).is_err());
+        // Mismatched init shape is rejected.
+        let bad_init = TaskSpec {
+            strength: 0.5,
+            init: Some(Tensor::zeros(3, 2)),
+            ..Default::default()
+        };
+        assert!(kind.build_task(plan.clone(), noise.clone(), 0, &bad_init).is_err());
+        // A suffix too short for the solver order is rejected, not a panic.
+        let era = SolverKind::parse("era").unwrap();
+        let era_plan = Arc::new(era.make_plan(
+            sched,
+            make_grid(&sched, GridKind::Uniform, 10, 1.0, 1e-3),
+            10,
+        ));
+        let tight = TaskSpec {
+            strength: 0.2,
+            init: Some(Tensor::zeros(4, 2)),
+            ..Default::default()
+        };
+        assert!(era.build_task(era_plan, noise, 0, &tight).is_err());
+    }
+
+    #[test]
+    fn task_strength_zero_returns_renoised_init() {
+        // strength 0 runs no transitions: the result is the init noised
+        // to t_end, which at t_end ~ 1e-3 is the init to ~1e-2.
+        let sched = VpSchedule::default();
+        let kind = SolverKind::Ddim;
+        let grid = make_grid(&sched, GridKind::Uniform, 8, 1.0, 1e-3);
+        let plan = Arc::new(kind.make_plan(sched, grid, 8));
+        let init = Tensor::from_vec(vec![2.0, 0.0, 0.0, -2.0], 2, 2);
+        let task = TaskSpec { strength: 0.0, init: Some(init.clone()), ..Default::default() };
+        let mut rng = crate::rng::Rng::new(3);
+        let noise = rng.normal_tensor(2, 2);
+        let solver = kind.build_task(plan, noise, 3, &task).unwrap();
+        assert!(solver.is_done());
+        assert_eq!(solver.nfe(), 0);
+        for (got, want) in solver.current().as_slice().iter().zip(init.as_slice()) {
+            assert!((got - want).abs() < 0.05, "{got} vs {want}");
+        }
     }
 }

@@ -255,6 +255,16 @@ impl Tensor {
         Tensor::from_vec(data, n, self.cols)
     }
 
+    /// Shrink to the first `n` rows in place. `Vec::truncate` keeps the
+    /// allocation, so this is free of heap traffic — the guided workload
+    /// collapses a paired 2N-row model output to its N guided rows this
+    /// way without breaking the zero-alloc steady state.
+    pub fn truncate_rows(&mut self, n: usize) {
+        assert!(n <= self.rows, "truncate_rows beyond current rows");
+        self.data.truncate(n * self.cols);
+        self.rows = n;
+    }
+
     /// True if every element is finite.
     pub fn all_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
@@ -364,6 +374,23 @@ mod tests {
         let s = Tensor::vstack(&[&a, &b]);
         assert_eq!(s.rows(), 3);
         assert_eq!(s.slice_rows(1, 2).as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn truncate_rows_keeps_prefix() {
+        let mut x = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        x.truncate_rows(2);
+        assert_eq!((x.rows(), x.cols()), (2, 2));
+        assert_eq!(x.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        x.truncate_rows(2); // idempotent at the boundary
+        assert_eq!(x.rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond current rows")]
+    fn truncate_rows_checks_bounds() {
+        let mut x = Tensor::zeros(2, 2);
+        x.truncate_rows(3);
     }
 
     #[test]

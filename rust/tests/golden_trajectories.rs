@@ -19,10 +19,10 @@ use era_solver::solvers::adams_explicit::AB4;
 use era_solver::solvers::adams_implicit::am_weights;
 use era_solver::solvers::dpm::{fast_order_schedule, fixed_order_schedule};
 use era_solver::solvers::era::{select_indices, Selection};
-use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel, NoisyEps};
+use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel, NoisyEps, UNCOND};
 use era_solver::solvers::lagrange;
 use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
-use era_solver::solvers::{sample_with, SolverKind};
+use era_solver::solvers::{sample_with, SolverKind, TaskSpec};
 use era_solver::tensor::Tensor;
 
 fn eval(model: &dyn EpsModel, x: &Tensor, t: f64) -> Tensor {
@@ -107,11 +107,29 @@ fn ref_iadams(sched: &VpSchedule, grid: &[f64], mut x: Tensor, model: &dyn EpsMo
 fn ref_era(
     sched: &VpSchedule,
     grid: &[f64],
-    mut x: Tensor,
+    x: Tensor,
     model: &dyn EpsModel,
     k: usize,
     selection: &Selection,
 ) -> Tensor {
+    ref_era_churn(sched, grid, x, model, k, selection, 0.0, 0)
+}
+
+/// ERA reference with optional SDE churn: after every interior
+/// transition, add `churn * sqrt(var_ddpm)`-scaled Gaussian noise from
+/// the dedicated per-request stream — verbatim the production rule.
+#[allow(clippy::too_many_arguments)]
+fn ref_era_churn(
+    sched: &VpSchedule,
+    grid: &[f64],
+    mut x: Tensor,
+    model: &dyn EpsModel,
+    k: usize,
+    selection: &Selection,
+    churn: f64,
+    seed: u64,
+) -> Tensor {
+    let mut churn_rng = Rng::for_stream(seed, era_solver::solvers::era::CHURN_STREAM);
     let mut times: Vec<f64> = Vec::new();
     let mut buf: Vec<Tensor> = Vec::new();
     let mut delta = match selection {
@@ -152,6 +170,18 @@ fn ref_era(
             i += 1;
             Some(eps_pred)
         };
+        // SDE churn on interior transitions (never the final one), using
+        // the DDPM posterior std of the transition just taken.
+        if churn > 0.0 && i + 1 < grid.len() {
+            let ab_prev = sched.alpha_bar(grid[i - 1]);
+            let ab_cur = sched.alpha_bar(grid[i]);
+            let alpha = ab_prev / ab_cur;
+            let var = (1.0 - ab_cur) / (1.0 - ab_prev) * (1.0 - alpha);
+            if var > 0.0 {
+                let z = churn_rng.normal_tensor(x.rows(), x.cols());
+                x.axpy((churn * var.sqrt()) as f32, &z);
+            }
+        }
         if i + 1 >= grid.len() {
             break; // final evaluation skipped, as in Alg. 1
         }
@@ -441,6 +471,191 @@ fn golden_shared_plan_equals_private_plan() {
         }
     }
     assert!(cache.hits() >= 4, "second rounds must hit the cache");
+}
+
+/// Reference model for classifier-free guidance: each `eval` is the
+/// combined `uncond + s * (cond - uncond)` of one cond and one uncond
+/// evaluation — exactly what the production `Guided` wrapper feeds its
+/// inner solver after splitting the paired slab output. Driving the
+/// plain reference drivers with this model therefore restates the whole
+/// guided trajectory.
+struct GuidedRef<'a> {
+    inner: &'a AnalyticGmm,
+    scale: f32,
+    class: usize,
+}
+
+impl EpsModel for GuidedRef<'_> {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        let c = self.inner.eval_cond(x, t, &vec![self.class as f32; x.rows()]);
+        let u = self.inner.eval_cond(x, t, &vec![UNCOND; x.rows()]);
+        let mut out = Tensor::zeros(x.rows(), x.cols());
+        for ((o, &cv), &uv) in out.as_mut_slice().iter_mut().zip(c.as_slice()).zip(u.as_slice()) {
+            *o = uv + self.scale * (cv - uv);
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+}
+
+#[test]
+fn golden_guided_scale_zero_bitwise_unconditional() {
+    // guidance_scale = 0 must route down the exact pre-existing path:
+    // no paired rows, no wrapper, bit-identical samples and equal NFE.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    for name in ["era", "ddim", "dpm-2"] {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 12;
+        let steps = kind.steps_for_nfe(nfe);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let plan = std::sync::Arc::new(kind.make_plan(sched, grid, nfe));
+        let mut rng = Rng::new(21);
+        let x0 = rng.normal_tensor(8, 2);
+
+        let mut plain = kind.build_with_plan(plan.clone(), x0.clone(), 3);
+        let want = sample_with(&mut *plain, &model);
+        let task = TaskSpec { guidance_scale: 0.0, guide_class: 5, ..Default::default() };
+        let mut zero = kind.build_task(plan, x0, 3, &task).unwrap();
+        let got = sample_with(&mut *zero, &model);
+        assert_eq!(got.as_slice(), want.as_slice(), "{name}: scale 0 must be bitwise plain");
+        assert_eq!(zero.nfe(), plain.nfe(), "{name}: scale 0 must not double NFE");
+    }
+}
+
+#[test]
+fn golden_guided_matches_reference_driver() {
+    // The paired-row production path (one 2N-row eval_cond per step,
+    // split + guided_combine + truncate) vs the reference restatement
+    // (two N-row evals combined manually, plain reference stepping).
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    for (name, scale, class) in [("ddim", 1.5f64, 2usize), ("era", 2.0, 6), ("era-3", 1.0, 0)] {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 12;
+        let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+        let plan = std::sync::Arc::new(kind.make_plan(sched, grid.clone(), nfe));
+        let mut rng = Rng::new(33);
+        let x0 = rng.normal_tensor(8, 2);
+
+        let task = TaskSpec {
+            guidance_scale: scale,
+            guide_class: class,
+            ..Default::default()
+        };
+        let mut prod = kind.build_task(plan, x0.clone(), 9, &task).unwrap();
+        let got = sample_with(&mut *prod, &model);
+        assert_eq!(prod.nfe(), 2 * nfe, "{name}: paired evals count double");
+
+        let guided_model = GuidedRef { inner: &model, scale: scale as f32, class };
+        let want = match &kind {
+            SolverKind::Ddim => ref_ddim(&sched, &grid, x0, &guided_model),
+            SolverKind::Era { k, selection } => {
+                ref_era(&sched, &grid, x0, &guided_model, *k, selection)
+            }
+            _ => unreachable!(),
+        };
+        let d = max_abs_diff(&got, &want);
+        assert!(d <= 1e-6, "{name} scale {scale}: max |diff| = {d}");
+    }
+}
+
+#[test]
+fn golden_img2img_strength_buckets() {
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let kind = SolverKind::parse("era").unwrap();
+    let nfe = 12;
+    let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+    let plan = std::sync::Arc::new(kind.make_plan(sched, grid.clone(), nfe));
+    let mut rng = Rng::new(40);
+    let noise = rng.normal_tensor(8, 2);
+    let init = {
+        let mut r = Rng::new(41);
+        r.normal_tensor(8, 2)
+    };
+
+    // strength 1.0: bitwise the full trajectory (init ignored).
+    let mut full = kind.build_with_plan(plan.clone(), noise.clone(), 2);
+    let want_full = sample_with(&mut *full, &model);
+    let t1 = TaskSpec { strength: 1.0, init: Some(init.clone()), ..Default::default() };
+    let mut s1 = kind.build_task(plan.clone(), noise.clone(), 2, &t1).unwrap();
+    let got_full = sample_with(&mut *s1, &model);
+    assert_eq!(got_full.as_slice(), want_full.as_slice(), "strength 1.0 must be bitwise full");
+    assert_eq!(s1.nfe(), nfe);
+
+    // strength 0.5: suffix of the same grid from the noised init,
+    // restated with the allocating reference driver.
+    let t_half = TaskSpec { strength: 0.5, init: Some(init.clone()), ..Default::default() };
+    let mut s_half = kind.build_task(plan.clone(), noise.clone(), 2, &t_half).unwrap();
+    let got_half = sample_with(&mut *s_half, &model);
+    assert_eq!(s_half.nfe(), nfe / 2, "strength 0.5 runs half the transitions");
+    let start = nfe / 2;
+    let t_start = grid[start];
+    let a = sched.sqrt_alpha_bar(t_start) as f32;
+    let b = sched.sigma(t_start) as f32;
+    let mut x_start = Tensor::zeros(8, 2);
+    for ((o, &iv), &nv) in x_start
+        .as_mut_slice()
+        .iter_mut()
+        .zip(init.as_slice())
+        .zip(noise.as_slice())
+    {
+        *o = a * iv + b * nv;
+    }
+    let want_half = match &kind {
+        SolverKind::Era { k, selection } => {
+            ref_era(&sched, &grid[start..], x_start, &model, *k, selection)
+        }
+        _ => unreachable!(),
+    };
+    let d = max_abs_diff(&got_half, &want_half);
+    assert!(d <= 1e-6, "strength 0.5: max |diff| = {d}");
+
+    // strength 0.0: zero transitions; bitwise the init noised to t_end.
+    let t0 = TaskSpec { strength: 0.0, init: Some(init.clone()), ..Default::default() };
+    let mut s0 = kind.build_task(plan, noise.clone(), 2, &t0).unwrap();
+    let got_zero = sample_with(&mut *s0, &model);
+    assert_eq!(s0.nfe(), 0);
+    let t_end = *grid.last().unwrap();
+    let (a, b) = (sched.sqrt_alpha_bar(t_end) as f32, sched.sigma(t_end) as f32);
+    for ((got, &iv), &nv) in got_zero.as_slice().iter().zip(init.as_slice()).zip(noise.as_slice())
+    {
+        assert_eq!(*got, a * iv + b * nv, "strength 0 must be the re-noised init, bitwise");
+    }
+}
+
+#[test]
+fn golden_stochastic_era_pinned_against_reference() {
+    // The churned trajectory, fixed seed, vs the reference driver that
+    // replays the exact noise stream — pins the stream id, the fill
+    // order and the posterior-std scaling.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    for (name, churn, seed) in [("era", 0.5f64, 7u64), ("era-3", 0.25, 11)] {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 14;
+        let grid = make_grid(&sched, GridKind::Uniform, nfe, 1.0, 1e-3);
+        let plan = std::sync::Arc::new(kind.make_plan(sched, grid.clone(), nfe));
+        let mut rng = Rng::new(50);
+        let x0 = rng.normal_tensor(8, 2);
+
+        let task = TaskSpec { churn, ..Default::default() };
+        let mut prod = kind.build_task(plan, x0.clone(), seed, &task).unwrap();
+        let got = sample_with(&mut *prod, &model);
+
+        let want = match &kind {
+            SolverKind::Era { k, selection } => {
+                ref_era_churn(&sched, &grid, x0, &model, *k, selection, churn, seed)
+            }
+            _ => unreachable!(),
+        };
+        let d = max_abs_diff(&got, &want);
+        assert!(d <= 1e-6, "{name} churn {churn}: max |diff| = {d}");
+    }
 }
 
 #[test]

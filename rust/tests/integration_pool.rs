@@ -16,6 +16,7 @@ use era_solver::server::client::Client;
 use era_solver::server::{Server, ServerConfig};
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
+use era_solver::solvers::TaskSpec;
 use era_solver::tensor::Tensor;
 
 /// A model bank with a fixed per-evaluation latency.
@@ -46,6 +47,11 @@ impl ModelBank for PacedBank {
     fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
         std::thread::sleep(self.per_eval);
         self.inner.eval(dataset, x, t)
+    }
+
+    fn eval_cond(&self, dataset: &str, x: &Tensor, t: &[f32], c: &[f32]) -> Result<Tensor, String> {
+        std::thread::sleep(self.per_eval);
+        self.inner.eval_cond(dataset, x, t, c)
     }
 }
 
@@ -114,6 +120,119 @@ fn cancelled_request_retires_early_batchmates_unaffected() {
     assert_eq!(stats.cancelled(), 1);
     assert_eq!(stats.finished(), 1);
     pool.shutdown();
+}
+
+fn guided_spec(n: usize, nfe: usize, seed: u64, scale: f64) -> RequestSpec {
+    RequestSpec {
+        n_samples: n,
+        nfe,
+        seed,
+        task: TaskSpec { guidance_scale: scale, guide_class: 2, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Workload acceptance scenario: cancelling a *guided* request
+/// mid-trajectory (paired rows in every slab) leaves an unconditional
+/// batch-mate bit-identical to a solo run, and admission accounting
+/// drains back to zero.
+#[test]
+fn guided_cancel_leaves_unconditional_batchmates_bit_identical() {
+    let pool = paced_pool(10, 1, CoordinatorConfig::default());
+
+    // Victim: long guided trajectory (16 paired rows per step).
+    let victim = pool.submit(guided_spec(8, 60, 1, 2.0)).unwrap();
+    // Unconditional batch-mate sharing the shard's fused slabs.
+    let mate = pool.submit(spec(8, 10, 2)).unwrap();
+    assert_eq!(victim.shard, mate.shard);
+
+    for _ in 0..400 {
+        if pool.stats().evals() >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(pool.stats().evals() >= 2, "shard never started evaluating");
+    victim.cancel();
+
+    let v = victim.wait().unwrap();
+    assert!(v.cancelled);
+    assert!(v.nfe < 120, "guided victim consumed its whole paired budget ({})", v.nfe);
+    assert_eq!(v.samples.rows(), 8, "partial iterate keeps sample rows, not paired rows");
+
+    let m = mate.wait().unwrap();
+    assert!(!m.cancelled);
+    assert_eq!(m.nfe, 10);
+
+    // Bit-identical to an undisturbed unconditional solo run.
+    let solo = paced_pool(0, 1, CoordinatorConfig::default());
+    let undisturbed = solo.sample(spec(8, 10, 2)).unwrap();
+    assert_eq!(m.samples.as_slice(), undisturbed.samples.as_slice());
+    solo.shutdown();
+
+    let stats = pool.stats();
+    assert_eq!(stats.cancelled(), 1);
+    assert_eq!(stats.finished(), 1);
+    assert_eq!(stats.workloads().0, 1, "one guided admission recorded");
+    assert_eq!(stats.inflight_rows(), 0, "paired rows must drain from the gauges");
+    pool.shutdown();
+}
+
+/// Admission control must charge guided requests as 2 rows per sample,
+/// at both the shard gauge and the pool-wide cap.
+#[test]
+fn admission_cap_counts_guided_requests_as_double_rows() {
+    let bank: Arc<dyn ModelBank> = Arc::new(PacedBank::gmm8(Duration::from_millis(10)));
+    let pool = WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards: 1,
+            placement: PlacementPolicy::RoundRobin,
+            shard: CoordinatorConfig::default(),
+            max_inflight_rows: 24,
+        },
+    );
+    // Guided 8-sample request pins 16 rows.
+    let first = pool.submit(guided_spec(8, 10, 1, 1.5)).unwrap();
+    // A second guided request would need 16 more rows: 32 > 24 -> reject.
+    match pool.submit(guided_spec(8, 10, 2, 1.5)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {:?}", other.map(|t| t.shard)),
+    }
+    // A plain 8-row request fits exactly: 16 + 8 = 24.
+    let second = pool.submit(spec(8, 10, 3)).unwrap();
+    assert!(!first.wait().unwrap().cancelled);
+    assert!(!second.wait().unwrap().cancelled);
+    assert_eq!(pool.stats().pool_rejected, 1);
+    pool.shutdown();
+}
+
+#[test]
+fn stochastic_requests_are_shard_stable() {
+    // The churn stream is owned per request: the same stochastic spec
+    // must produce bit-identical samples through a multi-shard pool
+    // (whatever placement/batching happened) as through a solo pool.
+    let stochastic = RequestSpec {
+        n_samples: 8,
+        nfe: 12,
+        seed: 5,
+        task: TaskSpec { churn: 0.4, ..Default::default() },
+        ..Default::default()
+    };
+    let pool = paced_pool(1, 2, CoordinatorConfig::default());
+    // Load both shards so slabs genuinely mix.
+    let noise: Vec<_> = (0..4).map(|i| pool.submit(spec(8, 12, 100 + i)).unwrap()).collect();
+    let got = pool.sample(stochastic.clone()).unwrap();
+    for t in noise {
+        t.wait().unwrap();
+    }
+    assert_eq!(pool.stats().workloads().2, 1, "one stochastic admission recorded");
+    pool.shutdown();
+
+    let solo = paced_pool(0, 1, CoordinatorConfig::default());
+    let want = solo.sample(stochastic).unwrap();
+    solo.shutdown();
+    assert_eq!(got.samples.as_slice(), want.samples.as_slice());
 }
 
 #[test]

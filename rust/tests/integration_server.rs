@@ -64,6 +64,41 @@ fn sample_over_the_wire_is_on_manifold() {
 }
 
 #[test]
+fn workload_fields_roundtrip_over_the_wire() {
+    // Guided + img2img + stochastic requests through the real TCP path:
+    // the client serialises the task fields (including the init row
+    // payload) and the result matches the in-process equivalent bitwise.
+    let (server, _pool) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+
+    let mut rng = era_solver::rng::Rng::new(77);
+    let init = rng.normal_tensor(8, 2);
+    let wire_spec = RequestSpec {
+        n_samples: 8,
+        nfe: 12,
+        seed: 3,
+        task: era_solver::solvers::TaskSpec {
+            guidance_scale: 1.5,
+            guide_class: 4,
+            strength: 0.5,
+            init: Some(init),
+            churn: 0.3,
+        },
+        ..Default::default()
+    };
+    let (samples, _) = c.sample(&wire_spec).unwrap();
+    assert_eq!((samples.rows(), samples.cols()), (8, 2));
+    assert!(samples.all_finite());
+
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let mut direct = wire_spec.build_solver(sched, 2).unwrap();
+    let want = era_solver::solvers::sample_with(&mut *direct, &model);
+    assert_eq!(samples.as_slice(), want.as_slice());
+    server.shutdown();
+}
+
+#[test]
 fn malformed_lines_get_error_responses() {
     use std::io::{BufRead, BufReader, Write};
     let (server, _coord) = mock_stack(CoordinatorConfig::default());

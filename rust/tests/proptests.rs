@@ -7,14 +7,14 @@ use std::sync::Arc;
 
 use era_solver::coordinator::batcher::{Batcher, BatchPolicy};
 use era_solver::json::{self, Json};
-use era_solver::kernels::TrajectoryPlan;
+use era_solver::kernels::{PlanView, TrajectoryPlan};
 use era_solver::linalg;
 use era_solver::metrics::{self, Moments};
 use era_solver::rng::Rng;
 use era_solver::solvers::era::select_indices;
 use era_solver::solvers::lagrange;
 use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
-use era_solver::solvers::EvalRequest;
+use era_solver::solvers::{EvalRequest, TaskSpec, UNCOND};
 use era_solver::tensor::Tensor;
 
 const CASES: usize = 300;
@@ -120,6 +120,7 @@ fn prop_batcher_conserves_and_routes_rows() {
                 EvalRequest {
                     x: Arc::new(rng.normal_tensor(rows, dim)),
                     t: rng.uniform_in(1e-3, 1.0),
+                    cond: None,
                 }
             })
             .collect();
@@ -156,6 +157,146 @@ fn prop_batcher_conserves_and_routes_rows() {
                 req.x.as_slice(),
                 "case {case}: request {i} content mangled"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_task_workload_resolution_injective() {
+    // (task kind, strength bucket, guidance) -> (suffix start, paired
+    // rows) must be injective: suffix views never alias the full plan
+    // (or each other), and guided workloads never collapse onto
+    // unguided ones in admission accounting.
+    let mut rng = Rng::new(0x7A5C);
+    let sched = VpSchedule::default();
+    for case in 0..60 {
+        let steps = 4 + (rng.below(28) as usize);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let plan = Arc::new(TrajectoryPlan::new(sched, grid));
+
+        // Exact buckets are injective: strength 1 - j/steps <-> start j.
+        let mut seen_starts = vec![false; steps + 1];
+        for j in 0..=steps {
+            let t = TaskSpec {
+                strength: 1.0 - j as f64 / steps as f64,
+                ..Default::default()
+            };
+            let start = t.suffix_start(steps);
+            assert_eq!(start, j, "case {case}: bucket {j} of {steps}");
+            assert!(!seen_starts[start], "case {case}: bucket collision at {start}");
+            seen_starts[start] = true;
+            // Interior suffix views never alias the full plan: same
+            // remaining-step count only at j = 0, and the first visible
+            // transition of an interior view is a *different* transition.
+            if (1..steps).contains(&j) {
+                let v = PlanView::suffix(plan.clone(), start);
+                assert_eq!(v.steps(), steps - j);
+                assert_eq!(v.t(0), plan.t(start));
+                assert_ne!(
+                    v.ddim_coeffs(0),
+                    plan.ddim_coeffs(0),
+                    "case {case}: suffix {j} aliases the full plan's first transition"
+                );
+            }
+        }
+
+        // Arbitrary continuous strengths still land in [0, steps] and
+        // are monotone (higher strength never starts later).
+        let s1 = rng.uniform_in(0.0, 1.0);
+        let s2 = rng.uniform_in(0.0, 1.0);
+        let (lo, hi) = if s1 <= s2 { (s1, s2) } else { (s2, s1) };
+        let t_lo = TaskSpec { strength: lo, ..Default::default() };
+        let t_hi = TaskSpec { strength: hi, ..Default::default() };
+        assert!(
+            t_hi.suffix_start(steps) <= t_lo.suffix_start(steps),
+            "case {case}: start must not increase with strength"
+        );
+
+        // Guidance discriminates workloads in row accounting whatever
+        // the scale, and scale 0 collapses to the plain task.
+        let g = TaskSpec {
+            guidance_scale: rng.uniform_in(0.1, 8.0),
+            ..Default::default()
+        };
+        assert_eq!(g.rows_per_sample(), 2);
+        assert_ne!(g.label(), TaskSpec::default().label());
+        let g0 = TaskSpec { guidance_scale: 0.0, ..Default::default() };
+        assert_eq!(g0.rows_per_sample(), 1);
+        assert_eq!(g0.label(), "uncond");
+    }
+}
+
+#[test]
+fn prop_paired_rows_survive_slab_mixing() {
+    // Guided requests contribute paired cond/uncond rows. Property: for
+    // arbitrary mixes of paired and plain requests and arbitrary slab
+    // caps, the gather/scatter round trip returns every request's rows
+    // in order with its conditioning channel intact — so row i and row
+    // i + pairs of a guided request stay a cond/uncond pair no matter
+    // how slabs split them.
+    let mut rng = Rng::new(0x9A12);
+    for case in 0..CASES {
+        let n_req = 1 + (rng.below(6) as usize);
+        let dim = 1 + (rng.below(3) as usize);
+        let max_rows = 1 + (rng.below(48) as usize);
+        let mut reqs: Vec<EvalRequest> = Vec::new();
+        let mut conds: Vec<Option<Vec<f32>>> = Vec::new();
+        for _ in 0..n_req {
+            if rng.below(2) == 0 {
+                // Guided-style: pairs rows, first half carries a class.
+                let pairs = 1 + (rng.below(20) as usize);
+                let class = rng.below(8) as f32;
+                let mut cond = vec![class; pairs];
+                cond.resize(pairs * 2, UNCOND);
+                reqs.push(EvalRequest {
+                    x: Arc::new(rng.normal_tensor(pairs * 2, dim)),
+                    t: rng.uniform_in(1e-3, 1.0),
+                    cond: Some(Arc::new(cond.clone())),
+                });
+                conds.push(Some(cond));
+            } else {
+                let rows = 1 + (rng.below(40) as usize);
+                reqs.push(EvalRequest {
+                    x: Arc::new(rng.normal_tensor(rows, dim)),
+                    t: rng.uniform_in(1e-3, 1.0),
+                    cond: None,
+                });
+                conds.push(None);
+            }
+        }
+        let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
+        let batcher = Batcher::new(BatchPolicy { max_rows, ..Default::default() });
+        let plan = batcher.pack(&pending);
+
+        let mut rows_back: Vec<Vec<f32>> = vec![Vec::new(); n_req];
+        let mut cond_back: Vec<Vec<f32>> = vec![Vec::new(); n_req];
+        for slab in &plan.slabs {
+            assert_eq!(slab.c().len(), slab.t.len(), "case {case}: channel length");
+            for seg in &slab.segments {
+                cond_back[seg.source].extend_from_slice(&slab.c()[seg.start..seg.start + seg.rows]);
+            }
+            for (src, part) in Batcher::unpack(slab, slab.x()) {
+                rows_back[src].extend_from_slice(part.as_slice());
+            }
+        }
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(rows_back[i], req.x.as_slice(), "case {case}: rows of req {i}");
+            match &conds[i] {
+                Some(c) => {
+                    assert_eq!(&cond_back[i], c, "case {case}: cond channel of req {i}");
+                    // Pairing intact: first half classes, second half
+                    // UNCOND, in the original row order.
+                    let pairs = c.len() / 2;
+                    assert!(cond_back[i][..pairs].iter().all(|&v| v >= 0.0));
+                    assert!(cond_back[i][pairs..].iter().all(|&v| v < 0.0));
+                }
+                None => {
+                    assert!(
+                        cond_back[i].iter().all(|&v| v == UNCOND),
+                        "case {case}: plain req {i} grew conditioning"
+                    );
+                }
+            }
         }
     }
 }
