@@ -30,6 +30,8 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "concurrency", value: Some("n"), help: "load-gen workers (default: 8)" },
     OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
     OptSpec { name: "shards", value: Some("n"), help: "pool shards (default: 1)" },
+    OptSpec { name: "executors", value: Some("n"), help: "engine executors per shard (default: 1)" },
+    OptSpec { name: "pipeline-depth", value: Some("n"), help: "dispatch rounds in flight per shard (default: 2)" },
     OptSpec { name: "guidance", value: Some("s"), help: "CFG scale for the load phase, 0 = off (default: 0)" },
     OptSpec { name: "guide-class", value: Some("c"), help: "class id for guided rows (default: 0)" },
     OptSpec { name: "churn", value: Some("s"), help: "stochastic-ERA churn for the load phase (default: 0)" },
@@ -52,6 +54,8 @@ fn start_stack(
     dataset: &str,
     policy: BatchPolicy,
     shards: usize,
+    executors: usize,
+    pipeline_depth: usize,
 ) -> Result<Stack, String> {
     let engine = Arc::new(PjRtEngine::new(artifacts)?);
     engine.warmup(dataset, &engine.manifest().batch_buckets.clone())?;
@@ -65,6 +69,8 @@ fn start_stack(
                 max_active: 64,
                 queue_capacity: 512,
                 policy,
+                executors_per_shard: executors,
+                pipeline_depth,
                 ..Default::default()
             },
             max_inflight_rows: 0,
@@ -84,6 +90,8 @@ fn run() -> Result<(), String> {
     let concurrency = args.usize_or("concurrency", 8)?;
     let requests = args.usize_or("requests", 6)?;
     let shards = args.usize_or("shards", 1)?.max(1);
+    let executors = args.usize_or("executors", 1)?.max(1);
+    let pipeline_depth = args.usize_or("pipeline-depth", 2)?.max(1);
     // Workload knobs for the concurrent-load phase: guided rows double
     // the eval row mass per request; churn exercises stochastic ERA.
     let load_task = TaskSpec {
@@ -94,7 +102,8 @@ fn run() -> Result<(), String> {
     };
 
     // ---- Part 1: Tab. 7 — single-request wall clock per solver × NFE ----
-    let stack = start_stack(&artifacts, &dataset, BatchPolicy::default(), shards)?;
+    let stack =
+        start_stack(&artifacts, &dataset, BatchPolicy::default(), shards, executors, pipeline_depth)?;
     let addr = stack.server.local_addr();
     let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
     client.ping()?;
@@ -182,7 +191,7 @@ fn run() -> Result<(), String> {
             max_wait: std::time::Duration::from_millis(5),
         }),
     ] {
-        let stack = start_stack(&artifacts, &dataset, policy, shards)?;
+        let stack = start_stack(&artifacts, &dataset, policy, shards, executors, pipeline_depth)?;
         let report = generate_load(stack.server.local_addr(), &spec, concurrency, requests);
         let occ = stack.pool.stats().occupancy();
         lines.push(format!(

@@ -1,21 +1,25 @@
-//! Pool scaling bench: sampling throughput at 1/2/4 coordinator shards
-//! over a `MockBank` whose evaluation cost is proportional to the rows
-//! it executes (emulating a device-bound denoiser, where a slab's cost
-//! scales with its batch). With one shard every round's row mass runs
-//! through one loop thread; with N shards the same mass runs N-wide, so
-//! throughput should scale until cores (or the row mass) run out.
+//! Pool scaling bench, two sweeps:
 //!
-//! Acceptance target (ISSUE 1): >= 2x throughput at 4 shards vs 1.
+//! 1. **Shard sweep** — sampling throughput at 1/2/4 coordinator shards
+//!    over a `MockBank` whose evaluation cost is proportional to the
+//!    rows it executes (emulating a device-bound denoiser). Acceptance
+//!    target (ISSUE 1): >= 2x throughput at 4 shards vs 1.
+//! 2. **Pipeline sweep** — one shard, `executors x pipeline_depth`
+//!    over a fixed-latency MockBank with one-request slabs, measuring
+//!    how much of the engine latency the pipelined scheduler hides.
+//!    CI gate (ISSUE 4): 2 executors at depth 2 must reach >= 1.3x the
+//!    serialized 1-executor depth-1 baseline.
 //!
 //! ```text
-//! cargo bench --bench bench_pool
+//! cargo bench --bench bench_pool               # full sweeps
+//! ERA_BENCH_QUICK=1 cargo bench --bench bench_pool   # CI gate only
 //! ```
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use era_solver::coordinator::service::{MockBank, ModelBank};
-use era_solver::coordinator::{CoordinatorConfig, RequestSpec};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
@@ -97,30 +101,161 @@ fn median_throughput(shards: usize, reps: usize) -> f64 {
     runs[runs.len() / 2]
 }
 
-fn main() {
-    println!(
-        "pool scaling: {REQUESTS} requests x {ROWS} rows x {NFE} NFE, \
-         row-proportional eval cost (20us/row)"
+/// MockBank wrapper with a fixed latency per evaluation regardless of
+/// rows — the cost model of a small-batch accelerator call, where the
+/// win comes from keeping several calls in flight, not from bigger
+/// slabs. Sleeping, not spinning, so executors overlap on few cores.
+struct LatencyBank {
+    inner: MockBank,
+    per_eval: Duration,
+}
+
+impl LatencyBank {
+    fn gmm8(per_eval: Duration) -> LatencyBank {
+        let sched = VpSchedule::default();
+        LatencyBank {
+            inner: MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+            per_eval,
+        }
+    }
+}
+
+impl ModelBank for LatencyBank {
+    fn sched(&self) -> VpSchedule {
+        self.inner.sched()
+    }
+
+    fn dim(&self, dataset: &str) -> Result<usize, String> {
+        self.inner.dim(dataset)
+    }
+
+    fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        std::thread::sleep(self.per_eval);
+        self.inner.eval(dataset, x, t)
+    }
+}
+
+const PIPE_REQUESTS: usize = 8;
+const PIPE_ROWS: usize = 16;
+const PIPE_NFE: usize = 10;
+const PIPE_EVAL_MS: u64 = 2;
+
+/// One shard, `executors` engine executors, `depth` rounds in flight.
+/// `max_rows = PIPE_ROWS` keeps every request its own slab, so the
+/// sweep isolates pipelining from batching.
+fn run_pipeline_once(executors: usize, depth: usize) -> f64 {
+    let bank: Arc<dyn ModelBank> =
+        Arc::new(LatencyBank::gmm8(Duration::from_millis(PIPE_EVAL_MS)));
+    let pool = WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards: 1,
+            placement: PlacementPolicy::RoundRobin,
+            shard: CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_rows: PIPE_ROWS,
+                    min_rows: 1,
+                    max_wait: Duration::from_millis(0),
+                },
+                executors_per_shard: executors,
+                pipeline_depth: depth,
+                ..Default::default()
+            },
+            max_inflight_rows: 0,
+        },
     );
-    let mut base = 0.0;
-    let mut at4 = 0.0;
-    for shards in [1usize, 2, 4] {
-        let thpt = median_throughput(shards, 3);
-        if shards == 1 {
-            base = thpt;
-        }
-        if shards == 4 {
-            at4 = thpt;
-        }
-        let speedup = if base > 0.0 { thpt / base } else { 1.0 };
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..PIPE_REQUESTS)
+        .map(|i| {
+            pool.submit(RequestSpec {
+                n_samples: PIPE_ROWS,
+                nfe: PIPE_NFE,
+                seed: i as u64,
+                ..Default::default()
+            })
+            .expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("sample");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+    (PIPE_REQUESTS * PIPE_ROWS) as f64 / wall
+}
+
+fn median_pipeline_throughput(executors: usize, depth: usize, reps: usize) -> f64 {
+    let mut runs: Vec<f64> = (0..reps).map(|_| run_pipeline_once(executors, depth)).collect();
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    runs[runs.len() / 2]
+}
+
+fn main() {
+    let quick = std::env::var("ERA_BENCH_QUICK").is_ok();
+    let reps = if quick { 3 } else { 5 };
+
+    if !quick {
         println!(
-            "BENCHLINE pool/shards={shards} throughput={thpt:.0} samples/s speedup={speedup:.2}x"
+            "pool scaling: {REQUESTS} requests x {ROWS} rows x {NFE} NFE, \
+             row-proportional eval cost (20us/row)"
+        );
+        let mut base = 0.0;
+        let mut at4 = 0.0;
+        for shards in [1usize, 2, 4] {
+            let thpt = median_throughput(shards, 3);
+            if shards == 1 {
+                base = thpt;
+            }
+            if shards == 4 {
+                at4 = thpt;
+            }
+            let speedup = if base > 0.0 { thpt / base } else { 1.0 };
+            println!(
+                "BENCHLINE pool/shards={shards} throughput={thpt:.0} samples/s \
+                 speedup={speedup:.2}x"
+            );
+        }
+        let target = 2.0;
+        let speedup = if base > 0.0 { at4 / base } else { 0.0 };
+        println!(
+            "pool 4-shard speedup {speedup:.2}x vs 1 shard — target >= {target:.1}x: {}",
+            if speedup >= target { "PASS" } else { "FAIL" }
         );
     }
-    let target = 2.0;
-    let speedup = if base > 0.0 { at4 / base } else { 0.0 };
+
     println!(
-        "pool 4-shard speedup {speedup:.2}x vs 1 shard — target >= {target:.1}x: {}",
-        if speedup >= target { "PASS" } else { "FAIL" }
+        "pipeline sweep: 1 shard, {PIPE_REQUESTS} requests x {PIPE_ROWS} rows x {PIPE_NFE} NFE, \
+         fixed {PIPE_EVAL_MS}ms/eval, one-request slabs"
+    );
+    let mut serialized = 0.0;
+    let mut gated = 0.0;
+    let sweep: &[(usize, usize)] =
+        if quick { &[(1, 1), (2, 2)] } else { &[(1, 1), (1, 2), (2, 1), (2, 2), (4, 4)] };
+    for &(executors, depth) in sweep {
+        let thpt = median_pipeline_throughput(executors, depth, reps);
+        if (executors, depth) == (1, 1) {
+            serialized = thpt;
+        }
+        if (executors, depth) == (2, 2) {
+            gated = thpt;
+        }
+        let speedup = if serialized > 0.0 { thpt / serialized } else { 1.0 };
+        println!(
+            "BENCHLINE pool/executors={executors}_depth={depth} throughput={thpt:.0} \
+             samples/s speedup={speedup:.2}x"
+        );
+    }
+    // Acceptance (ISSUE 4): the pipelined scheduler must hide enough
+    // engine latency for 2 executors at depth 2 to clearly beat the
+    // serialized baseline. The theoretical ceiling here is ~2x; 1.3x
+    // leaves room for scheduler jitter on shared CI runners.
+    let speedup = if serialized > 0.0 { gated / serialized } else { 0.0 };
+    println!(
+        "pipeline 2x2 speedup {speedup:.2}x vs serialized — target >= 1.3x: {}",
+        if speedup >= 1.3 { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        speedup >= 1.3,
+        "pipelined 2-executor/depth-2 throughput {speedup:.2}x fell below the 1.3x gate"
     );
 }

@@ -50,6 +50,12 @@ pub struct SlabSegment {
     pub source: usize,
     /// Row range inside the slab.
     pub start: usize,
+    /// Absolute row offset of this segment inside the source request's
+    /// pending evaluation. Reassembly scatters to this offset, which is
+    /// what makes stitching independent of slab *completion* order — the
+    /// pipelined scheduler may route a split request's slabs in any
+    /// order (pinned by `prop_slab_completion_order_immaterial`).
+    pub src_start: usize,
     pub rows: usize,
 }
 
@@ -81,6 +87,109 @@ pub struct Slab {
     pub segments: Vec<SlabSegment>,
 }
 
+/// Reusable backing storage of one slab (and of the scheduler's
+/// assembly tensors): the executor hands these back with every
+/// completion and the scheduler's [`SlabRecycler`] feeds them into the
+/// next `pack`, so the steady-state pipelined loop stops touching the
+/// allocator once the free list is warm.
+#[derive(Default)]
+pub struct SlabBuffers {
+    pub x: Vec<f32>,
+    pub t: Vec<f32>,
+    pub c: Vec<f32>,
+    pub segments: Vec<SlabSegment>,
+}
+
+/// Bounded free lists for slab backing buffers and split-request
+/// assembly tensors (shape-keyed). Owned by the scheduler thread — no
+/// locking; buffers travel to executors inside jobs and come back
+/// inside completions.
+pub struct SlabRecycler {
+    free: Vec<SlabBuffers>,
+    assemblies: std::collections::BTreeMap<(usize, usize), Vec<Tensor>>,
+    /// Tensors currently retained across all `assemblies` lists — the
+    /// per-shape cap alone would let a workload cycling through many
+    /// request shapes pin 16 tensors per shape forever.
+    assembly_count: usize,
+    buffer_allocs: usize,
+}
+
+/// Keep the lists bounded so a load spike cannot pin memory forever.
+const MAX_FREE_BUFFERS: usize = 64;
+const MAX_FREE_ASSEMBLIES_PER_SHAPE: usize = 16;
+const MAX_FREE_ASSEMBLIES_TOTAL: usize = 64;
+
+impl SlabRecycler {
+    pub fn new() -> SlabRecycler {
+        SlabRecycler {
+            free: Vec::new(),
+            assemblies: std::collections::BTreeMap::new(),
+            assembly_count: 0,
+            buffer_allocs: 0,
+        }
+    }
+
+    /// Buffer sets handed out that required fresh allocation (steady
+    /// state: stops growing once the pipeline's working set is warm).
+    pub fn buffer_allocs(&self) -> usize {
+        self.buffer_allocs
+    }
+
+    pub fn take_buffers(&mut self) -> SlabBuffers {
+        match self.free.pop() {
+            Some(b) => b,
+            None => {
+                self.buffer_allocs += 1;
+                SlabBuffers::default()
+            }
+        }
+    }
+
+    pub fn give_buffers(&mut self, mut b: SlabBuffers) {
+        if self.free.len() >= MAX_FREE_BUFFERS {
+            return;
+        }
+        b.x.clear();
+        b.t.clear();
+        b.c.clear();
+        b.segments.clear();
+        self.free.push(b);
+    }
+
+    /// Assembly tensor for a split request's eps. Contents are
+    /// unspecified — every row is scattered exactly once before the
+    /// tensor is delivered (the scheduler asserts `filled == rows`).
+    pub fn take_assembly(&mut self, rows: usize, cols: usize) -> Tensor {
+        match self.assemblies.get_mut(&(rows, cols)).and_then(|v| v.pop()) {
+            Some(t) => {
+                self.assembly_count -= 1;
+                t
+            }
+            None => Tensor::zeros(rows, cols),
+        }
+    }
+
+    /// Return an assembly tensor that was never delivered (failed or
+    /// cancelled request) for reuse.
+    pub fn give_assembly(&mut self, t: Tensor) {
+        if self.assembly_count >= MAX_FREE_ASSEMBLIES_TOTAL {
+            return;
+        }
+        let key = (t.rows(), t.cols());
+        let list = self.assemblies.entry(key).or_default();
+        if list.len() < MAX_FREE_ASSEMBLIES_PER_SHAPE {
+            list.push(t);
+            self.assembly_count += 1;
+        }
+    }
+}
+
+impl Default for SlabRecycler {
+    fn default() -> Self {
+        SlabRecycler::new()
+    }
+}
+
 impl Slab {
     /// The fused input tensor (either view resolves to `&Tensor`).
     pub fn x(&self) -> &Tensor {
@@ -107,6 +216,23 @@ impl Slab {
     pub fn is_shared(&self) -> bool {
         matches!(self.x, SlabX::Shared(_))
     }
+
+    /// Decompose a spent slab: the segments (for completion routing)
+    /// and the recyclable backing buffers. Dropping the `Shared` arcs
+    /// here — on the executor thread, *before* the completion is sent —
+    /// is what keeps the solver's copy-on-write iterate refcount at one
+    /// when the scheduler delivers, preserving the zero-alloc step.
+    pub fn into_recycle(self) -> (Vec<SlabSegment>, SlabBuffers) {
+        let x = match self.x {
+            SlabX::Shared(_) => Vec::new(),
+            SlabX::Packed(t) => t.into_vec(),
+        };
+        let c = match self.c {
+            SlabC::Shared(_) => Vec::new(),
+            SlabC::Packed(v) => v,
+        };
+        (self.segments, SlabBuffers { x, t: self.t, c, segments: Vec::new() })
+    }
 }
 
 /// The full dispatch plan for one round.
@@ -132,72 +258,21 @@ impl Batcher {
     /// `max_rows` are split across consecutive slabs. First-come
     /// first-packed; no reordering within a request.
     pub fn pack(&self, pending: &[(usize, &EvalRequest)]) -> BatchPlan {
+        self.pack_recycled(pending, &mut SlabRecycler::new())
+    }
+
+    /// Like [`Batcher::pack`] but drawing slab backing buffers from a
+    /// [`SlabRecycler`] — the pipelined scheduler's steady-state path,
+    /// where every packed slab reuses the storage of a completed one.
+    pub fn pack_recycled(
+        &self,
+        pending: &[(usize, &EvalRequest)],
+        rec: &mut SlabRecycler,
+    ) -> BatchPlan {
         let mut slabs: Vec<Slab> = Vec::new();
         let mut cur_rows: Vec<(usize, usize, usize)> = Vec::new(); // (source, row_off, n)
         let mut cur_count = 0usize;
         let mut total = 0usize;
-
-        let find = |src: usize| pending.iter().find(|(i, _)| *i == src).map(|(_, r)| *r).unwrap();
-        let flush =
-            |cur: &mut Vec<(usize, usize, usize)>, count: &mut usize, slabs: &mut Vec<Slab>| {
-                if cur.is_empty() {
-                    return;
-                }
-                // Zero-copy fast path: one segment covering one whole
-                // request ships the request's Arc directly.
-                if cur.len() == 1 {
-                    let (src, off, n) = cur[0];
-                    let req = find(src);
-                    if off == 0 && n == req.x.rows() {
-                        let t = vec![req.t as f32; n];
-                        let c = match &req.cond {
-                            // Trajectory-constant channel: refcount, not copy.
-                            Some(cond) => SlabC::Shared(Arc::clone(cond)),
-                            None => SlabC::Packed(vec![UNCOND; n]),
-                        };
-                        slabs.push(Slab {
-                            x: SlabX::Shared(Arc::clone(&req.x)),
-                            t,
-                            c,
-                            segments: vec![SlabSegment { source: src, start: 0, rows: n }],
-                        });
-                        cur.clear();
-                        *count = 0;
-                        return;
-                    }
-                }
-                let dim = find(cur[0].0).x.cols();
-                let mut x = Vec::with_capacity(*count * dim);
-                let mut t = Vec::with_capacity(*count);
-                let mut c = Vec::with_capacity(*count);
-                let mut segments = Vec::with_capacity(cur.len());
-                let mut at = 0usize;
-                for &(src, off, n) in cur.iter() {
-                    let req = find(src);
-                    // One contiguous copy per segment (rows are adjacent
-                    // in the row-major layout).
-                    fused::gather_rows(&mut x, &req.x, off, n);
-                    t.resize(t.len() + n, req.t as f32);
-                    // The conditioning channel follows the same row
-                    // split as the tensor, so cond/uncond pairing is a
-                    // pure function of row order and survives any slab
-                    // mix (pinned by the pairing proptest).
-                    match &req.cond {
-                        Some(cond) => c.extend_from_slice(&cond[off..off + n]),
-                        None => c.resize(c.len() + n, UNCOND),
-                    }
-                    segments.push(SlabSegment { source: src, start: at, rows: n });
-                    at += n;
-                }
-                slabs.push(Slab {
-                    x: SlabX::Packed(Tensor::from_vec(x, *count, dim)),
-                    t,
-                    c: SlabC::Packed(c),
-                    segments,
-                });
-                cur.clear();
-                *count = 0;
-            };
 
         for &(idx, req) in pending {
             let mut off = 0;
@@ -205,7 +280,7 @@ impl Batcher {
             while off < rows {
                 let space = self.policy.max_rows - cur_count;
                 if space == 0 {
-                    flush(&mut cur_rows, &mut cur_count, &mut slabs);
+                    flush_slab(pending, &mut cur_rows, &mut cur_count, &mut slabs, rec);
                     continue;
                 }
                 let take = space.min(rows - off);
@@ -215,7 +290,7 @@ impl Batcher {
                 off += take;
             }
         }
-        flush(&mut cur_rows, &mut cur_count, &mut slabs);
+        flush_slab(pending, &mut cur_rows, &mut cur_count, &mut slabs, rec);
         BatchPlan { slabs, rows: total }
     }
 
@@ -232,6 +307,81 @@ impl Batcher {
             .map(|seg| (seg.source, out.slice_rows(seg.start, seg.rows)))
             .collect()
     }
+}
+
+/// Close out the accumulated `(source, row_off, n)` ranges as one slab.
+fn flush_slab(
+    pending: &[(usize, &EvalRequest)],
+    cur: &mut Vec<(usize, usize, usize)>,
+    count: &mut usize,
+    slabs: &mut Vec<Slab>,
+    rec: &mut SlabRecycler,
+) {
+    if cur.is_empty() {
+        return;
+    }
+    let find = |src: usize| pending.iter().find(|(i, _)| *i == src).map(|(_, r)| *r).unwrap();
+    // Zero-copy fast path: one segment covering one whole request ships
+    // the request's Arc directly.
+    if cur.len() == 1 {
+        let (src, off, n) = cur[0];
+        let req = find(src);
+        if off == 0 && n == req.x.rows() {
+            let mut b = rec.take_buffers();
+            let mut t = std::mem::take(&mut b.t);
+            t.resize(n, req.t as f32);
+            let mut segments = std::mem::take(&mut b.segments);
+            segments.push(SlabSegment { source: src, start: 0, src_start: 0, rows: n });
+            let c = match &req.cond {
+                // Trajectory-constant channel: refcount, not copy.
+                Some(cond) => SlabC::Shared(Arc::clone(cond)),
+                None => {
+                    let mut c = std::mem::take(&mut b.c);
+                    c.resize(n, UNCOND);
+                    SlabC::Packed(c)
+                }
+            };
+            // The unused members keep their capacity for the next slab.
+            rec.give_buffers(b);
+            slabs.push(Slab { x: SlabX::Shared(Arc::clone(&req.x)), t, c, segments });
+            cur.clear();
+            *count = 0;
+            return;
+        }
+    }
+    let dim = find(cur[0].0).x.cols();
+    let mut b = rec.take_buffers();
+    let mut x = std::mem::take(&mut b.x);
+    let mut t = std::mem::take(&mut b.t);
+    let mut c = std::mem::take(&mut b.c);
+    let mut segments = std::mem::take(&mut b.segments);
+    x.reserve(*count * dim);
+    let mut at = 0usize;
+    for &(src, off, n) in cur.iter() {
+        let req = find(src);
+        // One contiguous copy per segment (rows are adjacent in the
+        // row-major layout).
+        fused::gather_rows(&mut x, &req.x, off, n);
+        t.resize(t.len() + n, req.t as f32);
+        // The conditioning channel follows the same row split as the
+        // tensor, so cond/uncond pairing is a pure function of row
+        // order and survives any slab mix (pinned by the pairing
+        // proptest).
+        match &req.cond {
+            Some(cond) => c.extend_from_slice(&cond[off..off + n]),
+            None => c.resize(c.len() + n, UNCOND),
+        }
+        segments.push(SlabSegment { source: src, start: at, src_start: off, rows: n });
+        at += n;
+    }
+    slabs.push(Slab {
+        x: SlabX::Packed(Tensor::from_vec(x, *count, dim)),
+        t,
+        c: SlabC::Packed(c),
+        segments,
+    });
+    cur.clear();
+    *count = 0;
 }
 
 #[cfg(test)]
@@ -279,8 +429,8 @@ mod tests {
         assert_eq!(
             slab.segments,
             vec![
-                SlabSegment { source: 0, start: 0, rows: 3 },
-                SlabSegment { source: 1, start: 3, rows: 4 }
+                SlabSegment { source: 0, start: 0, src_start: 0, rows: 3 },
+                SlabSegment { source: 1, start: 3, src_start: 0, rows: 4 }
             ]
         );
     }
@@ -295,7 +445,10 @@ mod tests {
         // Same allocation, not an equal copy.
         assert!(std::ptr::eq(slab.x().as_slice().as_ptr(), a.x.as_slice().as_ptr()));
         assert_eq!(slab.t, vec![0.7f32; 5]);
-        assert_eq!(slab.segments, vec![SlabSegment { source: 3, start: 0, rows: 5 }]);
+        assert_eq!(
+            slab.segments,
+            vec![SlabSegment { source: 3, start: 0, src_start: 0, rows: 5 }]
+        );
     }
 
     #[test]
@@ -310,8 +463,14 @@ mod tests {
         // whole request, so both gather.
         assert!(!plan.slabs[0].is_shared());
         assert!(!plan.slabs[1].is_shared());
-        assert_eq!(plan.slabs[0].segments[1], SlabSegment { source: 1, start: 5, rows: 1 });
-        assert_eq!(plan.slabs[1].segments[0], SlabSegment { source: 1, start: 0, rows: 4 });
+        assert_eq!(
+            plan.slabs[0].segments[1],
+            SlabSegment { source: 1, start: 5, src_start: 0, rows: 1 }
+        );
+        assert_eq!(
+            plan.slabs[1].segments[0],
+            SlabSegment { source: 1, start: 0, src_start: 1, rows: 4 }
+        );
     }
 
     #[test]
@@ -379,6 +538,94 @@ mod tests {
         assert_eq!(plan.slabs.len(), 2);
         assert_eq!(plan.slabs[0].c(), &[5.0, 5.0, crate::solvers::UNCOND]);
         assert_eq!(plan.slabs[1].c(), &[crate::solvers::UNCOND]);
+    }
+
+    #[test]
+    fn src_start_walks_the_source_request() {
+        // A request split across slabs carries its absolute row offset
+        // in every segment, so reassembly needs no completion order.
+        let a = req(20, 3, 0.7, 1.0);
+        let plan = batcher(8).pack(&[(0, &a)]);
+        let offs: Vec<usize> = plan
+            .slabs
+            .iter()
+            .flat_map(|s| s.segments.iter().map(|seg| seg.src_start))
+            .collect();
+        assert_eq!(offs, vec![0, 8, 16]);
+    }
+
+    #[test]
+    fn recycler_stops_allocating_once_warm() {
+        let a = req(5, 2, 0.5, 1.0);
+        let b = req(5, 2, 0.2, 2.0);
+        let mut rec = SlabRecycler::new();
+        let mut warm_allocs = 0;
+        for round in 0..4 {
+            let plan = batcher(6).pack_recycled(&[(0, &a), (1, &b)], &mut rec);
+            assert_eq!(plan.slabs.len(), 2);
+            for slab in plan.slabs {
+                let (_segments, bufs) = slab.into_recycle();
+                rec.give_buffers(bufs);
+            }
+            if round == 0 {
+                warm_allocs = rec.buffer_allocs();
+            }
+        }
+        assert_eq!(
+            rec.buffer_allocs(),
+            warm_allocs,
+            "steady-state packing must reuse the free list"
+        );
+    }
+
+    #[test]
+    fn recycler_assemblies_are_shape_keyed() {
+        let mut rec = SlabRecycler::new();
+        let t = rec.take_assembly(4, 2);
+        assert_eq!((t.rows(), t.cols()), (4, 2));
+        rec.give_assembly(t);
+        let again = rec.take_assembly(4, 2);
+        assert_eq!((again.rows(), again.cols()), (4, 2));
+        let other = rec.take_assembly(3, 5);
+        assert_eq!((other.rows(), other.cols()), (3, 5));
+    }
+
+    #[test]
+    fn recycler_assembly_retention_is_bounded_across_shapes() {
+        // A workload cycling through many request shapes must not pin
+        // tensors without bound: the total cap holds across shapes.
+        let mut rec = SlabRecycler::new();
+        for shape in 0..200usize {
+            rec.give_assembly(Tensor::zeros(shape + 1, 2));
+        }
+        assert_eq!(rec.assembly_count, super::MAX_FREE_ASSEMBLIES_TOTAL);
+        // Takes release budget for later gives.
+        let _ = rec.take_assembly(1, 2);
+        rec.give_assembly(Tensor::zeros(500, 2));
+        assert_eq!(rec.assembly_count, super::MAX_FREE_ASSEMBLIES_TOTAL);
+    }
+
+    #[test]
+    fn into_recycle_returns_packed_backing() {
+        let a = req(3, 2, 0.9, 1.0);
+        let b = req(4, 2, 0.4, 2.0);
+        let plan = batcher(16).pack(&[(0, &a), (1, &b)]);
+        let slab = plan.slabs.into_iter().next().unwrap();
+        assert!(!slab.is_shared());
+        let (segments, bufs) = slab.into_recycle();
+        assert_eq!(segments.len(), 2);
+        assert_eq!(bufs.x.len(), 7 * 2);
+        assert_eq!(bufs.t.len(), 7);
+        assert_eq!(bufs.c.len(), 7);
+
+        // A shared slab surrenders its refcounts and keeps the t buffer.
+        let plan = batcher(16).pack(&[(0, &a)]);
+        let slab = plan.slabs.into_iter().next().unwrap();
+        assert!(slab.is_shared());
+        let (segments, bufs) = slab.into_recycle();
+        assert_eq!(segments[0].src_start, 0);
+        assert!(bufs.x.is_empty());
+        assert_eq!(bufs.t.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! The engine-executor pool behind one coordinator shard.
+//!
+//! The pipelined shard splits the old single loop thread into an
+//! event-driven **scheduler** (`service::run_loop`) and `E` **executor**
+//! threads spawned here. Executors pull packed [`Slab`]s from a bounded
+//! job queue, run them through their own [`ModelBank`] handle (a
+//! [`BankSet`] replica), and send sequence-numbered [`SlabCompletion`]s
+//! back — so the scheduler keeps admitting, sweeping cancellations,
+//! stepping solvers, and packing the next slabs while evaluations are
+//! in flight, and one shard can drive several engine replicas at once.
+//!
+//! Two contracts matter for correctness:
+//!
+//! * the executor drops the slab's input buffers (including any
+//!   zero-copy `Arc<Tensor>` of a request iterate) **before** sending
+//!   the completion, so by the time the scheduler delivers the eps the
+//!   solver's copy-on-write refcount is back to one — the zero-alloc
+//!   steady state of `bench_step_overhead` survives pipelining;
+//! * a model output whose row count does not match the slab is a
+//!   **per-slab error**, not a panic: it fails only that slab's
+//!   requests through the scheduler's failure path and the shard keeps
+//!   serving (previously an `assert_eq!` poisoned the whole loop
+//!   thread and every batch-mate with it).
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{Slab, SlabBuffers, SlabSegment};
+use crate::coordinator::service::ModelBank;
+use crate::coordinator::telemetry::Telemetry;
+use crate::tensor::Tensor;
+
+/// The model-bank replicas available to one shard's executors.
+///
+/// Generalizes `WorkerPool::start_with_banks`: engine replicas can now
+/// live *within* a shard (one per executor thread) as well as across
+/// shards. A set of one shared handle is the common case — `MockBank`
+/// is stateless and `PjRtEngine` serialises internally — while
+/// per-executor replicas let E executors drive E devices.
+#[derive(Clone)]
+pub struct BankSet {
+    banks: Vec<Arc<dyn ModelBank>>,
+}
+
+impl BankSet {
+    /// A set over explicit replicas (one per executor; executors beyond
+    /// `banks.len()` share, round-robin).
+    pub fn new(banks: Vec<Arc<dyn ModelBank>>) -> BankSet {
+        assert!(!banks.is_empty(), "bank set needs at least one bank");
+        BankSet { banks }
+    }
+
+    /// The common case: every executor shares one bank handle.
+    pub fn shared(bank: Arc<dyn ModelBank>) -> BankSet {
+        BankSet { banks: vec![bank] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banks.is_empty() // construction forbids it; here for clippy symmetry
+    }
+
+    /// The bank the scheduler consults for admission-time metadata
+    /// (schedule, dims, conditional support). All replicas of a set
+    /// must agree on these.
+    pub fn primary(&self) -> &Arc<dyn ModelBank> {
+        &self.banks[0]
+    }
+
+    /// The bank executor `i` owns (round-robin over replicas).
+    pub fn for_executor(&self, i: usize) -> Arc<dyn ModelBank> {
+        self.banks[i % self.banks.len()].clone()
+    }
+}
+
+/// One packed slab on its way to an executor.
+pub struct SlabJob {
+    /// Monotone per-shard dispatch sequence number.
+    pub seq: u64,
+    /// Dispatch round (one scheduler pack cycle) this slab belongs to;
+    /// the scheduler caps in-flight rounds at `pipeline_depth`.
+    pub round: u64,
+    /// Shared dataset-name handle (one allocation per dataset group
+    /// per round; per-slab copies are refcount bumps).
+    pub dataset: Arc<str>,
+    pub slab: Slab,
+}
+
+/// An executed slab on its way back to the scheduler. Carries
+/// everything routing needs so the scheduler never touches the bank.
+pub struct SlabCompletion {
+    pub seq: u64,
+    pub round: u64,
+    /// The slab's segments (with absolute `src_start` offsets), moved
+    /// out of the slab so reassembly survives out-of-order delivery.
+    pub segments: Vec<SlabSegment>,
+    /// Rows the slab carried.
+    pub rows: usize,
+    /// Rows the engine actually executed (bucket padding telemetry).
+    pub executed_rows: usize,
+    /// Wall nanoseconds inside the model evaluation.
+    pub eval_nanos: u64,
+    /// The model output (row count already validated), or the per-slab
+    /// error that fails only this slab's requests.
+    pub result: Result<Tensor, String>,
+    /// Recyclable backing buffers of the spent slab.
+    pub buffers: SlabBuffers,
+}
+
+/// Handle to a shard's executor threads. Dropping the job sender (via
+/// [`ExecutorPool::shutdown`]) stops them once the queue drains.
+pub struct ExecutorPool {
+    jobs: SyncSender<SlabJob>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `count` executors over the bank set. `queue_cap` bounds
+    /// the job queue (the completion channel is unbounded, so a full
+    /// job queue can only ever stall the scheduler, never deadlock it).
+    pub fn spawn(
+        banks: &BankSet,
+        count: usize,
+        queue_cap: usize,
+        completions: Sender<SlabCompletion>,
+        tele: Arc<Telemetry>,
+    ) -> ExecutorPool {
+        let count = count.max(1);
+        let (tx, rx) = sync_channel::<SlabJob>(queue_cap.max(1));
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let handles = (0..count)
+            .map(|i| {
+                let bank = banks.for_executor(i);
+                let rx = shared_rx.clone();
+                let completions = completions.clone();
+                let tele = tele.clone();
+                std::thread::Builder::new()
+                    .name(format!("era-executor-{i}"))
+                    .spawn(move || executor_loop(bank, rx, completions, tele))
+                    .expect("spawn executor")
+            })
+            .collect();
+        ExecutorPool { jobs: tx, handles }
+    }
+
+    /// Queue one slab for evaluation; blocks when the queue is full.
+    /// Returns false only when every executor has exited.
+    pub fn dispatch(&self, job: SlabJob) -> bool {
+        self.jobs.send(job).is_ok()
+    }
+
+    /// Close the queue and join the executors (in-flight slabs finish
+    /// and their completions are delivered first).
+    pub fn shutdown(self) {
+        drop(self.jobs);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    bank: Arc<dyn ModelBank>,
+    jobs: Arc<Mutex<Receiver<SlabJob>>>,
+    completions: Sender<SlabCompletion>,
+    tele: Arc<Telemetry>,
+) {
+    loop {
+        let idle0 = Instant::now();
+        // Classic shared-receiver worker: the lock is held only while
+        // this thread is the one blocked on recv; the next waiter takes
+        // the mutex as soon as a job is handed out.
+        let job = match jobs.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break,
+        };
+        tele.executor_idle_nanos
+            .fetch_add(idle0.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => break, // queue closed: shard is shutting down
+        };
+
+        let busy0 = Instant::now();
+        let rows = job.slab.rows();
+        // A panicking bank must not kill the executor thread: an
+        // unsent completion would wedge the slab's requests forever
+        // (sweep/finalize wait for inflight_slabs == 0). Contain it to
+        // a per-slab error like any other evaluation failure.
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            bank.eval_cond(&job.dataset, job.slab.x(), &job.slab.t, job.slab.c())
+        }))
+        .unwrap_or_else(|_| Err("model evaluation panicked".into()));
+        let eval_nanos = busy0.elapsed().as_nanos() as u64;
+        // Row-count contract with the engine: a silent mismatch would
+        // truncate or misalign eps rows. Fail the slab, not the shard.
+        let result = out.and_then(|o| {
+            if o.rows() == rows {
+                Ok(o)
+            } else {
+                Err(format!(
+                    "model returned {} rows for a {rows}-row slab",
+                    o.rows()
+                ))
+            }
+        });
+        let executed_rows = bank.executed_rows(rows);
+        // Surrender the slab's input refcounts *before* the completion
+        // becomes visible (see module docs).
+        let (segments, buffers) = job.slab.into_recycle();
+        tele.executor_busy_nanos
+            .fetch_add(busy0.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+        let sent = completions.send(SlabCompletion {
+            seq: job.seq,
+            round: job.round,
+            segments,
+            rows,
+            executed_rows,
+            eval_nanos,
+            result,
+            buffers,
+        });
+        if sent.is_err() {
+            break; // scheduler gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchPolicy, Batcher};
+    use crate::coordinator::MockBank;
+    use crate::solvers::eps_model::AnalyticGmm;
+    use crate::solvers::schedule::VpSchedule;
+    use crate::solvers::EvalRequest;
+
+    fn bank() -> Arc<dyn ModelBank> {
+        let sched = VpSchedule::default();
+        Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))))
+    }
+
+    fn eval_req(rows: usize, t: f64) -> EvalRequest {
+        let mut v = Vec::with_capacity(rows * 2);
+        for r in 0..rows {
+            v.push(r as f32);
+            v.push(t as f32);
+        }
+        EvalRequest { x: Arc::new(Tensor::from_vec(v, rows, 2)), t, cond: None }
+    }
+
+    #[test]
+    fn bank_set_cycles_replicas() {
+        let set = BankSet::new(vec![bank(), bank()]);
+        assert_eq!(set.len(), 2);
+        assert!(Arc::ptr_eq(&set.for_executor(0), &set.for_executor(2)));
+        assert!(Arc::ptr_eq(&set.for_executor(1), &set.for_executor(3)));
+        assert!(!Arc::ptr_eq(&set.for_executor(0), &set.for_executor(1)));
+        let shared = BankSet::shared(bank());
+        assert!(Arc::ptr_eq(&shared.for_executor(0), &shared.for_executor(7)));
+    }
+
+    #[test]
+    fn executors_evaluate_and_complete_out_of_band() {
+        let tele = Arc::new(Telemetry::new());
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let pool = ExecutorPool::spawn(&BankSet::shared(bank()), 2, 8, ctx, tele.clone());
+        let reqs: Vec<EvalRequest> = (0..3).map(|i| eval_req(4, 0.5 + 0.1 * i as f64)).collect();
+        let batcher = Batcher::new(BatchPolicy { max_rows: 4, ..Default::default() });
+        for (seq, req) in reqs.iter().enumerate() {
+            let plan = batcher.pack(&[(seq, req)]);
+            for slab in plan.slabs {
+                assert!(pool.dispatch(SlabJob {
+                    seq: seq as u64,
+                    round: 0,
+                    dataset: "gmm8".into(),
+                    slab,
+                }));
+            }
+        }
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let c = crx.recv().expect("completion");
+            assert_eq!(c.rows, 4);
+            let out = c.result.expect("eval ok");
+            assert_eq!(out.rows(), 4);
+            seen.push(c.seq);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        pool.shutdown();
+        assert!(tele.executor_busy_nanos.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn unknown_dataset_is_a_slab_error_not_a_panic() {
+        let tele = Arc::new(Telemetry::new());
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let pool = ExecutorPool::spawn(&BankSet::shared(bank()), 1, 2, ctx, tele);
+        let req = eval_req(2, 0.5);
+        let plan = Batcher::new(BatchPolicy::default()).pack(&[(0, &req)]);
+        for slab in plan.slabs {
+            pool.dispatch(SlabJob { seq: 0, round: 0, dataset: "nope".into(), slab });
+        }
+        let c = crx.recv().expect("completion");
+        assert!(c.result.is_err());
+        pool.shutdown();
+    }
+}

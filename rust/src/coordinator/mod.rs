@@ -14,20 +14,29 @@
 //! * [`request`] — the request/response types and per-request state
 //!   machine wrapper around a [`crate::solvers::Solver`].
 //! * [`batcher`]  — pure batch assembly: pack pending per-request
-//!   evaluations into bucket-sized slabs (with per-row times), unpack
-//!   model output back to requests. Unit-testable without PJRT.
-//! * [`telemetry`] — counters + latency/occupancy recorders feeding the
-//!   serving benches (Tab. 7).
-//! * [`service`] — the engine loop: admission queue with backpressure,
-//!   round-based stepping, dispatch policy (max-rows / max-wait), and
-//!   the public [`service::Coordinator`] handle.
+//!   evaluations into bucket-sized slabs (with per-row times and
+//!   absolute `src_start` reassembly offsets), unpack model output back
+//!   to requests, recycle slab buffers. Unit-testable without PJRT.
+//! * [`telemetry`] — counters + latency/occupancy/executor-utilisation
+//!   recorders feeding the serving benches (Tab. 7).
+//! * [`executor`] — the per-shard engine-executor pool: `E` threads,
+//!   each owning a [`executor::BankSet`] replica handle, evaluating
+//!   sequence-numbered slabs off a bounded queue.
+//! * [`service`] — the event-driven scheduler: admission queue with
+//!   backpressure, cancellation sweeps, dispatch policy (max-rows /
+//!   max-wait / pipeline depth), slab dispatch + out-of-order
+//!   completion routing, and the public [`service::Coordinator`]
+//!   handle. Up to `pipeline_depth` dispatch rounds stay in flight, so
+//!   host-side scheduling overlaps engine execution.
 
 pub mod batcher;
+pub mod executor;
 pub mod request;
 pub mod service;
 pub mod telemetry;
 
 pub use batcher::{BatchPlan, Batcher, BatchPolicy};
+pub use executor::BankSet;
 pub use request::{RequestSpec, RequestState, SamplingResult};
 pub use service::{
     CancelHandle, Coordinator, CoordinatorConfig, MockBank, ModelBank, SubmitError, Ticket,

@@ -1,35 +1,44 @@
-//! The coordinator engine loop: admission with backpressure, round-based
-//! continuous batching, and the public [`Coordinator`] handle.
+//! The coordinator shard: an event-driven **scheduler** thread feeding
+//! a pool of **engine executors**, plus the public [`Coordinator`]
+//! handle.
 //!
-//! One dedicated loop thread owns every [`RequestState`]. Each round it
-//! (1) admits queued requests up to `max_active`, (2) retires requests
-//! whose [`CancelHandle`] fired or whose deadline expired (mid-trajectory,
-//! without touching batch-mates), (3) pulls the next evaluation from every
-//! active solver, (4) optionally lingers up to `max_wait` for batch-mates
-//! when under `min_rows`, (5) packs all pending evaluations *per dataset*
-//! into slabs and runs them through the [`ModelBank`], (6) routes outputs
-//! back and retires finished requests. Requests join and leave the
-//! running batch at step granularity — continuous batching in the vLLM
-//! sense, applied to diffusion sampling.
+//! The scheduler thread owns every [`RequestState`]. Each tick it
+//! (1) routes slab completions arriving from the executors (scattering
+//! split-request segments to absolute offsets, so completion order is
+//! immaterial), (2) admits queued requests up to `max_active`,
+//! (3) sweeps cancellations/deadlines — retiring any request no
+//! in-flight slab references, mid-trajectory, without touching
+//! batch-mates, (4) pulls the next evaluation from every ready solver,
+//! (5) optionally lingers up to `max_wait` for batch-mates when under
+//! `min_rows` (the wait stays cancellation-aware), and (6) packs ready
+//! evaluations *per dataset* into slabs and dispatches them to the
+//! executor pool ([`crate::coordinator::executor`]). Up to
+//! `pipeline_depth` dispatch rounds stay in flight, so admission,
+//! solver stepping, and packing overlap engine execution, and a shard
+//! with `executors_per_shard > 1` evaluates several slabs
+//! concurrently. Requests join and leave the running batch at step
+//! granularity — continuous batching in the vLLM sense, applied to
+//! diffusion sampling.
 //!
-//! A [`crate::pool::WorkerPool`] runs N of these loops as shards behind
-//! one router; the `inflight_*` telemetry gauges updated here are what
-//! its least-loaded placement and global admission control read.
+//! A [`crate::pool::WorkerPool`] runs N of these shards behind one
+//! router; the `inflight_*` telemetry gauges updated here are what its
+//! least-loaded placement and global admission control read.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, BatchPolicy};
+use crate::coordinator::batcher::{Batcher, BatchPolicy, SlabRecycler};
+use crate::coordinator::executor::{BankSet, ExecutorPool, SlabCompletion, SlabJob};
 use crate::coordinator::request::{RequestSpec, RequestState, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
 use crate::kernels::{fused, PlanCache};
 use crate::runtime::PjRtEngine;
 use crate::solvers::schedule::VpSchedule;
-use crate::solvers::EpsModel;
+use crate::solvers::{EpsModel, EvalRequest};
 use crate::tensor::Tensor;
 
 /// What the loop evaluates against: a named family of denoisers.
@@ -149,6 +158,14 @@ pub struct CoordinatorConfig {
     /// Deadline applied to requests whose spec carries none
     /// (`None` = requests without their own deadline never expire).
     pub default_deadline: Option<Duration>,
+    /// Engine-executor threads per shard (>= 1). Each executor owns a
+    /// [`crate::coordinator::executor::BankSet`] replica handle, so a
+    /// shard with E executors can evaluate E slabs concurrently.
+    pub executors_per_shard: usize,
+    /// Max dispatch rounds in flight (>= 1). Depth 1 reproduces the
+    /// old serialized pack→eval→route cycle exactly; deeper pipelines
+    /// overlap host-side scheduling with engine execution.
+    pub pipeline_depth: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -158,13 +175,17 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             policy: BatchPolicy::default(),
             default_deadline: None,
+            executors_per_shard: 1,
+            pipeline_depth: 1,
         }
     }
 }
 
 /// Cooperative cancellation flag shared by the client handle and the
-/// shard loop. Cancelling is a one-way latch: the loop retires the
-/// request at its next round boundary (between solver steps), replies
+/// shard scheduler. Cancelling is a one-way latch: the scheduler
+/// retires the request as soon as no in-flight slab references it
+/// (within the current tick when idle; on the final slab completion
+/// when one is out, whose output is then dropped undelivered), replies
 /// with the partial iterate, and batch-mates are untouched.
 #[derive(Clone, Debug, Default)]
 pub struct CancelHandle(Arc<AtomicBool>);
@@ -238,7 +259,8 @@ impl Ticket {
         self.rx.recv_timeout(d).ok()
     }
 
-    /// Ask the loop to retire this request at its next round boundary.
+    /// Ask the scheduler to retire this request as soon as no in-flight
+    /// slab references it.
     pub fn cancel(&self) {
         self.cancel.cancel();
     }
@@ -259,8 +281,20 @@ impl Coordinator {
     /// Spawn the engine loop sharing an external [`PlanCache`] — the
     /// pool hands every shard the same cache so trajectory plans are
     /// computed once per configuration across the whole deployment.
+    /// Every executor of the shard shares the one `bank` handle.
     pub fn start_with_plans(
         bank: Arc<dyn ModelBank>,
+        config: CoordinatorConfig,
+        plans: Arc<PlanCache>,
+    ) -> Self {
+        Coordinator::start_with_bank_set(BankSet::shared(bank), config, plans)
+    }
+
+    /// Spawn the scheduler + executor pool over an explicit [`BankSet`]
+    /// — per-executor engine replicas *within* the shard (executors
+    /// beyond the set's length share round-robin).
+    pub fn start_with_bank_set(
+        banks: BankSet,
         config: CoordinatorConfig,
         plans: Arc<PlanCache>,
     ) -> Self {
@@ -271,7 +305,7 @@ impl Coordinator {
         let default_deadline = config.default_deadline;
         let handle = std::thread::Builder::new()
             .name("era-coordinator".into())
-            .spawn(move || run_loop(bank, config, rx, tele, loop_plans))
+            .spawn(move || run_loop(banks, config, rx, tele, loop_plans))
             .expect("spawn coordinator");
         Coordinator {
             tx: Some(tx),
@@ -372,6 +406,21 @@ struct Active {
     deadline: Option<Instant>,
     /// Rows this request pinned in the inflight gauges at submit.
     rows: usize,
+    /// Slabs of the currently dispatched evaluation still out at the
+    /// executors. While > 0 the request's slot must stay stable and the
+    /// request cannot be retired (the cancellation point is "no
+    /// in-flight slab references the request").
+    inflight_slabs: usize,
+    /// Rows of the dispatched evaluation (`pending_rows` at dispatch).
+    expect_rows: usize,
+    /// Reassembly buffer for the dispatched evaluation: `(eps, rows
+    /// filled)`. Whole-request slabs adopt the engine output outright;
+    /// split requests scatter each completed segment to its absolute
+    /// `src_start` offset, so completion order is immaterial.
+    assembly: Option<(Tensor, usize)>,
+    /// First slab error of the dispatched evaluation, if any. A
+    /// partially failed evaluation is never delivered.
+    failed: Option<String>,
 }
 
 /// Retire a request with a result (normal completion or cancellation),
@@ -397,26 +446,72 @@ fn retire_err(done: Active, tele: &Telemetry, err: String) {
     let _ = done.reply.send(Err(err));
 }
 
-fn run_loop(
-    bank: Arc<dyn ModelBank>,
-    config: CoordinatorConfig,
-    rx: Receiver<Envelope>,
+/// The scheduler's request table and pipeline bookkeeping.
+///
+/// Slots are **stable**: a retired request's slot becomes `None` and is
+/// recycled through `free_slots`, so the slot indices carried by
+/// in-flight slab segments stay valid however many batch-mates retire
+/// while an evaluation is out (the old loop's `swap_remove` indices
+/// could not survive pipelining).
+struct Scheduler {
+    slots: Vec<Option<Active>>,
+    free_slots: Vec<usize>,
+    active_count: usize,
     tele: Arc<Telemetry>,
-    plans: Arc<PlanCache>,
-) {
-    let batcher = Batcher::new(config.policy);
-    let mut active: Vec<Active> = Vec::new();
-    let mut queue_open = true;
+    recycler: SlabRecycler,
+    /// Dispatch round -> slabs still in flight from it. The window cap
+    /// is `pipeline_depth` rounds.
+    rounds: BTreeMap<u64, usize>,
+    next_seq: u64,
+    next_round: u64,
+}
 
-    let admit = |env: Envelope, active: &mut Vec<Active>, tele: &Telemetry| {
+impl Scheduler {
+    fn new(tele: Arc<Telemetry>) -> Scheduler {
+        Scheduler {
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            active_count: 0,
+            tele,
+            recycler: SlabRecycler::new(),
+            rounds: BTreeMap::new(),
+            next_seq: 0,
+            next_round: 0,
+        }
+    }
+
+    fn insert(&mut self, a: Active) -> usize {
+        self.active_count += 1;
+        match self.free_slots.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i].is_none());
+                self.slots[i] = Some(a);
+                i
+            }
+            None => {
+                self.slots.push(Some(a));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    fn remove(&mut self, slot: usize) -> Active {
+        let a = self.slots[slot].take().expect("remove of empty slot");
+        self.free_slots.push(slot);
+        self.active_count -= 1;
+        a
+    }
+
+    /// Validate and admit one envelope; returns the slot on success.
+    fn admit(&mut self, env: Envelope, bank: &dyn ModelBank, plans: &PlanCache) -> Option<usize> {
         // Requests cancelled (or expired) while still queued never cost
         // a solver build or an evaluation.
-        let dead_on_arrival = env.cancel.is_cancelled()
-            || env.deadline.is_some_and(|d| Instant::now() >= d);
+        let dead_on_arrival =
+            env.cancel.is_cancelled() || env.deadline.is_some_and(|d| Instant::now() >= d);
         if dead_on_arrival {
-            tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
-            tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-            tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
+            self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+            self.tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+            self.tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
             let _ = env.reply.send(Ok(SamplingResult {
                 id: env.id,
                 samples: Tensor::zeros(0, 0),
@@ -425,7 +520,7 @@ fn run_loop(
                 total_seconds: 0.0,
                 cancelled: true,
             }));
-            return;
+            return None;
         }
         let sched = bank.sched();
         let solver = if env.spec.task.is_guided() && !bank.supports_cond(&env.spec.dataset) {
@@ -438,41 +533,345 @@ fn run_loop(
             ))
         } else {
             bank.dim(&env.spec.dataset)
-                .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, &plans))
+                .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, plans))
         };
         match solver {
             Ok(s) => {
-                tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
+                self.tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
                 if env.spec.task.is_guided() {
-                    tele.guided_requests.fetch_add(1, Ordering::Relaxed);
+                    self.tele.guided_requests.fetch_add(1, Ordering::Relaxed);
                 }
                 if env.spec.task.is_img2img() {
-                    tele.img2img_requests.fetch_add(1, Ordering::Relaxed);
+                    self.tele.img2img_requests.fetch_add(1, Ordering::Relaxed);
                 }
                 if env.spec.task.is_stochastic() {
-                    tele.stochastic_requests.fetch_add(1, Ordering::Relaxed);
+                    self.tele.stochastic_requests.fetch_add(1, Ordering::Relaxed);
                 }
-                active.push(Active {
+                let slot = self.insert(Active {
                     rows: env.spec.admission_rows(),
                     state: RequestState::new(env.id, env.spec.dataset.clone(), s),
                     reply: env.reply,
                     cancel: env.cancel,
                     deadline: env.deadline,
+                    inflight_slabs: 0,
+                    expect_rows: 0,
+                    assembly: None,
+                    failed: None,
                 });
+                Some(slot)
             }
             Err(e) => {
-                tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-                tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
+                self.tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+                self.tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
                 let _ = env.reply.send(Err(e));
+                None
             }
         }
-    };
+    }
+
+    /// Retire every cancelled/expired request no in-flight slab still
+    /// references. Runs every scheduler tick — including linger waits —
+    /// so a cancel is honoured within a tick, not after `max_wait`.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        for slot in 0..self.slots.len() {
+            let retire = match &self.slots[slot] {
+                Some(a) => {
+                    a.inflight_slabs == 0
+                        && (a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d))
+                }
+                None => false,
+            };
+            if retire {
+                let done = self.remove(slot);
+                retire_ok(done, &self.tele, true);
+            }
+        }
+    }
+
+    /// Pull the next evaluation from every request that has none in
+    /// flight; retire the finished ones.
+    fn pull_ready(&mut self) {
+        for slot in 0..self.slots.len() {
+            let needs_pull = matches!(
+                &self.slots[slot],
+                Some(a) if a.inflight_slabs == 0 && a.state.pending.is_none()
+            );
+            if needs_pull {
+                self.pull_slot(slot);
+            }
+        }
+    }
+
+    /// Pull one slot's next evaluation; retires it when the solver is
+    /// done.
+    fn pull_slot(&mut self, slot: usize) {
+        let finished = {
+            let a = self.slots[slot].as_mut().expect("pull of empty slot");
+            !a.state.pull()
+        };
+        if finished {
+            let done = self.remove(slot);
+            retire_ok(done, &self.tele, false);
+        }
+    }
+
+    /// Rows pending on requests that could join the next dispatch.
+    fn dispatchable_rows(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|a| a.inflight_slabs == 0)
+            .map(|a| a.state.pending_rows())
+            .sum()
+    }
+
+    /// Pack every ready pending evaluation (per dataset) and hand the
+    /// slabs to the executor pool as one dispatch round.
+    fn dispatch_round(&mut self, batcher: &Batcher, executors: &ExecutorPool) -> usize {
+        let mut recycler = std::mem::take(&mut self.recycler);
+        let mut jobs: Vec<(Arc<str>, crate::coordinator::batcher::Slab)> = Vec::new();
+        {
+            let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+            for (idx, s) in self.slots.iter().enumerate() {
+                if let Some(a) = s {
+                    if a.inflight_slabs == 0 && a.state.pending.is_some() {
+                        by_dataset.entry(a.state.dataset.as_str()).or_default().push(idx);
+                    }
+                }
+            }
+            for (dataset, idxs) in by_dataset {
+                let pending: Vec<(usize, &EvalRequest)> = idxs
+                    .iter()
+                    .map(|&i| (i, self.slots[i].as_ref().unwrap().state.pending.as_ref().unwrap()))
+                    .collect();
+                let plan = batcher.pack_recycled(&pending, &mut recycler);
+                // One allocation per dataset group; slabs share it.
+                let name: Arc<str> = Arc::from(dataset);
+                for slab in plan.slabs {
+                    jobs.push((name.clone(), slab));
+                }
+            }
+        }
+        self.recycler = recycler;
+        if jobs.is_empty() {
+            return 0;
+        }
+        let round = self.next_round;
+        self.next_round += 1;
+        let mut dispatched = 0usize;
+        for (dataset, slab) in jobs {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            for seg in &slab.segments {
+                let a = self.slots[seg.source].as_mut().unwrap();
+                if a.inflight_slabs == 0 {
+                    a.expect_rows = a.state.pending_rows();
+                    debug_assert!(a.assembly.is_none() && a.failed.is_none());
+                }
+                a.inflight_slabs += 1;
+            }
+            self.tele.inflight_slabs.fetch_add(1, Ordering::SeqCst);
+            dispatched += 1;
+            if !executors.dispatch(SlabJob { seq, round, dataset, slab }) {
+                // Every executor has exited (only possible if they all
+                // panicked): no dispatched slab will ever complete, so
+                // fail every request with work in flight and reset the
+                // pipeline bookkeeping rather than wait forever.
+                self.tele.inflight_slabs.store(0, Ordering::SeqCst);
+                self.rounds.clear();
+                for slot in 0..self.slots.len() {
+                    let stuck = self.slots[slot].as_ref().is_some_and(|a| a.inflight_slabs > 0);
+                    if stuck {
+                        let done = self.remove(slot);
+                        retire_err(done, &self.tele, "executor pool stopped".into());
+                    }
+                }
+                return 0;
+            }
+        }
+        self.rounds.insert(round, dispatched);
+        self.tele.rounds.fetch_add(1, Ordering::Relaxed);
+        self.tele.observe_depth(self.rounds.len());
+        dispatched
+    }
+
+    /// Route one sequence-numbered slab completion: account telemetry,
+    /// scatter or adopt the output, and finalize every request whose
+    /// evaluation has now fully returned.
+    fn route(&mut self, c: SlabCompletion) {
+        // Slots referenced by an in-flight slab are never removed
+        // (sweep/finalize require inflight_slabs == 0), so the guards
+        // below are for one degenerate case only: completions already
+        // in the channel when the executor-pool-stopped cleanup failed
+        // their requests. Those route as no-ops instead of panicking
+        // the scheduler or underflowing the gauge.
+        let _ = self
+            .tele
+            .inflight_slabs
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+        if let Some(rem) = self.rounds.get_mut(&c.round) {
+            *rem -= 1;
+            if *rem == 0 {
+                self.rounds.remove(&c.round);
+            }
+        }
+        let segments = c.segments;
+        match c.result {
+            Ok(out) => {
+                self.tele.eval_nanos.fetch_add(c.eval_nanos, Ordering::Relaxed);
+                self.tele.evals.fetch_add(1, Ordering::Relaxed);
+                self.tele.rows.fetch_add(c.rows, Ordering::Relaxed);
+                self.tele
+                    .padded_rows
+                    .fetch_add(c.executed_rows.saturating_sub(c.rows), Ordering::Relaxed);
+                // Zero-copy completion: a slab that was exactly one
+                // whole evaluation adopts the engine output outright.
+                let whole = segments.len() == 1 && {
+                    let seg = &segments[0];
+                    self.slots[seg.source].as_ref().is_some_and(|a| {
+                        seg.src_start == 0 && seg.rows == a.expect_rows && a.assembly.is_none()
+                    })
+                };
+                if whole {
+                    let seg = &segments[0];
+                    let a = self.slots[seg.source].as_mut().unwrap();
+                    a.assembly = Some((out, seg.rows));
+                } else {
+                    let (slots, recycler) = (&mut self.slots, &mut self.recycler);
+                    for seg in &segments {
+                        let Some(a) = slots[seg.source].as_mut() else {
+                            continue; // stale completion, see above
+                        };
+                        if a.failed.is_some() {
+                            continue; // assembly will be discarded anyway
+                        }
+                        let expect = a.expect_rows;
+                        let (buf, filled) = a.assembly.get_or_insert_with(|| {
+                            (recycler.take_assembly(expect, out.cols()), 0)
+                        });
+                        // Absolute-offset scatter: stitching is correct
+                        // under any completion order.
+                        fused::scatter_rows(buf, seg.src_start, &out, seg.start, seg.rows);
+                        *filled += seg.rows;
+                    }
+                }
+            }
+            Err(e) => {
+                for seg in &segments {
+                    let Some(a) = self.slots[seg.source].as_mut() else {
+                        continue; // stale completion, see above
+                    };
+                    if a.failed.is_none() {
+                        a.failed = Some(e.clone());
+                    }
+                }
+            }
+        }
+        // A request appears at most once per slab, so one decrement per
+        // segment; slots are stable, so finalizing (and removing) one
+        // source cannot shift another's index.
+        for seg in &segments {
+            if let Some(a) = self.slots[seg.source].as_mut() {
+                a.inflight_slabs = a.inflight_slabs.saturating_sub(1);
+            }
+        }
+        for seg in &segments {
+            let ready = self.slots[seg.source].as_ref().is_some_and(|a| a.inflight_slabs == 0);
+            if ready {
+                self.finalize(seg.source);
+            }
+        }
+        let mut bufs = c.buffers;
+        bufs.segments = segments;
+        self.recycler.give_buffers(bufs);
+    }
+
+    /// All slabs of `slot`'s evaluation are back: deliver it, or retire
+    /// the request if a slab failed or a cancel/deadline latched while
+    /// it was in flight (the eps is dropped, never delivered — the new
+    /// cancellation point is "no in-flight slab references the
+    /// request").
+    fn finalize(&mut self, slot: usize) {
+        enum Outcome {
+            Fail(String),
+            Cancel,
+            Deliver,
+        }
+        let now = Instant::now();
+        let (outcome, reclaimed) = {
+            let a = self.slots[slot].as_mut().expect("finalize of empty slot");
+            debug_assert_eq!(a.inflight_slabs, 0);
+            if let Some(e) = a.failed.take() {
+                (Outcome::Fail(e), a.assembly.take())
+            } else if a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d) {
+                (Outcome::Cancel, a.assembly.take())
+            } else {
+                (Outcome::Deliver, None)
+            }
+        };
+        if let Some((buf, _)) = reclaimed {
+            self.recycler.give_assembly(buf);
+        }
+        match outcome {
+            Outcome::Fail(err) => {
+                let done = self.remove(slot);
+                retire_err(done, &self.tele, format!("model evaluation failed: {err}"));
+            }
+            Outcome::Cancel => {
+                let done = self.remove(slot);
+                retire_ok(done, &self.tele, true);
+            }
+            Outcome::Deliver => {
+                {
+                    let a = self.slots[slot].as_mut().unwrap();
+                    let (eps, filled) = a.assembly.take().expect("deliver without assembly");
+                    debug_assert_eq!(filled, eps.rows(), "request assembly incomplete");
+                    debug_assert_eq!(eps.rows(), a.expect_rows);
+                    self.tele.steps.fetch_add(1, Ordering::Relaxed);
+                    a.state.deliver(eps);
+                }
+                // Pull immediately so the request can join the next
+                // dispatch round without waiting a tick.
+                self.pull_slot(slot);
+            }
+        }
+    }
+}
+
+fn run_loop(
+    banks: BankSet,
+    config: CoordinatorConfig,
+    rx: Receiver<Envelope>,
+    tele: Arc<Telemetry>,
+    plans: Arc<PlanCache>,
+) {
+    let batcher = Batcher::new(config.policy);
+    let depth = config.pipeline_depth.max(1);
+    let bank = banks.primary().clone();
+    let (comp_tx, comp_rx) = std::sync::mpsc::channel::<SlabCompletion>();
+    let executors = ExecutorPool::spawn(
+        &banks,
+        config.executors_per_shard.max(1),
+        config.max_active.max(1) * depth,
+        comp_tx,
+        tele.clone(),
+    );
+    let mut s = Scheduler::new(tele);
+    let mut queue_open = true;
 
     'outer: loop {
+        // ---- Route completions that arrived since the last tick ----
+        while let Ok(c) = comp_rx.try_recv() {
+            s.route(c);
+        }
+
         // ---- Admission ----
-        while queue_open && active.len() < config.max_active {
+        while queue_open && s.active_count < config.max_active {
             match rx.try_recv() {
-                Ok(env) => admit(env, &mut active, &tele),
+                Ok(env) => {
+                    s.admit(env, bank.as_ref(), &plans);
+                }
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                     queue_open = false;
@@ -480,14 +879,14 @@ fn run_loop(
                 }
             }
         }
-        if active.is_empty() {
+        if s.active_count == 0 {
             if !queue_open {
                 break 'outer; // drained and closed: exit
             }
             // Idle: block for work.
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(env) => {
-                    admit(env, &mut active, &tele);
+                    s.admit(env, bank.as_ref(), &plans);
                     continue;
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -498,161 +897,87 @@ fn run_loop(
             }
         }
 
-        tele.rounds.fetch_add(1, Ordering::Relaxed);
-
-        // ---- Cancellation / deadline sweep ----
-        // Round boundaries are the cancellation points: every pending
-        // eval from the previous round has been delivered, so a retired
-        // solver leaves no orphan rows in any slab and batch-mates are
-        // untouched.
-        let now = Instant::now();
-        let mut i = 0;
-        while i < active.len() {
-            let expired = active[i].cancel.is_cancelled()
-                || active[i].deadline.is_some_and(|d| now >= d);
-            if expired && active[i].state.pending.is_none() {
-                let done = active.swap_remove(i);
-                retire_ok(done, &tele, true);
-                continue;
-            }
-            i += 1;
-        }
-
-        // ---- Pull next evaluations; retire finished solvers ----
-        let mut i = 0;
-        while i < active.len() {
-            let has_pending = active[i].state.pending.is_some();
-            if !has_pending && !active[i].state.pull() {
-                let done = active.swap_remove(i);
-                retire_ok(done, &tele, false);
-                continue;
-            }
-            i += 1;
-        }
-        if active.is_empty() {
+        // ---- Cancellation / deadline sweep + solver stepping ----
+        s.sweep();
+        s.pull_ready();
+        if s.active_count == 0 {
             continue;
         }
 
         // ---- Linger under min_rows (max_wait policy) ----
-        let pending_rows: usize = active.iter().map(|a| a.state.pending_rows()).sum();
-        if pending_rows < config.policy.min_rows && queue_open {
+        let mut rows = s.dispatchable_rows();
+        if s.rounds.len() < depth && rows > 0 && rows < config.policy.min_rows && queue_open {
             let deadline = Instant::now() + config.policy.max_wait;
-            while Instant::now() < deadline && active.len() < config.max_active {
-                let left = deadline.saturating_duration_since(Instant::now());
-                match rx.recv_timeout(left) {
+            loop {
+                // Completions landing mid-linger free more pending work
+                // to join this round.
+                while let Ok(c) = comp_rx.try_recv() {
+                    s.route(c);
+                }
+                // The linger wait is cancellation-aware: every slice
+                // re-checks cancels/deadlines of already-active
+                // requests instead of blindly sleeping out `max_wait`.
+                s.sweep();
+                s.pull_ready();
+                rows = s.dispatchable_rows();
+                if rows == 0
+                    || rows >= config.policy.min_rows
+                    || s.active_count >= config.max_active
+                {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let slice = (deadline - now).min(Duration::from_millis(1));
+                match rx.recv_timeout(slice) {
                     Ok(env) => {
-                        let before = active.len();
-                        admit(env, &mut active, &tele);
-                        if active.len() == before {
-                            continue; // rejected or dead on arrival
-                        }
-                        // New arrivals join this round immediately.
-                        let n = active.len();
-                        if !active[n - 1].state.pull() {
-                            let done = active.swap_remove(n - 1);
-                            retire_ok(done, &tele, false);
+                        if let Some(slot) = s.admit(env, bank.as_ref(), &plans) {
+                            // New arrivals join this round immediately.
+                            s.pull_slot(slot);
                         }
                     }
-                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
                         queue_open = false;
                         break;
                     }
                 }
             }
+            rows = s.dispatchable_rows();
         }
 
-        // ---- Pack per dataset and dispatch ----
-        let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
-        for (idx, a) in active.iter().enumerate() {
-            if a.state.pending.is_some() {
-                by_dataset.entry(a.state.dataset.as_str()).or_default().push(idx);
+        // ---- Dispatch into the pipeline window, or wait on events ----
+        if s.rounds.len() < depth && rows > 0 {
+            s.dispatch_round(&batcher, &executors);
+        } else if !s.rounds.is_empty() {
+            // Window full (or nothing ready): wait for a completion,
+            // waking periodically to keep admission and cancellation
+            // sweeps responsive while evaluations run.
+            match comp_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(c) => s.route(c),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {}
             }
-        }
-        // Assemble each request's eps directly from slab outputs
-        // (`source -> (buffer, rows filled)`): a single whole-request
-        // slab adopts the engine output tensor outright; split requests
-        // scatter each segment into one preallocated buffer — no
-        // intermediate slices, no vstack.
-        let mut assembled: BTreeMap<usize, (Tensor, usize)> = BTreeMap::new();
-        let mut failures: Vec<(usize, String)> = Vec::new();
-        for (dataset, idxs) in by_dataset {
-            let pending: Vec<(usize, &crate::solvers::EvalRequest)> = idxs
-                .iter()
-                .map(|&i| (i, active[i].state.pending.as_ref().unwrap()))
-                .collect();
-            let plan = batcher.pack(&pending);
-            for slab in &plan.slabs {
-                let t0 = Instant::now();
-                match bank.eval_cond(dataset, slab.x(), &slab.t, slab.c()) {
-                    Ok(out) => {
-                        // Row-count contract with the engine: a silent
-                        // mismatch would truncate or misalign eps rows.
-                        assert_eq!(out.rows(), slab.rows(), "model output rows mismatch");
-                        tele.eval_nanos
-                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        tele.evals.fetch_add(1, Ordering::Relaxed);
-                        tele.rows.fetch_add(slab.rows(), Ordering::Relaxed);
-                        tele.padded_rows.fetch_add(
-                            bank.executed_rows(slab.rows()) - slab.rows(),
-                            Ordering::Relaxed,
-                        );
-                        let whole = slab.segments.len() == 1
-                            && slab.segments[0].start == 0
-                            && slab.segments[0].rows
-                                == active[slab.segments[0].source].state.pending_rows()
-                            && !assembled.contains_key(&slab.segments[0].source);
-                        if whole {
-                            let seg = &slab.segments[0];
-                            assembled.insert(seg.source, (out, seg.rows));
-                        } else {
-                            for seg in &slab.segments {
-                                let total = active[seg.source].state.pending_rows();
-                                let entry = assembled.entry(seg.source).or_insert_with(|| {
-                                    (Tensor::zeros(total, out.cols()), 0)
-                                });
-                                fused::scatter_rows(
-                                    &mut entry.0,
-                                    entry.1,
-                                    &out,
-                                    seg.start,
-                                    seg.rows,
-                                );
-                                entry.1 += seg.rows;
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        for seg in &slab.segments {
-                            failures.push((seg.source, e.clone()));
-                        }
-                    }
+        } else {
+            // Active requests but nothing in flight and nothing to
+            // dispatch (all pending retired this tick): brief blocking
+            // wait for admission to avoid a busy spin.
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(env) => {
+                    s.admit(env, bank.as_ref(), &plans);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    queue_open = false;
                 }
             }
         }
-
-        // ---- Route assembled outputs back ----
-        // Requests with any failed slab are retired below, not delivered
-        // (a partial assembly would feed a truncated eps to the solver).
-        let failed_srcs: BTreeSet<usize> = failures.iter().map(|f| f.0).collect();
-        for (src, (eps, filled)) in assembled {
-            if failed_srcs.contains(&src) {
-                continue;
-            }
-            debug_assert_eq!(filled, eps.rows(), "request assembly incomplete");
-            tele.steps.fetch_add(1, Ordering::Relaxed);
-            active[src].state.deliver(eps);
-        }
-
-        // ---- Fail requests whose evaluation errored (reverse index order
-        //      keeps earlier indices stable under swap_remove) ----
-        failures.sort_by(|a, b| b.0.cmp(&a.0));
-        failures.dedup_by_key(|f| f.0);
-        for (src, err) in failures {
-            let failed = active.swap_remove(src);
-            retire_err(failed, &tele, format!("model evaluation failed: {err}"));
-        }
     }
+    // Queue closed, every request retired, nothing in flight: stop the
+    // executors (closing the job queue joins them).
+    executors.shutdown();
 }
 
 #[cfg(test)]
@@ -835,6 +1160,163 @@ mod tests {
         assert_eq!(guided_zero.samples.as_slice(), plain.samples.as_slice());
         assert_eq!(guided_zero.nfe, plain.nfe);
         c.shutdown();
+    }
+
+    #[test]
+    fn row_count_mismatch_fails_the_slab_not_the_shard() {
+        // A bank that breaks the row-count contract for one dataset
+        // must fail only that slab's requests via the normal error
+        // path; requests on other slabs — and later submissions — keep
+        // being served (previously an assert poisoned the loop thread).
+        struct WrongRows(MockBank);
+        impl ModelBank for WrongRows {
+            fn sched(&self) -> VpSchedule {
+                self.0.sched()
+            }
+            fn dim(&self, dataset: &str) -> Result<usize, String> {
+                if dataset == "bad" {
+                    Ok(2)
+                } else {
+                    self.0.dim(dataset)
+                }
+            }
+            fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+                if dataset == "bad" {
+                    // One row short: a contract violation, not an Err.
+                    Ok(Tensor::zeros(x.rows().saturating_sub(1), x.cols()))
+                } else {
+                    self.0.eval(dataset, x, t)
+                }
+            }
+            fn eval_cond(
+                &self,
+                dataset: &str,
+                x: &Tensor,
+                t: &[f32],
+                _c: &[f32],
+            ) -> Result<Tensor, String> {
+                self.eval(dataset, x, t)
+            }
+        }
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> = Arc::new(WrongRows(
+            MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+        ));
+        let c = Coordinator::start(bank, CoordinatorConfig::default());
+        let mut bad = spec("era", 8, 1);
+        bad.dataset = "bad".into();
+        let bad_ticket = c.submit(bad).unwrap();
+        let good_ticket = c.submit(spec("era", 8, 2)).unwrap();
+        let err = bad_ticket.wait().expect_err("row mismatch must fail the request");
+        assert!(err.contains("rows"), "{err}");
+        let ok = good_ticket.wait().unwrap();
+        assert_eq!(ok.nfe, 10, "batch-mate on another slab must be unaffected");
+        // The shard survives: a fresh request still completes.
+        let later = c.sample(spec("era", 4, 3)).unwrap();
+        assert_eq!(later.samples.rows(), 4);
+        assert_eq!(c.telemetry().inflight_rows.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn cancel_during_linger_is_honoured_within_the_wait() {
+        // min_rows far above the request's rows forces a linger; the
+        // cancel must retire the request during the wait — before any
+        // evaluation ships — instead of after the full max_wait.
+        let cfg = CoordinatorConfig {
+            policy: BatchPolicy {
+                max_rows: 256,
+                min_rows: 4096,
+                max_wait: Duration::from_secs(5),
+            },
+            ..Default::default()
+        };
+        let c = Coordinator::start(bank(), cfg);
+        let ticket = c.submit(spec("era", 8, 1)).unwrap();
+        // Wait until the request is admitted (it then sits lingering).
+        let t0 = Instant::now();
+        while c.telemetry().requests_admitted.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "request never admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        ticket.cancel();
+        let res = ticket.wait().unwrap();
+        assert!(res.cancelled);
+        assert_eq!(res.nfe, 0, "no evaluation may ship after the cancel");
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "cancel must not wait out the full linger budget"
+        );
+        assert_eq!(c.telemetry().evals.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn pipelined_coordinator_is_bitwise_identical_to_depth_one() {
+        // The acceptance invariant: pipeline_depth/executors must not
+        // change a single bit of any request's trajectory.
+        let specs: Vec<RequestSpec> = vec![
+            spec("era", 16, 1),
+            spec("ddim", 8, 2),
+            spec("dpm-2", 8, 3),
+            {
+                let mut s = spec("era", 8, 4);
+                s.task = crate::solvers::TaskSpec {
+                    guidance_scale: 2.0,
+                    guide_class: 2,
+                    ..Default::default()
+                };
+                s
+            },
+        ];
+        let run = |executors: usize, depth: usize| -> Vec<Vec<f32>> {
+            let cfg = CoordinatorConfig {
+                executors_per_shard: executors,
+                pipeline_depth: depth,
+                // Tiny slabs force splits so reassembly is exercised.
+                policy: BatchPolicy { max_rows: 8, ..Default::default() },
+                ..Default::default()
+            };
+            let c = Coordinator::start(bank(), cfg);
+            let tickets: Vec<_> =
+                specs.iter().map(|s| c.submit(s.clone()).unwrap()).collect();
+            let outs = tickets
+                .into_iter()
+                .map(|t| t.wait().unwrap().samples.as_slice().to_vec())
+                .collect();
+            c.shutdown();
+            outs
+        };
+        let baseline = run(1, 1);
+        for (e, d) in [(1, 2), (2, 1), (2, 4), (4, 3)] {
+            let got = run(e, d);
+            assert_eq!(got, baseline, "executors={e} depth={d} diverged");
+        }
+    }
+
+    #[test]
+    fn per_shard_bank_replicas_via_bank_set() {
+        // Two replicas within one shard (BankSet), two executors: the
+        // results must match the single-bank path bitwise.
+        let sched = VpSchedule::default();
+        let set = BankSet::new(vec![bank(), bank()]);
+        let cfg = CoordinatorConfig {
+            executors_per_shard: 2,
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let c = Coordinator::start_with_bank_set(
+            set,
+            cfg,
+            Arc::new(crate::kernels::PlanCache::new()),
+        );
+        let s = spec("era", 32, 7);
+        let via_coord = c.sample(s.clone()).unwrap();
+        c.shutdown();
+        let model = AnalyticGmm::gmm8(sched);
+        let mut solver = s.build_solver(sched, 2).unwrap();
+        let direct = crate::solvers::sample_with(&mut *solver, &model);
+        assert_eq!(via_coord.samples.as_slice(), direct.as_slice());
     }
 
     #[test]

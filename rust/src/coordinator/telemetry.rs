@@ -36,9 +36,24 @@ pub struct Telemetry {
     pub rounds: AtomicUsize,
     /// Nanoseconds spent inside model evaluation.
     pub eval_nanos: AtomicU64,
+    /// Nanoseconds the shard's executor threads spent evaluating slabs
+    /// (summed across executors; > wall time when several overlap).
+    pub executor_busy_nanos: AtomicU64,
+    /// Nanoseconds the executor threads spent waiting for work.
+    pub executor_idle_nanos: AtomicU64,
+    /// Gauge: slabs dispatched to the executor pool and not yet routed
+    /// back by the scheduler.
+    pub inflight_slabs: AtomicUsize,
+    /// Pipeline-depth histogram: bucket `d-1` counts dispatches made
+    /// while `d` rounds (this one included) were in flight; the last
+    /// bucket absorbs `>= DEPTH_HIST_BUCKETS`.
+    pub depth_hist: [AtomicUsize; DEPTH_HIST_BUCKETS],
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
+
+/// Buckets of the pipeline-depth histogram (depth 1..=8+).
+pub const DEPTH_HIST_BUCKETS: usize = 8;
 
 impl Telemetry {
     pub fn new() -> Self {
@@ -80,6 +95,34 @@ impl Telemetry {
         }
     }
 
+    /// Record one round dispatch observed at `depth` in-flight rounds.
+    pub fn observe_depth(&self, depth: usize) {
+        let bucket = depth.clamp(1, DEPTH_HIST_BUCKETS) - 1;
+        self.depth_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the pipeline-depth histogram (bucket `d-1` = depth
+    /// `d`, last bucket = deeper).
+    pub fn depth_hist_snapshot(&self) -> [usize; DEPTH_HIST_BUCKETS] {
+        let mut out = [0usize; DEPTH_HIST_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.depth_hist.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Fraction of executor thread time spent evaluating (0 when no
+    /// executor has ticked yet).
+    pub fn executor_busy_fraction(&self) -> f64 {
+        let busy = self.executor_busy_nanos.load(Ordering::Relaxed) as f64;
+        let idle = self.executor_idle_nanos.load(Ordering::Relaxed) as f64;
+        if busy + idle == 0.0 {
+            0.0
+        } else {
+            busy / (busy + idle)
+        }
+    }
+
     /// Mean rows per fused evaluation (batching efficiency).
     pub fn mean_batch_occupancy(&self) -> f64 {
         let evals = self.evals.load(Ordering::Relaxed);
@@ -105,7 +148,8 @@ impl Telemetry {
     pub fn summary(&self) -> String {
         format!(
             "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
-             guided={} img2img={} sde={} p50={:.1}ms p99={:.1}ms",
+             guided={} img2img={} sde={} exec_busy={:.0}% inflight_slabs={} \
+             p50={:.1}ms p99={:.1}ms",
             self.requests_finished.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -116,6 +160,8 @@ impl Telemetry {
             self.guided_requests.load(Ordering::Relaxed),
             self.img2img_requests.load(Ordering::Relaxed),
             self.stochastic_requests.load(Ordering::Relaxed),
+            100.0 * self.executor_busy_fraction(),
+            self.inflight_slabs.load(Ordering::Relaxed),
             1e3 * self.latency_percentile(0.5),
             1e3 * self.latency_percentile(0.99),
         )
@@ -174,6 +220,31 @@ mod tests {
         assert_eq!(t.latency_samples().len(), 2);
         assert_eq!(t.queue_wait_samples().len(), 2);
         assert!(t.summary().contains("cancelled=0"));
+    }
+
+    #[test]
+    fn depth_histogram_buckets_and_clamps() {
+        let t = Telemetry::new();
+        t.observe_depth(1);
+        t.observe_depth(1);
+        t.observe_depth(3);
+        t.observe_depth(0); // clamped into the depth-1 bucket
+        t.observe_depth(500); // clamped into the last bucket
+        let h = t.depth_hist_snapshot();
+        assert_eq!(h[0], 3);
+        assert_eq!(h[2], 1);
+        assert_eq!(h[DEPTH_HIST_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn executor_busy_fraction_from_clocks() {
+        let t = Telemetry::new();
+        assert_eq!(t.executor_busy_fraction(), 0.0);
+        t.executor_busy_nanos.fetch_add(300, Ordering::Relaxed);
+        t.executor_idle_nanos.fetch_add(100, Ordering::Relaxed);
+        assert!((t.executor_busy_fraction() - 0.75).abs() < 1e-12);
+        assert!(t.summary().contains("exec_busy=75%"));
     }
 
     #[test]

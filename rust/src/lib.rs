@@ -10,10 +10,16 @@
 //! * **L3 (this crate)** — loads the artifacts through PJRT
 //!   ([`runtime`]), drives them with the paper's solver and every baseline
 //!   ([`solvers`]), and serves batched sampling requests through a
-//!   continuous-batching coordinator ([`coordinator`]), scaled out across
-//!   N coordinator shards by the worker pool ([`pool`]: routing policies,
-//!   global admission control, per-request deadlines and cancellation,
-//!   merged telemetry) behind a TCP JSON-lines server ([`server`]).
+//!   continuous-batching coordinator ([`coordinator`]) — per shard, an
+//!   event-driven scheduler feeding a pool of engine executors
+//!   (`executors_per_shard` threads over a [`coordinator::BankSet`] of
+//!   replicas, up to `pipeline_depth` dispatch rounds in flight, with
+//!   sequence-numbered slab completions so out-of-order delivery
+//!   reassembles bit-identically) — scaled out across N coordinator
+//!   shards by the worker pool ([`pool`]: routing policies, global
+//!   admission control, per-request deadlines and cancellation, merged
+//!   telemetry incl. executor utilisation and pipeline-depth
+//!   histograms) behind a TCP JSON-lines server ([`server`]).
 //!
 //! The sampling hot path runs on the zero-copy kernel layer
 //! ([`kernels`]): in-place fused slice ops, per-solver scratch arenas

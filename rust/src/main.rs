@@ -4,8 +4,14 @@
 //! ```text
 //! era-serve --artifacts artifacts --addr 127.0.0.1:7437 \
 //!           --warmup gmm8,checkerboard --shards 4 --placement affinity \
+//!           --executors 2 --pipeline-depth 2 \
 //!           --deadline-ms 2000 --max-active 64
 //! ```
+//!
+//! `--executors`/`--pipeline-depth` shape each shard's pipelined
+//! scheduler: E engine-executor threads per shard and up to D dispatch
+//! rounds in flight (D = 1 reproduces the serialized pre-pipeline
+//! scheduling exactly; results are bit-identical at any setting).
 //!
 //! Clients speak the one-JSON-object-per-line protocol of
 //! [`era_solver::server`]; `examples/quickstart.rs` and
@@ -28,6 +34,8 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "addr", value: Some("host:port"), help: "bind address (default: 127.0.0.1:7437)" },
     OptSpec { name: "warmup", value: Some("ds,ds"), help: "datasets to pre-compile (default: all)" },
     OptSpec { name: "shards", value: Some("n"), help: "coordinator shards (default: 1)" },
+    OptSpec { name: "executors", value: Some("n"), help: "engine executors per shard (default: 1)" },
+    OptSpec { name: "pipeline-depth", value: Some("n"), help: "dispatch rounds kept in flight per shard; 1 = serialized (default: 2)" },
     OptSpec { name: "placement", value: Some("policy"), help: "round-robin | least-loaded | affinity (default: least-loaded)" },
     OptSpec { name: "deadline-ms", value: Some("ms"), help: "default per-request deadline, 0 = none (default: 0)" },
     OptSpec { name: "max-inflight-rows", value: Some("n"), help: "global admission cap in rows, 0 = unbounded (default: 0)" },
@@ -74,6 +82,8 @@ fn run() -> Result<(), String> {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        executors_per_shard: args.usize_or("executors", 1)?.max(1),
+        pipeline_depth: args.usize_or("pipeline-depth", 2)?.max(1),
     };
     let placement_name = args.str_or("placement", "least-loaded");
     let pool_config = PoolConfig {
@@ -84,8 +94,10 @@ fn run() -> Result<(), String> {
         max_inflight_rows: args.usize_or("max-inflight-rows", 0)?,
     };
     eprintln!(
-        "[era-serve] pool: {} shard(s), placement {}",
+        "[era-serve] pool: {} shard(s) x {} executor(s), pipeline depth {}, placement {}",
         pool_config.shards,
+        pool_config.shard.executors_per_shard,
+        pool_config.shard.pipeline_depth,
         pool_config.placement.label()
     );
     let bank: Arc<dyn ModelBank> = engine;

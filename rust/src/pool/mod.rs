@@ -23,7 +23,15 @@
 //!   tag registry lets one connection cancel another connection's
 //!   in-flight request over the wire;
 //! * an aggregated [`PoolStats`] snapshot ([`stats`]) merging per-shard
-//!   [`crate::coordinator::Telemetry`].
+//!   [`crate::coordinator::Telemetry`] (including executor utilisation
+//!   and pipeline-depth histograms).
+//!
+//! Each shard is itself pipelined: a scheduler thread plus
+//! `executors_per_shard` engine executors fed from a [`BankSet`] of
+//! replicas, with up to `pipeline_depth` dispatch rounds in flight
+//! (see [`crate::coordinator::service`]). `start_with_bank_sets` wires
+//! per-shard replica sets; `start_with_banks` remains the one-bank-
+//! per-shard special case.
 //!
 //! The TCP server ([`crate::server`]) serves from a pool; a pool with
 //! one shard behaves exactly like the bare coordinator it wraps.
@@ -41,8 +49,8 @@ use std::time::Duration;
 
 use crate::coordinator::service::Ticket;
 use crate::coordinator::{
-    CancelHandle, Coordinator, CoordinatorConfig, ModelBank, RequestSpec, SamplingResult,
-    SubmitError,
+    BankSet, CancelHandle, Coordinator, CoordinatorConfig, ModelBank, RequestSpec,
+    SamplingResult, SubmitError,
 };
 use crate::kernels::PlanCache;
 
@@ -75,6 +83,9 @@ impl Default for PoolConfig {
 pub struct WorkerPool {
     shards: Vec<Coordinator>,
     placement: PlacementPolicy,
+    /// Per-shard pipeline shape, surfaced in [`PoolStats`].
+    executors_per_shard: usize,
+    pipeline_depth: usize,
     /// Trajectory plans shared by every shard: one plan build per
     /// `(solver, nfe, grid, t_end, schedule)` across the whole pool.
     plans: Arc<PlanCache>,
@@ -136,16 +147,34 @@ impl WorkerPool {
 
     /// Start one shard per bank (per-shard engine replicas). The
     /// `config.shards` field is ignored in favour of `banks.len()`.
+    /// Each shard's executors share that shard's bank handle; use
+    /// [`WorkerPool::start_with_bank_sets`] for replicas *within* a
+    /// shard.
     pub fn start_with_banks(banks: Vec<Arc<dyn ModelBank>>, config: PoolConfig) -> WorkerPool {
         assert!(!banks.is_empty(), "pool needs at least one bank");
+        WorkerPool::start_with_bank_sets(
+            banks.into_iter().map(BankSet::shared).collect(),
+            config,
+        )
+    }
+
+    /// Start one shard per [`BankSet`] — the fully general topology:
+    /// N shards, each with its own set of engine replicas handed to
+    /// that shard's `executors_per_shard` executor threads.
+    pub fn start_with_bank_sets(sets: Vec<BankSet>, config: PoolConfig) -> WorkerPool {
+        assert!(!sets.is_empty(), "pool needs at least one bank set");
         let plans = Arc::new(PlanCache::new());
-        let shards = banks
+        let shards = sets
             .into_iter()
-            .map(|b| Coordinator::start_with_plans(b, config.shard.clone(), plans.clone()))
+            .map(|set| {
+                Coordinator::start_with_bank_set(set, config.shard.clone(), plans.clone())
+            })
             .collect();
         WorkerPool {
             shards,
             placement: config.placement,
+            executors_per_shard: config.shard.executors_per_shard.max(1),
+            pipeline_depth: config.shard.pipeline_depth.max(1),
             plans,
             max_inflight_rows: config.max_inflight_rows,
             rr: AtomicUsize::new(0),
@@ -286,6 +315,8 @@ impl WorkerPool {
             self.placement.label(),
             &teles,
             self.pool_rejected.load(Ordering::Relaxed),
+            self.executors_per_shard,
+            self.pipeline_depth,
         )
     }
 
@@ -445,6 +476,64 @@ mod tests {
         assert!(stats.per_shard.iter().all(|s| s.admitted == 2), "requests must spread");
         assert_eq!(p.plan_cache().misses(), 1, "one plan build across shards");
         assert_eq!(p.plan_cache().hits(), 3);
+        p.shutdown();
+    }
+
+    #[test]
+    fn pipelined_shards_match_serialized_pool_bitwise() {
+        // Same seeds through a depth-1/1-executor pool and a
+        // depth-3/2-executor pool over per-shard BankSet replicas:
+        // every sample must be bit-identical.
+        let run = |executors: usize, depth: usize| -> Vec<Vec<f32>> {
+            let shard = CoordinatorConfig {
+                executors_per_shard: executors,
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            let sets = vec![
+                BankSet::new(vec![bank(), bank()]),
+                BankSet::new(vec![bank(), bank()]),
+            ];
+            let p = WorkerPool::start_with_bank_sets(
+                sets,
+                PoolConfig {
+                    shards: 2,
+                    placement: PlacementPolicy::RoundRobin,
+                    shard,
+                    max_inflight_rows: 0,
+                },
+            );
+            let tickets: Vec<_> = (0..6).map(|i| p.submit(spec(16, i)).unwrap()).collect();
+            let out = tickets
+                .into_iter()
+                .map(|t| t.wait().unwrap().samples.as_slice().to_vec())
+                .collect();
+            p.shutdown();
+            out
+        };
+        assert_eq!(run(2, 3), run(1, 1));
+    }
+
+    #[test]
+    fn pool_stats_carry_pipeline_shape() {
+        let shard = CoordinatorConfig {
+            executors_per_shard: 2,
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let p = WorkerPool::start(
+            bank(),
+            PoolConfig { shards: 2, shard, ..Default::default() },
+        );
+        for i in 0..4 {
+            p.sample(spec(8, i)).unwrap();
+        }
+        let s = p.stats();
+        assert_eq!(s.executors_per_shard, 2);
+        assert_eq!(s.pipeline_depth, 2);
+        assert!(s.executor_busy_fraction() > 0.0, "executors never clocked busy time");
+        assert_eq!(s.inflight_slabs(), 0, "slab gauge must drain");
+        assert!(s.depth_hist().iter().sum::<usize>() > 0, "no dispatches recorded");
         p.shutdown();
     }
 

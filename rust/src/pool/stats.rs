@@ -8,7 +8,7 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::coordinator::telemetry::sorted_percentile;
+use crate::coordinator::telemetry::{sorted_percentile, DEPTH_HIST_BUCKETS};
 use crate::coordinator::Telemetry;
 use crate::json::Json;
 
@@ -30,6 +30,14 @@ pub struct ShardStats {
     pub guided: usize,
     pub img2img: usize,
     pub stochastic: usize,
+    /// Executor-thread utilisation clocks (summed across the shard's
+    /// executors) and the in-flight slab gauge.
+    pub executor_busy_nanos: u64,
+    pub executor_idle_nanos: u64,
+    pub inflight_slabs: usize,
+    /// Pipeline-depth histogram: `depth_hist[d-1]` dispatches happened
+    /// at `d` rounds in flight (last bucket absorbs deeper).
+    pub depth_hist: [usize; DEPTH_HIST_BUCKETS],
 }
 
 impl ShardStats {
@@ -48,6 +56,10 @@ impl ShardStats {
             guided: t.guided_requests.load(Ordering::Relaxed),
             img2img: t.img2img_requests.load(Ordering::Relaxed),
             stochastic: t.stochastic_requests.load(Ordering::Relaxed),
+            executor_busy_nanos: t.executor_busy_nanos.load(Ordering::Relaxed),
+            executor_idle_nanos: t.executor_idle_nanos.load(Ordering::Relaxed),
+            inflight_slabs: t.inflight_slabs.load(Ordering::Relaxed),
+            depth_hist: t.depth_hist_snapshot(),
         }
     }
 
@@ -57,6 +69,16 @@ impl ShardStats {
             0.0
         } else {
             self.rows as f64 / self.evals as f64
+        }
+    }
+
+    /// Fraction of executor thread time spent evaluating on this shard.
+    pub fn executor_busy_fraction(&self) -> f64 {
+        let total = self.executor_busy_nanos + self.executor_idle_nanos;
+        if total == 0 {
+            0.0
+        } else {
+            self.executor_busy_nanos as f64 / total as f64
         }
     }
 
@@ -75,6 +97,12 @@ impl ShardStats {
             ("guided", Json::Num(self.guided as f64)),
             ("img2img", Json::Num(self.img2img as f64)),
             ("stochastic", Json::Num(self.stochastic as f64)),
+            ("executor_busy_frac", Json::Num(self.executor_busy_fraction())),
+            ("inflight_slabs", Json::Num(self.inflight_slabs as f64)),
+            (
+                "depth_hist",
+                Json::Arr(self.depth_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
         ])
     }
 }
@@ -88,6 +116,9 @@ pub struct PoolStats {
     /// every shard's queue full) — shard-level queue rejections are in
     /// `per_shard[i].rejected`.
     pub pool_rejected: usize,
+    /// Pipeline shape every shard runs with.
+    pub executors_per_shard: usize,
+    pub pipeline_depth: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
 }
@@ -98,6 +129,8 @@ impl PoolStats {
         placement: &'static str,
         telemetries: &[&Telemetry],
         pool_rejected: usize,
+        executors_per_shard: usize,
+        pipeline_depth: usize,
     ) -> PoolStats {
         let per_shard: Vec<ShardStats> = telemetries
             .iter()
@@ -113,6 +146,8 @@ impl PoolStats {
             placement,
             per_shard,
             pool_rejected,
+            executors_per_shard,
+            pipeline_depth,
             p50_ms: 1e3 * sorted_percentile(&lat, 0.5),
             p99_ms: 1e3 * sorted_percentile(&lat, 0.99),
         }
@@ -151,6 +186,34 @@ impl PoolStats {
         self.per_shard.iter().map(|s| s.inflight_rows).sum()
     }
 
+    /// Slabs currently dispatched-but-unrouted across all shards.
+    pub fn inflight_slabs(&self) -> usize {
+        self.per_shard.iter().map(|s| s.inflight_slabs).sum()
+    }
+
+    /// Pool-wide executor utilisation: summed busy clocks over summed
+    /// total clocks (a per-shard average would overweight idle shards).
+    pub fn executor_busy_fraction(&self) -> f64 {
+        let busy: u64 = self.per_shard.iter().map(|s| s.executor_busy_nanos).sum();
+        let idle: u64 = self.per_shard.iter().map(|s| s.executor_idle_nanos).sum();
+        if busy + idle == 0 {
+            0.0
+        } else {
+            busy as f64 / (busy + idle) as f64
+        }
+    }
+
+    /// Element-wise sum of the shards' pipeline-depth histograms.
+    pub fn depth_hist(&self) -> [usize; DEPTH_HIST_BUCKETS] {
+        let mut out = [0usize; DEPTH_HIST_BUCKETS];
+        for s in &self.per_shard {
+            for (o, n) in out.iter_mut().zip(s.depth_hist.iter()) {
+                *o += n;
+            }
+        }
+        out
+    }
+
     /// Pool-wide workload mix: (guided, img2img, stochastic) admissions.
     pub fn workloads(&self) -> (usize, usize, usize) {
         (
@@ -184,10 +247,13 @@ impl PoolStats {
     /// One-line summary for heartbeat logs / bench output.
     pub fn summary(&self) -> String {
         format!(
-            "shards={} placement={} finished={} cancelled={} rejected={} evals={} rows={} \
-             occupancy={:.1} pad={:.1}% p50={:.1}ms p99={:.1}ms",
+            "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
+             evals={} rows={} occupancy={:.1} pad={:.1}% exec_busy={:.0}% inflight_slabs={} \
+             p50={:.1}ms p99={:.1}ms",
             self.shards(),
             self.placement,
+            self.executors_per_shard,
+            self.pipeline_depth,
             self.finished(),
             self.cancelled(),
             self.rejected(),
@@ -195,6 +261,8 @@ impl PoolStats {
             self.rows(),
             self.occupancy(),
             100.0 * self.padding_fraction(),
+            100.0 * self.executor_busy_fraction(),
+            self.inflight_slabs(),
             self.p50_ms,
             self.p99_ms,
         )
@@ -207,6 +275,8 @@ impl PoolStats {
             ("ok", Json::Bool(true)),
             ("shards", Json::Num(self.shards() as f64)),
             ("placement", Json::Str(self.placement.to_string())),
+            ("executors_per_shard", Json::Num(self.executors_per_shard as f64)),
+            ("pipeline_depth", Json::Num(self.pipeline_depth as f64)),
             ("finished", Json::Num(self.finished() as f64)),
             ("admitted", Json::Num(self.admitted() as f64)),
             ("rejected", Json::Num(self.rejected() as f64)),
@@ -219,6 +289,12 @@ impl PoolStats {
             ("guided", Json::Num(self.workloads().0 as f64)),
             ("img2img", Json::Num(self.workloads().1 as f64)),
             ("stochastic", Json::Num(self.workloads().2 as f64)),
+            ("executor_busy_frac", Json::Num(self.executor_busy_fraction())),
+            ("inflight_slabs", Json::Num(self.inflight_slabs() as f64)),
+            (
+                "depth_hist",
+                Json::Arr(self.depth_hist().iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
         ])
@@ -241,7 +317,7 @@ mod tests {
         b.rows.fetch_add(60, Ordering::Relaxed);
         a.record_finish(0.010, 0.0);
         b.record_finish(0.030, 0.0);
-        let s = PoolStats::collect("round-robin", &[&a, &b], 1);
+        let s = PoolStats::collect("round-robin", &[&a, &b], 1, 2, 3);
         assert_eq!(s.shards(), 2);
         assert_eq!(s.admitted(), 8);
         assert_eq!(s.finished(), 2);
@@ -250,7 +326,49 @@ mod tests {
         assert_eq!(s.rejected(), 1); // pool-level only here
         assert!((s.occupancy() - 20.0).abs() < 1e-9);
         assert!(s.summary().contains("shards=2"));
+        assert!(s.summary().contains("executors=2 depth=3"));
         assert_eq!(s.to_json().get("finished").as_usize(), Some(2));
+        assert_eq!(s.to_json().get("executors_per_shard").as_usize(), Some(2));
+        assert_eq!(s.to_json().get("pipeline_depth").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn executor_clocks_and_depth_hist_merge_across_shards() {
+        // Merge rules: clocks and histograms sum; the busy fraction is
+        // derived from the summed clocks, never averaged per shard —
+        // a mostly-idle shard must drag the pooled fraction down in
+        // proportion to its clock time, not by half.
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.executor_busy_nanos.fetch_add(900, Ordering::Relaxed);
+        a.executor_idle_nanos.fetch_add(100, Ordering::Relaxed);
+        b.executor_busy_nanos.fetch_add(0, Ordering::Relaxed);
+        b.executor_idle_nanos.fetch_add(3000, Ordering::Relaxed);
+        a.inflight_slabs.fetch_add(3, Ordering::Relaxed);
+        b.inflight_slabs.fetch_add(2, Ordering::Relaxed);
+        a.observe_depth(1);
+        a.observe_depth(2);
+        b.observe_depth(2);
+        b.observe_depth(99); // clamps into the last bucket
+        let s = PoolStats::collect("round-robin", &[&a, &b], 0, 2, 2);
+        assert_eq!(s.inflight_slabs(), 5);
+        // 900 busy out of 4000 total clock — not the 0.45 a naive
+        // per-shard average of (0.9, 0.0) would give.
+        assert!((s.executor_busy_fraction() - 0.225).abs() < 1e-12);
+        let h = s.depth_hist();
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[DEPTH_HIST_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        // Per-shard views keep their own fractions.
+        assert!((s.per_shard[0].executor_busy_fraction() - 0.9).abs() < 1e-12);
+        assert_eq!(s.per_shard[1].executor_busy_fraction(), 0.0);
+        let json = s.per_shard[0].to_json();
+        assert_eq!(json.get("inflight_slabs").as_usize(), Some(3));
+        assert_eq!(
+            s.to_json().get("depth_hist").as_arr().map(|v| v.len()),
+            Some(DEPTH_HIST_BUCKETS)
+        );
     }
 
     #[test]
@@ -263,7 +381,7 @@ mod tests {
             a.record_finish(0.010, 0.0);
         }
         b.record_finish(1.0, 0.0);
-        let s = PoolStats::collect("least-loaded", &[&a, &b], 0);
+        let s = PoolStats::collect("least-loaded", &[&a, &b], 0, 1, 1);
         assert!((s.p50_ms - 10.0).abs() < 1e-6, "p50 {}", s.p50_ms);
         assert!(s.p99_ms > 500.0, "p99 {}", s.p99_ms);
     }
@@ -271,7 +389,7 @@ mod tests {
     #[test]
     fn empty_pool_stats_are_zero() {
         let a = Telemetry::new();
-        let s = PoolStats::collect("affinity", &[&a], 0);
+        let s = PoolStats::collect("affinity", &[&a], 0, 1, 1);
         assert_eq!(s.finished(), 0);
         assert_eq!(s.occupancy(), 0.0);
         assert_eq!(s.p50_ms, 0.0);

@@ -13,11 +13,14 @@
 //! <- {"ok":true,"cancelled":true}
 //!
 //! -> {"op":"stats"}
-//! <- {"ok":true,"shards":4,"finished":12,"evals":180,...}
+//! <- {"ok":true,"shards":4,"executors_per_shard":2,"pipeline_depth":2,
+//!     "finished":12,"evals":180,"executor_busy_frac":0.83,
+//!     "inflight_slabs":3,"depth_hist":[40,12,0,...],...}
 //!
 //! -> {"op":"shards"}
 //! <- {"ok":true,"shards":4,"placement":"least-loaded",
-//!     "per_shard":[{"shard":0,"admitted":3,...},...]}
+//!     "per_shard":[{"shard":0,"admitted":3,"inflight_slabs":1,
+//!                   "executor_busy_frac":0.8,"depth_hist":[...],...},...]}
 //!
 //! -> {"op":"ping"}            <- {"ok":true,"pong":true}
 //! ```

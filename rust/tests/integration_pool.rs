@@ -235,6 +235,112 @@ fn stochastic_requests_are_shard_stable() {
     assert_eq!(got.samples.as_slice(), want.samples.as_slice());
 }
 
+/// ISSUE 4 acceptance scenario: a request cancelled while one of its
+/// slabs is physically in flight at an executor. The scheduler must
+/// wait for the slab, drop the executor's output for the retired
+/// request without delivering it, return the partial result, and leave
+/// batch-mates bit-identical — with every gauge drained.
+#[test]
+fn cancel_while_slab_in_flight_drops_output_cleanly() {
+    // Small slabs split the victim across two slabs per round; a paced
+    // bank keeps each slab in flight long enough to cancel into the
+    // window deterministically.
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 8,
+            min_rows: 1,
+            max_wait: Duration::from_millis(0),
+        },
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let pool = paced_pool(30, 1, cfg);
+    // Victim: 16 rows -> two 8-row slabs every round, long trajectory.
+    let victim = pool.submit(spec(16, 60, 1)).unwrap();
+    // Batch-mate in its own slab on the same shard.
+    let mate = pool.submit(spec(8, 10, 2)).unwrap();
+    assert_eq!(victim.shard, mate.shard);
+
+    // Cancel while slabs are visibly in flight (the new gauge), not
+    // between rounds.
+    let mut saw_inflight = false;
+    for _ in 0..600 {
+        if pool.stats().inflight_slabs() >= 1 {
+            saw_inflight = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(saw_inflight, "no slab ever showed as in flight");
+    victim.cancel();
+
+    let v = victim.wait().unwrap();
+    assert!(v.cancelled, "victim must report cancellation");
+    assert!(v.nfe < 60, "victim consumed its whole budget ({} evals)", v.nfe);
+    assert_eq!(v.samples.rows(), 16, "partial iterate keeps the batch rows");
+    assert!(v.samples.all_finite());
+
+    let m = mate.wait().unwrap();
+    assert!(!m.cancelled);
+    assert_eq!(m.nfe, 10);
+
+    // Bit-identical to an undisturbed solo run: the dropped executor
+    // output never leaked into a batch-mate's slabs.
+    let solo = paced_pool(0, 1, CoordinatorConfig::default());
+    let undisturbed = solo.sample(spec(8, 10, 2)).unwrap();
+    assert_eq!(m.samples.as_slice(), undisturbed.samples.as_slice());
+    solo.shutdown();
+
+    // The shard keeps serving after the mid-flight retirement, and
+    // every gauge drains.
+    let later = pool.sample(spec(4, 10, 3)).unwrap();
+    assert_eq!(later.samples.rows(), 4);
+    let stats = pool.stats();
+    assert_eq!(stats.cancelled(), 1);
+    assert_eq!(stats.finished(), 2);
+    assert_eq!(stats.inflight_slabs(), 0, "slab gauge must drain");
+    assert_eq!(stats.inflight_rows(), 0, "row gauge must drain");
+    pool.shutdown();
+}
+
+/// The pipelined scheduler must overlap engine latency: 2 executors at
+/// depth 2 finish a fixed one-slab-per-request workload materially
+/// faster than the serialized depth-1 single-executor shard (the full
+/// sweep + 1.3x CI gate live in benches/bench_pool.rs).
+#[test]
+fn pipelining_overlaps_engine_latency_smoke() {
+    let run = |executors: usize, depth: usize| -> Duration {
+        let cfg = CoordinatorConfig {
+            policy: BatchPolicy {
+                max_rows: 8,
+                min_rows: 1,
+                max_wait: Duration::from_millis(0),
+            },
+            executors_per_shard: executors,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let pool = paced_pool(4, 1, cfg);
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> = (0..6).map(|i| pool.submit(spec(8, 10, i)).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let dt = t0.elapsed();
+        pool.shutdown();
+        dt
+    };
+    let serialized = run(1, 1);
+    let pipelined = run(2, 2);
+    // ~2x theoretical headroom; only guard against gross regression so
+    // loaded CI boxes cannot flake this (the bench gate is the sharp
+    // check).
+    assert!(
+        pipelined <= serialized,
+        "pipelined shard ({pipelined:?}) slower than serialized ({serialized:?})"
+    );
+}
+
 #[test]
 fn deadline_expires_mid_trajectory() {
     let pool = paced_pool(10, 1, CoordinatorConfig::default());

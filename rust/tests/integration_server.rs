@@ -186,16 +186,29 @@ fn server_survives_client_disconnect_mid_session() {
 
 #[test]
 fn stats_report_pool_shape() {
-    let (server, _pool) = mock_pool_stack(2, CoordinatorConfig::default());
+    let shard = CoordinatorConfig {
+        executors_per_shard: 2,
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let (server, _pool) = mock_pool_stack(2, shard);
     let mut c = Client::connect(server.local_addr()).unwrap();
     let (samples, _) = c.sample(&spec(16, 5)).unwrap();
     assert_eq!(samples.rows(), 16);
     let stats = c.stats().unwrap();
     assert_eq!(stats.get("shards").as_usize(), Some(2));
     assert_eq!(stats.get("finished").as_usize(), Some(1));
+    // The pipeline shape and executor telemetry ride the same response.
+    assert_eq!(stats.get("executors_per_shard").as_usize(), Some(2));
+    assert_eq!(stats.get("pipeline_depth").as_usize(), Some(2));
+    assert_eq!(stats.get("inflight_slabs").as_usize(), Some(0));
+    assert!(stats.get("executor_busy_frac").as_f64().is_some());
     let shards = c.shards().unwrap();
     assert_eq!(shards.get("shards").as_usize(), Some(2));
     assert_eq!(shards.get("per_shard").as_arr().map(|a| a.len()), Some(2));
+    let per_shard = shards.get("per_shard").as_arr().unwrap();
+    assert_eq!(per_shard[0].get("inflight_slabs").as_usize(), Some(0));
+    assert!(per_shard[0].get("depth_hist").as_arr().is_some());
     server.shutdown();
 }
 

@@ -533,3 +533,101 @@ fn prop_rng_streams_do_not_collide() {
     }
     assert_eq!(same, 0);
 }
+
+#[test]
+fn prop_slab_completion_order_immaterial() {
+    // The pipelined scheduler routes slab completions as they arrive,
+    // in whatever order the executors finish. For an arbitrary pack
+    // plan and an arbitrary permutation of slab completions, every
+    // request's reassembled eps must be bitwise identical to the
+    // in-order result — guaranteed by the absolute `src_start` offset
+    // each segment carries.
+    fn pseudo_eval(x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        let cols = x.cols();
+        let v: Vec<f32> = x
+            .as_slice()
+            .iter()
+            .enumerate()
+            .map(|(i, &val)| val * 1.5 + t[i / cols] + c[i / cols])
+            .collect();
+        Tensor::from_vec(v, x.rows(), cols)
+    }
+    let mut rng = Rng::new(0x5AB0);
+    for case in 0..CASES {
+        let n_req = 1 + (rng.below(6) as usize);
+        let dim = 1 + (rng.below(3) as usize);
+        let max_rows = 1 + (rng.below(24) as usize);
+        let reqs: Vec<EvalRequest> = (0..n_req)
+            .map(|_| {
+                let rows = 1 + (rng.below(40) as usize);
+                let cond = if rng.below(2) == 0 {
+                    Some(Arc::new(
+                        (0..rows)
+                            .map(|_| if rng.below(3) == 0 { UNCOND } else { rng.below(8) as f32 })
+                            .collect::<Vec<f32>>(),
+                    ))
+                } else {
+                    None
+                };
+                EvalRequest {
+                    x: Arc::new(rng.normal_tensor(rows, dim)),
+                    t: rng.uniform_in(1e-3, 1.0),
+                    cond,
+                }
+            })
+            .collect();
+        let pending: Vec<(usize, &EvalRequest)> = reqs.iter().enumerate().collect();
+        let batcher = Batcher::new(BatchPolicy { max_rows, ..Default::default() });
+        let plan = batcher.pack(&pending);
+
+        // "Run" every slab through a deterministic per-row pseudo-model.
+        let outs: Vec<Tensor> =
+            plan.slabs.iter().map(|s| pseudo_eval(s.x(), &s.t, s.c())).collect();
+
+        // Reassemble exactly the way the scheduler scatters completions.
+        let assemble = |order: &[usize]| -> Vec<Tensor> {
+            let mut bufs: Vec<Tensor> =
+                reqs.iter().map(|r| Tensor::zeros(r.x.rows(), r.x.cols())).collect();
+            for &si in order {
+                for seg in &plan.slabs[si].segments {
+                    era_solver::kernels::fused::scatter_rows(
+                        &mut bufs[seg.source],
+                        seg.src_start,
+                        &outs[si],
+                        seg.start,
+                        seg.rows,
+                    );
+                }
+            }
+            bufs
+        };
+        let in_order: Vec<usize> = (0..plan.slabs.len()).collect();
+        let mut perm = in_order.clone();
+        for i in (1..perm.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        let a = assemble(&in_order);
+        let b = assemble(&perm);
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(
+                a[i].as_slice(),
+                b[i].as_slice(),
+                "case {case}: request {i} differs under completion order {perm:?}"
+            );
+            // Both must equal evaluating the request alone — stitching
+            // reconstructs the full eps exactly once per row.
+            let t_vec = vec![req.t as f32; req.x.rows()];
+            let c_vec = match &req.cond {
+                Some(c) => c.as_ref().clone(),
+                None => vec![UNCOND; req.x.rows()],
+            };
+            let want = pseudo_eval(&req.x, &t_vec, &c_vec);
+            assert_eq!(
+                a[i].as_slice(),
+                want.as_slice(),
+                "case {case}: request {i} reassembly diverged from direct eval"
+            );
+        }
+    }
+}
