@@ -5,6 +5,7 @@ use std::time::Instant;
 
 use crate::kernels::PlanCache;
 use crate::rng::Rng;
+use crate::solvers::lanes::LaneAdmission;
 use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
 use crate::solvers::{EvalRequest, Solver, SolverKind, TaskSpec};
 use crate::tensor::Tensor;
@@ -93,6 +94,18 @@ impl RequestSpec {
         dim: usize,
         plans: Option<&PlanCache>,
     ) -> Result<Box<dyn Solver>, String> {
+        let (kind, plan, x0) = self.resolve_parts(sched, dim, plans)?;
+        kind.build_task(plan, x0, self.seed, &self.task)
+    }
+
+    /// Shared validation + plan + prior-noise resolution behind both
+    /// the boxed-solver path and the lane path.
+    fn resolve_parts(
+        &self,
+        sched: VpSchedule,
+        dim: usize,
+        plans: Option<&PlanCache>,
+    ) -> Result<(SolverKind, Arc<crate::kernels::TrajectoryPlan>, Tensor), String> {
         let kind = SolverKind::parse(&self.solver)
             .ok_or_else(|| format!("unknown solver '{}'", self.solver))?;
         let grid_kind = GridKind::parse(&self.grid)
@@ -123,7 +136,30 @@ impl RequestSpec {
         };
         let mut rng = Rng::for_stream(self.seed, 0x5eed);
         let x0 = rng.normal_tensor(self.n_samples, dim);
-        kind.build_task(plan, x0, self.seed, &self.task)
+        Ok((kind, plan, x0))
+    }
+
+    /// Resolve this request for lane admission (the serving path):
+    /// validation, shared plan, prior noise and task resolution are
+    /// identical to [`RequestSpec::build_solver_with_plans`], but no
+    /// boxed solver is built — the scheduler inserts the resolution
+    /// into the shard's [`crate::solvers::lanes::LaneEngine`].
+    pub fn resolve_lane(
+        &self,
+        sched: VpSchedule,
+        dim: usize,
+        plans: &PlanCache,
+    ) -> Result<LaneAdmission, String> {
+        let (kind, plan, x0) = self.resolve_parts(sched, dim, Some(plans))?;
+        let res = kind.resolve_task(plan, x0, &self.task)?;
+        Ok(LaneAdmission {
+            kind,
+            view: res.view,
+            x: res.x,
+            churn: res.churn,
+            guided: res.guided,
+            seed: self.seed,
+        })
     }
 }
 
@@ -141,6 +177,10 @@ pub struct SamplingResult {
     /// deadline expiry); `samples` then holds the partial iterate and
     /// `nfe` the evaluations actually consumed.
     pub cancelled: bool,
+    /// Last error-robust error measure (Eq. 15) — ERA solvers only.
+    /// Surfaced on the wire so clients can observe the error-robust
+    /// selection working.
+    pub delta_eps: Option<f64>,
 }
 
 /// Lifecycle of an admitted request inside the engine loop.
@@ -204,6 +244,7 @@ impl RequestState {
             queue_seconds: (started - self.submitted_at).as_secs_f64(),
             total_seconds: (now - self.submitted_at).as_secs_f64(),
             cancelled: false,
+            delta_eps: self.solver.delta_eps(),
         }
     }
 }

@@ -2,23 +2,30 @@
 //! a pool of **engine executors**, plus the public [`Coordinator`]
 //! handle.
 //!
-//! The scheduler thread owns every [`RequestState`]. Each tick it
-//! (1) routes slab completions arriving from the executors (scattering
-//! split-request segments to absolute offsets, so completion order is
-//! immaterial), (2) admits queued requests up to `max_active`,
-//! (3) sweeps cancellations/deadlines — retiring any request no
-//! in-flight slab references, mid-trajectory, without touching
-//! batch-mates, (4) pulls the next evaluation from every ready solver,
-//! (5) optionally lingers up to `max_wait` for batch-mates when under
-//! `min_rows` (the wait stays cancellation-aware), and (6) packs ready
-//! evaluations *per dataset* into slabs and dispatches them to the
-//! executor pool ([`crate::coordinator::executor`]). Up to
-//! `pipeline_depth` dispatch rounds stay in flight, so admission,
-//! solver stepping, and packing overlap engine execution, and a shard
-//! with `executors_per_shard > 1` evaluates several slabs
-//! concurrently. Requests join and leave the running batch at step
-//! granularity — continuous batching in the vLLM sense, applied to
-//! diffusion sampling.
+//! The scheduler thread owns a [`LaneEngine`]: admitted requests live
+//! as members of batch-major **lanes** (struct-of-arrays solver state,
+//! keyed by dataset/solver/plan/workload shape — see
+//! [`crate::solvers::lanes`]) instead of per-request boxed solvers, so
+//! one lane step advances every co-resident request with single fused
+//! passes. Each tick the scheduler (1) routes slab completions
+//! arriving from the executors (scattering split segments to absolute
+//! offsets, so completion order is immaterial), (2) admits queued
+//! requests up to `max_active` — same-tick identical configurations
+//! fuse into one lane, (3) sweeps cancellations/deadlines — compacting
+//! any member no in-flight slab references out of its lane,
+//! mid-trajectory, without perturbing batch-mates' bits, (4) pulls the
+//! next evaluation from every idle lane (splitting lanes whose ERA
+//! selections diverge), (5) optionally lingers up to `max_wait` for
+//! batch-mates when under `min_rows` (the wait stays
+//! cancellation-aware), and (6) packs ready lane evaluations *per
+//! dataset* into slabs — a whole lane is one zero-copy segment — and
+//! dispatches them to the executor pool
+//! ([`crate::coordinator::executor`]). Up to `pipeline_depth` dispatch
+//! rounds stay in flight, so admission, lane stepping, and packing
+//! overlap engine execution, and a shard with `executors_per_shard >
+//! 1` evaluates several slabs concurrently. Requests join and leave
+//! the running batch at step granularity — continuous batching in the
+//! vLLM sense, applied to diffusion sampling.
 //!
 //! A [`crate::pool::WorkerPool`] runs N of these shards behind one
 //! router; the `inflight_*` telemetry gauges updated here are what its
@@ -33,10 +40,11 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatchPolicy, SlabRecycler};
 use crate::coordinator::executor::{BankSet, ExecutorPool, SlabCompletion, SlabJob};
-use crate::coordinator::request::{RequestSpec, RequestState, SamplingResult};
+use crate::coordinator::request::{RequestSpec, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
 use crate::kernels::{fused, PlanCache};
 use crate::runtime::PjRtEngine;
+use crate::solvers::lanes::{LaneEngine, Removed};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EpsModel, EvalRequest};
 use crate::tensor::Tensor;
@@ -399,64 +407,59 @@ impl Drop for Coordinator {
     }
 }
 
+/// Per-request bookkeeping held by the scheduler: the reply channel and
+/// retirement metadata. The solver state itself lives in the shard's
+/// [`LaneEngine`] — admission inserts requests into batch-major lanes
+/// instead of building boxed solvers, and one lane step advances every
+/// member request with single fused passes over the stacked rows (see
+/// [`crate::solvers::lanes`]).
 struct Active {
-    state: RequestState,
+    id: u64,
     reply: Sender<Result<SamplingResult, String>>,
     cancel: CancelHandle,
     deadline: Option<Instant>,
     /// Rows this request pinned in the inflight gauges at submit.
     rows: usize,
-    /// Slabs of the currently dispatched evaluation still out at the
-    /// executors. While > 0 the request's slot must stay stable and the
-    /// request cannot be retired (the cancellation point is "no
-    /// in-flight slab references the request").
+    submitted_at: Instant,
+    /// First time the owning lane stepped (queue-wait boundary).
+    started_at: Option<Instant>,
+}
+
+/// Per-lane dispatch bookkeeping, parallel to the engine's lane table.
+/// While `inflight_slabs > 0` the lane must stay intact: the
+/// cancellation point is "no in-flight slab references the lane".
+#[derive(Default)]
+struct Flight {
+    /// Slabs of the lane's dispatched evaluation still at executors.
     inflight_slabs: usize,
-    /// Rows of the dispatched evaluation (`pending_rows` at dispatch).
+    /// Rows of the dispatched evaluation.
     expect_rows: usize,
-    /// Reassembly buffer for the dispatched evaluation: `(eps, rows
-    /// filled)`. Whole-request slabs adopt the engine output outright;
-    /// split requests scatter each completed segment to its absolute
-    /// `src_start` offset, so completion order is immaterial.
+    /// Reassembly buffer: `(eps, rows filled)`. Whole-lane slabs adopt
+    /// the engine output outright; split lanes scatter each completed
+    /// segment to its absolute `src_start` offset, so completion order
+    /// is immaterial.
     assembly: Option<(Tensor, usize)>,
     /// First slab error of the dispatched evaluation, if any. A
     /// partially failed evaluation is never delivered.
     failed: Option<String>,
 }
 
-/// Retire a request with a result (normal completion or cancellation),
-/// releasing its inflight gauges.
-fn retire_ok(done: Active, tele: &Telemetry, cancelled: bool) {
-    let rows = done.rows;
-    let mut res = done.state.finish();
-    res.cancelled = cancelled;
-    if cancelled {
-        tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
-    } else {
-        tele.record_finish(res.total_seconds, res.queue_seconds);
-    }
-    tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-    tele.inflight_rows.fetch_sub(rows, Ordering::SeqCst);
-    let _ = done.reply.send(Ok(res));
-}
-
-/// Retire a request with an error, releasing its inflight gauges.
-fn retire_err(done: Active, tele: &Telemetry, err: String) {
-    tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
-    tele.inflight_rows.fetch_sub(done.rows, Ordering::SeqCst);
-    let _ = done.reply.send(Err(err));
-}
-
-/// The scheduler's request table and pipeline bookkeeping.
+/// The scheduler's request/lane tables and pipeline bookkeeping.
 ///
-/// Slots are **stable**: a retired request's slot becomes `None` and is
-/// recycled through `free_slots`, so the slot indices carried by
-/// in-flight slab segments stay valid however many batch-mates retire
-/// while an evaluation is out (the old loop's `swap_remove` indices
-/// could not survive pipelining).
+/// Request slots are **stable** (free-listed), and the lane ids carried
+/// by in-flight slab segments stay valid however many members retire
+/// while an evaluation is out: a lane referenced by an in-flight slab
+/// is never dropped or reshaped (sweep and finalize both require
+/// `inflight_slabs == 0` first).
 struct Scheduler {
     slots: Vec<Option<Active>>,
     free_slots: Vec<usize>,
     active_count: usize,
+    /// Batch-major solver state: every admitted request is a member of
+    /// exactly one lane.
+    engine: LaneEngine,
+    /// Lane id -> dispatch state (lazily created per lane).
+    flights: Vec<Option<Flight>>,
     tele: Arc<Telemetry>,
     recycler: SlabRecycler,
     /// Dispatch round -> slabs still in flight from it. The window cap
@@ -464,19 +467,24 @@ struct Scheduler {
     rounds: BTreeMap<u64, usize>,
     next_seq: u64,
     next_round: u64,
+    /// Scratch for `LaneEngine::step_lane` (reused across pulls).
+    affected: Vec<usize>,
 }
 
 impl Scheduler {
-    fn new(tele: Arc<Telemetry>) -> Scheduler {
+    fn new(tele: Arc<Telemetry>, max_lane_rows: usize) -> Scheduler {
         Scheduler {
             slots: Vec::new(),
             free_slots: Vec::new(),
             active_count: 0,
+            engine: LaneEngine::new(max_lane_rows),
+            flights: Vec::new(),
             tele,
             recycler: SlabRecycler::new(),
             rounds: BTreeMap::new(),
             next_seq: 0,
             next_round: 0,
+            affected: Vec::new(),
         }
     }
 
@@ -495,17 +503,65 @@ impl Scheduler {
         }
     }
 
-    fn remove(&mut self, slot: usize) -> Active {
-        let a = self.slots[slot].take().expect("remove of empty slot");
+    fn take_slot(&mut self, slot: usize) -> Active {
+        let a = self.slots[slot].take().expect("take of empty slot");
         self.free_slots.push(slot);
         self.active_count -= 1;
         a
     }
 
-    /// Validate and admit one envelope; returns the slot on success.
+    fn lane_inflight(&self, lane: usize) -> usize {
+        self.flights.get(lane).and_then(|f| f.as_ref()).map_or(0, |f| f.inflight_slabs)
+    }
+
+    fn flight_mut(&mut self, lane: usize) -> &mut Flight {
+        if self.flights.len() <= lane {
+            self.flights.resize_with(lane + 1, || None);
+        }
+        self.flights[lane].get_or_insert_with(Flight::default)
+    }
+
+    /// Retire with a result (normal completion or cancellation),
+    /// releasing the inflight gauges.
+    fn retire_ok_active(&self, a: Active, removed: Removed, cancelled: bool) {
+        let now = Instant::now();
+        let started = a.started_at.unwrap_or(now);
+        let res = SamplingResult {
+            id: a.id,
+            samples: removed.samples,
+            nfe: removed.nfe,
+            queue_seconds: (started - a.submitted_at).as_secs_f64(),
+            total_seconds: (now - a.submitted_at).as_secs_f64(),
+            cancelled,
+            delta_eps: removed.delta_eps,
+        };
+        if cancelled {
+            self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.tele.record_finish(res.total_seconds, res.queue_seconds);
+            if let Some(d) = res.delta_eps {
+                self.tele.record_delta_eps(d);
+            }
+        }
+        self.tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+        self.tele.inflight_rows.fetch_sub(a.rows, Ordering::SeqCst);
+        let _ = a.reply.send(Ok(res));
+    }
+
+    /// Retire with an error, releasing the inflight gauges.
+    fn retire_err_active(&self, a: Active, err: String) {
+        self.tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
+        self.tele.inflight_rows.fetch_sub(a.rows, Ordering::SeqCst);
+        let _ = a.reply.send(Err(err));
+    }
+
+    /// Validate and admit one envelope into the lane engine; returns
+    /// the request slot on success. Same-tick requests with identical
+    /// `(dataset, solver, plan, workload shape)` land in one lane and
+    /// step together from then on.
     fn admit(&mut self, env: Envelope, bank: &dyn ModelBank, plans: &PlanCache) -> Option<usize> {
         // Requests cancelled (or expired) while still queued never cost
-        // a solver build or an evaluation.
+        // a lane insertion or an evaluation.
         let dead_on_arrival =
             env.cancel.is_cancelled() || env.deadline.is_some_and(|d| Instant::now() >= d);
         if dead_on_arrival {
@@ -519,11 +575,12 @@ impl Scheduler {
                 queue_seconds: 0.0,
                 total_seconds: 0.0,
                 cancelled: true,
+                delta_eps: None,
             }));
             return None;
         }
         let sched = bank.sched();
-        let solver = if env.spec.task.is_guided() && !bank.supports_cond(&env.spec.dataset) {
+        let resolved = if env.spec.task.is_guided() && !bank.supports_cond(&env.spec.dataset) {
             // Known-unservable at admission: a guided request must never
             // enter a fused slab whose conditional evaluation would fail
             // and retire unconditional batch-mates along with it.
@@ -533,10 +590,10 @@ impl Scheduler {
             ))
         } else {
             bank.dim(&env.spec.dataset)
-                .and_then(|dim| env.spec.build_solver_with_plans(sched, dim, plans))
+                .and_then(|dim| env.spec.resolve_lane(sched, dim, plans))
         };
-        match solver {
-            Ok(s) => {
+        match resolved {
+            Ok(adm) => {
                 self.tele.requests_admitted.fetch_add(1, Ordering::Relaxed);
                 if env.spec.task.is_guided() {
                     self.tele.guided_requests.fetch_add(1, Ordering::Relaxed);
@@ -548,16 +605,15 @@ impl Scheduler {
                     self.tele.stochastic_requests.fetch_add(1, Ordering::Relaxed);
                 }
                 let slot = self.insert(Active {
+                    id: env.id,
                     rows: env.spec.admission_rows(),
-                    state: RequestState::new(env.id, env.spec.dataset.clone(), s),
                     reply: env.reply,
                     cancel: env.cancel,
                     deadline: env.deadline,
-                    inflight_slabs: 0,
-                    expect_rows: 0,
-                    assembly: None,
-                    failed: None,
+                    submitted_at: Instant::now(),
+                    started_at: None,
                 });
+                self.engine.admit(slot, &env.spec.dataset, adm);
                 Some(slot)
             }
             Err(e) => {
@@ -569,93 +625,140 @@ impl Scheduler {
         }
     }
 
-    /// Retire every cancelled/expired request no in-flight slab still
-    /// references. Runs every scheduler tick — including linger waits —
-    /// so a cancel is honoured within a tick, not after `max_wait`.
+    /// Retire every cancelled/expired member of lanes with no slab in
+    /// flight. Compaction removes the member's rows from the lane's
+    /// stacked state without perturbing batch-mates' bits; a not-yet-
+    /// dispatched pending eval is regenerated from the compacted state.
+    /// Runs every scheduler tick — including linger waits — so a cancel
+    /// is honoured within a tick, not after `max_wait`.
     fn sweep(&mut self) {
         let now = Instant::now();
-        for slot in 0..self.slots.len() {
-            let retire = match &self.slots[slot] {
-                Some(a) => {
-                    a.inflight_slabs == 0
-                        && (a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d))
+        for lane in 0..self.engine.lane_slots() {
+            if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
+                continue;
+            }
+            loop {
+                let victim = self.engine.members(lane).iter().find_map(|m| {
+                    let a = self.slots[m.slot].as_ref()?;
+                    let dead = a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d);
+                    dead.then_some(m.slot)
+                });
+                let Some(slot) = victim else { break };
+                let removed = self.engine.remove_member(lane, slot, None);
+                let a = self.take_slot(slot);
+                self.retire_ok_active(a, removed, true);
+                if !self.engine.has_lane(lane) {
+                    if lane < self.flights.len() {
+                        self.flights[lane] = None;
+                    }
+                    break;
                 }
-                None => false,
-            };
-            if retire {
-                let done = self.remove(slot);
-                retire_ok(done, &self.tele, true);
             }
         }
     }
 
-    /// Pull the next evaluation from every request that has none in
-    /// flight; retire the finished ones.
+    /// Step every idle lane (no pending eval, no slab in flight);
+    /// retire lanes whose members all finished.
     fn pull_ready(&mut self) {
-        for slot in 0..self.slots.len() {
-            let needs_pull = matches!(
-                &self.slots[slot],
-                Some(a) if a.inflight_slabs == 0 && a.state.pending.is_none()
-            );
-            if needs_pull {
-                self.pull_slot(slot);
+        for lane in 0..self.engine.lane_slots() {
+            if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
+                continue;
+            }
+            if self.engine.is_done(lane) {
+                self.retire_lane_done(lane);
+                continue;
+            }
+            if self.engine.pending(lane).is_none() {
+                self.pull_lane(lane);
             }
         }
     }
 
-    /// Pull one slot's next evaluation; retires it when the solver is
-    /// done.
-    fn pull_slot(&mut self, slot: usize) {
-        let finished = {
-            let a = self.slots[slot].as_mut().expect("pull of empty slot");
-            !a.state.pull()
-        };
-        if finished {
-            let done = self.remove(slot);
-            retire_ok(done, &self.tele, false);
-        }
-    }
-
-    /// Rows pending on requests that could join the next dispatch.
-    fn dispatchable_rows(&self) -> usize {
-        self.slots
-            .iter()
-            .flatten()
-            .filter(|a| a.inflight_slabs == 0)
-            .map(|a| a.state.pending_rows())
-            .sum()
-    }
-
-    /// Pack every ready pending evaluation (per dataset) and hand the
-    /// slabs to the executor pool as one dispatch round.
-    fn dispatch_round(&mut self, batcher: &Batcher, executors: &ExecutorPool) -> usize {
-        let mut recycler = std::mem::take(&mut self.recycler);
-        let mut jobs: Vec<(Arc<str>, crate::coordinator::batcher::Slab)> = Vec::new();
-        {
-            let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
-            for (idx, s) in self.slots.iter().enumerate() {
-                if let Some(a) = s {
-                    if a.inflight_slabs == 0 && a.state.pending.is_some() {
-                        by_dataset.entry(a.state.dataset.as_str()).or_default().push(idx);
+    /// Pull one lane's next evaluation — possibly splitting it when
+    /// ERA selections diverge — and retire any resulting lane that
+    /// finished.
+    fn pull_lane(&mut self, lane: usize) {
+        let mut affected = std::mem::take(&mut self.affected);
+        affected.clear();
+        self.engine.step_lane(lane, &mut affected);
+        let now = Instant::now();
+        for &lid in &affected {
+            let mut k = 0;
+            while k < self.engine.members(lid).len() {
+                let slot = self.engine.members(lid)[k].slot;
+                k += 1;
+                if let Some(a) = self.slots[slot].as_mut() {
+                    if a.started_at.is_none() {
+                        a.started_at = Some(now);
                     }
                 }
             }
-            for (dataset, idxs) in by_dataset {
-                let pending: Vec<(usize, &EvalRequest)> = idxs
-                    .iter()
-                    .map(|&i| (i, self.slots[i].as_ref().unwrap().state.pending.as_ref().unwrap()))
-                    .collect();
+            if self.engine.is_done(lid) {
+                self.retire_lane_done(lid);
+            }
+        }
+        self.affected = affected;
+    }
+
+    /// A finished lane retires all member requests at once (lanes run
+    /// in lockstep, so completion is lane-granular).
+    fn retire_lane_done(&mut self, lane: usize) {
+        for removed in self.engine.finish_lane(lane) {
+            let a = self.take_slot(removed.slot);
+            self.retire_ok_active(a, removed, false);
+        }
+        if lane < self.flights.len() {
+            self.flights[lane] = None;
+        }
+    }
+
+    /// Rows pending on lanes that could join the next dispatch.
+    fn dispatchable_rows(&self) -> usize {
+        (0..self.engine.lane_slots())
+            .filter(|&l| self.engine.has_lane(l) && self.lane_inflight(l) == 0)
+            .filter_map(|l| self.engine.pending(l).map(|p| p.x.rows()))
+            .sum()
+    }
+
+    /// Pack every ready lane evaluation (per dataset) and hand the
+    /// slabs to the executor pool as one dispatch round. Lane rows are
+    /// already contiguous, so a lane that fits one slab ships its
+    /// stacked tensor zero-copy — and the whole lane costs a single
+    /// segment, however many requests it fuses.
+    fn dispatch_round(&mut self, batcher: &Batcher, executors: &ExecutorPool) -> usize {
+        let mut recycler = std::mem::take(&mut self.recycler);
+        let mut jobs: Vec<(Arc<str>, crate::coordinator::batcher::Slab)> = Vec::new();
+        let mut dispatched_lanes: Vec<usize> = Vec::new();
+        {
+            let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+            for lane in 0..self.engine.lane_slots() {
+                if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
+                    continue;
+                }
+                if self.engine.pending(lane).is_none() {
+                    continue;
+                }
+                by_dataset.entry(self.engine.dataset(lane)).or_default().push(lane);
+            }
+            for (dataset, lanes) in by_dataset {
+                let pending: Vec<(usize, &EvalRequest)> =
+                    lanes.iter().map(|&l| (l, self.engine.pending(l).unwrap())).collect();
                 let plan = batcher.pack_recycled(&pending, &mut recycler);
                 // One allocation per dataset group; slabs share it.
                 let name: Arc<str> = Arc::from(dataset);
                 for slab in plan.slabs {
                     jobs.push((name.clone(), slab));
                 }
+                dispatched_lanes.extend(lanes);
             }
         }
         self.recycler = recycler;
         if jobs.is_empty() {
             return 0;
+        }
+        self.tele.lanes.store(self.engine.lane_count(), Ordering::Relaxed);
+        for &lane in &dispatched_lanes {
+            self.tele.observe_lane_occupancy(self.engine.members(lane).len());
         }
         let round = self.next_round;
         self.next_round += 1;
@@ -664,27 +767,35 @@ impl Scheduler {
             let seq = self.next_seq;
             self.next_seq += 1;
             for seg in &slab.segments {
-                let a = self.slots[seg.source].as_mut().unwrap();
-                if a.inflight_slabs == 0 {
-                    a.expect_rows = a.state.pending_rows();
-                    debug_assert!(a.assembly.is_none() && a.failed.is_none());
+                let rows = self.engine.pending(seg.source).map_or(0, |p| p.x.rows());
+                let f = self.flight_mut(seg.source);
+                if f.inflight_slabs == 0 {
+                    f.expect_rows = rows;
+                    debug_assert!(f.assembly.is_none() && f.failed.is_none());
                 }
-                a.inflight_slabs += 1;
+                f.inflight_slabs += 1;
             }
             self.tele.inflight_slabs.fetch_add(1, Ordering::SeqCst);
             dispatched += 1;
             if !executors.dispatch(SlabJob { seq, round, dataset, slab }) {
                 // Every executor has exited (only possible if they all
                 // panicked): no dispatched slab will ever complete, so
-                // fail every request with work in flight and reset the
+                // fail every lane with work in flight and reset the
                 // pipeline bookkeeping rather than wait forever.
                 self.tele.inflight_slabs.store(0, Ordering::SeqCst);
                 self.rounds.clear();
-                for slot in 0..self.slots.len() {
-                    let stuck = self.slots[slot].as_ref().is_some_and(|a| a.inflight_slabs > 0);
-                    if stuck {
-                        let done = self.remove(slot);
-                        retire_err(done, &self.tele, "executor pool stopped".into());
+                for lane in 0..self.flights.len() {
+                    let stuck =
+                        self.flights[lane].as_ref().is_some_and(|f| f.inflight_slabs > 0);
+                    if !stuck {
+                        continue;
+                    }
+                    self.flights[lane] = None;
+                    if self.engine.has_lane(lane) {
+                        for slot in self.engine.drop_lane(lane) {
+                            let a = self.take_slot(slot);
+                            self.retire_err_active(a, "executor pool stopped".into());
+                        }
                     }
                 }
                 return 0;
@@ -697,15 +808,15 @@ impl Scheduler {
     }
 
     /// Route one sequence-numbered slab completion: account telemetry,
-    /// scatter or adopt the output, and finalize every request whose
-    /// evaluation has now fully returned.
+    /// scatter or adopt the output per lane, and finalize every lane
+    /// whose evaluation has now fully returned.
     fn route(&mut self, c: SlabCompletion) {
-        // Slots referenced by an in-flight slab are never removed
+        // Lanes referenced by an in-flight slab are never dropped
         // (sweep/finalize require inflight_slabs == 0), so the guards
         // below are for one degenerate case only: completions already
         // in the channel when the executor-pool-stopped cleanup failed
-        // their requests. Those route as no-ops instead of panicking
-        // the scheduler or underflowing the gauge.
+        // their lanes. Those route as no-ops instead of panicking the
+        // scheduler or underflowing the gauge.
         let _ = self
             .tele
             .inflight_slabs
@@ -726,28 +837,30 @@ impl Scheduler {
                     .padded_rows
                     .fetch_add(c.executed_rows.saturating_sub(c.rows), Ordering::Relaxed);
                 // Zero-copy completion: a slab that was exactly one
-                // whole evaluation adopts the engine output outright.
+                // whole lane evaluation adopts the engine output.
                 let whole = segments.len() == 1 && {
                     let seg = &segments[0];
-                    self.slots[seg.source].as_ref().is_some_and(|a| {
-                        seg.src_start == 0 && seg.rows == a.expect_rows && a.assembly.is_none()
+                    self.flights.get(seg.source).and_then(|f| f.as_ref()).is_some_and(|f| {
+                        seg.src_start == 0 && seg.rows == f.expect_rows && f.assembly.is_none()
                     })
                 };
                 if whole {
                     let seg = &segments[0];
-                    let a = self.slots[seg.source].as_mut().unwrap();
-                    a.assembly = Some((out, seg.rows));
+                    let f = self.flights[seg.source].as_mut().unwrap();
+                    f.assembly = Some((out, seg.rows));
                 } else {
-                    let (slots, recycler) = (&mut self.slots, &mut self.recycler);
+                    let flights = &mut self.flights;
+                    let recycler = &mut self.recycler;
                     for seg in &segments {
-                        let Some(a) = slots[seg.source].as_mut() else {
+                        let Some(f) = flights.get_mut(seg.source).and_then(|o| o.as_mut())
+                        else {
                             continue; // stale completion, see above
                         };
-                        if a.failed.is_some() {
+                        if f.failed.is_some() {
                             continue; // assembly will be discarded anyway
                         }
-                        let expect = a.expect_rows;
-                        let (buf, filled) = a.assembly.get_or_insert_with(|| {
+                        let expect = f.expect_rows;
+                        let (buf, filled) = f.assembly.get_or_insert_with(|| {
                             (recycler.take_assembly(expect, out.cols()), 0)
                         });
                         // Absolute-offset scatter: stitching is correct
@@ -759,27 +872,31 @@ impl Scheduler {
             }
             Err(e) => {
                 for seg in &segments {
-                    let Some(a) = self.slots[seg.source].as_mut() else {
-                        continue; // stale completion, see above
-                    };
-                    if a.failed.is_none() {
-                        a.failed = Some(e.clone());
+                    if let Some(f) = self.flights.get_mut(seg.source).and_then(|o| o.as_mut()) {
+                        if f.failed.is_none() {
+                            f.failed = Some(e.clone());
+                        }
                     }
                 }
             }
         }
-        // A request appears at most once per slab, so one decrement per
-        // segment; slots are stable, so finalizing (and removing) one
-        // source cannot shift another's index.
+        // A lane appears at most once per slab, so one decrement per
+        // segment; flights are lane-id-stable, so finalizing one lane
+        // cannot shift another's entry.
         for seg in &segments {
-            if let Some(a) = self.slots[seg.source].as_mut() {
-                a.inflight_slabs = a.inflight_slabs.saturating_sub(1);
+            if let Some(f) = self.flights.get_mut(seg.source).and_then(|o| o.as_mut()) {
+                f.inflight_slabs = f.inflight_slabs.saturating_sub(1);
             }
         }
         for seg in &segments {
-            let ready = self.slots[seg.source].as_ref().is_some_and(|a| a.inflight_slabs == 0);
+            let ready = self
+                .flights
+                .get(seg.source)
+                .and_then(|f| f.as_ref())
+                .is_some_and(|f| f.inflight_slabs == 0)
+                && self.engine.has_lane(seg.source);
             if ready {
-                self.finalize(seg.source);
+                self.finalize_lane(seg.source);
             }
         }
         let mut bufs = c.buffers;
@@ -787,54 +904,52 @@ impl Scheduler {
         self.recycler.give_buffers(bufs);
     }
 
-    /// All slabs of `slot`'s evaluation are back: deliver it, or retire
-    /// the request if a slab failed or a cancel/deadline latched while
-    /// it was in flight (the eps is dropped, never delivered — the new
-    /// cancellation point is "no in-flight slab references the
-    /// request").
-    fn finalize(&mut self, slot: usize) {
-        enum Outcome {
-            Fail(String),
-            Cancel,
-            Deliver,
+    /// All slabs of a lane's evaluation are back: compact out members
+    /// whose cancel/deadline latched while it was in flight (their
+    /// share of the output is dropped undelivered, without perturbing
+    /// batch-mates' bits), then deliver the stacked eps — one fused
+    /// advance for every surviving member.
+    fn finalize_lane(&mut self, lane: usize) {
+        let Some(f) = self.flights[lane].take() else { return };
+        debug_assert_eq!(f.inflight_slabs, 0);
+        if let Some(err) = f.failed {
+            if let Some((buf, _)) = f.assembly {
+                self.recycler.give_assembly(buf);
+            }
+            for slot in self.engine.drop_lane(lane) {
+                let a = self.take_slot(slot);
+                self.retire_err_active(a, format!("model evaluation failed: {err}"));
+            }
+            return;
         }
+        let (mut eps, filled) = f.assembly.expect("deliver without assembly");
+        debug_assert_eq!(filled, eps.rows(), "lane assembly incomplete");
+        debug_assert_eq!(eps.rows(), f.expect_rows);
         let now = Instant::now();
-        let (outcome, reclaimed) = {
-            let a = self.slots[slot].as_mut().expect("finalize of empty slot");
-            debug_assert_eq!(a.inflight_slabs, 0);
-            if let Some(e) = a.failed.take() {
-                (Outcome::Fail(e), a.assembly.take())
-            } else if a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d) {
-                (Outcome::Cancel, a.assembly.take())
-            } else {
-                (Outcome::Deliver, None)
+        loop {
+            let victim = self.engine.members(lane).iter().find_map(|m| {
+                let a = self.slots[m.slot].as_ref()?;
+                let dead = a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d);
+                dead.then_some(m.slot)
+            });
+            let Some(slot) = victim else { break };
+            let removed = self.engine.remove_member(lane, slot, Some(&mut eps));
+            let a = self.take_slot(slot);
+            self.retire_ok_active(a, removed, true);
+            if !self.engine.has_lane(lane) {
+                // Every member cancelled mid-flight: drop the output.
+                self.recycler.give_assembly(eps);
+                return;
             }
-        };
-        if let Some((buf, _)) = reclaimed {
-            self.recycler.give_assembly(buf);
         }
-        match outcome {
-            Outcome::Fail(err) => {
-                let done = self.remove(slot);
-                retire_err(done, &self.tele, format!("model evaluation failed: {err}"));
-            }
-            Outcome::Cancel => {
-                let done = self.remove(slot);
-                retire_ok(done, &self.tele, true);
-            }
-            Outcome::Deliver => {
-                {
-                    let a = self.slots[slot].as_mut().unwrap();
-                    let (eps, filled) = a.assembly.take().expect("deliver without assembly");
-                    debug_assert_eq!(filled, eps.rows(), "request assembly incomplete");
-                    debug_assert_eq!(eps.rows(), a.expect_rows);
-                    self.tele.steps.fetch_add(1, Ordering::Relaxed);
-                    a.state.deliver(eps);
-                }
-                // Pull immediately so the request can join the next
-                // dispatch round without waiting a tick.
-                self.pull_slot(slot);
-            }
+        self.tele.steps.fetch_add(self.engine.members(lane).len(), Ordering::Relaxed);
+        self.engine.deliver(lane, eps);
+        if self.engine.is_done(lane) {
+            self.retire_lane_done(lane);
+        } else {
+            // Pull immediately so the lane can join the next dispatch
+            // round without waiting a tick.
+            self.pull_lane(lane);
         }
     }
 }
@@ -857,7 +972,7 @@ fn run_loop(
         comp_tx,
         tele.clone(),
     );
-    let mut s = Scheduler::new(tele);
+    let mut s = Scheduler::new(tele, config.policy.max_rows);
     let mut queue_open = true;
 
     'outer: loop {
@@ -933,9 +1048,25 @@ fn run_loop(
                 let slice = (deadline - now).min(Duration::from_millis(1));
                 match rx.recv_timeout(slice) {
                     Ok(env) => {
-                        if let Some(slot) = s.admit(env, bank.as_ref(), &plans) {
+                        let mut admitted = s.admit(env, bank.as_ref(), &plans).is_some();
+                        // Drain the rest of the burst before stepping:
+                        // the first pull seals new lanes, so same-window
+                        // identical arrivals must land first to fuse.
+                        while s.active_count < config.max_active {
+                            match rx.try_recv() {
+                                Ok(env) => {
+                                    admitted |= s.admit(env, bank.as_ref(), &plans).is_some();
+                                }
+                                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                    queue_open = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if admitted {
                             // New arrivals join this round immediately.
-                            s.pull_slot(slot);
+                            s.pull_ready();
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}

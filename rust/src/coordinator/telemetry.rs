@@ -48,12 +48,26 @@ pub struct Telemetry {
     /// while `d` rounds (this one included) were in flight; the last
     /// bucket absorbs `>= DEPTH_HIST_BUCKETS`.
     pub depth_hist: [AtomicUsize; DEPTH_HIST_BUCKETS],
+    /// Gauge: live lanes in the shard's lane engine (updated at each
+    /// dispatch round).
+    pub lanes: AtomicUsize,
+    /// Lane-occupancy histogram: bucket `m-1` counts lane dispatches
+    /// whose lane held `m` member requests; the last bucket absorbs
+    /// `>= LANE_OCC_BUCKETS` (deep fusion).
+    pub lane_occ_hist: [AtomicUsize; LANE_OCC_BUCKETS],
+    /// Sum + count of final per-request `delta_eps` values (ERA
+    /// requests only) — the wire-visible error-robust diagnostics,
+    /// aggregated for `stats`.
+    delta_eps_agg: Mutex<(f64, usize)>,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
 
 /// Buckets of the pipeline-depth histogram (depth 1..=8+).
 pub const DEPTH_HIST_BUCKETS: usize = 8;
+
+/// Buckets of the lane-occupancy histogram (1..=8+ members per lane).
+pub const LANE_OCC_BUCKETS: usize = 8;
 
 impl Telemetry {
     pub fn new() -> Self {
@@ -111,6 +125,45 @@ impl Telemetry {
         out
     }
 
+    /// Record one lane dispatch carrying `members` fused requests.
+    pub fn observe_lane_occupancy(&self, members: usize) {
+        let bucket = members.clamp(1, LANE_OCC_BUCKETS) - 1;
+        self.lane_occ_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the lane-occupancy histogram (bucket `m-1` = lanes
+    /// dispatched with `m` members, last bucket = more).
+    pub fn lane_occ_snapshot(&self) -> [usize; LANE_OCC_BUCKETS] {
+        let mut out = [0usize; LANE_OCC_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.lane_occ_hist.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Record one finished ERA request's final error measure.
+    pub fn record_delta_eps(&self, d: f64) {
+        let mut agg = self.delta_eps_agg.lock().unwrap();
+        agg.0 += d;
+        agg.1 += 1;
+    }
+
+    /// `(sum, count)` of recorded final `delta_eps` values — the pool
+    /// merges these across shards before averaging.
+    pub fn delta_eps_agg(&self) -> (f64, usize) {
+        *self.delta_eps_agg.lock().unwrap()
+    }
+
+    /// Mean final `delta_eps` over finished ERA requests (0 when none).
+    pub fn mean_delta_eps(&self) -> f64 {
+        let (sum, count) = self.delta_eps_agg();
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
+    }
+
     /// Fraction of executor thread time spent evaluating (0 when no
     /// executor has ticked yet).
     pub fn executor_busy_fraction(&self) -> f64 {
@@ -148,7 +201,7 @@ impl Telemetry {
     pub fn summary(&self) -> String {
         format!(
             "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
-             guided={} img2img={} sde={} exec_busy={:.0}% inflight_slabs={} \
+             guided={} img2img={} sde={} exec_busy={:.0}% inflight_slabs={} lanes={} \
              p50={:.1}ms p99={:.1}ms",
             self.requests_finished.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
@@ -162,6 +215,7 @@ impl Telemetry {
             self.stochastic_requests.load(Ordering::Relaxed),
             100.0 * self.executor_busy_fraction(),
             self.inflight_slabs.load(Ordering::Relaxed),
+            self.lanes.load(Ordering::Relaxed),
             1e3 * self.latency_percentile(0.5),
             1e3 * self.latency_percentile(0.99),
         )
@@ -235,6 +289,35 @@ mod tests {
         assert_eq!(h[2], 1);
         assert_eq!(h[DEPTH_HIST_BUCKETS - 1], 1);
         assert_eq!(h.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn lane_occupancy_histogram_buckets_and_clamps() {
+        let t = Telemetry::new();
+        t.observe_lane_occupancy(1);
+        t.observe_lane_occupancy(1);
+        t.observe_lane_occupancy(4);
+        t.observe_lane_occupancy(0); // clamped into the 1-member bucket
+        t.observe_lane_occupancy(64); // clamped into the last bucket
+        let h = t.lane_occ_snapshot();
+        assert_eq!(h[0], 3);
+        assert_eq!(h[3], 1);
+        assert_eq!(h[LANE_OCC_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<usize>(), 5);
+        t.lanes.store(7, Ordering::Relaxed);
+        assert!(t.summary().contains("lanes=7"));
+    }
+
+    #[test]
+    fn delta_eps_aggregation_means_over_count() {
+        let t = Telemetry::new();
+        assert_eq!(t.mean_delta_eps(), 0.0);
+        t.record_delta_eps(0.2);
+        t.record_delta_eps(0.4);
+        let (sum, count) = t.delta_eps_agg();
+        assert!((sum - 0.6).abs() < 1e-12);
+        assert_eq!(count, 2);
+        assert!((t.mean_delta_eps() - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -113,9 +113,89 @@ impl HistoryRing {
     }
 }
 
+/// Shape-keyed tensor free lists for the lane engine's struct-of-arrays
+/// state: lane splits and member retirement allocate/free stacked
+/// tensors of varying row counts, and this pool recycles them so churny
+/// admission/cancel traffic stops touching the allocator once warm.
+///
+/// Unlike [`ScratchArena`] (one fixed shape per solver), shapes here
+/// vary with lane membership, so the free lists are keyed by
+/// `(rows, cols)` and bounded in total (a load spike must not pin
+/// memory forever).
+pub struct TensorPool {
+    free: std::collections::BTreeMap<(usize, usize), Vec<Tensor>>,
+    held: usize,
+    cap: usize,
+    allocated: usize,
+}
+
+impl TensorPool {
+    /// Pool retaining at most `cap` free tensors across all shapes.
+    pub fn new(cap: usize) -> TensorPool {
+        TensorPool { free: std::collections::BTreeMap::new(), held: 0, cap, allocated: 0 }
+    }
+
+    /// Tensors handed out that required a fresh allocation.
+    pub fn allocations(&self) -> usize {
+        self.allocated
+    }
+
+    /// Free tensors currently retained.
+    pub fn held(&self) -> usize {
+        self.held
+    }
+
+    /// Pop a `(rows, cols)` tensor. Contents are unspecified — callers
+    /// overwrite every element they read.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Tensor {
+        match self.free.get_mut(&(rows, cols)).and_then(|v| v.pop()) {
+            Some(t) => {
+                self.held -= 1;
+                t
+            }
+            None => {
+                self.allocated += 1;
+                Tensor::zeros(rows, cols)
+            }
+        }
+    }
+
+    /// Return a tensor for reuse (dropped when the pool is at capacity
+    /// or the tensor is degenerate).
+    pub fn give(&mut self, t: Tensor) {
+        if self.held >= self.cap || t.rows() == 0 || t.cols() == 0 {
+            return;
+        }
+        self.free.entry((t.rows(), t.cols())).or_default().push(t);
+        self.held += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tensor_pool_recycles_by_shape_and_bounds_retention() {
+        let mut p = TensorPool::new(2);
+        let a = p.take(3, 2);
+        let b = p.take(4, 2);
+        assert_eq!(p.allocations(), 2);
+        p.give(a);
+        p.give(b);
+        assert_eq!(p.held(), 2);
+        let a2 = p.take(3, 2);
+        assert_eq!((a2.rows(), a2.cols()), (3, 2));
+        assert_eq!(p.allocations(), 2, "shape hit must not allocate");
+        // At capacity the give is dropped, not retained.
+        p.give(a2);
+        p.give(Tensor::zeros(9, 9));
+        assert_eq!(p.held(), 2);
+        // Degenerate shapes are never retained.
+        p.take(3, 2);
+        p.give(Tensor::zeros(0, 2));
+        assert_eq!(p.held(), 1);
+    }
 
     #[test]
     fn arena_recycles() {

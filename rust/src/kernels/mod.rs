@@ -13,10 +13,12 @@
 //!   combinations, scaled-diff error norms, row-slab gather/scatter).
 //!   They are the Rust-native mirror of the `solver_combine` Pallas
 //!   kernel family: one pass over the output, no intermediate tensors.
-//! * [`arena`] — [`ScratchArena`] (recycled step buffers) and
+//! * [`arena`] — [`ScratchArena`] (recycled step buffers),
 //!   [`HistoryRing`] (bounded newest-first history that moves model
-//!   outputs in and hands evicted slots back for reuse), so solvers run
-//!   with zero steady-state heap allocations per step.
+//!   outputs in and hands evicted slots back for reuse) and
+//!   [`TensorPool`] (shape-keyed free lists backing the lane engine's
+//!   stacked state across splits and compaction), so solvers run with
+//!   zero steady-state heap allocations per step.
 //! * [`plan`] — [`TrajectoryPlan`]: the grid, VP-schedule samples,
 //!   per-transition DDIM coefficients, AM corrector weights, per-step
 //!   DPM coefficients and a concurrent per-`(step, indices)` Lagrange
@@ -33,5 +35,5 @@ pub mod arena;
 pub mod fused;
 pub mod plan;
 
-pub use arena::{HistoryRing, ScratchArena};
+pub use arena::{HistoryRing, ScratchArena, TensorPool};
 pub use plan::{DpmStepPlan, PlanCache, PlanKey, PlanView, TrajectoryPlan};

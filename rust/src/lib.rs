@@ -11,15 +11,22 @@
 //!   ([`runtime`]), drives them with the paper's solver and every baseline
 //!   ([`solvers`]), and serves batched sampling requests through a
 //!   continuous-batching coordinator ([`coordinator`]) — per shard, an
-//!   event-driven scheduler feeding a pool of engine executors
-//!   (`executors_per_shard` threads over a [`coordinator::BankSet`] of
-//!   replicas, up to `pipeline_depth` dispatch rounds in flight, with
+//!   event-driven scheduler stepping batch-major **solver lanes**
+//!   ([`solvers::lanes`]: struct-of-arrays state advancing every
+//!   co-resident request with single fused passes, ERA selections
+//!   splitting divergent members into sibling lanes, compaction
+//!   retiring members without perturbing batch-mates' bits) and
+//!   feeding a pool of engine executors (`executors_per_shard` threads
+//!   over a [`coordinator::BankSet`] of replicas, up to
+//!   `pipeline_depth` dispatch rounds in flight, with
 //!   sequence-numbered slab completions so out-of-order delivery
 //!   reassembles bit-identically) — scaled out across N coordinator
 //!   shards by the worker pool ([`pool`]: routing policies, global
 //!   admission control, per-request deadlines and cancellation, merged
-//!   telemetry incl. executor utilisation and pipeline-depth
-//!   histograms) behind a TCP JSON-lines server ([`server`]).
+//!   telemetry incl. executor utilisation, pipeline-depth and
+//!   lane-occupancy histograms) behind a TCP JSON-lines server
+//!   ([`server`], which also surfaces each ERA request's final
+//!   `delta_eps` on the wire).
 //!
 //! The sampling hot path runs on the zero-copy kernel layer
 //! ([`kernels`]): in-place fused slice ops, per-solver scratch arenas

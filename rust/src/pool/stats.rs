@@ -8,7 +8,7 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::coordinator::telemetry::{sorted_percentile, DEPTH_HIST_BUCKETS};
+use crate::coordinator::telemetry::{sorted_percentile, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS};
 use crate::coordinator::Telemetry;
 use crate::json::Json;
 
@@ -38,10 +38,21 @@ pub struct ShardStats {
     /// Pipeline-depth histogram: `depth_hist[d-1]` dispatches happened
     /// at `d` rounds in flight (last bucket absorbs deeper).
     pub depth_hist: [usize; DEPTH_HIST_BUCKETS],
+    /// Live-lane gauge of the shard's lane engine at the last dispatch.
+    pub lanes: usize,
+    /// Lane-occupancy histogram: `lane_occ_hist[m-1]` lane dispatches
+    /// carried `m` fused member requests (last bucket absorbs deeper).
+    pub lane_occ_hist: [usize; LANE_OCC_BUCKETS],
+    /// Sum / count of final per-request `delta_eps` values (ERA only).
+    pub delta_eps_sum: f64,
+    pub delta_eps_count: usize,
 }
 
 impl ShardStats {
     pub fn from_telemetry(shard: usize, t: &Telemetry) -> ShardStats {
+        // One locked read: two separate agg() calls could tear the
+        // (sum, count) pair against a concurrent record_delta_eps.
+        let (delta_eps_sum, delta_eps_count) = t.delta_eps_agg();
         ShardStats {
             shard,
             admitted: t.requests_admitted.load(Ordering::Relaxed),
@@ -60,6 +71,19 @@ impl ShardStats {
             executor_idle_nanos: t.executor_idle_nanos.load(Ordering::Relaxed),
             inflight_slabs: t.inflight_slabs.load(Ordering::Relaxed),
             depth_hist: t.depth_hist_snapshot(),
+            lanes: t.lanes.load(Ordering::Relaxed),
+            lane_occ_hist: t.lane_occ_snapshot(),
+            delta_eps_sum,
+            delta_eps_count,
+        }
+    }
+
+    /// Mean final `delta_eps` over this shard's finished ERA requests.
+    pub fn mean_delta_eps(&self) -> f64 {
+        if self.delta_eps_count == 0 {
+            0.0
+        } else {
+            self.delta_eps_sum / self.delta_eps_count as f64
         }
     }
 
@@ -103,6 +127,12 @@ impl ShardStats {
                 "depth_hist",
                 Json::Arr(self.depth_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
+            ("lanes", Json::Num(self.lanes as f64)),
+            (
+                "lane_occ_hist",
+                Json::Arr(self.lane_occ_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
         ])
     }
 }
@@ -214,6 +244,34 @@ impl PoolStats {
         out
     }
 
+    /// Live lanes across all shards (gauges sum).
+    pub fn lanes(&self) -> usize {
+        self.per_shard.iter().map(|s| s.lanes).sum()
+    }
+
+    /// Element-wise sum of the shards' lane-occupancy histograms.
+    pub fn lane_occ_hist(&self) -> [usize; LANE_OCC_BUCKETS] {
+        let mut out = [0usize; LANE_OCC_BUCKETS];
+        for s in &self.per_shard {
+            for (o, n) in out.iter_mut().zip(s.lane_occ_hist.iter()) {
+                *o += n;
+            }
+        }
+        out
+    }
+
+    /// Pool-wide mean final `delta_eps`: summed sums over summed counts
+    /// (a per-shard average would overweight lightly loaded shards).
+    pub fn mean_delta_eps(&self) -> f64 {
+        let sum: f64 = self.per_shard.iter().map(|s| s.delta_eps_sum).sum();
+        let count: usize = self.per_shard.iter().map(|s| s.delta_eps_count).sum();
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
+    }
+
     /// Pool-wide workload mix: (guided, img2img, stochastic) admissions.
     pub fn workloads(&self) -> (usize, usize, usize) {
         (
@@ -249,7 +307,7 @@ impl PoolStats {
         format!(
             "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
              evals={} rows={} occupancy={:.1} pad={:.1}% exec_busy={:.0}% inflight_slabs={} \
-             p50={:.1}ms p99={:.1}ms",
+             lanes={} p50={:.1}ms p99={:.1}ms",
             self.shards(),
             self.placement,
             self.executors_per_shard,
@@ -263,6 +321,7 @@ impl PoolStats {
             100.0 * self.padding_fraction(),
             100.0 * self.executor_busy_fraction(),
             self.inflight_slabs(),
+            self.lanes(),
             self.p50_ms,
             self.p99_ms,
         )
@@ -295,6 +354,12 @@ impl PoolStats {
                 "depth_hist",
                 Json::Arr(self.depth_hist().iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
+            ("lanes", Json::Num(self.lanes() as f64)),
+            (
+                "lane_occ_hist",
+                Json::Arr(self.lane_occ_hist().iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
         ])
@@ -369,6 +434,45 @@ mod tests {
             s.to_json().get("depth_hist").as_arr().map(|v| v.len()),
             Some(DEPTH_HIST_BUCKETS)
         );
+    }
+
+    #[test]
+    fn lane_gauges_and_delta_eps_merge_across_shards() {
+        // Merge rules: the lane gauge and occupancy histogram sum;
+        // mean_delta_eps derives from summed sums over summed counts —
+        // never a per-shard average, which would overweight a shard
+        // that finished one request.
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.lanes.store(3, Ordering::Relaxed);
+        b.lanes.store(2, Ordering::Relaxed);
+        a.observe_lane_occupancy(1);
+        a.observe_lane_occupancy(4);
+        b.observe_lane_occupancy(4);
+        b.observe_lane_occupancy(99); // clamps into the last bucket
+        for _ in 0..3 {
+            a.record_delta_eps(0.1);
+        }
+        b.record_delta_eps(0.5);
+        let s = PoolStats::collect("round-robin", &[&a, &b], 0, 1, 1);
+        assert_eq!(s.lanes(), 5);
+        let h = s.lane_occ_hist();
+        assert_eq!(h[0], 1);
+        assert_eq!(h[3], 2);
+        assert_eq!(h[LANE_OCC_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        // (3 * 0.1 + 0.5) / 4 = 0.2 — not the 0.3 a per-shard average
+        // of (0.1, 0.5) would give.
+        assert!((s.mean_delta_eps() - 0.2).abs() < 1e-12, "{}", s.mean_delta_eps());
+        assert!((s.per_shard[0].mean_delta_eps() - 0.1).abs() < 1e-12);
+        assert!(s.summary().contains("lanes=5"));
+        let json = s.to_json();
+        assert_eq!(json.get("lanes").as_usize(), Some(5));
+        assert_eq!(json.get("lane_occ_hist").as_arr().map(|v| v.len()), Some(LANE_OCC_BUCKETS));
+        assert!((json.get("mean_delta_eps").as_f64().unwrap() - 0.2).abs() < 1e-12);
+        let sj = s.per_shard[1].to_json();
+        assert_eq!(sj.get("lanes").as_usize(), Some(2));
+        assert!((sj.get("mean_delta_eps").as_f64().unwrap() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -117,6 +117,7 @@ impl Client {
             seconds: resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3,
             nfe: resp.get("nfe").as_usize().unwrap_or(0),
             cancelled: resp.get("cancelled").as_bool().unwrap_or(false),
+            delta_eps: resp.get("delta_eps").as_f64(),
         })
     }
 }
@@ -130,6 +131,8 @@ pub struct SampleOutcome {
     /// Network evaluations actually consumed (< budget when cancelled).
     pub nfe: usize,
     pub cancelled: bool,
+    /// Final error-robust error measure (ERA solvers only).
+    pub delta_eps: Option<f64>,
 }
 
 /// Aggregate results of one load-generation run.

@@ -7,7 +7,10 @@
 //!     "n_samples":64,"grid":"logsnr","t_end":0.001,"seed":7,
 //!     "return_samples":true,"deadline_ms":500,"tag":42}
 //! <- {"ok":true,"id":3,"nfe":10,"rows":64,"dim":2,"cancelled":false,
-//!     "queue_ms":0.1,"total_ms":41.0,"samples":[[..],[..],...]}
+//!     "queue_ms":0.1,"total_ms":41.0,"delta_eps":0.21,
+//!     "samples":[[..],[..],...]}
+//!     (`delta_eps` — the final error-robust error measure — appears
+//!     for ERA solvers only)
 //!
 //! -> {"op":"cancel","tag":42}
 //! <- {"ok":true,"cancelled":true}
@@ -15,7 +18,8 @@
 //! -> {"op":"stats"}
 //! <- {"ok":true,"shards":4,"executors_per_shard":2,"pipeline_depth":2,
 //!     "finished":12,"evals":180,"executor_busy_frac":0.83,
-//!     "inflight_slabs":3,"depth_hist":[40,12,0,...],...}
+//!     "inflight_slabs":3,"depth_hist":[40,12,0,...],
+//!     "lanes":2,"lane_occ_hist":[5,1,0,...],"mean_delta_eps":0.2,...}
 //!
 //! -> {"op":"shards"}
 //! <- {"ok":true,"shards":4,"placement":"least-loaded",

@@ -96,7 +96,10 @@ pub fn rows_to_json(t: &Tensor) -> Json {
 /// Serialise a finished request. Samples are included row-by-row only on
 /// demand (they dominate the payload for large batches). A `cancelled`
 /// response still carries `ok:true` — the partial iterate and the NFE
-/// actually consumed are real data.
+/// actually consumed are real data. ERA requests additionally report
+/// `delta_eps`, the final error-robust error measure (Eq. 15), so
+/// clients can observe the error-robust selection working; other
+/// solvers omit the field.
 pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
     let mut obj = Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -108,6 +111,9 @@ pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
         ("queue_ms", Json::Num(1e3 * res.queue_seconds)),
         ("total_ms", Json::Num(1e3 * res.total_seconds)),
     ]);
+    if let Some(d) = res.delta_eps {
+        obj.set("delta_eps", Json::Num(d));
+    }
     if return_samples {
         let rows: Vec<Json> = (0..res.samples.rows())
             .map(|r| Json::arr_f32(res.samples.row(r)))
@@ -245,6 +251,7 @@ mod tests {
             queue_seconds: 0.001,
             total_seconds: 0.05,
             cancelled: false,
+            delta_eps: Some(0.25),
         };
         let j = result_to_json(&res, true);
         let text = j.to_string();
@@ -252,6 +259,8 @@ mod tests {
         assert_eq!(back.get("ok").as_bool(), Some(true));
         assert_eq!(back.get("nfe").as_usize(), Some(10));
         assert_eq!(back.get("cancelled").as_bool(), Some(false));
+        // ERA diagnostics ride the frame when present.
+        assert_eq!(back.get("delta_eps").as_f64(), Some(0.25));
         let t = samples_from_json(&back).unwrap();
         assert_eq!(t.as_slice(), res.samples.as_slice());
     }
@@ -265,10 +274,13 @@ mod tests {
             queue_seconds: 0.0,
             total_seconds: 0.0,
             cancelled: false,
+            delta_eps: None,
         };
         let j = result_to_json(&res, false);
         assert!(samples_from_json(&j).is_err());
         assert_eq!(j.get("rows").as_usize(), Some(4));
+        // Non-ERA results omit the diagnostics field entirely.
+        assert!(j.get("delta_eps").as_f64().is_none());
     }
 
     #[test]
@@ -280,6 +292,7 @@ mod tests {
             queue_seconds: 0.0,
             total_seconds: 0.01,
             cancelled: true,
+            delta_eps: None,
         };
         let j = result_to_json(&res, false);
         assert_eq!(j.get("ok").as_bool(), Some(true));

@@ -44,8 +44,9 @@ enum Stage {
 }
 
 /// Probability-flow drift `f = -0.5 beta x + 0.5 beta eps / sigma` into
-/// a caller-owned buffer (FON's working quantity).
-fn drift_into(sched: &VpSchedule, out: &mut [f32], x: &[f32], eps: &[f32], t: f64) {
+/// a caller-owned buffer (FON's working quantity). Public so the lane
+/// engine's stacked FON stepping shares the exact expression.
+pub fn drift_into(sched: &VpSchedule, out: &mut [f32], x: &[f32], eps: &[f32], t: f64) {
     let beta = sched.beta_min + t * (sched.beta_max - sched.beta_min);
     let sigma = sched.sigma(t).max(1e-12);
     out.copy_from_slice(x);

@@ -20,6 +20,12 @@ use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EvalRequest, Solver};
 use crate::tensor::Tensor;
 
+/// RNG stream id for the ancestral posterior noise. Per-request:
+/// `Rng::for_stream(seed, ANCESTRAL_STREAM)` — shared with the lane
+/// engine's stacked DDPM stepping so both paths replay the same
+/// per-request noise sequence bit for bit.
+pub const ANCESTRAL_STREAM: u64 = 0xD0;
+
 pub struct Ddpm {
     plan: PlanView,
     x: Arc<Tensor>,
@@ -51,7 +57,7 @@ impl Ddpm {
             i: 0,
             nfe: 0,
             pending: false,
-            rng: Rng::for_stream(seed, 0xD0),
+            rng: Rng::for_stream(seed, ANCESTRAL_STREAM),
             z,
         }
     }

@@ -417,6 +417,10 @@ impl Solver for EraSolver {
     fn nfe(&self) -> usize {
         self.nfe
     }
+
+    fn delta_eps(&self) -> Option<f64> {
+        Some(self.delta_eps)
+    }
 }
 
 #[cfg(test)]

@@ -118,6 +118,10 @@ impl Solver for Guided {
     fn nfe(&self) -> usize {
         self.nfe
     }
+
+    fn delta_eps(&self) -> Option<f64> {
+        self.inner.delta_eps()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,1835 @@
+//! Batch-major solver **lanes**: struct-of-arrays stepping for the
+//! serving hot path.
+//!
+//! The coordinator used to step one boxed [`Solver`] per request per
+//! round — per-request virtual dispatch, scattered history rings, and
+//! row-at-a-time fused-kernel calls. But every solver update in this
+//! crate is a coefficient-weighted elementwise combination whose
+//! scalars depend only on `(solver kind, plan, step index)` — never on
+//! the row values — so requests sharing those can be stacked into one
+//! contiguous tensor and advanced by a *single* pass of the same fused
+//! kernels. That is exactly the shape DPM-Solver and SA-Solver exploit
+//! for their precomputed coefficient schedules, applied across
+//! requests instead of within one.
+//!
+//! A [`Lane`] groups co-resident requests keyed by `(dataset,
+//! [`SolverKind`], plan identity, suffix base, guided-ness)` and holds
+//! struct-of-arrays state: one stacked iterate `x`, stacked eps
+//! history, per-member RNG cursors and per-member ERA selection state.
+//! `step` + `deliver` advance *all* members at once. Per-member scalars
+//! that are genuinely per-request stay per-member and provably cannot
+//! change batch-mates' bits, because every kernel is row-local:
+//!
+//! * DDPM ancestral noise and stochastic-ERA churn draw from each
+//!   member's own stream into that member's row span;
+//! * classifier-free guidance combines each member's paired rows with
+//!   that member's scale;
+//! * ERA's error measure (Eq. 15) is computed per member over its row
+//!   span, and when members' error-robust selections (Eq. 16/17)
+//!   diverge, the minority groups **split off into sibling lanes**
+//!   (gathered rows, gathered history) rather than falling back to
+//!   scalar stepping — each resulting lane is again uniform and steps
+//!   with one fused pass.
+//!
+//! Membership changes compact the stacked state: retiring one member
+//! removes its row span from every live tensor with one `memmove`
+//! each, leaving every surviving member's bytes — iterate, history,
+//! RNG cursor — untouched (the compaction invariant pinned by the
+//! lane-engine golden tests and proptests). A pending evaluation is
+//! regenerated after compaction from the compacted state; every
+//! kind's request-building step is idempotent, so the regenerated
+//! request is bit-identical for survivors.
+//!
+//! The [`Solver`] trait remains the reference implementation: the
+//! lane-engine trajectories are pinned bitwise against it for every
+//! kind in `tests/lane_engine.rs`.
+//!
+//! [`Solver`]: crate::solvers::Solver
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kernels::{fused, PlanView, TensorPool};
+use crate::rng::Rng;
+use crate::solvers::adams_explicit::{drift_into, AB4};
+use crate::solvers::ddpm::ANCESTRAL_STREAM;
+use crate::solvers::era::{select_indices_into, Selection, CHURN_STREAM};
+use crate::solvers::{EvalRequest, SolverKind, UNCOND};
+use crate::tensor::Tensor;
+
+/// Everything admission resolves before a request enters a lane — the
+/// lane-engine twin of building a boxed solver from a
+/// [`crate::solvers::TaskResolution`].
+pub struct LaneAdmission {
+    pub kind: SolverKind,
+    /// `None` = zero-transition request (`strength = 0`): `x` is final.
+    pub view: Option<PlanView>,
+    /// Start iterate (`n_samples x dim`).
+    pub x: Tensor,
+    /// Stochastic-ERA churn level (0 = deterministic).
+    pub churn: f64,
+    /// Classifier-free guidance `(scale, class)` when requested.
+    pub guided: Option<(f32, usize)>,
+    /// Request seed (feeds the member's ancestral/churn stream).
+    pub seed: u64,
+}
+
+/// One request's row group inside a lane.
+pub struct Member {
+    /// Scheduler slot id of the owning request.
+    pub slot: usize,
+    /// State-row offset within the lane's stacked tensors.
+    pub start: usize,
+    /// State rows (`n_samples`).
+    pub rows: usize,
+    /// Network evaluations consumed so far (paired evals count 2).
+    pub nfe: usize,
+    /// ERA error measure (Eq. 15); selection-dependent init.
+    pub delta_eps: f64,
+    churn: f64,
+    scale: f32,
+    class: usize,
+    rng: Rng,
+}
+
+/// A retired member's outcome, handed back to the scheduler.
+pub struct Removed {
+    pub slot: usize,
+    /// The member's rows of the lane iterate at retirement.
+    pub samples: Tensor,
+    pub nfe: usize,
+    /// Last error measure — ERA lanes only.
+    pub delta_eps: Option<f64>,
+}
+
+/// Lane identity: members must agree on all of this to step together.
+#[derive(Clone, PartialEq)]
+struct LaneKey {
+    dataset: String,
+    kind: SolverKind,
+    /// `Arc::as_ptr` of the shared plan (0 for zero-transition lanes).
+    plan: usize,
+    /// Suffix base of the view (`usize::MAX` for zero-transition lanes).
+    base: usize,
+    guided: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum WarmStage {
+    S1,
+    S2,
+    S3,
+    S4,
+    Multi,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum KindTag {
+    Noop,
+    Ddim,
+    Ddpm,
+    Iadams,
+    Explicit,
+    Dpm,
+    Era,
+}
+
+/// Per-kind stacked stepping state. Tensors are stacked over member
+/// rows; scalars are lane-uniform. Mirrors the per-request solvers'
+/// fields and update order exactly (the bitwise-equivalence contract).
+#[allow(clippy::large_enum_variant)]
+enum Kernel {
+    Noop,
+    Ddim {
+        i: usize,
+    },
+    Ddpm {
+        i: usize,
+        /// Ancestral-noise scratch, refilled per member span each step.
+        z: Tensor,
+    },
+    Iadams {
+        i: usize,
+        /// Newest-first eps history (<= 4 stacked entries).
+        hist: Vec<Tensor>,
+        comb: Tensor,
+        x_pred: Arc<Tensor>,
+    },
+    Explicit {
+        fon: bool,
+        i: usize,
+        stage: WarmStage,
+        /// Newest-first slope history (<= 4 stacked entries).
+        hist: Vec<Tensor>,
+        rk: Vec<Tensor>,
+        x_base: Option<Arc<Tensor>>,
+        combo: Tensor,
+        drift: Tensor,
+        /// Warmup stage-point scratch.
+        u: Arc<Tensor>,
+    },
+    Dpm {
+        i: usize,
+        stage: u8,
+        e0: Option<Tensor>,
+        e1: Option<Tensor>,
+        u: Arc<Tensor>,
+    },
+    Era {
+        i: usize,
+        k: usize,
+        selection: Selection,
+        /// Lagrange buffer Omega: stacked eps per visited grid point.
+        eps: Vec<Tensor>,
+        pred: Tensor,
+        eps_c: Tensor,
+        has_pred: bool,
+        /// ERS selection scratches (capacity k; steady path allocation-free).
+        idx: Vec<usize>,
+        idx_b: Vec<usize>,
+        abs: Vec<usize>,
+        /// Churn-noise scratch (zero-sized when no member churns).
+        z: Tensor,
+    },
+}
+
+impl Kernel {
+    fn tag(&self) -> KindTag {
+        match self {
+            Kernel::Noop => KindTag::Noop,
+            Kernel::Ddim { .. } => KindTag::Ddim,
+            Kernel::Ddpm { .. } => KindTag::Ddpm,
+            Kernel::Iadams { .. } => KindTag::Iadams,
+            Kernel::Explicit { .. } => KindTag::Explicit,
+            Kernel::Dpm { .. } => KindTag::Dpm,
+            Kernel::Era { .. } => KindTag::Era,
+        }
+    }
+}
+
+/// One batch-major lane: stacked state plus the member table.
+pub struct Lane {
+    key: LaneKey,
+    view: Option<PlanView>,
+    /// Stacked iterate, member row groups in `members` order.
+    x: Arc<Tensor>,
+    cols: usize,
+    members: Vec<Member>,
+    kernel: Kernel,
+    guided: bool,
+    /// Stacked paired eval buffer (`[cond; uncond]` per member; empty
+    /// when not guided).
+    x2: Arc<Tensor>,
+    /// Stacked per-row conditioning channel (guided lanes).
+    cond: Arc<Vec<f32>>,
+    cond_dirty: bool,
+    pending: Option<EvalRequest>,
+    /// The *inner* (undoubled) evaluated point + time of the pending
+    /// eval — FON's drift conversion needs them at delivery.
+    inner_x: Option<Arc<Tensor>>,
+    inner_t: f64,
+    sealed: bool,
+    done: bool,
+}
+
+impl Lane {
+    fn eval_factor(&self) -> usize {
+        if self.guided {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Rows one fused evaluation of this lane carries.
+    pub fn eval_rows(&self) -> usize {
+        self.x.rows() * self.eval_factor()
+    }
+}
+
+/// The shard-wide lane table: admission, lockstep stepping with
+/// split-on-divergence, delivery, and compaction.
+pub struct LaneEngine {
+    lanes: Vec<Option<Lane>>,
+    free: Vec<usize>,
+    slot_lane: HashMap<usize, usize>,
+    pool: TensorPool,
+    /// Join cap on a lane's eval rows (0 = unbounded). Matched to the
+    /// batch policy's `max_rows` so whole-lane slabs stay zero-copy.
+    max_lane_rows: usize,
+}
+
+fn initial_delta(kind: &SolverKind) -> f64 {
+    match kind {
+        SolverKind::Era { selection: Selection::ErrorRobust { lambda }, .. } => *lambda,
+        SolverKind::Era { .. } => 1.0,
+        _ => 0.0,
+    }
+}
+
+fn member_rng(kind: &SolverKind, seed: u64) -> Rng {
+    match kind {
+        SolverKind::Era { .. } => Rng::for_stream(seed, CHURN_STREAM),
+        SolverKind::Ddpm => Rng::for_stream(seed, ANCESTRAL_STREAM),
+        _ => Rng::new(0),
+    }
+}
+
+fn make_kernel(kind: &SolverKind, view: Option<&PlanView>) -> Kernel {
+    let Some(view) = view else {
+        return Kernel::Noop;
+    };
+    let n_points = view.grid().len();
+    let empty = || Tensor::zeros(0, 0);
+    match kind {
+        SolverKind::Ddim => Kernel::Ddim { i: 0 },
+        SolverKind::Ddpm => Kernel::Ddpm { i: 0, z: empty() },
+        SolverKind::ImplicitAdams => Kernel::Iadams {
+            i: 0,
+            hist: Vec::with_capacity(5),
+            comb: empty(),
+            x_pred: Arc::new(empty()),
+        },
+        SolverKind::Pndm | SolverKind::Fon => {
+            assert!(n_points >= 5, "PNDM/FON need >= 4 transitions (>= 13 NFE)");
+            Kernel::Explicit {
+                fon: matches!(kind, SolverKind::Fon),
+                i: 0,
+                stage: WarmStage::S1,
+                hist: Vec::with_capacity(5),
+                rk: Vec::with_capacity(3),
+                x_base: None,
+                combo: empty(),
+                drift: empty(),
+                u: Arc::new(empty()),
+            }
+        }
+        SolverKind::Dpm { .. } | SolverKind::DpmFast => {
+            assert!(view.has_dpm(), "DPM lane needs a plan with DPM coefficients");
+            Kernel::Dpm { i: 0, stage: 0, e0: None, e1: None, u: Arc::new(empty()) }
+        }
+        SolverKind::Era { k, selection } => {
+            assert!(*k >= 2, "interpolation order k must be >= 2");
+            assert!(
+                n_points > *k,
+                "NFE budget {} too small for order k={k} (needs > k transitions)",
+                n_points - 1
+            );
+            Kernel::Era {
+                i: 0,
+                k: *k,
+                selection: selection.clone(),
+                eps: Vec::with_capacity(n_points),
+                pred: empty(),
+                eps_c: empty(),
+                has_pred: false,
+                idx: Vec::with_capacity(*k),
+                idx_b: Vec::with_capacity(*k),
+                abs: Vec::with_capacity(*k),
+                z: empty(),
+            }
+        }
+    }
+}
+
+/// Allocate the lane's stacked scratch tensors once membership is
+/// final (first step seals the lane against further joins).
+fn seal(lane: &mut Lane, pool: &mut TensorPool) {
+    lane.sealed = true;
+    let rows = lane.x.rows();
+    let cols = lane.cols;
+    if lane.guided {
+        lane.x2 = Arc::new(pool.take(2 * rows, cols));
+    }
+    let churny = lane.members.iter().any(|m| m.churn > 0.0);
+    match &mut lane.kernel {
+        Kernel::Noop | Kernel::Ddim { .. } => {}
+        Kernel::Ddpm { z, .. } => *z = pool.take(rows, cols),
+        Kernel::Iadams { comb, x_pred, .. } => {
+            *comb = pool.take(rows, cols);
+            *x_pred = Arc::new(pool.take(rows, cols));
+        }
+        Kernel::Explicit { fon, combo, drift, u, .. } => {
+            *combo = pool.take(rows, cols);
+            if *fon {
+                *drift = pool.take(rows, cols);
+            }
+            *u = Arc::new(pool.take(rows, cols));
+        }
+        Kernel::Dpm { u, .. } => *u = Arc::new(pool.take(rows, cols)),
+        Kernel::Era { pred, eps_c, z, .. } => {
+            *pred = pool.take(rows, cols);
+            *eps_c = pool.take(rows, cols);
+            if churny {
+                *z = pool.take(rows, cols);
+            }
+        }
+    }
+}
+
+fn recompute_starts(members: &mut [Member]) {
+    let mut at = 0;
+    for m in members.iter_mut() {
+        m.start = at;
+        at += m.rows;
+    }
+}
+
+fn build_cond(members: &[Member]) -> Vec<f32> {
+    let total: usize = members.iter().map(|m| m.rows).sum();
+    let mut c = Vec::with_capacity(2 * total);
+    for m in members {
+        c.resize(c.len() + m.rows, m.class as f32);
+        c.resize(c.len() + m.rows, UNCOND);
+    }
+    c
+}
+
+/// Remove a member's row span from a stacked tensor (no-op on
+/// zero-sized placeholder scratches).
+fn trim(t: &mut Tensor, start: usize, n: usize) {
+    if t.rows() > 0 {
+        t.remove_rows(start, n);
+    }
+}
+
+fn arc_trim(t: &mut Arc<Tensor>, start: usize, n: usize) {
+    if t.rows() > 0 {
+        Arc::make_mut(t).remove_rows(start, n);
+    }
+}
+
+/// Remove one state-row span from every live kernel tensor.
+fn kernel_remove_rows(kernel: &mut Kernel, start: usize, n: usize) {
+    match kernel {
+        Kernel::Noop | Kernel::Ddim { .. } => {}
+        Kernel::Ddpm { z, .. } => trim(z, start, n),
+        Kernel::Iadams { hist, comb, x_pred, .. } => {
+            for h in hist.iter_mut() {
+                trim(h, start, n);
+            }
+            trim(comb, start, n);
+            arc_trim(x_pred, start, n);
+        }
+        Kernel::Explicit { hist, rk, x_base, combo, drift, u, .. } => {
+            for h in hist.iter_mut() {
+                trim(h, start, n);
+            }
+            for r in rk.iter_mut() {
+                trim(r, start, n);
+            }
+            if let Some(b) = x_base {
+                arc_trim(b, start, n);
+            }
+            trim(combo, start, n);
+            trim(drift, start, n);
+            arc_trim(u, start, n);
+        }
+        Kernel::Dpm { e0, e1, u, .. } => {
+            if let Some(t) = e0 {
+                trim(t, start, n);
+            }
+            if let Some(t) = e1 {
+                trim(t, start, n);
+            }
+            arc_trim(u, start, n);
+        }
+        Kernel::Era { eps, pred, eps_c, z, .. } => {
+            for e in eps.iter_mut() {
+                trim(e, start, n);
+            }
+            trim(pred, start, n);
+            trim(eps_c, start, n);
+            trim(z, start, n);
+        }
+    }
+}
+
+/// Gather `spans` of `src` into one stacked tensor from the pool.
+fn gather_spans(
+    pool: &mut TensorPool,
+    src: &Tensor,
+    spans: &[(usize, usize)],
+    rows: usize,
+    cols: usize,
+) -> Tensor {
+    let mut out = pool.take(rows, cols);
+    let mut at = 0;
+    for &(s, n) in spans {
+        out.row_span_mut(at, n).copy_from_slice(src.row_span(s, n));
+        at += n;
+    }
+    out
+}
+
+fn recycle_lane(lane: Lane, pool: &mut TensorPool) {
+    let Lane { x, x2, kernel, pending, inner_x, .. } = lane;
+    // Release the request views first so the Arcs unwind to one owner.
+    drop(pending);
+    drop(inner_x);
+    if let Ok(t) = Arc::try_unwrap(x) {
+        pool.give(t);
+    }
+    if let Ok(t) = Arc::try_unwrap(x2) {
+        pool.give(t);
+    }
+    match kernel {
+        Kernel::Noop | Kernel::Ddim { .. } => {}
+        Kernel::Ddpm { z, .. } => pool.give(z),
+        Kernel::Iadams { hist, comb, x_pred, .. } => {
+            for h in hist {
+                pool.give(h);
+            }
+            pool.give(comb);
+            if let Ok(t) = Arc::try_unwrap(x_pred) {
+                pool.give(t);
+            }
+        }
+        Kernel::Explicit { hist, rk, x_base, combo, drift, u, .. } => {
+            for h in hist {
+                pool.give(h);
+            }
+            for r in rk {
+                pool.give(r);
+            }
+            if let Some(b) = x_base {
+                if let Ok(t) = Arc::try_unwrap(b) {
+                    pool.give(t);
+                }
+            }
+            pool.give(combo);
+            pool.give(drift);
+            if let Ok(t) = Arc::try_unwrap(u) {
+                pool.give(t);
+            }
+        }
+        Kernel::Dpm { e0, e1, u, .. } => {
+            if let Some(t) = e0 {
+                pool.give(t);
+            }
+            if let Some(t) = e1 {
+                pool.give(t);
+            }
+            if let Ok(t) = Arc::try_unwrap(u) {
+                pool.give(t);
+            }
+        }
+        Kernel::Era { eps, pred, eps_c, z, .. } => {
+            for e in eps {
+                pool.give(e);
+            }
+            pool.give(pred);
+            pool.give(eps_c);
+            pool.give(z);
+        }
+    }
+}
+
+/// AB predictor combination from newest-first history into `comb`
+/// (order adapts to fill level) — mirrors `ImplicitAdamsPc::predict_eps`.
+fn predict_ab(hist: &[Tensor], comb: &mut Tensor) {
+    let n = hist.len();
+    if n == 1 {
+        comb.as_mut_slice().copy_from_slice(hist[0].as_slice());
+        return;
+    }
+    let w: &[f64] = match n {
+        2 => &[1.5, -0.5],
+        3 => &[23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0],
+        _ => &AB4,
+    };
+    let mut parts: [&[f32]; 4] = [&[]; 4];
+    for (slot, h) in parts.iter_mut().zip(hist.iter()) {
+        *slot = h.as_slice();
+    }
+    fused::weighted_sum_into(comb.as_mut_slice(), &parts[..w.len()], w);
+}
+
+/// True when the kernel has consumed every transition. ERA lanes flag
+/// `done` inside their advance (the final evaluation is skipped).
+fn kernel_done(lane: &Lane) -> bool {
+    let Some(view) = lane.view.as_ref() else {
+        return true;
+    };
+    match &lane.kernel {
+        Kernel::Noop => true,
+        Kernel::Ddim { i }
+        | Kernel::Ddpm { i, .. }
+        | Kernel::Iadams { i, .. }
+        | Kernel::Explicit { i, .. } => *i + 1 >= view.grid().len(),
+        Kernel::Dpm { i, .. } => *i >= view.steps(),
+        Kernel::Era { .. } => lane.done,
+    }
+}
+
+/// Build (or rebuild, after compaction — every branch is idempotent)
+/// the lane's next evaluation request from its current state.
+fn build_request(lane: &mut Lane) {
+    let view = lane.view.clone().expect("request on a zero-transition lane");
+    let (x_inner, t) = match &mut lane.kernel {
+        Kernel::Noop => unreachable!("noop lanes never request"),
+        Kernel::Ddim { i } | Kernel::Ddpm { i, .. } => (Arc::clone(&lane.x), view.t(*i)),
+        Kernel::Era { i, .. } => (Arc::clone(&lane.x), view.t(*i)),
+        Kernel::Iadams { i, hist, comb, x_pred } => {
+            if hist.is_empty() {
+                (Arc::clone(&lane.x), view.t(*i))
+            } else {
+                predict_ab(hist, comb);
+                let (a, b) = view.ddim_coeffs(*i);
+                let xp = Arc::make_mut(x_pred);
+                fused::affine_into(
+                    xp.as_mut_slice(),
+                    a as f32,
+                    lane.x.as_slice(),
+                    b as f32,
+                    comb.as_slice(),
+                );
+                (Arc::clone(x_pred), view.t(*i + 1))
+            }
+        }
+        Kernel::Explicit { fon, i, stage, rk, x_base, u, .. } => {
+            let t_cur = view.t(*i);
+            let t_next = view.t(*i + 1);
+            if *i >= 3 {
+                (Arc::clone(&lane.x), t_cur)
+            } else if *stage == WarmStage::S1 {
+                *x_base = Some(Arc::clone(&lane.x));
+                (Arc::clone(&lane.x), t_cur)
+            } else {
+                let sched = view.sched();
+                let base = x_base.as_ref().unwrap_or(&lane.x);
+                let ub = Arc::make_mut(u);
+                if *fon {
+                    let h = t_next - t_cur; // negative
+                    let (slope, step, t_to) = match *stage {
+                        WarmStage::S2 => (&rk[0], 0.5 * h, t_cur + 0.5 * h),
+                        WarmStage::S3 => (&rk[1], 0.5 * h, t_cur + 0.5 * h),
+                        WarmStage::S4 => (&rk[2], h, t_next),
+                        _ => unreachable!(),
+                    };
+                    ub.as_mut_slice().copy_from_slice(base.as_slice());
+                    fused::axpy(ub.as_mut_slice(), step as f32, slope.as_slice());
+                    (Arc::clone(u), t_to)
+                } else {
+                    let t_mid = 0.5 * (t_cur + t_next);
+                    let (slope, t_to) = match *stage {
+                        WarmStage::S2 => (&rk[0], t_mid),
+                        WarmStage::S3 => (&rk[1], t_mid),
+                        WarmStage::S4 => (&rk[2], t_next),
+                        _ => unreachable!(),
+                    };
+                    let (a, b) = sched.ddim_coeffs(t_cur, t_to);
+                    fused::affine_into(
+                        ub.as_mut_slice(),
+                        a as f32,
+                        base.as_slice(),
+                        b as f32,
+                        slope.as_slice(),
+                    );
+                    (Arc::clone(u), t_to)
+                }
+            }
+        }
+        Kernel::Dpm { i, stage, e0, e1, u } => {
+            let sp = view.dpm_step(*i);
+            match (sp.order, *stage) {
+                (_, 0) => (Arc::clone(&lane.x), view.t(*i)),
+                (2, 1) | (3, 1) => {
+                    let e0t = e0.as_ref().expect("dpm stage 1 without e0");
+                    let ub = Arc::make_mut(u);
+                    fused::affine_into(
+                        ub.as_mut_slice(),
+                        sp.a_s1 as f32,
+                        lane.x.as_slice(),
+                        sp.b_s1 as f32,
+                        e0t.as_slice(),
+                    );
+                    (Arc::clone(u), sp.t_s1)
+                }
+                (3, 2) => {
+                    let e0t = e0.as_ref().expect("dpm stage 2 without e0");
+                    let e1t = e1.as_ref().expect("dpm stage 2 without e1");
+                    let ub = Arc::make_mut(u);
+                    fused::affine_into(
+                        ub.as_mut_slice(),
+                        sp.a_s2 as f32,
+                        lane.x.as_slice(),
+                        sp.b_s2 as f32,
+                        e0t.as_slice(),
+                    );
+                    let c = sp.c_s2 as f32;
+                    fused::axpy(ub.as_mut_slice(), c, e1t.as_slice());
+                    fused::axpy(ub.as_mut_slice(), -c, e0t.as_slice());
+                    (Arc::clone(u), sp.t_s2)
+                }
+                _ => unreachable!("invalid dpm stage"),
+            }
+        }
+    };
+    lane.inner_t = t;
+    let req = if lane.guided {
+        if lane.cond_dirty {
+            lane.cond = Arc::new(build_cond(&lane.members));
+            lane.cond_dirty = false;
+        }
+        let x2m = Arc::make_mut(&mut lane.x2);
+        for m in &lane.members {
+            x2m.row_span_mut(2 * m.start, m.rows)
+                .copy_from_slice(x_inner.row_span(m.start, m.rows));
+            x2m.row_span_mut(2 * m.start + m.rows, m.rows)
+                .copy_from_slice(x_inner.row_span(m.start, m.rows));
+        }
+        EvalRequest { x: Arc::clone(&lane.x2), t, cond: Some(Arc::clone(&lane.cond)) }
+    } else {
+        EvalRequest { x: Arc::clone(&x_inner), t, cond: None }
+    };
+    lane.inner_x = Some(x_inner);
+    lane.pending = Some(req);
+}
+
+/// ERA transition: mirrors `EraSolver::advance` + the done check of its
+/// `next_eval`, with per-member churn streams.
+fn era_advance(lane: &mut Lane) {
+    let view = lane.view.clone().expect("era lane without a view");
+    let n_points = view.grid().len();
+    let ran_pred = {
+        let Kernel::Era { i, k, selection, eps, pred, eps_c, idx, abs, .. } = &mut lane.kernel
+        else {
+            unreachable!()
+        };
+        let (a, b) = view.ddim_coeffs(*i);
+        let ran = if *i < *k - 1 {
+            // Warmup (Alg. 1 line 5-7): plain DDIM with the newest eps.
+            let newest = eps.last().expect("advance before first eval");
+            let x = Arc::make_mut(&mut lane.x);
+            fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, newest.as_slice());
+            false
+        } else {
+            // ERS selection over buffer entries 0..=bi. After a split,
+            // every member of this lane selects the same indices, so
+            // member 0's measured error stands for the lane.
+            let bi = eps.len() - 1;
+            match selection {
+                Selection::FixedLast => {
+                    idx.clear();
+                    idx.extend((bi + 1 - *k)..=bi);
+                }
+                Selection::ErrorRobust { lambda } => {
+                    select_indices_into(idx, bi, *k, lane.members[0].delta_eps / *lambda);
+                }
+                Selection::ConstantScale { scale } => select_indices_into(idx, bi, *k, *scale),
+            }
+            let w = view.lagrange_weights_into(*i + 1, idx, abs);
+            fused::zero(pred.as_mut_slice());
+            for (&n, &wm) in idx.iter().zip(w.iter()) {
+                fused::axpy(pred.as_mut_slice(), wm as f32, eps[n].as_slice());
+            }
+            let n = eps.len();
+            let order = n.min(3) + 1;
+            let amw = view.am_weights(order);
+            fused::zero(eps_c.as_mut_slice());
+            fused::axpy(eps_c.as_mut_slice(), amw[0] as f32, pred.as_slice());
+            for back in 0..order - 1 {
+                fused::axpy(
+                    eps_c.as_mut_slice(),
+                    amw[back + 1] as f32,
+                    eps[n - 1 - back].as_slice(),
+                );
+            }
+            let x = Arc::make_mut(&mut lane.x);
+            fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, eps_c.as_slice());
+            true
+        };
+        *i += 1;
+        ran
+    };
+    let Kernel::Era { i, has_pred, z, .. } = &mut lane.kernel else {
+        unreachable!()
+    };
+    *has_pred = ran_pred;
+    // Stochastic churn after interior transitions, per-member streams.
+    if *i + 1 < n_points && z.rows() > 0 {
+        let ab_prev = view.alpha_bar_at(*i - 1);
+        let ab_cur = view.alpha_bar_at(*i);
+        let alpha = ab_prev / ab_cur;
+        let var = (1.0 - ab_cur) / (1.0 - ab_prev) * (1.0 - alpha);
+        if var > 0.0 {
+            let xm = Arc::make_mut(&mut lane.x);
+            for m in lane.members.iter_mut() {
+                if m.churn <= 0.0 {
+                    continue;
+                }
+                m.rng.fill_normal(z.row_span_mut(m.start, m.rows));
+                fused::axpy(
+                    xm.row_span_mut(m.start, m.rows),
+                    (m.churn * var.sqrt()) as f32,
+                    z.row_span(m.start, m.rows),
+                );
+            }
+        }
+    }
+    if *i + 1 >= n_points {
+        // Final iterate reached; its evaluation would never be used.
+        lane.done = true;
+    }
+}
+
+/// Per-member ERS selections for this step; `None` when every member
+/// agrees with member 0 (the steady, allocation-free path). Returned
+/// groups are slot lists for the minority selections.
+fn era_split_groups(lane: &mut Lane) -> Option<Vec<Vec<usize>>> {
+    if lane.members.len() < 2 {
+        return None;
+    }
+    let Kernel::Era { i, k, selection, eps, idx, idx_b, .. } = &mut lane.kernel else {
+        return None;
+    };
+    let Selection::ErrorRobust { lambda } = selection else {
+        return None;
+    };
+    if eps.is_empty() || *i < *k - 1 {
+        return None;
+    }
+    let bi = eps.len() - 1;
+    select_indices_into(idx, bi, *k, lane.members[0].delta_eps / *lambda);
+    let mut groups: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+    for m in lane.members.iter().skip(1) {
+        select_indices_into(idx_b, bi, *k, m.delta_eps / *lambda);
+        if idx_b.as_slice() == idx.as_slice() {
+            continue;
+        }
+        match groups.iter_mut().find(|g| g.0.as_slice() == idx_b.as_slice()) {
+            Some(g) => g.1.push(m.slot),
+            None => groups.push((idx_b.clone(), vec![m.slot])),
+        }
+    }
+    if groups.is_empty() {
+        None
+    } else {
+        Some(groups.into_iter().map(|(_, slots)| slots).collect())
+    }
+}
+
+/// Advance (ERA only — other kinds advance at delivery, mirroring
+/// their `on_eval`) and build the next request, or flag completion.
+fn advance_and_request(lane: &mut Lane) {
+    match lane.kernel.tag() {
+        KindTag::Noop => {
+            lane.done = true;
+            return;
+        }
+        KindTag::Era => {
+            let first = matches!(&lane.kernel, Kernel::Era { eps, .. } if eps.is_empty());
+            if !first {
+                era_advance(lane);
+                if lane.done {
+                    return;
+                }
+            }
+        }
+        _ => {
+            if kernel_done(lane) {
+                lane.done = true;
+                return;
+            }
+        }
+    }
+    build_request(lane);
+}
+
+/// Collapse a guided lane's paired model output in place: combine each
+/// member's cond/uncond halves with that member's scale, pack the
+/// combined rows down to state layout, and truncate. Zero-alloc.
+fn guided_collapse(lane: &mut Lane, eps: &mut Tensor) {
+    let state_rows = lane.x.rows();
+    assert_eq!(eps.rows(), 2 * state_rows, "paired evaluation rows mismatch");
+    let c = lane.cols;
+    for m in &lane.members {
+        let off = 2 * m.start * c;
+        let half = m.rows * c;
+        let span = &mut eps.as_mut_slice()[off..off + 2 * half];
+        let (cond_half, uncond_half) = span.split_at_mut(half);
+        fused::guided_combine(cond_half, uncond_half, m.scale);
+    }
+    // Pack each member's combined rows down to its state-row span.
+    // Members are processed in start order, so writes never clobber a
+    // later member's unread source (dst end <= next src start).
+    for m in &lane.members {
+        let src = 2 * m.start * c;
+        let dst = m.start * c;
+        let n = m.rows * c;
+        eps.as_mut_slice().copy_within(src..src + n, dst);
+    }
+    eps.truncate_rows(state_rows);
+}
+
+fn ddim_deliver(lane: &mut Lane, eps: Tensor) {
+    let view = lane.view.clone().expect("ddim lane without a view");
+    let Kernel::Ddim { i } = &mut lane.kernel else {
+        unreachable!()
+    };
+    let (a, b) = view.ddim_coeffs(*i);
+    let x = Arc::make_mut(&mut lane.x);
+    fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, eps.as_slice());
+    *i += 1;
+}
+
+fn ddpm_deliver(lane: &mut Lane, eps: Tensor) {
+    let view = lane.view.clone().expect("ddpm lane without a view");
+    let Kernel::Ddpm { i, z } = &mut lane.kernel else {
+        unreachable!()
+    };
+    let ab_cur = view.alpha_bar_at(*i);
+    let ab_next = view.alpha_bar_at(*i + 1);
+    let alpha = ab_cur / ab_next;
+    let coef = ((1.0 - alpha) / (1.0 - ab_cur).sqrt()) as f32;
+    let inv_sqrt_alpha = (1.0 / alpha.sqrt()) as f32;
+    let x = Arc::make_mut(&mut lane.x);
+    fused::axpy(x.as_mut_slice(), -coef, eps.as_slice());
+    fused::scale(x.as_mut_slice(), inv_sqrt_alpha);
+    let last = *i + 2 == view.grid().len();
+    if !last {
+        let var = (1.0 - ab_next) / (1.0 - ab_cur) * (1.0 - alpha);
+        if var > 0.0 {
+            // Per-member ancestral streams into the member's span, then
+            // one stacked axpy (the scale is lane-uniform).
+            for m in lane.members.iter_mut() {
+                m.rng.fill_normal(z.row_span_mut(m.start, m.rows));
+            }
+            fused::axpy(x.as_mut_slice(), var.sqrt() as f32, z.as_slice());
+        }
+    }
+    *i += 1;
+}
+
+fn iadams_deliver(lane: &mut Lane, pool: &mut TensorPool, eps: Tensor) {
+    let view = lane.view.clone().expect("iadams lane without a view");
+    let Kernel::Iadams { i, hist, comb, .. } = &mut lane.kernel else {
+        unreachable!()
+    };
+    let (a, b) = view.ddim_coeffs(*i);
+    if hist.is_empty() {
+        let x = Arc::make_mut(&mut lane.x);
+        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, eps.as_slice());
+        hist.insert(0, eps);
+        *i += 1;
+        return;
+    }
+    let order = (hist.len() + 1).min(4);
+    let w = view.am_weights(order);
+    {
+        let out = comb.as_mut_slice();
+        fused::zero(out);
+        fused::axpy(out, w[0] as f32, eps.as_slice());
+        for (h, &wm) in hist.iter().take(order - 1).zip(w[1..].iter()) {
+            fused::axpy(out, wm as f32, h.as_slice());
+        }
+    }
+    let x = Arc::make_mut(&mut lane.x);
+    fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, comb.as_slice());
+    hist.insert(0, eps);
+    if hist.len() > 4 {
+        let evicted = hist.pop().expect("over-full history");
+        pool.give(evicted);
+    }
+    *i += 1;
+}
+
+fn explicit_deliver(
+    lane: &mut Lane,
+    pool: &mut TensorPool,
+    x_req: Arc<Tensor>,
+    t_req: f64,
+    eps: Tensor,
+) {
+    let view = lane.view.clone().expect("explicit lane without a view");
+    let rows = lane.x.rows();
+    let cols = lane.cols;
+    let Kernel::Explicit { fon, i, stage, hist, rk, x_base, combo, drift, .. } = &mut lane.kernel
+    else {
+        unreachable!()
+    };
+    let sched = view.sched();
+    let t_cur = view.t(*i);
+    let t_next = view.t(*i + 1);
+
+    if *i < 3 {
+        // Warmup: convert to the working quantity (may allocate, like
+        // the per-request warmup) and run the RK stage machine.
+        let val = if *fon {
+            let mut f = pool.take(rows, cols);
+            drift_into(&sched, f.as_mut_slice(), x_req.as_slice(), eps.as_slice(), t_req);
+            f
+        } else {
+            eps
+        };
+        drop(x_req);
+        match *stage {
+            WarmStage::S1 => {
+                hist.insert(0, val.clone());
+                rk.push(val);
+                *stage = WarmStage::S2;
+            }
+            WarmStage::S2 => {
+                rk.push(val);
+                *stage = WarmStage::S3;
+            }
+            WarmStage::S3 => {
+                rk.push(val);
+                *stage = WarmStage::S4;
+            }
+            WarmStage::S4 => {
+                let combo_t = Tensor::weighted_sum(
+                    &[&rk[0], &rk[1], &rk[2], &val],
+                    &[1.0 / 6.0, 2.0 / 6.0, 2.0 / 6.0, 1.0 / 6.0],
+                );
+                let mut base = x_base.take().expect("warmup base missing");
+                {
+                    let bm = Arc::make_mut(&mut base);
+                    if *fon {
+                        bm.axpy((t_next - t_cur) as f32, &combo_t);
+                    } else {
+                        let (aa, bb) = sched.ddim_coeffs(t_cur, t_next);
+                        fused::affine_inplace(
+                            bm.as_mut_slice(),
+                            aa as f32,
+                            bb as f32,
+                            combo_t.as_slice(),
+                        );
+                    }
+                }
+                lane.x = base;
+                for t in rk.drain(..) {
+                    pool.give(t);
+                }
+                pool.give(val);
+                *i += 1;
+                *stage = if *i < 3 { WarmStage::S1 } else { WarmStage::Multi };
+            }
+            WarmStage::Multi => unreachable!(),
+        }
+        return;
+    }
+
+    // Multistep phase: push the new slope, AB4-combine, transfer.
+    let val = if *fon {
+        drift_into(&sched, drift.as_mut_slice(), x_req.as_slice(), eps.as_slice(), t_req);
+        std::mem::replace(drift, Tensor::zeros(0, 0))
+    } else {
+        eps
+    };
+    drop(x_req);
+    hist.insert(0, val);
+    let evicted = if hist.len() > 4 { hist.pop() } else { None };
+    if *fon {
+        *drift = evicted.unwrap_or_else(|| pool.take(rows, cols));
+    } else if let Some(t) = evicted {
+        pool.give(t);
+    }
+    assert!(hist.len() == 4, "multistep phase requires a full history");
+    {
+        let out = combo.as_mut_slice();
+        fused::zero(out);
+        for (h, &wm) in hist.iter().take(4).zip(AB4.iter()) {
+            fused::axpy(out, wm as f32, h.as_slice());
+        }
+    }
+    let x = Arc::make_mut(&mut lane.x);
+    if *fon {
+        fused::axpy(x.as_mut_slice(), (t_next - t_cur) as f32, combo.as_slice());
+    } else {
+        let (a, b) = view.ddim_coeffs(*i);
+        fused::affine_inplace(x.as_mut_slice(), a as f32, b as f32, combo.as_slice());
+    }
+    *i += 1;
+}
+
+fn dpm_deliver(lane: &mut Lane, pool: &mut TensorPool, eps: Tensor) {
+    let view = lane.view.clone().expect("dpm lane without a view");
+    let Kernel::Dpm { i, stage, e0, e1, .. } = &mut lane.kernel else {
+        unreachable!()
+    };
+    let sp = view.dpm_step(*i);
+    match (sp.order, *stage) {
+        (2, 0) | (3, 0) => {
+            *e0 = Some(eps);
+            *stage = 1;
+        }
+        (3, 1) => {
+            *e1 = Some(eps);
+            *stage = 2;
+        }
+        (1, 0) | (2, 1) | (3, 2) => {
+            let x = Arc::make_mut(&mut lane.x);
+            match sp.order {
+                1 | 2 => {
+                    fused::affine_inplace(
+                        x.as_mut_slice(),
+                        sp.a_f as f32,
+                        sp.b_f as f32,
+                        eps.as_slice(),
+                    );
+                }
+                3 => {
+                    let e0t = e0.as_ref().expect("dpm finish without e0");
+                    fused::affine_inplace(
+                        x.as_mut_slice(),
+                        sp.a_f as f32,
+                        sp.b_f as f32,
+                        e0t.as_slice(),
+                    );
+                    let cf = sp.c_f as f32;
+                    fused::axpy(x.as_mut_slice(), cf, eps.as_slice());
+                    fused::axpy(x.as_mut_slice(), -cf, e0t.as_slice());
+                }
+                _ => unreachable!(),
+            }
+            if let Some(t) = e0.take() {
+                pool.give(t);
+            }
+            if let Some(t) = e1.take() {
+                pool.give(t);
+            }
+            pool.give(eps);
+            *stage = 0;
+            *i += 1;
+        }
+        _ => unreachable!("invalid dpm stage"),
+    }
+}
+
+fn era_deliver(lane: &mut Lane, eps_new: Tensor) {
+    let c = lane.cols;
+    let Kernel::Era { eps, pred, has_pred, .. } = &mut lane.kernel else {
+        unreachable!()
+    };
+    if *has_pred {
+        *has_pred = false;
+        // Eq. 15 per member over its own rows — identical accumulation
+        // to the per-request measure.
+        for m in lane.members.iter_mut() {
+            m.delta_eps = fused::mean_row_dist(
+                eps_new.row_span(m.start, m.rows),
+                pred.row_span(m.start, m.rows),
+                m.rows,
+                c,
+            ) as f64;
+        }
+    }
+    eps.push(eps_new);
+}
+
+fn deliver_lane(lane: &mut Lane, pool: &mut TensorPool, mut eps: Tensor) {
+    assert!(lane.pending.is_some(), "deliver without a pending evaluation");
+    lane.pending = None;
+    let x_req = lane.inner_x.take().expect("deliver without an inner request");
+    let t_req = lane.inner_t;
+    if lane.guided {
+        guided_collapse(lane, &mut eps);
+    }
+    assert_eq!(eps.rows(), lane.x.rows(), "lane eps rows mismatch");
+    let bump = lane.eval_factor();
+    for m in lane.members.iter_mut() {
+        m.nfe += bump;
+    }
+    match lane.kernel.tag() {
+        KindTag::Noop => panic!("noop lane received an evaluation"),
+        KindTag::Ddim => {
+            drop(x_req);
+            ddim_deliver(lane, eps);
+        }
+        KindTag::Ddpm => {
+            drop(x_req);
+            ddpm_deliver(lane, eps);
+        }
+        KindTag::Iadams => {
+            drop(x_req);
+            iadams_deliver(lane, pool, eps);
+        }
+        KindTag::Explicit => explicit_deliver(lane, pool, x_req, t_req, eps),
+        KindTag::Dpm => {
+            drop(x_req);
+            dpm_deliver(lane, pool, eps);
+        }
+        KindTag::Era => {
+            drop(x_req);
+            era_deliver(lane, eps);
+        }
+    }
+}
+
+impl LaneEngine {
+    /// `max_lane_rows` caps a lane's fused-eval rows at admission so a
+    /// whole-lane slab never exceeds the batch policy's `max_rows`
+    /// (0 = unbounded).
+    pub fn new(max_lane_rows: usize) -> LaneEngine {
+        LaneEngine {
+            lanes: Vec::new(),
+            free: Vec::new(),
+            slot_lane: HashMap::new(),
+            pool: TensorPool::new(256),
+            max_lane_rows,
+        }
+    }
+
+    /// Upper bound of live lane ids (for scheduler iteration; ids are
+    /// recycled, so check [`LaneEngine::has_lane`]).
+    pub fn lane_slots(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn has_lane(&self, id: usize) -> bool {
+        self.lanes.get(id).is_some_and(|l| l.is_some())
+    }
+
+    /// Live lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.iter().flatten().count()
+    }
+
+    /// Total members across live lanes.
+    pub fn member_total(&self) -> usize {
+        self.lanes.iter().flatten().map(|l| l.members.len()).sum()
+    }
+
+    pub fn members(&self, id: usize) -> &[Member] {
+        &self.lanes[id].as_ref().expect("members of empty lane").members
+    }
+
+    pub fn dataset(&self, id: usize) -> &str {
+        &self.lanes[id].as_ref().expect("dataset of empty lane").key.dataset
+    }
+
+    pub fn pending(&self, id: usize) -> Option<&EvalRequest> {
+        self.lanes[id].as_ref().and_then(|l| l.pending.as_ref())
+    }
+
+    pub fn is_done(&self, id: usize) -> bool {
+        self.lanes[id].as_ref().is_some_and(|l| l.done)
+    }
+
+    /// Lane currently holding `slot`, if any.
+    pub fn lane_of_slot(&self, slot: usize) -> Option<usize> {
+        self.slot_lane.get(&slot).copied()
+    }
+
+    /// Stacked tensors handed out that required fresh allocation
+    /// (diagnostics; steady-state stepping allocates none).
+    pub fn pool_allocations(&self) -> usize {
+        self.pool.allocations()
+    }
+
+    fn alloc(&mut self, lane: Lane) -> usize {
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert!(self.lanes[id].is_none());
+                self.lanes[id] = Some(lane);
+                id
+            }
+            None => {
+                self.lanes.push(Some(lane));
+                self.lanes.len() - 1
+            }
+        }
+    }
+
+    fn find_joinable(&self, key: &LaneKey, add_eval_rows: usize) -> Option<usize> {
+        self.lanes.iter().enumerate().find_map(|(id, l)| {
+            let l = l.as_ref()?;
+            if l.sealed || l.done || &l.key != key {
+                return None;
+            }
+            if self.max_lane_rows > 0 && l.eval_rows() + add_eval_rows > self.max_lane_rows {
+                return None;
+            }
+            Some(id)
+        })
+    }
+
+    /// Insert one admitted request: join an existing unsealed lane with
+    /// the same key, or open a new one. Returns the lane id.
+    pub fn admit(&mut self, slot: usize, dataset: &str, adm: LaneAdmission) -> usize {
+        let rows = adm.x.rows();
+        let cols = adm.x.cols();
+        let guided = adm.guided.is_some();
+        let (scale, class) = adm.guided.unwrap_or((0.0, 0));
+        let key = LaneKey {
+            dataset: dataset.to_string(),
+            kind: adm.kind.clone(),
+            plan: adm
+                .view
+                .as_ref()
+                .map(|v| Arc::as_ptr(v.plan()) as usize)
+                .unwrap_or(0),
+            base: adm.view.as_ref().map(|v| v.base()).unwrap_or(usize::MAX),
+            guided,
+        };
+        let member = Member {
+            slot,
+            start: 0,
+            rows,
+            nfe: 0,
+            delta_eps: initial_delta(&adm.kind),
+            churn: adm.churn,
+            scale,
+            class,
+            rng: member_rng(&adm.kind, adm.seed),
+        };
+        let eval_rows = rows * if guided { 2 } else { 1 };
+        let join = if adm.view.is_some() {
+            self.find_joinable(&key, eval_rows)
+        } else {
+            None // zero-transition lanes are done at admit; never join
+        };
+        if let Some(id) = join {
+            let lane = self.lanes[id].as_mut().unwrap();
+            let mut m = member;
+            m.start = lane.x.rows();
+            Arc::make_mut(&mut lane.x).extend_rows(adm.x.as_slice());
+            lane.members.push(m);
+            lane.cond_dirty = true;
+            self.slot_lane.insert(slot, id);
+            return id;
+        }
+        let kernel = make_kernel(&adm.kind, adm.view.as_ref());
+        let done = matches!(kernel, Kernel::Noop);
+        let lane = Lane {
+            key,
+            view: adm.view,
+            x: Arc::new(adm.x),
+            cols,
+            members: vec![member],
+            kernel,
+            guided,
+            x2: Arc::new(Tensor::zeros(0, 0)),
+            cond: Arc::new(Vec::new()),
+            cond_dirty: true,
+            pending: None,
+            inner_x: None,
+            inner_t: 0.0,
+            sealed: false,
+            done,
+        };
+        let id = self.alloc(lane);
+        self.slot_lane.insert(slot, id);
+        id
+    }
+
+    /// Advance one lane by one pull: seal on first step, run ERA's
+    /// per-member selection (splitting divergent members off into
+    /// sibling lanes), and set each resulting lane's pending eval or
+    /// done flag. Ids of every lane touched (the stepped one plus any
+    /// split-offs) are appended to `affected`.
+    pub fn step_lane(&mut self, id: usize, affected: &mut Vec<usize>) {
+        let first = affected.len();
+        affected.push(id);
+        {
+            let LaneEngine { lanes, pool, .. } = self;
+            let lane = lanes[id].as_mut().expect("step of empty lane");
+            if lane.done || lane.pending.is_some() {
+                return;
+            }
+            if !lane.sealed {
+                seal(lane, pool);
+            }
+        }
+        let groups = era_split_groups(self.lanes[id].as_mut().unwrap());
+        if let Some(groups) = groups {
+            for g in &groups {
+                let nid = self.split_off(id, g);
+                affected.push(nid);
+            }
+        }
+        let mut j = first;
+        while j < affected.len() {
+            let lid = affected[j];
+            j += 1;
+            let lane = self.lanes[lid].as_mut().unwrap();
+            advance_and_request(lane);
+        }
+    }
+
+    /// Feed one lane evaluation back; advances every member.
+    pub fn deliver(&mut self, id: usize, eps: Tensor) {
+        let LaneEngine { lanes, pool, .. } = self;
+        let lane = lanes[id].as_mut().expect("deliver to empty lane");
+        deliver_lane(lane, pool, eps);
+    }
+
+    /// Move the given member slots out into a sibling lane (ERA
+    /// split-on-divergence). State rows and every live history tensor
+    /// are gathered for the movers and compacted out of the original;
+    /// neither group's bytes change.
+    fn split_off(&mut self, id: usize, slots: &[usize]) -> usize {
+        let new_lane = {
+            let LaneEngine { lanes, pool, .. } = &mut *self;
+            let lane = lanes[id].as_mut().expect("split of empty lane");
+            debug_assert!(lane.pending.is_none(), "split with a pending eval");
+            let cols = lane.cols;
+            let idxs: Vec<usize> = slots
+                .iter()
+                .map(|s| {
+                    lane.members
+                        .iter()
+                        .position(|m| m.slot == *s)
+                        .expect("split slot not in lane")
+                })
+                .collect();
+            debug_assert!(idxs.windows(2).all(|w| w[0] < w[1]));
+            let spans: Vec<(usize, usize)> =
+                idxs.iter().map(|&mi| (lane.members[mi].start, lane.members[mi].rows)).collect();
+            let moved_rows: usize = spans.iter().map(|&(_, n)| n).sum();
+            let churny = idxs.iter().any(|&mi| lane.members[mi].churn > 0.0);
+            let x_new = gather_spans(pool, &lane.x, &spans, moved_rows, cols);
+            let kernel_new = match &lane.kernel {
+                Kernel::Era { i, k, selection, eps, pred, has_pred, .. } => {
+                    let mut eps_new = Vec::with_capacity(eps.capacity());
+                    for e in eps.iter() {
+                        eps_new.push(gather_spans(pool, e, &spans, moved_rows, cols));
+                    }
+                    Kernel::Era {
+                        i: *i,
+                        k: *k,
+                        selection: selection.clone(),
+                        eps: eps_new,
+                        pred: gather_spans(pool, pred, &spans, moved_rows, cols),
+                        eps_c: pool.take(moved_rows, cols),
+                        has_pred: *has_pred,
+                        idx: Vec::with_capacity(*k),
+                        idx_b: Vec::with_capacity(*k),
+                        abs: Vec::with_capacity(*k),
+                        z: if churny { pool.take(moved_rows, cols) } else { Tensor::zeros(0, 0) },
+                    }
+                }
+                _ => unreachable!("only ERA lanes split"),
+            };
+            let mut moved: Vec<Member> = Vec::with_capacity(idxs.len());
+            for &mi in idxs.iter().rev() {
+                moved.push(lane.members.remove(mi));
+            }
+            moved.reverse();
+            for &(s, n) in spans.iter().rev() {
+                arc_trim(&mut lane.x, s, n);
+                kernel_remove_rows(&mut lane.kernel, s, n);
+                if lane.guided {
+                    arc_trim(&mut lane.x2, 2 * s, 2 * n);
+                }
+            }
+            recompute_starts(&mut lane.members);
+            lane.cond_dirty = true;
+            recompute_starts(&mut moved);
+            Lane {
+                key: lane.key.clone(),
+                view: lane.view.clone(),
+                x: Arc::new(x_new),
+                cols,
+                members: moved,
+                kernel: kernel_new,
+                guided: lane.guided,
+                x2: if lane.guided {
+                    Arc::new(pool.take(2 * moved_rows, cols))
+                } else {
+                    Arc::new(Tensor::zeros(0, 0))
+                },
+                cond: Arc::new(Vec::new()),
+                cond_dirty: true,
+                pending: None,
+                inner_x: None,
+                inner_t: 0.0,
+                sealed: true,
+                done: false,
+            }
+        };
+        let nid = self.alloc(new_lane);
+        for s in slots {
+            self.slot_lane.insert(*s, nid);
+        }
+        nid
+    }
+
+    /// Retire one member mid-trajectory (cancel/deadline), compacting
+    /// its rows out of the lane — and out of `eps`, the lane's just-
+    /// assembled (pre-delivery) evaluation, when one is in hand. A
+    /// not-yet-dispatched pending eval is regenerated from the
+    /// compacted state. Survivors' bits are untouched.
+    pub fn remove_member(
+        &mut self,
+        id: usize,
+        slot: usize,
+        eps: Option<&mut Tensor>,
+    ) -> Removed {
+        let mut emptied = false;
+        let removed = {
+            let lane = self.lanes[id].as_mut().expect("remove from empty lane");
+            let mi = lane
+                .members
+                .iter()
+                .position(|m| m.slot == slot)
+                .expect("slot not in lane");
+            let (start, rows) = (lane.members[mi].start, lane.members[mi].rows);
+            let had_pending = lane.pending.is_some();
+            lane.pending = None;
+            lane.inner_x = None;
+            let samples = lane.x.slice_rows(start, rows);
+            let m = lane.members.remove(mi);
+            let delta = if matches!(lane.kernel, Kernel::Era { .. }) {
+                Some(m.delta_eps)
+            } else {
+                None
+            };
+            let f = if lane.guided { 2 } else { 1 };
+            if let Some(e) = eps {
+                e.remove_rows(f * start, f * rows);
+            }
+            if lane.members.is_empty() {
+                emptied = true;
+            } else {
+                arc_trim(&mut lane.x, start, rows);
+                kernel_remove_rows(&mut lane.kernel, start, rows);
+                if lane.guided {
+                    arc_trim(&mut lane.x2, 2 * start, 2 * rows);
+                }
+                recompute_starts(&mut lane.members);
+                lane.cond_dirty = true;
+                if had_pending {
+                    build_request(lane);
+                }
+            }
+            Removed { slot, samples, nfe: m.nfe, delta_eps: delta }
+        };
+        self.slot_lane.remove(&slot);
+        if emptied {
+            let LaneEngine { lanes, pool, free, .. } = &mut *self;
+            let lane = lanes[id].take().unwrap();
+            recycle_lane(lane, pool);
+            free.push(id);
+        }
+        removed
+    }
+
+    /// Consume a finished lane: every member retires at once (lanes
+    /// run in lockstep, so completion is lane-granular).
+    pub fn finish_lane(&mut self, id: usize) -> Vec<Removed> {
+        let LaneEngine { lanes, pool, slot_lane, free, .. } = &mut *self;
+        let lane = lanes[id].take().expect("finish of empty lane");
+        free.push(id);
+        assert!(lane.done, "finish of an unfinished lane");
+        let is_era = matches!(lane.kernel, Kernel::Era { .. });
+        let out = lane
+            .members
+            .iter()
+            .map(|m| Removed {
+                slot: m.slot,
+                samples: lane.x.slice_rows(m.start, m.rows),
+                nfe: m.nfe,
+                delta_eps: if is_era { Some(m.delta_eps) } else { None },
+            })
+            .collect();
+        for m in &lane.members {
+            slot_lane.remove(&m.slot);
+        }
+        recycle_lane(lane, pool);
+        out
+    }
+
+    /// Drop a lane wholesale (failure path); returns the member slots
+    /// so the caller can fail their requests.
+    pub fn drop_lane(&mut self, id: usize) -> Vec<usize> {
+        let LaneEngine { lanes, pool, slot_lane, free, .. } = &mut *self;
+        let lane = lanes[id].take().expect("drop of empty lane");
+        free.push(id);
+        let slots: Vec<usize> = lane.members.iter().map(|m| m.slot).collect();
+        for s in &slots {
+            slot_lane.remove(s);
+        }
+        recycle_lane(lane, pool);
+        slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::eps_model::{AnalyticGmm, EpsModel, NoisyEps};
+    use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
+    use crate::solvers::{sample_with, TaskSpec};
+
+    fn admission(kind: &SolverKind, nfe: usize, rows: usize, seed: u64) -> LaneAdmission {
+        admission_task(kind, nfe, rows, seed, &TaskSpec::default())
+    }
+
+    fn admission_task(
+        kind: &SolverKind,
+        nfe: usize,
+        rows: usize,
+        seed: u64,
+        task: &TaskSpec,
+    ) -> LaneAdmission {
+        let sched = VpSchedule::default();
+        let steps = kind.steps_for_nfe(nfe);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let plan = Arc::new(kind.make_plan(sched, grid, nfe));
+        let mut rng = Rng::for_stream(seed, 0x5eed);
+        let x0 = rng.normal_tensor(rows, 2);
+        let res = kind.resolve_task(plan, x0, task).expect("resolve task");
+        LaneAdmission {
+            kind: kind.clone(),
+            view: res.view,
+            x: res.x,
+            churn: res.churn,
+            guided: res.guided,
+            seed,
+        }
+    }
+
+    /// Drive every lane to completion against `model`; returns
+    /// slot -> Removed.
+    fn run_all(eng: &mut LaneEngine, model: &dyn EpsModel) -> HashMap<usize, Removed> {
+        let mut out = HashMap::new();
+        let mut affected = Vec::new();
+        loop {
+            let mut progressed = false;
+            for id in 0..eng.lane_slots() {
+                if !eng.has_lane(id) {
+                    continue;
+                }
+                progressed = true;
+                if eng.is_done(id) {
+                    for r in eng.finish_lane(id) {
+                        out.insert(r.slot, r);
+                    }
+                    continue;
+                }
+                if eng.pending(id).is_none() {
+                    affected.clear();
+                    eng.step_lane(id, &mut affected);
+                    continue;
+                }
+                let (x, t, cond) = {
+                    let req = eng.pending(id).unwrap();
+                    (Arc::clone(&req.x), req.t, req.cond.clone())
+                };
+                let tv = vec![t as f32; x.rows()];
+                let eps = match &cond {
+                    None => model.eval(&x, &tv),
+                    Some(c) => model.eval_cond(&x, &tv, c),
+                };
+                drop(x);
+                drop(cond);
+                eng.deliver(id, eps);
+            }
+            if !progressed {
+                break;
+            }
+        }
+        out
+    }
+
+    fn reference(
+        kind: &SolverKind,
+        nfe: usize,
+        rows: usize,
+        seed: u64,
+        task: &TaskSpec,
+        model: &dyn EpsModel,
+    ) -> (Tensor, usize) {
+        let sched = VpSchedule::default();
+        let steps = kind.steps_for_nfe(nfe);
+        let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+        let plan = Arc::new(kind.make_plan(sched, grid, nfe));
+        let mut rng = Rng::for_stream(seed, 0x5eed);
+        let x0 = rng.normal_tensor(rows, 2);
+        let mut s = kind.build_task(plan, x0, seed, task).expect("build solver");
+        let out = sample_with(s.as_mut(), model);
+        (out, s.nfe())
+    }
+
+    #[test]
+    fn same_config_requests_share_one_lane_until_sealed() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let kind = SolverKind::Ddim;
+        let mut eng = LaneEngine::new(0);
+        let a = admission(&kind, 8, 4, 1);
+        let b = admission_with_same_plan(&a, &kind, 8, 3, 2);
+        let id0 = eng.admit(0, "gmm8", a);
+        let id1 = eng.admit(1, "gmm8", b);
+        assert_eq!(id0, id1, "identical configs must share a lane pre-seal");
+        assert_eq!(eng.members(id0).len(), 2);
+        assert_eq!(eng.lane_count(), 1);
+        // After the first step the lane is sealed: a third identical
+        // request opens a new lane.
+        let mut affected = Vec::new();
+        eng.step_lane(id0, &mut affected);
+        let c = admission_with_same_plan_by_id(&eng, id0, &kind, 8, 4, 3);
+        let id2 = eng.admit(2, "gmm8", c);
+        assert_ne!(id0, id2, "sealed lanes must not accept joins");
+        let out = run_all(&mut eng, &model);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[&0].samples.rows(), 4);
+        assert_eq!(out[&1].samples.rows(), 3);
+        assert_eq!(out[&0].nfe, 8);
+    }
+
+    /// Rebuild an admission over the *same* plan Arc as `a` so lane
+    /// keys match (plan identity is part of the key).
+    fn admission_with_same_plan(
+        a: &LaneAdmission,
+        kind: &SolverKind,
+        _nfe: usize,
+        rows: usize,
+        seed: u64,
+    ) -> LaneAdmission {
+        let view = a.view.clone();
+        let mut rng = Rng::for_stream(seed, 0x5eed);
+        LaneAdmission {
+            kind: kind.clone(),
+            view,
+            x: rng.normal_tensor(rows, 2),
+            churn: 0.0,
+            guided: None,
+            seed,
+        }
+    }
+
+    fn admission_with_same_plan_by_id(
+        eng: &LaneEngine,
+        id: usize,
+        kind: &SolverKind,
+        _nfe: usize,
+        rows: usize,
+        seed: u64,
+    ) -> LaneAdmission {
+        let view = eng.lanes[id].as_ref().unwrap().view.clone();
+        let mut rng = Rng::for_stream(seed, 0x5eed);
+        LaneAdmission {
+            kind: kind.clone(),
+            view,
+            x: rng.normal_tensor(rows, 2),
+            churn: 0.0,
+            guided: None,
+            seed,
+        }
+    }
+
+    #[test]
+    fn stacked_ddim_lane_matches_boxed_solvers_bitwise() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let kind = SolverKind::Ddim;
+        let mut eng = LaneEngine::new(0);
+        let a = admission(&kind, 10, 5, 11);
+        let b = admission_with_same_plan(&a, &kind, 10, 3, 12);
+        eng.admit(0, "gmm8", a);
+        eng.admit(1, "gmm8", b);
+        let out = run_all(&mut eng, &model);
+        for (slot, rows, seed) in [(0usize, 5usize, 11u64), (1, 3, 12)] {
+            let (want, want_nfe) = reference(&kind, 10, rows, seed, &TaskSpec::default(), &model);
+            assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "slot {slot}");
+            assert_eq!(out[&slot].nfe, want_nfe);
+            assert!(out[&slot].delta_eps.is_none());
+        }
+    }
+
+    #[test]
+    fn era_lane_splits_on_divergence_and_stays_bitwise() {
+        // A noisy model gives each member its own delta_eps; selections
+        // diverge and the lane must split while every member's
+        // trajectory stays identical to its boxed solver.
+        let sched = VpSchedule::default();
+        let model = NoisyEps::new(AnalyticGmm::gmm8(sched), 0.8, 2.0, 5);
+        let kind = SolverKind::parse("era-4@0.3").unwrap();
+        let mut eng = LaneEngine::new(0);
+        let a = admission(&kind, 12, 4, 21);
+        let b = admission_with_same_plan(&a, &kind, 12, 4, 22);
+        let c = admission_with_same_plan(&a, &kind, 12, 4, 23);
+        eng.admit(0, "gmm8", a);
+        eng.admit(1, "gmm8", b);
+        eng.admit(2, "gmm8", c);
+        let out = run_all(&mut eng, &model);
+        for (slot, seed) in [(0usize, 21u64), (1, 22), (2, 23)] {
+            let (want, want_nfe) = reference(&kind, 12, 4, seed, &TaskSpec::default(), &model);
+            assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "slot {slot}");
+            assert_eq!(out[&slot].nfe, want_nfe);
+            assert!(out[&slot].delta_eps.is_some(), "era lanes report delta_eps");
+        }
+    }
+
+    #[test]
+    fn compaction_mid_trajectory_leaves_survivors_bitwise() {
+        let sched = VpSchedule::default();
+        let model = AnalyticGmm::gmm8(sched);
+        let kind = SolverKind::parse("era").unwrap();
+        let mut eng = LaneEngine::new(0);
+        let a = admission(&kind, 10, 4, 31);
+        let b = admission_with_same_plan(&a, &kind, 10, 2, 32);
+        let c = admission_with_same_plan(&a, &kind, 10, 3, 33);
+        let id = eng.admit(0, "gmm8", a);
+        eng.admit(1, "gmm8", b);
+        eng.admit(2, "gmm8", c);
+        // Step + deliver four rounds, then retire the middle member.
+        let mut affected = Vec::new();
+        for _ in 0..4 {
+            for lid in 0..eng.lane_slots() {
+                if eng.has_lane(lid) && eng.pending(lid).is_none() && !eng.is_done(lid) {
+                    affected.clear();
+                    eng.step_lane(lid, &mut affected);
+                }
+            }
+            for lid in 0..eng.lane_slots() {
+                if !eng.has_lane(lid) {
+                    continue;
+                }
+                if let Some(req) = eng.pending(lid) {
+                    let x = Arc::clone(&req.x);
+                    let tv = vec![req.t as f32; x.rows()];
+                    let eps = model.eval(&x, &tv);
+                    drop(x);
+                    eng.deliver(lid, eps);
+                }
+            }
+        }
+        let removed = eng.remove_member(id, 1, None);
+        assert_eq!(removed.samples.rows(), 2);
+        assert!(removed.nfe > 0 && removed.nfe < 10, "partial nfe, got {}", removed.nfe);
+        let out = run_all(&mut eng, &model);
+        for (slot, rows, seed) in [(0usize, 4usize, 31u64), (2, 3, 33)] {
+            let (want, _) = reference(&kind, 10, rows, seed, &TaskSpec::default(), &model);
+            assert_eq!(
+                out[&slot].samples.as_slice(),
+                want.as_slice(),
+                "survivor {slot} perturbed by compaction"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_transition_lane_is_done_at_admit() {
+        let kind = SolverKind::Ddim;
+        let task = TaskSpec {
+            strength: 0.0,
+            init: Some(Tensor::from_vec(vec![1.0, -1.0, 0.5, 2.0], 2, 2)),
+            ..Default::default()
+        };
+        let adm = admission_task(&kind, 8, 2, 7, &task);
+        let mut eng = LaneEngine::new(0);
+        let id = eng.admit(9, "gmm8", adm);
+        assert!(eng.is_done(id));
+        let out = eng.finish_lane(id);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].nfe, 0);
+        assert_eq!(out[0].samples.rows(), 2);
+        assert_eq!(eng.lane_count(), 0);
+    }
+
+    #[test]
+    fn lane_cap_limits_joins() {
+        let kind = SolverKind::Ddim;
+        let mut eng = LaneEngine::new(6);
+        let a = admission(&kind, 8, 4, 1);
+        let b = admission_with_same_plan(&a, &kind, 8, 4, 2);
+        let id0 = eng.admit(0, "gmm8", a);
+        let id1 = eng.admit(1, "gmm8", b);
+        assert_ne!(id0, id1, "join would exceed the lane row cap");
+    }
+}

@@ -31,6 +31,7 @@ pub mod era;
 pub mod eps_model;
 pub mod guided;
 pub mod lagrange;
+pub mod lanes;
 pub mod schedule;
 
 use std::sync::Arc;
@@ -86,6 +87,14 @@ pub trait Solver: Send {
 
     /// Network evaluations consumed so far.
     fn nfe(&self) -> usize;
+
+    /// Latest error-robust error measure (Eq. 15), when this solver
+    /// tracks one. `Some` only for ERA solvers (and wrappers around
+    /// them); surfaced per request on the wire so clients can observe
+    /// the error-robust selection working.
+    fn delta_eps(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Drive a solver to completion against a model (in-process path used by
@@ -304,6 +313,22 @@ impl Solver for Noop {
     fn nfe(&self) -> usize {
         0
     }
+}
+
+/// Everything a [`TaskSpec`] resolves to before a solver (or lane) is
+/// instantiated: the trajectory window, the start iterate, and the
+/// workload wrappers to apply. Produced by [`SolverKind::resolve_task`]
+/// and consumed by both the boxed-solver path and the lane engine.
+pub struct TaskResolution {
+    /// `None` = zero-transition request (`strength = 0`): `x` is final.
+    pub view: Option<PlanView>,
+    /// Start iterate (prior noise, or the init forward-noised to the
+    /// suffix start time).
+    pub x: Tensor,
+    /// Stochastic-ERA churn level (0 = deterministic).
+    pub churn: f64,
+    /// Classifier-free guidance `(scale, class)` when requested.
+    pub guided: Option<(f32, usize)>,
 }
 
 /// Which solver to build (the paper's comparison set).
@@ -567,6 +592,57 @@ impl SolverKind {
         }
     }
 
+    /// Resolve a [`TaskSpec`] against a shared `plan` without building
+    /// a solver: validate the workload, quantize the strength bucket
+    /// into a (possibly suffix) [`PlanView`], noise the init into the
+    /// start iterate, and report the wrappers to apply. Both
+    /// [`SolverKind::build_task`] (the boxed per-request path) and the
+    /// lane engine ([`lanes::LaneEngine`]) admit through this one
+    /// resolution, so their validation and start states can never
+    /// drift apart.
+    pub fn resolve_task(
+        &self,
+        plan: Arc<TrajectoryPlan>,
+        x0_noise: Tensor,
+        task: &TaskSpec,
+    ) -> Result<TaskResolution, String> {
+        task.validate()?;
+        if task.is_stochastic() && !matches!(self, SolverKind::Era { .. }) {
+            return Err(format!(
+                "churn {} requires an era solver, got '{}'",
+                task.churn,
+                self.label()
+            ));
+        }
+        let (start, x_start) = task.start_state(&plan, x0_noise)?;
+        let steps = plan.steps();
+        let view = if start == steps {
+            // Zero-transition bucket: the start iterate is final.
+            None
+        } else {
+            let remaining = steps - start;
+            if remaining < self.min_steps() {
+                return Err(format!(
+                    "strength {} leaves {remaining} transitions, below minimum {} for '{}'",
+                    task.strength,
+                    self.min_steps(),
+                    self.label()
+                ));
+            }
+            Some(if start == 0 {
+                PlanView::full(plan)
+            } else {
+                PlanView::suffix(plan, start)
+            })
+        };
+        let guided = if task.is_guided() {
+            Some((task.guidance_scale as f32, task.guide_class))
+        } else {
+            None
+        };
+        Ok(TaskResolution { view, x: x_start, churn: task.churn, guided })
+    }
+
     /// Build the full workload-aware solver stack for one request:
     /// resolve the task's strength bucket into a suffix [`PlanView`] of
     /// the shared `plan` (noising `task.init` to the start time),
@@ -581,39 +657,14 @@ impl SolverKind {
         seed: u64,
         task: &TaskSpec,
     ) -> Result<Box<dyn Solver>, String> {
-        task.validate()?;
-        if task.is_stochastic() && !matches!(self, SolverKind::Era { .. }) {
-            return Err(format!(
-                "churn {} requires an era solver, got '{}'",
-                task.churn,
-                self.label()
-            ));
-        }
-        let (start, x_start) = task.start_state(&plan, x0_noise)?;
-        let steps = plan.steps();
-        let inner: Box<dyn Solver> = if start == steps {
-            Box::new(Noop { x: x_start })
-        } else {
-            let remaining = steps - start;
-            if remaining < self.min_steps() {
-                return Err(format!(
-                    "strength {} leaves {remaining} transitions, below minimum {} for '{}'",
-                    task.strength,
-                    self.min_steps(),
-                    self.label()
-                ));
-            }
-            let view = if start == 0 {
-                PlanView::full(plan)
-            } else {
-                PlanView::suffix(plan, start)
-            };
-            self.build_with_view(view, x_start, seed, task.churn)
+        let res = self.resolve_task(plan, x0_noise, task)?;
+        let inner: Box<dyn Solver> = match res.view {
+            None => Box::new(Noop { x: res.x }),
+            Some(view) => self.build_with_view(view, res.x, seed, res.churn),
         };
-        if task.is_guided() {
-            Ok(Box::new(Guided::new(inner, task.guidance_scale as f32, task.guide_class)))
-        } else {
-            Ok(inner)
+        match res.guided {
+            Some((scale, class)) => Ok(Box::new(Guided::new(inner, scale, class))),
+            None => Ok(inner),
         }
     }
 

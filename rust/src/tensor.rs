@@ -265,6 +265,28 @@ impl Tensor {
         self.rows = n;
     }
 
+    /// Remove rows `[start, start + n)` in place, shifting later rows
+    /// up (one contiguous `copy_within`; the allocation is kept). This
+    /// is the lane-compaction primitive: retiring one lane member must
+    /// not move any surviving member's bytes relative to each other,
+    /// only their row offsets.
+    pub fn remove_rows(&mut self, start: usize, n: usize) {
+        assert!(start + n <= self.rows, "remove_rows out of range");
+        let c = self.cols;
+        self.data.copy_within((start + n) * c.., start * c);
+        self.data.truncate((self.rows - n) * c);
+        self.rows -= n;
+    }
+
+    /// Append rows from a flat row-major buffer (length must be a
+    /// multiple of `cols`). Lane admission stacks a joining request's
+    /// start iterate under the existing members this way.
+    pub fn extend_rows(&mut self, src: &[f32]) {
+        assert!(self.cols > 0 && src.len() % self.cols == 0, "extend_rows shape mismatch");
+        self.data.extend_from_slice(src);
+        self.rows += src.len() / self.cols;
+    }
+
     /// True if every element is finite.
     pub fn all_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
@@ -391,6 +413,29 @@ mod tests {
     fn truncate_rows_checks_bounds() {
         let mut x = Tensor::zeros(2, 2);
         x.truncate_rows(3);
+    }
+
+    #[test]
+    fn remove_rows_shifts_tail_and_extend_rows_appends() {
+        let mut x = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 4, 2);
+        x.remove_rows(1, 2);
+        assert_eq!((x.rows(), x.cols()), (2, 2));
+        assert_eq!(x.as_slice(), &[1.0, 2.0, 7.0, 8.0]);
+        x.extend_rows(&[9.0, 10.0]);
+        assert_eq!(x.rows(), 3);
+        assert_eq!(x.row(2), &[9.0, 10.0]);
+        // Removing a zero-row span is a no-op; removing at the end works.
+        x.remove_rows(1, 0);
+        assert_eq!(x.rows(), 3);
+        x.remove_rows(2, 1);
+        assert_eq!(x.as_slice(), &[1.0, 2.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn remove_rows_checks_bounds() {
+        let mut x = Tensor::zeros(2, 2);
+        x.remove_rows(1, 2);
     }
 
     #[test]

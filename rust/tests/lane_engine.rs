@@ -1,0 +1,461 @@
+//! Lane-engine equivalence suite: the batch-major struct-of-arrays
+//! lanes (`solvers::lanes`) must reproduce the per-request boxed
+//! [`Solver`] trajectories **bitwise** — for every solver kind, every
+//! workload (guided pairing, img2img suffix plans, stochastic churn),
+//! under ERA split-on-divergence, and under arbitrary admission/cancel
+//! interleavings with mid-trajectory lane compaction.
+//!
+//! [`Solver`]: era_solver::solvers::Solver
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use era_solver::kernels::TrajectoryPlan;
+use era_solver::rng::Rng;
+use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel, NoisyEps};
+use era_solver::solvers::lanes::{LaneAdmission, LaneEngine, Removed};
+use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
+use era_solver::solvers::{sample_with, Solver, SolverKind, TaskSpec};
+use era_solver::tensor::Tensor;
+
+fn plan_for(kind: &SolverKind, nfe: usize) -> Arc<TrajectoryPlan> {
+    let sched = VpSchedule::default();
+    let steps = kind.steps_for_nfe(nfe);
+    let grid = make_grid(&sched, GridKind::Uniform, steps, 1.0, 1e-3);
+    Arc::new(kind.make_plan(sched, grid, nfe))
+}
+
+fn prior(rows: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::for_stream(seed, 0x5eed);
+    rng.normal_tensor(rows, 2)
+}
+
+fn admission(
+    kind: &SolverKind,
+    plan: Arc<TrajectoryPlan>,
+    rows: usize,
+    seed: u64,
+    task: &TaskSpec,
+) -> LaneAdmission {
+    let res = kind.resolve_task(plan, prior(rows, seed), task).expect("resolve task");
+    LaneAdmission {
+        kind: kind.clone(),
+        view: res.view,
+        x: res.x,
+        churn: res.churn,
+        guided: res.guided,
+        seed,
+    }
+}
+
+fn boxed(
+    kind: &SolverKind,
+    plan: Arc<TrajectoryPlan>,
+    rows: usize,
+    seed: u64,
+    task: &TaskSpec,
+) -> Box<dyn Solver> {
+    kind.build_task(plan, prior(rows, seed), seed, task).expect("build solver")
+}
+
+/// Full-trajectory reference: `(samples, nfe, delta_eps)`.
+fn reference(
+    kind: &SolverKind,
+    plan: Arc<TrajectoryPlan>,
+    rows: usize,
+    seed: u64,
+    task: &TaskSpec,
+    model: &dyn EpsModel,
+) -> (Tensor, usize, Option<f64>) {
+    let mut s = boxed(kind, plan, rows, seed, task);
+    let out = sample_with(s.as_mut(), model);
+    (out, s.nfe(), s.delta_eps())
+}
+
+/// Partial reference: drive `rounds` eval/deliver cycles, then (when
+/// `plus_pull`) one further `next_eval` — the state a lane member holds
+/// right after a pull (ERA advances its iterate at pull time).
+#[allow(clippy::too_many_arguments)]
+fn reference_partial(
+    kind: &SolverKind,
+    plan: Arc<TrajectoryPlan>,
+    rows: usize,
+    seed: u64,
+    task: &TaskSpec,
+    model: &dyn EpsModel,
+    rounds: usize,
+    plus_pull: bool,
+) -> (Tensor, usize) {
+    let mut s = boxed(kind, plan, rows, seed, task);
+    let mut t_buf: Vec<f32> = Vec::new();
+    for _ in 0..rounds {
+        let Some(req) = s.next_eval() else { break };
+        t_buf.clear();
+        t_buf.resize(req.x.rows(), req.t as f32);
+        let eps = match &req.cond {
+            None => model.eval(&req.x, &t_buf),
+            Some(c) => model.eval_cond(&req.x, &t_buf, c),
+        };
+        drop(req);
+        s.on_eval(eps);
+    }
+    if plus_pull {
+        let _ = s.next_eval();
+    }
+    (s.current().clone(), s.nfe())
+}
+
+/// Drive every lane of the engine to completion against `model`.
+fn run_engine(eng: &mut LaneEngine, model: &dyn EpsModel) -> HashMap<usize, Removed> {
+    let mut out = HashMap::new();
+    let mut affected = Vec::new();
+    loop {
+        let mut progressed = false;
+        for id in 0..eng.lane_slots() {
+            if !eng.has_lane(id) {
+                continue;
+            }
+            progressed = true;
+            if eng.is_done(id) {
+                for r in eng.finish_lane(id) {
+                    out.insert(r.slot, r);
+                }
+                continue;
+            }
+            if eng.pending(id).is_none() {
+                affected.clear();
+                eng.step_lane(id, &mut affected);
+                continue;
+            }
+            deliver_one(eng, id, model);
+        }
+        if !progressed {
+            break;
+        }
+    }
+    out
+}
+
+/// Evaluate and deliver one lane's pending request.
+fn deliver_one(eng: &mut LaneEngine, id: usize, model: &dyn EpsModel) {
+    let (x, t, cond) = {
+        let req = eng.pending(id).expect("no pending eval");
+        (Arc::clone(&req.x), req.t, req.cond.clone())
+    };
+    let t_buf = vec![t as f32; x.rows()];
+    let eps = match &cond {
+        None => model.eval(&x, &t_buf),
+        Some(c) => model.eval_cond(&x, &t_buf, c),
+    };
+    drop(x);
+    drop(cond);
+    eng.deliver(id, eps);
+}
+
+#[test]
+fn golden_lane_trajectories_every_solver_kind() {
+    // Three same-config requests share one lane per kind; each member's
+    // trajectory, NFE and delta_eps must be bitwise/exactly what its
+    // own boxed solver produces.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let kinds = [
+        "ddpm",
+        "ddim",
+        "pndm",
+        "fon",
+        "iadams",
+        "dpm-1",
+        "dpm-2",
+        "dpm-3",
+        "dpm-fast",
+        "era",
+        "era-3@0.2",
+        "era-6@5",
+        "era-fixed-4",
+        "era-const-3@0.5",
+    ];
+    for name in kinds {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 16.max(kind.min_nfe());
+        let plan = plan_for(&kind, nfe);
+        let task = TaskSpec::default();
+        let mut eng = LaneEngine::new(0);
+        let members = [(0usize, 3usize, 11u64), (1, 2, 12), (2, 4, 13)];
+        for &(slot, rows, seed) in &members {
+            eng.admit(slot, "gmm8", admission(&kind, plan.clone(), rows, seed, &task));
+        }
+        assert_eq!(eng.lane_count(), 1, "{name}: same config must share one lane");
+        let out = run_engine(&mut eng, &model);
+        for &(slot, rows, seed) in &members {
+            let (want, want_nfe, want_delta) =
+                reference(&kind, plan.clone(), rows, seed, &task, &model);
+            let got = &out[&slot];
+            assert_eq!(got.samples.as_slice(), want.as_slice(), "{name} slot {slot}");
+            assert_eq!(got.nfe, want_nfe, "{name} slot {slot} nfe");
+            assert_eq!(got.delta_eps, want_delta, "{name} slot {slot} delta_eps");
+        }
+    }
+}
+
+#[test]
+fn golden_lane_workloads_guided_img2img_stochastic() {
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let nfe = 14;
+
+    // Guided: two members with *different* scales and classes share a
+    // lane (guidance is per-member row-local state).
+    let era = SolverKind::parse("era").unwrap();
+    let plan = plan_for(&era, nfe);
+    let g1 = TaskSpec { guidance_scale: 2.0, guide_class: 2, ..Default::default() };
+    let g2 = TaskSpec { guidance_scale: 1.0, guide_class: 5, ..Default::default() };
+    let mut eng = LaneEngine::new(0);
+    eng.admit(0, "gmm8", admission(&era, plan.clone(), 4, 21, &g1));
+    eng.admit(1, "gmm8", admission(&era, plan.clone(), 3, 22, &g2));
+    assert_eq!(eng.lane_count(), 1, "guided members must fuse into one lane");
+    let out = run_engine(&mut eng, &model);
+    for (slot, rows, seed, task) in [(0usize, 4usize, 21u64, &g1), (1, 3, 22, &g2)] {
+        let (want, want_nfe, want_delta) =
+            reference(&era, plan.clone(), rows, seed, task, &model);
+        assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "guided slot {slot}");
+        assert_eq!(out[&slot].nfe, want_nfe, "guided nfe doubles per paired eval");
+        assert_eq!(out[&slot].delta_eps, want_delta);
+    }
+
+    // img2img: two strengths = two suffix views = two lanes, both
+    // bitwise equal to their boxed suffix trajectories.
+    let ddim = SolverKind::Ddim;
+    let plan_d = plan_for(&ddim, nfe);
+    let img = |strength: f64, rows: usize| TaskSpec {
+        strength,
+        init: Some(Tensor::from_vec(vec![0.5; rows * 2], rows, 2)),
+        ..Default::default()
+    };
+    let t_half = img(0.5, 4);
+    let t_quarter = img(0.25, 2);
+    let mut eng = LaneEngine::new(0);
+    eng.admit(0, "gmm8", admission(&ddim, plan_d.clone(), 4, 31, &t_half));
+    eng.admit(1, "gmm8", admission(&ddim, plan_d.clone(), 2, 32, &t_quarter));
+    assert_eq!(eng.lane_count(), 2, "distinct suffix starts must not share a lane");
+    let out = run_engine(&mut eng, &model);
+    for (slot, rows, seed, task) in [(0usize, 4usize, 31u64, &t_half), (1, 2, 32, &t_quarter)] {
+        let (want, want_nfe, _) = reference(&ddim, plan_d.clone(), rows, seed, task, &model);
+        assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "img2img slot {slot}");
+        assert_eq!(out[&slot].nfe, want_nfe);
+    }
+
+    // Stochastic churn: per-member streams inside one lane.
+    let sde = TaskSpec { churn: 0.4, ..Default::default() };
+    let mut eng = LaneEngine::new(0);
+    eng.admit(0, "gmm8", admission(&era, plan.clone(), 3, 41, &sde));
+    eng.admit(1, "gmm8", admission(&era, plan.clone(), 3, 42, &sde));
+    // Mixed churn levels in one lane: a deterministic member rides
+    // along untouched by its batch-mates' noise.
+    eng.admit(2, "gmm8", admission(&era, plan.clone(), 2, 43, &TaskSpec::default()));
+    assert_eq!(eng.lane_count(), 1);
+    let out = run_engine(&mut eng, &model);
+    for (slot, rows, seed, task) in
+        [(0usize, 3usize, 41u64, &sde), (1, 3, 42, &sde), (2, 2, 43, &TaskSpec::default())]
+    {
+        let (want, want_nfe, want_delta) =
+            reference(&era, plan.clone(), rows, seed, task, &model);
+        assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "sde slot {slot}");
+        assert_eq!(out[&slot].nfe, want_nfe);
+        assert_eq!(out[&slot].delta_eps, want_delta);
+    }
+
+    // strength = 0: the zero-transition lane returns the re-noised init
+    // with zero evaluations, exactly like the boxed Noop path.
+    let zero = img(0.0, 2);
+    let mut eng = LaneEngine::new(0);
+    eng.admit(0, "gmm8", admission(&ddim, plan_d.clone(), 2, 51, &zero));
+    let out = run_engine(&mut eng, &model);
+    let (want, want_nfe, _) = reference(&ddim, plan_d, 2, 51, &zero, &model);
+    assert_eq!(out[&0].samples.as_slice(), want.as_slice());
+    assert_eq!(out[&0].nfe, want_nfe);
+    assert_eq!(out[&0].nfe, 0);
+}
+
+#[test]
+fn golden_era_split_on_divergence_under_model_error() {
+    // A noisy model drives per-member delta_eps apart; the lane must
+    // split into sibling lanes when selections diverge and every
+    // member must still match its boxed solver bitwise — including the
+    // reported delta_eps.
+    let sched = VpSchedule::default();
+    let model = NoisyEps::new(AnalyticGmm::gmm8(sched), 1.2, 2.0, 9);
+    for name in ["era-4@0.3", "era-6@0.3"] {
+        let kind = SolverKind::parse(name).unwrap();
+        let nfe = 18;
+        let plan = plan_for(&kind, nfe);
+        let task = TaskSpec::default();
+        let mut eng = LaneEngine::new(0);
+        let members: Vec<(usize, usize, u64)> =
+            (0..6).map(|i| (i, 2 + i % 3, 60 + i as u64)).collect();
+        for &(slot, rows, seed) in &members {
+            eng.admit(slot, "gmm8", admission(&kind, plan.clone(), rows, seed, &task));
+        }
+        assert_eq!(eng.lane_count(), 1);
+        let out = run_engine(&mut eng, &model);
+        for &(slot, rows, seed) in &members {
+            let (want, want_nfe, want_delta) =
+                reference(&kind, plan.clone(), rows, seed, &task, &model);
+            assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "{name} slot {slot}");
+            assert_eq!(out[&slot].nfe, want_nfe);
+            assert_eq!(out[&slot].delta_eps, want_delta);
+        }
+    }
+}
+
+#[test]
+fn prop_admission_cancel_interleavings_never_change_surviving_bits() {
+    // Hand-rolled property run: random kinds, member mixes, and
+    // cancellation points (both at round boundaries and right after a
+    // pull, which exercises pending regeneration after compaction).
+    // Every cancelled member's partial iterate and every survivor's
+    // final output must be bitwise identical to a boxed solver driven
+    // to the same point.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let kinds = ["ddim", "ddpm", "iadams", "dpm-2", "era", "era-3@0.2"];
+    let mut prng = Rng::new(0xC0FFEE);
+    for case in 0..30 {
+        let kind = SolverKind::parse(kinds[prng.below(kinds.len() as u64) as usize]).unwrap();
+        let nfe = 10 + prng.below(6) as usize;
+        let plan = plan_for(&kind, nfe);
+        let guided = matches!(kind, SolverKind::Era { .. }) && prng.below(3) == 0;
+        let task = if guided {
+            TaskSpec { guidance_scale: 1.5, guide_class: 1, ..Default::default() }
+        } else {
+            TaskSpec::default()
+        };
+        let n_members = 2 + prng.below(3) as usize;
+        let members: Vec<(usize, usize, u64)> = (0..n_members)
+            .map(|i| (i, 1 + prng.below(4) as usize, 100 * case as u64 + i as u64))
+            .collect();
+        let mut eng = LaneEngine::new(0);
+        for &(slot, rows, seed) in &members {
+            eng.admit(slot, "gmm8", admission(&kind, plan.clone(), rows, seed, &task));
+        }
+        let mut alive: Vec<usize> = members.iter().map(|&(s, _, _)| s).collect();
+        let mut rounds = 0usize;
+        let mut affected = Vec::new();
+        // Interleave stepping with random cancellations.
+        loop {
+            // Cancel at a round boundary (pending None everywhere).
+            // Members of already-finished lanes are left to retire
+            // normally — their state includes ERA's final advance,
+            // which the partial reference does not model.
+            if alive.len() > 1 && prng.below(4) == 0 {
+                let pick = prng.below(alive.len() as u64) as usize;
+                let slot = alive[pick];
+                let lane = eng.lane_of_slot(slot).expect("live member has a lane");
+                if !eng.is_done(lane) {
+                    alive.remove(pick);
+                    let removed = eng.remove_member(lane, slot, None);
+                    let (want, want_nfe) = reference_partial(
+                        &kind,
+                        plan.clone(),
+                        member_rows(&members, slot),
+                        member_seed(&members, slot),
+                        &task,
+                        &model,
+                        rounds,
+                        false,
+                    );
+                    assert_eq!(
+                        removed.samples.as_slice(),
+                        want.as_slice(),
+                        "case {case}: boundary-cancelled member {slot} diverged"
+                    );
+                    assert_eq!(removed.nfe, want_nfe, "case {case} slot {slot} nfe");
+                }
+            }
+            // Step every lane.
+            let mut any_pending = false;
+            for id in 0..eng.lane_slots() {
+                if eng.has_lane(id) && !eng.is_done(id) && eng.pending(id).is_none() {
+                    affected.clear();
+                    eng.step_lane(id, &mut affected);
+                }
+                if eng.has_lane(id) && eng.pending(id).is_some() {
+                    any_pending = true;
+                }
+            }
+            if !any_pending {
+                break; // every lane finished (or emptied)
+            }
+            // Cancel right after a pull: pending must be regenerated
+            // from the compacted state for the survivors.
+            if alive.len() > 1 && prng.below(5) == 0 {
+                let pick = prng.below(alive.len() as u64) as usize;
+                let slot = alive[pick];
+                let lane = eng.lane_of_slot(slot).expect("live member has a lane");
+                if !eng.is_done(lane) && eng.pending(lane).is_some() {
+                    alive.remove(pick);
+                    let removed = eng.remove_member(lane, slot, None);
+                    let (want, want_nfe) = reference_partial(
+                        &kind,
+                        plan.clone(),
+                        member_rows(&members, slot),
+                        member_seed(&members, slot),
+                        &task,
+                        &model,
+                        rounds,
+                        true,
+                    );
+                    assert_eq!(
+                        removed.samples.as_slice(),
+                        want.as_slice(),
+                        "case {case}: post-pull-cancelled member {slot} diverged"
+                    );
+                    assert_eq!(removed.nfe, want_nfe, "case {case} slot {slot} nfe");
+                }
+            }
+            // Deliver every pending lane evaluation.
+            for id in 0..eng.lane_slots() {
+                if eng.has_lane(id) && eng.pending(id).is_some() {
+                    deliver_one(&mut eng, id, &model);
+                }
+            }
+            rounds += 1;
+            assert!(rounds < 200, "case {case}: runaway");
+        }
+        // Collect finished lanes and check the survivors.
+        let mut out = HashMap::new();
+        for id in 0..eng.lane_slots() {
+            if eng.has_lane(id) && eng.is_done(id) {
+                for r in eng.finish_lane(id) {
+                    out.insert(r.slot, r);
+                }
+            }
+        }
+        for &slot in &alive {
+            let (want, want_nfe, want_delta) = reference(
+                &kind,
+                plan.clone(),
+                member_rows(&members, slot),
+                member_seed(&members, slot),
+                &task,
+                &model,
+            );
+            let got = out.get(&slot).unwrap_or_else(|| panic!("case {case}: {slot} missing"));
+            assert_eq!(
+                got.samples.as_slice(),
+                want.as_slice(),
+                "case {case}: survivor {slot} perturbed by compaction"
+            );
+            assert_eq!(got.nfe, want_nfe, "case {case} survivor {slot} nfe");
+            assert_eq!(got.delta_eps, want_delta, "case {case} survivor {slot} delta_eps");
+        }
+    }
+}
+
+fn member_rows(members: &[(usize, usize, u64)], slot: usize) -> usize {
+    members.iter().find(|m| m.0 == slot).unwrap().1
+}
+
+fn member_seed(members: &[(usize, usize, u64)], slot: usize) -> u64 {
+    members.iter().find(|m| m.0 == slot).unwrap().2
+}
