@@ -1,0 +1,101 @@
+//! CI regression gate over the persistent perf trajectory: compare the
+//! `BENCH_*.json` reports a fresh bench run emitted (via
+//! `$ERA_BENCH_JSON_DIR`) against the baselines committed under
+//! `benchmarks/`, and fail loudly — naming the regressed metric — when
+//! a fresh value leaves its baseline's tolerance band.
+//!
+//! ```text
+//! ERA_BENCH_JSON_DIR=/tmp/bench cargo bench ...   # emit fresh reports
+//! cargo run --release --example bench_gate -- benchmarks /tmp/bench
+//! ```
+//!
+//! Every baseline file must have a fresh counterpart; a bench suite
+//! that silently stopped emitting is itself a regression. Fresh metrics
+//! absent from the baseline are informational only (new metrics land in
+//! the trajectory first, get promoted to gates by committing them).
+
+use std::path::Path;
+
+use era_solver::obs::BenchReport;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_gate <baseline-dir> <fresh-dir>");
+        std::process::exit(2);
+    }
+    let baseline_dir = Path::new(&args[1]);
+    let fresh_dir = Path::new(&args[2]);
+
+    let mut baselines: Vec<std::path::PathBuf> = std::fs::read_dir(baseline_dir)
+        .unwrap_or_else(|e| {
+            eprintln!("bench_gate: cannot read {}: {e}", baseline_dir.display());
+            std::process::exit(2);
+        })
+        .filter_map(|entry| {
+            let path = entry.ok()?.path();
+            let name = path.file_name()?.to_str()?;
+            (name.starts_with("BENCH_") && name.ends_with(".json")).then_some(path)
+        })
+        .collect();
+    baselines.sort();
+    if baselines.is_empty() {
+        eprintln!("bench_gate: no BENCH_*.json baselines in {}", baseline_dir.display());
+        std::process::exit(2);
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for base_path in &baselines {
+        let name = base_path.file_name().unwrap().to_str().unwrap();
+        let baseline = match BenchReport::load(base_path) {
+            Ok(r) => r,
+            Err(e) => {
+                failures.push(format!("{name}: unreadable baseline: {e}"));
+                continue;
+            }
+        };
+        let fresh_path = fresh_dir.join(name);
+        let fresh = match BenchReport::load(&fresh_path) {
+            Ok(r) => r,
+            Err(e) => {
+                failures.push(format!(
+                    "{name}: fresh report missing — did the bench stop emitting? ({e})"
+                ));
+                continue;
+            }
+        };
+        let regs = fresh.regressions_against(&baseline);
+        checked += baseline.metrics.len();
+        for r in &regs {
+            failures.push(r.clone());
+        }
+        for m in &baseline.metrics {
+            if let Some(cur) = fresh.get(&m.name) {
+                println!(
+                    "bench_gate: {}/{}: baseline {} -> fresh {} ({}, tol {})",
+                    baseline.suite,
+                    m.name,
+                    m.value,
+                    cur.value,
+                    if regs.iter().any(|r| r.contains(&m.name)) { "REGRESSED" } else { "ok" },
+                    m.tolerance,
+                );
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!(
+            "bench_gate: {} metric(s) across {} suite(s) within tolerance",
+            checked,
+            baselines.len()
+        );
+    } else {
+        eprintln!("bench_gate: {} regression(s):", failures.len());
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}

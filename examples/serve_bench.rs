@@ -35,6 +35,7 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "guidance", value: Some("s"), help: "CFG scale for the load phase, 0 = off (default: 0)" },
     OptSpec { name: "guide-class", value: Some("c"), help: "class id for guided rows (default: 0)" },
     OptSpec { name: "churn", value: Some("s"), help: "stochastic-ERA churn for the load phase (default: 0)" },
+    OptSpec { name: "emit-bench-json", value: Some("path"), help: "write the load phase's BENCH_serving.json report here" },
 ];
 
 fn main() {
@@ -173,6 +174,18 @@ fn run() -> Result<(), String> {
     );
     println!("pool: {}", stack.pool.stats().summary());
     let fused = stack.pool.stats().occupancy();
+    if args.present("emit-bench-json") {
+        use era_solver::obs::{BenchReport, Direction};
+        let mut r = BenchReport::new("serving");
+        r.push("throughput_rows_per_s", report.throughput_rows, Direction::HigherIsBetter, 0.5);
+        r.push("p50_latency_s", report.percentile(0.5), Direction::LowerIsBetter, 1.0);
+        r.push("p99_latency_s", report.percentile(0.99), Direction::LowerIsBetter, 1.0);
+        r.push("errors", report.errors as f64, Direction::LowerIsBetter, 0.0);
+        r.push("batch_occupancy_rows", fused, Direction::HigherIsBetter, 0.5);
+        let path = args.str_or("emit-bench-json", "BENCH_serving.json");
+        r.write_to(std::path::Path::new(&path)).map_err(|e| e.to_string())?;
+        eprintln!("wrote bench report {path}");
+    }
     stack.server.shutdown();
 
     // ---- Part 3: batching ablation — linger on vs off ----

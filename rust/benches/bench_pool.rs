@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use era_solver::coordinator::service::{MockBank, ModelBank};
 use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec};
+use era_solver::obs::{BenchReport, Direction};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
@@ -258,4 +259,19 @@ fn main() {
         speedup >= 1.3,
         "pipelined 2-executor/depth-2 throughput {speedup:.2}x fell below the 1.3x gate"
     );
+
+    // Perf-trajectory artifact (BENCH_pool.json when $ERA_BENCH_JSON_DIR
+    // is set). The 2x2 speedup is a machine-independent ratio and gates
+    // CI against the committed baseline; absolute throughputs ride along
+    // for trend tracking only.
+    let mut report = BenchReport::new("pool");
+    report.push("pipeline_2x2_speedup", speedup, Direction::HigherIsBetter, 0.0);
+    report.push(
+        "pipeline_serialized_samples_per_s",
+        serialized,
+        Direction::HigherIsBetter,
+        0.8,
+    );
+    report.push("pipeline_2x2_samples_per_s", gated, Direction::HigherIsBetter, 0.8);
+    report.write_if_env();
 }

@@ -29,6 +29,8 @@ use std::time::Instant;
 use era_solver::benchkit::black_box;
 use era_solver::coordinator::service::{MockBank, ModelBank};
 use era_solver::coordinator::{CoordinatorConfig, RequestSpec};
+use era_solver::obs::trace::pack_bases;
+use era_solver::obs::{BenchReport, Direction, FlightRecorder, SpanKind};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::rng::Rng;
 use era_solver::solvers::adams_implicit::am_weights;
@@ -271,6 +273,11 @@ fn measure_naive_era(rows: usize, k: usize, nfe: usize, trials: usize) -> StepCo
 /// host-overhead amortisation the lane layer buys. `same_seed` pins
 /// every request to one seed (identical data ⇒ identical `delta_eps`
 /// ⇒ no ERA lane splits — the steady state the zero-alloc gate pins).
+///
+/// With `recorder`, every lane step also records the span events the
+/// production scheduler emits (solver step, ERA selection, slab
+/// completion) *inside* the counted windows — the zero-alloc gate then
+/// covers flight recording itself.
 fn measure_lane_shard(
     name: &str,
     requests: usize,
@@ -278,6 +285,7 @@ fn measure_lane_shard(
     nfe: usize,
     trials: usize,
     same_seed: bool,
+    recorder: Option<&FlightRecorder>,
 ) -> (StepCost, StepCost) {
     let sched = VpSchedule::default();
     let model = AnalyticGmm::gmm8(sched);
@@ -338,6 +346,14 @@ fn measure_lane_shard(
                 let t0 = Instant::now();
                 affected.clear();
                 eng.step_lane(id, &mut affected);
+                if let Some(rec) = recorder {
+                    for &lid in &affected {
+                        rec.record(
+                            lid as u64,
+                            SpanKind::SolverStep { lane: lid as u32, step: step as u32 },
+                        );
+                    }
+                }
                 let ns_step = t0.elapsed().as_nanos();
                 let a1 = allocs();
                 let (x, t) = match eng.pending(id) {
@@ -351,6 +367,30 @@ fn measure_lane_shard(
                 let a2 = allocs();
                 let t1 = Instant::now();
                 eng.deliver(id, eps);
+                if let Some(rec) = recorder {
+                    rec.record(
+                        id as u64,
+                        SpanKind::SlabComplete {
+                            seq: step as u64,
+                            round: step as u64,
+                            executor: 0,
+                            eval_nanos: 0,
+                        },
+                    );
+                    if let Some((_, idx)) = eng.era_selection(id) {
+                        let (k, bases) = pack_bases(idx);
+                        rec.record(
+                            id as u64,
+                            SpanKind::EraStep {
+                                lane: id as u32,
+                                step: step as u32,
+                                delta_eps: 0.0,
+                                k,
+                                bases,
+                            },
+                        );
+                    }
+                }
                 let ns_on = t1.elapsed().as_nanos();
                 let a3 = allocs();
                 if !warm_trial && step >= warmup {
@@ -368,8 +408,9 @@ fn measure_lane_shard(
             }
         }
     }
+    let rec_tag = if recorder.is_some() { "+recording" } else { "" };
     let lane = StepCost {
-        label: format!("lanes/{name} {requests}x{rows}rows"),
+        label: format!("lanes/{name}{rec_tag} {requests}x{rows}rows"),
         steps: lane_steps,
         ns_per_step: lane_ns as f64 / lane_steps.max(1) as f64,
         allocs_per_step: lane_allocs_sum as f64 / lane_counted.max(1) as f64,
@@ -549,8 +590,9 @@ fn main() {
 
     println!("-- lane engine vs boxed per-request stepping, 64-request shard --");
     let mut lane_ratio_ddim = 0.0f64;
+    let mut era_lane_ns = 0.0f64;
     for (name, same_seed) in [("ddim", false), ("era-4", true)] {
-        let (lane, boxed) = measure_lane_shard(name, 64, 4, nfe, trials, same_seed);
+        let (lane, boxed) = measure_lane_shard(name, 64, 4, nfe, trials, same_seed, None);
         println!("{}", lane.line());
         println!("{}", boxed.line());
         let ratio = boxed.ns_per_step / lane.ns_per_step.max(1.0);
@@ -564,6 +606,8 @@ fn main() {
         );
         if name == "ddim" {
             lane_ratio_ddim = ratio;
+        } else {
+            era_lane_ns = lane.ns_per_step;
         }
     }
     // Acceptance (runs in quick mode too — the margin is large enough
@@ -575,13 +619,53 @@ fn main() {
         "lane-vs-boxed host overhead ratio {lane_ratio_ddim:.2} fell below the 1.5x target"
     );
 
+    println!("-- lane stepping with flight recording enabled --");
+    // The production scheduler records spans around every lane step; the
+    // zero-alloc gate must hold with those hooks in the counted windows.
+    let recorder = FlightRecorder::new();
+    let (lane_rec, _) = measure_lane_shard("era-4", 64, 4, nfe, trials, true, Some(&recorder));
+    println!("{}", lane_rec.line());
+    assert!(recorder.recorded() > 0, "recorder saw no events");
+    assert_eq!(
+        lane_rec.steady_max_allocs, 0,
+        "{}: steady-state lane step with recording enabled must not allocate",
+        lane_rec.label
+    );
+
     println!("-- coordinator host overhead per step, instant model --");
     let reqs = if quick { 4 } else { 16 };
-    for shards in [1usize, 2, 4] {
+    let mut pool_ns = [0.0f64; 3];
+    for (i, shards) in [1usize, 2, 4].into_iter().enumerate() {
         let ns = measure_pool(shards, reqs, 64, 10);
+        pool_ns[i] = ns;
         println!(
             "BENCHLINE step_overhead/pool shards={shards} ns_per_request_step={ns:.0}"
         );
     }
+
+    // Structured perf-trajectory artifact (BENCH_step_overhead.json when
+    // $ERA_BENCH_JSON_DIR is set). Alloc counts and ratios are
+    // machine-independent and gate CI against benchmarks/ baselines;
+    // raw timings ride along for trend tracking only (the committed
+    // baselines deliberately omit them).
+    let era_alloc_max = era_costs.iter().map(|c| c.steady_max_allocs).max().unwrap_or(0);
+    let wl_alloc_max = workload_costs.iter().map(|c| c.steady_max_allocs).max().unwrap_or(0);
+    let mut report = BenchReport::new("step_overhead");
+    report.push("era_steady_max_allocs", era_alloc_max as f64, Direction::LowerIsBetter, 0.0);
+    report.push("workload_steady_max_allocs", wl_alloc_max as f64, Direction::LowerIsBetter, 0.0);
+    report.push(
+        "recorded_lane_steady_max_allocs",
+        lane_rec.steady_max_allocs as f64,
+        Direction::LowerIsBetter,
+        0.0,
+    );
+    report.push("lanes_ddim_ratio", lane_ratio_ddim, Direction::HigherIsBetter, 0.0);
+    report.push("era_speedup_vs_naive", best_speedup, Direction::HigherIsBetter, 0.35);
+    report.push("era4_ns_per_step", era_costs[2].ns_per_step, Direction::LowerIsBetter, 1.0);
+    report.push("era4_lane_ns_per_request_step", era_lane_ns, Direction::LowerIsBetter, 1.0);
+    report.push("recorded_lane_ns_per_request_step", lane_rec.ns_per_step, Direction::LowerIsBetter, 1.0);
+    report.push("pool_1shard_ns_per_request_step", pool_ns[0], Direction::LowerIsBetter, 1.0);
+    report.push("pool_4shard_ns_per_request_step", pool_ns[2], Direction::LowerIsBetter, 1.0);
+    report.write_if_env();
     println!("done");
 }

@@ -96,6 +96,10 @@ pub struct SlabJob {
 pub struct SlabCompletion {
     pub seq: u64,
     pub round: u64,
+    /// Index of the executor thread that evaluated the slab (the `i` of
+    /// `era-executor-{i}`) — surfaced in the flight recorder's
+    /// slab-completion spans.
+    pub executor: usize,
     /// The slab's segments (with absolute `src_start` offsets), moved
     /// out of the slab so reassembly survives out-of-order delivery.
     pub segments: Vec<SlabSegment>,
@@ -141,7 +145,7 @@ impl ExecutorPool {
                 let tele = tele.clone();
                 std::thread::Builder::new()
                     .name(format!("era-executor-{i}"))
-                    .spawn(move || executor_loop(bank, rx, completions, tele))
+                    .spawn(move || executor_loop(i, bank, rx, completions, tele))
                     .expect("spawn executor")
             })
             .collect();
@@ -165,6 +169,7 @@ impl ExecutorPool {
 }
 
 fn executor_loop(
+    executor: usize,
     bank: Arc<dyn ModelBank>,
     jobs: Arc<Mutex<Receiver<SlabJob>>>,
     completions: Sender<SlabCompletion>,
@@ -218,6 +223,7 @@ fn executor_loop(
         let sent = completions.send(SlabCompletion {
             seq: job.seq,
             round: job.round,
+            executor,
             segments,
             rows,
             executed_rows,

@@ -17,8 +17,12 @@
 //!   evaluations into bucket-sized slabs (with per-row times and
 //!   absolute `src_start` reassembly offsets), unpack model output back
 //!   to requests, recycle slab buffers. Unit-testable without PJRT.
-//! * [`telemetry`] — counters + latency/occupancy/executor-utilisation
-//!   recorders feeding the serving benches (Tab. 7).
+//! * [`telemetry`] — counters, per-stage latency histograms, a bounded
+//!   latency reservoir, and occupancy/executor-utilisation recorders
+//!   feeding the serving benches (Tab. 7) and the Prometheus
+//!   exposition (DESIGN.md §11). The scheduler also records every
+//!   request's lifecycle into its shard's
+//!   [`crate::obs::FlightRecorder`].
 //! * [`executor`] — the per-shard engine-executor pool: `E` threads,
 //!   each owning a [`executor::BankSet`] replica handle, evaluating
 //!   sequence-numbered slabs off a bounded queue.

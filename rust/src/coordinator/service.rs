@@ -43,6 +43,8 @@ use crate::coordinator::executor::{BankSet, ExecutorPool, SlabCompletion, SlabJo
 use crate::coordinator::request::{RequestSpec, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
 use crate::kernels::{fused, PlanCache};
+use crate::obs::trace::pack_bases;
+use crate::obs::{FlightRecorder, SpanKind};
 use crate::runtime::PjRtEngine;
 use crate::solvers::lanes::{LaneEngine, Removed};
 use crate::solvers::schedule::VpSchedule;
@@ -244,6 +246,7 @@ struct Envelope {
 pub struct Coordinator {
     tx: Option<SyncSender<Envelope>>,
     telemetry: Arc<Telemetry>,
+    recorder: Arc<FlightRecorder>,
     plans: Arc<PlanCache>,
     next_id: AtomicU64,
     default_deadline: Option<Duration>,
@@ -307,17 +310,20 @@ impl Coordinator {
         plans: Arc<PlanCache>,
     ) -> Self {
         let telemetry = Arc::new(Telemetry::new());
+        let recorder = Arc::new(FlightRecorder::new());
         let (tx, rx) = sync_channel::<Envelope>(config.queue_capacity);
         let tele = telemetry.clone();
+        let rec = recorder.clone();
         let loop_plans = plans.clone();
         let default_deadline = config.default_deadline;
         let handle = std::thread::Builder::new()
             .name("era-coordinator".into())
-            .spawn(move || run_loop(banks, config, rx, tele, loop_plans))
+            .spawn(move || run_loop(banks, config, rx, tele, rec, loop_plans))
             .expect("spawn coordinator");
         Coordinator {
             tx: Some(tx),
             telemetry,
+            recorder,
             plans,
             next_id: AtomicU64::new(1),
             default_deadline,
@@ -387,6 +393,14 @@ impl Coordinator {
 
     pub fn telemetry(&self) -> &Telemetry {
         &self.telemetry
+    }
+
+    /// This shard's flight recorder. A [`Ticket`]'s `id` is the trace
+    /// id: `recorder().snapshot_trace(ticket.id)` replays the request's
+    /// lifecycle (admission → queue wait → lane attach → per-step
+    /// solver/slab/ERA spans → finalize or cancel).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
     }
 
     /// Stop accepting work, drain in-flight requests, join the loop.
@@ -461,6 +475,10 @@ struct Scheduler {
     /// Lane id -> dispatch state (lazily created per lane).
     flights: Vec<Option<Flight>>,
     tele: Arc<Telemetry>,
+    /// Flight recorder: typed span events per request id (= trace id).
+    /// Every record is a `Copy` write into a preallocated ring —
+    /// allocation-free on the scheduling hot path.
+    rec: Arc<FlightRecorder>,
     recycler: SlabRecycler,
     /// Dispatch round -> slabs still in flight from it. The window cap
     /// is `pipeline_depth` rounds.
@@ -472,7 +490,7 @@ struct Scheduler {
 }
 
 impl Scheduler {
-    fn new(tele: Arc<Telemetry>, max_lane_rows: usize) -> Scheduler {
+    fn new(tele: Arc<Telemetry>, rec: Arc<FlightRecorder>, max_lane_rows: usize) -> Scheduler {
         Scheduler {
             slots: Vec::new(),
             free_slots: Vec::new(),
@@ -480,6 +498,7 @@ impl Scheduler {
             engine: LaneEngine::new(max_lane_rows),
             flights: Vec::new(),
             tele,
+            rec,
             recycler: SlabRecycler::new(),
             rounds: BTreeMap::new(),
             next_seq: 0,
@@ -536,8 +555,10 @@ impl Scheduler {
             delta_eps: removed.delta_eps,
         };
         if cancelled {
+            self.rec.record(a.id, SpanKind::Cancelled { nfe: res.nfe as u32 });
             self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
         } else {
+            self.rec.record(a.id, SpanKind::Finalize { nfe: res.nfe as u32 });
             self.tele.record_finish(res.total_seconds, res.queue_seconds);
             if let Some(d) = res.delta_eps {
                 self.tele.record_delta_eps(d);
@@ -565,6 +586,7 @@ impl Scheduler {
         let dead_on_arrival =
             env.cancel.is_cancelled() || env.deadline.is_some_and(|d| Instant::now() >= d);
         if dead_on_arrival {
+            self.rec.record(env.id, SpanKind::Cancelled { nfe: 0 });
             self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
             self.tele.inflight_requests.fetch_sub(1, Ordering::SeqCst);
             self.tele.inflight_rows.fetch_sub(env.spec.admission_rows(), Ordering::SeqCst);
@@ -604,16 +626,20 @@ impl Scheduler {
                 if env.spec.task.is_stochastic() {
                     self.tele.stochastic_requests.fetch_add(1, Ordering::Relaxed);
                 }
+                let id = env.id;
+                let rows = env.spec.admission_rows();
                 let slot = self.insert(Active {
-                    id: env.id,
-                    rows: env.spec.admission_rows(),
+                    id,
+                    rows,
                     reply: env.reply,
                     cancel: env.cancel,
                     deadline: env.deadline,
                     submitted_at: Instant::now(),
                     started_at: None,
                 });
-                self.engine.admit(slot, &env.spec.dataset, adm);
+                let lane = self.engine.admit(slot, &env.spec.dataset, adm);
+                self.rec.record(id, SpanKind::Admitted { rows: rows as u32 });
+                self.rec.record(id, SpanKind::LaneAttach { lane: lane as u32 });
                 Some(slot)
             }
             Err(e) => {
@@ -646,6 +672,7 @@ impl Scheduler {
                 let Some(slot) = victim else { break };
                 let removed = self.engine.remove_member(lane, slot, None);
                 let a = self.take_slot(slot);
+                self.rec.record(a.id, SpanKind::LaneCompact { lane: lane as u32 });
                 self.retire_ok_active(a, removed, true);
                 if !self.engine.has_lane(lane) {
                     if lane < self.flights.len() {
@@ -680,16 +707,34 @@ impl Scheduler {
     fn pull_lane(&mut self, lane: usize) {
         let mut affected = std::mem::take(&mut self.affected);
         affected.clear();
+        let t0 = Instant::now();
         self.engine.step_lane(lane, &mut affected);
+        self.tele.stage_solver.observe_nanos(t0.elapsed().as_nanos() as u64);
         let now = Instant::now();
-        for &lid in &affected {
+        for (ai, &lid) in affected.iter().enumerate() {
             let mut k = 0;
             while k < self.engine.members(lid).len() {
-                let slot = self.engine.members(lid)[k].slot;
+                let m = &self.engine.members(lid)[k];
+                let (slot, step) = (m.slot, m.nfe);
                 k += 1;
                 if let Some(a) = self.slots[slot].as_mut() {
                     if a.started_at.is_none() {
                         a.started_at = Some(now);
+                        let wait = (now - a.submitted_at).as_nanos() as u64;
+                        self.rec.record(a.id, SpanKind::QueueWait { nanos: wait });
+                    }
+                    if ai == 0 {
+                        // `affected[0]` is the pulled lane itself; the
+                        // rest are ERS-divergence siblings split off it.
+                        self.rec.record(
+                            a.id,
+                            SpanKind::SolverStep { lane: lid as u32, step: step as u32 },
+                        );
+                    } else {
+                        self.rec.record(
+                            a.id,
+                            SpanKind::LaneSplit { from: lane as u32, to: lid as u32 },
+                        );
                     }
                 }
             }
@@ -703,6 +748,7 @@ impl Scheduler {
     /// A finished lane retires all member requests at once (lanes run
     /// in lockstep, so completion is lane-granular).
     fn retire_lane_done(&mut self, lane: usize) {
+        let t0 = Instant::now();
         for removed in self.engine.finish_lane(lane) {
             let a = self.take_slot(removed.slot);
             self.retire_ok_active(a, removed, false);
@@ -710,6 +756,7 @@ impl Scheduler {
         if lane < self.flights.len() {
             self.flights[lane] = None;
         }
+        self.tele.stage_finalize.observe_nanos(t0.elapsed().as_nanos() as u64);
     }
 
     /// Rows pending on lanes that could join the next dispatch.
@@ -768,6 +815,19 @@ impl Scheduler {
             self.next_seq += 1;
             for seg in &slab.segments {
                 let rows = self.engine.pending(seg.source).map_or(0, |p| p.x.rows());
+                for m in self.engine.members(seg.source) {
+                    if let Some(a) = self.slots[m.slot].as_ref() {
+                        self.rec.record(
+                            a.id,
+                            SpanKind::SlabDispatch {
+                                seq,
+                                round,
+                                lane: seg.source as u32,
+                                rows: seg.rows as u32,
+                            },
+                        );
+                    }
+                }
                 let f = self.flight_mut(seg.source);
                 if f.inflight_slabs == 0 {
                     f.expect_rows = rows;
@@ -831,6 +891,7 @@ impl Scheduler {
         match c.result {
             Ok(out) => {
                 self.tele.eval_nanos.fetch_add(c.eval_nanos, Ordering::Relaxed);
+                self.tele.stage_eval.observe_nanos(c.eval_nanos);
                 self.tele.evals.fetch_add(1, Ordering::Relaxed);
                 self.tele.rows.fetch_add(c.rows, Ordering::Relaxed);
                 self.tele
@@ -877,6 +938,26 @@ impl Scheduler {
                             f.failed = Some(e.clone());
                         }
                     }
+                }
+            }
+        }
+        // Record the completion on every surviving member of every lane
+        // the slab carried rows for (stale lanes route as no-ops).
+        for seg in &segments {
+            if !self.engine.has_lane(seg.source) {
+                continue;
+            }
+            for m in self.engine.members(seg.source) {
+                if let Some(a) = self.slots[m.slot].as_ref() {
+                    self.rec.record(
+                        a.id,
+                        SpanKind::SlabComplete {
+                            seq: c.seq,
+                            round: c.round,
+                            executor: c.executor as u16,
+                            eval_nanos: c.eval_nanos,
+                        },
+                    );
                 }
             }
         }
@@ -935,6 +1016,7 @@ impl Scheduler {
             let Some(slot) = victim else { break };
             let removed = self.engine.remove_member(lane, slot, Some(&mut eps));
             let a = self.take_slot(slot);
+            self.rec.record(a.id, SpanKind::LaneCompact { lane: lane as u32 });
             self.retire_ok_active(a, removed, true);
             if !self.engine.has_lane(lane) {
                 // Every member cancelled mid-flight: drop the output.
@@ -943,7 +1025,29 @@ impl Scheduler {
             }
         }
         self.tele.steps.fetch_add(self.engine.members(lane).len(), Ordering::Relaxed);
+        let t0 = Instant::now();
         self.engine.deliver(lane, eps);
+        self.tele.stage_solver.observe_nanos(t0.elapsed().as_nanos() as u64);
+        // An ERA lane's delivery runs the error-robust selection (Eq.
+        // 15); surface the per-member error measure and the selected
+        // Lagrange basis indices on every member's trace.
+        if let Some((_, idx)) = self.engine.era_selection(lane) {
+            let (k, bases) = pack_bases(idx);
+            for m in self.engine.members(lane) {
+                if let Some(a) = self.slots[m.slot].as_ref() {
+                    self.rec.record(
+                        a.id,
+                        SpanKind::EraStep {
+                            lane: lane as u32,
+                            step: m.nfe as u32,
+                            delta_eps: m.delta_eps,
+                            k,
+                            bases,
+                        },
+                    );
+                }
+            }
+        }
         if self.engine.is_done(lane) {
             self.retire_lane_done(lane);
         } else {
@@ -959,6 +1063,7 @@ fn run_loop(
     config: CoordinatorConfig,
     rx: Receiver<Envelope>,
     tele: Arc<Telemetry>,
+    rec: Arc<FlightRecorder>,
     plans: Arc<PlanCache>,
 ) {
     let batcher = Batcher::new(config.policy);
@@ -972,7 +1077,7 @@ fn run_loop(
         comp_tx,
         tele.clone(),
     );
-    let mut s = Scheduler::new(tele, config.policy.max_rows);
+    let mut s = Scheduler::new(tele, rec, config.policy.max_rows);
     let mut queue_open = true;
 
     'outer: loop {
@@ -1578,6 +1683,75 @@ mod tests {
         for t in tickets {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn flight_recorder_traces_a_request_end_to_end() {
+        let c = Coordinator::start(bank(), CoordinatorConfig::default());
+        let ticket = c.submit(spec("era", 16, 1)).unwrap();
+        let trace = ticket.id;
+        let res = ticket.wait().unwrap();
+        assert_eq!(res.nfe, 10);
+        // Every span — including the terminal — is recorded before the
+        // reply is sent, so the trace is complete once wait() returns.
+        let events = c.recorder().snapshot_trace(trace);
+        assert!(
+            matches!(events.first().map(|e| e.kind), Some(SpanKind::Admitted { rows: 16 })),
+            "trace must open with admission: {events:?}"
+        );
+        assert!(
+            matches!(events.last().map(|e| e.kind), Some(SpanKind::Finalize { nfe: 10 })),
+            "trace must close with finalize: {events:?}"
+        );
+        assert!(events.windows(2).all(|w| w[0].at_nanos <= w[1].at_nanos));
+        let count = |pred: fn(&SpanKind) -> bool| events.iter().filter(|e| pred(&e.kind)).count();
+        assert_eq!(count(|k| matches!(k, SpanKind::LaneAttach { .. })), 1);
+        assert_eq!(count(|k| matches!(k, SpanKind::QueueWait { .. })), 1);
+        assert!(count(|k| matches!(k, SpanKind::SolverStep { .. })) >= 1);
+        assert!(count(|k| matches!(k, SpanKind::SlabDispatch { .. })) >= 1);
+        assert!(count(|k| matches!(k, SpanKind::SlabComplete { .. })) >= 1);
+        let era: Vec<(f64, u8)> = events
+            .iter()
+            .filter_map(|e| match e.kind {
+                SpanKind::EraStep { delta_eps, k, .. } => Some((delta_eps, k)),
+                _ => None,
+            })
+            .collect();
+        assert!(!era.is_empty(), "ERA selections must be traced: {events:?}");
+        assert!(era.iter().all(|&(d, k)| d.is_finite() && k >= 2), "{era:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn cancelled_request_trace_ends_at_the_cancel_event() {
+        // Linger-cancel (no evaluation ever ships): the trace must show
+        // the cancel and nothing after it.
+        let cfg = CoordinatorConfig {
+            policy: BatchPolicy {
+                max_rows: 256,
+                min_rows: 4096,
+                max_wait: Duration::from_secs(5),
+            },
+            ..Default::default()
+        };
+        let c = Coordinator::start(bank(), cfg);
+        let ticket = c.submit(spec("era", 8, 1)).unwrap();
+        let trace = ticket.id;
+        let t0 = Instant::now();
+        while c.telemetry().requests_admitted.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "request never admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        ticket.cancel();
+        let res = ticket.wait().unwrap();
+        assert!(res.cancelled);
+        let events = c.recorder().snapshot_trace(trace);
+        let cancel_at = events
+            .iter()
+            .position(|e| matches!(e.kind, SpanKind::Cancelled { .. }))
+            .expect("cancel event present");
+        assert_eq!(cancel_at, events.len() - 1, "no spans after the cancel: {events:?}");
+        c.shutdown();
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Serving telemetry: counters, latency recording, and batch-occupancy
-//! tracking for the Tab. 7 reproduction and the §Perf iteration log.
+//! Serving telemetry: counters, latency recording, per-stage latency
+//! histograms, and batch-occupancy tracking for the Tab. 7 reproduction
+//! and the §Perf iteration log.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::rng::Rng;
 
 /// Shared counters (cheap, lock-free) + latency samples (mutex; only
 /// touched once per finished request).
@@ -55,12 +58,21 @@ pub struct Telemetry {
     /// whose lane held `m` member requests; the last bucket absorbs
     /// `>= LANE_OCC_BUCKETS` (deep fusion).
     pub lane_occ_hist: [AtomicUsize; LANE_OCC_BUCKETS],
+    /// Per-stage latency histograms (log-scaled fixed buckets, seconds):
+    /// queue wait before the first solver step, host time per lane
+    /// solver step/deliver, engine eval time per slab, and the finalize
+    /// (deliver-to-reply) path. Rendered as Prometheus histograms and
+    /// summarised p50/p99 per stage on the heartbeat line.
+    pub stage_queue: StageHist,
+    pub stage_solver: StageHist,
+    pub stage_eval: StageHist,
+    pub stage_finalize: StageHist,
     /// Sum + count of final per-request `delta_eps` values (ERA
     /// requests only) — the wire-visible error-robust diagnostics,
     /// aggregated for `stats`.
     delta_eps_agg: Mutex<(f64, usize)>,
-    latencies: Mutex<Vec<f64>>,
-    queue_waits: Mutex<Vec<f64>>,
+    latencies: Mutex<Reservoir>,
+    queue_waits: Mutex<Reservoir>,
 }
 
 /// Buckets of the pipeline-depth histogram (depth 1..=8+).
@@ -68,6 +80,164 @@ pub const DEPTH_HIST_BUCKETS: usize = 8;
 
 /// Buckets of the lane-occupancy histogram (1..=8+ members per lane).
 pub const LANE_OCC_BUCKETS: usize = 8;
+
+/// Stage labels, in the order `stage_snapshots` returns them.
+pub const STAGES: [&str; 4] = ["queue", "solver_step", "eval", "finalize"];
+
+/// Upper bucket edges (seconds) of the per-stage latency histograms:
+/// half-decade log scale from 10µs to 1s, plus an implicit overflow
+/// (`+Inf`) bucket.
+pub const STAGE_BOUNDS: [f64; STAGE_BUCKETS - 1] = [
+    1e-5, 3.2e-5, 1e-4, 3.2e-4, 1e-3, 3.2e-3, 1e-2, 3.2e-2, 1e-1, 3.2e-1, 1.0,
+];
+
+/// Bucket count of a [`StageHist`]: the bounds plus the overflow slot.
+pub const STAGE_BUCKETS: usize = 12;
+
+/// Fixed-bucket latency histogram for one pipeline stage. Lock-free
+/// (atomic buckets), allocation-free to observe, mergeable across
+/// shards by element-wise summation.
+#[derive(Default)]
+pub struct StageHist {
+    buckets: [AtomicU64; STAGE_BUCKETS],
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl StageHist {
+    pub fn observe_seconds(&self, seconds: f64) {
+        self.observe_nanos((seconds.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn observe_nanos(&self, nanos: u64) {
+        let seconds = nanos as f64 * 1e-9;
+        let bucket = STAGE_BOUNDS
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(STAGE_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StageHistSnapshot {
+        let mut buckets = [0u64; STAGE_BUCKETS];
+        for (o, b) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        StageHistSnapshot {
+            buckets,
+            sum_seconds: self.sum_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Mergeable, plain-data view of a [`StageHist`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageHistSnapshot {
+    /// Per-bucket (non-cumulative) counts; the last slot is overflow.
+    pub buckets: [u64; STAGE_BUCKETS],
+    pub sum_seconds: f64,
+    pub count: u64,
+}
+
+impl StageHistSnapshot {
+    /// Element-wise merge (the pool's cross-shard rule: sums add).
+    pub fn merge(&mut self, other: &StageHistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.sum_seconds += other.sum_seconds;
+        self.count += other.count;
+    }
+
+    /// Quantile estimate (seconds) from the bucket counts: the upper
+    /// edge of the bucket holding the `q`-th observation (overflow
+    /// reports one log step past the last edge). Coarse by design —
+    /// exact pooled percentiles still come from the latency reservoir.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < STAGE_BOUNDS.len() {
+                    STAGE_BOUNDS[i]
+                } else {
+                    STAGE_BOUNDS[STAGE_BOUNDS.len() - 1] * 3.2
+                };
+            }
+        }
+        STAGE_BOUNDS[STAGE_BOUNDS.len() - 1] * 3.2
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::Arr(self.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("sum_seconds", Json::Num(self.sum_seconds)),
+            ("count", Json::Num(self.count as f64)),
+        ])
+    }
+}
+
+/// Capacity of the latency/queue-wait reservoirs: bounded memory under
+/// sustained traffic, exact below the cap (tests and pooled-percentile
+/// merges at realistic loads see every sample).
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-capacity uniform reservoir (Vitter's algorithm R) with a
+/// deterministic seed: below `cap` it stores every sample exactly; past
+/// it, each of the `seen` observations has equal probability of being
+/// retained, so percentiles stay meaningful at millions of requests
+/// without unbounded memory.
+pub(crate) struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub(crate) fn new(cap: usize, seed: u64) -> Self {
+        Reservoir { cap: cap.max(1), seen: 0, samples: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    pub(crate) fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    pub(crate) fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub(crate) fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        // Deterministic seed: reservoir contents are a pure function of
+        // the observation sequence.
+        Reservoir::new(RESERVOIR_CAP, 0x0b5e_ed5e_ed5e_ed01)
+    }
+}
 
 impl Telemetry {
     pub fn new() -> Self {
@@ -78,35 +248,49 @@ impl Telemetry {
         self.requests_finished.fetch_add(1, Ordering::Relaxed);
         self.latencies.lock().unwrap().push(total_seconds);
         self.queue_waits.lock().unwrap().push(queue_seconds);
+        self.stage_queue.observe_seconds(queue_seconds);
     }
 
     /// Latency percentile over finished requests (0.0..=1.0), seconds.
     pub fn latency_percentile(&self, q: f64) -> f64 {
-        percentile(&self.latencies.lock().unwrap(), q)
+        percentile(self.latencies.lock().unwrap().samples(), q)
     }
 
-    /// Snapshot of raw per-request latencies, seconds (unsorted). The
-    /// pool merges these across shards for exact pooled percentiles.
+    /// Snapshot of retained per-request latencies, seconds (unsorted).
+    /// Exact below [`RESERVOIR_CAP`]; a uniform subsample past it. The
+    /// pool merges these across shards for pooled percentiles.
     pub fn latency_samples(&self) -> Vec<f64> {
-        self.latencies.lock().unwrap().clone()
+        self.latencies.lock().unwrap().samples().to_vec()
     }
 
-    /// Snapshot of raw per-request queue waits, seconds (unsorted).
+    /// Snapshot of retained per-request queue waits, seconds (unsorted).
     pub fn queue_wait_samples(&self) -> Vec<f64> {
-        self.queue_waits.lock().unwrap().clone()
+        self.queue_waits.lock().unwrap().samples().to_vec()
     }
 
     pub fn queue_wait_percentile(&self, q: f64) -> f64 {
-        percentile(&self.queue_waits.lock().unwrap(), q)
+        percentile(self.queue_waits.lock().unwrap().samples(), q)
     }
 
     pub fn mean_latency(&self) -> f64 {
         let l = self.latencies.lock().unwrap();
-        if l.is_empty() {
+        let s = l.samples();
+        if s.is_empty() {
             0.0
         } else {
-            l.iter().sum::<f64>() / l.len() as f64
+            s.iter().sum::<f64>() / s.len() as f64
         }
+    }
+
+    /// Per-stage latency histogram snapshots, in [`STAGES`] order
+    /// (queue, solver_step, eval, finalize).
+    pub fn stage_snapshots(&self) -> [StageHistSnapshot; 4] {
+        [
+            self.stage_queue.snapshot(),
+            self.stage_solver.snapshot(),
+            self.stage_eval.snapshot(),
+            self.stage_finalize.snapshot(),
+        ]
     }
 
     /// Record one round dispatch observed at `depth` in-flight rounds.
@@ -197,12 +381,15 @@ impl Telemetry {
         }
     }
 
-    /// One-line summary for logs / bench output.
+    /// One-line summary for logs / bench output. Ends with end-to-end
+    /// p50/p99 plus per-stage p50/p99 (queue vs solver-step vs eval) so
+    /// operators can spot which stage regressed without pulling JSON.
     pub fn summary(&self) -> String {
+        let [queue, solver, eval, _finalize] = self.stage_snapshots();
         format!(
             "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
              guided={} img2img={} sde={} exec_busy={:.0}% inflight_slabs={} lanes={} \
-             p50={:.1}ms p99={:.1}ms",
+             p50={:.1}ms p99={:.1}ms queue={:.2}/{:.2}ms step={:.2}/{:.2}ms eval={:.2}/{:.2}ms",
             self.requests_finished.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
@@ -218,6 +405,12 @@ impl Telemetry {
             self.lanes.load(Ordering::Relaxed),
             1e3 * self.latency_percentile(0.5),
             1e3 * self.latency_percentile(0.99),
+            1e3 * queue.quantile(0.5),
+            1e3 * queue.quantile(0.99),
+            1e3 * solver.quantile(0.5),
+            1e3 * solver.quantile(0.99),
+            1e3 * eval.quantile(0.5),
+            1e3 * eval.quantile(0.99),
         )
     }
 }
@@ -274,6 +467,108 @@ mod tests {
         assert_eq!(t.latency_samples().len(), 2);
         assert_eq!(t.queue_wait_samples().len(), 2);
         assert!(t.summary().contains("cancelled=0"));
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_cap() {
+        let mut r = Reservoir::new(16, 7);
+        for i in 0..16 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), 16);
+        assert_eq!(r.seen(), 16);
+        let want: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        assert_eq!(r.samples(), &want[..], "below cap every sample is kept in order");
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_stays_uniform() {
+        let mut r = Reservoir::new(64, 42);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), 64, "capacity bounds retained samples");
+        assert_eq!(r.seen(), 100_000);
+        // Uniform retention: the retained sample mean is close to the
+        // stream mean (loose band, deterministic seed so never flaky).
+        let mean = r.samples().iter().sum::<f64>() / 64.0;
+        assert!(
+            (mean - 49_999.5).abs() < 20_000.0,
+            "retained mean {mean} not representative"
+        );
+        // Deterministic: same seed + stream = same retained set.
+        let mut r2 = Reservoir::new(64, 42);
+        for i in 0..100_000 {
+            r2.push(i as f64);
+        }
+        assert_eq!(r.samples(), r2.samples());
+    }
+
+    #[test]
+    fn telemetry_latency_storage_is_bounded() {
+        let t = Telemetry::new();
+        for i in 0..(RESERVOIR_CAP + 500) {
+            t.record_finish(1.0 + (i % 10) as f64, 0.001);
+        }
+        assert_eq!(t.latency_samples().len(), RESERVOIR_CAP);
+        assert_eq!(t.queue_wait_samples().len(), RESERVOIR_CAP);
+        assert_eq!(
+            t.requests_finished.load(Ordering::Relaxed),
+            RESERVOIR_CAP + 500,
+            "counters keep exact totals even when samples subsample"
+        );
+        let p50 = t.latency_percentile(0.5);
+        assert!((1.0..=10.0).contains(&p50), "p50 {p50} from retained samples");
+    }
+
+    #[test]
+    fn stage_hist_buckets_sum_and_quantiles() {
+        let h = StageHist::default();
+        for _ in 0..99 {
+            h.observe_seconds(2e-5); // second bucket (3.2e-5 edge)
+        }
+        h.observe_seconds(0.5); // 3.2e-1..1.0 bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.buckets[1], 99);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 100);
+        assert!((s.sum_seconds - (99.0 * 2e-5 + 0.5)).abs() < 1e-6);
+        assert!((s.quantile(0.5) - 3.2e-5).abs() < 1e-12);
+        assert!((s.quantile(1.0) - 1.0).abs() < 1e-12, "p100 lands in the 1.0-edge bucket");
+        // Overflow bucket: beyond the last edge.
+        let h2 = StageHist::default();
+        h2.observe_seconds(30.0);
+        let s2 = h2.snapshot();
+        assert_eq!(s2.buckets[STAGE_BUCKETS - 1], 1);
+        assert!(s2.quantile(0.5) > 1.0);
+        // Empty histogram quantiles are zero.
+        assert_eq!(StageHist::default().snapshot().quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn stage_hist_merge_is_elementwise() {
+        let a = StageHist::default();
+        a.observe_seconds(1e-4);
+        a.observe_seconds(1e-2);
+        let b = StageHist::default();
+        b.observe_seconds(1e-4);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.buckets[2], 2, "two 1e-4 observations pooled");
+        assert!((m.sum_seconds - (2e-4 + 1e-2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_carries_per_stage_percentiles() {
+        let t = Telemetry::new();
+        t.record_finish(0.05, 0.002);
+        t.stage_solver.observe_nanos(50_000);
+        t.stage_eval.observe_nanos(2_000_000);
+        let s = t.summary();
+        assert!(s.contains("queue="), "{s}");
+        assert!(s.contains("step="), "{s}");
+        assert!(s.contains("eval="), "{s}");
     }
 
     #[test]

@@ -28,6 +28,18 @@
 //!   ([`server`], which also surfaces each ERA request's final
 //!   `delta_eps` on the wire).
 //!
+//! The stack is observable end to end ([`obs`], DESIGN.md
+//! § Observability): each shard keeps a fixed-capacity **flight
+//! recorder** of typed request-lifecycle span events (admission, queue
+//! wait, lane attach/split/compact, slab dispatch/completion with
+//! executor ids, per-step ERA `delta_eps` + selected Lagrange bases,
+//! finalize/cancel) that records allocation-free; the `metrics` wire op
+//! (and `era-serve --metrics`) renders every counter, gauge and
+//! per-stage latency histogram in Prometheus text exposition, `trace
+//! <tag>` dumps one request's span events as JSON, and the bench suite
+//! emits durable `BENCH_*.json` perf artifacts gated in CI against the
+//! committed baselines in `benchmarks/`.
+//!
 //! The sampling hot path runs on the zero-copy kernel layer
 //! ([`kernels`]): in-place fused slice ops, per-solver scratch arenas
 //! and ring-buffer history, and a shared [`kernels::TrajectoryPlan`]
@@ -72,6 +84,7 @@ pub mod json;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod pool;
 pub mod rng;
 pub mod runtime;

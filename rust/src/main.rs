@@ -19,7 +19,11 @@
 //! per-request workload fields (`guidance_scale`/`guide_class`,
 //! `strength` + `init`, `churn` — DESIGN.md §8); guided requests are
 //! admission-charged as paired rows, and the heartbeat summary reports
-//! the running guided/img2img/sde mix.
+//! the running guided/img2img/sde mix plus per-stage latency p50/p99.
+//!
+//! Observability (DESIGN.md §11): the `metrics` wire op returns the
+//! same Prometheus page `--metrics <path>` refreshes on each heartbeat,
+//! and `trace <tag>` dumps a tagged request's flight-recorder spans.
 
 use std::sync::Arc;
 
@@ -45,6 +49,7 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "min-rows", value: Some("n"), help: "linger threshold rows (default: 32)" },
     OptSpec { name: "max-wait-ms", value: Some("ms"), help: "linger budget (default: 2)" },
     OptSpec { name: "max-conns", value: Some("n"), help: "connection cap (default: 64)" },
+    OptSpec { name: "metrics", value: Some("path"), help: "write a Prometheus text-exposition page here on every heartbeat" },
 ];
 
 fn run() -> Result<(), String> {
@@ -110,10 +115,25 @@ fn run() -> Result<(), String> {
     let server = Server::start(pool.clone(), server_cfg).map_err(|e| e.to_string())?;
     eprintln!("[era-serve] listening on {}", server.local_addr());
 
-    // Periodic telemetry heartbeat until killed.
+    // Periodic telemetry heartbeat until killed. With --metrics, each
+    // beat also atomically refreshes a Prometheus text-exposition file
+    // (write temp, rename) for a node-exporter-style scrape.
+    let metrics_path = match args.present("metrics") {
+        true => Some(args.str_or("metrics", "")),
+        false => None,
+    };
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
-        eprintln!("[era-serve] {}", pool.stats().summary());
+        let stats = pool.stats();
+        eprintln!("[era-serve] {}", stats.summary());
+        if let Some(path) = &metrics_path {
+            let tmp = format!("{path}.tmp");
+            if let Err(e) = std::fs::write(&tmp, stats.prometheus())
+                .and_then(|_| std::fs::rename(&tmp, path))
+            {
+                eprintln!("[era-serve] metrics write to {path} failed: {e}");
+            }
+        }
     }
 }
 

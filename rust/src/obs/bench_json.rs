@@ -1,0 +1,259 @@
+//! Persistent perf trajectory: the `BENCH_*.json` artifact schema.
+//!
+//! Benches build a [`BenchReport`] and call [`BenchReport::write_if_env`]
+//! — when `ERA_BENCH_JSON_DIR` is set the report lands there as
+//! `BENCH_<suite>.json`. Committed baselines live in `benchmarks/`; the
+//! `bench_gate` example loads a fresh report and a baseline and fails
+//! naming every regressed metric.
+//!
+//! Schema:
+//!
+//! ```json
+//! {"suite": "step_overhead",
+//!  "metrics": [{"name": "era4_allocs_per_step", "value": 0.0,
+//!               "direction": "lower", "tolerance": 0.0}]}
+//! ```
+//!
+//! `direction` says which way is better; `tolerance` is the fractional
+//! band around the *baseline* value before a worse reading counts as a
+//! regression (0.0 = any worsening fails — used for allocation counts,
+//! which are machine-independent; timing metrics carry generous bands).
+
+use std::io;
+use std::path::Path;
+
+use crate::json::{self, Json};
+
+/// Which direction of change is an improvement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+impl Direction {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Direction::LowerIsBetter => "lower",
+            Direction::HigherIsBetter => "higher",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lower" => Some(Direction::LowerIsBetter),
+            "higher" => Some(Direction::HigherIsBetter),
+            _ => None,
+        }
+    }
+}
+
+/// One tracked metric.
+#[derive(Clone, Debug)]
+pub struct BenchMetric {
+    pub name: String,
+    pub value: f64,
+    pub direction: Direction,
+    /// Fractional tolerance band around the baseline value.
+    pub tolerance: f64,
+}
+
+/// One bench suite's emitted report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub suite: String,
+    pub metrics: Vec<BenchMetric>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> Self {
+        BenchReport { suite: suite.into(), metrics: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, value: f64, direction: Direction, tolerance: f64) {
+        self.metrics.push(BenchMetric { name: name.into(), value, direction, tolerance });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchMetric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("value", Json::Num(m.value)),
+                    ("direction", Json::Str(m.direction.as_str().into())),
+                    ("tolerance", Json::Num(m.tolerance)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("metrics", Json::Arr(metrics)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let suite = j.get("suite").as_str().ok_or("missing suite")?.to_string();
+        let arr = j.get("metrics").as_arr().ok_or("missing metrics")?;
+        let mut metrics = Vec::with_capacity(arr.len());
+        for m in arr {
+            let name = m.get("name").as_str().ok_or("metric missing name")?.to_string();
+            let value = m.get("value").as_f64().ok_or("metric missing value")?;
+            let direction = Direction::parse(m.get("direction").as_str().unwrap_or("lower"))
+                .ok_or("bad direction")?;
+            let tolerance = m.get("tolerance").as_f64().unwrap_or(0.0);
+            metrics.push(BenchMetric { name, value, direction, tolerance });
+        }
+        Ok(BenchReport { suite, metrics })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let j = json::parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    /// Write `BENCH_<suite>.json` into `$ERA_BENCH_JSON_DIR` when the
+    /// env var is set; a silent no-op otherwise (local bench runs).
+    pub fn write_if_env(&self) {
+        if let Ok(dir) = std::env::var("ERA_BENCH_JSON_DIR") {
+            if dir.is_empty() {
+                return;
+            }
+            let path = Path::new(&dir).join(format!("BENCH_{}.json", self.suite));
+            if let Err(e) = self.write_to(&path) {
+                eprintln!("[bench-json] failed to write {path:?}: {e}");
+            } else {
+                println!("[bench-json] wrote {}", path.display());
+            }
+        }
+    }
+
+    /// Compare this (fresh) report against a committed baseline. Returns
+    /// one human-readable message per regression; empty = gate passes.
+    /// The baseline's direction/tolerance are authoritative; a metric
+    /// present in the baseline but missing here is itself a regression.
+    pub fn regressions_against(&self, baseline: &BenchReport) -> Vec<String> {
+        let mut out = Vec::new();
+        for base in &baseline.metrics {
+            let Some(cur) = self.get(&base.name) else {
+                out.push(format!(
+                    "{}/{}: metric missing from the fresh run (baseline {})",
+                    baseline.suite, base.name, base.value
+                ));
+                continue;
+            };
+            let tol = base.tolerance.max(0.0);
+            let (limit, bad) = match base.direction {
+                Direction::LowerIsBetter => {
+                    let limit = base.value * (1.0 + tol) + f64::EPSILON;
+                    (limit, cur.value > limit)
+                }
+                Direction::HigherIsBetter => {
+                    let limit = base.value * (1.0 - tol) - f64::EPSILON;
+                    (limit, cur.value < limit)
+                }
+            };
+            if bad {
+                out.push(format!(
+                    "{}/{}: REGRESSED — current {:.6} vs baseline {:.6} \
+                     (allowed {} {:.6}, direction {}, tolerance {})",
+                    baseline.suite,
+                    base.name,
+                    cur.value,
+                    base.value,
+                    match base.direction {
+                        Direction::LowerIsBetter => "<=",
+                        Direction::HigherIsBetter => ">=",
+                    },
+                    limit,
+                    base.direction.as_str(),
+                    tol
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> BenchReport {
+        let mut r = BenchReport::new("step_overhead");
+        r.push("era4_allocs_per_step", 0.0, Direction::LowerIsBetter, 0.0);
+        r.push("era4_ns_per_step", 1000.0, Direction::LowerIsBetter, 0.5);
+        r.push("lane_vs_boxed_ratio", 2.0, Direction::HigherIsBetter, 0.25);
+        r
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = report();
+        let back = BenchReport::from_json(&json::parse(&r.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.suite, "step_overhead");
+        assert_eq!(back.metrics.len(), 3);
+        let m = back.get("era4_ns_per_step").unwrap();
+        assert_eq!(m.value, 1000.0);
+        assert_eq!(m.direction, Direction::LowerIsBetter);
+        assert_eq!(m.tolerance, 0.5);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = report();
+        let mut fresh = BenchReport::new("step_overhead");
+        fresh.push("era4_allocs_per_step", 0.0, Direction::LowerIsBetter, 0.0);
+        fresh.push("era4_ns_per_step", 1400.0, Direction::LowerIsBetter, 0.5);
+        fresh.push("lane_vs_boxed_ratio", 1.6, Direction::HigherIsBetter, 0.25);
+        assert!(fresh.regressions_against(&base).is_empty());
+    }
+
+    #[test]
+    fn gate_names_the_regressed_metric() {
+        let base = report();
+        let mut fresh = BenchReport::new("step_overhead");
+        fresh.push("era4_allocs_per_step", 1.0, Direction::LowerIsBetter, 0.0);
+        fresh.push("era4_ns_per_step", 1600.0, Direction::LowerIsBetter, 0.5);
+        fresh.push("lane_vs_boxed_ratio", 1.0, Direction::HigherIsBetter, 0.25);
+        let msgs = fresh.regressions_against(&base);
+        assert_eq!(msgs.len(), 3, "{msgs:?}");
+        assert!(msgs[0].contains("era4_allocs_per_step"), "{}", msgs[0]);
+        assert!(msgs[1].contains("era4_ns_per_step"), "{}", msgs[1]);
+        assert!(msgs[2].contains("lane_vs_boxed_ratio"), "{}", msgs[2]);
+        assert!(msgs.iter().all(|m| m.contains("REGRESSED")));
+    }
+
+    #[test]
+    fn missing_metric_is_a_regression() {
+        let base = report();
+        let fresh = BenchReport::new("step_overhead");
+        let msgs = fresh.regressions_against(&base);
+        assert_eq!(msgs.len(), 3);
+        assert!(msgs[0].contains("missing"));
+    }
+
+    #[test]
+    fn improvements_never_fail_the_gate() {
+        let base = report();
+        let mut fresh = BenchReport::new("step_overhead");
+        fresh.push("era4_allocs_per_step", 0.0, Direction::LowerIsBetter, 0.0);
+        fresh.push("era4_ns_per_step", 10.0, Direction::LowerIsBetter, 0.5);
+        fresh.push("lane_vs_boxed_ratio", 50.0, Direction::HigherIsBetter, 0.25);
+        assert!(fresh.regressions_against(&base).is_empty());
+    }
+}

@@ -1,0 +1,31 @@
+//! Observability: request-lifecycle tracing, Prometheus-style metrics
+//! exposition, and persistent bench artifacts.
+//!
+//! Three layers, all zero-dependency:
+//!
+//! * [`trace`] — a per-shard **flight recorder**: every admitted request
+//!   is identified by its shard-local request id (the trace id), and the
+//!   scheduler/executor pipeline records typed [`trace::SpanEvent`]s
+//!   (admission, queue wait, lane attach/split/compact, slab
+//!   dispatch/completion, per-step ERA `delta_eps` + selected Lagrange
+//!   bases, finalize/cancel) into a fixed-capacity preallocated ring.
+//!   Recording is allocation-free at steady state — events are `Copy`
+//!   with inline basis-index storage — so it stays under the
+//!   `bench_step_overhead` zero-alloc gates with recording enabled.
+//! * [`prometheus`] — a tiny Prometheus text-exposition builder used by
+//!   `PoolStats::prometheus()` to render every counter/gauge/histogram
+//!   (including the per-stage latency histograms) for the `metrics`
+//!   wire op and the `era-serve --metrics` textfile.
+//! * [`bench_json`] — the `BENCH_*.json` artifact schema: benches emit
+//!   structured metric reports (`{"name", "value", "direction",
+//!   "tolerance"}`), committed baselines live under `benchmarks/`, and
+//!   the `bench_gate` example compares a fresh run against them so the
+//!   perf trajectory is durable and CI fails on regression.
+
+pub mod bench_json;
+pub mod prometheus;
+pub mod trace;
+
+pub use bench_json::{BenchMetric, BenchReport, Direction};
+pub use prometheus::PromText;
+pub use trace::{FlightRecorder, SpanEvent, SpanKind, MAX_BASES};

@@ -1,0 +1,137 @@
+//! Minimal Prometheus text-exposition builder (format version 0.0.4).
+//!
+//! Naming scheme: every metric is prefixed `era_`; counters end in
+//! `_total`, gauges are bare, histograms render the conventional
+//! `_bucket{le="..."}` / `_sum` / `_count` triplet with a final
+//! `le="+Inf"` bucket. Labels are caller-supplied `(key, value)` pairs;
+//! values are escaped per the exposition spec.
+
+/// Incremental builder for one exposition payload.
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        PromText { out: String::new() }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header for a metric family.
+    /// `kind` is one of `counter`, `gauge`, `histogram`.
+    pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line `name{labels} value`.
+    pub fn value(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        self.push_labels(labels);
+        // Prometheus accepts scientific notation; render integers bare.
+        if v.fract() == 0.0 && v.abs() < 1e15 {
+            self.out.push_str(&format!(" {}\n", v as i64));
+        } else {
+            self.out.push_str(&format!(" {v}\n"));
+        }
+    }
+
+    /// Emit a full histogram: cumulative `_bucket` lines over `bounds`
+    /// (upper edges in seconds) plus the implicit `+Inf` bucket, then
+    /// `_sum` and `_count`. `buckets` holds per-bucket (non-cumulative)
+    /// counts, one per bound plus one overflow slot.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+        buckets: &[u64],
+        sum: f64,
+        count: u64,
+    ) {
+        debug_assert_eq!(buckets.len(), bounds.len() + 1, "one overflow bucket");
+        let mut cum = 0u64;
+        let bucket_name = format!("{name}_bucket");
+        for (i, &bound) in bounds.iter().enumerate() {
+            cum += buckets[i];
+            let le = format!("{bound}");
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", &le));
+            self.value(&bucket_name, &ls, cum as f64);
+        }
+        cum += buckets[bounds.len()];
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.value(&bucket_name, &ls, cum as f64);
+        self.value(&format!("{name}_sum"), labels, sum);
+        self.value(&format!("{name}_count"), labels, count as f64);
+    }
+
+    fn push_labels(&mut self, labels: &[(&str, &str)]) {
+        if labels.is_empty() {
+            return;
+        }
+        self.out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            let escaped = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+            self.out.push_str(&format!("{k}=\"{escaped}\""));
+        }
+        self.out.push('}');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromText {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counter_and_gauge_lines() {
+        let mut p = PromText::new();
+        p.family("era_requests_finished_total", "Finished requests.", "counter");
+        p.value("era_requests_finished_total", &[], 42.0);
+        p.family("era_inflight_rows", "Rows in flight.", "gauge");
+        p.value("era_inflight_rows", &[("shard", "0")], 128.0);
+        let text = p.finish();
+        assert!(text.contains("# HELP era_requests_finished_total Finished requests.\n"));
+        assert!(text.contains("# TYPE era_requests_finished_total counter\n"));
+        assert!(text.contains("era_requests_finished_total 42\n"));
+        assert!(text.contains("era_inflight_rows{shard=\"0\"} 128\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let mut p = PromText::new();
+        p.histogram(
+            "era_stage_latency_seconds",
+            &[("stage", "queue")],
+            &[0.001, 0.01],
+            &[3, 2, 1],
+            0.025,
+            6,
+        );
+        let text = p.finish();
+        assert!(text.contains("era_stage_latency_seconds_bucket{stage=\"queue\",le=\"0.001\"} 3\n"));
+        assert!(text.contains("era_stage_latency_seconds_bucket{stage=\"queue\",le=\"0.01\"} 5\n"));
+        assert!(text.contains("era_stage_latency_seconds_bucket{stage=\"queue\",le=\"+Inf\"} 6\n"));
+        assert!(text.contains("era_stage_latency_seconds_sum{stage=\"queue\"} 0.025\n"));
+        assert!(text.contains("era_stage_latency_seconds_count{stage=\"queue\"} 6\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromText::new();
+        p.value("era_x", &[("d", "a\"b")], 1.0);
+        assert!(p.finish().contains("era_x{d=\"a\\\"b\"} 1\n"));
+    }
+}

@@ -1,0 +1,307 @@
+//! Request-lifecycle flight recorder.
+//!
+//! One [`FlightRecorder`] per shard. The trace id of a request is its
+//! shard-local request id (the `Envelope`/`Active` id the coordinator
+//! already assigns); the pool maps client tags to `(shard, id)` so a
+//! request is addressable end to end. Events are fixed-size `Copy`
+//! values written into a preallocated ring under a mutex — recording
+//! performs **zero heap allocations**, so the scheduler can record from
+//! inside the zero-alloc-gated stepping path. The ring keeps the newest
+//! `capacity` events; readers get a request's events oldest→newest.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// Inline storage for ERA's selected Lagrange basis indices. The paper
+/// uses k ≤ 5; the solver parser accepts a little more headroom.
+pub const MAX_BASES: usize = 8;
+
+/// One typed span event in a request's lifecycle. Everything is inline
+/// (`Copy`, no heap) so recording can never allocate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpanKind {
+    /// Request admitted into the shard scheduler with `rows` sample rows.
+    Admitted { rows: u32 },
+    /// Request became a member of lane `lane` at admission.
+    LaneAttach { lane: u32 },
+    /// Time spent queued before the first solver step.
+    QueueWait { nanos: u64 },
+    /// One solver step advanced the request's lane (`step` = NFE so far).
+    SolverStep { lane: u32, step: u32 },
+    /// ERA diagnostics for one corrected step: the error-robust error
+    /// measure (Eq. 15) and the Lagrange basis indices the selection
+    /// chose (Eq. 16/17). `k` of the `bases` slots are meaningful.
+    EraStep { lane: u32, step: u32, delta_eps: f64, k: u8, bases: [u16; MAX_BASES] },
+    /// ERA selection divergence split this request off into lane `to`.
+    LaneSplit { from: u32, to: u32 },
+    /// This request's rows were compacted out of lane `lane` (cancel or
+    /// deadline retirement of a lane member).
+    LaneCompact { lane: u32 },
+    /// The request's lane evaluation went out in slab `seq` of dispatch
+    /// round `round`.
+    SlabDispatch { seq: u64, round: u64, lane: u32, rows: u32 },
+    /// The slab came back from executor `executor` after `eval_nanos`
+    /// of engine time.
+    SlabComplete { seq: u64, round: u64, executor: u16, eval_nanos: u64 },
+    /// Request finished normally after `nfe` network evaluations.
+    Finalize { nfe: u32 },
+    /// Request was cancelled (client cancel or deadline) after `nfe`
+    /// evaluations. Terminal: no spans follow it for this trace.
+    Cancelled { nfe: u32 },
+}
+
+/// A recorded event: which request, when (nanos since the recorder was
+/// created — one clock per shard), and what happened.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub at_nanos: u64,
+    pub kind: SpanKind,
+}
+
+struct Ring {
+    slots: Vec<SpanEvent>,
+    /// Monotonic write cursor; `head % capacity` is the next slot.
+    head: u64,
+}
+
+/// Fixed-capacity ring of span events for one shard. `record` is
+/// allocation-free; `snapshot_trace` (a debug/wire read) may allocate.
+pub struct FlightRecorder {
+    ring: Mutex<Ring>,
+    capacity: usize,
+    epoch: Instant,
+}
+
+impl FlightRecorder {
+    /// Default per-shard capacity: enough for several hundred requests'
+    /// full lifecycles before wraparound.
+    pub const DEFAULT_CAPACITY: usize = 8192;
+
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let filler = SpanEvent { trace: 0, at_nanos: 0, kind: SpanKind::Admitted { rows: 0 } };
+        FlightRecorder {
+            ring: Mutex::new(Ring { slots: vec![filler; capacity], head: 0 }),
+            capacity,
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Nanoseconds since this recorder's epoch (the shard's trace clock).
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one event for `trace`. Allocation-free: a `Copy` write
+    /// into a preallocated slot plus a cursor bump.
+    pub fn record(&self, trace: u64, kind: SpanKind) {
+        let at_nanos = self.now_nanos();
+        let mut ring = self.ring.lock().unwrap();
+        let slot = (ring.head % self.capacity as u64) as usize;
+        ring.slots[slot] = SpanEvent { trace, at_nanos, kind };
+        ring.head += 1;
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.ring.lock().unwrap().head
+    }
+
+    /// All retained events, oldest→newest. The ring keeps the newest
+    /// `capacity` events; older ones are overwritten.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let ring = self.ring.lock().unwrap();
+        let cap = self.capacity as u64;
+        let start = ring.head.saturating_sub(cap);
+        (start..ring.head)
+            .map(|i| ring.slots[(i % cap) as usize])
+            .collect()
+    }
+
+    /// Retained events for one trace, oldest→newest.
+    pub fn snapshot_trace(&self, trace: u64) -> Vec<SpanEvent> {
+        self.snapshot().into_iter().filter(|e| e.trace == trace).collect()
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpanKind {
+    /// Stable wire name for the event type.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Admitted { .. } => "admitted",
+            SpanKind::LaneAttach { .. } => "lane_attach",
+            SpanKind::QueueWait { .. } => "queue_wait",
+            SpanKind::SolverStep { .. } => "solver_step",
+            SpanKind::EraStep { .. } => "era_step",
+            SpanKind::LaneSplit { .. } => "lane_split",
+            SpanKind::LaneCompact { .. } => "lane_compact",
+            SpanKind::SlabDispatch { .. } => "slab_dispatch",
+            SpanKind::SlabComplete { .. } => "slab_complete",
+            SpanKind::Finalize { .. } => "finalize",
+            SpanKind::Cancelled { .. } => "cancelled",
+        }
+    }
+
+    /// True for the events that end a trace (nothing may follow them).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, SpanKind::Finalize { .. } | SpanKind::Cancelled { .. })
+    }
+}
+
+/// Serialise one event for the `trace` wire op.
+pub fn event_to_json(e: &SpanEvent) -> Json {
+    let mut obj = Json::obj(vec![
+        ("kind", Json::Str(e.kind.name().into())),
+        ("at_ns", Json::Num(e.at_nanos as f64)),
+    ]);
+    match e.kind {
+        SpanKind::Admitted { rows } => obj.set("rows", Json::Num(rows as f64)),
+        SpanKind::LaneAttach { lane } => obj.set("lane", Json::Num(lane as f64)),
+        SpanKind::QueueWait { nanos } => obj.set("wait_ns", Json::Num(nanos as f64)),
+        SpanKind::SolverStep { lane, step } => {
+            obj.set("lane", Json::Num(lane as f64));
+            obj.set("step", Json::Num(step as f64));
+        }
+        SpanKind::EraStep { lane, step, delta_eps, k, bases } => {
+            obj.set("lane", Json::Num(lane as f64));
+            obj.set("step", Json::Num(step as f64));
+            obj.set("delta_eps", Json::Num(delta_eps));
+            let idx: Vec<Json> =
+                bases[..k as usize].iter().map(|&b| Json::Num(b as f64)).collect();
+            obj.set("bases", Json::Arr(idx));
+        }
+        SpanKind::LaneSplit { from, to } => {
+            obj.set("from", Json::Num(from as f64));
+            obj.set("to", Json::Num(to as f64));
+        }
+        SpanKind::LaneCompact { lane } => obj.set("lane", Json::Num(lane as f64)),
+        SpanKind::SlabDispatch { seq, round, lane, rows } => {
+            obj.set("seq", Json::Num(seq as f64));
+            obj.set("round", Json::Num(round as f64));
+            obj.set("lane", Json::Num(lane as f64));
+            obj.set("rows", Json::Num(rows as f64));
+        }
+        SpanKind::SlabComplete { seq, round, executor, eval_nanos } => {
+            obj.set("seq", Json::Num(seq as f64));
+            obj.set("round", Json::Num(round as f64));
+            obj.set("executor", Json::Num(executor as f64));
+            obj.set("eval_ns", Json::Num(eval_nanos as f64));
+        }
+        SpanKind::Finalize { nfe } => obj.set("nfe", Json::Num(nfe as f64)),
+        SpanKind::Cancelled { nfe } => obj.set("nfe", Json::Num(nfe as f64)),
+    }
+    obj
+}
+
+/// Pack a selected-indices slice into the inline basis array (clamped
+/// to [`MAX_BASES`]).
+pub fn pack_bases(idx: &[usize]) -> (u8, [u16; MAX_BASES]) {
+    let mut bases = [0u16; MAX_BASES];
+    let k = idx.len().min(MAX_BASES);
+    for (slot, &b) in bases.iter_mut().zip(idx.iter()) {
+        *slot = b.min(u16::MAX as usize) as u16;
+    }
+    (k as u8, bases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_keeps_newest_in_order() {
+        let rec = FlightRecorder::with_capacity(8);
+        for step in 0..20u32 {
+            rec.record(1, SpanKind::SolverStep { lane: 0, step });
+        }
+        let events = rec.snapshot();
+        assert_eq!(events.len(), 8, "ring retains exactly its capacity");
+        // The newest 8 events (steps 12..20) survive, oldest→newest.
+        for (i, e) in events.iter().enumerate() {
+            match e.kind {
+                SpanKind::SolverStep { step, .. } => assert_eq!(step, 12 + i as u32),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(
+            events.windows(2).all(|w| w[0].at_nanos <= w[1].at_nanos),
+            "timestamps monotone oldest→newest"
+        );
+        assert_eq!(rec.recorded(), 20);
+    }
+
+    #[test]
+    fn snapshot_trace_filters_and_preserves_order() {
+        let rec = FlightRecorder::with_capacity(64);
+        rec.record(7, SpanKind::Admitted { rows: 4 });
+        rec.record(9, SpanKind::Admitted { rows: 2 });
+        rec.record(7, SpanKind::LaneAttach { lane: 3 });
+        rec.record(9, SpanKind::Cancelled { nfe: 0 });
+        rec.record(7, SpanKind::Finalize { nfe: 10 });
+        let t7 = rec.snapshot_trace(7);
+        assert_eq!(t7.len(), 3);
+        assert_eq!(t7[0].kind, SpanKind::Admitted { rows: 4 });
+        assert_eq!(t7[1].kind, SpanKind::LaneAttach { lane: 3 });
+        assert_eq!(t7[2].kind, SpanKind::Finalize { nfe: 10 });
+        let t9 = rec.snapshot_trace(9);
+        assert_eq!(t9.len(), 2);
+        assert!(t9[1].kind.is_terminal());
+        assert!(rec.snapshot_trace(42).is_empty());
+    }
+
+    #[test]
+    fn cancelled_trace_is_terminal_after_wrap() {
+        // A cancelled trace's terminal event survives wraparound as long
+        // as it is among the newest `capacity` events, and nothing for
+        // that trace follows it.
+        let rec = FlightRecorder::with_capacity(16);
+        rec.record(5, SpanKind::Admitted { rows: 1 });
+        rec.record(5, SpanKind::Cancelled { nfe: 2 });
+        for step in 0..10 {
+            rec.record(6, SpanKind::SolverStep { lane: 0, step });
+        }
+        let t5 = rec.snapshot_trace(5);
+        assert_eq!(t5.last().map(|e| e.kind), Some(SpanKind::Cancelled { nfe: 2 }));
+        assert!(t5[..t5.len() - 1].iter().all(|e| !e.kind.is_terminal()));
+    }
+
+    #[test]
+    fn event_json_carries_typed_fields() {
+        let (k, bases) = pack_bases(&[2, 5, 9]);
+        let e = SpanEvent {
+            trace: 3,
+            at_nanos: 1234,
+            kind: SpanKind::EraStep { lane: 1, step: 4, delta_eps: 0.125, k, bases },
+        };
+        let j = event_to_json(&e);
+        assert_eq!(j.get("kind").as_str(), Some("era_step"));
+        assert_eq!(j.get("at_ns").as_usize(), Some(1234));
+        assert_eq!(j.get("delta_eps").as_f64(), Some(0.125));
+        let b = j.get("bases").as_f64_vec().unwrap();
+        assert_eq!(b, vec![2.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn pack_bases_clamps() {
+        let (k, bases) = pack_bases(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(k as usize, MAX_BASES);
+        assert_eq!(bases[MAX_BASES - 1], 8);
+    }
+}

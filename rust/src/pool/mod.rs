@@ -42,7 +42,7 @@ pub mod stats;
 pub use placement::PlacementPolicy;
 pub use stats::{PoolStats, ShardStats};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -53,6 +53,7 @@ use crate::coordinator::{
     SamplingResult, SubmitError,
 };
 use crate::kernels::PlanCache;
+use crate::obs::SpanEvent;
 
 /// Pool construction knobs.
 #[derive(Clone, Debug)]
@@ -100,6 +101,39 @@ pub struct WorkerPool {
     /// Wire-level cancellation registry: client-chosen tag -> cancel
     /// handle of the in-flight request carrying it.
     tags: Mutex<HashMap<u64, CancelHandle>>,
+    /// Trace routing: client-chosen tag -> `(shard, request id)` of the
+    /// flight-recorder trace it landed as. Unlike `tags`, entries
+    /// survive completion (a finished or cancelled request stays
+    /// traceable) and are evicted FIFO past [`TRACE_ROUTES_CAP`].
+    traces: Mutex<TraceRoutes>,
+}
+
+/// Cap on remembered tag -> trace routes; the oldest route is evicted
+/// first. Sized to comfortably outlive the shards' flight-recorder
+/// rings, which overwrite event history long before 1024 requests.
+const TRACE_ROUTES_CAP: usize = 1024;
+
+/// FIFO-bounded tag -> `(shard, request id)` map. A tag re-used for a
+/// newer request simply overwrites the route (latest wins); the FIFO
+/// then tracks the tag's *first* insertion, so a heavily re-used tag
+/// can be evicted earlier than its last use — acceptable for a
+/// debugging facility.
+#[derive(Default)]
+struct TraceRoutes {
+    map: HashMap<u64, (usize, u64)>,
+    fifo: VecDeque<u64>,
+}
+
+impl TraceRoutes {
+    fn insert(&mut self, tag: u64, shard: usize, id: u64) {
+        if self.map.insert(tag, (shard, id)).is_none() {
+            self.fifo.push_back(tag);
+            while self.fifo.len() > TRACE_ROUTES_CAP {
+                let Some(old) = self.fifo.pop_front() else { break };
+                self.map.remove(&old);
+            }
+        }
+    }
 }
 
 /// A pending pool response: the shard ticket plus where it was placed.
@@ -181,6 +215,7 @@ impl WorkerPool {
             pool_rejected: AtomicUsize::new(0),
             admission: Mutex::new(()),
             tags: Mutex::new(HashMap::new()),
+            traces: Mutex::new(TraceRoutes::default()),
         }
     }
 
@@ -229,12 +264,33 @@ impl WorkerPool {
             self.tags.lock().unwrap().insert(tag, cancel.clone());
         }
         let result = self.route_and_submit(&spec, &cancel);
-        if result.is_err() {
-            if let Some(tag) = tag {
-                self.deregister_tag(tag, &cancel);
+        match (&result, tag) {
+            // Remember where the tagged request landed so `trace <tag>`
+            // can replay its flight-recorder spans — including after it
+            // completes or is cancelled.
+            (Ok(ticket), Some(tag)) => {
+                self.traces.lock().unwrap().insert(tag, ticket.shard, ticket.id());
             }
+            (Err(_), Some(tag)) => self.deregister_tag(tag, &cancel),
+            _ => {}
         }
         result
+    }
+
+    /// Resolve a client tag to the `(shard, request id)` its request
+    /// landed as. The request id is the shard-local trace id.
+    pub fn trace_route(&self, tag: u64) -> Option<(usize, u64)> {
+        self.traces.lock().unwrap().map.get(&tag).copied()
+    }
+
+    /// Replay the flight-recorder span events (oldest -> newest) of the
+    /// request submitted under `tag`: `(shard, trace id, events)`.
+    /// `None` when the tag was never registered or its route was
+    /// evicted; an empty event list when the shard's ring has since
+    /// overwritten the request's history.
+    pub fn trace_events(&self, tag: u64) -> Option<(usize, u64, Vec<SpanEvent>)> {
+        let (shard, id) = self.trace_route(tag)?;
+        Some((shard, id, self.shards[shard].recorder().snapshot_trace(id)))
     }
 
     fn route_and_submit(
@@ -550,6 +606,29 @@ mod tests {
         assert!(s.evals() >= 20, "evals {}", s.evals());
         assert_eq!(s.inflight_rows(), 0);
         assert!(s.summary().contains("placement=round-robin"));
+        p.shutdown();
+    }
+
+    #[test]
+    fn trace_events_resolve_by_tag_across_shards() {
+        use crate::obs::SpanKind;
+        let p = pool(2, PlacementPolicy::RoundRobin);
+        let t1 = p.submit_tagged(spec(8, 0), Some(100)).unwrap();
+        let t2 = p.submit_tagged(spec(8, 1), Some(101)).unwrap();
+        let (s1, s2) = (t1.shard, t2.shard);
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+        let (shard, _, events) = p.trace_events(100).expect("tag 100 routed");
+        assert_eq!(shard, s1);
+        assert!(matches!(events.first().map(|e| e.kind), Some(SpanKind::Admitted { .. })));
+        assert!(
+            matches!(events.last().map(|e| e.kind), Some(SpanKind::Finalize { .. })),
+            "completed request stays traceable: {events:?}"
+        );
+        let (shard2, _, ev2) = p.trace_events(101).expect("tag 101 routed");
+        assert_eq!(shard2, s2);
+        assert!(!ev2.is_empty());
+        assert!(p.trace_events(999).is_none(), "unknown tag has no route");
         p.shutdown();
     }
 

@@ -8,9 +8,13 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::coordinator::telemetry::{sorted_percentile, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS};
+use crate::coordinator::telemetry::{
+    sorted_percentile, StageHistSnapshot, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS, STAGES,
+    STAGE_BOUNDS,
+};
 use crate::coordinator::Telemetry;
 use crate::json::Json;
+use crate::obs::PromText;
 
 /// One shard's counters at snapshot time.
 #[derive(Clone, Debug)]
@@ -46,6 +50,9 @@ pub struct ShardStats {
     /// Sum / count of final per-request `delta_eps` values (ERA only).
     pub delta_eps_sum: f64,
     pub delta_eps_count: usize,
+    /// Per-stage latency histogram snapshots, in [`STAGES`] order
+    /// (queue, solver_step, eval, finalize).
+    pub stages: [StageHistSnapshot; 4],
 }
 
 impl ShardStats {
@@ -75,6 +82,7 @@ impl ShardStats {
             lane_occ_hist: t.lane_occ_snapshot(),
             delta_eps_sum,
             delta_eps_count,
+            stages: t.stage_snapshots(),
         }
     }
 
@@ -133,6 +141,16 @@ impl ShardStats {
                 Json::Arr(self.lane_occ_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
             ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
+            (
+                "stages",
+                Json::obj(
+                    STAGES
+                        .iter()
+                        .zip(self.stages.iter())
+                        .map(|(name, s)| (*name, s.to_json()))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -260,6 +278,127 @@ impl PoolStats {
         out
     }
 
+    /// Per-stage latency histograms pooled across shards (element-wise
+    /// bucket sums), in [`STAGES`] order.
+    pub fn stage_hists(&self) -> [StageHistSnapshot; 4] {
+        let mut out = [StageHistSnapshot::default(); 4];
+        for s in &self.per_shard {
+            for (o, h) in out.iter_mut().zip(s.stages.iter()) {
+                o.merge(h);
+            }
+        }
+        out
+    }
+
+    /// Render the full merged snapshot in Prometheus text exposition
+    /// format (0.0.4): every counter/gauge, the pipeline-depth and
+    /// lane-occupancy distributions (labelled counters), and the
+    /// per-stage latency histograms as conventional `_bucket`/`_sum`/
+    /// `_count` families. Served by the `metrics` wire op and written
+    /// by `era-serve --metrics <path>`.
+    pub fn prometheus(&self) -> String {
+        let mut p = PromText::new();
+        let counters: [(&str, &str, f64); 9] = [
+            ("era_requests_admitted_total", "Requests admitted across shards.", self.admitted() as f64),
+            ("era_requests_finished_total", "Requests finished successfully.", self.finished() as f64),
+            ("era_requests_cancelled_total", "Requests retired by cancellation or deadline.", self.cancelled() as f64),
+            ("era_requests_rejected_total", "Shard queue rejections plus pool-level admission rejections.", self.rejected() as f64),
+            ("era_evals_total", "Fused model evaluations dispatched.", self.evals() as f64),
+            ("era_rows_total", "Rows packed into fused evaluations.", self.rows() as f64),
+            ("era_guided_requests_total", "Admitted requests using classifier-free guidance.", self.workloads().0 as f64),
+            ("era_img2img_requests_total", "Admitted img2img partial-trajectory requests.", self.workloads().1 as f64),
+            ("era_stochastic_requests_total", "Admitted stochastic (churned) sampling requests.", self.workloads().2 as f64),
+        ];
+        for (name, help, v) in counters {
+            p.family(name, help, "counter");
+            p.value(name, &[], v);
+        }
+        let gauges: [(&str, &str, f64); 10] = [
+            ("era_shards", "Coordinator shards in the pool.", self.shards() as f64),
+            ("era_executors_per_shard", "Engine executor threads per shard.", self.executors_per_shard as f64),
+            ("era_pipeline_depth", "Dispatch rounds allowed in flight per shard.", self.pipeline_depth as f64),
+            ("era_inflight_requests", "Requests submitted but not yet retired.", self.per_shard.iter().map(|s| s.inflight_requests).sum::<usize>() as f64),
+            ("era_inflight_rows", "Rows belonging to in-flight requests.", self.inflight_rows() as f64),
+            ("era_inflight_slabs", "Slabs dispatched to executors and not yet routed back.", self.inflight_slabs() as f64),
+            ("era_lanes", "Live solver lanes across shards.", self.lanes() as f64),
+            ("era_executor_busy_fraction", "Fraction of executor thread time spent evaluating.", self.executor_busy_fraction()),
+            ("era_batch_occupancy_rows", "Mean rows per fused evaluation.", self.occupancy()),
+            ("era_padding_fraction", "Fraction of executed rows that were bucket padding.", self.padding_fraction()),
+        ];
+        for (name, help, v) in gauges {
+            p.family(name, help, "gauge");
+            p.value(name, &[], v);
+        }
+        p.family(
+            "era_request_latency_seconds",
+            "End-to-end request latency percentiles over pooled samples.",
+            "gauge",
+        );
+        p.value("era_request_latency_seconds", &[("quantile", "0.5")], self.p50_ms * 1e-3);
+        p.value("era_request_latency_seconds", &[("quantile", "0.99")], self.p99_ms * 1e-3);
+        p.family("era_mean_delta_eps", "Mean final ERA error measure (Eq. 15).", "gauge");
+        p.value("era_mean_delta_eps", &[], self.mean_delta_eps());
+
+        // Per-shard load view (labelled gauges).
+        p.family("era_shard_inflight_rows", "Rows in flight per shard.", "gauge");
+        for s in &self.per_shard {
+            let shard = s.shard.to_string();
+            p.value("era_shard_inflight_rows", &[("shard", &shard)], s.inflight_rows as f64);
+        }
+        p.family("era_shard_finished_total", "Finished requests per shard.", "counter");
+        for s in &self.per_shard {
+            let shard = s.shard.to_string();
+            p.value("era_shard_finished_total", &[("shard", &shard)], s.finished as f64);
+        }
+
+        // Distribution families: pipeline depth and lane occupancy.
+        p.family(
+            "era_pipeline_depth_dispatches_total",
+            "Dispatch rounds observed at each in-flight depth (last bucket absorbs deeper).",
+            "counter",
+        );
+        for (i, &n) in self.depth_hist().iter().enumerate() {
+            let depth = if i + 1 == DEPTH_HIST_BUCKETS {
+                format!("{}+", i + 1)
+            } else {
+                format!("{}", i + 1)
+            };
+            p.value("era_pipeline_depth_dispatches_total", &[("depth", &depth)], n as f64);
+        }
+        p.family(
+            "era_lane_occupancy_dispatches_total",
+            "Lane dispatches by fused member count (last bucket absorbs deeper).",
+            "counter",
+        );
+        for (i, &n) in self.lane_occ_hist().iter().enumerate() {
+            let members = if i + 1 == LANE_OCC_BUCKETS {
+                format!("{}+", i + 1)
+            } else {
+                format!("{}", i + 1)
+            };
+            p.value("era_lane_occupancy_dispatches_total", &[("members", &members)], n as f64);
+        }
+
+        // Per-stage latency histograms (queue / solver_step / eval /
+        // finalize), pooled across shards.
+        p.family(
+            "era_stage_latency_seconds",
+            "Per-stage latency: queue wait, host solver step, engine eval, finalize.",
+            "histogram",
+        );
+        for (name, h) in STAGES.iter().zip(self.stage_hists().iter()) {
+            p.histogram(
+                "era_stage_latency_seconds",
+                &[("stage", name)],
+                &STAGE_BOUNDS,
+                &h.buckets,
+                h.sum_seconds,
+                h.count,
+            );
+        }
+        p.finish()
+    }
+
     /// Pool-wide mean final `delta_eps`: summed sums over summed counts
     /// (a per-shard average would overweight lightly loaded shards).
     pub fn mean_delta_eps(&self) -> f64 {
@@ -304,10 +443,14 @@ impl PoolStats {
 
     /// One-line summary for heartbeat logs / bench output.
     pub fn summary(&self) -> String {
+        // Per-stage p50/p99 (pooled histograms) ride the heartbeat line
+        // so operators can spot which stage regressed without scraping.
+        let [queue, solver, eval, _finalize] = self.stage_hists();
         format!(
             "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
              evals={} rows={} occupancy={:.1} pad={:.1}% exec_busy={:.0}% inflight_slabs={} \
-             lanes={} p50={:.1}ms p99={:.1}ms",
+             lanes={} p50={:.1}ms p99={:.1}ms queue={:.2}/{:.2}ms step={:.2}/{:.2}ms \
+             eval={:.2}/{:.2}ms",
             self.shards(),
             self.placement,
             self.executors_per_shard,
@@ -324,6 +467,12 @@ impl PoolStats {
             self.lanes(),
             self.p50_ms,
             self.p99_ms,
+            1e3 * queue.quantile(0.5),
+            1e3 * queue.quantile(0.99),
+            1e3 * solver.quantile(0.5),
+            1e3 * solver.quantile(0.99),
+            1e3 * eval.quantile(0.5),
+            1e3 * eval.quantile(0.99),
         )
     }
 
@@ -362,6 +511,16 @@ impl PoolStats {
             ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
+            (
+                "stages",
+                Json::obj(
+                    STAGES
+                        .iter()
+                        .zip(self.stage_hists().iter())
+                        .map(|(name, s)| (*name, s.to_json()))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -473,6 +632,80 @@ mod tests {
         let sj = s.per_shard[1].to_json();
         assert_eq!(sj.get("lanes").as_usize(), Some(2));
         assert!((sj.get("mean_delta_eps").as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_histograms_merge_elementwise_across_shards() {
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.stage_eval.observe_seconds(1e-4);
+        a.stage_eval.observe_seconds(1e-2);
+        b.stage_eval.observe_seconds(1e-4);
+        b.stage_solver.observe_seconds(2e-5);
+        let s = PoolStats::collect("round-robin", &[&a, &b], 0, 1, 1);
+        let [queue, solver, eval, finalize] = s.stage_hists();
+        assert_eq!(eval.count, 3);
+        assert_eq!(eval.buckets[2], 2, "two 1e-4 evals pooled");
+        assert_eq!(solver.count, 1);
+        assert_eq!(queue.count, 0);
+        assert_eq!(finalize.count, 0);
+        // Per-shard snapshots stay unmerged.
+        assert_eq!(s.per_shard[0].stages[2].count, 2);
+        assert_eq!(s.per_shard[1].stages[2].count, 1);
+        let json = s.to_json();
+        assert_eq!(
+            json.get("stages").get("eval").get("count").as_usize(),
+            Some(3),
+            "merged stage hists ride the stats payload"
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.requests_admitted.fetch_add(3, Ordering::Relaxed);
+        b.requests_admitted.fetch_add(1, Ordering::Relaxed);
+        a.record_finish(0.010, 0.002);
+        a.stage_eval.observe_seconds(2e-3);
+        b.stage_eval.observe_seconds(2e-3);
+        a.observe_depth(1);
+        a.observe_lane_occupancy(3);
+        let s = PoolStats::collect("least-loaded", &[&a, &b], 0, 2, 2);
+        let text = s.prometheus();
+        // Families carry HELP/TYPE headers and the era_ prefix.
+        assert!(text.contains("# TYPE era_requests_admitted_total counter\n"), "{text}");
+        assert!(text.contains("era_requests_admitted_total 4\n"), "{text}");
+        assert!(text.contains("era_requests_finished_total 1\n"));
+        assert!(text.contains("# TYPE era_inflight_rows gauge\n"));
+        assert!(text.contains("era_shards 2\n"));
+        assert!(text.contains("era_shard_finished_total{shard=\"0\"} 1\n"));
+        assert!(text.contains("era_shard_finished_total{shard=\"1\"} 0\n"));
+        // Distributions: depth / lane occupancy labelled counters.
+        assert!(text.contains("era_pipeline_depth_dispatches_total{depth=\"1\"} 1\n"));
+        assert!(text.contains(&format!(
+            "era_pipeline_depth_dispatches_total{{depth=\"{DEPTH_HIST_BUCKETS}+\"}} 0\n"
+        )));
+        assert!(text.contains("era_lane_occupancy_dispatches_total{members=\"3\"} 1\n"));
+        // Per-stage latency histograms: cumulative buckets + +Inf,
+        // pooled across shards (two 2e-3 eval observations).
+        assert!(text.contains("# TYPE era_stage_latency_seconds histogram\n"));
+        assert!(
+            text.contains("era_stage_latency_seconds_bucket{stage=\"eval\",le=\"+Inf\"} 2\n"),
+            "{text}"
+        );
+        assert!(text.contains("era_stage_latency_seconds_count{stage=\"eval\"} 2\n"));
+        assert!(text.contains("era_stage_latency_seconds_count{stage=\"queue\"} 1\n"));
+        // f64 Display renders 1e-5 in decimal form.
+        assert!(
+            text.contains("era_stage_latency_seconds_bucket{stage=\"solver_step\",le=\"0.00001\"} 0\n"),
+            "{text}"
+        );
+        // Every sample line belongs to an era_-prefixed family.
+        assert!(text
+            .lines()
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .all(|l| l.starts_with("era_")));
     }
 
     #[test]

@@ -51,6 +51,28 @@ impl Client {
         self.call(&Json::obj(vec![("op", Json::Str("shards".into()))]))
     }
 
+    /// Prometheus text-exposition page of pool-wide metrics: counters,
+    /// gauges, depth/lane-occupancy histograms, and per-stage latency
+    /// histograms (DESIGN.md §11).
+    pub fn metrics(&mut self) -> Result<String, String> {
+        let resp = self.call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))?;
+        resp.get("text")
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| "metrics reply missing text".into())
+    }
+
+    /// Dump the span events recorded for the request registered under
+    /// `tag`: `{"ok":true,"tag":..,"shard":..,"trace":..,"events":[..]}`.
+    /// Errors when the tag was never registered (or has been evicted
+    /// from the route registry).
+    pub fn trace(&mut self, tag: u64) -> Result<Json, String> {
+        self.call(&Json::obj(vec![
+            ("op", Json::Str("trace".into())),
+            ("tag", Json::Num(tag as f64)),
+        ]))
+    }
+
     /// Cancel the request registered under `tag` (typically submitted by
     /// a *different* connection, whose blocked `sample` call then
     /// returns its partial result). Ok(false) when no such tag is live.

@@ -27,6 +27,18 @@
 //!                   "executor_busy_frac":0.8,"depth_hist":[...],...},...]}
 //!
 //! -> {"op":"ping"}            <- {"ok":true,"pong":true}
+//!
+//! -> {"op":"metrics"}
+//! <- {"ok":true,"text":"# HELP era_requests_admitted_total ...\n..."}
+//!     (`text` is a full Prometheus text-exposition page: counters,
+//!     gauges, depth/lane-occupancy histograms, and per-stage latency
+//!     histograms — DESIGN.md §11)
+//!
+//! -> {"op":"trace","tag":42}
+//! <- {"ok":true,"tag":42,"shard":1,"trace":3,
+//!     "events":[{"kind":"admitted","at_ns":120,"rows":64},...]}
+//!     (the owning shard's flight recorder dumped as typed span-event
+//!     JSON; the tag must have been registered via a tagged `sample`)
 //! ```
 //!
 //! `deadline_ms` bounds one request's wall time; the owning shard
@@ -222,6 +234,24 @@ pub fn dispatch(line: &str, pool: &WorkerPool) -> Json {
                 ("per_shard", Json::Arr(per_shard)),
             ])
         }
+        Ok(Request::Metrics) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("text", Json::Str(pool.stats().prometheus())),
+        ]),
+        Ok(Request::Trace { tag }) => match pool.trace_events(tag) {
+            None => err_json(&format!("unknown trace tag {tag}")),
+            Some((shard, trace, events)) => {
+                let events: Vec<Json> =
+                    events.iter().map(crate::obs::trace::event_to_json).collect();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("tag", Json::Num(tag as f64)),
+                    ("shard", Json::Num(shard as f64)),
+                    ("trace", Json::Num(trace as f64)),
+                    ("events", Json::Arr(events)),
+                ])
+            }
+        },
         Ok(Request::Cancel { tag }) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("cancelled", Json::Bool(pool.cancel_tag(tag))),

@@ -15,6 +15,14 @@ pub enum Request {
     /// Cancel the in-flight request registered under `tag` (see the
     /// `tag` field of `sample`). Any connection may cancel any tag.
     Cancel { tag: u64 },
+    /// Full pool telemetry in Prometheus text exposition format
+    /// (returned as the `text` field of the JSON response).
+    Metrics,
+    /// Replay the flight-recorder span events of the request submitted
+    /// under `tag` (admission → queue wait → lane → slabs → per-step
+    /// ERA diagnostics → finalize/cancel). Works after completion, as
+    /// long as the tag route and the shard's ring retain the history.
+    Trace { tag: u64 },
     Sample { spec: RequestSpec, return_samples: bool, tag: Option<u64> },
 }
 
@@ -29,6 +37,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "cancel" => {
             let tag = j.get("tag").as_usize().ok_or("cancel needs a numeric tag")? as u64;
             Ok(Request::Cancel { tag })
+        }
+        "metrics" => Ok(Request::Metrics),
+        "trace" => {
+            let tag = j.get("tag").as_usize().ok_or("trace needs a numeric tag")? as u64;
+            Ok(Request::Trace { tag })
         }
         "sample" => {
             let d = RequestSpec::default();
@@ -240,6 +253,17 @@ mod tests {
         }
         // A cancel without a tag is malformed.
         assert!(parse_request(r#"{"op":"cancel"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_metrics_and_trace() {
+        assert!(matches!(parse_request(r#"{"op":"metrics"}"#), Ok(Request::Metrics)));
+        match parse_request(r#"{"op":"trace","tag":31}"#).unwrap() {
+            Request::Trace { tag } => assert_eq!(tag, 31),
+            _ => panic!("wrong variant"),
+        }
+        // A trace without a tag is malformed.
+        assert!(parse_request(r#"{"op":"trace"}"#).is_err());
     }
 
     #[test]

@@ -1213,6 +1213,19 @@ impl LaneEngine {
         self.slot_lane.get(&slot).copied()
     }
 
+    /// ERA lanes: the last error-robust selection — `(grid index i, the
+    /// selected Lagrange basis indices)`. The selection is lane-uniform
+    /// (divergent members were split off), so one read covers every
+    /// member. `None` for non-ERA lanes, and before the first selection
+    /// has been computed (the scratch starts empty).
+    pub fn era_selection(&self, id: usize) -> Option<(usize, &[usize])> {
+        let lane = self.lanes.get(id)?.as_ref()?;
+        match &lane.kernel {
+            Kernel::Era { i, idx, .. } if !idx.is_empty() => Some((*i, idx.as_slice())),
+            _ => None,
+        }
+    }
+
     /// Stacked tensors handed out that required fresh allocation
     /// (diagnostics; steady-state stepping allocates none).
     pub fn pool_allocations(&self) -> usize {

@@ -239,6 +239,115 @@ fn deadline_zero_round_trips_as_cancelled() {
 }
 
 #[test]
+fn metrics_op_returns_prometheus_text() {
+    let (server, _pool) = mock_pool_stack(2, CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let (samples, _) = c.sample(&spec(24, 9)).unwrap();
+    assert_eq!(samples.rows(), 24);
+    let text = c.metrics().unwrap();
+    assert!(text.contains("# HELP era_requests_finished_total"));
+    assert!(text.contains("# TYPE era_requests_finished_total counter"));
+    assert!(text.contains("era_requests_finished_total 1"));
+    assert!(text.contains("era_shards 2"));
+    // Per-stage latency histograms, one family labelled by stage, with
+    // cumulative buckets up to +Inf.
+    for stage in ["queue", "solver_step", "eval", "finalize"] {
+        assert!(
+            text.contains(&format!("era_stage_latency_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}}")),
+            "missing stage {stage} in:\n{text}"
+        );
+    }
+    // The finished request passed through the solver-step stage at least
+    // once, so its histogram count is non-zero.
+    assert!(text.contains("era_stage_latency_seconds_count{stage=\"solver_step\"}"));
+    server.shutdown();
+}
+
+#[test]
+fn trace_op_dumps_request_spans_across_shards() {
+    // Tagged requests through a 2-shard pool: each tag resolves to its
+    // owning shard's flight recorder, and the dumped trace is a complete
+    // admitted→finalize lifecycle.
+    let (server, _pool) = mock_pool_stack(2, CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for tag in [501u64, 502] {
+        let mut s = spec(16, tag);
+        s.solver = "era".into();
+        s.nfe = 10;
+        let out = c.sample_tagged(&s, Some(tag)).unwrap();
+        assert!(!out.cancelled);
+        let trace = c.trace(tag).unwrap();
+        assert_eq!(trace.get("tag").as_usize(), Some(tag as usize));
+        assert!(trace.get("shard").as_usize().is_some());
+        let events = trace.get("events").as_arr().expect("events array");
+        assert!(!events.is_empty(), "tag {tag} trace empty");
+        let kinds: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("kind").as_str().unwrap())
+            .collect();
+        assert_eq!(kinds.first(), Some(&"admitted"));
+        assert_eq!(kinds.last(), Some(&"finalize"));
+        for needed in ["lane_attach", "queue_wait", "solver_step", "slab_dispatch", "slab_complete", "era_step"] {
+            assert!(kinds.contains(&needed), "tag {tag} missing {needed}: {kinds:?}");
+        }
+        // Timestamps are nondecreasing within the trace.
+        let ts: Vec<f64> = events.iter().map(|e| e.get("at_ns").as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn trace_of_cancelled_request_ends_at_cancel() {
+    // A request parked behind a huge min_rows batch policy gets
+    // cancelled by tag from a second connection; its wire trace must be
+    // terminal at the cancel event with nothing recorded after it.
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 8192,
+            min_rows: 4096,
+            max_wait: Duration::from_secs(5),
+        },
+        ..Default::default()
+    };
+    let (server, _pool) = mock_stack(cfg);
+    let addr = server.local_addr();
+    let tag = 9001u64;
+    let submitter = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.sample_tagged(&spec(16, 1), Some(tag)).unwrap()
+    });
+    let mut c2 = Client::connect(addr).unwrap();
+    // Wait for the tag to register, then cancel it.
+    let mut cancelled = false;
+    for _ in 0..500 {
+        if c2.cancel(tag).unwrap() {
+            cancelled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(cancelled, "tag never registered");
+    let out = submitter.join().unwrap();
+    assert!(out.cancelled);
+    let trace = c2.trace(tag).unwrap();
+    let events = trace.get("events").as_arr().unwrap();
+    let kinds: Vec<&str> = events.iter().map(|e| e.get("kind").as_str().unwrap()).collect();
+    assert_eq!(kinds.last(), Some(&"cancelled"), "kinds: {kinds:?}");
+    assert_eq!(kinds.iter().filter(|k| **k == "cancelled").count(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn trace_of_unknown_tag_errors() {
+    let (server, _pool) = mock_stack(CoordinatorConfig::default());
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let err = c.trace(424242).unwrap_err();
+    assert!(err.contains("unknown trace tag"), "err: {err}");
+    server.shutdown();
+}
+
+#[test]
 fn full_stack_pjrt_when_artifacts_exist() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         return;

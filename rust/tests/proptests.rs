@@ -631,3 +631,79 @@ fn prop_slab_completion_order_immaterial() {
         }
     }
 }
+
+#[test]
+fn prop_concurrent_recording_keeps_span_boundaries_ordered() {
+    // Scheduler + executor threads record into one shared flight
+    // recorder. Per trace, the externally enforced happens-before edges
+    // (admission before any mid-lifecycle event, finalize after all of
+    // them) must survive the interleaving: the snapshot shows exactly
+    // one admission first, exactly one terminal event last, and
+    // timestamps nondecreasing throughout.
+    use era_solver::obs::{FlightRecorder, SpanKind};
+    use std::sync::mpsc;
+
+    let mut rng = Rng::new(0x0B5E);
+    for case in 0..24usize {
+        let rec = Arc::new(FlightRecorder::with_capacity(2048));
+        let traces: Vec<u64> = (0..4).map(|i| (case * 10 + i + 1) as u64).collect();
+        let mut handles = Vec::new();
+        for &t in &traces {
+            let rec_s = rec.clone();
+            let rec_e = rec.clone();
+            let n_mid = 1 + rng.below(40) as u32;
+            let (tx_go, rx_go) = mpsc::channel::<u32>();
+            let (tx_done, rx_done) = mpsc::channel::<()>();
+            // Executor: waits for admission, then races the scheduler's
+            // own solver-step writes for this trace.
+            handles.push(std::thread::spawn(move || {
+                let n = rx_go.recv().unwrap();
+                for s in 0..n {
+                    rec_e.record(
+                        t,
+                        SpanKind::SlabComplete {
+                            seq: s as u64,
+                            round: s as u64,
+                            executor: 1,
+                            eval_nanos: 5,
+                        },
+                    );
+                }
+                tx_done.send(()).unwrap();
+            }));
+            handles.push(std::thread::spawn(move || {
+                rec_s.record(t, SpanKind::Admitted { rows: 8 });
+                rec_s.record(t, SpanKind::LaneAttach { lane: 0 });
+                tx_go.send(n_mid).unwrap();
+                for s in 0..n_mid {
+                    rec_s.record(t, SpanKind::SolverStep { lane: 0, step: s });
+                }
+                rx_done.recv().unwrap();
+                rec_s.record(t, SpanKind::Finalize { nfe: n_mid });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for &t in &traces {
+            let events = rec.snapshot_trace(t);
+            assert!(events.len() >= 4, "case {case}: trace {t} too short");
+            assert_eq!(events.first().unwrap().kind.name(), "admitted", "case {case} trace {t}");
+            assert_eq!(events.last().unwrap().kind.name(), "finalize", "case {case} trace {t}");
+            assert_eq!(
+                events.iter().filter(|e| e.kind.name() == "admitted").count(),
+                1,
+                "case {case} trace {t}: duplicate admission"
+            );
+            assert_eq!(
+                events.iter().filter(|e| e.kind.is_terminal()).count(),
+                1,
+                "case {case} trace {t}: duplicate terminal"
+            );
+            assert!(
+                events.windows(2).all(|w| w[0].at_nanos <= w[1].at_nanos),
+                "case {case} trace {t}: timestamps regressed"
+            );
+        }
+    }
+}
