@@ -89,3 +89,44 @@ def solver_combine(eps_buf, w, x, ab, *, block_b: int = DEFAULT_BLOCK_B,
 def hbm_bytes(k: int, batch: int, dim: int, dtype_bytes: int = 4) -> int:
     """Roofline traffic: (k+1) tile reads + 1 write (for §Perf)."""
     return (k + 2) * batch * dim * dtype_bytes
+
+
+def era_combine_weights(idx, lw, amw, n, k_max=None):
+    """Collapse ERA's two-stage update into one per-buffer weight vector.
+
+    The Rust solver ships a resident ERA step as the triple
+    ``(idx, lw, amw)``: Lagrange predictor weights ``lw`` over the eps
+    buffers named by ``idx`` (Eq. 13/14), folded through Adams–Moulton
+    corrector weights ``amw`` (Eq. 11) where ``amw[0]`` scales the
+    predictor and ``amw[1 + m]`` scales buffer ``n - 1 - m``. Because
+    both stages are linear in the history, they flatten to a single
+    weight per buffer:
+
+        w[idx[j]]   += amw[0] * lw[j]
+        w[n - 1 - m] += amw[1 + m]
+
+    which is exactly the ``w`` argument :func:`solver_combine` streams
+    — the fused kernel then applies the whole predictor-corrector step
+    in one pass over HBM. Weights stay float64 here (the plan's native
+    dtype, matching the Rust side) and narrow to f32 only when the
+    kernel input arrays are built.
+
+    idx, lw: Lagrange buffer indices and weights (equal length)
+    amw:     corrector weights, ``len(amw) - 1 <= n``
+    n:       eps history depth (buffers ``0..n``, newest last)
+    k_max:   optional padded length (e.g. ``K_MAX``) for a fixed-shape
+             AOT artifact; trailing slots get zero weight
+    """
+    if len(idx) != len(lw) or not amw or len(amw) - 1 > n:
+        raise ValueError("malformed ERA combine coefficients")
+    if any(j < 0 or j >= n for j in idx):
+        raise ValueError(f"Lagrange index out of range (history {n})")
+    out_len = n if k_max is None else k_max
+    if out_len < n:
+        raise ValueError(f"k_max {k_max} smaller than history {n}")
+    w = [0.0] * out_len
+    for j, lwj in zip(idx, lw):
+        w[j] += amw[0] * lwj
+    for m in range(len(amw) - 1):
+        w[n - 1 - m] += amw[1 + m]
+    return w

@@ -18,7 +18,12 @@ from compile.kernels.fused_resmlp import (
     vmem_bytes,
 )
 from compile.kernels.ref import fused_resmlp_ref, solver_combine_ref, time_embed_ref
-from compile.kernels.solver_combine import K_MAX, hbm_bytes, solver_combine
+from compile.kernels.solver_combine import (
+    K_MAX,
+    era_combine_weights,
+    hbm_bytes,
+    solver_combine,
+)
 
 
 def _rand(key, *shape, scale=1.0):
@@ -131,6 +136,72 @@ class TestSolverCombine:
 
     def test_hbm_estimate(self):
         assert hbm_bytes(4, 256, 2) == 6 * 256 * 2 * 4
+
+
+class TestEraCombineWeights:
+    """The collapsed predictor+corrector weights must reproduce the
+    explicit two-stage ERA update (Eq. 13/14 then Eq. 11)."""
+
+    def _two_stage(self, eps_buf, idx, lw, amw, x, ab):
+        n = eps_buf.shape[0]
+        pred = sum(w * eps_buf[j] for j, w in zip(idx, lw))
+        comb = amw[0] * pred
+        for m in range(len(amw) - 1):
+            comb = comb + amw[1 + m] * eps_buf[n - 1 - m]
+        return ab[0] * x + ab[1] * comb
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=K_MAX),
+        b=st.integers(min_value=1, max_value=48),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        data=st.data(),
+    )
+    def test_collapse_matches_two_stage(self, n, b, seed, data):
+        k = data.draw(st.integers(min_value=1, max_value=n))
+        c = data.draw(st.integers(min_value=1, max_value=min(n, 4)))
+        idx = data.draw(
+            st.lists(
+                st.integers(min_value=0, max_value=n - 1),
+                min_size=k, max_size=k, unique=True,
+            )
+        )
+        rng = np.random.default_rng(seed)
+        lw = rng.normal(size=k).tolist()
+        amw = rng.normal(size=1 + c).tolist()
+        eps_buf = jnp.asarray(rng.normal(size=(n, b, 2)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
+        ab = jnp.asarray(rng.normal(size=(2,)), jnp.float32)
+
+        w = jnp.asarray(era_combine_weights(idx, lw, amw, n), jnp.float32)
+        out = solver_combine(eps_buf, w, x, ab)
+        ref = self._two_stage(eps_buf, idx, lw, amw, x, ab)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_k_max_padding_is_inert(self):
+        n, idx, lw, amw = 3, [0, 2], [0.75, 0.25], [0.5, 0.5]
+        w = era_combine_weights(idx, lw, amw, n, k_max=K_MAX)
+        assert len(w) == K_MAX
+        assert w[n:] == [0.0] * (K_MAX - n)
+        assert w[:n] == era_combine_weights(idx, lw, amw, n)
+
+    def test_corrector_folds_onto_selected_buffer(self):
+        # Buffer 2 is both a Lagrange point and the newest corrector
+        # term: the weights must sum, not overwrite.
+        w = era_combine_weights([2], [0.5], [2.0, 0.25], 3)
+        assert w == [0.0, 0.0, 2.0 * 0.5 + 0.25]
+
+    def test_rejects_malformed_coefficients(self):
+        with pytest.raises(ValueError):
+            era_combine_weights([0], [1.0, 2.0], [1.0], 2)
+        with pytest.raises(ValueError):
+            era_combine_weights([0], [1.0], [], 2)
+        with pytest.raises(ValueError):
+            era_combine_weights([5], [1.0], [1.0], 2)
+        with pytest.raises(ValueError):
+            era_combine_weights([0], [1.0], [1.0, 0.5, 0.5], 1)
+        with pytest.raises(ValueError):
+            era_combine_weights([0], [1.0], [1.0], 4, k_max=2)
 
 
 class TestTimeEmbed:

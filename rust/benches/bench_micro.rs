@@ -24,12 +24,11 @@ fn main() {
     let eps: Vec<Tensor> = (0..4).map(|_| rng.normal_tensor(256, 64)).collect();
     let refs: Vec<&Tensor> = eps.iter().collect();
     let w = [0.4, 0.3, 0.2, 0.1];
-    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
     b.case("tensor/weighted_sum k=4 256x64", || {
         Tensor::weighted_sum(black_box(&refs), black_box(&w))
     });
     b.case("tensor/kernel_weighted_sum k=4 256x64", || {
-        Tensor::kernel_weighted_sum(black_box(&x), 0.97, -0.1, black_box(&refs), &w32)
+        Tensor::kernel_weighted_sum(black_box(&x), 0.97, -0.1, black_box(&refs), &w)
     });
     let parts: Vec<&[f32]> = eps.iter().map(|e| e.as_slice()).collect();
     let mut fused_out = vec![0.0f32; x.len()];
@@ -40,7 +39,7 @@ fn main() {
             x.as_slice(),
             -0.1,
             black_box(&parts),
-            &w32,
+            &w,
         );
         fused_out[0]
     });

@@ -30,6 +30,7 @@ use std::time::Instant;
 use crate::coordinator::batcher::{Slab, SlabBuffers, SlabSegment};
 use crate::coordinator::service::ModelBank;
 use crate::coordinator::telemetry::Telemetry;
+use crate::runtime::resident::{ResidentOp, ResidentOutcome};
 use crate::tensor::Tensor;
 
 /// The model-bank replicas available to one shard's executors.
@@ -78,7 +79,25 @@ impl BankSet {
     }
 }
 
-/// One packed slab on its way to an executor.
+/// What one executor job carries: a packed slab for the classic
+/// ship-the-tensors path, or a resident-lane op (coefficients only —
+/// the iterate and eps history stay engine-side; see
+/// [`crate::runtime::resident`]).
+pub enum JobPayload {
+    Eval(Slab),
+    Resident {
+        /// Scheduler lane index the op belongs to (routing key — the
+        /// completion's synthetic segment points back at it).
+        lane: usize,
+        /// Engine-side resident-lane handle.
+        handle: u64,
+        /// Rows the lane holds (for telemetry and flight bookkeeping).
+        rows: usize,
+        op: ResidentOp,
+    },
+}
+
+/// One job on its way to an executor.
 pub struct SlabJob {
     /// Monotone per-shard dispatch sequence number.
     pub seq: u64,
@@ -88,10 +107,19 @@ pub struct SlabJob {
     /// Shared dataset-name handle (one allocation per dataset group
     /// per round; per-slab copies are refcount bumps).
     pub dataset: Arc<str>,
-    pub slab: Slab,
+    pub payload: JobPayload,
 }
 
-/// An executed slab on its way back to the scheduler. Carries
+/// A completed job's output.
+pub enum SlabOutput {
+    /// Full eps tensor of an evaluated slab.
+    Eps(Tensor),
+    /// Scalars of a resident-lane op (row distances; final iterate
+    /// only on finish).
+    Resident(ResidentOutcome),
+}
+
+/// An executed job on its way back to the scheduler. Carries
 /// everything routing needs so the scheduler never touches the bank.
 pub struct SlabCompletion {
     pub seq: u64,
@@ -102,6 +130,7 @@ pub struct SlabCompletion {
     pub executor: usize,
     /// The slab's segments (with absolute `src_start` offsets), moved
     /// out of the slab so reassembly survives out-of-order delivery.
+    /// A resident op completes with one synthetic whole-lane segment.
     pub segments: Vec<SlabSegment>,
     /// Rows the slab carried.
     pub rows: usize,
@@ -109,10 +138,11 @@ pub struct SlabCompletion {
     pub executed_rows: usize,
     /// Wall nanoseconds inside the model evaluation.
     pub eval_nanos: u64,
-    /// The model output (row count already validated), or the per-slab
-    /// error that fails only this slab's requests.
-    pub result: Result<Tensor, String>,
-    /// Recyclable backing buffers of the spent slab.
+    /// The job's output (eps row count already validated), or the
+    /// per-slab error that fails only this slab's requests.
+    pub result: Result<SlabOutput, String>,
+    /// Recyclable backing buffers of the spent slab (empty for
+    /// resident ops, which carry no tensors).
     pub buffers: SlabBuffers,
 }
 
@@ -192,46 +222,70 @@ fn executor_loop(
         };
 
         let busy0 = Instant::now();
-        let rows = job.slab.rows();
-        // A panicking bank must not kill the executor thread: an
-        // unsent completion would wedge the slab's requests forever
-        // (sweep/finalize wait for inflight_slabs == 0). Contain it to
-        // a per-slab error like any other evaluation failure.
-        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            bank.eval_cond(&job.dataset, job.slab.x(), &job.slab.t, job.slab.c())
-        }))
-        .unwrap_or_else(|_| Err("model evaluation panicked".into()));
-        let eval_nanos = busy0.elapsed().as_nanos() as u64;
-        // Row-count contract with the engine: a silent mismatch would
-        // truncate or misalign eps rows. Fail the slab, not the shard.
-        let result = out.and_then(|o| {
-            if o.rows() == rows {
-                Ok(o)
-            } else {
-                Err(format!(
-                    "model returned {} rows for a {rows}-row slab",
-                    o.rows()
-                ))
+        let completion = match job.payload {
+            JobPayload::Eval(slab) => {
+                let rows = slab.rows();
+                // A panicking bank must not kill the executor thread: an
+                // unsent completion would wedge the slab's requests forever
+                // (sweep/finalize wait for inflight_slabs == 0). Contain it
+                // to a per-slab error like any other evaluation failure.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    bank.eval_cond(&job.dataset, slab.x(), &slab.t, slab.c())
+                }))
+                .unwrap_or_else(|_| Err("model evaluation panicked".into()));
+                let eval_nanos = busy0.elapsed().as_nanos() as u64;
+                // Row-count contract with the engine: a silent mismatch would
+                // truncate or misalign eps rows. Fail the slab, not the shard.
+                let result = out.and_then(|o| {
+                    if o.rows() == rows {
+                        Ok(SlabOutput::Eps(o))
+                    } else {
+                        Err(format!("model returned {} rows for a {rows}-row slab", o.rows()))
+                    }
+                });
+                let executed_rows = bank.executed_rows(rows);
+                // Surrender the slab's input refcounts *before* the
+                // completion becomes visible (see module docs).
+                let (segments, buffers) = slab.into_recycle();
+                SlabCompletion {
+                    seq: job.seq,
+                    round: job.round,
+                    executor,
+                    segments,
+                    rows,
+                    executed_rows,
+                    eval_nanos,
+                    result,
+                    buffers,
+                }
             }
-        });
-        let executed_rows = bank.executed_rows(rows);
-        // Surrender the slab's input refcounts *before* the completion
-        // becomes visible (see module docs).
-        let (segments, buffers) = job.slab.into_recycle();
+            JobPayload::Resident { lane, handle, rows, op } => {
+                // Same containment contract as the eval path: a panic
+                // inside the engine op must come back as a per-op error.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    match bank.resident() {
+                        Some(rs) => rs.exec(handle, &op),
+                        None => Err("bank exposes no resident state".into()),
+                    }
+                }))
+                .unwrap_or_else(|_| Err("resident op panicked".into()));
+                let eval_nanos = busy0.elapsed().as_nanos() as u64;
+                SlabCompletion {
+                    seq: job.seq,
+                    round: job.round,
+                    executor,
+                    segments: vec![SlabSegment { source: lane, start: 0, src_start: 0, rows }],
+                    rows,
+                    executed_rows: bank.executed_rows(rows),
+                    eval_nanos,
+                    result: out.map(SlabOutput::Resident),
+                    buffers: SlabBuffers::default(),
+                }
+            }
+        };
         tele.executor_busy_nanos
             .fetch_add(busy0.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
-        let sent = completions.send(SlabCompletion {
-            seq: job.seq,
-            round: job.round,
-            executor,
-            segments,
-            rows,
-            executed_rows,
-            eval_nanos,
-            result,
-            buffers,
-        });
-        if sent.is_err() {
+        if completions.send(completion).is_err() {
             break; // scheduler gone
         }
     }
@@ -285,7 +339,7 @@ mod tests {
                     seq: seq as u64,
                     round: 0,
                     dataset: "gmm8".into(),
-                    slab,
+                    payload: JobPayload::Eval(slab),
                 }));
             }
         }
@@ -293,7 +347,9 @@ mod tests {
         for _ in 0..3 {
             let c = crx.recv().expect("completion");
             assert_eq!(c.rows, 4);
-            let out = c.result.expect("eval ok");
+            let SlabOutput::Eps(out) = c.result.expect("eval ok") else {
+                panic!("eval job must complete with an eps tensor");
+            };
             assert_eq!(out.rows(), 4);
             seen.push(c.seq);
         }
@@ -311,10 +367,63 @@ mod tests {
         let req = eval_req(2, 0.5);
         let plan = Batcher::new(BatchPolicy::default()).pack(&[(0, &req)]);
         for slab in plan.slabs {
-            pool.dispatch(SlabJob { seq: 0, round: 0, dataset: "nope".into(), slab });
+            pool.dispatch(SlabJob {
+                seq: 0,
+                round: 0,
+                dataset: "nope".into(),
+                payload: JobPayload::Eval(slab),
+            });
         }
         let c = crx.recv().expect("completion");
         assert!(c.result.is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn resident_ops_run_through_the_pool() {
+        use crate::runtime::resident::{ResidentState, ResidentStep};
+
+        let tele = Arc::new(Telemetry::new());
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let sched = VpSchedule::default();
+        let bank: Arc<MockBank> = Arc::new(
+            MockBank::new(sched)
+                .with("gmm8", Box::new(AnalyticGmm::gmm8(sched)))
+                .with_residency(),
+        );
+        let pool = ExecutorPool::spawn(&BankSet::shared(bank.clone()), 1, 2, ctx, tele);
+        let x = Tensor::from_vec(vec![0.3; 8], 4, 2);
+        let handle = bank.open("gmm8", &x, false).expect("open resident lane");
+        let op = ResidentOp::Step(ResidentStep { pre: None, t: 0.6, post: None });
+        assert!(pool.dispatch(SlabJob {
+            seq: 9,
+            round: 1,
+            dataset: "gmm8".into(),
+            payload: JobPayload::Resident { lane: 5, handle, rows: 4, op },
+        }));
+        let c = crx.recv().expect("completion");
+        assert_eq!((c.rows, c.seq, c.round), (4, 9, 1));
+        assert_eq!(c.segments, vec![SlabSegment { source: 5, start: 0, src_start: 0, rows: 4 }]);
+        let SlabOutput::Resident(out) = c.result.expect("resident op ok") else {
+            panic!("resident job must complete with a resident outcome");
+        };
+        assert_eq!((out.handle, out.rows), (handle, 4));
+        assert!(out.final_x.is_none());
+        // A bank without resident support fails the op, not the shard.
+        let plain: Arc<dyn ModelBank> =
+            Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
+        let (ctx2, crx2) = std::sync::mpsc::channel();
+        let tele2 = Arc::new(Telemetry::new());
+        let pool2 = ExecutorPool::spawn(&BankSet::shared(plain), 1, 2, ctx2, tele2);
+        let op = ResidentOp::Step(ResidentStep { pre: None, t: 0.6, post: None });
+        pool2.dispatch(SlabJob {
+            seq: 0,
+            round: 0,
+            dataset: "gmm8".into(),
+            payload: JobPayload::Resident { lane: 0, handle: 1, rows: 4, op },
+        });
+        assert!(crx2.recv().expect("completion").result.is_err());
+        pool2.shutdown();
         pool.shutdown();
     }
 }

@@ -39,14 +39,17 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatchPolicy, SlabRecycler};
-use crate::coordinator::executor::{BankSet, ExecutorPool, SlabCompletion, SlabJob};
+use crate::coordinator::executor::{
+    BankSet, ExecutorPool, JobPayload, SlabCompletion, SlabJob, SlabOutput,
+};
 use crate::coordinator::request::{RequestSpec, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
 use crate::kernels::{fused, PlanCache};
 use crate::obs::trace::pack_bases;
 use crate::obs::{FlightRecorder, SpanKind};
+use crate::runtime::resident::{self, ResidentOutcome, ResidentState};
 use crate::runtime::PjRtEngine;
-use crate::solvers::lanes::{LaneEngine, Removed};
+use crate::solvers::lanes::{LaneEngine, Removed, ResidentCmd};
 use crate::solvers::schedule::VpSchedule;
 use crate::solvers::{EpsModel, EvalRequest};
 use crate::tensor::Tensor;
@@ -78,6 +81,12 @@ pub trait ModelBank: Send + Sync {
     /// (bucket rounding), for padding telemetry.
     fn executed_rows(&self, rows: usize) -> usize {
         rows
+    }
+    /// The bank's device-resident lane store, when it has one (see
+    /// [`crate::runtime::resident`]). `None` keeps every lane on the
+    /// ship-the-tensors slab path.
+    fn resident(&self) -> Option<&dyn ResidentState> {
+        None
     }
 }
 
@@ -114,22 +123,60 @@ impl ModelBank for PjRtEngine {
     fn executed_rows(&self, rows: usize) -> usize {
         self.manifest().bucket_for(rows).max(rows)
     }
+
+    fn resident(&self) -> Option<&dyn ResidentState> {
+        Some(self)
+    }
 }
 
 /// Test/bench bank over in-process [`EpsModel`]s.
 pub struct MockBank {
     sched: VpSchedule,
     models: BTreeMap<String, Box<dyn EpsModel>>,
+    /// Opt-in resident-lane store, mirroring `PjRtEngine`'s. Kept off
+    /// by default so existing tests exercise the pure slab path.
+    resident: Option<crate::runtime::ResidentTable>,
 }
 
 impl MockBank {
     pub fn new(sched: VpSchedule) -> Self {
-        MockBank { sched, models: BTreeMap::new() }
+        MockBank { sched, models: BTreeMap::new(), resident: None }
     }
 
     pub fn with(mut self, name: &str, model: Box<dyn EpsModel>) -> Self {
         self.models.insert(name.to_string(), model);
         self
+    }
+
+    /// Enable the resident-lane store (the mock twin of the engine's
+    /// device residency).
+    pub fn with_residency(mut self) -> Self {
+        self.resident = Some(crate::runtime::ResidentTable::new());
+        self
+    }
+}
+
+impl ResidentState for MockBank {
+    fn open(&self, dataset: &str, x: &Tensor, keep_history: bool) -> Result<u64, String> {
+        let table = self.resident.as_ref().ok_or("mock bank residency disabled")?;
+        self.dim(dataset)?;
+        Ok(table.open(dataset, x, keep_history))
+    }
+
+    fn exec(&self, handle: u64, op: &resident::ResidentOp) -> Result<ResidentOutcome, String> {
+        let table = self.resident.as_ref().ok_or("mock bank residency disabled")?;
+        table.exec(handle, op, |ds, x, t| ModelBank::eval(self, ds, x, t))
+    }
+
+    fn snapshot(&self, handle: u64) -> Result<resident::ResidentSnapshot, String> {
+        let table = self.resident.as_ref().ok_or("mock bank residency disabled")?;
+        table.snapshot(handle)
+    }
+
+    fn close(&self, handle: u64) {
+        if let Some(table) = self.resident.as_ref() {
+            table.close(handle);
+        }
     }
 }
 
@@ -153,6 +200,10 @@ impl ModelBank for MockBank {
     fn eval_cond(&self, dataset: &str, x: &Tensor, t: &[f32], c: &[f32]) -> Result<Tensor, String> {
         let m = self.models.get(dataset).ok_or_else(|| format!("unknown dataset '{dataset}'"))?;
         Ok(m.eval_cond(x, t, c))
+    }
+
+    fn resident(&self) -> Option<&dyn ResidentState> {
+        self.resident.as_ref().map(|_| self as &dyn ResidentState)
     }
 }
 
@@ -456,6 +507,9 @@ struct Flight {
     /// First slab error of the dispatched evaluation, if any. A
     /// partially failed evaluation is never delivered.
     failed: Option<String>,
+    /// Completed resident op awaiting finalize (resident lanes ship
+    /// one op per round instead of a slab).
+    resident: Option<ResidentOutcome>,
 }
 
 /// The scheduler's request/lane tables and pipeline bookkeeping.
@@ -657,11 +711,28 @@ impl Scheduler {
     /// dispatched pending eval is regenerated from the compacted state.
     /// Runs every scheduler tick — including linger waits — so a cancel
     /// is honoured within a tick, not after `max_wait`.
-    fn sweep(&mut self) {
+    fn sweep(&mut self, rs: Option<&dyn ResidentState>) {
         let now = Instant::now();
         for lane in 0..self.engine.lane_slots() {
             if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
                 continue;
+            }
+            // A resident lane's rows live engine-side: gather it back
+            // before compaction reshapes it (the snapshot is bitwise
+            // the host state, so survivors are unperturbed).
+            if self.engine.resident_handle(lane).is_some() {
+                let dead = self.engine.members(lane).iter().any(|m| {
+                    self.slots[m.slot].as_ref().is_some_and(|a| {
+                        a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d)
+                    })
+                });
+                if !dead {
+                    continue;
+                }
+                let Some(rs) = rs else { continue };
+                if !self.devolve_resident(lane, rs) {
+                    continue; // gather failed; lane already dropped
+                }
             }
             loop {
                 let victim = self.engine.members(lane).iter().find_map(|m| {
@@ -685,8 +756,11 @@ impl Scheduler {
     }
 
     /// Step every idle lane (no pending eval, no slab in flight);
-    /// retire lanes whose members all finished.
-    fn pull_ready(&mut self) {
+    /// retire lanes whose members all finished. Fresh lanes that
+    /// qualify for engine residency convert here instead of stepping:
+    /// their iterate uploads once and subsequent rounds ship only
+    /// coefficient-sized ops.
+    fn pull_ready(&mut self, rs: Option<&dyn ResidentState>) {
         for lane in 0..self.engine.lane_slots() {
             if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
                 continue;
@@ -695,9 +769,92 @@ impl Scheduler {
                 self.retire_lane_done(lane);
                 continue;
             }
+            if self.engine.resident_handle(lane).is_some() {
+                continue; // idle resident lanes dispatch ops, not evals
+            }
             if self.engine.pending(lane).is_none() {
+                if let Some(rs) = rs {
+                    if self.engine.resident_eligible(lane) && self.make_resident(lane, rs) {
+                        continue;
+                    }
+                }
                 self.pull_lane(lane);
             }
+        }
+    }
+
+    /// Convert an eligible fresh lane to engine-resident stepping. The
+    /// one-time upload of the stacked iterate is the last O(rows×dim)
+    /// transfer the lane pays until it finishes (or devolves).
+    fn make_resident(&mut self, lane: usize, rs: &dyn ResidentState) -> bool {
+        let keep = self.engine.resident_keeps_history(lane);
+        let bytes = resident::tensor_bytes(self.engine.lane_x(lane));
+        let handle = match rs.open(self.engine.dataset(lane), self.engine.lane_x(lane), keep) {
+            Ok(h) => h,
+            Err(_) => return false, // engine refused: stay on the slab path
+        };
+        self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
+        self.tele.resident_lanes.fetch_add(1, Ordering::Relaxed);
+        self.engine.resident_convert(lane, handle);
+        // Conversion starts the lane's first step: stamp queue waits
+        // exactly like `pull_lane` does for the host path.
+        let now = Instant::now();
+        let mut k = 0;
+        while k < self.engine.members(lane).len() {
+            let slot = self.engine.members(lane)[k].slot;
+            k += 1;
+            if let Some(a) = self.slots[slot].as_mut() {
+                if a.started_at.is_none() {
+                    a.started_at = Some(now);
+                    let wait = (now - a.submitted_at).as_nanos() as u64;
+                    self.rec.record(a.id, SpanKind::QueueWait { nanos: wait });
+                }
+            }
+        }
+        true
+    }
+
+    /// Gather a resident lane's state back to the host (one full
+    /// snapshot transfer) so splitting, compaction, or shutdown can
+    /// reshape it. Returns false when the gather failed — the lane is
+    /// dropped and its members retired with an error.
+    fn devolve_resident(&mut self, lane: usize, rs: &dyn ResidentState) -> bool {
+        let Some(handle) = self.engine.resident_handle(lane) else {
+            return true;
+        };
+        match rs.snapshot(handle) {
+            Ok(snap) => {
+                let bytes = resident::tensor_bytes(&snap.x)
+                    + snap.eps.iter().map(resident::tensor_bytes).sum::<u64>();
+                self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
+                rs.close(handle);
+                self.tele.resident_lanes.fetch_sub(1, Ordering::Relaxed);
+                self.engine.resident_devolve(lane, snap);
+                true
+            }
+            Err(e) => {
+                rs.close(handle);
+                self.tele.resident_lanes.fetch_sub(1, Ordering::Relaxed);
+                if lane < self.flights.len() {
+                    self.flights[lane] = None;
+                }
+                for slot in self.engine.drop_lane(lane) {
+                    let a = self.take_slot(slot);
+                    self.retire_err_active(a, format!("resident gather failed: {e}"));
+                }
+                false
+            }
+        }
+    }
+
+    /// Close a resident lane's engine-side state without gathering it
+    /// (failure paths where the host copy is already stale anyway).
+    fn forfeit_resident(&mut self, lane: usize, rs: Option<&dyn ResidentState>) {
+        if let Some(handle) = self.engine.resident_handle(lane) {
+            if let Some(rs) = rs {
+                rs.close(handle);
+            }
+            self.tele.resident_lanes.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
@@ -759,11 +916,21 @@ impl Scheduler {
         self.tele.stage_finalize.observe_nanos(t0.elapsed().as_nanos() as u64);
     }
 
-    /// Rows pending on lanes that could join the next dispatch.
+    /// Rows pending on lanes that could join the next dispatch. Idle
+    /// resident lanes count their stacked rows: they carry no pending
+    /// eval but dispatch a coefficient op next round.
     fn dispatchable_rows(&self) -> usize {
         (0..self.engine.lane_slots())
             .filter(|&l| self.engine.has_lane(l) && self.lane_inflight(l) == 0)
-            .filter_map(|l| self.engine.pending(l).map(|p| p.x.rows()))
+            .map(|l| {
+                if let Some(p) = self.engine.pending(l) {
+                    p.x.rows()
+                } else if self.engine.resident_handle(l).is_some() && !self.engine.is_done(l) {
+                    self.engine.lane_rows(l)
+                } else {
+                    0
+                }
+            })
             .sum()
     }
 
@@ -772,10 +939,44 @@ impl Scheduler {
     /// already contiguous, so a lane that fits one slab ships its
     /// stacked tensor zero-copy — and the whole lane costs a single
     /// segment, however many requests it fuses.
-    fn dispatch_round(&mut self, batcher: &Batcher, executors: &ExecutorPool) -> usize {
-        let mut recycler = std::mem::take(&mut self.recycler);
-        let mut jobs: Vec<(Arc<str>, crate::coordinator::batcher::Slab)> = Vec::new();
+    fn dispatch_round(
+        &mut self,
+        batcher: &Batcher,
+        executors: &ExecutorPool,
+        rs: Option<&dyn ResidentState>,
+    ) -> usize {
+        let mut jobs: Vec<(Arc<str>, JobPayload)> = Vec::new();
         let mut dispatched_lanes: Vec<usize> = Vec::new();
+        // ---- Resident lanes: one coefficient-sized op each ----
+        if let Some(rs) = rs {
+            for lane in 0..self.engine.lane_slots() {
+                if !self.engine.has_lane(lane)
+                    || self.lane_inflight(lane) > 0
+                    || self.engine.is_done(lane)
+                    || self.engine.resident_handle(lane).is_none()
+                {
+                    continue;
+                }
+                match self.engine.resident_next_op(lane) {
+                    ResidentCmd::Op(op) => {
+                        let handle = self.engine.resident_handle(lane).unwrap();
+                        let rows = self.engine.lane_rows(lane);
+                        let name: Arc<str> = Arc::from(self.engine.dataset(lane));
+                        jobs.push((name, JobPayload::Resident { lane, handle, rows, op }));
+                        dispatched_lanes.push(lane);
+                    }
+                    ResidentCmd::Devolve => {
+                        // ERS member selections diverged: gather the
+                        // lane back so the host path can split it, and
+                        // let it join this same round's slab pass.
+                        if self.devolve_resident(lane, rs) {
+                            self.pull_lane(lane);
+                        }
+                    }
+                }
+            }
+        }
+        let mut recycler = std::mem::take(&mut self.recycler);
         {
             let mut by_dataset: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
             for lane in 0..self.engine.lane_slots() {
@@ -794,7 +995,7 @@ impl Scheduler {
                 // One allocation per dataset group; slabs share it.
                 let name: Arc<str> = Arc::from(dataset);
                 for slab in plan.slabs {
-                    jobs.push((name.clone(), slab));
+                    jobs.push((name.clone(), JobPayload::Eval(slab)));
                 }
                 dispatched_lanes.extend(lanes);
             }
@@ -810,34 +1011,63 @@ impl Scheduler {
         let round = self.next_round;
         self.next_round += 1;
         let mut dispatched = 0usize;
-        for (dataset, slab) in jobs {
+        for (dataset, payload) in jobs {
             let seq = self.next_seq;
             self.next_seq += 1;
-            for seg in &slab.segments {
-                let rows = self.engine.pending(seg.source).map_or(0, |p| p.x.rows());
-                for m in self.engine.members(seg.source) {
-                    if let Some(a) = self.slots[m.slot].as_ref() {
-                        self.rec.record(
-                            a.id,
-                            SpanKind::SlabDispatch {
-                                seq,
-                                round,
-                                lane: seg.source as u32,
-                                rows: seg.rows as u32,
-                            },
-                        );
+            match &payload {
+                JobPayload::Eval(slab) => {
+                    let words = slab.x().len() + slab.t.len() + slab.c().len();
+                    let bytes = words as u64 * 4;
+                    self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
+                    for seg in &slab.segments {
+                        let rows = self.engine.pending(seg.source).map_or(0, |p| p.x.rows());
+                        for m in self.engine.members(seg.source) {
+                            if let Some(a) = self.slots[m.slot].as_ref() {
+                                self.rec.record(
+                                    a.id,
+                                    SpanKind::SlabDispatch {
+                                        seq,
+                                        round,
+                                        lane: seg.source as u32,
+                                        rows: seg.rows as u32,
+                                    },
+                                );
+                            }
+                        }
+                        let f = self.flight_mut(seg.source);
+                        if f.inflight_slabs == 0 {
+                            f.expect_rows = rows;
+                            debug_assert!(f.assembly.is_none() && f.failed.is_none());
+                        }
+                        f.inflight_slabs += 1;
                     }
                 }
-                let f = self.flight_mut(seg.source);
-                if f.inflight_slabs == 0 {
-                    f.expect_rows = rows;
+                JobPayload::Resident { lane, rows, op, .. } => {
+                    let bytes = resident::op_bytes(op);
+                    self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
+                    for m in self.engine.members(*lane) {
+                        if let Some(a) = self.slots[m.slot].as_ref() {
+                            self.rec.record(
+                                a.id,
+                                SpanKind::SlabDispatch {
+                                    seq,
+                                    round,
+                                    lane: *lane as u32,
+                                    rows: *rows as u32,
+                                },
+                            );
+                        }
+                    }
+                    let f = self.flight_mut(*lane);
                     debug_assert!(f.assembly.is_none() && f.failed.is_none());
+                    debug_assert!(f.resident.is_none() && f.inflight_slabs == 0);
+                    f.expect_rows = *rows;
+                    f.inflight_slabs = 1;
                 }
-                f.inflight_slabs += 1;
             }
             self.tele.inflight_slabs.fetch_add(1, Ordering::SeqCst);
             dispatched += 1;
-            if !executors.dispatch(SlabJob { seq, round, dataset, slab }) {
+            if !executors.dispatch(SlabJob { seq, round, dataset, payload }) {
                 // Every executor has exited (only possible if they all
                 // panicked): no dispatched slab will ever complete, so
                 // fail every lane with work in flight and reset the
@@ -852,6 +1082,7 @@ impl Scheduler {
                     }
                     self.flights[lane] = None;
                     if self.engine.has_lane(lane) {
+                        self.forfeit_resident(lane, rs);
                         for slot in self.engine.drop_lane(lane) {
                             let a = self.take_slot(slot);
                             self.retire_err_active(a, "executor pool stopped".into());
@@ -870,7 +1101,7 @@ impl Scheduler {
     /// Route one sequence-numbered slab completion: account telemetry,
     /// scatter or adopt the output per lane, and finalize every lane
     /// whose evaluation has now fully returned.
-    fn route(&mut self, c: SlabCompletion) {
+    fn route(&mut self, c: SlabCompletion, rs: Option<&dyn ResidentState>) {
         // Lanes referenced by an in-flight slab are never dropped
         // (sweep/finalize require inflight_slabs == 0), so the guards
         // below are for one degenerate case only: completions already
@@ -889,7 +1120,7 @@ impl Scheduler {
         }
         let segments = c.segments;
         match c.result {
-            Ok(out) => {
+            Ok(SlabOutput::Eps(out)) => {
                 self.tele.eval_nanos.fetch_add(c.eval_nanos, Ordering::Relaxed);
                 self.tele.stage_eval.observe_nanos(c.eval_nanos);
                 self.tele.evals.fetch_add(1, Ordering::Relaxed);
@@ -897,6 +1128,8 @@ impl Scheduler {
                 self.tele
                     .padded_rows
                     .fetch_add(c.executed_rows.saturating_sub(c.rows), Ordering::Relaxed);
+                let bytes = resident::tensor_bytes(&out);
+                self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
                 // Zero-copy completion: a slab that was exactly one
                 // whole lane evaluation adopts the engine output.
                 let whole = segments.len() == 1 && {
@@ -929,6 +1162,26 @@ impl Scheduler {
                         fused::scatter_rows(buf, seg.src_start, &out, seg.start, seg.rows);
                         *filled += seg.rows;
                     }
+                }
+            }
+            Ok(SlabOutput::Resident(ro)) => {
+                self.tele.eval_nanos.fetch_add(c.eval_nanos, Ordering::Relaxed);
+                self.tele.stage_eval.observe_nanos(c.eval_nanos);
+                // A Finish op runs no model evaluation (the final eval
+                // is skipped exactly like the host path skips it), so
+                // it contributes no eval/row counts.
+                if ro.final_x.is_none() {
+                    self.tele.evals.fetch_add(1, Ordering::Relaxed);
+                    self.tele.rows.fetch_add(c.rows, Ordering::Relaxed);
+                    self.tele
+                        .padded_rows
+                        .fetch_add(c.executed_rows.saturating_sub(c.rows), Ordering::Relaxed);
+                }
+                let bytes = resident::outcome_bytes(&ro);
+                self.tele.host_bytes_transferred.fetch_add(bytes, Ordering::Relaxed);
+                let lane = segments[0].source;
+                if let Some(f) = self.flights.get_mut(lane).and_then(|o| o.as_mut()) {
+                    f.resident = Some(ro);
                 }
             }
             Err(e) => {
@@ -977,7 +1230,7 @@ impl Scheduler {
                 .is_some_and(|f| f.inflight_slabs == 0)
                 && self.engine.has_lane(seg.source);
             if ready {
-                self.finalize_lane(seg.source);
+                self.finalize_lane(seg.source, rs);
             }
         }
         let mut bufs = c.buffers;
@@ -990,17 +1243,22 @@ impl Scheduler {
     /// share of the output is dropped undelivered, without perturbing
     /// batch-mates' bits), then deliver the stacked eps — one fused
     /// advance for every surviving member.
-    fn finalize_lane(&mut self, lane: usize) {
+    fn finalize_lane(&mut self, lane: usize, rs: Option<&dyn ResidentState>) {
         let Some(f) = self.flights[lane].take() else { return };
         debug_assert_eq!(f.inflight_slabs, 0);
         if let Some(err) = f.failed {
             if let Some((buf, _)) = f.assembly {
                 self.recycler.give_assembly(buf);
             }
+            self.forfeit_resident(lane, rs);
             for slot in self.engine.drop_lane(lane) {
                 let a = self.take_slot(slot);
                 self.retire_err_active(a, format!("model evaluation failed: {err}"));
             }
+            return;
+        }
+        if let Some(outcome) = f.resident {
+            self.finalize_resident(lane, outcome, rs);
             return;
         }
         let (mut eps, filled) = f.assembly.expect("deliver without assembly");
@@ -1056,6 +1314,67 @@ impl Scheduler {
             self.pull_lane(lane);
         }
     }
+
+    /// A resident op completed: deliver its per-row eps summary (or
+    /// final iterate), then handle cancels that latched while it was
+    /// in flight. The slab path compacts victims *before* delivery;
+    /// here the engine already advanced, so victims are compacted
+    /// after — survivor bits are identical either way, but a victim's
+    /// reported nfe includes the in-flight eval (see DESIGN.md).
+    fn finalize_resident(
+        &mut self,
+        lane: usize,
+        outcome: ResidentOutcome,
+        rs: Option<&dyn ResidentState>,
+    ) {
+        let t0 = Instant::now();
+        let finished = outcome.final_x.is_some();
+        self.engine.resident_deliver(lane, outcome);
+        if !finished {
+            self.tele.steps.fetch_add(self.engine.members(lane).len(), Ordering::Relaxed);
+        }
+        self.tele.stage_solver.observe_nanos(t0.elapsed().as_nanos() as u64);
+        if finished {
+            // The Finish op shipped the final iterate home and dropped
+            // the engine-side entry.
+            self.tele.resident_lanes.fetch_sub(1, Ordering::Relaxed);
+        }
+        let now = Instant::now();
+        let mut devolved = false;
+        loop {
+            let victim = self.engine.members(lane).iter().find_map(|m| {
+                let a = self.slots[m.slot].as_ref()?;
+                let dead = a.cancel.is_cancelled() || a.deadline.is_some_and(|d| now >= d);
+                dead.then_some(m.slot)
+            });
+            let Some(slot) = victim else { break };
+            if !devolved {
+                devolved = true;
+                if !finished {
+                    // Compaction reshapes host rows: gather first.
+                    let Some(rs) = rs else { break };
+                    if !self.devolve_resident(lane, rs) {
+                        return; // gather failed; lane already dropped
+                    }
+                }
+            }
+            let removed = self.engine.remove_member(lane, slot, None);
+            let a = self.take_slot(slot);
+            self.rec.record(a.id, SpanKind::LaneCompact { lane: lane as u32 });
+            self.retire_ok_active(a, removed, true);
+            if !self.engine.has_lane(lane) {
+                return;
+            }
+        }
+        if self.engine.is_done(lane) {
+            self.retire_lane_done(lane);
+        } else if devolved {
+            // Back on the host path: step immediately so the lane can
+            // join the next dispatch round.
+            self.pull_lane(lane);
+        }
+        // Lanes still resident and idle get their next op at dispatch.
+    }
 }
 
 fn run_loop(
@@ -1079,11 +1398,16 @@ fn run_loop(
     );
     let mut s = Scheduler::new(tele, rec, config.policy.max_rows);
     let mut queue_open = true;
+    // Device residency needs one shared bank: with per-shard replicas
+    // each executor would hold its own lane table, so the scheduler
+    // falls back to the slab path.
+    let residency: Option<&dyn ResidentState> =
+        if banks.len() == 1 { bank.resident() } else { None };
 
     'outer: loop {
         // ---- Route completions that arrived since the last tick ----
         while let Ok(c) = comp_rx.try_recv() {
-            s.route(c);
+            s.route(c, residency);
         }
 
         // ---- Admission ----
@@ -1118,8 +1442,8 @@ fn run_loop(
         }
 
         // ---- Cancellation / deadline sweep + solver stepping ----
-        s.sweep();
-        s.pull_ready();
+        s.sweep(residency);
+        s.pull_ready(residency);
         if s.active_count == 0 {
             continue;
         }
@@ -1132,13 +1456,13 @@ fn run_loop(
                 // Completions landing mid-linger free more pending work
                 // to join this round.
                 while let Ok(c) = comp_rx.try_recv() {
-                    s.route(c);
+                    s.route(c, residency);
                 }
                 // The linger wait is cancellation-aware: every slice
                 // re-checks cancels/deadlines of already-active
                 // requests instead of blindly sleeping out `max_wait`.
-                s.sweep();
-                s.pull_ready();
+                s.sweep(residency);
+                s.pull_ready(residency);
                 rows = s.dispatchable_rows();
                 if rows == 0
                     || rows >= config.policy.min_rows
@@ -1171,7 +1495,7 @@ fn run_loop(
                         }
                         if admitted {
                             // New arrivals join this round immediately.
-                            s.pull_ready();
+                            s.pull_ready(residency);
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {}
@@ -1186,13 +1510,13 @@ fn run_loop(
 
         // ---- Dispatch into the pipeline window, or wait on events ----
         if s.rounds.len() < depth && rows > 0 {
-            s.dispatch_round(&batcher, &executors);
+            s.dispatch_round(&batcher, &executors, residency);
         } else if !s.rounds.is_empty() {
             // Window full (or nothing ready): wait for a completion,
             // waking periodically to keep admission and cancellation
             // sweeps responsive while evaluations run.
             match comp_rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(c) => s.route(c),
+                Ok(c) => s.route(c, residency),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {}
             }

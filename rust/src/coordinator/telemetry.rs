@@ -47,6 +47,14 @@ pub struct Telemetry {
     /// Gauge: slabs dispatched to the executor pool and not yet routed
     /// back by the scheduler.
     pub inflight_slabs: AtomicUsize,
+    /// Bytes crossing the host↔engine boundary: slab payloads and eps
+    /// outputs on the slab path; one-time iterate uploads, per-step
+    /// coefficient ops/outcomes, and devolve gathers on the resident
+    /// path. The resident-lane bench asserts this stays O(1) per step.
+    pub host_bytes_transferred: AtomicU64,
+    /// Gauge: lanes currently stepping engine-resident (state lives in
+    /// engine-owned buffers; the host ships only coefficients).
+    pub resident_lanes: AtomicUsize,
     /// Pipeline-depth histogram: bucket `d-1` counts dispatches made
     /// while `d` rounds (this one included) were in flight; the last
     /// bucket absorbs `>= DEPTH_HIST_BUCKETS`.

@@ -1,22 +1,217 @@
 //! In-place fused f32 slice kernels for the solver hot path.
 //!
 //! Every op writes into a caller-owned buffer — no allocation, one pass
-//! where fusion allows it. Iterator zips (not indexed loops) keep the
-//! bounds checks out of the inner loops so the compiler auto-vectorises;
-//! the arithmetic and accumulation order mirror the original
-//! [`crate::tensor::Tensor`] methods exactly, so switching a solver to
-//! these kernels changes performance, never numerics (pinned by
-//! `tests/golden_trajectories.rs`).
+//! where fusion allows it. The kernels come in two tiers behind one
+//! public API:
+//!
+//! * [`scalar`] — the always-built reference implementations. Iterator
+//!   zips (not indexed loops) keep the bounds checks out of the inner
+//!   loops so the compiler auto-vectorises; the arithmetic and
+//!   accumulation order mirror the original [`crate::tensor::Tensor`]
+//!   methods exactly.
+//! * `sse2` (the `simd` cargo feature, x86_64 only) — explicit 4-lane
+//!   SSE2 intrinsics. Every vector op is per-lane IEEE-identical to its
+//!   scalar counterpart: the kernels are elementwise (one rounding per
+//!   op, no FMA contraction, no reassociation), and the one reduction
+//!   ([`scalar::row_sq_dist`]) folds its vectorised squares back into
+//!   the accumulator in index order. Remainder tails run the scalar
+//!   code. Results are therefore **bitwise-equal** to the scalar tier —
+//!   pinned by `tests/golden_trajectories.rs` and the simd-vs-scalar
+//!   sweeps below — so the feature changes performance, never numerics.
+//!
+//! The third dispatch tier, device-resident lane state, lives above
+//! these kernels: see [`crate::runtime::resident`] and DESIGN.md.
 
 use crate::tensor::Tensor;
+
+/// Always-built reference implementations. Public so benches and tests
+/// can compare the dispatched kernels against them directly.
+pub mod scalar {
+    /// `out[i] += s * x[i]`.
+    #[inline]
+    pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o += s * v;
+        }
+    }
+
+    /// `out[i] = a * out[i] + b * e[i]`.
+    #[inline]
+    pub fn affine_inplace(out: &mut [f32], a: f32, b: f32, e: &[f32]) {
+        debug_assert_eq!(out.len(), e.len());
+        for (o, &v) in out.iter_mut().zip(e.iter()) {
+            *o = a * *o + b * v;
+        }
+    }
+
+    /// `out[i] = a * x[i] + b * e[i]`.
+    #[inline]
+    pub fn affine_into(out: &mut [f32], a: f32, x: &[f32], b: f32, e: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        debug_assert_eq!(out.len(), e.len());
+        for ((o, &xv), &ev) in out.iter_mut().zip(x.iter()).zip(e.iter()) {
+            *o = a * xv + b * ev;
+        }
+    }
+
+    /// `cond[i] = uncond[i] + scale * (cond[i] - uncond[i])`.
+    #[inline]
+    pub fn guided_combine(cond: &mut [f32], uncond: &[f32], scale: f32) {
+        debug_assert_eq!(cond.len(), uncond.len());
+        for (c, &u) in cond.iter_mut().zip(uncond.iter()) {
+            *c = u + scale * (*c - u);
+        }
+    }
+
+    /// `sum_i ((a[i] - b[i]) as f64)^2`, folded sequentially in index
+    /// order from `0.0` — the row term of Eq. 15. The fold order is
+    /// load-bearing: f64 addition is not associative, and both the
+    /// SSE2 twin and the engine-resident `delta_eps` path reproduce
+    /// this exact sequence to stay bitwise-equal.
+    #[inline]
+    pub fn row_sq_dist(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f64;
+        for (&x, &y) in a.iter().zip(b.iter()) {
+            let d = (x - y) as f64;
+            acc += d * d;
+        }
+        acc
+    }
+}
+
+/// Explicit 4-lane SSE2 implementations. SSE2 is baseline on x86_64,
+/// so no runtime feature detection is needed; the module exists only
+/// when the `simd` feature is on and the target can run it.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod sse2 {
+    use super::scalar;
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    #[inline]
+    pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        let n = out.len() / LANES * LANES;
+        unsafe {
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i < n {
+                let o = _mm_loadu_ps(out.as_ptr().add(i));
+                let v = _mm_loadu_ps(x.as_ptr().add(i));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_add_ps(o, _mm_mul_ps(sv, v)));
+                i += LANES;
+            }
+        }
+        scalar::axpy(&mut out[n..], s, &x[n..]);
+    }
+
+    #[inline]
+    pub fn affine_inplace(out: &mut [f32], a: f32, b: f32, e: &[f32]) {
+        debug_assert_eq!(out.len(), e.len());
+        let n = out.len() / LANES * LANES;
+        unsafe {
+            let av = _mm_set1_ps(a);
+            let bv = _mm_set1_ps(b);
+            let mut i = 0;
+            while i < n {
+                let o = _mm_loadu_ps(out.as_ptr().add(i));
+                let v = _mm_loadu_ps(e.as_ptr().add(i));
+                let r = _mm_add_ps(_mm_mul_ps(av, o), _mm_mul_ps(bv, v));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), r);
+                i += LANES;
+            }
+        }
+        scalar::affine_inplace(&mut out[n..], a, b, &e[n..]);
+    }
+
+    #[inline]
+    pub fn affine_into(out: &mut [f32], a: f32, x: &[f32], b: f32, e: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        debug_assert_eq!(out.len(), e.len());
+        let n = out.len() / LANES * LANES;
+        unsafe {
+            let av = _mm_set1_ps(a);
+            let bv = _mm_set1_ps(b);
+            let mut i = 0;
+            while i < n {
+                let xv = _mm_loadu_ps(x.as_ptr().add(i));
+                let ev = _mm_loadu_ps(e.as_ptr().add(i));
+                let r = _mm_add_ps(_mm_mul_ps(av, xv), _mm_mul_ps(bv, ev));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), r);
+                i += LANES;
+            }
+        }
+        scalar::affine_into(&mut out[n..], a, &x[n..], b, &e[n..]);
+    }
+
+    #[inline]
+    pub fn guided_combine(cond: &mut [f32], uncond: &[f32], scale: f32) {
+        debug_assert_eq!(cond.len(), uncond.len());
+        let n = cond.len() / LANES * LANES;
+        unsafe {
+            let sv = _mm_set1_ps(scale);
+            let mut i = 0;
+            while i < n {
+                let c = _mm_loadu_ps(cond.as_ptr().add(i));
+                let u = _mm_loadu_ps(uncond.as_ptr().add(i));
+                let r = _mm_add_ps(u, _mm_mul_ps(sv, _mm_sub_ps(c, u)));
+                _mm_storeu_ps(cond.as_mut_ptr().add(i), r);
+                i += LANES;
+            }
+        }
+        scalar::guided_combine(&mut cond[n..], &uncond[n..], scale);
+    }
+
+    /// Vectorises the f32 subtraction, f64 widening, and f64 squaring,
+    /// then folds the four squares into the accumulator **in index
+    /// order** — the identical f64 addition sequence as
+    /// [`scalar::row_sq_dist`], so the result is bitwise-equal.
+    #[inline]
+    pub fn row_sq_dist(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len() / LANES * LANES;
+        let mut acc = 0.0f64;
+        unsafe {
+            let mut sq = [0.0f64; LANES];
+            let mut i = 0;
+            while i < n {
+                let av = _mm_loadu_ps(a.as_ptr().add(i));
+                let bv = _mm_loadu_ps(b.as_ptr().add(i));
+                let d = _mm_sub_ps(av, bv);
+                let lo = _mm_cvtps_pd(d);
+                let hi = _mm_cvtps_pd(_mm_movehl_ps(d, d));
+                _mm_storeu_pd(sq.as_mut_ptr(), _mm_mul_pd(lo, lo));
+                _mm_storeu_pd(sq.as_mut_ptr().add(2), _mm_mul_pd(hi, hi));
+                acc += sq[0];
+                acc += sq[1];
+                acc += sq[2];
+                acc += sq[3];
+                i += LANES;
+            }
+        }
+        // Fold the tail elements directly into the running accumulator
+        // (summing them separately and adding the partial would round
+        // differently).
+        for (&x, &y) in a[n..].iter().zip(b[n..].iter()) {
+            let d = (x - y) as f64;
+            acc += d * d;
+        }
+        acc
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use sse2 as fast;
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+use scalar as fast;
 
 /// `out[i] += s * x[i]`.
 #[inline]
 pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
-    debug_assert_eq!(out.len(), x.len());
-    for (o, &v) in out.iter_mut().zip(x.iter()) {
-        *o += s * v;
-    }
+    fast::axpy(out, s, x);
 }
 
 /// `out[i] *= s`.
@@ -36,21 +231,14 @@ pub fn zero(out: &mut [f32]) {
 /// `out[i] = a * out[i] + b * e[i]` — the DDIM transition, in place.
 #[inline]
 pub fn affine_inplace(out: &mut [f32], a: f32, b: f32, e: &[f32]) {
-    debug_assert_eq!(out.len(), e.len());
-    for (o, &v) in out.iter_mut().zip(e.iter()) {
-        *o = a * *o + b * v;
-    }
+    fast::affine_inplace(out, a, b, e);
 }
 
 /// `out[i] = a * x[i] + b * e[i]` — the DDIM transition into a scratch
 /// buffer (predicted eval points, DPM intermediate stages).
 #[inline]
 pub fn affine_into(out: &mut [f32], a: f32, x: &[f32], b: f32, e: &[f32]) {
-    debug_assert_eq!(out.len(), x.len());
-    debug_assert_eq!(out.len(), e.len());
-    for ((o, &xv), &ev) in out.iter_mut().zip(x.iter()).zip(e.iter()) {
-        *o = a * xv + b * ev;
-    }
+    fast::affine_into(out, a, x, b, e);
 }
 
 /// `out = sum_k w[k] * parts[k]`, zeroing `out` first. Accumulation
@@ -66,14 +254,17 @@ pub fn weighted_sum_into(out: &mut [f32], parts: &[&[f32]], w: &[f64]) {
 
 /// Fused `out = a * x + b * (sum_k w[k] * parts[k])` with a single pass
 /// for the first term — the non-allocating twin of
-/// [`Tensor::kernel_weighted_sum`].
+/// [`Tensor::kernel_weighted_sum`]. Weights arrive as `f64` (the
+/// [`crate::kernels::TrajectoryPlan`] native dtype, shared with
+/// [`weighted_sum_into`]) and are narrowed to f32 here, at the same
+/// point the callers used to narrow them.
 pub fn fused_affine_sum_into(
     out: &mut [f32],
     a: f32,
     x: &[f32],
     b: f32,
     parts: &[&[f32]],
-    w: &[f32],
+    w: &[f64],
 ) {
     assert_eq!(parts.len(), w.len());
     debug_assert_eq!(out.len(), x.len());
@@ -84,14 +275,12 @@ pub fn fused_affine_sum_into(
             }
         }
         Some(p0) => {
-            let bw0 = b * w[0];
-            for ((o, &xv), &ev) in out.iter_mut().zip(x.iter()).zip(p0.iter()) {
-                *o = a * xv + bw0 * ev;
-            }
+            let bw0 = b * (w[0] as f32);
+            affine_into(out, a, x, bw0, p0);
         }
     }
     for (pk, &wk) in parts.iter().zip(w.iter()).skip(1) {
-        axpy(out, b * wk, pk);
+        axpy(out, b * (wk as f32), pk);
     }
 }
 
@@ -107,17 +296,24 @@ pub fn mean_row_dist(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
     let mut acc = 0.0f64;
     for r in 0..rows {
         let (ra, rb) = (&a[r * cols..(r + 1) * cols], &b[r * cols..(r + 1) * cols]);
-        let s: f64 = ra
-            .iter()
-            .zip(rb.iter())
-            .map(|(&x, &y)| {
-                let d = (x - y) as f64;
-                d * d
-            })
-            .sum();
-        acc += s.sqrt();
+        acc += fast::row_sq_dist(ra, rb).sqrt();
     }
     (acc / rows as f64) as f32
+}
+
+/// Per-row L2 distances between two `rows x cols` buffers, appended to
+/// `out` — the engine-resident half of Eq. 15. Each pushed value is one
+/// row's term from [`mean_row_dist`] (same f64 fold, same sqrt), so a
+/// host that averages a member's span of these in index order and casts
+/// through f32 reproduces `mean_row_dist` bitwise.
+pub fn row_l2_dists_into(a: &[f32], b: &[f32], rows: usize, cols: usize, out: &mut Vec<f64>) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(b.len(), rows * cols);
+    out.reserve_exact(rows);
+    for r in 0..rows {
+        let (ra, rb) = (&a[r * cols..(r + 1) * cols], &b[r * cols..(r + 1) * cols]);
+        out.push(fast::row_sq_dist(ra, rb).sqrt());
+    }
 }
 
 /// Classifier-free guidance combination, in place over the cond half:
@@ -129,16 +325,17 @@ pub fn mean_row_dist(a: &[f32], b: &[f32], rows: usize, cols: usize) -> f32 {
 /// allocation, the cond half becomes the guided eps.
 #[inline]
 pub fn guided_combine(cond: &mut [f32], uncond: &[f32], scale: f32) {
-    debug_assert_eq!(cond.len(), uncond.len());
-    for (c, &u) in cond.iter_mut().zip(uncond.iter()) {
-        *c = u + scale * (*c - u);
-    }
+    fast::guided_combine(cond, uncond, scale);
 }
 
 /// Append rows `[start, start + n)` of `src` onto `dst` — one contiguous
 /// memcpy per call (the rows of a row-major tensor are adjacent), used
-/// by the batcher to gather request segments into fused slabs.
+/// by the batcher to gather request segments into fused slabs. Reserves
+/// the exact span up front so the gather never reallocates mid-copy
+/// (and never over-grows a recycled slab buffer past its high-water
+/// mark).
 pub fn gather_rows(dst: &mut Vec<f32>, src: &Tensor, start: usize, n: usize) {
+    dst.reserve_exact(n * src.cols());
     dst.extend_from_slice(src.row_span(start, n));
 }
 
@@ -200,8 +397,8 @@ mod tests {
         let x = Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0], 2, 2);
         let e1 = Tensor::from_vec(vec![0.1, 0.2, 0.3, 0.4], 2, 2);
         let e2 = Tensor::from_vec(vec![-1.0, 1.0, -1.0, 1.0], 2, 2);
-        let w32 = [2.0f32, -0.5];
-        let want = Tensor::kernel_weighted_sum(&x, 0.9, 0.3, &[&e1, &e2], &w32);
+        let w = [2.0f64, -0.5];
+        let want = Tensor::kernel_weighted_sum(&x, 0.9, 0.3, &[&e1, &e2], &w);
         let mut out = vec![0.0f32; 4];
         fused_affine_sum_into(
             &mut out,
@@ -209,7 +406,7 @@ mod tests {
             x.as_slice(),
             0.3,
             &[e1.as_slice(), e2.as_slice()],
-            &w32,
+            &w,
         );
         assert_eq!(out.as_slice(), want.as_slice());
 
@@ -227,6 +424,28 @@ mod tests {
         let got = mean_row_dist(a.as_slice(), b.as_slice(), 3, 2);
         assert_eq!(got, a.mean_row_dist(&b));
         assert_eq!(mean_row_dist(&[], &[], 0, 2), 0.0);
+    }
+
+    #[test]
+    fn row_l2_dists_match_mean_row_dist() {
+        // Aggregating the per-row distances the way the resident-state
+        // scheduler does (sequential f64 sum over a member's span, mean,
+        // f32 narrowing) must reproduce mean_row_dist bitwise.
+        let (rows, cols) = (5, 7);
+        let a: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.61).cos()).collect();
+        let mut dists = Vec::new();
+        row_l2_dists_into(&a, &b, rows, cols, &mut dists);
+        assert_eq!(dists.len(), rows);
+        for (start, n) in [(0usize, rows), (1, 3), (4, 1)] {
+            let mut acc = 0.0f64;
+            for &d in &dists[start..start + n] {
+                acc += d;
+            }
+            let got = (acc / n as f64) as f32;
+            let span = |buf: &[f32]| buf[start * cols..(start + n) * cols].to_vec();
+            assert_eq!(got, mean_row_dist(&span(&a), &span(&b), n, cols));
+        }
     }
 
     #[test]
@@ -266,10 +485,80 @@ mod tests {
     }
 
     #[test]
+    fn gather_rows_reserves_exactly_once() {
+        let src = Tensor::from_vec((0..64).map(|v| v as f32).collect(), 16, 4);
+        let mut dst = Vec::new();
+        gather_rows(&mut dst, &src, 2, 5);
+        // reserve_exact before the copy: capacity is the span itself,
+        // not a doubling-growth overshoot.
+        assert_eq!(dst.len(), 20);
+        assert_eq!(dst.capacity(), 20);
+        // A pre-reserved buffer (the recycled-slab path) is untouched.
+        let mut pre = Vec::with_capacity(64);
+        gather_rows(&mut pre, &src, 0, 4);
+        assert_eq!(pre.capacity(), 64);
+    }
+
+    #[test]
     #[should_panic(expected = "overflow")]
     fn scatter_rows_checks_bounds() {
         let src = Tensor::zeros(2, 2);
         let mut dst = Tensor::zeros(2, 2);
         scatter_rows(&mut dst, 1, &src, 0, 2);
+    }
+
+    /// Drive every dispatched kernel against its scalar reference over
+    /// odd lengths, unaligned offsets, and remainder tails. With the
+    /// `simd` feature off this is an identity check; with it on it is
+    /// the bitwise scalar/SSE2 equivalence sweep.
+    #[test]
+    fn dispatched_kernels_match_scalar_reference_bitwise() {
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+        };
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 31, 63, 64, 67, 128, 257] {
+            for off in [0usize, 1, 2, 3] {
+                let n = len + off;
+                let xs: Vec<f32> = (0..n).map(|_| next()).collect();
+                let es: Vec<f32> = (0..n).map(|_| next()).collect();
+                let base: Vec<f32> = (0..n).map(|_| next()).collect();
+                let (x, e, b0) = (&xs[off..], &es[off..], &base[off..]);
+
+                let mut got = b0.to_vec();
+                let mut want = b0.to_vec();
+                axpy(&mut got, 1.7, x);
+                scalar::axpy(&mut want, 1.7, x);
+                assert_eq!(got, want, "axpy len={len} off={off}");
+
+                got.copy_from_slice(b0);
+                want.copy_from_slice(b0);
+                affine_inplace(&mut got, 0.93, -0.41, e);
+                scalar::affine_inplace(&mut want, 0.93, -0.41, e);
+                assert_eq!(got, want, "affine_inplace len={len} off={off}");
+
+                affine_into(&mut got, -0.37, x, 1.19, e);
+                scalar::affine_into(&mut want, -0.37, x, 1.19, e);
+                assert_eq!(got, want, "affine_into len={len} off={off}");
+
+                got.copy_from_slice(b0);
+                want.copy_from_slice(b0);
+                guided_combine(&mut got, x, 3.25);
+                scalar::guided_combine(&mut want, x, 3.25);
+                assert_eq!(got, want, "guided_combine len={len} off={off}");
+
+                let got_d = {
+                    let mut v = Vec::new();
+                    row_l2_dists_into(x, e, 1, len, &mut v);
+                    v[0]
+                };
+                assert_eq!(
+                    got_d.to_bits(),
+                    scalar::row_sq_dist(x, e).sqrt().to_bits(),
+                    "row_sq_dist len={len} off={off}"
+                );
+            }
+        }
     }
 }

@@ -39,6 +39,11 @@ pub struct ShardStats {
     pub executor_busy_nanos: u64,
     pub executor_idle_nanos: u64,
     pub inflight_slabs: usize,
+    /// Bytes that crossed the host↔engine boundary on this shard
+    /// (slab payloads + outputs, resident uploads/ops/gathers).
+    pub host_bytes_transferred: u64,
+    /// Gauge: lanes currently stepping engine-resident on this shard.
+    pub resident_lanes: usize,
     /// Pipeline-depth histogram: `depth_hist[d-1]` dispatches happened
     /// at `d` rounds in flight (last bucket absorbs deeper).
     pub depth_hist: [usize; DEPTH_HIST_BUCKETS],
@@ -77,6 +82,8 @@ impl ShardStats {
             executor_busy_nanos: t.executor_busy_nanos.load(Ordering::Relaxed),
             executor_idle_nanos: t.executor_idle_nanos.load(Ordering::Relaxed),
             inflight_slabs: t.inflight_slabs.load(Ordering::Relaxed),
+            host_bytes_transferred: t.host_bytes_transferred.load(Ordering::Relaxed),
+            resident_lanes: t.resident_lanes.load(Ordering::Relaxed),
             depth_hist: t.depth_hist_snapshot(),
             lanes: t.lanes.load(Ordering::Relaxed),
             lane_occ_hist: t.lane_occ_snapshot(),
@@ -131,6 +138,8 @@ impl ShardStats {
             ("stochastic", Json::Num(self.stochastic as f64)),
             ("executor_busy_frac", Json::Num(self.executor_busy_fraction())),
             ("inflight_slabs", Json::Num(self.inflight_slabs as f64)),
+            ("host_bytes_transferred", Json::Num(self.host_bytes_transferred as f64)),
+            ("resident_lanes", Json::Num(self.resident_lanes as f64)),
             (
                 "depth_hist",
                 Json::Arr(self.depth_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
@@ -239,6 +248,16 @@ impl PoolStats {
         self.per_shard.iter().map(|s| s.inflight_slabs).sum()
     }
 
+    /// Host↔engine bytes across all shards (counters sum).
+    pub fn host_bytes_transferred(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.host_bytes_transferred).sum()
+    }
+
+    /// Engine-resident lanes across all shards (gauges sum).
+    pub fn resident_lanes(&self) -> usize {
+        self.per_shard.iter().map(|s| s.resident_lanes).sum()
+    }
+
     /// Pool-wide executor utilisation: summed busy clocks over summed
     /// total clocks (a per-shard average would overweight idle shards).
     pub fn executor_busy_fraction(&self) -> f64 {
@@ -298,7 +317,7 @@ impl PoolStats {
     /// by `era-serve --metrics <path>`.
     pub fn prometheus(&self) -> String {
         let mut p = PromText::new();
-        let counters: [(&str, &str, f64); 9] = [
+        let counters: [(&str, &str, f64); 10] = [
             ("era_requests_admitted_total", "Requests admitted across shards.", self.admitted() as f64),
             ("era_requests_finished_total", "Requests finished successfully.", self.finished() as f64),
             ("era_requests_cancelled_total", "Requests retired by cancellation or deadline.", self.cancelled() as f64),
@@ -308,12 +327,13 @@ impl PoolStats {
             ("era_guided_requests_total", "Admitted requests using classifier-free guidance.", self.workloads().0 as f64),
             ("era_img2img_requests_total", "Admitted img2img partial-trajectory requests.", self.workloads().1 as f64),
             ("era_stochastic_requests_total", "Admitted stochastic (churned) sampling requests.", self.workloads().2 as f64),
+            ("era_host_bytes_transferred_total", "Bytes crossing the host-engine boundary (slabs, resident ops, gathers).", self.host_bytes_transferred() as f64),
         ];
         for (name, help, v) in counters {
             p.family(name, help, "counter");
             p.value(name, &[], v);
         }
-        let gauges: [(&str, &str, f64); 10] = [
+        let gauges: [(&str, &str, f64); 11] = [
             ("era_shards", "Coordinator shards in the pool.", self.shards() as f64),
             ("era_executors_per_shard", "Engine executor threads per shard.", self.executors_per_shard as f64),
             ("era_pipeline_depth", "Dispatch rounds allowed in flight per shard.", self.pipeline_depth as f64),
@@ -321,6 +341,7 @@ impl PoolStats {
             ("era_inflight_rows", "Rows belonging to in-flight requests.", self.inflight_rows() as f64),
             ("era_inflight_slabs", "Slabs dispatched to executors and not yet routed back.", self.inflight_slabs() as f64),
             ("era_lanes", "Live solver lanes across shards.", self.lanes() as f64),
+            ("era_resident_lanes", "Lanes currently stepping engine-resident.", self.resident_lanes() as f64),
             ("era_executor_busy_fraction", "Fraction of executor thread time spent evaluating.", self.executor_busy_fraction()),
             ("era_batch_occupancy_rows", "Mean rows per fused evaluation.", self.occupancy()),
             ("era_padding_fraction", "Fraction of executed rows that were bucket padding.", self.padding_fraction()),
@@ -499,6 +520,8 @@ impl PoolStats {
             ("stochastic", Json::Num(self.workloads().2 as f64)),
             ("executor_busy_frac", Json::Num(self.executor_busy_fraction())),
             ("inflight_slabs", Json::Num(self.inflight_slabs() as f64)),
+            ("host_bytes_transferred", Json::Num(self.host_bytes_transferred() as f64)),
+            ("resident_lanes", Json::Num(self.resident_lanes() as f64)),
             (
                 "depth_hist",
                 Json::Arr(self.depth_hist().iter().map(|&n| Json::Num(n as f64)).collect()),
@@ -632,6 +655,34 @@ mod tests {
         let sj = s.per_shard[1].to_json();
         assert_eq!(sj.get("lanes").as_usize(), Some(2));
         assert!((sj.get("mean_delta_eps").as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_bytes_and_resident_lanes_merge_across_shards() {
+        // Merge rules: the byte counter and resident-lane gauge both
+        // sum across shards; per-shard views stay unmerged.
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.host_bytes_transferred.fetch_add(4096, Ordering::Relaxed);
+        b.host_bytes_transferred.fetch_add(1024, Ordering::Relaxed);
+        a.resident_lanes.fetch_add(2, Ordering::Relaxed);
+        b.resident_lanes.fetch_add(1, Ordering::Relaxed);
+        let s = PoolStats::collect("round-robin", &[&a, &b], 0, 1, 1);
+        assert_eq!(s.host_bytes_transferred(), 5120);
+        assert_eq!(s.resident_lanes(), 3);
+        assert_eq!(s.per_shard[0].host_bytes_transferred, 4096);
+        assert_eq!(s.per_shard[1].resident_lanes, 1);
+        let json = s.to_json();
+        assert_eq!(json.get("host_bytes_transferred").as_usize(), Some(5120));
+        assert_eq!(json.get("resident_lanes").as_usize(), Some(3));
+        let sj = s.per_shard[1].to_json();
+        assert_eq!(sj.get("host_bytes_transferred").as_usize(), Some(1024));
+        assert_eq!(sj.get("resident_lanes").as_usize(), Some(1));
+        let text = s.prometheus();
+        assert!(text.contains("# TYPE era_host_bytes_transferred_total counter\n"), "{text}");
+        assert!(text.contains("era_host_bytes_transferred_total 5120\n"), "{text}");
+        assert!(text.contains("# TYPE era_resident_lanes gauge\n"), "{text}");
+        assert!(text.contains("era_resident_lanes 3\n"), "{text}");
     }
 
     #[test]

@@ -15,6 +15,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::manifest::{DatasetEntry, Manifest};
+use crate::runtime::resident::{
+    ResidentOp, ResidentOutcome, ResidentSnapshot, ResidentState, ResidentTable,
+};
 // The registry closure ships no `xla` crate; the stub mirrors its API
 // and fails at PjRtClient construction (see xla_stub.rs).
 use crate::runtime::xla_stub as xla;
@@ -39,6 +42,10 @@ struct Inner {
 pub struct PjRtEngine {
     manifest: Manifest,
     inner: Mutex<Inner>,
+    /// Device-resident lane store (see [`crate::runtime::resident`]).
+    /// Buffers live here, outside the PJRT mutex: resident kernel math
+    /// never touches `inner`, only the eval inside an op does.
+    resident: ResidentTable,
     evals: AtomicUsize,
     rows: AtomicUsize,
     compiles: AtomicUsize,
@@ -65,6 +72,7 @@ impl PjRtEngine {
         Ok(PjRtEngine {
             manifest,
             inner: Mutex::new(Inner { client, cache: HashMap::new() }),
+            resident: ResidentTable::new(),
             evals: AtomicUsize::new(0),
             rows: AtomicUsize::new(0),
             compiles: AtomicUsize::new(0),
@@ -256,6 +264,29 @@ impl PjRtEngine {
     /// Borrow a dataset's manifest entry.
     pub fn dataset(&self, name: &str) -> Result<&DatasetEntry, String> {
         self.manifest.dataset(name)
+    }
+}
+
+// Residency: the engine keeps lane iterates and eps histories in its
+// own table; each op's model call goes through `eval_eps` like any
+// slab evaluation. `ModelBank::resident` for `PjRtEngine` (in
+// `coordinator::service`) exposes this to the scheduler.
+impl ResidentState for PjRtEngine {
+    fn open(&self, dataset: &str, x: &Tensor, keep_history: bool) -> Result<u64, String> {
+        self.manifest.dataset(dataset)?;
+        Ok(self.resident.open(dataset, x, keep_history))
+    }
+
+    fn exec(&self, handle: u64, op: &ResidentOp) -> Result<ResidentOutcome, String> {
+        self.resident.exec(handle, op, |ds, x, t| self.eval_eps(ds, x, t))
+    }
+
+    fn snapshot(&self, handle: u64) -> Result<ResidentSnapshot, String> {
+        self.resident.snapshot(handle)
+    }
+
+    fn close(&self, handle: u64) {
+        self.resident.close(handle)
     }
 }
 

@@ -15,7 +15,12 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod resident;
 pub(crate) mod xla_stub;
 
 pub use engine::{CombineExec, PjRtEngine, PjRtEps};
 pub use manifest::{DatasetEntry, Manifest, TrainReport};
+pub use resident::{
+    ResidentAdvance, ResidentOp, ResidentOutcome, ResidentSnapshot, ResidentState, ResidentStep,
+    ResidentTable,
+};

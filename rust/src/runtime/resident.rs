@@ -1,0 +1,486 @@
+//! Device-resident lane state: the engine side of the residency
+//! protocol.
+//!
+//! In the slab path the scheduler ships a lane's full iterate to the
+//! engine and receives a full eps tensor back on **every** solver step
+//! — O(rows x dim) host traffic per step. The residency protocol keeps
+//! the iterate and the eps history in engine-owned buffers across
+//! steps: after a one-time [`ResidentState::open`] upload, each step
+//! sends only a [`ResidentOp`] (a handful of plan coefficients and
+//! buffer indices) and receives a [`ResidentOutcome`] (per-row eps
+//! distances, and the final iterate only on [`ResidentOp::Finish`]).
+//! Per-step traffic is O(1) in the tensor dimension.
+//!
+//! Correctness contract: every kernel application here goes through
+//! the *same* [`crate::kernels::fused`] wrappers the host-side lane
+//! engine uses, in the same order, so a resident lane's iterate is
+//! bitwise-identical to the host path's — with `simd` on or off. The
+//! scheduler can therefore [`ResidentState::snapshot`] a lane at any
+//! idle point and devolve it back to host stepping (for
+//! split-on-divergence, member compaction, or mid-flight cancel)
+//! without perturbing the trajectory. See DESIGN.md ("Kernel dispatch
+//! tiers and the residency protocol").
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::kernels::fused;
+use crate::tensor::Tensor;
+
+/// One in-place advance of a resident iterate: `x = a*x + b*eps_c`.
+///
+/// Coefficients are `f64` (the plan's native dtype) and narrowed to
+/// f32 at the kernel boundary, exactly where the host path narrows.
+pub enum ResidentAdvance {
+    /// DDIM / ERA-warmup update against the newest eps buffer.
+    Newest { a: f64, b: f64 },
+    /// Full ERA update: Lagrange predictor over the eps buffers named
+    /// by `idx` with weights `w`, folded through the Adams–Moulton
+    /// corrector weights `amw` (`amw[0]` scales the predictor,
+    /// `amw[1 + m]` scales eps buffer `n - 1 - m`).
+    Lagrange { a: f64, b: f64, idx: Vec<usize>, w: Vec<f64>, amw: Vec<f64> },
+}
+
+/// One resident solver step: optional pre-advance, then a model
+/// evaluation at `t`, then an optional post-advance.
+///
+/// ERA lanes use `pre` (advance with the history, then evaluate at the
+/// new grid point); DDIM lanes use `post` (evaluate, then advance with
+/// the fresh eps) so the engine iterate equals the host iterate at
+/// every idle point and devolution never has to replay a lagging
+/// update.
+pub struct ResidentStep {
+    pub pre: Option<ResidentAdvance>,
+    /// Evaluation time, already narrowed to the model's f32.
+    pub t: f32,
+    pub post: Option<ResidentAdvance>,
+}
+
+/// A scheduler-to-engine command for one resident lane.
+pub enum ResidentOp {
+    Step(ResidentStep),
+    /// Apply the optional last advance, return the final iterate, and
+    /// drop the lane's engine-side state.
+    Finish { advance: Option<ResidentAdvance> },
+}
+
+/// What the engine sends back for one [`ResidentOp`].
+pub struct ResidentOutcome {
+    pub handle: u64,
+    pub rows: usize,
+    /// Per-row L2 distance between the fresh eps and the Lagrange
+    /// prediction (empty unless the step's pre-advance was
+    /// [`ResidentAdvance::Lagrange`]). Same fold as
+    /// [`fused::row_l2_dists_into`], so host-side per-member means
+    /// reproduce [`fused::mean_row_dist`] bitwise.
+    pub row_dists: Vec<f64>,
+    /// The final iterate; `Some` only for [`ResidentOp::Finish`].
+    pub final_x: Option<Tensor>,
+}
+
+/// A full gather of a resident lane's state, used to devolve the lane
+/// back to host stepping.
+pub struct ResidentSnapshot {
+    pub x: Tensor,
+    pub eps: Vec<Tensor>,
+}
+
+/// The residency protocol surface a [`crate::coordinator::ModelBank`]
+/// may expose. Engines without resident buffers simply don't, and the
+/// scheduler stays on the slab path.
+pub trait ResidentState: Send + Sync {
+    /// Upload `x` and open a resident lane. `keep_history` retains
+    /// every eps (ERA); otherwise only the newest survives (DDIM).
+    fn open(&self, dataset: &str, x: &Tensor, keep_history: bool) -> Result<u64, String>;
+    /// Execute one op. [`ResidentOp::Finish`] consumes the handle.
+    fn exec(&self, handle: u64, op: &ResidentOp) -> Result<ResidentOutcome, String>;
+    /// Gather the lane's full state (the lane stays open).
+    fn snapshot(&self, handle: u64) -> Result<ResidentSnapshot, String>;
+    /// Drop the lane's engine-side state. Idempotent.
+    fn close(&self, handle: u64);
+}
+
+/// Engine-side buffers of one resident lane.
+struct LaneState {
+    dataset: String,
+    x: Tensor,
+    eps: Vec<Tensor>,
+    /// Lagrange-predictor scratch; allocated on first ERA step and
+    /// reused (it also backs the row-distance comparison).
+    pred: Option<Tensor>,
+    /// Corrector combination scratch.
+    comb: Tensor,
+    keep_history: bool,
+}
+
+#[derive(Default)]
+struct TableInner {
+    next: u64,
+    lanes: HashMap<u64, LaneState>,
+}
+
+/// Host-memory reference implementation of the resident-lane store.
+///
+/// `PjRtEngine` and `MockBank` both embed one: the protocol's win is
+/// eliminating the per-step scheduler<->engine tensor hand-off (and on
+/// a device runtime, the host<->device copies behind it), which this
+/// table models faithfully — ops in, scalars out, tensors only at
+/// open/snapshot/finish.
+pub struct ResidentTable {
+    inner: Mutex<TableInner>,
+}
+
+impl Default for ResidentTable {
+    fn default() -> Self {
+        ResidentTable::new()
+    }
+}
+
+impl ResidentTable {
+    pub fn new() -> ResidentTable {
+        ResidentTable { inner: Mutex::new(TableInner::default()) }
+    }
+
+    /// Number of open resident lanes (test/diagnostic aid).
+    pub fn open_lanes(&self) -> usize {
+        self.inner.lock().unwrap().lanes.len()
+    }
+
+    pub fn open(&self, dataset: &str, x: &Tensor, keep_history: bool) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.next += 1;
+        let handle = inner.next;
+        let comb = Tensor::zeros(x.rows(), x.cols());
+        inner.lanes.insert(
+            handle,
+            LaneState {
+                dataset: dataset.to_string(),
+                x: x.clone(),
+                eps: Vec::new(),
+                pred: None,
+                comb,
+                keep_history,
+            },
+        );
+        handle
+    }
+
+    /// Execute one op, using `eval` for the model call. The lock is
+    /// held across the evaluation: resident ops for one handle are
+    /// strictly sequential anyway (the scheduler never has two in
+    /// flight), and cross-lane contention only occurs when several
+    /// executors run resident ops at once.
+    pub fn exec(
+        &self,
+        handle: u64,
+        op: &ResidentOp,
+        eval: impl Fn(&str, &Tensor, &[f32]) -> Result<Tensor, String>,
+    ) -> Result<ResidentOutcome, String> {
+        let mut inner = self.inner.lock().unwrap();
+        match op {
+            ResidentOp::Step(step) => {
+                let lane = inner
+                    .lanes
+                    .get_mut(&handle)
+                    .ok_or_else(|| format!("resident lane {handle} not open"))?;
+                if let Some(adv) = &step.pre {
+                    apply_advance(lane, adv)?;
+                }
+                let rows = lane.x.rows();
+                let ts = vec![step.t; rows];
+                let eps_new = eval(&lane.dataset, &lane.x, &ts)?;
+                if eps_new.rows() != rows || eps_new.cols() != lane.x.cols() {
+                    return Err(format!(
+                        "resident eval returned {}x{} for a {}x{} lane",
+                        eps_new.rows(),
+                        eps_new.cols(),
+                        rows,
+                        lane.x.cols()
+                    ));
+                }
+                let mut row_dists = Vec::new();
+                if matches!(&step.pre, Some(ResidentAdvance::Lagrange { .. })) {
+                    let pred = lane.pred.as_ref().expect("lagrange pre-advance set pred");
+                    fused::row_l2_dists_into(
+                        eps_new.as_slice(),
+                        pred.as_slice(),
+                        rows,
+                        lane.x.cols(),
+                        &mut row_dists,
+                    );
+                }
+                if !lane.keep_history {
+                    lane.eps.clear();
+                }
+                lane.eps.push(eps_new);
+                if let Some(adv) = &step.post {
+                    apply_advance(lane, adv)?;
+                }
+                Ok(ResidentOutcome { handle, rows, row_dists, final_x: None })
+            }
+            ResidentOp::Finish { advance } => {
+                let mut lane = inner
+                    .lanes
+                    .remove(&handle)
+                    .ok_or_else(|| format!("resident lane {handle} not open"))?;
+                if let Some(adv) = advance {
+                    apply_advance(&mut lane, adv)?;
+                }
+                let rows = lane.x.rows();
+                Ok(ResidentOutcome { handle, rows, row_dists: Vec::new(), final_x: Some(lane.x) })
+            }
+        }
+    }
+
+    pub fn snapshot(&self, handle: u64) -> Result<ResidentSnapshot, String> {
+        let inner = self.inner.lock().unwrap();
+        let lane = inner
+            .lanes
+            .get(&handle)
+            .ok_or_else(|| format!("resident lane {handle} not open"))?;
+        Ok(ResidentSnapshot { x: lane.x.clone(), eps: lane.eps.clone() })
+    }
+
+    pub fn close(&self, handle: u64) {
+        self.inner.lock().unwrap().lanes.remove(&handle);
+    }
+}
+
+/// Apply one advance to a lane's buffers, replicating the host lane
+/// engine's kernel sequence exactly (same wrappers, same order, same
+/// f64->f32 narrowing points) so resident iterates stay bitwise equal
+/// to host iterates.
+fn apply_advance(lane: &mut LaneState, adv: &ResidentAdvance) -> Result<(), String> {
+    let LaneState { x, eps, pred, comb, .. } = lane;
+    match adv {
+        ResidentAdvance::Newest { a, b } => {
+            let newest = eps.last().ok_or("resident Newest advance with empty eps history")?;
+            fused::affine_inplace(x.as_mut_slice(), *a as f32, *b as f32, newest.as_slice());
+        }
+        ResidentAdvance::Lagrange { a, b, idx, w, amw } => {
+            let n = eps.len();
+            if idx.len() != w.len() || amw.is_empty() || amw.len() - 1 > n {
+                return Err("malformed resident Lagrange advance".into());
+            }
+            if idx.iter().any(|&j| j >= n) {
+                return Err(format!("resident Lagrange index out of range (history {n})"));
+            }
+            let p = pred.get_or_insert_with(|| Tensor::zeros(x.rows(), x.cols()));
+            fused::zero(p.as_mut_slice());
+            for (&j, &wj) in idx.iter().zip(w.iter()) {
+                fused::axpy(p.as_mut_slice(), wj as f32, eps[j].as_slice());
+            }
+            fused::zero(comb.as_mut_slice());
+            fused::axpy(comb.as_mut_slice(), amw[0] as f32, p.as_slice());
+            for back in 0..amw.len() - 1 {
+                let cw = amw[back + 1] as f32;
+                fused::axpy(comb.as_mut_slice(), cw, eps[n - 1 - back].as_slice());
+            }
+            fused::affine_inplace(x.as_mut_slice(), *a as f32, *b as f32, comb.as_slice());
+        }
+    }
+    Ok(())
+}
+
+/// Host bytes a tensor hand-off costs (f32 payload).
+pub fn tensor_bytes(t: &Tensor) -> u64 {
+    (t.len() * 4) as u64
+}
+
+/// Host bytes one resident op costs on the wire: coefficients and
+/// indices only — independent of rows and dim.
+pub fn op_bytes(op: &ResidentOp) -> u64 {
+    fn adv(a: &Option<ResidentAdvance>) -> u64 {
+        match a {
+            None => 0,
+            Some(ResidentAdvance::Newest { .. }) => 16,
+            Some(ResidentAdvance::Lagrange { idx, w, amw, .. }) => {
+                16 + 8 * (idx.len() + w.len() + amw.len()) as u64
+            }
+        }
+    }
+    match op {
+        ResidentOp::Step(s) => 4 + adv(&s.pre) + adv(&s.post),
+        ResidentOp::Finish { advance } => adv(advance),
+    }
+}
+
+/// Host bytes one resident outcome costs: per-row distances (O(rows),
+/// dim-independent) plus the final iterate on finish.
+pub fn outcome_bytes(o: &ResidentOutcome) -> u64 {
+    let mut b = 16 + 8 * o.row_dists.len() as u64;
+    if let Some(x) = &o.final_x {
+        b += tensor_bytes(x);
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(seed: u64, rows: usize, cols: usize) -> Tensor {
+        let mut state = seed;
+        let mut v = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            v.push(((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5);
+        }
+        Tensor::from_vec(v, rows, cols)
+    }
+
+    fn echo_eval(_: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+        // Deterministic stand-in model: eps = 0.5*x + t.
+        let mut out = x.clone();
+        for (r, &tv) in t.iter().enumerate() {
+            for v in out.row_mut(r) {
+                *v = 0.5 * *v + tv;
+            }
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn newest_post_advance_matches_host_sequence() {
+        let table = ResidentTable::new();
+        let x0 = tensor(1, 3, 4);
+        let h = table.open("d", &x0, false);
+        let op = ResidentOp::Step(ResidentStep {
+            pre: None,
+            t: 0.7,
+            post: Some(ResidentAdvance::Newest { a: 0.9, b: -0.2 }),
+        });
+        let out = table.exec(h, &op, echo_eval).unwrap();
+        assert_eq!(out.rows, 3);
+        assert!(out.row_dists.is_empty());
+        assert!(out.final_x.is_none());
+
+        // Host replay: eval then affine_inplace with the same wrappers.
+        let mut host = x0.clone();
+        let eps = echo_eval("d", &host, &[0.7; 3]).unwrap();
+        fused::affine_inplace(host.as_mut_slice(), 0.9, -0.2, eps.as_slice());
+        let snap = table.snapshot(h).unwrap();
+        assert_eq!(snap.x.as_slice(), host.as_slice());
+        assert_eq!(snap.eps.len(), 1); // keep_history=false retains only newest
+        table.close(h);
+        assert_eq!(table.open_lanes(), 0);
+    }
+
+    #[test]
+    fn lagrange_advance_is_bitwise_equal_to_host_kernels() {
+        let table = ResidentTable::new();
+        let x0 = tensor(2, 4, 5);
+        let h = table.open("d", &x0, true);
+        // Build three eps buffers with plain steps first.
+        for (i, t) in [0.9f32, 0.6, 0.4].iter().enumerate() {
+            let op = ResidentOp::Step(ResidentStep { pre: None, t: *t, post: None });
+            let out = table.exec(h, &op, echo_eval).unwrap();
+            assert_eq!(out.rows, 4);
+            assert_eq!(table.snapshot(h).unwrap().eps.len(), i + 1);
+        }
+        let idx = vec![2usize, 1, 0];
+        let w = vec![0.5f64, 0.3, 0.2];
+        let amw = vec![0.7f64, 0.2, 0.1];
+        let (a, b) = (0.95f64, -0.15f64);
+        let op = ResidentOp::Step(ResidentStep {
+            pre: Some(ResidentAdvance::Lagrange {
+                a,
+                b,
+                idx: idx.clone(),
+                w: w.clone(),
+                amw: amw.clone(),
+            }),
+            t: 0.2,
+            post: None,
+        });
+        let out = table.exec(h, &op, echo_eval).unwrap();
+        assert_eq!(out.row_dists.len(), 4);
+
+        // Host replay of the whole trajectory with the same wrappers.
+        let mut hx = x0.clone();
+        let mut heps = Vec::new();
+        for t in [0.9f32, 0.6, 0.4] {
+            heps.push(echo_eval("d", &hx, &vec![t; 4]).unwrap());
+        }
+        let mut pred = Tensor::zeros(4, 5);
+        for (&j, &wj) in idx.iter().zip(w.iter()) {
+            fused::axpy(pred.as_mut_slice(), wj as f32, heps[j].as_slice());
+        }
+        let mut comb = Tensor::zeros(4, 5);
+        fused::axpy(comb.as_mut_slice(), amw[0] as f32, pred.as_slice());
+        for back in 0..amw.len() - 1 {
+            let n = heps.len();
+            fused::axpy(comb.as_mut_slice(), amw[back + 1] as f32, heps[n - 1 - back].as_slice());
+        }
+        fused::affine_inplace(hx.as_mut_slice(), a as f32, b as f32, comb.as_slice());
+        let eps_new = echo_eval("d", &hx, &[0.2; 4]).unwrap();
+        let mut hdists = Vec::new();
+        fused::row_l2_dists_into(eps_new.as_slice(), pred.as_slice(), 4, 5, &mut hdists);
+        for (got, want) in out.row_dists.iter().zip(hdists.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        let snap = table.snapshot(h).unwrap();
+        assert_eq!(snap.x.as_slice(), hx.as_slice());
+        assert_eq!(snap.eps.len(), 4);
+        table.close(h);
+    }
+
+    #[test]
+    fn finish_returns_final_iterate_and_consumes_the_handle() {
+        let table = ResidentTable::new();
+        let x0 = tensor(3, 2, 3);
+        let h = table.open("d", &x0, false);
+        let step = ResidentOp::Step(ResidentStep { pre: None, t: 0.5, post: None });
+        table.exec(h, &step, echo_eval).unwrap();
+        let adv = Some(ResidentAdvance::Newest { a: 0.8, b: 0.1 });
+        let out = table.exec(h, &ResidentOp::Finish { advance: adv }, echo_eval).unwrap();
+        let fx = out.final_x.expect("finish returns x");
+        let mut host = x0.clone();
+        let eps = echo_eval("d", &host, &[0.5; 2]).unwrap();
+        fused::affine_inplace(host.as_mut_slice(), 0.8, 0.1, eps.as_slice());
+        assert_eq!(fx.as_slice(), host.as_slice());
+        assert!(table.exec(h, &ResidentOp::Finish { advance: None }, echo_eval).is_err());
+        assert_eq!(table.open_lanes(), 0);
+    }
+
+    #[test]
+    fn malformed_lagrange_is_an_error_not_a_panic() {
+        let table = ResidentTable::new();
+        let h = table.open("d", &tensor(4, 2, 2), true);
+        let bad = ResidentOp::Step(ResidentStep {
+            pre: Some(ResidentAdvance::Lagrange {
+                a: 1.0,
+                b: 0.0,
+                idx: vec![3],
+                w: vec![1.0],
+                amw: vec![1.0],
+            }),
+            t: 0.5,
+            post: None,
+        });
+        assert!(table.exec(h, &bad, echo_eval).is_err());
+        table.close(h);
+    }
+
+    #[test]
+    fn wire_cost_is_dimension_independent() {
+        let step = ResidentOp::Step(ResidentStep {
+            pre: Some(ResidentAdvance::Lagrange {
+                a: 1.0,
+                b: 0.0,
+                idx: vec![0, 1, 2, 3],
+                w: vec![0.25; 4],
+                amw: vec![0.5; 4],
+            }),
+            t: 0.5,
+            post: None,
+        });
+        // 4 + (16 + 8*12) coefficient bytes, regardless of lane shape.
+        assert_eq!(op_bytes(&step), 116);
+        let out =
+            ResidentOutcome { handle: 1, rows: 1024, row_dists: vec![0.0; 1024], final_x: None };
+        assert_eq!(outcome_bytes(&out), 16 + 8 * 1024);
+        let big = tensor(5, 8, 1 << 12);
+        assert_eq!(tensor_bytes(&big), (8 * (1 << 12) * 4) as u64);
+    }
+}

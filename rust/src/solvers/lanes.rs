@@ -51,6 +51,9 @@ use std::sync::Arc;
 
 use crate::kernels::{fused, PlanView, TensorPool};
 use crate::rng::Rng;
+use crate::runtime::resident::{
+    ResidentAdvance, ResidentOp, ResidentOutcome, ResidentSnapshot, ResidentStep,
+};
 use crate::solvers::adams_explicit::{drift_into, AB4};
 use crate::solvers::ddpm::ANCESTRAL_STREAM;
 use crate::solvers::era::{select_indices_into, Selection, CHURN_STREAM};
@@ -207,6 +210,27 @@ impl Kernel {
     }
 }
 
+/// Host-side bookkeeping of a lane whose iterate and eps history live
+/// in engine-owned buffers (see [`crate::runtime::resident`]). While
+/// this is `Some`, the lane's `x` holds the *opening* iterate and the
+/// kernel's `eps` stays empty — only step indices and plan
+/// coefficients cross the host/engine boundary until the lane
+/// finishes or devolves.
+struct ResidentLane {
+    handle: u64,
+    /// Engine-side eps-history length (the host twin of `eps.len()`).
+    eps_len: usize,
+}
+
+/// What the scheduler should do next with an idle resident lane.
+pub enum ResidentCmd {
+    /// Ship this op to the engine.
+    Op(ResidentOp),
+    /// Members' error-robust selections diverged: gather the lane back
+    /// to host stepping (which will split it) before continuing.
+    Devolve,
+}
+
 /// One batch-major lane: stacked state plus the member table.
 pub struct Lane {
     key: LaneKey,
@@ -230,6 +254,8 @@ pub struct Lane {
     inner_t: f64,
     sealed: bool,
     done: bool,
+    /// `Some` while the lane steps engine-resident (host state frozen).
+    resident: Option<ResidentLane>,
 }
 
 impl Lane {
@@ -1322,6 +1348,7 @@ impl LaneEngine {
             inner_t: 0.0,
             sealed: false,
             done,
+            resident: None,
         };
         let id = self.alloc(lane);
         self.slot_lane.insert(slot, id);
@@ -1339,7 +1366,7 @@ impl LaneEngine {
         {
             let LaneEngine { lanes, pool, .. } = self;
             let lane = lanes[id].as_mut().expect("step of empty lane");
-            if lane.done || lane.pending.is_some() {
+            if lane.done || lane.pending.is_some() || lane.resident.is_some() {
                 return;
             }
             if !lane.sealed {
@@ -1451,6 +1478,7 @@ impl LaneEngine {
                 inner_t: 0.0,
                 sealed: true,
                 done: false,
+                resident: None,
             }
         };
         let nid = self.alloc(new_lane);
@@ -1543,6 +1571,208 @@ impl LaneEngine {
         }
         recycle_lane(lane, pool);
         out
+    }
+
+    /// State rows of a lane (0 for an empty id).
+    pub fn lane_rows(&self, id: usize) -> usize {
+        self.lanes.get(id).and_then(|l| l.as_ref()).map(|l| l.x.rows()).unwrap_or(0)
+    }
+
+    /// Borrow a lane's stacked iterate (the upload payload of
+    /// [`crate::runtime::resident::ResidentState::open`]).
+    pub fn lane_x(&self, id: usize) -> &Tensor {
+        &self.lanes[id].as_ref().expect("iterate of empty lane").x
+    }
+
+    /// Engine-side handle of a resident lane (`None` = host stepping).
+    pub fn resident_handle(&self, id: usize) -> Option<u64> {
+        self.lanes.get(id)?.as_ref()?.resident.as_ref().map(|r| r.handle)
+    }
+
+    /// Whether `id` can convert to engine-resident stepping: a fresh
+    /// (never-evaluated, never-split) deterministic DDIM or ERA lane.
+    /// Churny members need host-side RNG streams, guided lanes need
+    /// the paired-eval collapse, and lanes with history would need a
+    /// history upload — all stay on the host path.
+    pub fn resident_eligible(&self, id: usize) -> bool {
+        let Some(lane) = self.lanes.get(id).and_then(|l| l.as_ref()) else {
+            return false;
+        };
+        if lane.done
+            || lane.guided
+            || lane.view.is_none()
+            || lane.pending.is_some()
+            || lane.resident.is_some()
+            || lane.members.iter().any(|m| m.churn > 0.0)
+        {
+            return false;
+        }
+        match &lane.kernel {
+            Kernel::Ddim { i } => *i == 0,
+            Kernel::Era { i, eps, .. } => *i == 0 && eps.is_empty(),
+            _ => false,
+        }
+    }
+
+    /// Whether the engine should retain the full eps history for this
+    /// lane (ERA interpolates over it; DDIM needs only the newest).
+    pub fn resident_keeps_history(&self, id: usize) -> bool {
+        let lane = self.lanes[id].as_ref().expect("residency of empty lane");
+        matches!(lane.kernel, Kernel::Era { .. })
+    }
+
+    /// Mark an eligible lane engine-resident under `handle`. Seals the
+    /// lane: membership is as frozen as after a first host step (and
+    /// the ERA scratches the seal allocates are exactly what a later
+    /// devolution steps back into).
+    pub fn resident_convert(&mut self, id: usize, handle: u64) {
+        debug_assert!(self.resident_eligible(id), "resident_convert of ineligible lane");
+        let LaneEngine { lanes, pool, .. } = self;
+        let lane = lanes[id].as_mut().expect("convert of empty lane");
+        if !lane.sealed {
+            seal(lane, pool);
+        }
+        lane.resident = Some(ResidentLane { handle, eps_len: 0 });
+    }
+
+    /// Build the next op for an idle resident lane, mirroring the host
+    /// step exactly: same selection, same coefficient narrowing, same
+    /// step-index bookkeeping — only the kernel applications move
+    /// engine-side. ERA's grid index advances here (at op build, like
+    /// `era_advance`); DDIM's advances at outcome delivery (like
+    /// `ddim_deliver`).
+    pub fn resident_next_op(&mut self, id: usize) -> ResidentCmd {
+        let lane = self.lanes[id].as_mut().expect("resident op of empty lane");
+        debug_assert!(!lane.done && lane.pending.is_none());
+        let eps_len = lane.resident.as_ref().expect("op for host lane").eps_len;
+        let view = lane.view.clone().expect("resident lane without a view");
+        let n_points = view.grid().len();
+        let Lane { kernel, members, .. } = lane;
+        match kernel {
+            Kernel::Ddim { i } => {
+                if *i + 1 >= n_points {
+                    return ResidentCmd::Op(ResidentOp::Finish { advance: None });
+                }
+                let (a, b) = view.ddim_coeffs(*i);
+                ResidentCmd::Op(ResidentOp::Step(ResidentStep {
+                    pre: None,
+                    t: view.t(*i) as f32,
+                    post: Some(ResidentAdvance::Newest { a, b }),
+                }))
+            }
+            Kernel::Era { i, k, selection, idx, idx_b, abs, .. } => {
+                if eps_len == 0 {
+                    // First evaluation: no history to advance with yet.
+                    return ResidentCmd::Op(ResidentOp::Step(ResidentStep {
+                        pre: None,
+                        t: view.t(*i) as f32,
+                        post: None,
+                    }));
+                }
+                let (a, b) = view.ddim_coeffs(*i);
+                let adv = if *i < *k - 1 {
+                    ResidentAdvance::Newest { a, b }
+                } else {
+                    let bi = eps_len - 1;
+                    match selection {
+                        Selection::FixedLast => {
+                            idx.clear();
+                            idx.extend((bi + 1 - *k)..=bi);
+                        }
+                        Selection::ErrorRobust { lambda } => {
+                            select_indices_into(idx, bi, *k, members[0].delta_eps / *lambda);
+                            // The host path would split divergent
+                            // members here (`era_split_groups`); gather
+                            // the lane back instead and let it.
+                            for m in members.iter().skip(1) {
+                                select_indices_into(idx_b, bi, *k, m.delta_eps / *lambda);
+                                if idx_b.as_slice() != idx.as_slice() {
+                                    return ResidentCmd::Devolve;
+                                }
+                            }
+                        }
+                        Selection::ConstantScale { scale } => {
+                            select_indices_into(idx, bi, *k, *scale)
+                        }
+                    }
+                    let w = view.lagrange_weights_into(*i + 1, idx, abs);
+                    let order = eps_len.min(3) + 1;
+                    let amw = view.am_weights(order);
+                    ResidentAdvance::Lagrange {
+                        a,
+                        b,
+                        idx: idx.clone(),
+                        w: w.to_vec(),
+                        amw: amw.to_vec(),
+                    }
+                };
+                *i += 1;
+                if *i + 1 >= n_points {
+                    // Mirrors `era_advance`'s done check: the final
+                    // iterate's evaluation would never be used.
+                    ResidentCmd::Op(ResidentOp::Finish { advance: Some(adv) })
+                } else {
+                    ResidentCmd::Op(ResidentOp::Step(ResidentStep {
+                        pre: Some(adv),
+                        t: view.t(*i) as f32,
+                        post: None,
+                    }))
+                }
+            }
+            _ => unreachable!("only DDIM/ERA lanes go resident"),
+        }
+    }
+
+    /// Deliver a resident op's outcome: nfe bumps and per-member error
+    /// measures (Eq. 15) on a step, the final iterate on a finish.
+    pub fn resident_deliver(&mut self, id: usize, outcome: ResidentOutcome) {
+        let lane = self.lanes[id].as_mut().expect("resident deliver to empty lane");
+        debug_assert_eq!(outcome.rows, lane.x.rows());
+        match outcome.final_x {
+            Some(fx) => {
+                lane.x = Arc::new(fx);
+                lane.done = true;
+                // The engine dropped its state with the finish op.
+                lane.resident = None;
+            }
+            None => {
+                lane.resident.as_mut().expect("deliver to host lane").eps_len += 1;
+                for m in lane.members.iter_mut() {
+                    m.nfe += 1;
+                }
+                if !outcome.row_dists.is_empty() {
+                    // Same accumulation as `fused::mean_row_dist` over
+                    // each member's span of the engine's row distances.
+                    for m in lane.members.iter_mut() {
+                        let mut acc = 0.0f64;
+                        for d in &outcome.row_dists[m.start..m.start + m.rows] {
+                            acc += *d;
+                        }
+                        m.delta_eps = ((acc / m.rows as f64) as f32) as f64;
+                    }
+                }
+                if let Kernel::Ddim { i } = &mut lane.kernel {
+                    *i += 1;
+                }
+            }
+        }
+    }
+
+    /// Gather a resident lane back to host stepping from an engine
+    /// snapshot. Only legal at an idle point (no op in flight), where
+    /// the engine state is bitwise what the host state would be — the
+    /// next `step_lane` continues as if the lane had never left.
+    pub fn resident_devolve(&mut self, id: usize, snap: ResidentSnapshot) {
+        let lane = self.lanes[id].as_mut().expect("devolve of empty lane");
+        let rl = lane.resident.take().expect("devolve of host lane");
+        debug_assert!(!lane.done && lane.pending.is_none());
+        debug_assert_eq!(snap.x.rows(), lane.x.rows());
+        lane.x = Arc::new(snap.x);
+        if let Kernel::Era { eps, .. } = &mut lane.kernel {
+            debug_assert_eq!(snap.eps.len(), rl.eps_len);
+            *eps = snap.eps;
+        }
+        let _ = rl;
     }
 
     /// Drop a lane wholesale (failure path); returns the member slots

@@ -131,7 +131,9 @@ impl Tensor {
 
     /// Fused `a * x + b * (sum_k w[k] * eps[k])` with a single pass over
     /// the output — the in-process twin of the `solver_combine` artifact.
-    pub fn kernel_weighted_sum(x: &Tensor, a: f32, b: f32, eps: &[&Tensor], w: &[f32]) -> Tensor {
+    /// Weights are `f64` (the plan's native dtype, matching
+    /// [`Tensor::weighted_sum`]) and narrowed to f32 here.
+    pub fn kernel_weighted_sum(x: &Tensor, a: f32, b: f32, eps: &[&Tensor], w: &[f64]) -> Tensor {
         assert_eq!(eps.len(), w.len());
         // Iterator zips, not indexed loops: bounds checks defeat
         // auto-vectorisation here (measured 4x in bench_micro before the
@@ -139,7 +141,7 @@ impl Tensor {
         let mut out: Vec<f32> = match eps.len() {
             0 => x.data.iter().map(|&xv| a * xv).collect(),
             _ => {
-                let bw0 = b * w[0];
+                let bw0 = b * (w[0] as f32);
                 x.data
                     .iter()
                     .zip(eps[0].data.iter())
@@ -148,7 +150,7 @@ impl Tensor {
             }
         };
         for (ek, &wk) in eps.iter().zip(w.iter()).skip(1) {
-            let bwk = b * wk;
+            let bwk = b * (wk as f32);
             debug_assert_eq!(ek.data.len(), out.len());
             for (o, &ev) in out.iter_mut().zip(ek.data.iter()) {
                 *o += bwk * ev;

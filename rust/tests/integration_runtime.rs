@@ -96,9 +96,7 @@ fn combine_artifact_matches_native_twin() {
     let ab = (0.97, -0.12);
 
     let via_pjrt = eng.combine("gmm8", &[&e1, &e2, &e3], &w, &x, ab).unwrap();
-    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
-    let native =
-        Tensor::kernel_weighted_sum(&x, ab.0 as f32, ab.1 as f32, &[&e1, &e2, &e3], &w32);
+    let native = Tensor::kernel_weighted_sum(&x, ab.0 as f32, ab.1 as f32, &[&e1, &e2, &e3], &w);
     assert_eq!(via_pjrt.rows(), 16);
     for (a, b) in via_pjrt.as_slice().iter().zip(native.as_slice()) {
         assert!((a - b).abs() < 1e-5, "{a} vs {b}");

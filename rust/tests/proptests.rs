@@ -380,8 +380,7 @@ fn prop_kernel_weighted_sum_matches_unfused() {
         let refs: Vec<&Tensor> = eps.iter().collect();
         let w: Vec<f64> = (0..k).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
         let (a, b) = (rng.uniform_in(-1.5, 1.5), rng.uniform_in(-1.5, 1.5));
-        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
-        let fused = Tensor::kernel_weighted_sum(&x, a as f32, b as f32, &refs, &w32);
+        let fused = Tensor::kernel_weighted_sum(&x, a as f32, b as f32, &refs, &w);
         let mut want = if k == 0 {
             Tensor::zeros(rows, cols)
         } else {

@@ -1,0 +1,201 @@
+//! Resident-lane golden equivalence: device residency changes *where*
+//! lane state lives and how many bytes cross the host↔engine boundary
+//! per step — never the numerics.
+//!
+//! Every scenario runs twice over the same `AnalyticGmm` denoiser:
+//! once against a plain `MockBank` (pure slab path: stacked iterate
+//! ships both ways every step) and once against
+//! `MockBank::with_residency()` (iterate uploads once; steps ship
+//! coefficient-sized ops). Samples must be **bitwise identical** —
+//! the resident engine applies the same fused kernel wrappers in the
+//! same accumulation order. Divergence here means residency changed
+//! the solver, not just its traffic.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RequestSpec};
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+use era_solver::solvers::TaskSpec;
+
+fn plain_bank() -> Arc<dyn ModelBank> {
+    let sched = VpSchedule::default();
+    Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))))
+}
+
+fn resident_bank() -> Arc<dyn ModelBank> {
+    let sched = VpSchedule::default();
+    Arc::new(
+        MockBank::new(sched)
+            .with("gmm8", Box::new(AnalyticGmm::gmm8(sched)))
+            .with_residency(),
+    )
+}
+
+fn spec(solver: &str, n: usize, nfe: usize, seed: u64) -> RequestSpec {
+    RequestSpec {
+        solver: solver.into(),
+        n_samples: n,
+        nfe,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Run one spec on both banks and assert the samples agree bit-for-bit.
+fn assert_paths_bitwise_equal(spec: RequestSpec) {
+    let host = Coordinator::start(plain_bank(), CoordinatorConfig::default());
+    let res_host = host.sample(spec.clone()).unwrap();
+    host.shutdown();
+
+    let dev = Coordinator::start(resident_bank(), CoordinatorConfig::default());
+    let res_dev = dev.sample(spec.clone()).unwrap();
+    let resident_converted = dev.telemetry().resident_lanes.load(Ordering::Relaxed);
+    dev.shutdown();
+
+    assert_eq!(res_host.nfe, res_dev.nfe, "nfe diverged for {}", spec.solver);
+    assert_eq!(res_host.samples.rows(), res_dev.samples.rows());
+    assert_eq!(res_host.samples.cols(), res_dev.samples.cols());
+    for (i, (a, b)) in res_host
+        .samples
+        .as_slice()
+        .iter()
+        .zip(res_dev.samples.as_slice())
+        .enumerate()
+    {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "sample element {i} diverged for solver {} (host {a} vs resident {b})",
+            spec.solver
+        );
+    }
+    // The gauge must have unwound: every converted lane finished or
+    // devolved before shutdown.
+    assert_eq!(resident_converted, 0, "resident_lanes gauge leaked");
+}
+
+#[test]
+fn ddim_resident_matches_host_bitwise() {
+    assert_paths_bitwise_equal(spec("ddim", 32, 10, 7));
+    assert_paths_bitwise_equal(spec("ddim", 5, 3, 99));
+}
+
+#[test]
+fn era_resident_matches_host_bitwise() {
+    // ERA exercises the full resident protocol: DDIM warmup advances,
+    // Lagrange/Adams–Moulton combined advances, per-row eps distances
+    // feeding the host-side error-robust selection, and the final-step
+    // Finish (no trailing eval).
+    assert_paths_bitwise_equal(spec("era", 32, 10, 1));
+    assert_paths_bitwise_equal(spec("era", 17, 12, 5));
+    assert_paths_bitwise_equal(spec("era", 8, 4, 1234));
+}
+
+#[test]
+fn era_fixed_resident_matches_host_bitwise() {
+    assert_paths_bitwise_equal(spec("era-fixed-5", 16, 10, 3));
+}
+
+#[test]
+fn ineligible_workloads_fall_back_to_the_slab_path_bitwise() {
+    // Stochastic churn and guided sampling never convert (residency
+    // eligibility requires the plain deterministic workload); they must
+    // run — and match the plain bank — through the fallback.
+    let churned = RequestSpec {
+        task: TaskSpec { churn: 0.3, ..Default::default() },
+        ..spec("era", 16, 10, 21)
+    };
+    assert_paths_bitwise_equal(churned);
+    let guided = RequestSpec {
+        task: TaskSpec { guidance_scale: 2.0, guide_class: 1, ..Default::default() },
+        ..spec("era", 8, 8, 2)
+    };
+    assert_paths_bitwise_equal(guided);
+}
+
+#[test]
+fn resident_bytes_are_accounted_and_smaller_per_step_than_row_payloads() {
+    // 10-step ERA at 64 rows: the slab path ships the 64×2 iterate and
+    // its eps back every step; the resident path pays the upload once
+    // plus O(coefficients) per step. Both counters must be non-zero,
+    // and the resident run must move fewer bytes end to end.
+    let n = 64;
+    let host = Coordinator::start(plain_bank(), CoordinatorConfig::default());
+    host.sample(spec("era", n, 10, 77)).unwrap();
+    let host_bytes = host.telemetry().host_bytes_transferred.load(Ordering::Relaxed);
+    host.shutdown();
+
+    let dev = Coordinator::start(resident_bank(), CoordinatorConfig::default());
+    dev.sample(spec("era", n, 10, 77)).unwrap();
+    let dev_bytes = dev.telemetry().host_bytes_transferred.load(Ordering::Relaxed);
+    dev.shutdown();
+
+    assert!(host_bytes > 0, "slab path must account transfer bytes");
+    assert!(dev_bytes > 0, "resident path must account transfer bytes");
+    assert!(
+        dev_bytes < host_bytes,
+        "resident path moved {dev_bytes} bytes, slab path {host_bytes}"
+    );
+}
+
+#[test]
+fn cancel_of_an_idle_resident_lane_devolves_and_retires() {
+    // min_rows far above the request's rows forces a linger after the
+    // lane converts to residency; the cancel must gather the lane back
+    // (devolve) and retire it during the wait — the classic
+    // linger-cancel scenario, now crossing the residency boundary.
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 256,
+            min_rows: 4096,
+            max_wait: Duration::from_secs(5),
+        },
+        ..Default::default()
+    };
+    let c = Coordinator::start(resident_bank(), cfg);
+    let ticket = c.submit(spec("era", 8, 10, 13)).unwrap();
+    let handle = ticket.cancel_handle();
+    std::thread::sleep(Duration::from_millis(30));
+    handle.cancel();
+    let res = ticket.wait().unwrap();
+    assert!(res.cancelled, "linger-cancel must retire the request early");
+    assert_eq!(
+        c.telemetry().resident_lanes.load(Ordering::Relaxed),
+        0,
+        "devolved lane must release the residency gauge"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn mixed_concurrent_traffic_matches_host_bitwise_per_request() {
+    // Several concurrent requests with distinct seeds/NFEs: resident
+    // lanes step alongside slab lanes in the same dispatch rounds, and
+    // every request's samples must still match its solo host-path run.
+    let specs: Vec<RequestSpec> = vec![
+        spec("era", 16, 10, 101),
+        spec("ddim", 16, 10, 102),
+        spec("era", 8, 6, 103),
+    ];
+    let mut host_samples = Vec::new();
+    for sp in &specs {
+        let host = Coordinator::start(plain_bank(), CoordinatorConfig::default());
+        host_samples.push(host.sample(sp.clone()).unwrap().samples);
+        host.shutdown();
+    }
+    let dev = Coordinator::start(resident_bank(), CoordinatorConfig::default());
+    let tickets: Vec<_> =
+        specs.iter().map(|sp| dev.submit(sp.clone()).unwrap()).collect();
+    for (ticket, want) in tickets.into_iter().zip(host_samples) {
+        let got = ticket.wait().unwrap();
+        assert_eq!(got.samples.rows(), want.rows());
+        for (a, b) in want.as_slice().iter().zip(got.samples.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "concurrent resident run diverged");
+        }
+    }
+    dev.shutdown();
+}
