@@ -71,6 +71,7 @@ fn run() -> Result<(), String> {
         seed: 7,
         deadline_ms: None,
         task: Default::default(),
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let (samples, server_seconds) = client.sample(&spec)?;

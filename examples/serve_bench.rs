@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use era_solver::cli::{Args, OptSpec};
-use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, ModelBank, RequestSpec};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, ModelBank, QosClass, RequestSpec};
 use era_solver::experiments::report::{write_markdown_table, Table};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
@@ -35,6 +35,9 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "guidance", value: Some("s"), help: "CFG scale for the load phase, 0 = off (default: 0)" },
     OptSpec { name: "guide-class", value: Some("c"), help: "class id for guided rows (default: 0)" },
     OptSpec { name: "churn", value: Some("s"), help: "stochastic-ERA churn for the load phase (default: 0)" },
+    OptSpec { name: "qos", value: Some("class"), help: "QoS class for the load phase: strict | balanced | besteffort (default: strict)" },
+    OptSpec { name: "min-nfe", value: Some("n"), help: "early-stop NFE floor for the load phase, 0 = solver minimum (default: 0)" },
+    OptSpec { name: "conv-threshold", value: Some("x"), help: "convergence threshold for the load phase, 0 = fixed NFE (default: 0)" },
     OptSpec { name: "emit-bench-json", value: Some("path"), help: "write the load phase's BENCH_serving.json report here" },
 ];
 
@@ -101,6 +104,13 @@ fn run() -> Result<(), String> {
         churn: args.f64_or("churn", 0.0)?,
         ..Default::default()
     };
+    // QoS knobs for the load phase: non-strict classes opt requests
+    // into the convergence controller and degraded admission.
+    let qos_name = args.str_or("qos", "strict");
+    let qos = QosClass::parse(&qos_name)
+        .ok_or_else(|| format!("unknown qos class '{qos_name}'"))?;
+    let min_nfe = args.usize_or("min-nfe", 0)?;
+    let conv_threshold = args.f64_or("conv-threshold", 0.0)?;
 
     // ---- Part 1: Tab. 7 — single-request wall clock per solver × NFE ----
     let stack =
@@ -115,6 +125,8 @@ fn run() -> Result<(), String> {
     for s in solvers {
         let mut row = vec![s.to_string()];
         for &nfe in &nfes {
+            // Tab. 7 cells stay strict/fixed-NFE: the table measures
+            // full-budget wall clock, not adaptive savings.
             let spec = RequestSpec {
                 dataset: dataset.clone(),
                 solver: s.into(),
@@ -125,6 +137,7 @@ fn run() -> Result<(), String> {
                 seed: 11,
                 deadline_ms: None,
                 task: TaskSpec::default(),
+                ..Default::default()
             };
             // Median of 5 runs.
             let mut times = Vec::new();
@@ -160,6 +173,10 @@ fn run() -> Result<(), String> {
         seed: 0,
         deadline_ms: None,
         task: load_task,
+        qos,
+        min_nfe,
+        conv_threshold,
+        ..Default::default()
     };
     let report = generate_load(addr, &spec, concurrency, requests);
     println!(

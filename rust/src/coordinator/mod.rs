@@ -41,7 +41,7 @@ pub mod telemetry;
 
 pub use batcher::{BatchPlan, Batcher, BatchPolicy};
 pub use executor::BankSet;
-pub use request::{RequestSpec, RequestState, SamplingResult};
+pub use request::{QosClass, RequestSpec, RequestState, SamplingResult};
 pub use service::{
     CancelHandle, Coordinator, CoordinatorConfig, MockBank, ModelBank, SubmitError, Ticket,
 };

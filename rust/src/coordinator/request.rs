@@ -10,6 +10,42 @@ use crate::solvers::schedule::{make_grid, GridKind, VpSchedule};
 use crate::solvers::{EvalRequest, Solver, SolverKind, TaskSpec};
 use crate::tensor::Tensor;
 
+/// Service tier of one request: how much the serving stack may trade
+/// the request's NFE budget against load and deadlines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QosClass {
+    /// Full fixed-NFE budget, bitwise-reproducible; rejected outright
+    /// at the admission cap. The convergence controller never runs.
+    #[default]
+    Strict,
+    /// Opted into early stop via `conv_threshold`, charged predicted
+    /// rows at admission, but never degraded below its own settings.
+    Balanced,
+    /// Like balanced, and additionally degradable: under deadline
+    /// pressure or at the admission cap the scheduler latches the
+    /// request to finish at its NFE floor instead of rejecting it.
+    BestEffort,
+}
+
+impl QosClass {
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "strict" => Some(QosClass::Strict),
+            "balanced" => Some(QosClass::Balanced),
+            "besteffort" => Some(QosClass::BestEffort),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QosClass::Strict => "strict",
+            QosClass::Balanced => "balanced",
+            QosClass::BestEffort => "besteffort",
+        }
+    }
+}
+
 /// What a client asks for: a batch of samples from one dataset's
 /// denoiser under a chosen solver at a chosen NFE budget.
 #[derive(Clone, Debug)]
@@ -38,6 +74,17 @@ pub struct RequestSpec {
     /// trajectory, stochastic churn. Defaults to the plain unconditional
     /// full trajectory.
     pub task: TaskSpec,
+    /// Service tier (see [`QosClass`]). `nfe` is the budget ceiling;
+    /// `min_nfe` the floor early stop / degradation may reach.
+    pub qos: QosClass,
+    /// Early-stop NFE floor (0 = the solver's structural minimum).
+    pub min_nfe: usize,
+    /// Convergence-controller threshold on the relative `delta_eps`
+    /// change per scored step (0 = fixed NFE). Ignored for `strict`.
+    pub conv_threshold: f64,
+    /// Set by pool admission when an over-cap `besteffort` request was
+    /// accepted in degraded form instead of rejected. Not a wire field.
+    pub degraded: bool,
 }
 
 impl Default for RequestSpec {
@@ -52,6 +99,10 @@ impl Default for RequestSpec {
             seed: 0,
             deadline_ms: None,
             task: TaskSpec::default(),
+            qos: QosClass::Strict,
+            min_nfe: 0,
+            conv_threshold: 0.0,
+            degraded: false,
         }
     }
 }
@@ -62,6 +113,55 @@ impl RequestSpec {
     /// (and is admission-controlled as) twice its `n_samples`.
     pub fn admission_rows(&self) -> usize {
         self.n_samples * self.task.rows_per_sample()
+    }
+
+    /// Effective convergence threshold: `strict` requests are
+    /// guaranteed fixed-NFE, so the controller is forced off for them.
+    pub fn effective_conv_threshold(&self) -> f64 {
+        if self.qos == QosClass::Strict {
+            0.0
+        } else {
+            self.conv_threshold
+        }
+    }
+
+    /// Whether admission may accept this request in degraded form
+    /// (finish at the NFE floor) instead of rejecting it at the cap:
+    /// `besteffort` ERA requests with room between floor and budget.
+    pub fn degradable(&self) -> bool {
+        if self.qos != QosClass::BestEffort || self.degraded {
+            return false;
+        }
+        match SolverKind::parse(&self.solver) {
+            Some(kind @ SolverKind::Era { .. }) => kind.nfe_floor(self.min_nfe, self.nfe) < self.nfe,
+            _ => false,
+        }
+    }
+
+    /// Rows the admission cap charges this request. `strict` requests
+    /// pay worst case; adaptive tiers pay rows scaled by their
+    /// *predicted* NFE — floor for `besteffort` (degradable on
+    /// demand), the floor/budget midpoint for `balanced` with the
+    /// controller on — converting the fixed row budget into a
+    /// load-responsive one.
+    pub fn charged_rows(&self) -> usize {
+        let worst = self.admission_rows();
+        if self.qos == QosClass::Strict {
+            return worst;
+        }
+        let Some(kind @ SolverKind::Era { .. }) = SolverKind::parse(&self.solver) else {
+            return worst;
+        };
+        if self.qos == QosClass::Balanced && self.effective_conv_threshold() <= 0.0 {
+            return worst;
+        }
+        let floor = kind.nfe_floor(self.min_nfe, self.nfe);
+        let predicted = match self.qos {
+            QosClass::Strict => self.nfe,
+            QosClass::Balanced => (floor + self.nfe).div_ceil(2),
+            QosClass::BestEffort => floor,
+        };
+        (worst * predicted).div_ceil(self.nfe).max(1)
     }
 
     /// Validate and instantiate the solver state for this request with
@@ -116,13 +216,12 @@ impl RequestSpec {
         if !(self.t_end > 0.0 && self.t_end < 1.0) {
             return Err(format!("t_end {} out of (0, 1)", self.t_end));
         }
-        if self.nfe < kind.min_nfe() {
-            return Err(format!(
-                "nfe {} below minimum {} for solver '{}'",
-                self.nfe,
-                kind.min_nfe(),
-                self.solver
-            ));
+        kind.validate_nfe(self.nfe)?;
+        if self.min_nfe > self.nfe {
+            return Err(format!("min_nfe {} above nfe budget {}", self.min_nfe, self.nfe));
+        }
+        if !(self.conv_threshold >= 0.0 && self.conv_threshold.is_finite()) {
+            return Err(format!("conv_threshold {} out of range", self.conv_threshold));
         }
         let plan = match plans {
             Some(cache) => {
@@ -152,6 +251,8 @@ impl RequestSpec {
     ) -> Result<LaneAdmission, String> {
         let (kind, plan, x0) = self.resolve_parts(sched, dim, Some(plans))?;
         let res = kind.resolve_task(plan, x0, &self.task)?;
+        let conv_threshold = self.effective_conv_threshold();
+        let min_nfe = kind.nfe_floor(self.min_nfe, self.nfe);
         Ok(LaneAdmission {
             kind,
             view: res.view,
@@ -159,6 +260,8 @@ impl RequestSpec {
             churn: res.churn,
             guided: res.guided,
             seed: self.seed,
+            conv_threshold,
+            min_nfe,
         })
     }
 }
@@ -181,6 +284,10 @@ pub struct SamplingResult {
     /// Surfaced on the wire so clients can observe the error-robust
     /// selection working.
     pub delta_eps: Option<f64>,
+    /// True when the convergence controller (or QoS degradation)
+    /// retired the request before its full NFE budget; `nfe` then
+    /// holds the evaluations actually delivered.
+    pub early_stop: bool,
 }
 
 /// Lifecycle of an admitted request inside the engine loop.
@@ -245,6 +352,7 @@ impl RequestState {
             total_seconds: (now - self.submitted_at).as_secs_f64(),
             cancelled: false,
             delta_eps: self.solver.delta_eps(),
+            early_stop: false,
         }
     }
 }
@@ -362,6 +470,86 @@ mod tests {
         assert_eq!(res.nfe, 10);
         assert_eq!(res.samples.rows(), 4);
         assert!(res.total_seconds >= res.queue_seconds);
+    }
+
+    #[test]
+    fn qos_charged_rows_scale_with_predicted_nfe() {
+        // era default: floor 4, budget 24, 16 samples (worst 16 rows).
+        let strict = RequestSpec { nfe: 24, ..Default::default() };
+        assert_eq!(strict.charged_rows(), strict.admission_rows());
+        let balanced = RequestSpec {
+            nfe: 24,
+            qos: QosClass::Balanced,
+            conv_threshold: 0.2,
+            ..Default::default()
+        };
+        let besteffort =
+            RequestSpec { nfe: 24, qos: QosClass::BestEffort, ..Default::default() };
+        assert!(balanced.charged_rows() < balanced.admission_rows());
+        assert!(besteffort.charged_rows() < balanced.charged_rows(), "floor < midpoint");
+        assert!(besteffort.charged_rows() >= 1);
+        // Balanced without the controller runs fixed-NFE: worst case.
+        let balanced_off =
+            RequestSpec { nfe: 24, qos: QosClass::Balanced, ..Default::default() };
+        assert_eq!(balanced_off.charged_rows(), balanced_off.admission_rows());
+        // Non-ERA solvers cannot stop early: worst case regardless.
+        let ddim = RequestSpec {
+            solver: "ddim".into(),
+            nfe: 24,
+            qos: QosClass::BestEffort,
+            ..Default::default()
+        };
+        assert_eq!(ddim.charged_rows(), ddim.admission_rows());
+    }
+
+    #[test]
+    fn degradable_only_for_besteffort_era_with_headroom() {
+        let be = RequestSpec { nfe: 24, qos: QosClass::BestEffort, ..Default::default() };
+        assert!(be.degradable());
+        assert!(!RequestSpec { nfe: 24, ..Default::default() }.degradable(), "strict");
+        let non_era = RequestSpec {
+            solver: "ddim".into(),
+            nfe: 24,
+            qos: QosClass::BestEffort,
+            ..Default::default()
+        };
+        assert!(!non_era.degradable(), "no eps history to jump from");
+        let tight = RequestSpec {
+            nfe: 24,
+            min_nfe: 24,
+            qos: QosClass::BestEffort,
+            ..Default::default()
+        };
+        assert!(!tight.degradable(), "floor == budget leaves nothing to degrade");
+        let already = RequestSpec {
+            nfe: 24,
+            qos: QosClass::BestEffort,
+            degraded: true,
+            ..Default::default()
+        };
+        assert!(!already.degradable(), "degradation latches once");
+    }
+
+    #[test]
+    fn qos_validation_and_strict_override() {
+        let bad_floor = RequestSpec { nfe: 10, min_nfe: 11, ..Default::default() };
+        assert!(bad_floor.build_solver(sched(), 2).is_err());
+        let bad_thresh = RequestSpec { conv_threshold: f64::NAN, ..Default::default() };
+        assert!(bad_thresh.build_solver(sched(), 2).is_err());
+        let neg_thresh = RequestSpec { conv_threshold: -0.1, ..Default::default() };
+        assert!(neg_thresh.build_solver(sched(), 2).is_err());
+        // Strict forces the controller off however the threshold is set.
+        let strict = RequestSpec { conv_threshold: 0.5, ..Default::default() };
+        assert_eq!(strict.effective_conv_threshold(), 0.0);
+        let balanced = RequestSpec {
+            conv_threshold: 0.5,
+            qos: QosClass::Balanced,
+            ..Default::default()
+        };
+        assert_eq!(balanced.effective_conv_threshold(), 0.5);
+        assert_eq!(QosClass::parse("besteffort"), Some(QosClass::BestEffort));
+        assert_eq!(QosClass::parse("gold-plated"), None);
+        assert_eq!(QosClass::BestEffort.label(), "besteffort");
     }
 
     #[test]

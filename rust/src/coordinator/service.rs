@@ -42,7 +42,7 @@ use crate::coordinator::batcher::{Batcher, BatchPolicy, SlabRecycler};
 use crate::coordinator::executor::{
     BankSet, ExecutorPool, JobPayload, SlabCompletion, SlabJob, SlabOutput,
 };
-use crate::coordinator::request::{RequestSpec, SamplingResult};
+use crate::coordinator::request::{QosClass, RequestSpec, SamplingResult};
 use crate::coordinator::telemetry::Telemetry;
 use crate::kernels::{fused, PlanCache};
 use crate::obs::trace::pack_bases;
@@ -488,6 +488,12 @@ struct Active {
     submitted_at: Instant,
     /// First time the owning lane stepped (queue-wait boundary).
     started_at: Option<Instant>,
+    /// QoS class: drives deadline-pressure degradation in the sweep.
+    qos: QosClass,
+    /// Degradation latched (at pool admission or under deadline
+    /// pressure): counted once, and the lane member heads for its
+    /// NFE floor.
+    degraded: bool,
 }
 
 /// Per-lane dispatch bookkeeping, parallel to the engine's lane table.
@@ -607,11 +613,16 @@ impl Scheduler {
             total_seconds: (now - a.submitted_at).as_secs_f64(),
             cancelled,
             delta_eps: removed.delta_eps,
+            early_stop: removed.early_stop,
         };
+        self.tele.observe_delivered_nfe(res.nfe);
         if cancelled {
             self.rec.record(a.id, SpanKind::Cancelled { nfe: res.nfe as u32 });
             self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
         } else {
+            if removed.early_stop {
+                self.tele.early_stops.fetch_add(1, Ordering::Relaxed);
+            }
             self.rec.record(a.id, SpanKind::Finalize { nfe: res.nfe as u32 });
             self.tele.record_finish(res.total_seconds, res.queue_seconds);
             if let Some(d) = res.delta_eps {
@@ -634,11 +645,22 @@ impl Scheduler {
     /// the request slot on success. Same-tick requests with identical
     /// `(dataset, solver, plan, workload shape)` land in one lane and
     /// step together from then on.
-    fn admit(&mut self, env: Envelope, bank: &dyn ModelBank, plans: &PlanCache) -> Option<usize> {
+    /// `now` is the scheduling round's one clock snapshot: every
+    /// deadline decision of the round (admission DOA checks and the
+    /// sweep) compares against the same instant, so a request can
+    /// never be admitted by one check and expired by the next within
+    /// the same round.
+    fn admit(
+        &mut self,
+        env: Envelope,
+        bank: &dyn ModelBank,
+        plans: &PlanCache,
+        now: Instant,
+    ) -> Option<usize> {
         // Requests cancelled (or expired) while still queued never cost
         // a lane insertion or an evaluation.
         let dead_on_arrival =
-            env.cancel.is_cancelled() || env.deadline.is_some_and(|d| Instant::now() >= d);
+            env.cancel.is_cancelled() || env.deadline.is_some_and(|d| now >= d);
         if dead_on_arrival {
             self.rec.record(env.id, SpanKind::Cancelled { nfe: 0 });
             self.tele.requests_cancelled.fetch_add(1, Ordering::Relaxed);
@@ -652,6 +674,7 @@ impl Scheduler {
                 total_seconds: 0.0,
                 cancelled: true,
                 delta_eps: None,
+                early_stop: false,
             }));
             return None;
         }
@@ -688,12 +711,21 @@ impl Scheduler {
                     reply: env.reply,
                     cancel: env.cancel,
                     deadline: env.deadline,
-                    submitted_at: Instant::now(),
+                    submitted_at: now,
                     started_at: None,
+                    qos: env.spec.qos,
+                    degraded: false,
                 });
                 let lane = self.engine.admit(slot, &env.spec.dataset, adm);
                 self.rec.record(id, SpanKind::Admitted { rows: rows as u32 });
                 self.rec.record(id, SpanKind::LaneAttach { lane: lane as u32 });
+                // Pool admission squeezed this request in under the
+                // global row cap on the promise it heads for its NFE
+                // floor: latch the lane member degraded right away.
+                if env.spec.degraded && self.engine.degrade_member(slot) {
+                    self.slots[slot].as_mut().expect("just inserted").degraded = true;
+                    self.tele.degraded_requests.fetch_add(1, Ordering::Relaxed);
+                }
                 Some(slot)
             }
             Err(e) => {
@@ -711,8 +743,29 @@ impl Scheduler {
     /// dispatched pending eval is regenerated from the compacted state.
     /// Runs every scheduler tick — including linger waits — so a cancel
     /// is honoured within a tick, not after `max_wait`.
-    fn sweep(&mut self, rs: Option<&dyn ResidentState>) {
-        let now = Instant::now();
+    fn sweep(&mut self, rs: Option<&dyn ResidentState>, now: Instant) {
+        // ---- QoS degradation under deadline pressure ----
+        // A besteffort request past ~75% of its deadline budget heads
+        // for its NFE floor instead of risking a deadline kill: the
+        // lane member latches degraded (an ERA-only operation — the
+        // closing jump needs the eps history) and the next delivery
+        // retires it early. Safe with slabs in flight: the latch only
+        // flags the member, it never reshapes the lane.
+        for slot in 0..self.slots.len() {
+            let Some(a) = self.slots[slot].as_ref() else { continue };
+            if a.degraded || a.qos != QosClass::BestEffort {
+                continue;
+            }
+            let Some(d) = a.deadline else { continue };
+            if d <= a.submitted_at || now >= d {
+                continue; // no budget to speak of, or the sweep below retires it
+            }
+            let budget = d - a.submitted_at;
+            if now >= a.submitted_at + budget.mul_f64(0.75) && self.engine.degrade_member(slot) {
+                self.slots[slot].as_mut().expect("checked above").degraded = true;
+                self.tele.degraded_requests.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         for lane in 0..self.engine.lane_slots() {
             if !self.engine.has_lane(lane) || self.lane_inflight(lane) > 0 {
                 continue;
@@ -1306,6 +1359,20 @@ impl Scheduler {
                 }
             }
         }
+        // ---- Convergence control (adaptive NFE) ----
+        // Members whose delta_eps trend satisfies their convergence
+        // predicate — or whose QoS degraded them toward the floor —
+        // retire now via one closing DDIM jump, compacting out of the
+        // lane without perturbing batch-mates' bits.
+        for slot in self.engine.converged_members(lane) {
+            let removed = self.engine.finish_member_early(lane, slot);
+            let a = self.take_slot(slot);
+            self.rec.record(a.id, SpanKind::LaneCompact { lane: lane as u32 });
+            self.retire_ok_active(a, removed, false);
+            if !self.engine.has_lane(lane) {
+                return; // every member converged
+            }
+        }
         if self.engine.is_done(lane) {
             self.retire_lane_done(lane);
         } else {
@@ -1341,6 +1408,26 @@ impl Scheduler {
         }
         let now = Instant::now();
         let mut devolved = false;
+        // Converged/degraded members retire through the host path (the
+        // closing jump needs the eps history): gather the lane first,
+        // then compact them out exactly like the slab path does.
+        if !finished && !self.engine.converged_members(lane).is_empty() {
+            if let Some(rs) = rs {
+                if !self.devolve_resident(lane, rs) {
+                    return; // gather failed; lane already dropped
+                }
+                devolved = true;
+                for slot in self.engine.converged_members(lane) {
+                    let removed = self.engine.finish_member_early(lane, slot);
+                    let a = self.take_slot(slot);
+                    self.rec.record(a.id, SpanKind::LaneCompact { lane: lane as u32 });
+                    self.retire_ok_active(a, removed, false);
+                    if !self.engine.has_lane(lane) {
+                        return; // every member converged
+                    }
+                }
+            }
+        }
         loop {
             let victim = self.engine.members(lane).iter().find_map(|m| {
                 let a = self.slots[m.slot].as_ref()?;
@@ -1405,6 +1492,10 @@ fn run_loop(
         if banks.len() == 1 { bank.resident() } else { None };
 
     'outer: loop {
+        // One clock snapshot per scheduling round: admission DOA checks
+        // and the sweep compare deadlines against the same instant, so
+        // a round's decisions are mutually consistent.
+        let now = Instant::now();
         // ---- Route completions that arrived since the last tick ----
         while let Ok(c) = comp_rx.try_recv() {
             s.route(c, residency);
@@ -1414,7 +1505,7 @@ fn run_loop(
         while queue_open && s.active_count < config.max_active {
             match rx.try_recv() {
                 Ok(env) => {
-                    s.admit(env, bank.as_ref(), &plans);
+                    s.admit(env, bank.as_ref(), &plans, now);
                 }
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
@@ -1427,10 +1518,11 @@ fn run_loop(
             if !queue_open {
                 break 'outer; // drained and closed: exit
             }
-            // Idle: block for work.
+            // Idle: block for work (the blocking wait moved the clock,
+            // so the arrival gets a fresh snapshot).
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(env) => {
-                    s.admit(env, bank.as_ref(), &plans);
+                    s.admit(env, bank.as_ref(), &plans, Instant::now());
                     continue;
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -1442,7 +1534,7 @@ fn run_loop(
         }
 
         // ---- Cancellation / deadline sweep + solver stepping ----
-        s.sweep(residency);
+        s.sweep(residency, now);
         s.pull_ready(residency);
         if s.active_count == 0 {
             continue;
@@ -1453,6 +1545,9 @@ fn run_loop(
         if s.rounds.len() < depth && rows > 0 && rows < config.policy.min_rows && queue_open {
             let deadline = Instant::now() + config.policy.max_wait;
             loop {
+                // Each linger slice is its own mini-round with its own
+                // clock snapshot (time passes while waiting).
+                let now = Instant::now();
                 // Completions landing mid-linger free more pending work
                 // to join this round.
                 while let Ok(c) = comp_rx.try_recv() {
@@ -1461,7 +1556,7 @@ fn run_loop(
                 // The linger wait is cancellation-aware: every slice
                 // re-checks cancels/deadlines of already-active
                 // requests instead of blindly sleeping out `max_wait`.
-                s.sweep(residency);
+                s.sweep(residency, now);
                 s.pull_ready(residency);
                 rows = s.dispatchable_rows();
                 if rows == 0
@@ -1470,21 +1565,23 @@ fn run_loop(
                 {
                     break;
                 }
-                let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
                 let slice = (deadline - now).min(Duration::from_millis(1));
                 match rx.recv_timeout(slice) {
                     Ok(env) => {
-                        let mut admitted = s.admit(env, bank.as_ref(), &plans).is_some();
+                        let anow = Instant::now();
+                        let mut admitted =
+                            s.admit(env, bank.as_ref(), &plans, anow).is_some();
                         // Drain the rest of the burst before stepping:
                         // the first pull seals new lanes, so same-window
                         // identical arrivals must land first to fuse.
                         while s.active_count < config.max_active {
                             match rx.try_recv() {
                                 Ok(env) => {
-                                    admitted |= s.admit(env, bank.as_ref(), &plans).is_some();
+                                    admitted |=
+                                        s.admit(env, bank.as_ref(), &plans, anow).is_some();
                                 }
                                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
                                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
@@ -1526,7 +1623,7 @@ fn run_loop(
             // wait for admission to avoid a busy spin.
             match rx.recv_timeout(Duration::from_millis(1)) {
                 Ok(env) => {
-                    s.admit(env, bank.as_ref(), &plans);
+                    s.admit(env, bank.as_ref(), &plans, Instant::now());
                 }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
@@ -2075,6 +2172,158 @@ mod tests {
             .position(|e| matches!(e.kind, SpanKind::Cancelled { .. }))
             .expect("cancel event present");
         assert_eq!(cancel_at, events.len() - 1, "no spans after the cancel: {events:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn admission_deadline_uses_the_round_snapshot() {
+        // The wall clock may pass a request's deadline between the
+        // round's snapshot and the admission check; the decision must
+        // follow the snapshot (one consistent clock per round), not
+        // the racing wall clock.
+        let b = bank();
+        let plans = PlanCache::new();
+        let tele = Arc::new(Telemetry::new());
+        let rec = Arc::new(FlightRecorder::new());
+        let mut s = Scheduler::new(tele.clone(), rec, 256);
+        let now0 = Instant::now();
+        // Mirror submit(): gauges go up before the envelope is visible.
+        tele.inflight_requests.fetch_add(1, Ordering::SeqCst);
+        tele.inflight_rows.fetch_add(4, Ordering::SeqCst);
+        let (reply, rx) = std::sync::mpsc::channel();
+        let env = Envelope {
+            id: 1,
+            spec: spec("era", 4, 1),
+            reply,
+            cancel: CancelHandle::new(),
+            deadline: Some(now0 + Duration::from_millis(5)),
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        let slot = s.admit(env, b.as_ref(), &plans, now0);
+        assert!(slot.is_some(), "round-snapshot deadline check must admit");
+        assert!(rx.try_recv().is_err(), "no dead-on-arrival reply may be sent");
+        assert_eq!(tele.requests_cancelled.load(Ordering::Relaxed), 0);
+        // The same envelope admitted under a fresh snapshot would be
+        // dead on arrival — the snapshot is what changed the outcome.
+        let (reply2, rx2) = std::sync::mpsc::channel();
+        let env2 = Envelope {
+            id: 2,
+            spec: spec("era", 4, 2),
+            reply: reply2,
+            cancel: CancelHandle::new(),
+            deadline: Some(now0 + Duration::from_millis(5)),
+        };
+        tele.inflight_requests.fetch_add(1, Ordering::SeqCst);
+        tele.inflight_rows.fetch_add(4, Ordering::SeqCst);
+        assert!(s.admit(env2, b.as_ref(), &plans, Instant::now()).is_none());
+        assert!(matches!(rx2.try_recv(), Ok(Ok(r)) if r.cancelled));
+    }
+
+    /// A constant-eps denoiser: ERA's Lagrange prediction of a constant
+    /// function is exact, so `delta_eps` collapses immediately — the
+    /// canonical converging workload for the adaptive controller.
+    struct ConstEps;
+    impl crate::solvers::EpsModel for ConstEps {
+        fn eval(&self, x: &Tensor, _t: &[f32]) -> Tensor {
+            let mut e = Tensor::zeros(x.rows(), x.cols());
+            e.as_mut_slice().fill(0.25);
+            e
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+    }
+
+    fn const_bank() -> Arc<dyn ModelBank> {
+        let sched = VpSchedule::default();
+        Arc::new(MockBank::new(sched).with("const", Box::new(ConstEps)))
+    }
+
+    #[test]
+    fn adaptive_controller_cuts_nfe_and_stays_accurate() {
+        let run = |threshold: f64| {
+            let c = Coordinator::start(const_bank(), CoordinatorConfig::default());
+            let mut s = spec("era", 16, 3);
+            s.dataset = "const".into();
+            s.nfe = 24;
+            s.qos = QosClass::Balanced;
+            s.conv_threshold = threshold;
+            let r = c.sample(s).unwrap();
+            c.shutdown();
+            r
+        };
+        let fixed = run(0.0);
+        assert!(!fixed.early_stop);
+        assert_eq!(fixed.nfe, 24, "threshold 0 must run the full budget");
+        let adaptive = run(0.2);
+        assert!(adaptive.early_stop, "converging workload must stop early");
+        assert!(
+            (adaptive.nfe as f64) < 0.8 * 24.0,
+            "mean NFE must drop >= 20%: delivered {}",
+            adaptive.nfe
+        );
+        let max_abs = fixed
+            .samples
+            .as_slice()
+            .iter()
+            .zip(adaptive.samples.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_abs < 1e-3, "early-stopped iterate drifted: max|d|={max_abs}");
+        let t_adaptive = run(0.2);
+        assert_eq!(
+            t_adaptive.samples.as_slice(),
+            adaptive.samples.as_slice(),
+            "early stop must be deterministic"
+        );
+    }
+
+    #[test]
+    fn strict_qos_ignores_the_convergence_controller() {
+        let c = Coordinator::start(const_bank(), CoordinatorConfig::default());
+        let mut s = spec("era", 8, 5);
+        s.dataset = "const".into();
+        s.nfe = 24;
+        s.conv_threshold = 0.2; // strict (default) must force this off
+        let r = c.sample(s).unwrap();
+        assert!(!r.early_stop);
+        assert_eq!(r.nfe, 24);
+        c.shutdown();
+    }
+
+    #[test]
+    fn besteffort_degrades_under_deadline_pressure() {
+        // A besteffort request whose deadline budget is mostly spent
+        // must degrade toward its NFE floor and complete (early_stop),
+        // not blow the deadline and come back cancelled.
+        struct SlowConstEps;
+        impl crate::solvers::EpsModel for SlowConstEps {
+            fn eval(&self, x: &Tensor, _t: &[f32]) -> Tensor {
+                std::thread::sleep(Duration::from_millis(2));
+                let mut e = Tensor::zeros(x.rows(), x.cols());
+                e.as_mut_slice().fill(0.25);
+                e
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+        }
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> =
+            Arc::new(MockBank::new(sched).with("const", Box::new(SlowConstEps)));
+        let c = Coordinator::start(bank, CoordinatorConfig::default());
+        let mut s = spec("era", 8, 7);
+        s.dataset = "const".into();
+        s.nfe = 2000; // ~4s of evaluations: far more than the deadline affords
+        s.qos = QosClass::BestEffort;
+        s.deadline_ms = Some(500);
+        let r = c.sample(s).unwrap();
+        assert!(!r.cancelled, "pressured besteffort must not blow the deadline");
+        assert!(r.early_stop, "pressured besteffort must finish early");
+        assert!(r.nfe < 2000, "delivered NFE must be degraded: {}", r.nfe);
+        assert_eq!(r.samples.rows(), 8);
+        assert_eq!(c.telemetry().degraded_requests.load(Ordering::Relaxed), 1);
+        assert!(c.telemetry().early_stops.load(Ordering::Relaxed) >= 1);
         c.shutdown();
     }
 

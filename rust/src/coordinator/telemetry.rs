@@ -16,6 +16,12 @@ pub struct Telemetry {
     pub requests_rejected: AtomicUsize,
     /// Requests retired early by client cancellation or deadline expiry.
     pub requests_cancelled: AtomicUsize,
+    /// Requests the convergence controller retired before their full
+    /// NFE budget (delivered with the `early_stop` marker).
+    pub early_stops: AtomicUsize,
+    /// Requests latched to their NFE floor by QoS degradation (pool
+    /// admission cap or scheduler deadline pressure).
+    pub degraded_requests: AtomicUsize,
     /// Workload mix: admitted requests using classifier-free guidance
     /// (each pins 2x its sample rows), img2img partial trajectories, and
     /// stochastic (churned) sampling. One request may count in several.
@@ -66,6 +72,11 @@ pub struct Telemetry {
     /// whose lane held `m` member requests; the last bucket absorbs
     /// `>= LANE_OCC_BUCKETS` (deep fusion).
     pub lane_occ_hist: [AtomicUsize; LANE_OCC_BUCKETS],
+    /// Delivered-NFE histogram over retired requests (power-of-two
+    /// upper edges, [`NFE_HIST_BOUNDS`]; last slot overflow). Under the
+    /// convergence controller this is the load-shed diagnostic: mass
+    /// below the budget edge = NFE actually saved.
+    pub nfe_hist: [AtomicU64; NFE_HIST_BUCKETS],
     /// Per-stage latency histograms (log-scaled fixed buckets, seconds):
     /// queue wait before the first solver step, host time per lane
     /// solver step/deliver, engine eval time per slab, and the finalize
@@ -88,6 +99,13 @@ pub const DEPTH_HIST_BUCKETS: usize = 8;
 
 /// Buckets of the lane-occupancy histogram (1..=8+ members per lane).
 pub const LANE_OCC_BUCKETS: usize = 8;
+
+/// Upper edges of the delivered-NFE histogram buckets; one implicit
+/// overflow slot follows.
+pub const NFE_HIST_BOUNDS: [usize; NFE_HIST_BUCKETS - 1] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Bucket count of the delivered-NFE histogram (edges + overflow).
+pub const NFE_HIST_BUCKETS: usize = 8;
 
 /// Stage labels, in the order `stage_snapshots` returns them.
 pub const STAGES: [&str; 4] = ["queue", "solver_step", "eval", "finalize"];
@@ -161,8 +179,11 @@ impl StageHistSnapshot {
     }
 
     /// Quantile estimate (seconds) from the bucket counts: the upper
-    /// edge of the bucket holding the `q`-th observation (overflow
-    /// reports one log step past the last edge). Coarse by design —
+    /// edge of the bucket holding the `q`-th observation. A quantile
+    /// landing in the overflow bucket has no finite upper edge and
+    /// reports `f64::INFINITY` — rendering it as any finite number
+    /// would silently under-report p99 on slow stages (renderers print
+    /// it `+Inf`-aware, see [`fmt_quantile_ms`]). Coarse by design —
     /// exact pooled percentiles still come from the latency reservoir.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -176,11 +197,11 @@ impl StageHistSnapshot {
                 return if i < STAGE_BOUNDS.len() {
                     STAGE_BOUNDS[i]
                 } else {
-                    STAGE_BOUNDS[STAGE_BOUNDS.len() - 1] * 3.2
+                    f64::INFINITY
                 };
             }
         }
-        STAGE_BOUNDS[STAGE_BOUNDS.len() - 1] * 3.2
+        f64::INFINITY
     }
 
     pub fn to_json(&self) -> crate::json::Json {
@@ -193,6 +214,17 @@ impl StageHistSnapshot {
             ("sum_seconds", Json::Num(self.sum_seconds)),
             ("count", Json::Num(self.count as f64)),
         ])
+    }
+}
+
+/// Render a stage quantile (seconds) as a millisecond figure for
+/// heartbeat summaries, `+Inf`-aware: an overflow-bucket quantile
+/// prints as `+Inf` instead of a made-up finite number.
+pub fn fmt_quantile_ms(seconds: f64) -> String {
+    if seconds.is_infinite() {
+        "+Inf".into()
+    } else {
+        format!("{:.2}", 1e3 * seconds)
     }
 }
 
@@ -333,6 +365,25 @@ impl Telemetry {
         out
     }
 
+    /// Record one retired request's delivered NFE.
+    pub fn observe_delivered_nfe(&self, nfe: usize) {
+        let bucket = NFE_HIST_BOUNDS
+            .iter()
+            .position(|&b| nfe <= b)
+            .unwrap_or(NFE_HIST_BUCKETS - 1);
+        self.nfe_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the delivered-NFE histogram (per-bucket counts,
+    /// [`NFE_HIST_BOUNDS`] edges, last slot overflow).
+    pub fn nfe_hist_snapshot(&self) -> [u64; NFE_HIST_BUCKETS] {
+        let mut out = [0u64; NFE_HIST_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.nfe_hist.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
     /// Record one finished ERA request's final error measure.
     pub fn record_delta_eps(&self, d: f64) {
         let mut agg = self.delta_eps_agg.lock().unwrap();
@@ -395,12 +446,15 @@ impl Telemetry {
     pub fn summary(&self) -> String {
         let [queue, solver, eval, _finalize] = self.stage_snapshots();
         format!(
-            "finished={} cancelled={} rejected={} evals={} rows={} occupancy={:.1} pad={:.1}% \
+            "finished={} cancelled={} rejected={} early_stops={} degraded={} evals={} rows={} \
+             occupancy={:.1} pad={:.1}% \
              guided={} img2img={} sde={} exec_busy={:.0}% inflight_slabs={} lanes={} \
-             p50={:.1}ms p99={:.1}ms queue={:.2}/{:.2}ms step={:.2}/{:.2}ms eval={:.2}/{:.2}ms",
+             p50={:.1}ms p99={:.1}ms queue={}/{}ms step={}/{}ms eval={}/{}ms",
             self.requests_finished.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
+            self.early_stops.load(Ordering::Relaxed),
+            self.degraded_requests.load(Ordering::Relaxed),
             self.evals.load(Ordering::Relaxed),
             self.rows.load(Ordering::Relaxed),
             self.mean_batch_occupancy(),
@@ -413,12 +467,12 @@ impl Telemetry {
             self.lanes.load(Ordering::Relaxed),
             1e3 * self.latency_percentile(0.5),
             1e3 * self.latency_percentile(0.99),
-            1e3 * queue.quantile(0.5),
-            1e3 * queue.quantile(0.99),
-            1e3 * solver.quantile(0.5),
-            1e3 * solver.quantile(0.99),
-            1e3 * eval.quantile(0.5),
-            1e3 * eval.quantile(0.99),
+            fmt_quantile_ms(queue.quantile(0.5)),
+            fmt_quantile_ms(queue.quantile(0.99)),
+            fmt_quantile_ms(solver.quantile(0.5)),
+            fmt_quantile_ms(solver.quantile(0.99)),
+            fmt_quantile_ms(eval.quantile(0.5)),
+            fmt_quantile_ms(eval.quantile(0.99)),
         )
     }
 }
@@ -548,9 +602,56 @@ mod tests {
         h2.observe_seconds(30.0);
         let s2 = h2.snapshot();
         assert_eq!(s2.buckets[STAGE_BUCKETS - 1], 1);
-        assert!(s2.quantile(0.5) > 1.0);
+        assert!(
+            s2.quantile(0.5).is_infinite(),
+            "overflow-bucket quantiles have no finite upper bound"
+        );
         // Empty histogram quantiles are zero.
         assert_eq!(StageHist::default().snapshot().quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn quantile_overflow_boundary_and_rendering() {
+        // At the last finite edge: quantile stays finite and exact.
+        let h = StageHist::default();
+        h.observe_seconds(1.0);
+        let s = h.snapshot();
+        assert!((s.quantile(0.5) - 1.0).abs() < 1e-12);
+        assert_eq!(fmt_quantile_ms(s.quantile(0.5)), "1000.00");
+        // Past it: infinity, rendered as "+Inf" (Prometheus idiom).
+        let h2 = StageHist::default();
+        h2.observe_seconds(1.0 + 1e-9);
+        let s2 = h2.snapshot();
+        assert!(s2.quantile(0.5).is_infinite());
+        assert_eq!(fmt_quantile_ms(s2.quantile(0.5)), "+Inf");
+    }
+
+    #[test]
+    fn delivered_nfe_histogram_buckets_and_clamps() {
+        let t = Telemetry::default();
+        t.observe_delivered_nfe(1); // first bucket (edge 1)
+        t.observe_delivered_nfe(2); // edge-2 bucket
+        t.observe_delivered_nfe(3); // edge-4 bucket
+        t.observe_delivered_nfe(64); // last finite edge
+        t.observe_delivered_nfe(65); // overflow
+        t.observe_delivered_nfe(10_000); // overflow clamp
+        let snap = t.nfe_hist_snapshot();
+        assert_eq!(snap[0], 1);
+        assert_eq!(snap[1], 1);
+        assert_eq!(snap[2], 1);
+        assert_eq!(snap[NFE_HIST_BUCKETS - 2], 1);
+        assert_eq!(snap[NFE_HIST_BUCKETS - 1], 2);
+        assert_eq!(snap.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn summary_includes_qos_counters() {
+        let t = Telemetry::default();
+        t.early_stops.fetch_add(3, Ordering::Relaxed);
+        t.degraded_requests.fetch_add(2, Ordering::Relaxed);
+        let s = t.summary();
+        assert!(s.contains("early_stops=3"), "summary was: {s}");
+        assert!(s.contains("degraded=2"), "summary was: {s}");
     }
 
     #[test]

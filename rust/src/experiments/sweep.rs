@@ -164,7 +164,7 @@ pub fn run_sweep(backend: &EvalBackend, cfg: &SweepConfig) -> SweepResult {
         let kind = SolverKind::parse(solver_name)
             .unwrap_or_else(|| panic!("unknown solver '{solver_name}'"));
         for &nfe in &cfg.nfes {
-            if nfe < kind.min_nfe() {
+            if kind.validate_nfe(nfe).is_err() {
                 cells.push(Cell {
                     solver: solver_name.clone(),
                     nfe,

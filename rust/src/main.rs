@@ -21,6 +21,10 @@
 //! admission-charged as paired rows, and the heartbeat summary reports
 //! the running guided/img2img/sde mix plus per-stage latency p50/p99.
 //!
+//! QoS (DESIGN.md §12): `sample` ops accept `qos`/`min_nfe`/
+//! `conv_threshold`; `--conv-threshold` sets the convergence default
+//! inherited by non-strict requests that did not set their own.
+//!
 //! Observability (DESIGN.md §11): the `metrics` wire op returns the
 //! same Prometheus page `--metrics <path>` refreshes on each heartbeat,
 //! and `trace <tag>` dumps a tagged request's flight-recorder spans.
@@ -49,6 +53,7 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "min-rows", value: Some("n"), help: "linger threshold rows (default: 32)" },
     OptSpec { name: "max-wait-ms", value: Some("ms"), help: "linger budget (default: 2)" },
     OptSpec { name: "max-conns", value: Some("n"), help: "connection cap (default: 64)" },
+    OptSpec { name: "conv-threshold", value: Some("x"), help: "convergence default for non-strict requests without their own, 0 = off (default: 0)" },
     OptSpec { name: "metrics", value: Some("path"), help: "write a Prometheus text-exposition page here on every heartbeat" },
 ];
 
@@ -108,9 +113,14 @@ fn run() -> Result<(), String> {
     let bank: Arc<dyn ModelBank> = engine;
     let pool = Arc::new(WorkerPool::start(bank, pool_config));
 
+    let conv_threshold = args.f64_or("conv-threshold", 0.0)?;
+    if !(conv_threshold.is_finite() && conv_threshold >= 0.0) {
+        return Err(format!("--conv-threshold {conv_threshold} out of range"));
+    }
     let server_cfg = ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7437"),
         max_connections: args.usize_or("max-conns", 64)?,
+        default_conv_threshold: conv_threshold,
     };
     let server = Server::start(pool.clone(), server_cfg).map_err(|e| e.to_string())?;
     eprintln!("[era-serve] listening on {}", server.local_addr());

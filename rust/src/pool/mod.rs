@@ -298,6 +298,7 @@ impl WorkerPool {
         spec: &RequestSpec,
         cancel: &CancelHandle,
     ) -> Result<PoolTicket, SubmitError> {
+        let mut spec = spec.clone();
         // Under a global cap, hold the admission lock across the
         // check *and* the shard submit (which bumps the inflight
         // gauges synchronously) — otherwise two concurrent submits
@@ -309,9 +310,20 @@ impl WorkerPool {
             // costs paired cond/uncond rows, i.e. 2x its sample count
             // (`RequestSpec::admission_rows`), matching the shard-side
             // inflight_rows gauge this cap is compared against.
-            if total + spec.admission_rows() > self.max_inflight_rows {
+            // Adaptive QoS tiers are charged their *predicted* rows
+            // (`RequestSpec::charged_rows`): the NFE floor for
+            // besteffort, the floor/budget midpoint for balanced with
+            // the controller on — strict always pays worst case.
+            if total + spec.charged_rows() > self.max_inflight_rows {
                 self.pool_rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::QueueFull);
+            }
+            // Squeezed in past the worst-case cap on the strength of a
+            // degradable floor charge: latch the request degraded so
+            // it actually delivers the floor it was charged for,
+            // instead of rejecting it like a strict request.
+            if total + spec.admission_rows() > self.max_inflight_rows && spec.degradable() {
+                spec.degraded = true;
             }
             Some(guard)
         } else {

@@ -9,8 +9,8 @@
 use std::sync::atomic::Ordering;
 
 use crate::coordinator::telemetry::{
-    sorted_percentile, StageHistSnapshot, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS, STAGES,
-    STAGE_BOUNDS,
+    fmt_quantile_ms, sorted_percentile, StageHistSnapshot, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS,
+    NFE_HIST_BOUNDS, NFE_HIST_BUCKETS, STAGES, STAGE_BOUNDS,
 };
 use crate::coordinator::Telemetry;
 use crate::json::Json;
@@ -55,6 +55,14 @@ pub struct ShardStats {
     /// Sum / count of final per-request `delta_eps` values (ERA only).
     pub delta_eps_sum: f64,
     pub delta_eps_count: usize,
+    /// Requests retired early by the convergence controller.
+    pub early_stops: usize,
+    /// Requests latched to their NFE floor (cap squeeze-in or deadline
+    /// pressure on a best-effort request).
+    pub degraded_requests: usize,
+    /// Delivered-NFE histogram: bucket upper bounds are
+    /// [`NFE_HIST_BOUNDS`], last bucket absorbs larger.
+    pub delivered_nfe_hist: [u64; NFE_HIST_BUCKETS],
     /// Per-stage latency histogram snapshots, in [`STAGES`] order
     /// (queue, solver_step, eval, finalize).
     pub stages: [StageHistSnapshot; 4],
@@ -89,6 +97,9 @@ impl ShardStats {
             lane_occ_hist: t.lane_occ_snapshot(),
             delta_eps_sum,
             delta_eps_count,
+            early_stops: t.early_stops.load(Ordering::Relaxed),
+            degraded_requests: t.degraded_requests.load(Ordering::Relaxed),
+            delivered_nfe_hist: t.nfe_hist_snapshot(),
             stages: t.stage_snapshots(),
         }
     }
@@ -150,6 +161,12 @@ impl ShardStats {
                 Json::Arr(self.lane_occ_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
             ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
+            ("early_stops", Json::Num(self.early_stops as f64)),
+            ("degraded_requests", Json::Num(self.degraded_requests as f64)),
+            (
+                "delivered_nfe_hist",
+                Json::Arr(self.delivered_nfe_hist.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
             (
                 "stages",
                 Json::obj(
@@ -286,6 +303,27 @@ impl PoolStats {
         self.per_shard.iter().map(|s| s.lanes).sum()
     }
 
+    /// Requests retired early by the convergence controller, pool-wide.
+    pub fn early_stops(&self) -> usize {
+        self.per_shard.iter().map(|s| s.early_stops).sum()
+    }
+
+    /// Requests latched to their NFE floor, pool-wide.
+    pub fn degraded_requests(&self) -> usize {
+        self.per_shard.iter().map(|s| s.degraded_requests).sum()
+    }
+
+    /// Element-wise sum of the shards' delivered-NFE histograms.
+    pub fn delivered_nfe_hist(&self) -> [u64; NFE_HIST_BUCKETS] {
+        let mut out = [0u64; NFE_HIST_BUCKETS];
+        for s in &self.per_shard {
+            for (o, n) in out.iter_mut().zip(s.delivered_nfe_hist.iter()) {
+                *o += n;
+            }
+        }
+        out
+    }
+
     /// Element-wise sum of the shards' lane-occupancy histograms.
     pub fn lane_occ_hist(&self) -> [usize; LANE_OCC_BUCKETS] {
         let mut out = [0usize; LANE_OCC_BUCKETS];
@@ -317,7 +355,7 @@ impl PoolStats {
     /// by `era-serve --metrics <path>`.
     pub fn prometheus(&self) -> String {
         let mut p = PromText::new();
-        let counters: [(&str, &str, f64); 10] = [
+        let counters: [(&str, &str, f64); 12] = [
             ("era_requests_admitted_total", "Requests admitted across shards.", self.admitted() as f64),
             ("era_requests_finished_total", "Requests finished successfully.", self.finished() as f64),
             ("era_requests_cancelled_total", "Requests retired by cancellation or deadline.", self.cancelled() as f64),
@@ -328,6 +366,8 @@ impl PoolStats {
             ("era_img2img_requests_total", "Admitted img2img partial-trajectory requests.", self.workloads().1 as f64),
             ("era_stochastic_requests_total", "Admitted stochastic (churned) sampling requests.", self.workloads().2 as f64),
             ("era_host_bytes_transferred_total", "Bytes crossing the host-engine boundary (slabs, resident ops, gathers).", self.host_bytes_transferred() as f64),
+            ("era_early_stops_total", "Requests retired early by the convergence controller.", self.early_stops() as f64),
+            ("era_degraded_requests_total", "Requests latched to their NFE floor (cap squeeze-in or deadline pressure).", self.degraded_requests() as f64),
         ];
         for (name, help, v) in counters {
             p.family(name, help, "counter");
@@ -399,6 +439,19 @@ impl PoolStats {
             };
             p.value("era_lane_occupancy_dispatches_total", &[("members", &members)], n as f64);
         }
+        p.family(
+            "era_delivered_nfe_requests_total",
+            "Delivered per-request NFE distribution (label is the bucket's inclusive upper bound; last bucket absorbs larger).",
+            "counter",
+        );
+        for (i, &n) in self.delivered_nfe_hist().iter().enumerate() {
+            let nfe = if i < NFE_HIST_BOUNDS.len() {
+                NFE_HIST_BOUNDS[i].to_string()
+            } else {
+                format!(">{}", NFE_HIST_BOUNDS[NFE_HIST_BOUNDS.len() - 1])
+            };
+            p.value("era_delivered_nfe_requests_total", &[("nfe", &nfe)], n as f64);
+        }
 
         // Per-stage latency histograms (queue / solver_step / eval /
         // finalize), pooled across shards.
@@ -469,9 +522,9 @@ impl PoolStats {
         let [queue, solver, eval, _finalize] = self.stage_hists();
         format!(
             "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
-             evals={} rows={} occupancy={:.1} pad={:.1}% exec_busy={:.0}% inflight_slabs={} \
-             lanes={} p50={:.1}ms p99={:.1}ms queue={:.2}/{:.2}ms step={:.2}/{:.2}ms \
-             eval={:.2}/{:.2}ms",
+             early_stops={} degraded={} evals={} rows={} occupancy={:.1} pad={:.1}% \
+             exec_busy={:.0}% inflight_slabs={} lanes={} p50={:.1}ms p99={:.1}ms \
+             queue={}/{}ms step={}/{}ms eval={}/{}ms",
             self.shards(),
             self.placement,
             self.executors_per_shard,
@@ -479,6 +532,8 @@ impl PoolStats {
             self.finished(),
             self.cancelled(),
             self.rejected(),
+            self.early_stops(),
+            self.degraded_requests(),
             self.evals(),
             self.rows(),
             self.occupancy(),
@@ -488,12 +543,12 @@ impl PoolStats {
             self.lanes(),
             self.p50_ms,
             self.p99_ms,
-            1e3 * queue.quantile(0.5),
-            1e3 * queue.quantile(0.99),
-            1e3 * solver.quantile(0.5),
-            1e3 * solver.quantile(0.99),
-            1e3 * eval.quantile(0.5),
-            1e3 * eval.quantile(0.99),
+            fmt_quantile_ms(queue.quantile(0.5)),
+            fmt_quantile_ms(queue.quantile(0.99)),
+            fmt_quantile_ms(solver.quantile(0.5)),
+            fmt_quantile_ms(solver.quantile(0.99)),
+            fmt_quantile_ms(eval.quantile(0.5)),
+            fmt_quantile_ms(eval.quantile(0.99)),
         )
     }
 
@@ -532,6 +587,14 @@ impl PoolStats {
                 Json::Arr(self.lane_occ_hist().iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
             ("mean_delta_eps", Json::Num(self.mean_delta_eps())),
+            ("early_stops", Json::Num(self.early_stops() as f64)),
+            ("degraded_requests", Json::Num(self.degraded_requests() as f64)),
+            (
+                "delivered_nfe_hist",
+                Json::Arr(
+                    self.delivered_nfe_hist().iter().map(|&n| Json::Num(n as f64)).collect(),
+                ),
+            ),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
             (
@@ -757,6 +820,58 @@ mod tests {
             .lines()
             .filter(|l| !l.is_empty() && !l.starts_with('#'))
             .all(|l| l.starts_with("era_")));
+    }
+
+    #[test]
+    fn qos_counters_and_nfe_hist_merge_across_shards() {
+        // Merge rules: early-stop / degraded counters and the
+        // delivered-NFE histogram all sum element-wise across shards.
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.early_stops.fetch_add(2, Ordering::Relaxed);
+        b.early_stops.fetch_add(1, Ordering::Relaxed);
+        a.degraded_requests.fetch_add(1, Ordering::Relaxed);
+        a.observe_delivered_nfe(4);
+        a.observe_delivered_nfe(24);
+        b.observe_delivered_nfe(4);
+        b.observe_delivered_nfe(1000); // clamps into the overflow bucket
+        let s = PoolStats::collect("round-robin", &[&a, &b], 0, 1, 1);
+        assert_eq!(s.early_stops(), 3);
+        assert_eq!(s.degraded_requests(), 1);
+        let h = s.delivered_nfe_hist();
+        assert_eq!(h[2], 2, "two nfe=4 deliveries pooled");
+        assert_eq!(h[5], 1, "nfe=24 lands in the le=32 bucket");
+        assert_eq!(h[NFE_HIST_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<u64>(), 4);
+        assert!(s.summary().contains("early_stops=3 degraded=1"), "{}", s.summary());
+        let json = s.to_json();
+        assert_eq!(json.get("early_stops").as_usize(), Some(3));
+        assert_eq!(json.get("degraded_requests").as_usize(), Some(1));
+        assert_eq!(
+            json.get("delivered_nfe_hist").as_arr().map(|v| v.len()),
+            Some(NFE_HIST_BUCKETS)
+        );
+        let sj = s.per_shard[1].to_json();
+        assert_eq!(sj.get("early_stops").as_usize(), Some(1));
+        assert_eq!(sj.get("degraded_requests").as_usize(), Some(0));
+        let text = s.prometheus();
+        assert!(text.contains("# TYPE era_early_stops_total counter\n"), "{text}");
+        assert!(text.contains("era_early_stops_total 3\n"), "{text}");
+        assert!(text.contains("era_degraded_requests_total 1\n"), "{text}");
+        assert!(text.contains("era_delivered_nfe_requests_total{nfe=\"4\"} 2\n"), "{text}");
+        assert!(text.contains("era_delivered_nfe_requests_total{nfe=\">64\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn summary_renders_overflow_stage_quantiles_as_inf() {
+        // A stage observation past the last finite bound must surface
+        // as +Inf on the heartbeat line, not a made-up finite figure.
+        let a = Telemetry::new();
+        a.stage_queue.observe_seconds(STAGE_BOUNDS[STAGE_BOUNDS.len() - 1] * 2.0);
+        let s = PoolStats::collect("round-robin", &[&a], 0, 1, 1);
+        assert!(s.summary().contains("queue=+Inf/+Infms"), "{}", s.summary());
+        // Stages with no samples keep the plain zero rendering.
+        assert!(s.summary().contains("eval=0.00/0.00ms"), "{}", s.summary());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::RequestSpec;
+use crate::coordinator::{QosClass, RequestSpec};
 use crate::json::{self, Json};
 use crate::server::protocol::samples_from_json;
 use crate::tensor::Tensor;
@@ -132,6 +132,17 @@ impl Client {
         if task.is_stochastic() {
             pairs.push(("churn", Json::Num(task.churn)));
         }
+        // QoS fields likewise ride only when they deviate from the
+        // strict fixed-NFE default.
+        if spec.qos != QosClass::Strict {
+            pairs.push(("qos", Json::Str(spec.qos.label().into())));
+        }
+        if spec.min_nfe != 0 {
+            pairs.push(("min_nfe", Json::Num(spec.min_nfe as f64)));
+        }
+        if spec.conv_threshold != 0.0 {
+            pairs.push(("conv_threshold", Json::Num(spec.conv_threshold)));
+        }
         let resp = self.call(&Json::obj(pairs))?;
         let samples = samples_from_json(&resp)?;
         Ok(SampleOutcome {
@@ -139,6 +150,7 @@ impl Client {
             seconds: resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3,
             nfe: resp.get("nfe").as_usize().unwrap_or(0),
             cancelled: resp.get("cancelled").as_bool().unwrap_or(false),
+            early_stop: resp.get("early_stop").as_bool().unwrap_or(false),
             delta_eps: resp.get("delta_eps").as_f64(),
         })
     }
@@ -153,6 +165,9 @@ pub struct SampleOutcome {
     /// Network evaluations actually consumed (< budget when cancelled).
     pub nfe: usize,
     pub cancelled: bool,
+    /// True when the convergence controller retired the request before
+    /// its full fixed-NFE budget.
+    pub early_stop: bool,
     /// Final error-robust error measure (ERA solvers only).
     pub delta_eps: Option<f64>,
 }

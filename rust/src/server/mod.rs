@@ -56,6 +56,16 @@
 //! `churn` (stochastic ERA). All default to the plain unconditional
 //! trajectory.
 //!
+//! QoS fields (DESIGN.md §12): `qos` (`"strict"` default, `"balanced"`,
+//! `"besteffort"`), `min_nfe` (early-stop floor; 0 = the solver's
+//! structural minimum), and `conv_threshold` (relative `delta_eps`
+//! change per scored step below which the convergence controller
+//! retires the request early; 0 = fixed NFE). `strict` requests always
+//! run their full budget bitwise-reproducibly; non-strict requests with
+//! `conv_threshold` 0 inherit the server's `--conv-threshold` default.
+//! The reply's `early_stop` flag marks convergence-controller
+//! retirement (`nfe` then reports the evals actually consumed).
+//!
 //! Threads + channels, no async runtime (the offline registry closure
 //! carries no tokio): one acceptor, one handler thread per connection,
 //! all sharing the [`WorkerPool`] handle. Handler threads block on
@@ -71,7 +81,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::SubmitError;
+use crate::coordinator::{QosClass, SubmitError};
 use crate::json::Json;
 use crate::pool::WorkerPool;
 use protocol::{parse_request, result_to_json, Request};
@@ -83,11 +93,15 @@ pub struct ServerConfig {
     pub addr: String,
     /// Cap on simultaneously served connections.
     pub max_connections: usize,
+    /// Convergence threshold applied to non-strict requests that did
+    /// not set their own `conv_threshold` (0 disables the default:
+    /// such requests run fixed-NFE).
+    pub default_conv_threshold: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 64 }
+        ServerConfig { addr: "127.0.0.1:0".into(), max_connections: 64, default_conv_threshold: 0.0 }
     }
 }
 
@@ -123,11 +137,17 @@ impl Server {
                             let pool = pool.clone();
                             let live2 = live.clone();
                             let stop3 = stop2.clone();
+                            let conv_threshold = config.default_conv_threshold;
                             handlers.push(
                                 std::thread::Builder::new()
                                     .name("era-conn".into())
                                     .spawn(move || {
-                                        let _ = handle_connection(stream, &pool, &stop3);
+                                        let _ = handle_connection(
+                                            stream,
+                                            &pool,
+                                            &stop3,
+                                            conv_threshold,
+                                        );
                                         live2.fetch_sub(1, Ordering::Relaxed);
                                     })
                                     .expect("spawn handler"),
@@ -184,6 +204,7 @@ fn handle_connection(
     stream: TcpStream,
     pool: &WorkerPool,
     stop: &AtomicBool,
+    default_conv_threshold: f64,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     // Bounded reads so an idle connection cannot pin the acceptor's join
@@ -200,7 +221,7 @@ fn handle_connection(
                 if line.trim().is_empty() {
                     continue;
                 }
-                let response = dispatch(&line, pool);
+                let response = dispatch(&line, pool, default_conv_threshold);
                 writeln!(writer, "{}", response.to_string())?;
                 writer.flush()?;
             }
@@ -217,7 +238,9 @@ fn handle_connection(
 }
 
 /// Handle one protocol line. Split out for direct unit testing.
-pub fn dispatch(line: &str, pool: &WorkerPool) -> Json {
+/// `default_conv_threshold` is the server-level convergence default
+/// inherited by non-strict requests that did not set their own.
+pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> Json {
     match parse_request(line) {
         Err(e) => err_json(&format!("bad request: {e}")),
         Ok(Request::Ping) => {
@@ -256,7 +279,13 @@ pub fn dispatch(line: &str, pool: &WorkerPool) -> Json {
             ("ok", Json::Bool(true)),
             ("cancelled", Json::Bool(pool.cancel_tag(tag))),
         ]),
-        Ok(Request::Sample { spec, return_samples, tag }) => {
+        Ok(Request::Sample { mut spec, return_samples, tag }) => {
+            if spec.conv_threshold == 0.0
+                && spec.qos != QosClass::Strict
+                && default_conv_threshold > 0.0
+            {
+                spec.conv_threshold = default_conv_threshold;
+            }
             match pool.submit_tagged(spec, tag) {
                 Err(SubmitError::QueueFull) => err_json("busy: queue full"),
                 Err(SubmitError::Shutdown) => err_json("shutting down"),

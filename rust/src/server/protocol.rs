@@ -1,6 +1,6 @@
 //! Wire protocol: JSON-line <-> typed request/response mapping.
 
-use crate::coordinator::{RequestSpec, SamplingResult};
+use crate::coordinator::{QosClass, RequestSpec, SamplingResult};
 use crate::json::{self, Json};
 use crate::solvers::TaskSpec;
 use crate::tensor::Tensor;
@@ -56,6 +56,13 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 init,
                 churn: j.get("churn").as_f64().unwrap_or(0.0),
             };
+            let qos = match j.get("qos") {
+                Json::Null => d.qos,
+                v => {
+                    let s = v.as_str().ok_or("qos must be a string")?;
+                    QosClass::parse(s).ok_or_else(|| format!("unknown qos class '{s}'"))?
+                }
+            };
             let spec = RequestSpec {
                 dataset: j.get("dataset").as_str().unwrap_or(&d.dataset).to_string(),
                 solver: j.get("solver").as_str().unwrap_or(&d.solver).to_string(),
@@ -66,6 +73,10 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
                 deadline_ms: j.get("deadline_ms").as_usize().map(|v| v as u64),
                 task,
+                qos,
+                min_nfe: j.get("min_nfe").as_usize().unwrap_or(d.min_nfe),
+                conv_threshold: j.get("conv_threshold").as_f64().unwrap_or(d.conv_threshold),
+                degraded: false,
             };
             let return_samples = j.get("return_samples").as_bool().unwrap_or(false);
             let tag = j.get("tag").as_usize().map(|v| v as u64);
@@ -121,6 +132,7 @@ pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
         ("rows", Json::Num(res.samples.rows() as f64)),
         ("dim", Json::Num(res.samples.cols() as f64)),
         ("cancelled", Json::Bool(res.cancelled)),
+        ("early_stop", Json::Bool(res.early_stop)),
         ("queue_ms", Json::Num(1e3 * res.queue_seconds)),
         ("total_ms", Json::Num(1e3 * res.total_seconds)),
     ]);
@@ -227,6 +239,37 @@ mod tests {
     }
 
     #[test]
+    fn parses_qos_fields_with_defaults() {
+        // Absent QoS fields resolve to strict / fixed-NFE behavior.
+        let r = parse_request(r#"{"op":"sample","solver":"era"}"#).unwrap();
+        match r {
+            Request::Sample { spec, .. } => {
+                assert_eq!(spec.qos, QosClass::Strict);
+                assert_eq!(spec.min_nfe, 0);
+                assert_eq!(spec.conv_threshold, 0.0);
+                assert!(!spec.degraded);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let r = parse_request(
+            r#"{"op":"sample","solver":"era","qos":"besteffort","min_nfe":6,
+                "conv_threshold":0.05}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample { spec, .. } => {
+                assert_eq!(spec.qos, QosClass::BestEffort);
+                assert_eq!(spec.min_nfe, 6);
+                assert_eq!(spec.conv_threshold, 0.05);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // An unknown class is rejected, not silently defaulted.
+        assert!(parse_request(r#"{"op":"sample","qos":"turbo"}"#).is_err());
+        assert!(parse_request(r#"{"op":"sample","qos":3}"#).is_err());
+    }
+
+    #[test]
     fn init_rows_roundtrip() {
         let t = crate::tensor::Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0, 0.0, 9.0], 3, 2);
         let j = rows_to_json(&t);
@@ -275,6 +318,7 @@ mod tests {
             queue_seconds: 0.001,
             total_seconds: 0.05,
             cancelled: false,
+            early_stop: false,
             delta_eps: Some(0.25),
         };
         let j = result_to_json(&res, true);
@@ -285,6 +329,7 @@ mod tests {
         assert_eq!(back.get("cancelled").as_bool(), Some(false));
         // ERA diagnostics ride the frame when present.
         assert_eq!(back.get("delta_eps").as_f64(), Some(0.25));
+        assert_eq!(back.get("early_stop").as_bool(), Some(false));
         let t = samples_from_json(&back).unwrap();
         assert_eq!(t.as_slice(), res.samples.as_slice());
     }
@@ -298,6 +343,7 @@ mod tests {
             queue_seconds: 0.0,
             total_seconds: 0.0,
             cancelled: false,
+            early_stop: true,
             delta_eps: None,
         };
         let j = result_to_json(&res, false);
@@ -305,6 +351,8 @@ mod tests {
         assert_eq!(j.get("rows").as_usize(), Some(4));
         // Non-ERA results omit the diagnostics field entirely.
         assert!(j.get("delta_eps").as_f64().is_none());
+        // Convergence-controller retirement marker rides every frame.
+        assert_eq!(j.get("early_stop").as_bool(), Some(true));
     }
 
     #[test]
@@ -316,6 +364,7 @@ mod tests {
             queue_seconds: 0.0,
             total_seconds: 0.01,
             cancelled: true,
+            early_stop: false,
             delta_eps: None,
         };
         let j = result_to_json(&res, false);

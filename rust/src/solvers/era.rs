@@ -87,6 +87,24 @@ pub fn select_indices(i: usize, k: usize, p: f64) -> Vec<usize> {
     idx
 }
 
+/// Guarded form of [`select_indices_into`]: a non-finite exponent
+/// (NaN/Inf eps from the model poisons the `mean_row_dist` fold, so
+/// `delta_eps / lambda` stops being a number) falls back to the
+/// newest-k bases — the same indices `Selection::FixedLast` would
+/// pick. `NaN.powf` ordering is unspecified, so without the guard the
+/// Lagrange-basis choice becomes nondeterministic; with it, every
+/// caller (boxed solver, lane engine, resident path) degrades to the
+/// identical deterministic selection and batch-mates stay untouched.
+pub fn select_indices_guarded(idx: &mut Vec<usize>, i: usize, k: usize, p: f64) {
+    if p.is_finite() {
+        select_indices_into(idx, i, k, p);
+    } else {
+        assert!(k >= 1 && i + 1 >= k, "buffer too short: i={i}, k={k}");
+        idx.clear();
+        idx.extend((i + 1 - k)..=i);
+    }
+}
+
 /// In-place form of [`select_indices`]: fills `idx` (cleared first) so
 /// the per-step selection reuses one scratch vector.
 pub fn select_indices_into(idx: &mut Vec<usize>, i: usize, k: usize, p: f64) {
@@ -271,7 +289,7 @@ impl EraSolver {
                 }
                 _ => {
                     let p = self.exponent();
-                    select_indices_into(&mut self.idx_buf, bi, self.k, p);
+                    select_indices_guarded(&mut self.idx_buf, bi, self.k, p);
                 }
             }
             self.trace_meta.push((self.i, self.delta_eps));
@@ -476,6 +494,22 @@ mod tests {
                     assert!(idx[0] <= i);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn select_indices_guarded_falls_back_to_newest_k() {
+        // Finite exponents are passed through untouched...
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        select_indices_guarded(&mut a, 12, 4, 2.0);
+        select_indices_into(&mut b, 12, 4, 2.0);
+        assert_eq!(a, b);
+        // ...while NaN / Inf degrade to the FixedLast indices, always
+        // the same ones (deterministic under a poisoned error signal).
+        for p in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            select_indices_guarded(&mut a, 12, 4, p);
+            assert_eq!(a, vec![9, 10, 11, 12], "p={p}");
         }
     }
 

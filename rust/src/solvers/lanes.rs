@@ -56,9 +56,14 @@ use crate::runtime::resident::{
 };
 use crate::solvers::adams_explicit::{drift_into, AB4};
 use crate::solvers::ddpm::ANCESTRAL_STREAM;
-use crate::solvers::era::{select_indices_into, Selection, CHURN_STREAM};
+use crate::solvers::era::{select_indices_guarded, Selection, CHURN_STREAM};
 use crate::solvers::{EvalRequest, SolverKind, UNCOND};
 use crate::tensor::Tensor;
+
+/// Consecutive scored steps whose relative `delta_eps` change must sit
+/// below a member's threshold before the convergence controller
+/// retires it (the "short window" of the trend predicate).
+const CONV_WINDOW: u8 = 2;
 
 /// Everything admission resolves before a request enters a lane — the
 /// lane-engine twin of building a boxed solver from a
@@ -75,6 +80,13 @@ pub struct LaneAdmission {
     pub guided: Option<(f32, usize)>,
     /// Request seed (feeds the member's ancestral/churn stream).
     pub seed: u64,
+    /// Convergence-controller threshold on the relative `delta_eps`
+    /// change (0 = controller disabled; the fixed-NFE path is then
+    /// bitwise untouched). ERA lanes only.
+    pub conv_threshold: f64,
+    /// NFE floor for early stop / QoS degradation (0 = no floor beyond
+    /// the solver's structural minimum).
+    pub min_nfe: usize,
 }
 
 /// One request's row group inside a lane.
@@ -93,6 +105,17 @@ pub struct Member {
     scale: f32,
     class: usize,
     rng: Rng,
+    /// Convergence controller (row-local; never touches lane numerics).
+    /// Relative-change threshold on `delta_eps` (0 = disabled).
+    conv_threshold: f64,
+    /// Early-stop NFE floor (already folded with the solver minimum).
+    min_nfe: usize,
+    /// `delta_eps` at the previous scored step (NaN = none yet).
+    prev_delta: f64,
+    /// Consecutive scored steps with relative change below threshold.
+    conv_streak: u8,
+    /// QoS degradation latch: finish as soon as `nfe >= min_nfe`.
+    degraded: bool,
 }
 
 /// A retired member's outcome, handed back to the scheduler.
@@ -103,6 +126,9 @@ pub struct Removed {
     pub nfe: usize,
     /// Last error measure — ERA lanes only.
     pub delta_eps: Option<f64>,
+    /// Retired by the convergence controller before exhausting its NFE
+    /// budget (the delivered iterate took the closing DDIM jump).
+    pub early_stop: bool,
 }
 
 /// Lane identity: members must agree on all of this to step together.
@@ -741,9 +767,9 @@ fn era_advance(lane: &mut Lane) {
                     idx.extend((bi + 1 - *k)..=bi);
                 }
                 Selection::ErrorRobust { lambda } => {
-                    select_indices_into(idx, bi, *k, lane.members[0].delta_eps / *lambda);
+                    select_indices_guarded(idx, bi, *k, lane.members[0].delta_eps / *lambda);
                 }
-                Selection::ConstantScale { scale } => select_indices_into(idx, bi, *k, *scale),
+                Selection::ConstantScale { scale } => select_indices_guarded(idx, bi, *k, *scale),
             }
             let w = view.lagrange_weights_into(*i + 1, idx, abs);
             fused::zero(pred.as_mut_slice());
@@ -817,10 +843,10 @@ fn era_split_groups(lane: &mut Lane) -> Option<Vec<Vec<usize>>> {
         return None;
     }
     let bi = eps.len() - 1;
-    select_indices_into(idx, bi, *k, lane.members[0].delta_eps / *lambda);
+    select_indices_guarded(idx, bi, *k, lane.members[0].delta_eps / *lambda);
     let mut groups: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
     for m in lane.members.iter().skip(1) {
-        select_indices_into(idx_b, bi, *k, m.delta_eps / *lambda);
+        select_indices_guarded(idx_b, bi, *k, m.delta_eps / *lambda);
         if idx_b.as_slice() == idx.as_slice() {
             continue;
         }
@@ -1124,6 +1150,28 @@ fn dpm_deliver(lane: &mut Lane, pool: &mut TensorPool, eps: Tensor) {
     }
 }
 
+/// Feed one freshly scored `delta_eps` into a member's convergence
+/// trend. Pure bookkeeping — it never touches lane numerics, and a
+/// zero threshold keeps the streak permanently at zero, so the
+/// fixed-NFE path is bitwise unaffected.
+fn observe_delta(m: &mut Member) {
+    if m.conv_threshold <= 0.0 {
+        return;
+    }
+    let prev = m.prev_delta;
+    m.prev_delta = m.delta_eps;
+    if !prev.is_finite() || !m.delta_eps.is_finite() {
+        m.conv_streak = 0;
+        return;
+    }
+    let rel = (m.delta_eps - prev).abs() / prev.abs().max(1e-12);
+    if rel < m.conv_threshold {
+        m.conv_streak = m.conv_streak.saturating_add(1);
+    } else {
+        m.conv_streak = 0;
+    }
+}
+
 fn era_deliver(lane: &mut Lane, eps_new: Tensor) {
     let c = lane.cols;
     let Kernel::Era { eps, pred, has_pred, .. } = &mut lane.kernel else {
@@ -1140,6 +1188,7 @@ fn era_deliver(lane: &mut Lane, eps_new: Tensor) {
                 m.rows,
                 c,
             ) as f64;
+            observe_delta(m);
         }
     }
     eps.push(eps_new);
@@ -1313,6 +1362,11 @@ impl LaneEngine {
             scale,
             class,
             rng: member_rng(&adm.kind, adm.seed),
+            conv_threshold: adm.conv_threshold,
+            min_nfe: adm.min_nfe,
+            prev_delta: f64::NAN,
+            conv_streak: 0,
+            degraded: false,
         };
         let eval_rows = rows * if guided { 2 } else { 1 };
         let join = if adm.view.is_some() {
@@ -1536,7 +1590,7 @@ impl LaneEngine {
                     build_request(lane);
                 }
             }
-            Removed { slot, samples, nfe: m.nfe, delta_eps: delta }
+            Removed { slot, samples, nfe: m.nfe, delta_eps: delta, early_stop: false }
         };
         self.slot_lane.remove(&slot);
         if emptied {
@@ -1545,6 +1599,99 @@ impl LaneEngine {
             recycle_lane(lane, pool);
             free.push(id);
         }
+        removed
+    }
+
+    /// Member slots whose convergence predicate holds after the last
+    /// delivery: the `delta_eps` trend stayed below the member's
+    /// relative threshold for [`CONV_WINDOW`] consecutive scored steps
+    /// (or a QoS degradation latched), and the member's NFE floor is
+    /// met. ERA lanes only. Resident lanes are reported too — the
+    /// scheduler must devolve them before calling
+    /// [`LaneEngine::finish_member_early`], which needs the host-side
+    /// eps history.
+    pub fn converged_members(&self, id: usize) -> Vec<usize> {
+        let Some(lane) = self.lanes.get(id).and_then(|l| l.as_ref()) else {
+            return Vec::new();
+        };
+        if lane.done || !matches!(lane.kernel, Kernel::Era { .. }) {
+            return Vec::new();
+        }
+        if lane.resident.is_none() {
+            let Kernel::Era { eps, .. } = &lane.kernel else { unreachable!() };
+            if eps.is_empty() {
+                return Vec::new();
+            }
+        }
+        lane.members
+            .iter()
+            .filter(|m| {
+                m.nfe >= m.min_nfe.max(1)
+                    && (m.degraded || (m.conv_threshold > 0.0 && m.conv_streak >= CONV_WINDOW))
+            })
+            .map(|m| m.slot)
+            .collect()
+    }
+
+    /// QoS degradation: latch `slot`'s member to finish as soon as its
+    /// NFE floor is met, regardless of the convergence trend. ERA
+    /// lanes only (the early finish interpolates the buffered noise
+    /// history); returns whether the latch newly applied.
+    pub fn degrade_member(&mut self, slot: usize) -> bool {
+        let Some(&id) = self.slot_lane.get(&slot) else {
+            return false;
+        };
+        let lane = self.lanes[id].as_mut().expect("degrade in empty lane");
+        if lane.done || !matches!(lane.kernel, Kernel::Era { .. }) {
+            return false;
+        }
+        let m = lane
+            .members
+            .iter_mut()
+            .find(|m| m.slot == slot)
+            .expect("slot not in lane");
+        if m.degraded {
+            return false;
+        }
+        m.degraded = true;
+        true
+    }
+
+    /// Retire a converged member early: close its trajectory with one
+    /// DDIM jump from the current grid point to the endpoint using its
+    /// span of the newest buffered noise estimate (DDIM transitions
+    /// with a fixed eps compose exactly, so a converged estimate lands
+    /// within the predictor's own error of the fixed-NFE endpoint),
+    /// then compact the rows out via [`LaneEngine::remove_member`].
+    /// Survivors' bits are untouched.
+    pub fn finish_member_early(&mut self, id: usize, slot: usize) -> Removed {
+        let jumped = {
+            let lane = self.lanes[id].as_ref().expect("early finish in empty lane");
+            debug_assert!(lane.resident.is_none(), "early finish of a resident lane");
+            let view = lane.view.as_ref().expect("era lane without a view");
+            let m = lane
+                .members
+                .iter()
+                .find(|m| m.slot == slot)
+                .expect("slot not in lane");
+            let Kernel::Era { i, eps, .. } = &lane.kernel else {
+                unreachable!("early finish on a non-ERA lane")
+            };
+            let newest = eps.last().expect("early finish before first eval");
+            let last = view.grid().len() - 1;
+            let (a, b) = view.sched().ddim_coeffs(view.t(*i), view.t(last));
+            let mut out = lane.x.slice_rows(m.start, m.rows);
+            fused::affine_inplace(
+                out.as_mut_slice(),
+                a as f32,
+                b as f32,
+                newest.row_span(m.start, m.rows),
+            );
+            out
+        };
+        let mut removed = self.remove_member(id, slot, None);
+        removed.samples = jumped;
+        removed.early_stop = true;
         removed
     }
 
@@ -1564,6 +1711,7 @@ impl LaneEngine {
                 samples: lane.x.slice_rows(m.start, m.rows),
                 nfe: m.nfe,
                 delta_eps: if is_era { Some(m.delta_eps) } else { None },
+                early_stop: false,
             })
             .collect();
         for m in &lane.members {
@@ -1603,7 +1751,7 @@ impl LaneEngine {
             || lane.view.is_none()
             || lane.pending.is_some()
             || lane.resident.is_some()
-            || lane.members.iter().any(|m| m.churn > 0.0)
+            || lane.members.iter().any(|m| m.churn > 0.0 || m.conv_threshold > 0.0 || m.degraded)
         {
             return false;
         }
@@ -1680,19 +1828,19 @@ impl LaneEngine {
                             idx.extend((bi + 1 - *k)..=bi);
                         }
                         Selection::ErrorRobust { lambda } => {
-                            select_indices_into(idx, bi, *k, members[0].delta_eps / *lambda);
+                            select_indices_guarded(idx, bi, *k, members[0].delta_eps / *lambda);
                             // The host path would split divergent
                             // members here (`era_split_groups`); gather
                             // the lane back instead and let it.
                             for m in members.iter().skip(1) {
-                                select_indices_into(idx_b, bi, *k, m.delta_eps / *lambda);
+                                select_indices_guarded(idx_b, bi, *k, m.delta_eps / *lambda);
                                 if idx_b.as_slice() != idx.as_slice() {
                                     return ResidentCmd::Devolve;
                                 }
                             }
                         }
                         Selection::ConstantScale { scale } => {
-                            select_indices_into(idx, bi, *k, *scale)
+                            select_indices_guarded(idx, bi, *k, *scale)
                         }
                     }
                     let w = view.lagrange_weights_into(*i + 1, idx, abs);
@@ -1749,6 +1897,7 @@ impl LaneEngine {
                             acc += *d;
                         }
                         m.delta_eps = ((acc / m.rows as f64) as f32) as f64;
+                        observe_delta(m);
                     }
                 }
                 if let Kernel::Ddim { i } = &mut lane.kernel {
@@ -1822,6 +1971,8 @@ mod tests {
             churn: res.churn,
             guided: res.guided,
             seed,
+            conv_threshold: 0.0,
+            min_nfe: 0,
         }
     }
 
@@ -1932,6 +2083,8 @@ mod tests {
             churn: 0.0,
             guided: None,
             seed,
+            conv_threshold: 0.0,
+            min_nfe: 0,
         }
     }
 
@@ -1952,6 +2105,8 @@ mod tests {
             churn: 0.0,
             guided: None,
             seed,
+            conv_threshold: 0.0,
+            min_nfe: 0,
         }
     }
 

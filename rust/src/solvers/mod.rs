@@ -449,6 +449,30 @@ impl SolverKind {
         }
     }
 
+    /// Enforce the [`SolverKind::min_nfe`] bound on a requested budget.
+    /// Single validation point for the serving path
+    /// (`coordinator/request.rs`) and the experiment sweep, so the
+    /// per-request NFE floor cannot drift between the two.
+    pub fn validate_nfe(&self, nfe: usize) -> Result<(), String> {
+        if nfe < self.min_nfe() {
+            return Err(format!(
+                "nfe {} below minimum {} for solver '{}'",
+                nfe,
+                self.min_nfe(),
+                self.label()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Effective early-stop floor for a request: the larger of the
+    /// caller's `min_nfe` and this kind's structural minimum, never
+    /// above the full budget. The convergence controller and QoS
+    /// degradation both bottom out here.
+    pub fn nfe_floor(&self, requested_min: usize, nfe: usize) -> usize {
+        requested_min.max(self.min_nfe()).min(nfe)
+    }
+
     /// Build a solver instance for one request.
     ///
     /// `x0` is the prior noise batch, `grid` the decreasing timestep

@@ -10,13 +10,13 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use era_solver::coordinator::service::{MockBank, ModelBank};
-use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec, SubmitError};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, QosClass, RequestSpec, SubmitError};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::server::client::Client;
 use era_solver::server::{Server, ServerConfig};
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
-use era_solver::solvers::TaskSpec;
+use era_solver::solvers::{EpsModel, TaskSpec};
 use era_solver::tensor::Tensor;
 
 /// A model bank with a fixed per-evaluation latency.
@@ -393,6 +393,105 @@ fn global_admission_cap_rejects_and_recovers() {
     first.wait().unwrap();
     // Load drained: admission opens again.
     assert!(pool.submit(spec(8, 10, 3)).is_ok());
+    pool.shutdown();
+}
+
+/// A constant-eps denoiser: ERA's Lagrange prediction of a constant is
+/// exact, so `delta_eps` collapses immediately — the canonical
+/// converging workload for the QoS/adaptive-NFE paths.
+struct ConstEps;
+
+impl EpsModel for ConstEps {
+    fn eval(&self, x: &Tensor, _t: &[f32]) -> Tensor {
+        Tensor::from_vec(vec![0.25; x.rows() * x.cols()], x.rows(), x.cols())
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+}
+
+fn paced_const_pool(per_eval_ms: u64, max_inflight_rows: usize) -> WorkerPool {
+    let sched = VpSchedule::default();
+    let bank: Arc<dyn ModelBank> = Arc::new(PacedBank {
+        inner: MockBank::new(sched).with("const", Box::new(ConstEps)),
+        per_eval: Duration::from_millis(per_eval_ms),
+    });
+    WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards: 1,
+            placement: PlacementPolicy::RoundRobin,
+            shard: CoordinatorConfig::default(),
+            max_inflight_rows,
+        },
+    )
+}
+
+fn qos_spec(qos: QosClass, n: usize, seed: u64) -> RequestSpec {
+    RequestSpec {
+        dataset: "const".into(),
+        solver: "era".into(),
+        n_samples: n,
+        nfe: 24,
+        seed,
+        qos,
+        ..Default::default()
+    }
+}
+
+/// QoS over-cap acceptance scenario (DESIGN.md §12): at the global row
+/// cap a strict request is rejected outright, while a besteffort
+/// request squeezes in on its floor charge, is latched degraded,
+/// completes at the era NFE floor with the early-stop marker, and the
+/// new counters surface in the Prometheus page and the stats JSON.
+#[test]
+fn over_cap_besteffort_degrades_to_floor_while_strict_rejects() {
+    let pool = paced_const_pool(10, 12);
+
+    // Pins 8 of the 12-row cap for ~240ms (24 paced evaluations).
+    let strict = pool.submit(qos_spec(QosClass::Strict, 8, 1)).unwrap();
+
+    // A second strict 8-row request pays worst case: 16 > 12 -> reject.
+    match pool.submit(qos_spec(QosClass::Strict, 8, 2)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {:?}", other.map(|t| t.shard)),
+    }
+
+    // Besteffort is charged its floor (ceil(8*4/24) = 2 rows): 10 <= 12
+    // fits, but its worst case (16 > 12) does not -> admitted degraded.
+    let best = pool.submit(qos_spec(QosClass::BestEffort, 8, 3)).unwrap();
+
+    let b = best.wait().unwrap();
+    assert!(!b.cancelled);
+    assert!(b.early_stop, "degraded besteffort must carry the early-stop marker");
+    assert_eq!(b.nfe, 4, "degraded besteffort retires at the era NFE floor, got {}", b.nfe);
+    assert_eq!(b.samples.rows(), 8);
+    assert!(b.samples.all_finite());
+
+    let s = strict.wait().unwrap();
+    assert!(!s.cancelled && !s.early_stop);
+    assert_eq!(s.nfe, 24, "strict keeps its full fixed budget");
+
+    let stats = pool.stats();
+    assert_eq!(stats.pool_rejected, 1);
+    assert_eq!(stats.finished(), 2);
+    assert_eq!(stats.early_stops(), 1);
+    assert_eq!(stats.degraded_requests(), 1);
+    assert_eq!(stats.inflight_rows(), 0, "admission gauges must drain");
+
+    let prom = stats.prometheus();
+    assert!(prom.contains("era_early_stops_total 1\n"), "{prom}");
+    assert!(prom.contains("era_degraded_requests_total 1\n"), "{prom}");
+    assert!(prom.contains("era_delivered_nfe_requests_total{nfe=\"4\"} 1\n"), "{prom}");
+    assert!(prom.contains("era_delivered_nfe_requests_total{nfe=\"32\"} 1\n"), "{prom}");
+
+    let json = stats.to_json();
+    assert_eq!(json.get("early_stops").as_usize(), Some(1));
+    assert_eq!(json.get("degraded_requests").as_usize(), Some(1));
+    let hist = json.get("delivered_nfe_hist").as_arr().expect("hist array");
+    let total: f64 = hist.iter().filter_map(|v| v.as_f64()).sum();
+    assert_eq!(total as u64, 2, "both deliveries observed in the NFE histogram");
     pool.shutdown();
 }
 

@@ -45,6 +45,8 @@ fn admission(
         churn: res.churn,
         guided: res.guided,
         seed,
+        conv_threshold: 0.0,
+        min_nfe: 0,
     }
 }
 
@@ -304,6 +306,187 @@ fn golden_era_split_on_divergence_under_model_error() {
             assert_eq!(out[&slot].samples.as_slice(), want.as_slice(), "{name} slot {slot}");
             assert_eq!(out[&slot].nfe, want_nfe);
             assert_eq!(out[&slot].delta_eps, want_delta);
+        }
+    }
+}
+
+/// Wrapper whose conditional head poisons rows of one guide class with
+/// NaN — a stand-in for a model producing non-finite eps under rare
+/// inputs. Unconditional rows and other classes pass through clean.
+struct NanClassEps {
+    inner: AnalyticGmm,
+    poison_class: f32,
+}
+
+impl EpsModel for NanClassEps {
+    fn eval(&self, x: &Tensor, t: &[f32]) -> Tensor {
+        self.inner.eval(x, t)
+    }
+
+    fn eval_cond(&self, x: &Tensor, t: &[f32], c: &[f32]) -> Tensor {
+        let mut out = self.inner.eval_cond(x, t, c);
+        for (r, &cv) in c.iter().enumerate() {
+            if cv == self.poison_class {
+                for v in out.row_mut(r) {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn golden_nan_member_degrades_deterministically_and_spares_batch_mates() {
+    // One lane member's eps goes NaN mid-trajectory; its error-measure
+    // exponent is then non-finite and the guarded ERA selection must
+    // fall back to the newest-k window deterministically — on both the
+    // lane and the boxed path, so the two still agree bit-for-bit —
+    // while the clean batch-mate's rows stay finite and untouched.
+    let sched = VpSchedule::default();
+    let model = NanClassEps { inner: AnalyticGmm::gmm8(sched), poison_class: 7.0 };
+    let kind = SolverKind::parse("era-4@0.3").unwrap();
+    let plan = plan_for(&kind, 14);
+    let clean = TaskSpec { guidance_scale: 1.5, guide_class: 2, ..Default::default() };
+    let poisoned = TaskSpec { guidance_scale: 1.5, guide_class: 7, ..Default::default() };
+    let mut eng = LaneEngine::new(0);
+    eng.admit(0, "gmm8", admission(&kind, plan.clone(), 3, 71, &clean));
+    eng.admit(1, "gmm8", admission(&kind, plan.clone(), 2, 72, &poisoned));
+    let out = run_engine(&mut eng, &model);
+    for (slot, rows, seed, task) in [(0usize, 3usize, 71u64, &clean), (1, 2, 72, &poisoned)] {
+        let (want, want_nfe, want_delta) =
+            reference(&kind, plan.clone(), rows, seed, task, &model);
+        let got = &out[&slot];
+        // Bit-pattern comparison: NaN != NaN would fail assert_eq even
+        // on identical trajectories.
+        assert_eq!(
+            f32_bits(got.samples.as_slice()),
+            f32_bits(want.as_slice()),
+            "slot {slot} diverged from its boxed reference"
+        );
+        assert_eq!(got.nfe, want_nfe, "slot {slot} nfe");
+        match (got.delta_eps, want_delta) {
+            (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "slot {slot} delta"),
+            (a, b) => assert_eq!(a.is_none(), b.is_none(), "slot {slot} delta presence"),
+        }
+    }
+    // The clean member is insulated from its poisoned batch-mate.
+    assert!(out[&0].samples.as_slice().iter().all(|v| v.is_finite()));
+    assert!(out[&1].samples.as_slice().iter().any(|v| v.is_nan()));
+}
+
+#[test]
+fn prop_early_stop_compaction_never_changes_survivor_bits() {
+    // Property run for the convergence controller's retirement path:
+    // random ERA configs and member mixes; one member is QoS-degraded
+    // at a random round, retires through `finish_member_early` (closing
+    // DDIM jump + compaction), and every survivor must still finish
+    // bitwise identical to its boxed fixed-NFE solver.
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let kinds = ["era", "era-3@0.2", "era-6@5"];
+    let mut prng = Rng::new(0xC0FFEE);
+    for case in 0..20 {
+        let kind = SolverKind::parse(kinds[prng.below(kinds.len() as u64) as usize]).unwrap();
+        let nfe = 10 + prng.below(6) as usize;
+        let plan = plan_for(&kind, nfe);
+        let task = TaskSpec::default();
+        let floor = 2 + prng.below(4) as usize;
+        let n_members = 2 + prng.below(3) as usize;
+        let members: Vec<(usize, usize, u64)> = (0..n_members)
+            .map(|i| (i, 1 + prng.below(4) as usize, 900 * case as u64 + i as u64))
+            .collect();
+        let mut eng = LaneEngine::new(0);
+        for &(slot, rows, seed) in &members {
+            let mut adm = admission(&kind, plan.clone(), rows, seed, &task);
+            adm.min_nfe = floor;
+            eng.admit(slot, "gmm8", adm);
+        }
+        let victim = members[prng.below(n_members as u64) as usize].0;
+        let degrade_round = 1 + prng.below((nfe - 1) as u64) as usize;
+        let mut stopped: Option<Removed> = None;
+        let mut rounds = 0usize;
+        let mut affected = Vec::new();
+        loop {
+            let mut any_pending = false;
+            for id in 0..eng.lane_slots() {
+                if eng.has_lane(id) && !eng.is_done(id) && eng.pending(id).is_none() {
+                    affected.clear();
+                    eng.step_lane(id, &mut affected);
+                }
+                if eng.has_lane(id) && eng.pending(id).is_some() {
+                    any_pending = true;
+                }
+            }
+            if !any_pending {
+                break;
+            }
+            for id in 0..eng.lane_slots() {
+                if eng.has_lane(id) && eng.pending(id).is_some() {
+                    deliver_one(&mut eng, id, &model);
+                }
+            }
+            rounds += 1;
+            // Latch the victim at its random round; the controller then
+            // retires it at the first post-deliver check at/after the
+            // floor.
+            if rounds == degrade_round && stopped.is_none() {
+                assert!(eng.degrade_member(victim), "case {case}: degrade refused");
+            }
+            if stopped.is_none() {
+                if let Some(lane) = eng.lane_of_slot(victim) {
+                    let conv = eng.converged_members(lane);
+                    assert!(
+                        conv.iter().all(|&s| s == victim),
+                        "case {case}: non-degraded member reported converged"
+                    );
+                    if conv.contains(&victim) {
+                        stopped = Some(eng.finish_member_early(lane, victim));
+                    }
+                }
+            }
+            assert!(rounds < 200, "case {case}: runaway");
+        }
+        let got = stopped.unwrap_or_else(|| panic!("case {case}: victim never retired early"));
+        assert!(got.early_stop, "case {case}: early-stop marker missing");
+        assert_eq!(
+            got.nfe,
+            degrade_round.max(floor),
+            "case {case}: degraded member must retire at the first checked step at/after its floor"
+        );
+        assert!(got.samples.as_slice().iter().all(|v| v.is_finite()), "case {case}");
+        // Collect finished lanes; every survivor must be bit-exact.
+        let mut out = HashMap::new();
+        for id in 0..eng.lane_slots() {
+            if eng.has_lane(id) && eng.is_done(id) {
+                for r in eng.finish_lane(id) {
+                    out.insert(r.slot, r);
+                }
+            }
+        }
+        for &(slot, rows, seed) in &members {
+            if slot == victim {
+                continue;
+            }
+            let (want, want_nfe, want_delta) =
+                reference(&kind, plan.clone(), rows, seed, &task, &model);
+            let sv = out.get(&slot).unwrap_or_else(|| panic!("case {case}: {slot} missing"));
+            assert!(!sv.early_stop, "case {case}: survivor {slot} marked early_stop");
+            assert_eq!(
+                sv.samples.as_slice(),
+                want.as_slice(),
+                "case {case}: survivor {slot} perturbed by early-stop compaction"
+            );
+            assert_eq!(sv.nfe, want_nfe, "case {case} survivor {slot} nfe");
+            assert_eq!(sv.delta_eps, want_delta, "case {case} survivor {slot} delta_eps");
         }
     }
 }
