@@ -18,7 +18,7 @@ use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, ModelBank, QosClas
 use era_solver::experiments::report::{write_markdown_table, Table};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
-use era_solver::server::client::{generate_load, Client};
+use era_solver::server::client::{generate_load, generate_load_with, Client, LoadOptions};
 use era_solver::server::{Server, ServerConfig};
 use era_solver::solvers::TaskSpec;
 
@@ -29,6 +29,8 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "batch", value: Some("n"), help: "samples per request (default: 64)" },
     OptSpec { name: "concurrency", value: Some("n"), help: "load-gen workers (default: 8)" },
     OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
+    OptSpec { name: "connections", value: Some("n"), help: "load-gen connections, one per worker (default: = concurrency)" },
+    OptSpec { name: "reuse", value: Some("0|1"), help: "1: each worker keeps one connection across its requests; 0: reconnect per request (default: 1)" },
     OptSpec { name: "shards", value: Some("n"), help: "pool shards (default: 1)" },
     OptSpec { name: "executors", value: Some("n"), help: "engine executors per shard (default: 1)" },
     OptSpec { name: "pipeline-depth", value: Some("n"), help: "dispatch rounds in flight per shard (default: 2)" },
@@ -93,6 +95,8 @@ fn run() -> Result<(), String> {
     let batch = args.usize_or("batch", 64)?;
     let concurrency = args.usize_or("concurrency", 8)?;
     let requests = args.usize_or("requests", 6)?;
+    let connections = args.usize_or("connections", concurrency)?.max(1);
+    let reuse = args.usize_or("reuse", 1)? != 0;
     let shards = args.usize_or("shards", 1)?.max(1);
     let executors = args.usize_or("executors", 1)?.max(1);
     let pipeline_depth = args.usize_or("pipeline-depth", 2)?.max(1);
@@ -178,10 +182,16 @@ fn run() -> Result<(), String> {
         conv_threshold,
         ..Default::default()
     };
-    let report = generate_load(addr, &spec, concurrency, requests);
+    let report = generate_load_with(
+        addr,
+        &spec,
+        &LoadOptions { concurrency: connections, requests_per_worker: requests, reuse },
+    );
     println!(
-        "\nload: {} requests ({} errors) in {:.2}s -> {:.0} samples/s, \
+        "\nload ({} conns, reuse={}): {} requests ({} errors) in {:.2}s -> {:.0} samples/s, \
          p50 {:.0}ms p99 {:.0}ms",
+        connections,
+        reuse,
         report.requests,
         report.errors,
         report.wall_seconds,

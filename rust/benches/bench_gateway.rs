@@ -1,0 +1,232 @@
+//! Connection-scaling bench: the epoll gateway vs the blocking
+//! thread-per-connection server, same wire protocol, same pool, same
+//! closed-loop load — but the gateway carries **4x the held-open
+//! connection count** while it serves.
+//!
+//! Each phase opens a herd of idle keep-alive connections (pinged once
+//! so the accept has completed), then runs the load generator twice and
+//! keeps the better p99 (shared CI runners are noisy). CI gates
+//! (ISSUE: readiness gateway):
+//!
+//! - `conn_ratio`  — gateway held connections / legacy held connections,
+//!   4.0 by construction; regresses if the gateway cannot even hold them.
+//! - `p99_parity`  — legacy p99 / gateway p99 at that 4x count; >= 0.5
+//!   means the gateway's p99 is no worse than 2x the legacy server's
+//!   while multiplexing 4x the connections on 2 io threads.
+//! - `errors`      — total failed requests across both phases; must be 0.
+//! - `gauge_ok`    — 1.0 when `open_connections` telemetry saw the
+//!   whole gateway herd.
+//!
+//! Absolute p99s ride along uncommitted for trend tracking.
+//!
+//! ```text
+//! cargo bench --bench bench_gateway               # 60 vs 240 conns
+//! ERA_BENCH_QUICK=1 cargo bench --bench bench_gateway   # 25 vs 100
+//! ```
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    println!("bench_gateway: skipped (the readiness gateway requires Linux epoll)");
+}
+
+#[cfg(target_os = "linux")]
+fn main() {
+    linux::run();
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use era_solver::coordinator::service::{MockBank, ModelBank};
+    use era_solver::coordinator::{CoordinatorConfig, RequestSpec};
+    use era_solver::obs::{BenchReport, Direction};
+    use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
+    use era_solver::server::client::{generate_load, LoadReport};
+    use era_solver::server::gateway::{Gateway, GatewayConfig};
+    use era_solver::server::{Server, ServerConfig};
+    use era_solver::solvers::eps_model::AnalyticGmm;
+    use era_solver::solvers::schedule::VpSchedule;
+    use era_solver::tensor::Tensor;
+
+    /// MockBank wrapper with a fixed latency per evaluation — a stable
+    /// per-request service-time floor (NFE x 1ms) so the p99s being
+    /// compared are dominated by serving behaviour, not by noise around
+    /// a microsecond-scale analytic eval.
+    struct LatencyBank {
+        inner: MockBank,
+        per_eval: Duration,
+    }
+
+    impl ModelBank for LatencyBank {
+        fn sched(&self) -> VpSchedule {
+            self.inner.sched()
+        }
+
+        fn dim(&self, dataset: &str) -> Result<usize, String> {
+            self.inner.dim(dataset)
+        }
+
+        fn eval(&self, dataset: &str, x: &Tensor, t: &[f32]) -> Result<Tensor, String> {
+            std::thread::sleep(self.per_eval);
+            self.inner.eval(dataset, x, t)
+        }
+    }
+
+    const NFE: usize = 5;
+    const ROWS: usize = 8;
+    const WORKERS: usize = 4;
+    const REQUESTS_PER_WORKER: usize = 5;
+
+    fn pool() -> Arc<WorkerPool> {
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> = Arc::new(LatencyBank {
+            inner: MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))),
+            per_eval: Duration::from_millis(1),
+        });
+        Arc::new(WorkerPool::start(
+            bank,
+            PoolConfig {
+                shards: 1,
+                placement: PlacementPolicy::RoundRobin,
+                shard: CoordinatorConfig::default(),
+                max_inflight_rows: 0,
+            },
+        ))
+    }
+
+    fn spec() -> RequestSpec {
+        RequestSpec { n_samples: ROWS, nfe: NFE, ..Default::default() }
+    }
+
+    /// Open `n` keep-alive connections, ping each once (so the accept
+    /// and session installation have completed), and hold the raw
+    /// streams open. One fd per connection on each side.
+    fn hold_idle(addr: SocketAddr, n: usize) -> Vec<TcpStream> {
+        let mut held = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut s = TcpStream::connect(addr)
+                .unwrap_or_else(|e| panic!("idle connect {i}/{n}: {e}"));
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            let mut got = Vec::new();
+            let mut buf = [0u8; 256];
+            loop {
+                let k = s.read(&mut buf).unwrap_or_else(|e| panic!("idle ping {i}: {e}"));
+                assert!(k > 0, "server closed idle connection {i} of {n}");
+                got.extend_from_slice(&buf[..k]);
+                if got.contains(&b'\n') {
+                    break;
+                }
+            }
+            held.push(s);
+        }
+        held
+    }
+
+    /// Run the closed loop twice against `addr` and keep the run with
+    /// the better p99 (errors are summed — a retry must not hide them).
+    fn best_of_two(addr: SocketAddr) -> (LoadReport, usize) {
+        let a = generate_load(addr, &spec(), WORKERS, REQUESTS_PER_WORKER);
+        let b = generate_load(addr, &spec(), WORKERS, REQUESTS_PER_WORKER);
+        let errors = a.errors + b.errors;
+        let best = if a.percentile(0.99) <= b.percentile(0.99) { a } else { b };
+        (best, errors)
+    }
+
+    pub fn run() {
+        let quick = std::env::var("ERA_BENCH_QUICK").is_ok();
+        // fd budget: each held connection costs 2 fds in this process
+        // (client stream + server conn); 240 stays far inside the
+        // default 1024 soft limit with the load generator on top.
+        let (legacy_conns, gateway_conns) = if quick { (25, 100) } else { (60, 240) };
+        println!(
+            "gateway scaling: {legacy_conns} held conns (blocking) vs {gateway_conns} (gateway), \
+             load {WORKERS} workers x {REQUESTS_PER_WORKER} requests x {ROWS} rows x {NFE} NFE \
+             (1ms/eval)"
+        );
+
+        // ---- Phase 1: blocking thread-per-connection baseline ----
+        let legacy_pool = pool();
+        let server = Server::start(
+            legacy_pool.clone(),
+            ServerConfig {
+                max_connections: legacy_conns + WORKERS + 8,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind blocking server");
+        let idle = hold_idle(server.local_addr(), legacy_conns);
+        let (legacy, legacy_errors) = best_of_two(server.local_addr());
+        let legacy_p99 = legacy.percentile(0.99);
+        println!(
+            "BENCHLINE gateway/legacy conns={legacy_conns} p99={:.1}ms errors={legacy_errors}",
+            1e3 * legacy_p99
+        );
+        drop(idle);
+        server.shutdown();
+
+        // ---- Phase 2: epoll gateway at 4x the held connections ----
+        let gw_pool = pool();
+        let gateway = Gateway::start(
+            gw_pool.clone(),
+            GatewayConfig {
+                max_connections: gateway_conns + WORKERS + 8,
+                ..GatewayConfig::default()
+            },
+        )
+        .expect("bind gateway");
+        let idle = hold_idle(gateway.local_addr(), gateway_conns);
+        // Telemetry gate: the gauge must have seen the whole herd.
+        let open = gw_pool.conn_snapshot().open_connections;
+        let gauge_ok = open >= gateway_conns;
+        println!(
+            "BENCHLINE gateway/gauge open_connections={open} held={gateway_conns}: {}",
+            if gauge_ok { "PASS" } else { "FAIL" }
+        );
+        let (gw, gw_errors) = best_of_two(gateway.local_addr());
+        let gw_p99 = gw.percentile(0.99);
+        println!(
+            "BENCHLINE gateway/gateway conns={gateway_conns} p99={:.1}ms errors={gw_errors}",
+            1e3 * gw_p99
+        );
+        drop(idle);
+        gateway.shutdown();
+
+        let conn_ratio = gateway_conns as f64 / legacy_conns as f64;
+        let errors = legacy_errors + gw_errors;
+        let p99_parity = if gw_p99 > 0.0 { legacy_p99 / gw_p99 } else { 1.0 };
+        println!(
+            "gateway held {conn_ratio:.1}x the connections at p99 parity {p99_parity:.2} \
+             (legacy {:.1}ms vs gateway {:.1}ms) — targets: ratio >= 4, parity >= 0.5, \
+             errors == 0: {}",
+            1e3 * legacy_p99,
+            1e3 * gw_p99,
+            if conn_ratio >= 4.0 && p99_parity >= 0.5 && errors == 0 { "PASS" } else { "FAIL" }
+        );
+        assert!(conn_ratio >= 4.0, "held-connection ratio {conn_ratio:.1} below the 4x gate");
+        assert!(gauge_ok, "open_connections gauge saw {open} of {gateway_conns} held conns");
+        assert_eq!(errors, 0, "request errors under the connection herds");
+        assert!(
+            p99_parity >= 0.5,
+            "gateway p99 {:.1}ms vs legacy {:.1}ms breaches the 2x parity gate at 4x conns",
+            1e3 * gw_p99,
+            1e3 * legacy_p99
+        );
+
+        // Committed gates are machine-independent (a ratio, a parity
+        // bound checked against a 0.5 baseline, an error count, a
+        // telemetry flag); absolute p99s ride along for trend tracking.
+        let mut report = BenchReport::new("gateway");
+        report.push("conn_ratio", conn_ratio, Direction::HigherIsBetter, 0.0);
+        report.push("p99_parity", p99_parity.min(1.0), Direction::HigherIsBetter, 0.0);
+        report.push("errors", errors as f64, Direction::LowerIsBetter, 0.0);
+        report.push("gauge_ok", if gauge_ok { 1.0 } else { 0.0 }, Direction::HigherIsBetter, 0.0);
+        report.push("legacy_p99_ms", 1e3 * legacy_p99, Direction::LowerIsBetter, 2.0);
+        report.push("gateway_p99_ms", 1e3 * gw_p99, Direction::LowerIsBetter, 2.0);
+        report.write_if_env();
+    }
+}

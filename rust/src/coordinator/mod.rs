@@ -43,6 +43,7 @@ pub use batcher::{BatchPlan, Batcher, BatchPolicy};
 pub use executor::BankSet;
 pub use request::{QosClass, RequestSpec, RequestState, SamplingResult};
 pub use service::{
-    CancelHandle, Coordinator, CoordinatorConfig, MockBank, ModelBank, SubmitError, Ticket,
+    CancelHandle, CompletionNotify, Coordinator, CoordinatorConfig, MockBank, ModelBank,
+    SubmitError, Ticket,
 };
-pub use telemetry::Telemetry;
+pub use telemetry::{ConnCounters, ConnSnapshot, Telemetry};

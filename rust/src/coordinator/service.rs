@@ -284,10 +284,43 @@ pub enum SubmitError {
     Invalid(String),
 }
 
+/// Completion callback attached to a submit: invoked (on the loop
+/// thread) *after* the reply value is placed in the ticket's channel,
+/// so a `try_result` issued from the callback always observes it. The
+/// readiness gateway uses this to wake its event loop instead of
+/// parking a thread per request.
+pub type CompletionNotify = Arc<dyn Fn() + Send + Sync>;
+
+/// The loop's side of a ticket: the reply channel plus the optional
+/// completion notification. `send` delivers first, then notifies —
+/// and notifies even when the receiver is gone, so an event loop that
+/// dropped a connection's tickets still drains its wake queue.
+struct ReplySink {
+    tx: Sender<Result<SamplingResult, String>>,
+    notify: Option<CompletionNotify>,
+}
+
+impl ReplySink {
+    fn new(tx: Sender<Result<SamplingResult, String>>, notify: Option<CompletionNotify>) -> Self {
+        ReplySink { tx, notify }
+    }
+
+    fn send(
+        &self,
+        value: Result<SamplingResult, String>,
+    ) -> Result<(), std::sync::mpsc::SendError<Result<SamplingResult, String>>> {
+        let out = self.tx.send(value);
+        if let Some(notify) = &self.notify {
+            notify();
+        }
+        out
+    }
+}
+
 struct Envelope {
     id: u64,
     spec: RequestSpec,
-    reply: Sender<Result<SamplingResult, String>>,
+    reply: ReplySink,
     cancel: CancelHandle,
     deadline: Option<Instant>,
 }
@@ -319,6 +352,19 @@ impl Ticket {
 
     pub fn wait_timeout(&self, d: Duration) -> Option<Result<SamplingResult, String>> {
         self.rx.recv_timeout(d).ok()
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    /// After a [`CompletionNotify`] callback fired for this ticket the
+    /// result is guaranteed present (the loop sends before notifying).
+    pub fn try_result(&self) -> Option<Result<SamplingResult, String>> {
+        match self.rx.try_recv() {
+            Ok(out) => Some(out),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Err("coordinator dropped request".to_string()))
+            }
+        }
     }
 
     /// Ask the scheduler to retire this request as soon as no in-flight
@@ -401,12 +447,26 @@ impl Coordinator {
         spec: RequestSpec,
         cancel: CancelHandle,
     ) -> Result<Ticket, SubmitError> {
+        self.submit_with_cancel_notify(spec, cancel, None)
+    }
+
+    /// Like [`Coordinator::submit_with_cancel`] with an additional
+    /// completion callback: `notify` runs on the loop thread right
+    /// after the reply lands in the ticket, making the ticket pollable
+    /// via [`Ticket::try_result`] without a blocked thread per request.
+    pub fn submit_with_cancel_notify(
+        &self,
+        spec: RequestSpec,
+        cancel: CancelHandle,
+        notify: Option<CompletionNotify>,
+    ) -> Result<Ticket, SubmitError> {
         if crate::solvers::SolverKind::parse(&spec.solver).is_none() {
             return Err(SubmitError::Invalid(format!("unknown solver '{}'", spec.solver)));
         }
         let tx = self.tx.as_ref().ok_or(SubmitError::Shutdown)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let reply_tx = ReplySink::new(reply_tx, notify);
         let deadline = spec
             .deadline_ms
             .map(Duration::from_millis)
@@ -480,7 +540,7 @@ impl Drop for Coordinator {
 /// [`crate::solvers::lanes`]).
 struct Active {
     id: u64,
-    reply: Sender<Result<SamplingResult, String>>,
+    reply: ReplySink,
     cancel: CancelHandle,
     deadline: Option<Instant>,
     /// Rows this request pinned in the inflight gauges at submit.
@@ -2194,7 +2254,7 @@ mod tests {
         let env = Envelope {
             id: 1,
             spec: spec("era", 4, 1),
-            reply,
+            reply: ReplySink::new(reply, None),
             cancel: CancelHandle::new(),
             deadline: Some(now0 + Duration::from_millis(5)),
         };
@@ -2209,7 +2269,7 @@ mod tests {
         let env2 = Envelope {
             id: 2,
             spec: spec("era", 4, 2),
-            reply: reply2,
+            reply: ReplySink::new(reply2, None),
             cancel: CancelHandle::new(),
             deadline: Some(now0 + Duration::from_millis(5)),
         };

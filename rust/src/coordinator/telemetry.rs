@@ -494,6 +494,70 @@ pub(crate) fn sorted_percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx]
 }
 
+/// Connection-level counters for a serving front end (the blocking
+/// [`crate::server::Server`] or the readiness gateway). One instance
+/// per front end, registered with the pool
+/// ([`crate::pool::WorkerPool::register_conn_counters`]) so multiple
+/// servers fronting one pool merge into a single [`ConnSnapshot`] in
+/// `PoolStats` — the same merge story the per-shard telemetry follows.
+#[derive(Default)]
+pub struct ConnCounters {
+    /// Gauge: connections currently registered with the front end.
+    pub open_connections: AtomicUsize,
+    /// Connections admitted into service (excludes rejects).
+    pub accepted_total: AtomicUsize,
+    /// Connections turned away (over the connection cap).
+    pub rejected_total: AtomicUsize,
+    /// Times a connection's read interest was parked because its
+    /// bounded write queue was full (gateway backpressure).
+    pub backpressure_stalls: AtomicUsize,
+}
+
+impl ConnCounters {
+    pub fn new() -> ConnCounters {
+        ConnCounters::default()
+    }
+
+    pub fn snapshot(&self) -> ConnSnapshot {
+        ConnSnapshot {
+            open_connections: self.open_connections.load(Ordering::Relaxed),
+            accepted_total: self.accepted_total.load(Ordering::Relaxed),
+            rejected_total: self.rejected_total.load(Ordering::Relaxed),
+            backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ConnCounters`]. Merge rule: every field
+/// sums — the gauge sums across front ends (total open connections on
+/// the pool), the counters are monotone tallies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConnSnapshot {
+    pub open_connections: usize,
+    pub accepted_total: usize,
+    pub rejected_total: usize,
+    pub backpressure_stalls: usize,
+}
+
+impl ConnSnapshot {
+    pub fn merge(&mut self, other: &ConnSnapshot) {
+        self.open_connections += other.open_connections;
+        self.accepted_total += other.accepted_total;
+        self.rejected_total += other.rejected_total;
+        self.backpressure_stalls += other.backpressure_stalls;
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        Json::obj(vec![
+            ("open", Json::Num(self.open_connections as f64)),
+            ("accepted", Json::Num(self.accepted_total as f64)),
+            ("rejected", Json::Num(self.rejected_total as f64)),
+            ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -741,5 +805,32 @@ mod tests {
         assert_eq!(t.mean_batch_occupancy(), 0.0);
         assert_eq!(t.padding_fraction(), 0.0);
         assert!(t.summary().contains("finished=0"));
+    }
+
+    #[test]
+    fn conn_snapshots_merge_by_summing_every_field() {
+        let a = ConnCounters::new();
+        a.open_connections.store(3, Ordering::Relaxed);
+        a.accepted_total.store(10, Ordering::Relaxed);
+        a.rejected_total.store(1, Ordering::Relaxed);
+        a.backpressure_stalls.store(2, Ordering::Relaxed);
+        let b = ConnCounters::new();
+        b.open_connections.store(5, Ordering::Relaxed);
+        b.accepted_total.store(7, Ordering::Relaxed);
+        b.backpressure_stalls.store(4, Ordering::Relaxed);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(
+            merged,
+            ConnSnapshot {
+                open_connections: 8,
+                accepted_total: 17,
+                rejected_total: 1,
+                backpressure_stalls: 6,
+            }
+        );
+        let j = merged.to_json();
+        assert_eq!(j.get("open").as_usize(), Some(8));
+        assert_eq!(j.get("backpressure_stalls").as_usize(), Some(6));
     }
 }

@@ -24,9 +24,15 @@
 //!   shards by the worker pool ([`pool`]: routing policies, global
 //!   admission control, per-request deadlines and cancellation, merged
 //!   telemetry incl. executor utilisation, pipeline-depth and
-//!   lane-occupancy histograms) behind a TCP JSON-lines server
+//!   lane-occupancy histograms) behind a TCP JSON-lines front end
 //!   ([`server`], which also surfaces each ERA request's final
-//!   `delta_eps` on the wire).
+//!   `delta_eps` on the wire). Two front ends serve the same protocol
+//!   off shared codec/session layers (DESIGN.md §13): the portable
+//!   blocking thread-per-connection server, and a readiness-based
+//!   **epoll gateway** (Linux, raw syscalls — no async runtime) whose
+//!   fixed pool of event-loop threads multiplexes thousands of
+//!   connections with bounded write queues that park read interest
+//!   for backpressure and admission-aware accept throttling.
 //!
 //! The stack is observable end to end ([`obs`], DESIGN.md
 //! § Observability): each shard keeps a fixed-capacity **flight

@@ -28,6 +28,11 @@
 //! Observability (DESIGN.md §11): the `metrics` wire op returns the
 //! same Prometheus page `--metrics <path>` refreshes on each heartbeat,
 //! and `trace <tag>` dumps a tagged request's flight-recorder spans.
+//!
+//! Front end (DESIGN.md §13): the default is the portable blocking
+//! thread-per-connection server; `--gateway` (Linux) serves the same
+//! wire protocol from a fixed pool of `--io-threads` epoll event
+//! loops, multiplexing thousands of connections.
 
 use std::sync::Arc;
 
@@ -52,7 +57,9 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "max-rows", value: Some("n"), help: "rows per fused eval (default: 256)" },
     OptSpec { name: "min-rows", value: Some("n"), help: "linger threshold rows (default: 32)" },
     OptSpec { name: "max-wait-ms", value: Some("ms"), help: "linger budget (default: 2)" },
-    OptSpec { name: "max-conns", value: Some("n"), help: "connection cap (default: 64)" },
+    OptSpec { name: "max-conns", value: Some("n"), help: "connection cap (default: 64 blocking, 1024 gateway)" },
+    OptSpec { name: "gateway", value: None, help: "serve with the epoll readiness gateway (Linux) instead of a thread per connection" },
+    OptSpec { name: "io-threads", value: Some("n"), help: "gateway event-loop threads (default: 2)" },
     OptSpec { name: "conv-threshold", value: Some("x"), help: "convergence default for non-strict requests without their own, 0 = off (default: 0)" },
     OptSpec { name: "metrics", value: Some("path"), help: "write a Prometheus text-exposition page here on every heartbeat" },
 ];
@@ -117,13 +124,44 @@ fn run() -> Result<(), String> {
     if !(conv_threshold.is_finite() && conv_threshold >= 0.0) {
         return Err(format!("--conv-threshold {conv_threshold} out of range"));
     }
-    let server_cfg = ServerConfig {
-        addr: args.str_or("addr", "127.0.0.1:7437"),
-        max_connections: args.usize_or("max-conns", 64)?,
-        default_conv_threshold: conv_threshold,
-    };
-    let server = Server::start(pool.clone(), server_cfg).map_err(|e| e.to_string())?;
-    eprintln!("[era-serve] listening on {}", server.local_addr());
+    // Keep whichever front end we started alive for the life of the
+    // process (dropping it would stop accepting).
+    let mut _server: Option<Server> = None;
+    #[cfg(target_os = "linux")]
+    let mut _gateway: Option<era_solver::server::gateway::Gateway> = None;
+    let addr = args.str_or("addr", "127.0.0.1:7437");
+    if args.present("gateway") {
+        #[cfg(target_os = "linux")]
+        {
+            use era_solver::server::gateway::{Gateway, GatewayConfig};
+            let io_threads = args.usize_or("io-threads", 2)?.max(1);
+            let gateway_cfg = GatewayConfig {
+                addr,
+                max_connections: args.usize_or("max-conns", 1024)?,
+                default_conv_threshold: conv_threshold,
+                io_threads,
+                ..GatewayConfig::default()
+            };
+            let gateway =
+                Gateway::start(pool.clone(), gateway_cfg).map_err(|e| e.to_string())?;
+            eprintln!(
+                "[era-serve] gateway listening on {} ({io_threads} io thread(s))",
+                gateway.local_addr()
+            );
+            _gateway = Some(gateway);
+        }
+        #[cfg(not(target_os = "linux"))]
+        return Err("--gateway requires Linux (epoll readiness transport)".into());
+    } else {
+        let server_cfg = ServerConfig {
+            addr,
+            max_connections: args.usize_or("max-conns", 64)?,
+            default_conv_threshold: conv_threshold,
+        };
+        let server = Server::start(pool.clone(), server_cfg).map_err(|e| e.to_string())?;
+        eprintln!("[era-serve] listening on {}", server.local_addr());
+        _server = Some(server);
+    }
 
     // Periodic telemetry heartbeat until killed. With --metrics, each
     // beat also atomically refreshes a Prometheus text-exposition file

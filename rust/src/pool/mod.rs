@@ -49,8 +49,8 @@ use std::time::Duration;
 
 use crate::coordinator::service::Ticket;
 use crate::coordinator::{
-    BankSet, CancelHandle, Coordinator, CoordinatorConfig, ModelBank, RequestSpec,
-    SamplingResult, SubmitError,
+    BankSet, CancelHandle, CompletionNotify, ConnCounters, ConnSnapshot, Coordinator,
+    CoordinatorConfig, ModelBank, RequestSpec, SamplingResult, SubmitError,
 };
 use crate::kernels::PlanCache;
 use crate::obs::SpanEvent;
@@ -106,6 +106,10 @@ pub struct WorkerPool {
     /// survive completion (a finished or cancelled request stays
     /// traceable) and are evicted FIFO past [`TRACE_ROUTES_CAP`].
     traces: Mutex<TraceRoutes>,
+    /// Connection counters of every front end serving from this pool
+    /// (blocking server, gateway, or several of each); merged into one
+    /// [`ConnSnapshot`] in [`PoolStats`].
+    conns: Mutex<Vec<Arc<ConnCounters>>>,
 }
 
 /// Cap on remembered tag -> trace routes; the oldest route is evicted
@@ -157,6 +161,12 @@ impl PoolTicket {
 
     pub fn wait_timeout(&self, d: Duration) -> Option<Result<SamplingResult, String>> {
         self.inner.wait_timeout(d)
+    }
+
+    /// Non-blocking poll; guaranteed `Some` once the submit's
+    /// [`CompletionNotify`] has fired (see [`Ticket::try_result`]).
+    pub fn try_result(&self) -> Option<Result<SamplingResult, String>> {
+        self.inner.try_result()
     }
 
     /// Ask the owning shard to retire this request at its next round.
@@ -216,6 +226,7 @@ impl WorkerPool {
             admission: Mutex::new(()),
             tags: Mutex::new(HashMap::new()),
             traces: Mutex::new(TraceRoutes::default()),
+            conns: Mutex::new(Vec::new()),
         }
     }
 
@@ -254,6 +265,20 @@ impl WorkerPool {
         spec: RequestSpec,
         tag: Option<u64>,
     ) -> Result<PoolTicket, SubmitError> {
+        self.submit_tagged_notify(spec, tag, None)
+    }
+
+    /// Like [`WorkerPool::submit_tagged`] with a completion callback:
+    /// `notify` runs on the owning shard's loop thread right after the
+    /// result lands in the ticket, making [`PoolTicket::try_result`]
+    /// reliable for event-loop callers (the readiness gateway) without
+    /// a parked thread per request.
+    pub fn submit_tagged_notify(
+        &self,
+        spec: RequestSpec,
+        tag: Option<u64>,
+        notify: Option<CompletionNotify>,
+    ) -> Result<PoolTicket, SubmitError> {
         // Register the cancel handle under the tag *before* any shard
         // can admit the request, so a concurrent `cancel` that observes
         // the request in flight always finds the tag. Cancels landing
@@ -263,7 +288,7 @@ impl WorkerPool {
         if let Some(tag) = tag {
             self.tags.lock().unwrap().insert(tag, cancel.clone());
         }
-        let result = self.route_and_submit(&spec, &cancel);
+        let result = self.route_and_submit(&spec, &cancel, notify);
         match (&result, tag) {
             // Remember where the tagged request landed so `trace <tag>`
             // can replay its flight-recorder spans — including after it
@@ -297,6 +322,7 @@ impl WorkerPool {
         &self,
         spec: &RequestSpec,
         cancel: &CancelHandle,
+        notify: Option<CompletionNotify>,
     ) -> Result<PoolTicket, SubmitError> {
         let mut spec = spec.clone();
         // Under a global cap, hold the admission lock across the
@@ -335,7 +361,11 @@ impl WorkerPool {
         let first = placement::place(self.placement, &spec.dataset, rr, &loads);
         for k in 0..n {
             let idx = (first + k) % n;
-            match self.shards[idx].submit_with_cancel(spec.clone(), cancel.clone()) {
+            match self.shards[idx].submit_with_cancel_notify(
+                spec.clone(),
+                cancel.clone(),
+                notify.clone(),
+            ) {
                 Ok(ticket) => return Ok(PoolTicket { shard: idx, inner: ticket }),
                 // Queue-full fails over to the next shard; anything else
                 // (invalid spec, shutdown) is terminal.
@@ -375,16 +405,47 @@ impl WorkerPool {
         self.submit(spec).map_err(|e| format!("{e:?}"))?.wait()
     }
 
+    /// Advisory accept-throttle hook for front ends: false when the
+    /// global in-flight row cap is already met, i.e. the next sample of
+    /// any size would be rejected at admission. Front ends use it to
+    /// pause `accept()` (leaving new connections in the kernel backlog)
+    /// instead of accepting work they would immediately shed. Always
+    /// true when the pool is uncapped. Advisory only: the admission
+    /// lock in [`WorkerPool::submit_tagged`] remains the authority.
+    pub fn has_admission_capacity(&self) -> bool {
+        if self.max_inflight_rows == 0 {
+            return true;
+        }
+        let total: usize = self.loads().iter().sum();
+        total < self.max_inflight_rows
+    }
+
+    /// Register a front end's connection counters; its snapshot merges
+    /// into every subsequent [`WorkerPool::stats`] call.
+    pub fn register_conn_counters(&self, counters: Arc<ConnCounters>) {
+        self.conns.lock().unwrap().push(counters);
+    }
+
+    /// Merged connection snapshot across every registered front end.
+    pub fn conn_snapshot(&self) -> ConnSnapshot {
+        let mut merged = ConnSnapshot::default();
+        for c in self.conns.lock().unwrap().iter() {
+            merged.merge(&c.snapshot());
+        }
+        merged
+    }
+
     /// Merged snapshot across shards.
     pub fn stats(&self) -> PoolStats {
         let teles: Vec<&crate::coordinator::Telemetry> =
             self.shards.iter().map(|c| c.telemetry()).collect();
-        PoolStats::collect(
+        PoolStats::collect_with_conns(
             self.placement.label(),
             &teles,
             self.pool_rejected.load(Ordering::Relaxed),
             self.executors_per_shard,
             self.pipeline_depth,
+            self.conn_snapshot(),
         )
     }
 
@@ -652,5 +713,71 @@ mod tests {
         for t in tickets {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn completion_notify_makes_try_result_reliable() {
+        // The gateway's contract: once the notify callback fires, the
+        // ticket polls `Some` without blocking — the loop sends the
+        // reply before notifying.
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let notify: CompletionNotify = Arc::new(move || {
+            let _ = tx.send(());
+        });
+        let t = p.submit_tagged_notify(spec(8, 3), None, Some(notify)).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).expect("notify must fire");
+        let out = t.try_result().expect("result must be present after notify");
+        assert_eq!(out.unwrap().samples.rows(), 8);
+        assert!(t.try_result().is_none(), "a result is delivered exactly once");
+        p.shutdown();
+    }
+
+    #[test]
+    fn admission_capacity_tracks_inflight_rows() {
+        // Uncapped pools always report capacity; capped pools report
+        // none once the in-flight rows meet the cap, and recover after
+        // the work drains.
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        assert!(p.has_admission_capacity());
+        p.shutdown();
+
+        let capped = WorkerPool::start(
+            bank(),
+            PoolConfig {
+                shards: 1,
+                placement: PlacementPolicy::RoundRobin,
+                shard: CoordinatorConfig::default(),
+                max_inflight_rows: 8,
+            },
+        );
+        assert!(capped.has_admission_capacity());
+        let t = capped.submit(spec(8, 0)).unwrap();
+        // 8 rows in flight == cap: no headroom for any further request.
+        assert!(!capped.has_admission_capacity());
+        t.wait().unwrap();
+        assert!(capped.has_admission_capacity(), "capacity must recover after drain");
+        capped.shutdown();
+    }
+
+    #[test]
+    fn conn_counters_from_multiple_front_ends_merge_into_stats() {
+        let p = pool(1, PlacementPolicy::RoundRobin);
+        let a = Arc::new(ConnCounters::new());
+        let b = Arc::new(ConnCounters::new());
+        p.register_conn_counters(a.clone());
+        p.register_conn_counters(b.clone());
+        a.open_connections.store(2, Ordering::Relaxed);
+        a.accepted_total.store(5, Ordering::Relaxed);
+        b.open_connections.store(1, Ordering::Relaxed);
+        b.accepted_total.store(3, Ordering::Relaxed);
+        b.rejected_total.store(1, Ordering::Relaxed);
+        b.backpressure_stalls.store(4, Ordering::Relaxed);
+        let s = p.stats();
+        assert_eq!(s.conn.open_connections, 3);
+        assert_eq!(s.conn.accepted_total, 8);
+        assert_eq!(s.conn.rejected_total, 1);
+        assert_eq!(s.conn.backpressure_stalls, 4);
+        p.shutdown();
     }
 }

@@ -12,7 +12,7 @@ use crate::coordinator::telemetry::{
     fmt_quantile_ms, sorted_percentile, StageHistSnapshot, DEPTH_HIST_BUCKETS, LANE_OCC_BUCKETS,
     NFE_HIST_BOUNDS, NFE_HIST_BUCKETS, STAGES, STAGE_BOUNDS,
 };
-use crate::coordinator::Telemetry;
+use crate::coordinator::{ConnSnapshot, Telemetry};
 use crate::json::Json;
 use crate::obs::PromText;
 
@@ -195,6 +195,10 @@ pub struct PoolStats {
     pub pipeline_depth: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Connection-level counters merged across every front end (legacy
+    /// server and/or gateway) registered with the pool. All-zero when
+    /// the pool is driven in-process with no server attached.
+    pub conn: ConnSnapshot,
 }
 
 impl PoolStats {
@@ -205,6 +209,26 @@ impl PoolStats {
         pool_rejected: usize,
         executors_per_shard: usize,
         pipeline_depth: usize,
+    ) -> PoolStats {
+        PoolStats::collect_with_conns(
+            placement,
+            telemetries,
+            pool_rejected,
+            executors_per_shard,
+            pipeline_depth,
+            ConnSnapshot::default(),
+        )
+    }
+
+    /// [`PoolStats::collect`] plus a pre-merged connection snapshot from
+    /// the pool's registered front ends.
+    pub fn collect_with_conns(
+        placement: &'static str,
+        telemetries: &[&Telemetry],
+        pool_rejected: usize,
+        executors_per_shard: usize,
+        pipeline_depth: usize,
+        conn: ConnSnapshot,
     ) -> PoolStats {
         let per_shard: Vec<ShardStats> = telemetries
             .iter()
@@ -224,6 +248,7 @@ impl PoolStats {
             pipeline_depth,
             p50_ms: 1e3 * sorted_percentile(&lat, 0.5),
             p99_ms: 1e3 * sorted_percentile(&lat, 0.99),
+            conn,
         }
     }
 
@@ -355,7 +380,7 @@ impl PoolStats {
     /// by `era-serve --metrics <path>`.
     pub fn prometheus(&self) -> String {
         let mut p = PromText::new();
-        let counters: [(&str, &str, f64); 12] = [
+        let counters: [(&str, &str, f64); 15] = [
             ("era_requests_admitted_total", "Requests admitted across shards.", self.admitted() as f64),
             ("era_requests_finished_total", "Requests finished successfully.", self.finished() as f64),
             ("era_requests_cancelled_total", "Requests retired by cancellation or deadline.", self.cancelled() as f64),
@@ -368,12 +393,15 @@ impl PoolStats {
             ("era_host_bytes_transferred_total", "Bytes crossing the host-engine boundary (slabs, resident ops, gathers).", self.host_bytes_transferred() as f64),
             ("era_early_stops_total", "Requests retired early by the convergence controller.", self.early_stops() as f64),
             ("era_degraded_requests_total", "Requests latched to their NFE floor (cap squeeze-in or deadline pressure).", self.degraded_requests() as f64),
+            ("era_connections_accepted_total", "Client connections accepted across registered front ends.", self.conn.accepted_total as f64),
+            ("era_connections_rejected_total", "Client connections refused at accept (connection cap or admission throttle).", self.conn.rejected_total as f64),
+            ("era_backpressure_stalls_total", "Times a connection's read interest was parked on a full write queue.", self.conn.backpressure_stalls as f64),
         ];
         for (name, help, v) in counters {
             p.family(name, help, "counter");
             p.value(name, &[], v);
         }
-        let gauges: [(&str, &str, f64); 11] = [
+        let gauges: [(&str, &str, f64); 12] = [
             ("era_shards", "Coordinator shards in the pool.", self.shards() as f64),
             ("era_executors_per_shard", "Engine executor threads per shard.", self.executors_per_shard as f64),
             ("era_pipeline_depth", "Dispatch rounds allowed in flight per shard.", self.pipeline_depth as f64),
@@ -385,6 +413,7 @@ impl PoolStats {
             ("era_executor_busy_fraction", "Fraction of executor thread time spent evaluating.", self.executor_busy_fraction()),
             ("era_batch_occupancy_rows", "Mean rows per fused evaluation.", self.occupancy()),
             ("era_padding_fraction", "Fraction of executed rows that were bucket padding.", self.padding_fraction()),
+            ("era_open_connections", "Client connections currently open across registered front ends.", self.conn.open_connections as f64),
         ];
         for (name, help, v) in gauges {
             p.family(name, help, "gauge");
@@ -523,8 +552,8 @@ impl PoolStats {
         format!(
             "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
              early_stops={} degraded={} evals={} rows={} occupancy={:.1} pad={:.1}% \
-             exec_busy={:.0}% inflight_slabs={} lanes={} p50={:.1}ms p99={:.1}ms \
-             queue={}/{}ms step={}/{}ms eval={}/{}ms",
+             exec_busy={:.0}% inflight_slabs={} lanes={} conns={}/{} stalls={} \
+             p50={:.1}ms p99={:.1}ms queue={}/{}ms step={}/{}ms eval={}/{}ms",
             self.shards(),
             self.placement,
             self.executors_per_shard,
@@ -541,6 +570,9 @@ impl PoolStats {
             100.0 * self.executor_busy_fraction(),
             self.inflight_slabs(),
             self.lanes(),
+            self.conn.open_connections,
+            self.conn.accepted_total,
+            self.conn.backpressure_stalls,
             self.p50_ms,
             self.p99_ms,
             fmt_quantile_ms(queue.quantile(0.5)),
@@ -597,6 +629,7 @@ impl PoolStats {
             ),
             ("p50_ms", Json::Num(self.p50_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
+            ("connections", self.conn.to_json()),
             (
                 "stages",
                 Json::obj(
@@ -746,6 +779,49 @@ mod tests {
         assert!(text.contains("era_host_bytes_transferred_total 5120\n"), "{text}");
         assert!(text.contains("# TYPE era_resident_lanes gauge\n"), "{text}");
         assert!(text.contains("era_resident_lanes 3\n"), "{text}");
+    }
+
+    #[test]
+    fn conn_snapshot_rides_stats_json_summary_and_prometheus() {
+        // Connection counters arrive pre-merged (ConnSnapshot::merge
+        // sums every field across front ends) and fan out to all three
+        // renderings; the no-front-end default stays all-zero.
+        use crate::coordinator::ConnSnapshot;
+        let a = Telemetry::new();
+        let zero = PoolStats::collect("round-robin", &[&a], 0, 1, 1);
+        assert_eq!(zero.conn, ConnSnapshot::default());
+        assert_eq!(zero.to_json().get("connections").get("open").as_usize(), Some(0));
+
+        let mut conn = ConnSnapshot {
+            open_connections: 3,
+            accepted_total: 10,
+            rejected_total: 1,
+            backpressure_stalls: 2,
+        };
+        conn.merge(&ConnSnapshot {
+            open_connections: 4,
+            accepted_total: 20,
+            rejected_total: 2,
+            backpressure_stalls: 5,
+        });
+        let s = PoolStats::collect_with_conns("round-robin", &[&a], 0, 1, 1, conn);
+        assert_eq!(s.conn.open_connections, 7);
+        assert_eq!(s.conn.accepted_total, 30);
+        assert_eq!(s.conn.rejected_total, 3);
+        assert_eq!(s.conn.backpressure_stalls, 7);
+        let json = s.to_json();
+        assert_eq!(json.get("connections").get("open").as_usize(), Some(7));
+        assert_eq!(json.get("connections").get("accepted").as_usize(), Some(30));
+        assert_eq!(json.get("connections").get("rejected").as_usize(), Some(3));
+        assert_eq!(json.get("connections").get("backpressure_stalls").as_usize(), Some(7));
+        assert!(s.summary().contains("conns=7/30 stalls=7"), "{}", s.summary());
+        let text = s.prometheus();
+        assert!(text.contains("# TYPE era_connections_accepted_total counter\n"), "{text}");
+        assert!(text.contains("era_connections_accepted_total 30\n"), "{text}");
+        assert!(text.contains("era_connections_rejected_total 3\n"), "{text}");
+        assert!(text.contains("era_backpressure_stalls_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE era_open_connections gauge\n"), "{text}");
+        assert!(text.contains("era_open_connections 7\n"), "{text}");
     }
 
     #[test]

@@ -194,38 +194,88 @@ impl LoadReport {
     }
 }
 
+/// Load-generator shape: how many closed-loop workers, how many
+/// sequential requests each issues, and whether a worker keeps one
+/// connection alive across them or reconnects per request.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    pub concurrency: usize,
+    pub requests_per_worker: usize,
+    /// true (the default): each worker issues all its requests over one
+    /// kept-alive connection. false: a fresh connect per request —
+    /// the handshake-heavy profile the gateway bench contrasts.
+    pub reuse: bool,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions { concurrency: 1, requests_per_worker: 1, reuse: true }
+    }
+}
+
 /// Closed-loop load generator: `concurrency` threads each issue
-/// `requests_per_worker` sampling calls back-to-back.
+/// `requests_per_worker` sampling calls back-to-back over one
+/// kept-alive connection each. See [`generate_load_with`] for the
+/// reconnect-per-request variant.
 pub fn generate_load(
     addr: std::net::SocketAddr,
     base_spec: &RequestSpec,
     concurrency: usize,
     requests_per_worker: usize,
 ) -> LoadReport {
+    generate_load_with(
+        addr,
+        base_spec,
+        &LoadOptions { concurrency, requests_per_worker, reuse: true },
+    )
+}
+
+/// Closed-loop load generator with explicit connection-reuse control.
+/// A worker whose connection errors drops it and reconnects for the
+/// next request, so one refused connect costs one request, not the
+/// worker's whole budget.
+pub fn generate_load_with(
+    addr: std::net::SocketAddr,
+    base_spec: &RequestSpec,
+    opts: &LoadOptions,
+) -> LoadReport {
     let errors = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for w in 0..concurrency {
+    for w in 0..opts.concurrency {
         let spec = base_spec.clone();
         let errors = errors.clone();
+        let reuse = opts.reuse;
+        let requests_per_worker = opts.requests_per_worker;
         handles.push(std::thread::spawn(move || {
             let mut lats = Vec::with_capacity(requests_per_worker);
             let mut rows = 0usize;
-            let Ok(mut client) = Client::connect(addr) else {
-                errors.fetch_add(requests_per_worker, Ordering::Relaxed);
-                return (lats, rows);
-            };
+            let mut client: Option<Client> = None;
             for i in 0..requests_per_worker {
+                if client.is_none() {
+                    match Client::connect(addr) {
+                        Ok(c) => client = Some(c),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(2));
+                            continue;
+                        }
+                    }
+                }
                 let mut s = spec.clone();
                 s.seed = (w * 10_007 + i) as u64;
                 let t = Instant::now();
-                match client.sample(&s) {
+                match client.as_mut().expect("connected above").sample(&s) {
                     Ok((samples, _)) => {
                         lats.push(t.elapsed().as_secs_f64());
                         rows += samples.rows();
+                        if !reuse {
+                            client = None;
+                        }
                     }
                     Err(_) => {
                         errors.fetch_add(1, Ordering::Relaxed);
+                        client = None; // reconnect after any error
                         // brief backoff on rejection
                         std::thread::sleep(Duration::from_millis(2));
                     }

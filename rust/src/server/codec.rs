@@ -1,0 +1,238 @@
+//! Framed-protocol codec: incremental extraction of newline-delimited
+//! JSON frames from partial byte buffers.
+//!
+//! The wire format is JSON-lines (one request or response object per
+//! `\n`-terminated line, see [`super::protocol`]). The blocking path
+//! used to lean on `BufReader::read_line`, which couples framing to a
+//! blocking socket; the readiness-based gateway needs the inverse: feed
+//! whatever bytes the socket had, get back zero or more complete
+//! frames, and a deterministic "need more" in between. [`FrameDecoder`]
+//! is that state machine, shared by both server paths so there is
+//! exactly one framing implementation on the wire.
+//!
+//! Robustness contract (exercised by `tests/proptests.rs`):
+//!
+//! - arbitrary split points reassemble the exact frame sequence;
+//! - a truncated frame is `Ok(None)` ("need more"), never a partial
+//!   frame and never an error — until its length exceeds the cap;
+//! - a line longer than [`FrameDecoder::cap`] with no newline yet is
+//!   [`CodecError::Oversized`] (the JSON-lines analog of a hostile
+//!   length header) so a gateway can drop the peer instead of
+//!   buffering without bound;
+//! - invalid UTF-8 is replaced, not panicked on; JSON parsing rejects
+//!   it downstream with an ordinary protocol error.
+
+use std::fmt;
+
+/// Default cap on a single unterminated line. Large enough for a
+/// `return_samples` response on a big batch, small enough to bound a
+/// hostile peer's buffer growth.
+pub const MAX_FRAME_LEN: usize = 8 * 1024 * 1024;
+
+/// Compact the consumed prefix away once it passes this size, so the
+/// buffer does not creep upward across many small frames while staying
+/// O(bytes) amortized (no per-frame `drain`).
+const COMPACT_THRESHOLD: usize = 16 * 1024;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The current line has grown past the decoder's cap without a
+    /// terminating newline. The connection cannot resync; close it.
+    Oversized { len: usize, cap: usize },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Oversized { len, cap } => {
+                write!(f, "frame exceeds {cap} bytes ({len} buffered without newline)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Incremental newline-frame decoder over an internal byte buffer.
+///
+/// `push` bytes in as they arrive; `next_frame` yields complete lines
+/// (without the terminator, with a trailing `\r` stripped) until the
+/// buffer runs dry. Already-scanned bytes are never rescanned, so total
+/// decode cost is O(bytes received) regardless of how reads split.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Start of the unconsumed region (bytes before it are delivered
+    /// frames awaiting compaction).
+    start: usize,
+    /// Newline scan cursor within `buf`; always `>= start`.
+    scanned: usize,
+    cap: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::with_cap(MAX_FRAME_LEN)
+    }
+
+    pub fn with_cap(cap: usize) -> FrameDecoder {
+        FrameDecoder { buf: Vec::new(), start: 0, scanned: 0, cap: cap.max(1) }
+    }
+
+    /// Bytes buffered but not yet delivered as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Feed freshly read bytes into the decoder.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+            self.scanned = 0;
+        } else if self.start >= COMPACT_THRESHOLD {
+            self.buf.drain(..self.start);
+            self.scanned -= self.start;
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extract the next complete frame, `Ok(None)` when more bytes are
+    /// needed, or `Err` when the pending line exceeds the cap.
+    pub fn next_frame(&mut self) -> Result<Option<String>, CodecError> {
+        match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+            Some(off) => {
+                let nl = self.scanned + off;
+                let mut end = nl;
+                if end > self.start && self.buf[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                let frame = String::from_utf8_lossy(&self.buf[self.start..end]).into_owned();
+                self.start = nl + 1;
+                self.scanned = self.start;
+                Ok(Some(frame))
+            }
+            None => {
+                self.scanned = self.buf.len();
+                let pending = self.buf.len() - self.start;
+                if pending > self.cap {
+                    Err(CodecError::Oversized { len: pending, cap: self.cap })
+                } else {
+                    Ok(None)
+                }
+            }
+        }
+    }
+}
+
+impl Default for FrameDecoder {
+    fn default() -> FrameDecoder {
+        FrameDecoder::new()
+    }
+}
+
+/// Append one frame (line + terminator) to an outgoing byte queue.
+pub fn encode_frame(line: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(line.as_bytes());
+    out.push(b'\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(d: &mut FrameDecoder) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(f) = d.next_frame().expect("codec error") {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn whole_frames_pass_through() {
+        let mut d = FrameDecoder::new();
+        d.push(b"{\"op\":\"ping\"}\n{\"op\":\"stats\"}\n");
+        assert_eq!(frames(&mut d), vec!["{\"op\":\"ping\"}", "{\"op\":\"stats\"}"]);
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn split_frame_needs_more_then_completes() {
+        let mut d = FrameDecoder::new();
+        d.push(b"{\"op\":\"pi");
+        assert_eq!(d.next_frame().unwrap(), None);
+        d.push(b"ng\"}\n");
+        assert_eq!(d.next_frame().unwrap(), Some("{\"op\":\"ping\"}".to_string()));
+        assert_eq!(d.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn byte_at_a_time_is_deterministic() {
+        let src = b"first\nsecond\r\nthird\n";
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in src.iter() {
+            d.push(&[b]);
+            got.extend(frames(&mut d));
+        }
+        assert_eq!(got, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn crlf_and_empty_lines() {
+        let mut d = FrameDecoder::new();
+        d.push(b"a\r\n\r\n\nb\n");
+        assert_eq!(frames(&mut d), vec!["a", "", "", "b"]);
+    }
+
+    #[test]
+    fn oversized_line_errors_and_stays_errored() {
+        let mut d = FrameDecoder::with_cap(8);
+        d.push(b"123456789");
+        assert_eq!(d.next_frame(), Err(CodecError::Oversized { len: 9, cap: 8 }));
+        d.push(b"more");
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn frame_exactly_at_cap_is_fine() {
+        let mut d = FrameDecoder::with_cap(4);
+        d.push(b"abcd\n");
+        assert_eq!(d.next_frame().unwrap(), Some("abcd".to_string()));
+    }
+
+    #[test]
+    fn invalid_utf8_is_replaced_not_panicked() {
+        let mut d = FrameDecoder::new();
+        d.push(&[0xff, 0xfe, b'\n']);
+        let f = d.next_frame().unwrap().unwrap();
+        assert_eq!(f, "\u{FFFD}\u{FFFD}");
+    }
+
+    #[test]
+    fn compaction_preserves_stream() {
+        let mut d = FrameDecoder::new();
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        for i in 0..5000 {
+            let line = format!("frame-{i}");
+            want.push(line.clone());
+            d.push(line.as_bytes());
+            d.push(b"\n");
+            got.extend(frames(&mut d));
+        }
+        assert_eq!(got, want);
+        assert!(d.buf.len() < 2 * COMPACT_THRESHOLD, "buffer failed to compact");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut bytes = Vec::new();
+        encode_frame("{\"ok\":true}", &mut bytes);
+        encode_frame("x", &mut bytes);
+        let mut d = FrameDecoder::new();
+        d.push(&bytes);
+        assert_eq!(frames(&mut d), vec!["{\"ok\":true}", "x"]);
+    }
+}

@@ -1,0 +1,469 @@
+//! Readiness-based gateway: the same JSON-lines protocol as
+//! [`super::Server`], served by a small fixed pool of epoll event
+//! loops instead of a thread per connection (DESIGN.md §13).
+//!
+//! Layering: this module owns sockets and readiness only. Framing
+//! lives in [`super::codec`], per-connection protocol state in
+//! [`super::session`], and the epoll wrapper in [`super::transport`] —
+//! so the gateway is wire-identical to the blocking path by
+//! construction and the stock [`super::client::Client`] drives either.
+//!
+//! Shape: `io_threads` event loops, each with its own [`Epoll`], a
+//! cross-thread inbox, and a [`Waker`]. Loop 0 owns the (nonblocking,
+//! level-triggered) listener and deals accepted connections round-robin
+//! across loops. Connections are edge-triggered (`EPOLLET`): every
+//! readable event reads to `WouldBlock`, every write flushes to
+//! `WouldBlock`, and `EPOLLOUT` is armed only while unflushed output
+//! remains. A completed request fires its [`CompletionNotify`] on the
+//! shard's loop thread, which enqueues a `Done` token on the owning
+//! event loop's inbox and wakes it — the event loop never blocks on a
+//! ticket, and no thread is parked per request.
+//!
+//! Backpressure (two distinct mechanisms):
+//! * per-connection: when a session's bounded write queue fills, its
+//!   read interest is parked (`backpressure_stalls` counts the
+//!   transitions) until the peer drains replies — a reader that stops
+//!   reading stops being read from, with O(write_queue_cap) memory.
+//! * admission-aware accept throttling: while the pool's global
+//!   in-flight row cap is met, the listener's interest is parked and
+//!   new connections queue in the kernel backlog instead of being
+//!   accepted and immediately shed with `busy` errors.
+//!
+//! Connections over `max_connections` are still accepted and politely
+//! refused with the same `server overloaded` line the blocking path
+//! sends (counted in `rejected_total`).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::ConnCounters;
+use crate::pool::WorkerPool;
+
+use super::codec::MAX_FRAME_LEN;
+use super::reject_overloaded;
+use super::session::{ReadyFn, Session, SessionConfig};
+use super::transport::{
+    Epoll, EpollEvent, Waker, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+
+/// Gateway configuration.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address, e.g. "127.0.0.1:7437" (port 0 picks a free port).
+    pub addr: String,
+    /// Connections over this cap are accepted and refused with the
+    /// `server overloaded` error line (same wire behaviour as the
+    /// blocking server's cap).
+    pub max_connections: usize,
+    /// See [`super::ServerConfig::default_conv_threshold`].
+    pub default_conv_threshold: f64,
+    /// Event-loop threads. Two saturate a multi-gigabit NIC for this
+    /// protocol; the work lives in the pool's shards, not here.
+    pub io_threads: usize,
+    /// Per-connection cap on one unterminated request line.
+    pub max_frame_len: usize,
+    /// Per-connection outgoing-queue bound; above it the connection's
+    /// read interest is parked (see module docs).
+    pub write_queue_cap: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 1024,
+            default_conv_threshold: 0.0,
+            io_threads: 2,
+            max_frame_len: MAX_FRAME_LEN,
+            write_queue_cap: 256 * 1024,
+        }
+    }
+}
+
+/// Epoll token of each loop's waker / loop 0's listener. Connection
+/// ids count up from 0 and cannot collide with these in any realistic
+/// process lifetime.
+const WAKER_TOKEN: u64 = u64::MAX;
+const LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+enum LoopMsg {
+    /// A freshly accepted connection dealt to this loop.
+    Conn { id: u64, stream: TcpStream },
+    /// Request `token` on connection `conn` completed; poll its ticket.
+    Done { conn: u64, token: u64 },
+}
+
+/// Cross-thread mailbox of one event loop.
+struct LoopInbox {
+    queue: Mutex<VecDeque<LoopMsg>>,
+    waker: Waker,
+}
+
+impl LoopInbox {
+    fn push(&self, msg: LoopMsg) {
+        self.queue.lock().unwrap().push_back(msg);
+        self.waker.wake();
+    }
+}
+
+struct Conn {
+    /// Epoll token; re-registration (interest changes) must reuse it.
+    id: u64,
+    stream: TcpStream,
+    session: Session,
+    /// Interest bits currently registered (modulo `EPOLLET|EPOLLRDHUP`
+    /// which are always set).
+    interest: u32,
+    /// Whether read interest is currently armed (tracked separately so
+    /// park/unpark transitions can be counted and resumed correctly).
+    reading: bool,
+}
+
+/// A running gateway; dropping it stops every event loop.
+pub struct Gateway {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    inboxes: Vec<Arc<LoopInbox>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind and start `config.io_threads` event loops.
+    pub fn start(pool: Arc<WorkerPool>, config: GatewayConfig) -> io::Result<Gateway> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(ConnCounters::new());
+        pool.register_conn_counters(counters.clone());
+
+        let io_threads = config.io_threads.max(1);
+        let mut inboxes = Vec::with_capacity(io_threads);
+        for _ in 0..io_threads {
+            inboxes.push(Arc::new(LoopInbox {
+                queue: Mutex::new(VecDeque::new()),
+                waker: Waker::new()?,
+            }));
+        }
+        let next_id = Arc::new(AtomicU64::new(0));
+
+        let mut listener = Some(listener);
+        let mut threads = Vec::with_capacity(io_threads);
+        for index in 0..io_threads {
+            let state = EventLoop {
+                index,
+                pool: pool.clone(),
+                config: config.clone(),
+                stop: stop.clone(),
+                inboxes: inboxes.clone(),
+                listener: if index == 0 { listener.take() } else { None },
+                counters: counters.clone(),
+                next_id: next_id.clone(),
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("era-gw-{index}"))
+                    .spawn(move || state.run())
+                    .expect("spawn gateway loop"),
+            );
+        }
+
+        Ok(Gateway { local_addr, stop, inboxes, threads })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop every event loop and join them. Open connections are
+    /// dropped; their in-flight requests are cancelled.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for inbox in &self.inboxes {
+            inbox.waker.wake();
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+struct EventLoop {
+    index: usize,
+    pool: Arc<WorkerPool>,
+    config: GatewayConfig,
+    stop: Arc<AtomicBool>,
+    inboxes: Vec<Arc<LoopInbox>>,
+    listener: Option<TcpListener>,
+    counters: Arc<ConnCounters>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl EventLoop {
+    fn run(self) {
+        let epoll = match Epoll::new() {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        let inbox = &self.inboxes[self.index];
+        if epoll.add(inbox.waker.fd(), EPOLLIN, WAKER_TOKEN).is_err() {
+            return;
+        }
+        // The listener is level-triggered so unaccepted connections
+        // keep it signalled, and its interest can be parked outright
+        // for admission throttling.
+        let mut accept_armed = false;
+        if let Some(l) = &self.listener {
+            if epoll.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).is_err() {
+                return;
+            }
+            accept_armed = true;
+        }
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut events = [EpollEvent::zeroed(); 256];
+        let mut buf = [0u8; 16 * 1024];
+
+        while !self.stop.load(Ordering::Relaxed) {
+            // Admission-aware accept throttle, re-evaluated every tick
+            // (the wait timeout bounds the re-check latency).
+            if let Some(l) = &self.listener {
+                let want = self.pool.has_admission_capacity();
+                if want != accept_armed {
+                    let interest = if want { EPOLLIN } else { 0 };
+                    if epoll.modify(l.as_raw_fd(), interest, LISTENER_TOKEN).is_ok() {
+                        accept_armed = want;
+                    }
+                }
+            }
+
+            let n = match epoll.wait(&mut events, 100) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            for ev in events.iter().take(n) {
+                // Copy packed fields to locals before use.
+                let (bits, token) = (ev.events, ev.data);
+                match token {
+                    WAKER_TOKEN => inbox.waker.drain(),
+                    LISTENER_TOKEN => self.accept_burst(&epoll, &mut conns, &mut buf),
+                    id => {
+                        let keep = match conns.get_mut(&id) {
+                            None => continue, // already closed this tick
+                            Some(conn) => {
+                                let mut keep = true;
+                                if bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+                                    keep = read_pass(conn, &mut buf);
+                                }
+                                if bits & EPOLLERR != 0 {
+                                    keep = false;
+                                }
+                                keep && pump(&epoll, &self.counters, conn, &mut buf)
+                            }
+                        };
+                        if !keep {
+                            if let Some(conn) = conns.remove(&id) {
+                                drop_conn(&epoll, &self.counters, conn);
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Drain the inbox after the events so a Done raced by its
+            // connection's teardown is simply ignored.
+            loop {
+                let msg = inbox.queue.lock().unwrap().pop_front();
+                let Some(msg) = msg else { break };
+                match msg {
+                    LoopMsg::Conn { id, stream } => {
+                        self.install(&epoll, &mut conns, id, stream, &mut buf);
+                    }
+                    LoopMsg::Done { conn: id, token } => {
+                        let keep = match conns.get_mut(&id) {
+                            None => continue,
+                            Some(conn) => {
+                                conn.session.on_complete(token);
+                                pump(&epoll, &self.counters, conn, &mut buf)
+                            }
+                        };
+                        if !keep {
+                            if let Some(conn) = conns.remove(&id) {
+                                drop_conn(&epoll, &self.counters, conn);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        for (_, conn) in conns.drain() {
+            drop_conn(&epoll, &self.counters, conn);
+        }
+    }
+
+    /// Accept until `WouldBlock`, dealing connections round-robin
+    /// across loops by id.
+    fn accept_burst(
+        &self,
+        epoll: &Epoll,
+        conns: &mut HashMap<u64, Conn>,
+        buf: &mut [u8],
+    ) {
+        let Some(listener) = &self.listener else { return };
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.counters.open_connections.load(Ordering::Relaxed)
+                        >= self.config.max_connections
+                    {
+                        self.counters.rejected_total.fetch_add(1, Ordering::Relaxed);
+                        let _ = reject_overloaded(&stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.counters.accepted_total.fetch_add(1, Ordering::Relaxed);
+                    self.counters.open_connections.fetch_add(1, Ordering::Relaxed);
+                    let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                    let target = (id % self.inboxes.len() as u64) as usize;
+                    if target == self.index {
+                        self.install(epoll, conns, id, stream, buf);
+                    } else {
+                        self.inboxes[target].push(LoopMsg::Conn { id, stream });
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // e.g. EMFILE: retry on the next tick
+            }
+        }
+    }
+
+    /// Register a dealt connection with this loop and run its first
+    /// read pass (bytes may have landed before registration; with
+    /// edge-triggering that edge is already spent).
+    fn install(
+        &self,
+        epoll: &Epoll,
+        conns: &mut HashMap<u64, Conn>,
+        id: u64,
+        stream: TcpStream,
+        buf: &mut [u8],
+    ) {
+        let inbox = self.inboxes[self.index].clone();
+        let ready: ReadyFn = Arc::new(move |token| inbox.push(LoopMsg::Done { conn: id, token }));
+        let session_cfg = SessionConfig {
+            max_frame_len: self.config.max_frame_len,
+            write_queue_cap: self.config.write_queue_cap,
+            default_conv_threshold: self.config.default_conv_threshold,
+        };
+        let session = Session::new(self.pool.clone(), &session_cfg, ready);
+        let interest = EPOLLIN | EPOLLRDHUP | EPOLLET;
+        if epoll.add(stream.as_raw_fd(), interest, id).is_err() {
+            self.counters.open_connections.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let mut conn = Conn { id, stream, session, interest, reading: true };
+        let keep = read_pass(&mut conn, buf) && pump(epoll, &self.counters, &mut conn, buf);
+        if keep {
+            conns.insert(id, conn);
+        } else {
+            drop_conn(epoll, &self.counters, conn);
+        }
+    }
+}
+
+/// Read to `WouldBlock` (or until backpressure parks the session),
+/// feeding the session. Returns false on EOF or a socket error.
+fn read_pass(conn: &mut Conn, buf: &mut [u8]) -> bool {
+    while conn.session.wants_read() {
+        match (&conn.stream).read(buf) {
+            Ok(0) => return false, // peer closed
+            Ok(n) => conn.session.on_bytes(&buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Flush to `WouldBlock`. Returns false on a socket error.
+fn flush_pass(conn: &mut Conn) -> bool {
+    while conn.session.has_output() {
+        match (&conn.stream).write(conn.session.out_slice()) {
+            Ok(0) => return false,
+            Ok(n) => conn.session.consume_out(n),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Settle a connection after any activity: flush, re-arm interest, and
+/// resume reading when backpressure clears (the spent read edge is
+/// re-run by hand). Returns false when the connection should close.
+fn pump(epoll: &Epoll, counters: &ConnCounters, conn: &mut Conn, buf: &mut [u8]) -> bool {
+    loop {
+        if !flush_pass(conn) {
+            return false;
+        }
+        let wants_read = conn.session.wants_read();
+        if wants_read && !conn.reading {
+            // Backpressure cleared: interest was parked, so the kernel
+            // buffer may hold bytes no future edge will announce.
+            conn.reading = true;
+            if !read_pass(conn, buf) {
+                return false;
+            }
+            continue; // the read may have enqueued more output
+        }
+        if !wants_read && conn.reading {
+            conn.reading = false;
+            counters.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+        }
+        break;
+    }
+    if conn.session.should_close() {
+        return false;
+    }
+    let mut want = EPOLLRDHUP | EPOLLET;
+    if conn.reading {
+        want |= EPOLLIN;
+    }
+    if conn.session.has_output() {
+        want |= EPOLLOUT;
+    }
+    if want != conn.interest {
+        if epoll.modify(conn.stream.as_raw_fd(), want, conn.id).is_err() {
+            return false;
+        }
+        conn.interest = want;
+    }
+    true
+}
+
+fn drop_conn(epoll: &Epoll, counters: &ConnCounters, mut conn: Conn) {
+    let _ = epoll.delete(conn.stream.as_raw_fd());
+    conn.session.abort();
+    counters.open_connections.fetch_sub(1, Ordering::Relaxed);
+}

@@ -66,24 +66,47 @@
 //! The reply's `early_stop` flag marks convergence-controller
 //! retirement (`nfe` then reports the evals actually consumed).
 //!
-//! Threads + channels, no async runtime (the offline registry closure
-//! carries no tokio): one acceptor, one handler thread per connection,
-//! all sharing the [`WorkerPool`] handle. Handler threads block on
-//! their request's ticket, so slow requests never head-of-line-block
-//! other connections; the pool's global admission control and the
-//! per-shard queues are the shared backpressure points.
+//! Two front ends share one protocol implementation, no async runtime
+//! (the offline registry closure carries no tokio):
+//!
+//! * [`Server`] — the classic thread-per-connection path: a blocking
+//!   acceptor, one handler thread per connection, handlers block on
+//!   their request's ticket. Simple and portable; its per-connection
+//!   thread cost caps it at tens of connections.
+//! * [`gateway::Gateway`] (Linux) — the readiness-based path: a small
+//!   fixed pool of epoll event loops multiplexes thousands of
+//!   connections with no blocking reads, bounded per-connection write
+//!   queues that park read interest when full, and admission-aware
+//!   accept throttling (DESIGN.md §13).
+//!
+//! The layering keeps exactly one protocol on the wire: [`codec`]
+//! frames bytes into JSON lines, [`protocol`] parses them,
+//! [`dispatch_async`] routes ops to the [`WorkerPool`] (the blocking
+//! [`dispatch`] wraps it), and [`session`] is the per-connection state
+//! machine the gateway's [`transport`] layer drives. Both paths answer
+//! byte-identically, so the stock [`client::Client`] cannot tell them
+//! apart — including cross-connection `cancel`/`trace` tag routing.
 
 pub mod client;
+pub mod codec;
+#[cfg(target_os = "linux")]
+pub mod gateway;
 pub mod protocol;
+pub mod session;
+#[cfg(target_os = "linux")]
+pub mod transport;
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
-use crate::coordinator::{QosClass, SubmitError};
+use crate::coordinator::{
+    CancelHandle, CompletionNotify, ConnCounters, QosClass, SamplingResult, SubmitError,
+};
 use crate::json::Json;
-use crate::pool::WorkerPool;
+use crate::pool::{PoolTicket, WorkerPool};
 use protocol::{parse_request, result_to_json, Request};
 
 /// Server configuration.
@@ -117,50 +140,68 @@ impl Server {
     pub fn start(pool: Arc<WorkerPool>, config: ServerConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(&config.addr)?;
         let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let live = Arc::new(AtomicUsize::new(0));
+        let counters = Arc::new(ConnCounters::new());
+        pool.register_conn_counters(counters.clone());
 
         let acceptor = std::thread::Builder::new()
             .name("era-acceptor".into())
             .spawn(move || {
-                let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::Relaxed) {
+                // The accept is blocking (no poll/sleep spin; shutdown
+                // wakes it with a dummy connect). Finished handlers
+                // report their id on `done_rx` and are joined on the
+                // next accept, so the handler map cannot grow past the
+                // connection cap plus the not-yet-reaped stragglers.
+                let (done_tx, done_rx) = mpsc::channel::<u64>();
+                let mut handlers: HashMap<u64, std::thread::JoinHandle<()>> = HashMap::new();
+                let mut next_conn: u64 = 0;
+                loop {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            if live.load(Ordering::Relaxed) >= config.max_connections {
+                            if stop2.load(Ordering::Relaxed) {
+                                break; // the shutdown wake-up connect
+                            }
+                            while let Ok(id) = done_rx.try_recv() {
+                                if let Some(h) = handlers.remove(&id) {
+                                    let _ = h.join();
+                                }
+                            }
+                            if counters.open_connections.load(Ordering::Relaxed)
+                                >= config.max_connections
+                            {
+                                counters.rejected_total.fetch_add(1, Ordering::Relaxed);
                                 let _ = reject_overloaded(&stream);
                                 continue;
                             }
-                            live.fetch_add(1, Ordering::Relaxed);
+                            counters.accepted_total.fetch_add(1, Ordering::Relaxed);
+                            counters.open_connections.fetch_add(1, Ordering::Relaxed);
+                            let id = next_conn;
+                            next_conn += 1;
                             let pool = pool.clone();
-                            let live2 = live.clone();
+                            let counters2 = counters.clone();
                             let stop3 = stop2.clone();
+                            let done = done_tx.clone();
                             let conv_threshold = config.default_conv_threshold;
-                            handlers.push(
-                                std::thread::Builder::new()
-                                    .name("era-conn".into())
-                                    .spawn(move || {
-                                        let _ = handle_connection(
-                                            stream,
-                                            &pool,
-                                            &stop3,
-                                            conv_threshold,
-                                        );
-                                        live2.fetch_sub(1, Ordering::Relaxed);
-                                    })
-                                    .expect("spawn handler"),
-                            );
-                            handlers.retain(|h| !h.is_finished());
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            let handle = std::thread::Builder::new()
+                                .name("era-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(
+                                        stream,
+                                        &pool,
+                                        &stop3,
+                                        conv_threshold,
+                                    );
+                                    counters2.open_connections.fetch_sub(1, Ordering::Relaxed);
+                                    let _ = done.send(id);
+                                })
+                                .expect("spawn handler");
+                            handlers.insert(id, handle);
                         }
                         Err(_) => break,
                     }
                 }
-                for h in handlers {
+                for (_, h) in handlers {
                     let _ = h.join();
                 }
             })
@@ -176,7 +217,14 @@ impl Server {
     /// Stop accepting and join the acceptor (open connections finish
     /// their in-flight line and exit on the next read).
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept; the acceptor sees the stop flag
+        // before spawning a handler for this dummy connection.
+        let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
@@ -185,10 +233,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -237,11 +282,57 @@ fn handle_connection(
     Ok(())
 }
 
+/// Outcome of dispatching one protocol line without blocking.
+pub(crate) enum Dispatched {
+    /// The reply is ready now (control ops, parse and submit errors).
+    Immediate(Json),
+    /// A sample was admitted; the reply arrives through the ticket
+    /// (its submit-time [`CompletionNotify`] fires when it lands).
+    Pending {
+        ticket: PoolTicket,
+        return_samples: bool,
+        tag: Option<u64>,
+        handle: CancelHandle,
+    },
+}
+
+/// Render a finished sample's reply (shared by both server paths).
+pub(crate) fn sample_reply(out: Result<SamplingResult, String>, return_samples: bool) -> Json {
+    match out {
+        Err(e) => err_json(&e),
+        Ok(res) => result_to_json(&res, return_samples),
+    }
+}
+
 /// Handle one protocol line. Split out for direct unit testing.
 /// `default_conv_threshold` is the server-level convergence default
 /// inherited by non-strict requests that did not set their own.
 pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> Json {
-    match parse_request(line) {
+    match dispatch_async(line, pool, default_conv_threshold, None) {
+        Dispatched::Immediate(json) => json,
+        Dispatched::Pending { ticket, return_samples, tag, handle } => {
+            let out = ticket.wait();
+            // Identity-checked: a tag re-used by a newer request
+            // in the meantime is not evicted.
+            if let Some(tag) = tag {
+                pool.deregister_tag(tag, &handle);
+            }
+            sample_reply(out, return_samples)
+        }
+    }
+}
+
+/// The non-blocking core of [`dispatch`]: control ops answer
+/// immediately; an admitted `sample` comes back as
+/// [`Dispatched::Pending`] with `notify` armed to fire once its result
+/// lands in the ticket (the event-loop path polls, never parks).
+pub(crate) fn dispatch_async(
+    line: &str,
+    pool: &WorkerPool,
+    default_conv_threshold: f64,
+    notify: Option<CompletionNotify>,
+) -> Dispatched {
+    let reply = match parse_request(line) {
         Err(e) => err_json(&format!("bad request: {e}")),
         Ok(Request::Ping) => {
             Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
@@ -254,6 +345,7 @@ pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> J
                 ("ok", Json::Bool(true)),
                 ("shards", Json::Num(stats.shards() as f64)),
                 ("placement", Json::Str(stats.placement.to_string())),
+                ("connections", stats.conn.to_json()),
                 ("per_shard", Json::Arr(per_shard)),
             ])
         }
@@ -286,26 +378,18 @@ pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> J
             {
                 spec.conv_threshold = default_conv_threshold;
             }
-            match pool.submit_tagged(spec, tag) {
+            match pool.submit_tagged_notify(spec, tag, notify) {
                 Err(SubmitError::QueueFull) => err_json("busy: queue full"),
                 Err(SubmitError::Shutdown) => err_json("shutting down"),
                 Err(SubmitError::Invalid(e)) => err_json(&format!("invalid: {e}")),
                 Ok(ticket) => {
                     let handle = ticket.cancel_handle();
-                    let out = ticket.wait();
-                    // Identity-checked: a tag re-used by a newer request
-                    // in the meantime is not evicted.
-                    if let Some(tag) = tag {
-                        pool.deregister_tag(tag, &handle);
-                    }
-                    match out {
-                        Err(e) => err_json(&e),
-                        Ok(res) => result_to_json(&res, return_samples),
-                    }
+                    return Dispatched::Pending { ticket, return_samples, tag, handle };
                 }
             }
         }
-    }
+    };
+    Dispatched::Immediate(reply)
 }
 
 fn err_json(msg: &str) -> Json {

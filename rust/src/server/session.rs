@@ -1,0 +1,380 @@
+//! Per-connection protocol session: a transport-agnostic state machine
+//! between raw bytes and the worker pool.
+//!
+//! The gateway's event loops own sockets and readiness; they delegate
+//! everything protocol-shaped to a [`Session`]: feed it whatever bytes
+//! the socket had ([`Session::on_bytes`]), drain its outgoing byte
+//! queue when the socket is writable ([`Session::out_slice`] /
+//! [`Session::consume_out`]), and poke it when a submitted request
+//! completes ([`Session::on_complete`]). The session never blocks and
+//! never touches a socket, so it unit-tests without any I/O and would
+//! ride any future transport (TLS, Unix sockets) unchanged.
+//!
+//! Control ops (`ping`, `stats`, `cancel`, ...) answer immediately.
+//! `sample` ops are submitted with a [`CompletionNotify`] that calls
+//! the session's ready callback with a per-request token; the owning
+//! loop routes that token back into [`Session::on_complete`], which
+//! polls the ticket (guaranteed ready — the notify fires after the
+//! result lands) and enqueues the reply. Several samples may be in
+//! flight on one connection at once; replies are written in completion
+//! order, which pipelining clients must match by their own bookkeeping
+//! (the stock [`super::client::Client`] runs one request at a time and
+//! never observes reordering).
+//!
+//! Backpressure: the outgoing queue is bounded by
+//! [`SessionConfig::write_queue_cap`]. While it is over the cap,
+//! [`Session::wants_read`] turns false and the owner deregisters read
+//! interest — a peer that stops draining replies stops being read,
+//! instead of growing an unbounded buffer server-side.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::{CancelHandle, CompletionNotify};
+use crate::json::Json;
+use crate::pool::{PoolTicket, WorkerPool};
+
+use super::codec::{encode_frame, FrameDecoder, MAX_FRAME_LEN};
+use super::{dispatch_async, err_json, sample_reply, Dispatched};
+
+/// Per-session protocol limits (shared by every connection of one
+/// gateway).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Cap on one unterminated request line; a peer exceeding it gets
+    /// one error reply and the connection closes (codec robustness
+    /// contract — the connection cannot resync past an unframed blob).
+    pub max_frame_len: usize,
+    /// Outgoing-queue size above which the session parks read interest.
+    pub write_queue_cap: usize,
+    /// Server-level convergence default inherited by non-strict
+    /// requests that did not set their own (see [`super::dispatch`]).
+    pub default_conv_threshold: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            max_frame_len: MAX_FRAME_LEN,
+            write_queue_cap: 256 * 1024,
+            default_conv_threshold: 0.0,
+        }
+    }
+}
+
+/// Callback into the owning event loop: "the request with this token
+/// finished; call [`Session::on_complete`] with it". Fired on the
+/// shard's loop thread, so implementations must only enqueue-and-wake.
+pub type ReadyFn = Arc<dyn Fn(u64) + Send + Sync>;
+
+struct PendingRequest {
+    ticket: PoolTicket,
+    return_samples: bool,
+    tag: Option<u64>,
+    handle: CancelHandle,
+}
+
+/// Outgoing byte queue with amortized-O(1) front consumption (same
+/// compaction discipline as [`FrameDecoder`]).
+struct OutBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+const OUT_COMPACT_THRESHOLD: usize = 16 * 1024;
+
+impl OutBuf {
+    fn new() -> OutBuf {
+        OutBuf { buf: Vec::new(), start: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    fn slice(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.start += n;
+        debug_assert!(self.start <= self.buf.len());
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= OUT_COMPACT_THRESHOLD {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+}
+
+/// One connection's protocol state. See the module docs for the
+/// ownership contract with the event loop.
+pub struct Session {
+    pool: Arc<WorkerPool>,
+    decoder: FrameDecoder,
+    out: OutBuf,
+    pending: HashMap<u64, PendingRequest>,
+    next_token: u64,
+    write_queue_cap: usize,
+    default_conv_threshold: f64,
+    on_ready: ReadyFn,
+    /// Set on a codec error: the reply queue drains, then the owner
+    /// closes the socket ([`Session::should_close`]).
+    closed: bool,
+}
+
+impl Session {
+    pub fn new(pool: Arc<WorkerPool>, config: &SessionConfig, on_ready: ReadyFn) -> Session {
+        Session {
+            pool,
+            decoder: FrameDecoder::with_cap(config.max_frame_len),
+            out: OutBuf::new(),
+            pending: HashMap::new(),
+            next_token: 0,
+            write_queue_cap: config.write_queue_cap.max(1),
+            default_conv_threshold: config.default_conv_threshold,
+            on_ready,
+            closed: false,
+        }
+    }
+
+    /// Feed freshly read bytes; dispatches every complete frame.
+    pub fn on_bytes(&mut self, bytes: &[u8]) {
+        if self.closed {
+            return;
+        }
+        self.decoder.push(bytes);
+        loop {
+            match self.decoder.next_frame() {
+                Ok(Some(frame)) => {
+                    // Blank lines are keepalive noise on the blocking
+                    // path too; skip without a reply.
+                    if frame.trim().is_empty() {
+                        continue;
+                    }
+                    self.dispatch_frame(&frame);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.enqueue(&err_json(&format!("bad request: {e}")));
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn dispatch_frame(&mut self, frame: &str) {
+        let token = self.next_token;
+        self.next_token += 1;
+        let on_ready = self.on_ready.clone();
+        let notify: CompletionNotify = Arc::new(move || on_ready(token));
+        match dispatch_async(frame, &self.pool, self.default_conv_threshold, Some(notify)) {
+            Dispatched::Immediate(json) => self.enqueue(&json),
+            Dispatched::Pending { ticket, return_samples, tag, handle } => {
+                // The notify may already have fired (completion raced
+                // the insert); that is fine — the wake is queued behind
+                // this call on the owning loop, and `on_complete` finds
+                // the entry once we insert it here.
+                self.pending.insert(token, PendingRequest { ticket, return_samples, tag, handle });
+            }
+        }
+    }
+
+    /// Route a completion token back into the session: polls the
+    /// ticket and enqueues the reply. Spurious or duplicate tokens are
+    /// ignored (the entry stays pending / is already gone).
+    pub fn on_complete(&mut self, token: u64) {
+        let Some(p) = self.pending.remove(&token) else { return };
+        match p.ticket.try_result() {
+            None => {
+                // Spurious wake: result not landed yet; keep waiting.
+                self.pending.insert(token, p);
+            }
+            Some(out) => {
+                // Identity-checked: a tag re-used by a newer request in
+                // the meantime is not evicted.
+                if let Some(tag) = p.tag {
+                    self.pool.deregister_tag(tag, &p.handle);
+                }
+                self.enqueue(&sample_reply(out, p.return_samples));
+            }
+        }
+    }
+
+    fn enqueue(&mut self, reply: &Json) {
+        encode_frame(&reply.to_string(), &mut self.out.buf);
+    }
+
+    /// False while the write queue is over cap (or the session is
+    /// closing): the owner should park read interest.
+    pub fn wants_read(&self) -> bool {
+        !self.closed && self.out.len() < self.write_queue_cap
+    }
+
+    pub fn has_output(&self) -> bool {
+        self.out.len() > 0
+    }
+
+    pub fn out_slice(&self) -> &[u8] {
+        self.out.slice()
+    }
+
+    /// Mark `n` outgoing bytes as written to the socket.
+    pub fn consume_out(&mut self, n: usize) {
+        self.out.consume(n);
+    }
+
+    /// True once a fatal protocol error's reply has fully drained.
+    pub fn should_close(&self) -> bool {
+        self.closed && self.out.len() == 0
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drop all in-flight state on disconnect: cancel pending tickets
+    /// (their replies are undeliverable; freeing pool capacity early
+    /// beats computing into the void) and release their tags.
+    pub fn abort(&mut self) {
+        for (_, p) in self.pending.drain() {
+            if let Some(tag) = p.tag {
+                self.pool.deregister_tag(tag, &p.handle);
+            }
+            p.ticket.cancel();
+        }
+        self.closed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MockBank, ModelBank};
+    use crate::pool::{PoolConfig, WorkerPool};
+    use crate::solvers::eps_model::AnalyticGmm;
+    use crate::solvers::schedule::VpSchedule;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn pool() -> Arc<WorkerPool> {
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> =
+            Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
+        Arc::new(WorkerPool::start(bank, PoolConfig::default()))
+    }
+
+    fn drain(s: &mut Session) -> Vec<String> {
+        let text = String::from_utf8(s.out_slice().to_vec()).unwrap();
+        let n = s.out_slice().len();
+        s.consume_out(n);
+        text.lines().map(|l| l.to_string()).collect()
+    }
+
+    fn ready_channel() -> (ReadyFn, mpsc::Receiver<u64>) {
+        let (tx, rx) = mpsc::channel();
+        (Arc::new(move |token| drop(tx.send(token))), rx)
+    }
+
+    #[test]
+    fn control_ops_answer_immediately_across_split_reads() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let mut s = Session::new(p.clone(), &SessionConfig::default(), ready);
+        s.on_bytes(b"{\"op\":\"pi");
+        assert!(!s.has_output(), "partial frame must not dispatch");
+        s.on_bytes(b"ng\"}\n{\"op\":\"stats\"}\n");
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 2);
+        assert!(replies[0].contains("\"pong\":true"), "{}", replies[0]);
+        assert!(replies[1].contains("\"shards\":1"), "{}", replies[1]);
+        assert!(s.wants_read());
+        assert!(!s.should_close());
+    }
+
+    #[test]
+    fn sample_completes_via_ready_token_and_try_result() {
+        let p = pool();
+        let (ready, rx) = ready_channel();
+        let mut s = Session::new(p.clone(), &SessionConfig::default(), ready);
+        s.on_bytes(b"{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":4,\"seed\":1}\n");
+        assert_eq!(s.pending_requests(), 1);
+        assert!(!s.has_output(), "sample reply must not be written before completion");
+        let token = rx.recv_timeout(Duration::from_secs(10)).expect("completion notify");
+        s.on_complete(token);
+        assert_eq!(s.pending_requests(), 0);
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].contains("\"ok\":true"), "{}", replies[0]);
+        assert!(replies[0].contains("\"rows\":4"), "{}", replies[0]);
+        // A duplicate wake for a retired token is a no-op.
+        s.on_complete(token);
+        assert!(!s.has_output());
+    }
+
+    #[test]
+    fn bad_request_line_gets_error_reply() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let mut s = Session::new(p, &SessionConfig::default(), ready);
+        s.on_bytes(b"not json\n\n  \n");
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 1, "blank lines are skipped without replies");
+        assert!(replies[0].contains("bad request"), "{}", replies[0]);
+        assert!(!s.should_close(), "a malformed line is not fatal");
+    }
+
+    #[test]
+    fn oversized_frame_is_fatal_after_the_error_drains() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let cfg = SessionConfig { max_frame_len: 16, ..SessionConfig::default() };
+        let mut s = Session::new(p, &cfg, ready);
+        s.on_bytes(&[b'x'; 64]);
+        assert!(!s.wants_read());
+        assert!(!s.should_close(), "error reply still queued");
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].contains("frame exceeds"), "{}", replies[0]);
+        assert!(s.should_close(), "close once the error reply drained");
+        s.on_bytes(b"{\"op\":\"ping\"}\n");
+        assert!(!s.has_output(), "a closed session ignores further input");
+    }
+
+    #[test]
+    fn full_write_queue_parks_read_interest_until_drained() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let cfg = SessionConfig { write_queue_cap: 8, ..SessionConfig::default() };
+        let mut s = Session::new(p, &cfg, ready);
+        s.on_bytes(b"{\"op\":\"ping\"}\n");
+        assert!(s.has_output());
+        assert!(!s.wants_read(), "queue over cap must park reads");
+        let n = s.out_slice().len();
+        s.consume_out(n);
+        assert!(s.wants_read(), "drained queue resumes reads");
+    }
+
+    #[test]
+    fn abort_cancels_pending_and_releases_tags() {
+        let p = pool();
+        let (ready, rx) = ready_channel();
+        let mut s = Session::new(p.clone(), &SessionConfig::default(), ready);
+        s.on_bytes(
+            b"{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":4,\"seed\":2,\"tag\":77}\n",
+        );
+        assert_eq!(s.pending_requests(), 1);
+        s.abort();
+        assert_eq!(s.pending_requests(), 0);
+        assert!(s.should_close());
+        // The notify still fires when the cancelled request retires;
+        // the token no longer resolves, which must be harmless.
+        if let Ok(token) = rx.recv_timeout(Duration::from_secs(10)) {
+            s.on_complete(token);
+        }
+        assert!(!p.cancel_tag(77), "aborted session must release its tag");
+    }
+}

@@ -1,0 +1,343 @@
+//! Integration tests over the readiness gateway: the same wire
+//! protocol as `integration_server.rs`, served by epoll event loops
+//! instead of a thread per connection. The stock blocking [`Client`]
+//! drives everything — wire compatibility is the point — plus
+//! gateway-specific behaviours: connection multiplexing far past the
+//! io-thread count, reply interleaving for pipelined connections,
+//! polite over-cap rejection, and the connection telemetry gauges.
+
+#![cfg(target_os = "linux")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use era_solver::coordinator::service::{MockBank, ModelBank};
+use era_solver::coordinator::{BatchPolicy, CoordinatorConfig, RequestSpec};
+use era_solver::metrics;
+use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
+use era_solver::server::client::{generate_load, Client};
+use era_solver::server::gateway::{Gateway, GatewayConfig};
+use era_solver::solvers::eps_model::AnalyticGmm;
+use era_solver::solvers::schedule::VpSchedule;
+
+fn mock_pool(shards: usize, config: CoordinatorConfig) -> Arc<WorkerPool> {
+    let sched = VpSchedule::default();
+    let bank: Arc<dyn ModelBank> =
+        Arc::new(MockBank::new(sched).with("gmm8", Box::new(AnalyticGmm::gmm8(sched))));
+    Arc::new(WorkerPool::start(
+        bank,
+        PoolConfig {
+            shards,
+            placement: PlacementPolicy::RoundRobin,
+            shard: config,
+            max_inflight_rows: 0,
+        },
+    ))
+}
+
+fn gw_stack(shards: usize, config: CoordinatorConfig) -> (Gateway, Arc<WorkerPool>) {
+    let pool = mock_pool(shards, config);
+    let gw = Gateway::start(pool.clone(), GatewayConfig::default()).expect("bind gateway");
+    (gw, pool)
+}
+
+fn spec(n: usize, seed: u64) -> RequestSpec {
+    RequestSpec { n_samples: n, seed, ..Default::default() }
+}
+
+#[test]
+fn ping_stats_and_sample_roundtrip() {
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let mut c = Client::connect(gw.local_addr()).unwrap();
+    c.ping().unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("finished").as_usize(), Some(0));
+    let (samples, secs) = c.sample(&spec(300, 4)).unwrap();
+    assert_eq!((samples.rows(), samples.cols()), (300, 2));
+    assert!(secs >= 0.0);
+    let cov = metrics::mode_coverage(&samples, &era_solver::data::gmm8_modes(), 0.5);
+    assert!(cov > 0.9, "coverage {cov}");
+    gw.shutdown();
+}
+
+#[test]
+fn gateway_samples_match_the_in_process_solver_bitwise() {
+    // Strongest wire-compat check: the gateway path must be numerically
+    // identical to driving the solver directly (same seed, same model).
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let mut c = Client::connect(gw.local_addr()).unwrap();
+    let s = spec(64, 9);
+    let (samples, _) = c.sample(&s).unwrap();
+
+    let sched = VpSchedule::default();
+    let model = AnalyticGmm::gmm8(sched);
+    let mut solver = s.build_solver(sched, 2).unwrap();
+    let direct = era_solver::solvers::sample_with(&mut *solver, &model);
+    assert_eq!(samples.as_slice(), direct.as_slice());
+    gw.shutdown();
+}
+
+#[test]
+fn malformed_lines_get_error_responses() {
+    use std::io::{BufRead, BufReader, Write};
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let stream = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for bad in ["not json", "{\"op\":\"nope\"}", "{\"op\":\"sample\",\"solver\":\"wat\"}"] {
+        writeln!(writer, "{bad}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = era_solver::json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false), "line: {bad}");
+        assert!(j.get("error").as_str().is_some());
+    }
+    gw.shutdown();
+}
+
+#[test]
+fn pipelined_control_ops_answer_while_a_sample_is_in_flight() {
+    // A pipelining connection sends a slow sample then a ping without
+    // reading in between. The blocking path would serialise; the
+    // gateway answers the ping immediately — no blocking reads, no
+    // per-request parking.
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 8192,
+            min_rows: 4096, // parks the sample until cancel/shutdown
+            max_wait: Duration::from_secs(5),
+        },
+        ..Default::default()
+    };
+    let (gw, pool) = gw_stack(1, cfg);
+    let stream = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let slow = br#"{"op":"sample","dataset":"gmm8","n_samples":16,"seed":1,"tag":31}"#;
+    writer.write_all(slow).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let first = era_solver::json::parse(&line).unwrap();
+    assert_eq!(first.get("pong").as_bool(), Some(true), "ping must overtake the parked sample");
+    // Unpark the sample by cancelling it; its (cancelled) reply arrives.
+    assert!(pool.cancel_tag(31));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let second = era_solver::json::parse(&line).unwrap();
+    assert_eq!(second.get("ok").as_bool(), Some(true));
+    assert_eq!(second.get("cancelled").as_bool(), Some(true));
+    gw.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served_with_fusion() {
+    let cfg = CoordinatorConfig {
+        max_active: 16,
+        queue_capacity: 64,
+        policy: BatchPolicy {
+            max_rows: 256,
+            min_rows: 32,
+            max_wait: Duration::from_millis(5),
+        },
+        ..Default::default()
+    };
+    let (gw, pool) = gw_stack(1, cfg);
+    let report = generate_load(gw.local_addr(), &spec(32, 0), 6, 4);
+    assert_eq!(report.errors, 0, "all requests should succeed");
+    assert_eq!(report.requests, 24);
+    assert!(report.throughput_rows > 0.0);
+    // Cross-request fusion must have happened under this load.
+    assert!(pool.stats().occupancy() > 32.0, "occupancy {}", pool.stats().occupancy());
+    gw.shutdown();
+}
+
+#[test]
+fn many_idle_connections_multiplex_on_two_io_threads() {
+    let (gw, pool) = gw_stack(1, CoordinatorConfig::default());
+    let mut idle = Vec::new();
+    for _ in 0..100 {
+        idle.push(Client::connect(gw.local_addr()).unwrap());
+    }
+    // The gauge counts every open connection (poll briefly: accepts
+    // finish on the event loops, not in connect()).
+    let mut open = 0;
+    for _ in 0..500 {
+        open = pool.conn_snapshot().open_connections;
+        if open >= 100 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(open >= 100, "open_connections gauge {open}");
+    // Service stays live across the idle herd, on every connection.
+    let mut active = Client::connect(gw.local_addr()).unwrap();
+    let (samples, _) = active.sample(&spec(16, 7)).unwrap();
+    assert_eq!(samples.rows(), 16);
+    idle.last_mut().unwrap().ping().unwrap();
+    idle[0].ping().unwrap();
+    drop(idle);
+    // Disconnects drain the gauge.
+    let mut open = usize::MAX;
+    for _ in 0..500 {
+        open = pool.conn_snapshot().open_connections;
+        if open <= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(open <= 1, "gauge after disconnects {open}");
+    let snap = pool.conn_snapshot();
+    assert!(snap.accepted_total >= 101, "accepted {}", snap.accepted_total);
+    gw.shutdown();
+}
+
+#[test]
+fn over_cap_connections_get_the_overloaded_error() {
+    use std::io::{BufRead, BufReader};
+    let pool = mock_pool(1, CoordinatorConfig::default());
+    let gw = Gateway::start(
+        pool.clone(),
+        GatewayConfig { max_connections: 2, ..GatewayConfig::default() },
+    )
+    .unwrap();
+    let mut keep = Vec::new();
+    for _ in 0..2 {
+        let mut c = Client::connect(gw.local_addr()).unwrap();
+        c.ping().unwrap(); // forces the accept to have happened
+        keep.push(c);
+    }
+    let extra = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+    let mut reader = BufReader::new(extra);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = era_solver::json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(false));
+    assert_eq!(j.get("error").as_str(), Some("server overloaded"));
+    assert!(pool.conn_snapshot().rejected_total >= 1);
+    gw.shutdown();
+}
+
+#[test]
+fn cross_connection_cancel_and_trace_through_the_gateway() {
+    // Mirrors the blocking path's cancelled-trace test: a request
+    // parked behind a huge min_rows policy is cancelled by tag from a
+    // second connection; the submitter gets its partial cancelled
+    // reply and the trace is terminal at the cancel event.
+    let cfg = CoordinatorConfig {
+        policy: BatchPolicy {
+            max_rows: 8192,
+            min_rows: 4096,
+            max_wait: Duration::from_secs(5),
+        },
+        ..Default::default()
+    };
+    let (gw, _pool) = gw_stack(1, cfg);
+    let addr = gw.local_addr();
+    let tag = 9001u64;
+    let submitter = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.sample_tagged(&spec(16, 1), Some(tag)).unwrap()
+    });
+    let mut c2 = Client::connect(addr).unwrap();
+    let mut cancelled = false;
+    for _ in 0..500 {
+        if c2.cancel(tag).unwrap() {
+            cancelled = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(cancelled, "tag never registered");
+    let out = submitter.join().unwrap();
+    assert!(out.cancelled);
+    let trace = c2.trace(tag).unwrap();
+    let events = trace.get("events").as_arr().unwrap();
+    let kinds: Vec<&str> = events.iter().map(|e| e.get("kind").as_str().unwrap()).collect();
+    assert_eq!(kinds.last(), Some(&"cancelled"), "kinds: {kinds:?}");
+    assert_eq!(kinds.iter().filter(|k| **k == "cancelled").count(), 1);
+    gw.shutdown();
+}
+
+#[test]
+fn disconnect_mid_session_and_mid_request_is_harmless() {
+    let (gw, pool) = gw_stack(1, CoordinatorConfig::default());
+    {
+        let mut c = Client::connect(gw.local_addr()).unwrap();
+        c.ping().unwrap();
+        // drop without closing politely
+    }
+    {
+        use std::io::Write;
+        // Drop with a request still in flight: the gateway aborts the
+        // session and cancels its ticket.
+        let mut stream = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+        stream
+            .write_all(b"{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":8,\"seed\":3}\n")
+            .unwrap();
+    }
+    let mut c2 = Client::connect(gw.local_addr()).unwrap();
+    let (samples, _) = c2.sample(&spec(8, 1)).unwrap();
+    assert_eq!(samples.rows(), 8);
+    drop(c2);
+    let mut open = usize::MAX;
+    for _ in 0..500 {
+        open = pool.conn_snapshot().open_connections;
+        if open == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(open, 0, "all disconnects must drain the gauge");
+    gw.shutdown();
+}
+
+#[test]
+fn stats_and_metrics_carry_connection_telemetry() {
+    let (gw, _pool) = gw_stack(2, CoordinatorConfig::default());
+    let mut c = Client::connect(gw.local_addr()).unwrap();
+    let (samples, _) = c.sample(&spec(16, 5)).unwrap();
+    assert_eq!(samples.rows(), 16);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("shards").as_usize(), Some(2));
+    assert_eq!(stats.get("finished").as_usize(), Some(1));
+    let conns = stats.get("connections");
+    assert!(conns.get("open").as_usize().unwrap_or(0) >= 1, "{}", stats.to_string());
+    assert!(conns.get("accepted").as_usize().unwrap_or(0) >= 1);
+    let shards = c.shards().unwrap();
+    assert!(shards.get("connections").get("accepted").as_usize().unwrap_or(0) >= 1);
+    let text = c.metrics().unwrap();
+    assert!(text.contains("# TYPE era_open_connections gauge"), "{text}");
+    assert!(text.contains("# TYPE era_connections_accepted_total counter"));
+    assert!(text.contains("# TYPE era_backpressure_stalls_total counter"));
+    gw.shutdown();
+}
+
+#[test]
+fn oversized_request_line_is_refused_and_the_connection_closed() {
+    use std::io::{BufRead, BufReader, Write};
+    let pool = mock_pool(1, CoordinatorConfig::default());
+    let gw = Gateway::start(
+        pool,
+        GatewayConfig { max_frame_len: 1024, ..GatewayConfig::default() },
+    )
+    .unwrap();
+    let stream = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let blob = vec![b'x'; 4096]; // no newline: an unframed hostile blob
+    writer.write_all(&blob).unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = era_solver::json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(false));
+    assert!(j.get("error").as_str().unwrap_or("").contains("frame exceeds"), "{line}");
+    // The server closes after the error: next read is EOF.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close");
+    gw.shutdown();
+}

@@ -11,6 +11,7 @@ use era_solver::kernels::{PlanView, TrajectoryPlan};
 use era_solver::linalg;
 use era_solver::metrics::{self, Moments};
 use era_solver::rng::Rng;
+use era_solver::server::codec::{encode_frame, CodecError, FrameDecoder};
 use era_solver::solvers::era::select_indices;
 use era_solver::solvers::lagrange;
 use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
@@ -704,5 +705,134 @@ fn prop_concurrent_recording_keeps_span_boundaries_ordered() {
                 "case {case} trace {t}: timestamps regressed"
             );
         }
+    }
+}
+
+/// Random frame payload: printable bytes only, so no accidental `\n`
+/// and no trailing `\r` for the decoder to strip.
+fn random_frame_line(rng: &mut Rng) -> String {
+    const PALETTE: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ\
+                             0123456789{}\":,.[]-+_ \t";
+    let len = rng.below(40) as usize;
+    (0..len).map(|_| PALETTE[rng.below(PALETTE.len() as u64) as usize] as char).collect()
+}
+
+#[test]
+fn prop_codec_reassembles_frames_under_arbitrary_splits() {
+    // Any sequence of frames, serialized (mixing `\n` and `\r\n`
+    // terminators) and fed to the decoder in arbitrary chunks — byte at
+    // a time, random splits, or all at once — reassembles to exactly
+    // the original frame sequence.
+    let mut rng = Rng::new(0xC0DEC);
+    for case in 0..CASES {
+        let n_frames = 1 + rng.below(8) as usize;
+        let want: Vec<String> = (0..n_frames).map(|_| random_frame_line(&mut rng)).collect();
+        let mut bytes = Vec::new();
+        for line in &want {
+            bytes.extend_from_slice(line.as_bytes());
+            bytes.extend_from_slice(if rng.below(2) == 0 { b"\n" } else { b"\r\n" });
+        }
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut at = 0;
+        while at < bytes.len() {
+            let chunk = match rng.below(3) {
+                0 => 1,
+                1 => 1 + rng.below(7) as usize,
+                _ => bytes.len() - at,
+            };
+            let end = (at + chunk).min(bytes.len());
+            d.push(&bytes[at..end]);
+            at = end;
+            while let Some(f) = d.next_frame().expect("printable frames never overflow") {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, want, "case {case}");
+        assert_eq!(d.buffered(), 0, "case {case}: bytes left over");
+    }
+}
+
+#[test]
+fn prop_codec_truncated_frame_is_need_more_never_partial() {
+    // An unterminated frame is `Ok(None)` at every prefix (never a
+    // partial frame, never an error while under the cap); the newline
+    // then delivers it whole.
+    let mut rng = Rng::new(0x7EED5);
+    for case in 0..CASES {
+        let line = random_frame_line(&mut rng);
+        let mut d = FrameDecoder::new();
+        let mut at = 0;
+        while at < line.len() {
+            let end = (at + 1 + rng.below(5) as usize).min(line.len());
+            d.push(&line.as_bytes()[at..end]);
+            at = end;
+            assert_eq!(d.next_frame(), Ok(None), "case {case}: partial at byte {at}");
+        }
+        d.push(b"\n");
+        assert_eq!(d.next_frame(), Ok(Some(line)), "case {case}");
+        assert_eq!(d.next_frame(), Ok(None), "case {case}: trailing frame");
+    }
+}
+
+#[test]
+fn prop_codec_oversized_line_errors_deterministically() {
+    // A line that outgrows the cap without a newline is a deterministic
+    // `Oversized` error naming the cap, and the decoder stays errored
+    // as more bytes arrive (the connection cannot resync).
+    let mut rng = Rng::new(0xB16);
+    for case in 0..CASES {
+        let cap = 1 + rng.below(64) as usize;
+        let mut d = FrameDecoder::with_cap(cap);
+        let mut pushed = 0usize;
+        let mut first_err: Option<CodecError> = None;
+        while pushed <= cap + 32 {
+            let chunk = 1 + rng.below(16) as usize;
+            d.push(&vec![b'x'; chunk]);
+            pushed += chunk;
+            match d.next_frame() {
+                Ok(None) => {
+                    assert!(pushed <= cap, "case {case}: {pushed} buffered over cap {cap}")
+                }
+                Ok(Some(f)) => panic!("case {case}: phantom frame {f:?}"),
+                Err(e) => {
+                    assert!(pushed > cap, "case {case}: early error {e} at {pushed}/{cap}");
+                    let CodecError::Oversized { len, cap: seen } = &e;
+                    assert_eq!((*len, *seen), (pushed, cap), "case {case}");
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        assert!(first_err.is_some(), "case {case}: cap {cap} never tripped");
+        // Still errored on a call with no new bytes.
+        assert!(d.next_frame().is_err(), "case {case}: error not sticky");
+    }
+}
+
+#[test]
+fn prop_codec_never_panics_on_binary_garbage() {
+    // Arbitrary binary input (embedded newlines, invalid UTF-8, NULs)
+    // never panics: every frame comes back as a lossily-decoded string
+    // and re-encoding conserves the frame count.
+    let mut rng = Rng::new(0x6A4BA6E);
+    for case in 0..CASES {
+        let len = rng.below(512) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let newlines = bytes.iter().filter(|&&b| b == b'\n').count();
+        let mut d = FrameDecoder::new();
+        let mut frames = 0usize;
+        let mut at = 0;
+        while at < bytes.len() {
+            let end = (at + 1 + rng.below(32) as usize).min(bytes.len());
+            d.push(&bytes[at..end]);
+            at = end;
+            while let Some(f) = d.next_frame().expect("under default cap") {
+                let mut re = Vec::new();
+                encode_frame(&f, &mut re);
+                assert_eq!(re.last(), Some(&b'\n'));
+                frames += 1;
+            }
+        }
+        assert_eq!(frames, newlines, "case {case}: frame count vs newline count");
     }
 }
