@@ -19,6 +19,7 @@ use era_solver::experiments::report::{write_markdown_table, Table};
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::runtime::PjRtEngine;
 use era_solver::server::client::{generate_load, generate_load_with, Client, LoadOptions};
+use era_solver::server::protocol::Encoding;
 use era_solver::server::{Server, ServerConfig};
 use era_solver::solvers::TaskSpec;
 
@@ -31,6 +32,7 @@ const OPTS: &[OptSpec] = &[
     OptSpec { name: "requests", value: Some("n"), help: "requests per worker (default: 6)" },
     OptSpec { name: "connections", value: Some("n"), help: "load-gen connections, one per worker (default: = concurrency)" },
     OptSpec { name: "reuse", value: Some("0|1"), help: "1: each worker keeps one connection across its requests; 0: reconnect per request (default: 1)" },
+    OptSpec { name: "encoding", value: Some("json|bin"), help: "sample-delivery wire encoding: json = decimal-text rows, bin = JSON header + counted little-endian f32 payload (default: json)" },
     OptSpec { name: "shards", value: Some("n"), help: "pool shards (default: 1)" },
     OptSpec { name: "executors", value: Some("n"), help: "engine executors per shard (default: 1)" },
     OptSpec { name: "pipeline-depth", value: Some("n"), help: "dispatch rounds in flight per shard (default: 2)" },
@@ -97,6 +99,9 @@ fn run() -> Result<(), String> {
     let requests = args.usize_or("requests", 6)?;
     let connections = args.usize_or("connections", concurrency)?.max(1);
     let reuse = args.usize_or("reuse", 1)? != 0;
+    let enc_name = args.str_or("encoding", "json");
+    let encoding = Encoding::parse(&enc_name)
+        .ok_or_else(|| format!("unknown encoding '{enc_name}' (expected json or bin)"))?;
     let shards = args.usize_or("shards", 1)?.max(1);
     let executors = args.usize_or("executors", 1)?.max(1);
     let pipeline_depth = args.usize_or("pipeline-depth", 2)?.max(1);
@@ -185,13 +190,14 @@ fn run() -> Result<(), String> {
     let report = generate_load_with(
         addr,
         &spec,
-        &LoadOptions { concurrency: connections, requests_per_worker: requests, reuse },
+        &LoadOptions { concurrency: connections, requests_per_worker: requests, reuse, encoding },
     );
     println!(
-        "\nload ({} conns, reuse={}): {} requests ({} errors) in {:.2}s -> {:.0} samples/s, \
-         p50 {:.0}ms p99 {:.0}ms",
+        "\nload ({} conns, reuse={}, encoding={}): {} requests ({} errors) in {:.2}s -> \
+         {:.0} samples/s, p50 {:.0}ms p99 {:.0}ms",
         connections,
         reuse,
+        encoding.label(),
         report.requests,
         report.errors,
         report.wall_seconds,

@@ -17,12 +17,61 @@
 //! - `gauge_ok`    — 1.0 when `open_connections` telemetry saw the
 //!   whole gateway herd.
 //!
-//! Absolute p99s ride along uncommitted for trend tracking.
+//! A third phase measures **sample delivery** (ISSUE: zero-copy binary
+//! frames): dim-512 `return_samples` requests over the gateway, once
+//! with JSON row encoding and once with negotiated binary payloads.
+//! Gates:
+//!
+//! - `payload_throughput_ratio` — binary rows/s over JSON rows/s;
+//!   >= 2x, since the binary path skips the decimal round-trip on both
+//!   sides and writes the result tensor zero-copy.
+//! - `reply_allocs_per_request` — heap allocations on a warm session's
+//!   reply path (completion -> encode -> drain) for one binary reply,
+//!   counted by a global counting allocator; steady state is the
+//!   pooled header buffer plus the payload's `Arc`, so ~1.
+//!
+//! Absolute p99s and per-encoding rows/s ride along uncommitted for
+//! trend tracking.
 //!
 //! ```text
 //! cargo bench --bench bench_gateway               # 60 vs 240 conns
 //! ERA_BENCH_QUICK=1 cargo bench --bench bench_gateway   # 25 vs 100
 //! ```
+
+#[cfg(target_os = "linux")]
+struct CountingAlloc;
+
+#[cfg(target_os = "linux")]
+static ALLOCS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+// Counts alloc+realloc so the reply-path measurement in phase 3 can
+// assert the warm binary path stays allocation-free apart from the
+// payload Arc. dealloc is uncounted (frees are not the gated cost).
+#[cfg(target_os = "linux")]
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(target_os = "linux")]
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 #[cfg(not(target_os = "linux"))]
 fn main() {
@@ -45,12 +94,20 @@ mod linux {
     use era_solver::coordinator::{CoordinatorConfig, RequestSpec};
     use era_solver::obs::{BenchReport, Direction};
     use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
-    use era_solver::server::client::{generate_load, LoadReport};
+    use era_solver::server::client::{generate_load, generate_load_with, LoadOptions, LoadReport};
     use era_solver::server::gateway::{Gateway, GatewayConfig};
+    use era_solver::server::protocol::Encoding;
+    use era_solver::server::session::{ReadyFn, Session, SessionConfig};
     use era_solver::server::{Server, ServerConfig};
-    use era_solver::solvers::eps_model::AnalyticGmm;
+    use era_solver::solvers::eps_model::{AnalyticGmm, EpsModel};
     use era_solver::solvers::schedule::VpSchedule;
     use era_solver::tensor::Tensor;
+
+    use super::ALLOCS;
+
+    fn allocs() -> u64 {
+        ALLOCS.load(std::sync::atomic::Ordering::Relaxed)
+    }
 
     /// MockBank wrapper with a fixed latency per evaluation — a stable
     /// per-request service-time floor (NFE x 1ms) so the p99s being
@@ -80,6 +137,25 @@ mod linux {
     const ROWS: usize = 8;
     const WORKERS: usize = 4;
     const REQUESTS_PER_WORKER: usize = 5;
+    /// Delivery-lane payload width (ISSUE: dim 512 with return_samples).
+    const DELIVERY_DIM: usize = 512;
+
+    /// Trivial wide model: eps = 0.1 * x at [`DELIVERY_DIM`]. A
+    /// memcpy-scale evaluation keeps the delivery lane dominated by
+    /// result serialization, not compute.
+    struct WideEps;
+
+    impl EpsModel for WideEps {
+        fn eval(&self, x: &Tensor, _t: &[f32]) -> Tensor {
+            let mut out = x.clone();
+            out.scale(0.1);
+            out
+        }
+
+        fn dim(&self) -> usize {
+            DELIVERY_DIM
+        }
+    }
 
     fn pool() -> Arc<WorkerPool> {
         let sched = VpSchedule::default();
@@ -100,6 +176,58 @@ mod linux {
 
     fn spec() -> RequestSpec {
         RequestSpec { n_samples: ROWS, nfe: NFE, ..Default::default() }
+    }
+
+    /// Zero-latency pool serving the wide model (delivery lane).
+    fn wide_pool() -> Arc<WorkerPool> {
+        let sched = VpSchedule::default();
+        let bank: Arc<dyn ModelBank> =
+            Arc::new(MockBank::new(sched).with("wide512", Box::new(WideEps)));
+        Arc::new(WorkerPool::start(
+            bank,
+            PoolConfig {
+                shards: 1,
+                placement: PlacementPolicy::RoundRobin,
+                shard: CoordinatorConfig::default(),
+                max_inflight_rows: 0,
+            },
+        ))
+    }
+
+    /// Allocations on a warm session's reply path for one binary
+    /// `return_samples` reply: complete the request off-thread first,
+    /// then count only `on_complete` (encode + enqueue) plus the drain.
+    /// Minimum over the measured rounds rejects background-thread noise.
+    fn measure_reply_allocs(rows: usize) -> f64 {
+        use std::sync::mpsc;
+
+        let pool = wide_pool();
+        let (tx, rx) = mpsc::channel();
+        let ready: ReadyFn = Arc::new(move |token| drop(tx.send(token)));
+        let mut s = Session::new(pool.clone(), &SessionConfig::default(), ready);
+        let req = format!(
+            "{{\"op\":\"sample\",\"dataset\":\"wide512\",\"n_samples\":{rows},\"nfe\":{NFE},\
+             \"seed\":7,\"return_samples\":true,\"encoding\":\"bin\"}}\n"
+        );
+        let mut best = u64::MAX;
+        for round in 0..12 {
+            s.on_bytes(req.as_bytes());
+            let token = rx.recv_timeout(Duration::from_secs(30)).expect("delivery completion");
+            // Let the shard finish its post-notify bookkeeping so the
+            // counted window sees only this thread.
+            std::thread::sleep(Duration::from_millis(2));
+            let before = allocs();
+            s.on_complete(token);
+            while s.has_output() {
+                let n = s.out_slice().len();
+                s.consume_out(n);
+            }
+            let after = allocs();
+            if round >= 4 {
+                best = best.min(after - before);
+            }
+        }
+        best as f64
     }
 
     /// Open `n` keep-alive connections, ping each once (so the accept
@@ -217,6 +345,61 @@ mod linux {
             1e3 * legacy_p99
         );
 
+        // ---- Phase 3: sample delivery, JSON rows vs binary payloads ----
+        let (delivery_rows, delivery_reqs) = if quick { (32, 4) } else { (64, 8) };
+        let delivery_pool = wide_pool();
+        let delivery_gw =
+            Gateway::start(delivery_pool.clone(), GatewayConfig::default()).expect("bind delivery");
+        let dspec = RequestSpec {
+            dataset: "wide512".into(),
+            n_samples: delivery_rows,
+            nfe: NFE,
+            ..Default::default()
+        };
+        let leg = |encoding| {
+            generate_load_with(
+                delivery_gw.local_addr(),
+                &dspec,
+                &LoadOptions {
+                    concurrency: 2,
+                    requests_per_worker: delivery_reqs,
+                    reuse: true,
+                    encoding,
+                },
+            )
+        };
+        let _warm = leg(Encoding::Json); // warm pool buffers + lanes
+        let json_leg = leg(Encoding::Json);
+        let bin_leg = leg(Encoding::Bin);
+        let delivery_errors = json_leg.errors + bin_leg.errors;
+        let payload_ratio = bin_leg.throughput_rows / json_leg.throughput_rows.max(1e-9);
+        delivery_gw.shutdown();
+        let reply_allocs = measure_reply_allocs(delivery_rows);
+        println!(
+            "BENCHLINE gateway/delivery dim={DELIVERY_DIM} rows={delivery_rows} \
+             json_rows_per_s={:.0} bin_rows_per_s={:.0} ratio={payload_ratio:.2} \
+             reply_allocs={reply_allocs} errors={delivery_errors} — targets: \
+             ratio >= 2, allocs <= 5, errors == 0: {}",
+            json_leg.throughput_rows,
+            bin_leg.throughput_rows,
+            if payload_ratio >= 2.0 && reply_allocs <= 5.0 && delivery_errors == 0 {
+                "PASS"
+            } else {
+                "FAIL"
+            }
+        );
+        assert_eq!(delivery_errors, 0, "request errors in the delivery lane");
+        assert!(
+            payload_ratio >= 2.0,
+            "binary delivery {:.0} rows/s is under 2x the JSON path's {:.0} rows/s",
+            bin_leg.throughput_rows,
+            json_leg.throughput_rows
+        );
+        assert!(
+            reply_allocs <= 5.0,
+            "warm binary reply path performed {reply_allocs} heap allocations"
+        );
+
         // Committed gates are machine-independent (a ratio, a parity
         // bound checked against a 0.5 baseline, an error count, a
         // telemetry flag); absolute p99s ride along for trend tracking.
@@ -225,8 +408,12 @@ mod linux {
         report.push("p99_parity", p99_parity.min(1.0), Direction::HigherIsBetter, 0.0);
         report.push("errors", errors as f64, Direction::LowerIsBetter, 0.0);
         report.push("gauge_ok", if gauge_ok { 1.0 } else { 0.0 }, Direction::HigherIsBetter, 0.0);
+        report.push("payload_throughput_ratio", payload_ratio, Direction::HigherIsBetter, 0.0);
+        report.push("reply_allocs_per_request", reply_allocs, Direction::LowerIsBetter, 1.0);
         report.push("legacy_p99_ms", 1e3 * legacy_p99, Direction::LowerIsBetter, 2.0);
         report.push("gateway_p99_ms", 1e3 * gw_p99, Direction::LowerIsBetter, 2.0);
+        report.push("json_rows_per_s", json_leg.throughput_rows, Direction::HigherIsBetter, 2.0);
+        report.push("bin_rows_per_s", bin_leg.throughput_rows, Direction::HigherIsBetter, 2.0);
         report.write_if_env();
     }
 }

@@ -511,6 +511,10 @@ pub struct ConnCounters {
     /// Times a connection's read interest was parked because its
     /// bounded write queue was full (gateway backpressure).
     pub backpressure_stalls: AtomicUsize,
+    /// Wire bytes read from clients (request lines + binary payloads).
+    pub bytes_in: AtomicUsize,
+    /// Wire bytes written to clients (reply lines + binary payloads).
+    pub bytes_out: AtomicUsize,
 }
 
 impl ConnCounters {
@@ -524,6 +528,8 @@ impl ConnCounters {
             accepted_total: self.accepted_total.load(Ordering::Relaxed),
             rejected_total: self.rejected_total.load(Ordering::Relaxed),
             backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
         }
     }
 }
@@ -537,6 +543,8 @@ pub struct ConnSnapshot {
     pub accepted_total: usize,
     pub rejected_total: usize,
     pub backpressure_stalls: usize,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
 }
 
 impl ConnSnapshot {
@@ -545,6 +553,8 @@ impl ConnSnapshot {
         self.accepted_total += other.accepted_total;
         self.rejected_total += other.rejected_total;
         self.backpressure_stalls += other.backpressure_stalls;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
     }
 
     pub fn to_json(&self) -> crate::json::Json {
@@ -554,6 +564,8 @@ impl ConnSnapshot {
             ("accepted", Json::Num(self.accepted_total as f64)),
             ("rejected", Json::Num(self.rejected_total as f64)),
             ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
+            ("bytes_in", Json::Num(self.bytes_in as f64)),
+            ("bytes_out", Json::Num(self.bytes_out as f64)),
         ])
     }
 }
@@ -814,10 +826,14 @@ mod tests {
         a.accepted_total.store(10, Ordering::Relaxed);
         a.rejected_total.store(1, Ordering::Relaxed);
         a.backpressure_stalls.store(2, Ordering::Relaxed);
+        a.bytes_in.store(100, Ordering::Relaxed);
+        a.bytes_out.store(1000, Ordering::Relaxed);
         let b = ConnCounters::new();
         b.open_connections.store(5, Ordering::Relaxed);
         b.accepted_total.store(7, Ordering::Relaxed);
         b.backpressure_stalls.store(4, Ordering::Relaxed);
+        b.bytes_in.store(11, Ordering::Relaxed);
+        b.bytes_out.store(22, Ordering::Relaxed);
         let mut merged = a.snapshot();
         merged.merge(&b.snapshot());
         assert_eq!(
@@ -827,10 +843,14 @@ mod tests {
                 accepted_total: 17,
                 rejected_total: 1,
                 backpressure_stalls: 6,
+                bytes_in: 111,
+                bytes_out: 1022,
             }
         );
         let j = merged.to_json();
         assert_eq!(j.get("open").as_usize(), Some(8));
         assert_eq!(j.get("backpressure_stalls").as_usize(), Some(6));
+        assert_eq!(j.get("bytes_in").as_usize(), Some(111));
+        assert_eq!(j.get("bytes_out").as_usize(), Some(1022));
     }
 }

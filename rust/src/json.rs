@@ -117,27 +117,19 @@ impl Json {
 
     pub fn to_string(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out);
+        self.write_to(&mut out);
         out
     }
 
-    fn write(&self, out: &mut String) {
+    /// Serialise into an existing buffer (appends; never clears). The
+    /// pooled-encode-buffer reply path uses this to avoid a fresh
+    /// `String` per frame.
+    pub fn write_to(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => {
-                if n.is_finite() {
-                    if *n == n.trunc() && n.abs() < 1e15 {
-                        out.push_str(&format!("{}", *n as i64));
-                    } else {
-                        out.push_str(&format!("{}", n));
-                    }
-                } else {
-                    // JSON has no Inf/NaN; null is the conventional escape.
-                    out.push_str("null");
-                }
-            }
+            Json::Num(n) => write_f64(*n, out),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(a) => {
                 out.push('[');
@@ -145,7 +137,7 @@ impl Json {
                     if i > 0 {
                         out.push(',');
                     }
-                    v.write(out);
+                    v.write_to(out);
                 }
                 out.push(']');
             }
@@ -157,11 +149,30 @@ impl Json {
                     }
                     write_escaped(k, out);
                     out.push(':');
-                    v.write(out);
+                    v.write_to(out);
                 }
                 out.push('}');
             }
         }
+    }
+}
+
+/// The one number-formatting rule for every JSON byte this crate emits:
+/// integral finite values print as integers, everything else via Rust's
+/// shortest-round-trip float formatting, non-finite as `null`. Exposed so
+/// the allocation-free reply writers in `server/protocol.rs` produce bytes
+/// identical to the `Json` tree path.
+pub fn write_f64(n: f64, out: &mut String) {
+    use std::fmt::Write as _;
+    if n.is_finite() {
+        if n == n.trunc() && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{}", n);
+        }
+    } else {
+        // JSON has no Inf/NaN; null is the conventional escape.
+        out.push_str("null");
     }
 }
 

@@ -32,7 +32,13 @@
 //!   **epoll gateway** (Linux, raw syscalls — no async runtime) whose
 //!   fixed pool of event-loop threads multiplexes thousands of
 //!   connections with bounded write queues that park read interest
-//!   for backpressure and admission-aware accept throttling.
+//!   for backpressure and admission-aware accept throttling. Sample
+//!   delivery negotiates its wire encoding per request: the default
+//!   JSON rows, or `"encoding":"bin"` — a JSON header line plus a
+//!   counted raw little-endian f32 payload written zero-copy from the
+//!   engine-owned result tensor through pooled encode buffers and
+//!   vectored (`writev`) socket flushes; binary `init` uploads ride
+//!   the same counted-payload framing (DESIGN.md §6).
 //!
 //! The stack is observable end to end ([`obs`], DESIGN.md
 //! § Observability): each shard keeps a fixed-capacity **flight

@@ -32,7 +32,10 @@
 //! Front end (DESIGN.md §13): the default is the portable blocking
 //! thread-per-connection server; `--gateway` (Linux) serves the same
 //! wire protocol from a fixed pool of `--io-threads` epoll event
-//! loops, multiplexing thousands of connections.
+//! loops, multiplexing thousands of connections. Both front ends speak
+//! the negotiated binary sample encoding (`"encoding":"bin"`: JSON
+//! header line + counted little-endian f32 payload, DESIGN.md §6)
+//! alongside the default JSON rows.
 
 use std::sync::Arc;
 

@@ -380,7 +380,7 @@ impl PoolStats {
     /// by `era-serve --metrics <path>`.
     pub fn prometheus(&self) -> String {
         let mut p = PromText::new();
-        let counters: [(&str, &str, f64); 15] = [
+        let counters: [(&str, &str, f64); 17] = [
             ("era_requests_admitted_total", "Requests admitted across shards.", self.admitted() as f64),
             ("era_requests_finished_total", "Requests finished successfully.", self.finished() as f64),
             ("era_requests_cancelled_total", "Requests retired by cancellation or deadline.", self.cancelled() as f64),
@@ -396,6 +396,8 @@ impl PoolStats {
             ("era_connections_accepted_total", "Client connections accepted across registered front ends.", self.conn.accepted_total as f64),
             ("era_connections_rejected_total", "Client connections refused at accept (connection cap or admission throttle).", self.conn.rejected_total as f64),
             ("era_backpressure_stalls_total", "Times a connection's read interest was parked on a full write queue.", self.conn.backpressure_stalls as f64),
+            ("era_wire_bytes_in_total", "Wire bytes read from clients (request lines plus binary payloads).", self.conn.bytes_in as f64),
+            ("era_wire_bytes_out_total", "Wire bytes written to clients (reply lines plus binary payloads).", self.conn.bytes_out as f64),
         ];
         for (name, help, v) in counters {
             p.family(name, help, "counter");
@@ -553,7 +555,7 @@ impl PoolStats {
             "shards={} placement={} executors={} depth={} finished={} cancelled={} rejected={} \
              early_stops={} degraded={} evals={} rows={} occupancy={:.1} pad={:.1}% \
              exec_busy={:.0}% inflight_slabs={} lanes={} conns={}/{} stalls={} \
-             p50={:.1}ms p99={:.1}ms queue={}/{}ms step={}/{}ms eval={}/{}ms",
+             wire={}B/{}B p50={:.1}ms p99={:.1}ms queue={}/{}ms step={}/{}ms eval={}/{}ms",
             self.shards(),
             self.placement,
             self.executors_per_shard,
@@ -573,6 +575,8 @@ impl PoolStats {
             self.conn.open_connections,
             self.conn.accepted_total,
             self.conn.backpressure_stalls,
+            self.conn.bytes_in,
+            self.conn.bytes_out,
             self.p50_ms,
             self.p99_ms,
             fmt_quantile_ms(queue.quantile(0.5)),
@@ -797,12 +801,16 @@ mod tests {
             accepted_total: 10,
             rejected_total: 1,
             backpressure_stalls: 2,
+            bytes_in: 100,
+            bytes_out: 4000,
         };
         conn.merge(&ConnSnapshot {
             open_connections: 4,
             accepted_total: 20,
             rejected_total: 2,
             backpressure_stalls: 5,
+            bytes_in: 28,
+            bytes_out: 96,
         });
         let s = PoolStats::collect_with_conns("round-robin", &[&a], 0, 1, 1, conn);
         assert_eq!(s.conn.open_connections, 7);
@@ -814,12 +822,18 @@ mod tests {
         assert_eq!(json.get("connections").get("accepted").as_usize(), Some(30));
         assert_eq!(json.get("connections").get("rejected").as_usize(), Some(3));
         assert_eq!(json.get("connections").get("backpressure_stalls").as_usize(), Some(7));
+        assert_eq!(json.get("connections").get("bytes_in").as_usize(), Some(128));
+        assert_eq!(json.get("connections").get("bytes_out").as_usize(), Some(4096));
         assert!(s.summary().contains("conns=7/30 stalls=7"), "{}", s.summary());
+        assert!(s.summary().contains("wire=128B/4096B"), "{}", s.summary());
         let text = s.prometheus();
         assert!(text.contains("# TYPE era_connections_accepted_total counter\n"), "{text}");
         assert!(text.contains("era_connections_accepted_total 30\n"), "{text}");
         assert!(text.contains("era_connections_rejected_total 3\n"), "{text}");
         assert!(text.contains("era_backpressure_stalls_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE era_wire_bytes_in_total counter\n"), "{text}");
+        assert!(text.contains("era_wire_bytes_in_total 128\n"), "{text}");
+        assert!(text.contains("era_wire_bytes_out_total 4096\n"), "{text}");
         assert!(text.contains("# TYPE era_open_connections gauge\n"), "{text}");
         assert!(text.contains("era_open_connections 7\n"), "{text}");
     }

@@ -1,7 +1,7 @@
 //! Blocking TCP client + a multi-threaded load generator for the
 //! serving benches (Tab. 7).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -9,13 +9,14 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{QosClass, RequestSpec};
 use crate::json::{self, Json};
-use crate::server::protocol::samples_from_json;
+use crate::server::protocol::{samples_from_json, Encoding};
 use crate::tensor::Tensor;
 
 /// One client connection (one JSON line per call, blocking).
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    encoding: Encoding,
 }
 
 impl Client {
@@ -23,7 +24,15 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { stream, reader })
+        Ok(Client { stream, reader, encoding: Encoding::Json })
+    }
+
+    /// Wire encoding for subsequent `sample` calls. [`Encoding::Bin`]
+    /// negotiates counted binary frames both ways — init uploads go as
+    /// raw little-endian f32 payloads and sample replies come back as a
+    /// JSON header line plus a counted payload. Control ops stay JSON.
+    pub fn set_encoding(&mut self, encoding: Encoding) {
+        self.encoding = encoding;
     }
 
     fn call(&mut self, req: &Json) -> Result<Json, String> {
@@ -126,8 +135,15 @@ impl Client {
         if task.is_img2img() {
             pairs.push(("strength", Json::Num(task.strength)));
         }
+        let mut payload: Option<&Tensor> = None;
         if let Some(init) = &task.init {
-            pairs.push(("init", crate::server::protocol::rows_to_json(init)));
+            if self.encoding == Encoding::Bin {
+                pairs.push(("init_rows", Json::Num(init.rows() as f64)));
+                pairs.push(("init_bytes", Json::Num((init.len() * 4) as f64)));
+                payload = Some(init);
+            } else {
+                pairs.push(("init", crate::server::protocol::rows_to_json(init)));
+            }
         }
         if task.is_stochastic() {
             pairs.push(("churn", Json::Num(task.churn)));
@@ -143,8 +159,20 @@ impl Client {
         if spec.conv_threshold != 0.0 {
             pairs.push(("conv_threshold", Json::Num(spec.conv_threshold)));
         }
-        let resp = self.call(&Json::obj(pairs))?;
-        let samples = samples_from_json(&resp)?;
+        if self.encoding == Encoding::Bin {
+            pairs.push(("encoding", Json::Str("bin".into())));
+        }
+        let resp = self.call_sample(&Json::obj(pairs), payload)?;
+        let samples = match resp.get("payload_bytes").as_usize() {
+            Some(n) => {
+                let rows = resp.get("rows").as_usize().ok_or("binary reply missing rows")?;
+                let dim = resp.get("dim").as_usize().ok_or("binary reply missing dim")?;
+                let mut bytes = vec![0u8; n];
+                self.reader.read_exact(&mut bytes).map_err(|e| e.to_string())?;
+                Tensor::from_le_bytes(&bytes, rows, dim)?
+            }
+            None => samples_from_json(&resp)?,
+        };
         Ok(SampleOutcome {
             samples,
             seconds: resp.get("total_ms").as_f64().unwrap_or(0.0) / 1e3,
@@ -153,6 +181,29 @@ impl Client {
             early_stop: resp.get("early_stop").as_bool().unwrap_or(false),
             delta_eps: resp.get("delta_eps").as_f64(),
         })
+    }
+
+    /// Send one `sample` request — header line plus an optional binary
+    /// init payload — and read the reply header line. A binary samples
+    /// payload, if announced, is left in the reader for the caller.
+    fn call_sample(&mut self, req: &Json, payload: Option<&Tensor>) -> Result<Json, String> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).map_err(|e| e.to_string())?;
+        if let Some(init) = payload {
+            #[cfg(target_endian = "little")]
+            self.stream.write_all(init.as_le_bytes()).map_err(|e| e.to_string())?;
+            #[cfg(not(target_endian = "little"))]
+            self.stream.write_all(&init.to_le_bytes()).map_err(|e| e.to_string())?;
+        }
+        self.stream.flush().map_err(|e| e.to_string())?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).map_err(|e| e.to_string())?;
+        let j = json::parse(&reply).map_err(|e| format!("{e:?}"))?;
+        if j.get("ok").as_bool() != Some(true) {
+            return Err(j.get("error").as_str().unwrap_or("unknown error").to_string());
+        }
+        Ok(j)
     }
 }
 
@@ -205,11 +256,19 @@ pub struct LoadOptions {
     /// kept-alive connection. false: a fresh connect per request —
     /// the handshake-heavy profile the gateway bench contrasts.
     pub reuse: bool,
+    /// Wire encoding every worker negotiates ([`Encoding::Json`] by
+    /// default; [`Encoding::Bin`] for counted binary sample delivery).
+    pub encoding: Encoding,
 }
 
 impl Default for LoadOptions {
     fn default() -> Self {
-        LoadOptions { concurrency: 1, requests_per_worker: 1, reuse: true }
+        LoadOptions {
+            concurrency: 1,
+            requests_per_worker: 1,
+            reuse: true,
+            encoding: Encoding::Json,
+        }
     }
 }
 
@@ -226,7 +285,7 @@ pub fn generate_load(
     generate_load_with(
         addr,
         base_spec,
-        &LoadOptions { concurrency, requests_per_worker, reuse: true },
+        &LoadOptions { concurrency, requests_per_worker, ..LoadOptions::default() },
     )
 }
 
@@ -246,6 +305,7 @@ pub fn generate_load_with(
         let spec = base_spec.clone();
         let errors = errors.clone();
         let reuse = opts.reuse;
+        let encoding = opts.encoding;
         let requests_per_worker = opts.requests_per_worker;
         handles.push(std::thread::spawn(move || {
             let mut lats = Vec::with_capacity(requests_per_worker);
@@ -254,7 +314,10 @@ pub fn generate_load_with(
             for i in 0..requests_per_worker {
                 if client.is_none() {
                     match Client::connect(addr) {
-                        Ok(c) => client = Some(c),
+                        Ok(mut c) => {
+                            c.set_encoding(encoding);
+                            client = Some(c);
+                        }
                         Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
                             std::thread::sleep(Duration::from_millis(2));

@@ -1,32 +1,44 @@
 //! Framed-protocol codec: incremental extraction of newline-delimited
-//! JSON frames from partial byte buffers.
+//! JSON frames — and counted binary payloads — from partial byte
+//! buffers.
 //!
-//! The wire format is JSON-lines (one request or response object per
-//! `\n`-terminated line, see [`super::protocol`]). The blocking path
-//! used to lean on `BufReader::read_line`, which couples framing to a
-//! blocking socket; the readiness-based gateway needs the inverse: feed
-//! whatever bytes the socket had, get back zero or more complete
+//! The base wire format is JSON-lines (one request or response object
+//! per `\n`-terminated line, see [`super::protocol`]). The blocking
+//! path used to lean on `BufReader::read_line`, which couples framing
+//! to a blocking socket; the readiness-based gateway needs the inverse:
+//! feed whatever bytes the socket had, get back zero or more complete
 //! frames, and a deterministic "need more" in between. [`FrameDecoder`]
 //! is that state machine, shared by both server paths so there is
 //! exactly one framing implementation on the wire.
 //!
+//! When a decoded line announces a counted payload (a binary `init`
+//! upload's `init_bytes`, see DESIGN.md §6), the session calls
+//! [`FrameDecoder::expect_payload`] and the decoder switches from
+//! newline scanning to byte counting: the next `n` raw bytes are
+//! delivered verbatim as [`Frame::Payload`] — they may contain `\n` —
+//! and line scanning resumes after them.
+//!
 //! Robustness contract (exercised by `tests/proptests.rs`):
 //!
-//! - arbitrary split points reassemble the exact frame sequence;
+//! - arbitrary split points reassemble the exact frame sequence, across
+//!   line/payload boundaries included;
 //! - a truncated frame is `Ok(None)` ("need more"), never a partial
 //!   frame and never an error — until its length exceeds the cap;
 //! - a line longer than [`FrameDecoder::cap`] with no newline yet is
 //!   [`CodecError::Oversized`] (the JSON-lines analog of a hostile
 //!   length header) so a gateway can drop the peer instead of
-//!   buffering without bound;
+//!   buffering without bound; an *announced* payload length above the
+//!   cap errors immediately and the error is sticky until [`reset`];
 //! - invalid UTF-8 is replaced, not panicked on; JSON parsing rejects
 //!   it downstream with an ordinary protocol error.
+//!
+//! [`reset`]: FrameDecoder::reset
 
 use std::fmt;
 
-/// Default cap on a single unterminated line. Large enough for a
-/// `return_samples` response on a big batch, small enough to bound a
-/// hostile peer's buffer growth.
+/// Default cap on a single unterminated line or announced payload.
+/// Large enough for a `return_samples` response on a big batch, small
+/// enough to bound a hostile peer's buffer growth.
 pub const MAX_FRAME_LEN: usize = 8 * 1024 * 1024;
 
 /// Compact the consumed prefix away once it passes this size, so the
@@ -37,7 +49,8 @@ const COMPACT_THRESHOLD: usize = 16 * 1024;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CodecError {
     /// The current line has grown past the decoder's cap without a
-    /// terminating newline. The connection cannot resync; close it.
+    /// terminating newline, or a header announced a payload longer
+    /// than the cap. The connection cannot resync; close it.
     Oversized { len: usize, cap: usize },
 }
 
@@ -53,20 +66,38 @@ impl fmt::Display for CodecError {
 
 impl std::error::Error for CodecError {}
 
-/// Incremental newline-frame decoder over an internal byte buffer.
+/// One decoded wire unit: a text line or a counted raw payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A `\n`-terminated line (terminator and trailing `\r` stripped,
+    /// invalid UTF-8 replaced).
+    Line(String),
+    /// Exactly the announced number of raw bytes, delivered after
+    /// [`FrameDecoder::expect_payload`] armed counted mode.
+    Payload(Vec<u8>),
+}
+
+/// Incremental frame decoder over an internal byte buffer.
 ///
-/// `push` bytes in as they arrive; `next_frame` yields complete lines
-/// (without the terminator, with a trailing `\r` stripped) until the
-/// buffer runs dry. Already-scanned bytes are never rescanned, so total
-/// decode cost is O(bytes received) regardless of how reads split.
+/// `push` bytes in as they arrive; `next` yields complete frames until
+/// the buffer runs dry. Already-scanned bytes are never rescanned, so
+/// total decode cost is O(bytes received) regardless of how reads
+/// split.
 pub struct FrameDecoder {
     buf: Vec<u8>,
     /// Start of the unconsumed region (bytes before it are delivered
     /// frames awaiting compaction).
     start: usize,
-    /// Newline scan cursor within `buf`; always `>= start`.
+    /// Newline scan cursor within `buf`; always `>= start`. Meaningless
+    /// while in counted-payload mode.
     scanned: usize,
     cap: usize,
+    /// `Some(n)` while the next `n` raw bytes belong to an announced
+    /// payload rather than the line stream.
+    pending_payload: Option<usize>,
+    /// A hostile announced length poisons the decoder until `reset` —
+    /// the byte stream after it cannot be resynchronised.
+    failed: Option<CodecError>,
 }
 
 impl FrameDecoder {
@@ -75,12 +106,24 @@ impl FrameDecoder {
     }
 
     pub fn with_cap(cap: usize) -> FrameDecoder {
-        FrameDecoder { buf: Vec::new(), start: 0, scanned: 0, cap: cap.max(1) }
+        FrameDecoder {
+            buf: Vec::new(),
+            start: 0,
+            scanned: 0,
+            cap: cap.max(1),
+            pending_payload: None,
+            failed: None,
+        }
     }
 
     /// Bytes buffered but not yet delivered as frames.
     pub fn buffered(&self) -> usize {
         self.buf.len() - self.start
+    }
+
+    /// True while an announced payload is still being counted in.
+    pub fn awaiting_payload(&self) -> bool {
+        self.pending_payload.is_some()
     }
 
     /// Feed freshly read bytes into the decoder.
@@ -97,9 +140,41 @@ impl FrameDecoder {
         self.buf.extend_from_slice(bytes);
     }
 
-    /// Extract the next complete frame, `Ok(None)` when more bytes are
-    /// needed, or `Err` when the pending line exceeds the cap.
-    pub fn next_frame(&mut self) -> Result<Option<String>, CodecError> {
+    /// Arm counted-payload mode: the next `n` raw bytes (which may
+    /// include `\n`) form one [`Frame::Payload`]. An announced length
+    /// above the cap is refused and poisons the decoder — the stream
+    /// cannot be resynchronised past an un-consumed payload.
+    pub fn expect_payload(&mut self, n: usize) -> Result<(), CodecError> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        if n > self.cap {
+            let e = CodecError::Oversized { len: n, cap: self.cap };
+            self.failed = Some(e.clone());
+            return Err(e);
+        }
+        debug_assert!(self.pending_payload.is_none(), "payload already pending");
+        self.pending_payload = Some(n);
+        Ok(())
+    }
+
+    /// Extract the next complete frame (line or counted payload),
+    /// `Ok(None)` when more bytes are needed, or `Err` when the pending
+    /// line exceeds the cap / a hostile announce poisoned the decoder.
+    pub fn next_any(&mut self) -> Result<Option<Frame>, CodecError> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        if let Some(n) = self.pending_payload {
+            if self.buffered() < n {
+                return Ok(None);
+            }
+            let payload = self.buf[self.start..self.start + n].to_vec();
+            self.start += n;
+            self.scanned = self.start;
+            self.pending_payload = None;
+            return Ok(Some(Frame::Payload(payload)));
+        }
         match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
             Some(off) => {
                 let nl = self.scanned + off;
@@ -110,7 +185,7 @@ impl FrameDecoder {
                 let frame = String::from_utf8_lossy(&self.buf[self.start..end]).into_owned();
                 self.start = nl + 1;
                 self.scanned = self.start;
-                Ok(Some(frame))
+                Ok(Some(Frame::Line(frame)))
             }
             None => {
                 self.scanned = self.buf.len();
@@ -122,6 +197,28 @@ impl FrameDecoder {
                 }
             }
         }
+    }
+
+    /// Line-only convenience used by callers that never arm payload
+    /// mode; semantics identical to the pre-payload decoder.
+    pub fn next_frame(&mut self) -> Result<Option<String>, CodecError> {
+        debug_assert!(self.pending_payload.is_none(), "payload pending; use next_any()");
+        match self.next_any()? {
+            Some(Frame::Line(s)) => Ok(Some(s)),
+            Some(Frame::Payload(_)) => unreachable!("payload frame without expect_payload"),
+            None => Ok(None),
+        }
+    }
+
+    /// Drop all buffered bytes and mode state. Sessions call this on
+    /// `abort()` so a half-received payload or a sticky announce error
+    /// never leaks into a pooled buffer's next life.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+        self.scanned = 0;
+        self.pending_payload = None;
+        self.failed = None;
     }
 }
 
@@ -234,5 +331,61 @@ mod tests {
         let mut d = FrameDecoder::new();
         d.push(&bytes);
         assert_eq!(frames(&mut d), vec!["{\"ok\":true}", "x"]);
+    }
+
+    #[test]
+    fn counted_payload_carries_newlines_verbatim() {
+        let mut d = FrameDecoder::new();
+        d.push(b"header\n\x01\n\x02\n\x03after\n");
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Line("header".into())));
+        d.expect_payload(5).unwrap();
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Payload(b"\x01\n\x02\n\x03".to_vec())));
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Line("after".into())));
+        assert_eq!(d.buffered(), 0);
+    }
+
+    #[test]
+    fn truncated_payload_needs_more_then_completes() {
+        let mut d = FrameDecoder::new();
+        d.expect_payload(4).unwrap();
+        d.push(b"ab");
+        assert_eq!(d.next_any().unwrap(), None);
+        assert!(d.awaiting_payload());
+        d.push(b"cd");
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Payload(b"abcd".to_vec())));
+        assert!(!d.awaiting_payload());
+    }
+
+    #[test]
+    fn oversized_payload_announce_is_sticky_until_reset() {
+        let mut d = FrameDecoder::with_cap(8);
+        assert_eq!(d.expect_payload(9), Err(CodecError::Oversized { len: 9, cap: 8 }));
+        d.push(b"x\n");
+        assert!(d.next_any().is_err());
+        assert_eq!(d.expect_payload(1), Err(CodecError::Oversized { len: 9, cap: 8 }));
+        d.reset();
+        assert_eq!(d.buffered(), 0);
+        d.push(b"ok\n");
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Line("ok".into())));
+    }
+
+    #[test]
+    fn reset_discards_half_received_payload() {
+        let mut d = FrameDecoder::new();
+        d.expect_payload(100).unwrap();
+        d.push(b"partial payload bytes");
+        assert_eq!(d.next_any().unwrap(), None);
+        d.reset();
+        assert!(!d.awaiting_payload());
+        d.push(b"{\"op\":\"ping\"}\n");
+        assert_eq!(d.next_frame().unwrap(), Some("{\"op\":\"ping\"}".to_string()));
+    }
+
+    #[test]
+    fn payload_exactly_at_cap_is_fine() {
+        let mut d = FrameDecoder::with_cap(4);
+        d.expect_payload(4).unwrap();
+        d.push(b"abcd");
+        assert_eq!(d.next_any().unwrap(), Some(Frame::Payload(b"abcd".to_vec())));
     }
 }

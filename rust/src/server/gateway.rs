@@ -45,9 +45,10 @@ use crate::pool::WorkerPool;
 
 use super::codec::MAX_FRAME_LEN;
 use super::reject_overloaded;
-use super::session::{ReadyFn, Session, SessionConfig};
+use super::session::{EncodePool, ReadyFn, Session, SessionConfig};
 use super::transport::{
-    Epoll, EpollEvent, Waker, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+    writev_fd, Epoll, EpollEvent, Waker, EPOLLERR, EPOLLET, EPOLLHUP, EPOLLIN, EPOLLOUT,
+    EPOLLRDHUP, MAX_IOVECS,
 };
 
 /// Gateway configuration.
@@ -140,6 +141,9 @@ impl Gateway {
         let stop = Arc::new(AtomicBool::new(false));
         let counters = Arc::new(ConnCounters::new());
         pool.register_conn_counters(counters.clone());
+        // One encode-buffer pool per gateway: reply buffers warm up
+        // across connections and loops (DESIGN.md §6).
+        let encode_pool = Arc::new(EncodePool::new());
 
         let io_threads = config.io_threads.max(1);
         let mut inboxes = Vec::with_capacity(io_threads);
@@ -163,6 +167,7 @@ impl Gateway {
                 listener: if index == 0 { listener.take() } else { None },
                 counters: counters.clone(),
                 next_id: next_id.clone(),
+                encode_pool: encode_pool.clone(),
             };
             threads.push(
                 std::thread::Builder::new()
@@ -211,6 +216,7 @@ struct EventLoop {
     listener: Option<TcpListener>,
     counters: Arc<ConnCounters>,
     next_id: Arc<AtomicU64>,
+    encode_pool: Arc<EncodePool>,
 }
 
 impl EventLoop {
@@ -267,7 +273,7 @@ impl EventLoop {
                             Some(conn) => {
                                 let mut keep = true;
                                 if bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
-                                    keep = read_pass(conn, &mut buf);
+                                    keep = read_pass(conn, &mut buf, &self.counters);
                                 }
                                 if bits & EPOLLERR != 0 {
                                     keep = false;
@@ -374,14 +380,20 @@ impl EventLoop {
             write_queue_cap: self.config.write_queue_cap,
             default_conv_threshold: self.config.default_conv_threshold,
         };
-        let session = Session::new(self.pool.clone(), &session_cfg, ready);
+        let session = Session::with_encode_pool(
+            self.pool.clone(),
+            &session_cfg,
+            ready,
+            self.encode_pool.clone(),
+        );
         let interest = EPOLLIN | EPOLLRDHUP | EPOLLET;
         if epoll.add(stream.as_raw_fd(), interest, id).is_err() {
             self.counters.open_connections.fetch_sub(1, Ordering::Relaxed);
             return;
         }
         let mut conn = Conn { id, stream, session, interest, reading: true };
-        let keep = read_pass(&mut conn, buf) && pump(epoll, &self.counters, &mut conn, buf);
+        let keep = read_pass(&mut conn, buf, &self.counters)
+            && pump(epoll, &self.counters, &mut conn, buf);
         if keep {
             conns.insert(id, conn);
         } else {
@@ -392,11 +404,14 @@ impl EventLoop {
 
 /// Read to `WouldBlock` (or until backpressure parks the session),
 /// feeding the session. Returns false on EOF or a socket error.
-fn read_pass(conn: &mut Conn, buf: &mut [u8]) -> bool {
+fn read_pass(conn: &mut Conn, buf: &mut [u8], counters: &ConnCounters) -> bool {
     while conn.session.wants_read() {
         match (&conn.stream).read(buf) {
             Ok(0) => return false, // peer closed
-            Ok(n) => conn.session.on_bytes(&buf[..n]),
+            Ok(n) => {
+                counters.bytes_in.fetch_add(n, Ordering::Relaxed);
+                conn.session.on_bytes(&buf[..n]);
+            }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(_) => return false,
@@ -405,12 +420,26 @@ fn read_pass(conn: &mut Conn, buf: &mut [u8]) -> bool {
     true
 }
 
-/// Flush to `WouldBlock`. Returns false on a socket error.
-fn flush_pass(conn: &mut Conn) -> bool {
+/// Flush to `WouldBlock`, gathering queued segments — reply header,
+/// zero-copy tensor payload, pipelined next frames — into a single
+/// `writev` per syscall. Returns false on a socket error.
+fn flush_pass(conn: &mut Conn, counters: &ConnCounters) -> bool {
     while conn.session.has_output() {
-        match (&conn.stream).write(conn.session.out_slice()) {
+        let wrote = {
+            let mut slices: [&[u8]; MAX_IOVECS] = [&[]; MAX_IOVECS];
+            let n = conn.session.out_vectored(&mut slices);
+            if n == 1 {
+                (&conn.stream).write(slices[0])
+            } else {
+                writev_fd(conn.stream.as_raw_fd(), &slices[..n])
+            }
+        };
+        match wrote {
             Ok(0) => return false,
-            Ok(n) => conn.session.consume_out(n),
+            Ok(n) => {
+                counters.bytes_out.fetch_add(n, Ordering::Relaxed);
+                conn.session.consume_out(n);
+            }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(_) => return false,
@@ -424,7 +453,7 @@ fn flush_pass(conn: &mut Conn) -> bool {
 /// re-run by hand). Returns false when the connection should close.
 fn pump(epoll: &Epoll, counters: &ConnCounters, conn: &mut Conn, buf: &mut [u8]) -> bool {
     loop {
-        if !flush_pass(conn) {
+        if !flush_pass(conn, counters) {
             return false;
         }
         let wants_read = conn.session.wants_read();
@@ -432,7 +461,7 @@ fn pump(epoll: &Epoll, counters: &ConnCounters, conn: &mut Conn, buf: &mut [u8])
             // Backpressure cleared: interest was parked, so the kernel
             // buffer may hold bytes no future edge will announce.
             conn.reading = true;
-            if !read_pass(conn, buf) {
+            if !read_pass(conn, buf, counters) {
                 return false;
             }
             continue; // the read may have enqueued more output

@@ -56,6 +56,19 @@
 //! `churn` (stochastic ERA). All default to the plain unconditional
 //! trajectory.
 //!
+//! **Binary encoding (counted payloads).** A `sample` request may set
+//! `"encoding":"bin"`: with `return_samples`, the reply becomes a JSON
+//! header line — the usual diagnostics plus `payload_bytes`, and no
+//! inline `samples` — followed by exactly `payload_bytes` of raw
+//! little-endian f32s (row-major `rows x dim`), bitwise-identical to
+//! the computed iterate. Symmetrically, an img2img init batch may be
+//! uploaded as `init_rows` + `init_bytes` (mutually exclusive with the
+//! JSON `init` rows) followed by `init_bytes` of raw little-endian
+//! f32s. Counted payloads are consumed by byte count and may contain
+//! newlines; every other frame — control ops, errors, JSON replies —
+//! stays a plain JSON line, and the encoding is negotiated per request
+//! so one connection may pipeline both (DESIGN.md §6).
+//!
 //! QoS fields (DESIGN.md §12): `qos` (`"strict"` default, `"balanced"`,
 //! `"besteffort"`), `min_nfe` (early-stop floor; 0 = the solver's
 //! structural minimum), and `conv_threshold` (relative `delta_eps`
@@ -80,10 +93,13 @@
 //!   accept throttling (DESIGN.md §13).
 //!
 //! The layering keeps exactly one protocol on the wire: [`codec`]
-//! frames bytes into JSON lines, [`protocol`] parses them,
-//! [`dispatch_async`] routes ops to the [`WorkerPool`] (the blocking
-//! [`dispatch`] wraps it), and [`session`] is the per-connection state
-//! machine the gateway's [`transport`] layer drives. Both paths answer
+//! frames bytes into JSON lines and counted binary payloads,
+//! [`protocol`] parses headers (and serialises replies through
+//! pre-sized writers — no intermediate `Json` tree on the reply hot
+//! path), [`dispatch_parsed`] routes ops to the [`WorkerPool`] (the
+//! blocking [`dispatch`] wraps it), and [`session`] is the
+//! per-connection state machine the gateway's [`transport`] layer
+//! drives with vectored (`writev`) flushes. Both paths answer
 //! byte-identically, so the stock [`client::Client`] cannot tell them
 //! apart — including cross-connection `cancel`/`trace` tag routing.
 
@@ -105,9 +121,13 @@ use std::sync::{mpsc, Arc};
 use crate::coordinator::{
     CancelHandle, CompletionNotify, ConnCounters, QosClass, SamplingResult, SubmitError,
 };
-use crate::json::Json;
+use crate::json::{self, Json};
 use crate::pool::{PoolTicket, WorkerPool};
-use protocol::{parse_request, result_to_json, Request};
+use codec::{CodecError, MAX_FRAME_LEN};
+use protocol::{
+    announced_payload, request_from_json, result_to_json, write_result_header,
+    write_result_json, Encoding, Request,
+};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -191,6 +211,7 @@ impl Server {
                                         &pool,
                                         &stop3,
                                         conv_threshold,
+                                        &counters2,
                                     );
                                     counters2.open_connections.fetch_sub(1, Ordering::Relaxed);
                                     let _ = done.send(id);
@@ -250,6 +271,7 @@ fn handle_connection(
     pool: &WorkerPool,
     stop: &AtomicBool,
     default_conv_threshold: f64,
+    counters: &ConnCounters,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     // Bounded reads so an idle connection cannot pin the acceptor's join
@@ -258,17 +280,86 @@ fn handle_connection(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // Reused across requests: reply serialisation and payload staging.
+    let mut reply_buf = String::new();
+    let mut payload_buf = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         line.clear();
         match reader.read_line(&mut line) {
             Ok(0) => break, // client closed
-            Ok(_) => {
+            Ok(n) => {
+                counters.bytes_in.fetch_add(n, Ordering::Relaxed);
                 if line.trim().is_empty() {
                     continue;
                 }
-                let response = dispatch(&line, pool, default_conv_threshold);
-                writeln!(writer, "{}", response.to_string())?;
-                writer.flush()?;
+                let header = match json::parse(&line) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        let reply = err_json(&format!("bad request: {e:?}"));
+                        write_reply_json(&mut writer, &reply, &mut reply_buf, counters)?;
+                        continue;
+                    }
+                };
+                let payload = match announced_payload(&header) {
+                    None => None,
+                    Some(n) if n > MAX_FRAME_LEN => {
+                        // The stream cannot be resynchronised past an
+                        // unread payload: reply once and close.
+                        let e = CodecError::Oversized { len: n, cap: MAX_FRAME_LEN };
+                        let reply = err_json(&format!("bad request: {e}"));
+                        write_reply_json(&mut writer, &reply, &mut reply_buf, counters)?;
+                        break;
+                    }
+                    Some(n) => {
+                        payload_buf.resize(n, 0);
+                        read_exact_tolerant(&mut reader, &mut payload_buf, stop)?;
+                        counters.bytes_in.fetch_add(n, Ordering::Relaxed);
+                        Some(&payload_buf[..])
+                    }
+                };
+                match dispatch_parsed(&header, payload, pool, default_conv_threshold, None) {
+                    Dispatched::Immediate(reply) => {
+                        write_reply_json(&mut writer, &reply, &mut reply_buf, counters)?;
+                    }
+                    Dispatched::Pending { ticket, return_samples, tag, handle, encoding } => {
+                        let out = ticket.wait();
+                        // Identity-checked: a tag re-used by a newer
+                        // request in the meantime is not evicted.
+                        if let Some(tag) = tag {
+                            pool.deregister_tag(tag, &handle);
+                        }
+                        match out {
+                            Err(e) => write_reply_json(
+                                &mut writer,
+                                &err_json(&e),
+                                &mut reply_buf,
+                                counters,
+                            )?,
+                            Ok(res) => {
+                                reply_buf.clear();
+                                let mut written = 0;
+                                if encoding == Encoding::Bin && return_samples {
+                                    let payload_bytes = res.samples.len() * 4;
+                                    write_result_header(&res, payload_bytes, &mut reply_buf);
+                                    reply_buf.push('\n');
+                                    writer.write_all(reply_buf.as_bytes())?;
+                                    #[cfg(target_endian = "little")]
+                                    writer.write_all(res.samples.as_le_bytes())?;
+                                    #[cfg(not(target_endian = "little"))]
+                                    writer.write_all(&res.samples.to_le_bytes())?;
+                                    written += reply_buf.len() + payload_bytes;
+                                } else {
+                                    write_result_json(&res, return_samples, &mut reply_buf);
+                                    reply_buf.push('\n');
+                                    writer.write_all(reply_buf.as_bytes())?;
+                                    written += reply_buf.len();
+                                }
+                                writer.flush()?;
+                                counters.bytes_out.fetch_add(written, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -282,17 +373,71 @@ fn handle_connection(
     Ok(())
 }
 
+fn write_reply_json(
+    writer: &mut TcpStream,
+    reply: &Json,
+    buf: &mut String,
+    counters: &ConnCounters,
+) -> std::io::Result<()> {
+    buf.clear();
+    reply.write_to(buf);
+    buf.push('\n');
+    writer.write_all(buf.as_bytes())?;
+    writer.flush()?;
+    counters.bytes_out.fetch_add(buf.len(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// `read_exact` tolerant of the connection's 200 ms read timeout: on
+/// timeout the stop flag is re-checked and the read resumes, so a slow
+/// payload upload does not error out mid-transfer. A peer closing
+/// mid-payload is `UnexpectedEof`.
+fn read_exact_tolerant<R: std::io::Read>(
+    reader: &mut R,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-payload",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        "server stopping",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
 /// Outcome of dispatching one protocol line without blocking.
 pub(crate) enum Dispatched {
     /// The reply is ready now (control ops, parse and submit errors).
     Immediate(Json),
     /// A sample was admitted; the reply arrives through the ticket
-    /// (its submit-time [`CompletionNotify`] fires when it lands).
+    /// (its submit-time [`CompletionNotify`] fires when it lands) and
+    /// must be rendered in the negotiated encoding.
     Pending {
         ticket: PoolTicket,
         return_samples: bool,
         tag: Option<u64>,
         handle: CancelHandle,
+        encoding: Encoding,
     },
 }
 
@@ -304,13 +449,15 @@ pub(crate) fn sample_reply(out: Result<SamplingResult, String>, return_samples: 
     }
 }
 
-/// Handle one protocol line. Split out for direct unit testing.
+/// Handle one protocol line. Split out for direct unit testing. JSON
+/// replies only — encoding negotiation lives in the connection
+/// handlers, which see [`dispatch_parsed`] directly.
 /// `default_conv_threshold` is the server-level convergence default
 /// inherited by non-strict requests that did not set their own.
 pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> Json {
     match dispatch_async(line, pool, default_conv_threshold, None) {
         Dispatched::Immediate(json) => json,
-        Dispatched::Pending { ticket, return_samples, tag, handle } => {
+        Dispatched::Pending { ticket, return_samples, tag, handle, .. } => {
             let out = ticket.wait();
             // Identity-checked: a tag re-used by a newer request
             // in the meantime is not evicted.
@@ -322,17 +469,33 @@ pub fn dispatch(line: &str, pool: &WorkerPool, default_conv_threshold: f64) -> J
     }
 }
 
-/// The non-blocking core of [`dispatch`]: control ops answer
-/// immediately; an admitted `sample` comes back as
-/// [`Dispatched::Pending`] with `notify` armed to fire once its result
-/// lands in the ticket (the event-loop path polls, never parks).
+/// The non-blocking line-level core of [`dispatch`]: parses the line,
+/// then routes through [`dispatch_parsed`] (no counted payload).
 pub(crate) fn dispatch_async(
     line: &str,
     pool: &WorkerPool,
     default_conv_threshold: f64,
     notify: Option<CompletionNotify>,
 ) -> Dispatched {
-    let reply = match parse_request(line) {
+    match json::parse(line) {
+        Err(e) => Dispatched::Immediate(err_json(&format!("bad request: {e:?}"))),
+        Ok(j) => dispatch_parsed(&j, None, pool, default_conv_threshold, notify),
+    }
+}
+
+/// Route one parsed request header (plus its counted init payload, if
+/// the header announced one): control ops answer immediately; an
+/// admitted `sample` comes back as [`Dispatched::Pending`] with
+/// `notify` armed to fire once its result lands in the ticket (the
+/// event-loop path polls, never parks).
+pub(crate) fn dispatch_parsed(
+    header: &Json,
+    payload: Option<&[u8]>,
+    pool: &WorkerPool,
+    default_conv_threshold: f64,
+    notify: Option<CompletionNotify>,
+) -> Dispatched {
+    let reply = match request_from_json(header, payload) {
         Err(e) => err_json(&format!("bad request: {e}")),
         Ok(Request::Ping) => {
             Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
@@ -371,7 +534,7 @@ pub(crate) fn dispatch_async(
             ("ok", Json::Bool(true)),
             ("cancelled", Json::Bool(pool.cancel_tag(tag))),
         ]),
-        Ok(Request::Sample { mut spec, return_samples, tag }) => {
+        Ok(Request::Sample { mut spec, return_samples, tag, encoding }) => {
             if spec.conv_threshold == 0.0
                 && spec.qos != QosClass::Strict
                 && default_conv_threshold > 0.0
@@ -384,7 +547,7 @@ pub(crate) fn dispatch_async(
                 Err(SubmitError::Invalid(e)) => err_json(&format!("invalid: {e}")),
                 Ok(ticket) => {
                     let handle = ticket.cancel_handle();
-                    return Dispatched::Pending { ticket, return_samples, tag, handle };
+                    return Dispatched::Pending { ticket, return_samples, tag, handle, encoding };
                 }
             }
         }

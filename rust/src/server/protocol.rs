@@ -1,9 +1,43 @@
-//! Wire protocol: JSON-line <-> typed request/response mapping.
+//! Wire protocol: JSON-line <-> typed request/response mapping, plus
+//! the counted-binary-payload negotiation (DESIGN.md §6): a `sample`
+//! request carrying `"encoding":"bin"` gets its reply as a JSON header
+//! line followed by `payload_bytes` of raw little-endian f32 — and may
+//! itself upload `init` as a counted payload (`init_rows`+`init_bytes`
+//! on the request line, raw bytes after it).
 
 use crate::coordinator::{QosClass, RequestSpec, SamplingResult};
 use crate::json::{self, Json};
 use crate::solvers::TaskSpec;
 use crate::tensor::Tensor;
+
+/// Negotiated reply encoding for `sample` requests. Control ops always
+/// answer in JSON; only the sample tensor payload is negotiable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Encoding {
+    /// Decimal-text rows inside the JSON reply (`"samples":[[...]]`).
+    #[default]
+    Json,
+    /// JSON header line + counted raw little-endian f32 payload —
+    /// bitwise-exact, no decimal round-trip.
+    Bin,
+}
+
+impl Encoding {
+    pub fn parse(s: &str) -> Option<Encoding> {
+        match s {
+            "json" => Some(Encoding::Json),
+            "bin" => Some(Encoding::Bin),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Encoding::Json => "json",
+            Encoding::Bin => "bin",
+        }
+    }
+}
 
 /// Parsed client request.
 #[derive(Debug)]
@@ -23,12 +57,29 @@ pub enum Request {
     /// ERA diagnostics → finalize/cancel). Works after completion, as
     /// long as the tag route and the shard's ring retain the history.
     Trace { tag: u64 },
-    Sample { spec: RequestSpec, return_samples: bool, tag: Option<u64> },
+    Sample { spec: RequestSpec, return_samples: bool, tag: Option<u64>, encoding: Encoding },
 }
 
-/// Parse one request line.
+/// The counted payload a request line announces, if any: a `sample` op
+/// with a positive `init_bytes`. The framing layer calls this on every
+/// decoded line to decide whether to switch into counted mode before
+/// the request can be dispatched.
+pub fn announced_payload(j: &Json) -> Option<usize> {
+    if j.get("op").as_str() != Some("sample") {
+        return None;
+    }
+    j.get("init_bytes").as_usize().filter(|&n| n > 0)
+}
+
+/// Parse one request line (no counted payload attached).
 pub fn parse_request(line: &str) -> Result<Request, String> {
     let j = json::parse(line).map_err(|e| format!("{e:?}"))?;
+    request_from_json(&j, None)
+}
+
+/// Build a request from an already-parsed header object plus the
+/// counted init payload the header announced (if any).
+pub fn request_from_json(j: &Json, payload: Option<&[u8]>) -> Result<Request, String> {
     let op = j.get("op").as_str().ok_or("missing op")?;
     match op {
         "ping" => Ok(Request::Ping),
@@ -45,9 +96,20 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }
         "sample" => {
             let d = RequestSpec::default();
-            let init = match j.get("init") {
-                Json::Null => None,
-                rows => Some(tensor_from_rows(rows)?),
+            let init = match (payload, j.get("init")) {
+                (Some(_), rows) if *rows != Json::Null => {
+                    return Err("init and init_bytes are mutually exclusive".into());
+                }
+                (Some(bytes), _) => {
+                    let rows =
+                        j.get("init_rows").as_usize().ok_or("init_bytes needs init_rows")?;
+                    Some(tensor_from_le_payload(bytes, rows)?)
+                }
+                (None, _) if announced_payload(j).is_some() => {
+                    return Err("init_bytes announced but no payload delivered".into());
+                }
+                (None, Json::Null) => None,
+                (None, rows) => Some(tensor_from_rows(rows)?),
             };
             let task = TaskSpec {
                 guidance_scale: j.get("guidance_scale").as_f64().unwrap_or(0.0),
@@ -80,7 +142,14 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             };
             let return_samples = j.get("return_samples").as_bool().unwrap_or(false);
             let tag = j.get("tag").as_usize().map(|v| v as u64);
-            Ok(Request::Sample { spec, return_samples, tag })
+            let encoding = match j.get("encoding") {
+                Json::Null => Encoding::Json,
+                v => {
+                    let s = v.as_str().ok_or("encoding must be a string")?;
+                    Encoding::parse(s).ok_or_else(|| format!("unknown encoding '{s}'"))?
+                }
+            };
+            Ok(Request::Sample { spec, return_samples, tag, encoding })
         }
         other => Err(format!("unknown op '{other}'")),
     }
@@ -109,6 +178,26 @@ pub fn tensor_from_rows(j: &Json) -> Result<Tensor, String> {
         data.extend(v);
     }
     Ok(Tensor::from_vec(data, arr.len(), dim))
+}
+
+/// Parse a counted little-endian `init` payload (the binary sibling of
+/// [`tensor_from_rows`]). The row count comes from the header's
+/// `init_rows`; the dim is derived from the byte count.
+pub fn tensor_from_le_payload(bytes: &[u8], rows: usize) -> Result<Tensor, String> {
+    if rows == 0 {
+        return Err("init_rows must be positive".into());
+    }
+    if bytes.is_empty() {
+        return Err("init payload is empty".into());
+    }
+    if bytes.len() % 4 != 0 {
+        return Err(format!("init payload length {} is not a multiple of 4", bytes.len()));
+    }
+    let vals = bytes.len() / 4;
+    if vals % rows != 0 {
+        return Err(format!("init payload holds {vals} f32s, not divisible by {rows} rows"));
+    }
+    Tensor::from_le_bytes(bytes, rows, vals / rows)
 }
 
 /// Serialise a tensor as the raw row array `tensor_from_rows` parses
@@ -148,6 +237,80 @@ pub fn result_to_json(res: &SamplingResult, return_samples: bool) -> Json {
     obj
 }
 
+/// Serialise a finished request straight into `out` — byte-identical to
+/// `result_to_json(res, return_samples).to_string()` (golden-pinned)
+/// but without the intermediate `Json` tree (one `Json::Arr` node per
+/// row) or a fresh output `String` per reply. The session reply path
+/// appends into a pooled encode buffer instead.
+///
+/// The `Json` object serialiser iterates a `BTreeMap`, so fields go out
+/// in sorted key order; this writer hard-codes that order.
+pub fn write_result_json(res: &SamplingResult, return_samples: bool, out: &mut String) {
+    write_result_with(res, return_samples, None, out);
+}
+
+/// Serialise the binary-delivery header line (without the trailing
+/// `\n`): the same diagnostics as the JSON reply, plus `payload_bytes`
+/// announcing the counted raw little-endian f32 payload that follows —
+/// and never an inline `samples` array.
+pub fn write_result_header(res: &SamplingResult, payload_bytes: usize, out: &mut String) {
+    write_result_with(res, false, Some(payload_bytes), out);
+}
+
+fn write_result_with(
+    res: &SamplingResult,
+    return_samples: bool,
+    payload_bytes: Option<usize>,
+    out: &mut String,
+) {
+    out.push_str("{\"cancelled\":");
+    out.push_str(if res.cancelled { "true" } else { "false" });
+    if let Some(d) = res.delta_eps {
+        out.push_str(",\"delta_eps\":");
+        json::write_f64(d, out);
+    }
+    out.push_str(",\"dim\":");
+    json::write_f64(res.samples.cols() as f64, out);
+    out.push_str(",\"early_stop\":");
+    out.push_str(if res.early_stop { "true" } else { "false" });
+    out.push_str(",\"id\":");
+    json::write_f64(res.id as f64, out);
+    out.push_str(",\"nfe\":");
+    json::write_f64(res.nfe as f64, out);
+    out.push_str(",\"ok\":true");
+    if let Some(n) = payload_bytes {
+        out.push_str(",\"payload_bytes\":");
+        json::write_f64(n as f64, out);
+    }
+    out.push_str(",\"queue_ms\":");
+    json::write_f64(1e3 * res.queue_seconds, out);
+    out.push_str(",\"rows\":");
+    json::write_f64(res.samples.rows() as f64, out);
+    if return_samples {
+        // Shortest-round-trip f32 text tops out well under 14 chars;
+        // one reserve up front keeps the samples loop growth-free.
+        out.reserve(res.samples.rows() * (14 * res.samples.cols() + 3) + 16);
+        out.push_str(",\"samples\":[");
+        for r in 0..res.samples.rows() {
+            if r > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (i, v) in res.samples.row(r).iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::write_f64(f64::from(*v), out);
+            }
+            out.push(']');
+        }
+        out.push(']');
+    }
+    out.push_str(",\"total_ms\":");
+    json::write_f64(1e3 * res.total_seconds, out);
+    out.push('}');
+}
+
 /// Parse a response's samples back into a tensor (client side).
 pub fn samples_from_json(j: &Json) -> Result<crate::tensor::Tensor, String> {
     let rows = j.get("rows").as_usize().ok_or("rows")?;
@@ -175,16 +338,76 @@ mod tests {
     fn parses_sample_request_with_defaults() {
         let r = parse_request(r#"{"op":"sample","solver":"era-5@15","nfe":20}"#).unwrap();
         match r {
-            Request::Sample { spec, return_samples, tag } => {
+            Request::Sample { spec, return_samples, tag, encoding } => {
                 assert_eq!(spec.solver, "era-5@15");
                 assert_eq!(spec.nfe, 20);
                 assert_eq!(spec.dataset, "gmm8");
                 assert_eq!(spec.deadline_ms, None);
                 assert!(!return_samples);
                 assert_eq!(tag, None);
+                assert_eq!(encoding, Encoding::Json);
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn parses_encoding_negotiation() {
+        let r = parse_request(r#"{"op":"sample","encoding":"bin"}"#).unwrap();
+        match r {
+            Request::Sample { encoding, .. } => assert_eq!(encoding, Encoding::Bin),
+            _ => panic!("wrong variant"),
+        }
+        let r = parse_request(r#"{"op":"sample","encoding":"json"}"#).unwrap();
+        match r {
+            Request::Sample { encoding, .. } => assert_eq!(encoding, Encoding::Json),
+            _ => panic!("wrong variant"),
+        }
+        // Unknown encodings are rejected, not silently defaulted.
+        assert!(parse_request(r#"{"op":"sample","encoding":"xml"}"#).is_err());
+        assert!(parse_request(r#"{"op":"sample","encoding":7}"#).is_err());
+    }
+
+    #[test]
+    fn announced_payload_reads_sample_init_bytes() {
+        let j = json::parse(r#"{"op":"sample","init_rows":2,"init_bytes":16}"#).unwrap();
+        assert_eq!(announced_payload(&j), Some(16));
+        // Control ops never announce payloads, nor does a zero count.
+        let j = json::parse(r#"{"op":"ping","init_bytes":16}"#).unwrap();
+        assert_eq!(announced_payload(&j), None);
+        let j = json::parse(r#"{"op":"sample","init_bytes":0}"#).unwrap();
+        assert_eq!(announced_payload(&j), None);
+    }
+
+    #[test]
+    fn binary_init_upload_roundtrips_bitwise() {
+        let t = crate::tensor::Tensor::from_vec(vec![1.5, -2.25, 0.1, 4.0, 0.0, 9.75], 3, 2);
+        let bytes = t.to_le_bytes();
+        let j = json::parse(r#"{"op":"sample","init_rows":3,"init_bytes":24}"#).unwrap();
+        match request_from_json(&j, Some(&bytes)).unwrap() {
+            Request::Sample { spec, .. } => {
+                let init = spec.task.init.as_ref().unwrap();
+                assert_eq!((init.rows(), init.cols()), (3, 2));
+                assert_eq!(init.as_slice(), t.as_slice());
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Malformed binary uploads are rejected with specific errors.
+        let j = json::parse(r#"{"op":"sample","init_bytes":24}"#).unwrap();
+        assert!(request_from_json(&j, Some(&bytes)).unwrap_err().contains("init_rows"));
+        let j = json::parse(r#"{"op":"sample","init_rows":5,"init_bytes":24}"#).unwrap();
+        assert!(request_from_json(&j, Some(&bytes)).is_err());
+        let j = json::parse(r#"{"op":"sample","init_rows":3,"init_bytes":23}"#).unwrap();
+        assert!(request_from_json(&j, Some(&bytes[..23])).is_err());
+        // Both init forms at once are ambiguous.
+        let j = json::parse(
+            r#"{"op":"sample","init":[[1.0,2.0]],"init_rows":3,"init_bytes":24}"#,
+        )
+        .unwrap();
+        assert!(request_from_json(&j, Some(&bytes)).unwrap_err().contains("exclusive"));
+        // An announce without a delivered payload cannot dispatch.
+        let j = json::parse(r#"{"op":"sample","init_rows":3,"init_bytes":24}"#).unwrap();
+        assert!(request_from_json(&j, None).is_err());
     }
 
     #[test]
@@ -353,6 +576,67 @@ mod tests {
         assert!(j.get("delta_eps").as_f64().is_none());
         // Convergence-controller retirement marker rides every frame.
         assert_eq!(j.get("early_stop").as_bool(), Some(true));
+    }
+
+    fn golden_result(delta: Option<f64>) -> SamplingResult {
+        SamplingResult {
+            id: 5,
+            samples: crate::tensor::Tensor::from_vec(vec![1.0, 2.5, -3.0, 0.125], 2, 2),
+            nfe: 10,
+            queue_seconds: 0.0015,
+            total_seconds: 0.05,
+            cancelled: false,
+            early_stop: true,
+            delta_eps: delta,
+        }
+    }
+
+    #[test]
+    fn result_writer_matches_json_tree_bytes() {
+        // The allocation-free writer must stay byte-identical to the
+        // `Json` tree path for every field combination.
+        for return_samples in [false, true] {
+            for delta in [None, Some(0.25), Some(1e-7)] {
+                let res = golden_result(delta);
+                let mut fast = String::from("prefix|");
+                write_result_json(&res, return_samples, &mut fast);
+                let tree = result_to_json(&res, return_samples).to_string();
+                assert_eq!(fast, format!("prefix|{tree}"));
+            }
+        }
+    }
+
+    #[test]
+    fn result_writer_golden_pin() {
+        // Pinned literal: any byte-level drift in the legacy JSON reply
+        // is a wire-format break, caught here before it reaches peers.
+        let mut out = String::new();
+        write_result_json(&golden_result(Some(0.25)), true, &mut out);
+        assert_eq!(
+            out,
+            "{\"cancelled\":false,\"delta_eps\":0.25,\"dim\":2,\"early_stop\":true,\
+             \"id\":5,\"nfe\":10,\"ok\":true,\"queue_ms\":1.5,\"rows\":2,\
+             \"samples\":[[1,2.5],[-3,0.125]],\"total_ms\":50}"
+        );
+    }
+
+    #[test]
+    fn result_header_announces_payload_and_omits_samples() {
+        let res = golden_result(None);
+        let mut out = String::new();
+        write_result_header(&res, 16, &mut out);
+        assert_eq!(
+            out,
+            "{\"cancelled\":false,\"dim\":2,\"early_stop\":true,\"id\":5,\"nfe\":10,\
+             \"ok\":true,\"payload_bytes\":16,\"queue_ms\":1.5,\"rows\":2,\"total_ms\":50}"
+        );
+        // The header parses as ordinary JSON and carries the shape the
+        // client needs to size its payload read.
+        let j = json::parse(&out).unwrap();
+        assert_eq!(j.get("payload_bytes").as_usize(), Some(16));
+        assert_eq!(j.get("rows").as_usize(), Some(2));
+        assert_eq!(j.get("dim").as_usize(), Some(2));
+        assert!(j.get("samples").as_arr().is_none());
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //!
 //! The gateway's event loops own sockets and readiness; they delegate
 //! everything protocol-shaped to a [`Session`]: feed it whatever bytes
-//! the socket had ([`Session::on_bytes`]), drain its outgoing byte
-//! queue when the socket is writable ([`Session::out_slice`] /
+//! the socket had ([`Session::on_bytes`]), drain its outgoing segment
+//! queue when the socket is writable ([`Session::out_vectored`] /
 //! [`Session::consume_out`]), and poke it when a submitted request
 //! completes ([`Session::on_complete`]). The session never blocks and
 //! never touches a socket, so it unit-tests without any I/O and would
@@ -21,29 +21,41 @@
 //! (the stock [`super::client::Client`] runs one request at a time and
 //! never observes reordering).
 //!
+//! Zero-copy delivery (DESIGN.md §6): the outgoing queue is a queue of
+//! *segments*, not a flat byte buffer. Text frames (control replies,
+//! JSON results, binary headers) are `String`s drawn from a shared
+//! [`EncodePool`] and returned to it once written; a binary sample
+//! reply's payload segment holds the result tensor behind an `Arc` and
+//! is written straight from the engine-owned allocation — the final
+//! iterate's bytes go from lane engine to socket without a copy. The
+//! owner gathers several segments per syscall via
+//! [`Session::out_vectored`] + `writev`.
+//!
 //! Backpressure: the outgoing queue is bounded by
 //! [`SessionConfig::write_queue_cap`]. While it is over the cap,
 //! [`Session::wants_read`] turns false and the owner deregisters read
 //! interest — a peer that stops draining replies stops being read,
 //! instead of growing an unbounded buffer server-side.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{CancelHandle, CompletionNotify};
-use crate::json::Json;
+use crate::coordinator::{CancelHandle, CompletionNotify, SamplingResult};
+use crate::json::{self, Json};
 use crate::pool::{PoolTicket, WorkerPool};
 
-use super::codec::{encode_frame, FrameDecoder, MAX_FRAME_LEN};
-use super::{dispatch_async, err_json, sample_reply, Dispatched};
+use super::codec::{Frame, FrameDecoder, MAX_FRAME_LEN};
+use super::protocol::{announced_payload, write_result_header, write_result_json, Encoding};
+use super::{dispatch_parsed, err_json, Dispatched};
 
 /// Per-session protocol limits (shared by every connection of one
 /// gateway).
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
-    /// Cap on one unterminated request line; a peer exceeding it gets
-    /// one error reply and the connection closes (codec robustness
-    /// contract — the connection cannot resync past an unframed blob).
+    /// Cap on one unterminated request line or announced payload; a
+    /// peer exceeding it gets one error reply and the connection closes
+    /// (codec robustness contract — the connection cannot resync past
+    /// an unframed blob).
     pub max_frame_len: usize,
     /// Outgoing-queue size above which the session parks read interest.
     pub write_queue_cap: usize,
@@ -67,45 +79,160 @@ impl Default for SessionConfig {
 /// shard's loop thread, so implementations must only enqueue-and-wake.
 pub type ReadyFn = Arc<dyn Fn(u64) + Send + Sync>;
 
+/// Shared pool of reusable encode buffers. Every text frame a session
+/// emits is serialised into a `String` taken from here and returned
+/// once the socket consumed it, so a warm gateway serialises replies
+/// with no per-frame allocation. Bounded both ways: at most
+/// [`POOL_MAX_BUFS`] buffers are retained, and a buffer that grew past
+/// [`POOL_MAX_BUF_CAP`] (one giant `return_samples` reply) is dropped
+/// rather than pinned forever.
+#[derive(Default)]
+pub struct EncodePool {
+    bufs: Mutex<Vec<String>>,
+}
+
+/// Retention cap on pooled buffers (count).
+pub const POOL_MAX_BUFS: usize = 64;
+/// Retention cap on a single pooled buffer's capacity (bytes).
+pub const POOL_MAX_BUF_CAP: usize = 1024 * 1024;
+
+impl EncodePool {
+    pub fn new() -> EncodePool {
+        EncodePool::default()
+    }
+
+    /// Pop a cleared buffer, or a fresh one when the pool is dry.
+    pub fn take(&self) -> String {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a written buffer for reuse (cleared here, capacity kept).
+    pub fn put(&self, mut buf: String) {
+        if buf.capacity() == 0 || buf.capacity() > POOL_MAX_BUF_CAP {
+            return;
+        }
+        buf.clear();
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < POOL_MAX_BUFS {
+            bufs.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (test observability).
+    pub fn idle(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
 struct PendingRequest {
     ticket: PoolTicket,
     return_samples: bool,
     tag: Option<u64>,
     handle: CancelHandle,
+    encoding: Encoding,
 }
 
-/// Outgoing byte queue with amortized-O(1) front consumption (same
-/// compaction discipline as [`FrameDecoder`]).
-struct OutBuf {
-    buf: Vec<u8>,
-    start: usize,
+/// One queued outgoing segment. Headers and JSON replies are pooled
+/// text; a binary payload is the result tensor itself, viewed in place.
+enum OutSeg {
+    Text(String),
+    #[cfg(target_endian = "little")]
+    Samples(Arc<crate::tensor::Tensor>),
+    /// Big-endian fallback: payloads must be byte-swapped into an owned
+    /// buffer (the wire format is little-endian).
+    #[cfg(not(target_endian = "little"))]
+    Blob(Vec<u8>),
 }
 
-const OUT_COMPACT_THRESHOLD: usize = 16 * 1024;
+impl OutSeg {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            OutSeg::Text(s) => s.as_bytes(),
+            #[cfg(target_endian = "little")]
+            OutSeg::Samples(t) => t.as_le_bytes(),
+            #[cfg(not(target_endian = "little"))]
+            OutSeg::Blob(b) => b,
+        }
+    }
+}
 
-impl OutBuf {
-    fn new() -> OutBuf {
-        OutBuf { buf: Vec::new(), start: 0 }
+/// Outgoing segment queue. `front_pos` tracks the consumed prefix of
+/// the front segment; fully consumed segments pop off and (for text)
+/// return their buffer to the encode pool.
+struct OutQueue {
+    segs: VecDeque<OutSeg>,
+    front_pos: usize,
+    len: usize,
+}
+
+impl OutQueue {
+    fn new() -> OutQueue {
+        OutQueue { segs: VecDeque::new(), front_pos: 0, len: 0 }
     }
 
     fn len(&self) -> usize {
-        self.buf.len() - self.start
+        self.len
     }
 
-    fn slice(&self) -> &[u8] {
-        &self.buf[self.start..]
-    }
-
-    fn consume(&mut self, n: usize) {
-        self.start += n;
-        debug_assert!(self.start <= self.buf.len());
-        if self.start == self.buf.len() {
-            self.buf.clear();
-            self.start = 0;
-        } else if self.start >= OUT_COMPACT_THRESHOLD {
-            self.buf.drain(..self.start);
-            self.start = 0;
+    fn push(&mut self, seg: OutSeg) {
+        let n = seg.bytes().len();
+        if n == 0 {
+            return;
         }
+        self.len += n;
+        self.segs.push_back(seg);
+    }
+
+    fn front_slice(&self) -> &[u8] {
+        match self.segs.front() {
+            Some(seg) => &seg.bytes()[self.front_pos..],
+            None => &[],
+        }
+    }
+
+    /// Fill `out` with up to `out.len()` unconsumed segment slices, in
+    /// order; returns how many were filled.
+    fn vectored<'a>(&'a self, out: &mut [&'a [u8]]) -> usize {
+        let mut n = 0;
+        for (i, seg) in self.segs.iter().enumerate() {
+            if n == out.len() {
+                break;
+            }
+            let bytes = seg.bytes();
+            out[n] = if i == 0 { &bytes[self.front_pos..] } else { bytes };
+            n += 1;
+        }
+        n
+    }
+
+    fn consume(&mut self, mut n: usize, pool: &EncodePool) {
+        debug_assert!(n <= self.len);
+        self.len -= n.min(self.len);
+        while n > 0 {
+            let Some(front) = self.segs.front() else { break };
+            let remaining = front.bytes().len() - self.front_pos;
+            if n < remaining {
+                self.front_pos += n;
+                return;
+            }
+            n -= remaining;
+            self.front_pos = 0;
+            if let Some(OutSeg::Text(buf)) = self.segs.pop_front() {
+                pool.put(buf);
+            }
+        }
+        debug_assert_eq!(n, 0);
+    }
+
+    /// Drop everything queued, recycling text buffers.
+    fn clear(&mut self, pool: &EncodePool) {
+        while let Some(seg) = self.segs.pop_front() {
+            if let OutSeg::Text(buf) = seg {
+                pool.put(buf);
+            }
+        }
+        self.front_pos = 0;
+        self.len = 0;
     }
 }
 
@@ -114,7 +241,11 @@ impl OutBuf {
 pub struct Session {
     pool: Arc<WorkerPool>,
     decoder: FrameDecoder,
-    out: OutBuf,
+    out: OutQueue,
+    encode_pool: Arc<EncodePool>,
+    /// Parsed request header whose announced `init` payload is still
+    /// being counted in by the decoder.
+    pending_header: Option<Json>,
     pending: HashMap<u64, PendingRequest>,
     next_token: u64,
     write_queue_cap: usize,
@@ -127,10 +258,24 @@ pub struct Session {
 
 impl Session {
     pub fn new(pool: Arc<WorkerPool>, config: &SessionConfig, on_ready: ReadyFn) -> Session {
+        Session::with_encode_pool(pool, config, on_ready, Arc::new(EncodePool::new()))
+    }
+
+    /// Like [`Session::new`], but drawing encode buffers from a shared
+    /// pool — the gateway passes one pool per process so buffers warm
+    /// up across connections.
+    pub fn with_encode_pool(
+        pool: Arc<WorkerPool>,
+        config: &SessionConfig,
+        on_ready: ReadyFn,
+        encode_pool: Arc<EncodePool>,
+    ) -> Session {
         Session {
             pool,
             decoder: FrameDecoder::with_cap(config.max_frame_len),
-            out: OutBuf::new(),
+            out: OutQueue::new(),
+            encode_pool,
+            pending_header: None,
             pending: HashMap::new(),
             next_token: 0,
             write_queue_cap: config.write_queue_cap.max(1),
@@ -147,18 +292,44 @@ impl Session {
         }
         self.decoder.push(bytes);
         loop {
-            match self.decoder.next_frame() {
-                Ok(Some(frame)) => {
+            match self.decoder.next_any() {
+                Ok(Some(Frame::Line(frame))) => {
                     // Blank lines are keepalive noise on the blocking
                     // path too; skip without a reply.
                     if frame.trim().is_empty() {
                         continue;
                     }
-                    self.dispatch_frame(&frame);
+                    let header = match json::parse(&frame) {
+                        Ok(j) => j,
+                        Err(e) => {
+                            self.enqueue_json(&err_json(&format!("bad request: {e:?}")));
+                            continue;
+                        }
+                    };
+                    match announced_payload(&header) {
+                        None => self.dispatch_request(header, None),
+                        Some(n) => match self.decoder.expect_payload(n) {
+                            Ok(()) => self.pending_header = Some(header),
+                            Err(e) => {
+                                // A hostile announce cannot be skipped
+                                // past; reply once and close.
+                                self.enqueue_json(&err_json(&format!("bad request: {e}")));
+                                self.closed = true;
+                                break;
+                            }
+                        },
+                    }
+                }
+                Ok(Some(Frame::Payload(payload))) => {
+                    let header = self
+                        .pending_header
+                        .take()
+                        .expect("payload frame without a pending header");
+                    self.dispatch_request(header, Some(&payload));
                 }
                 Ok(None) => break,
                 Err(e) => {
-                    self.enqueue(&err_json(&format!("bad request: {e}")));
+                    self.enqueue_json(&err_json(&format!("bad request: {e}")));
                     self.closed = true;
                     break;
                 }
@@ -166,19 +337,28 @@ impl Session {
         }
     }
 
-    fn dispatch_frame(&mut self, frame: &str) {
+    fn dispatch_request(&mut self, header: Json, payload: Option<&[u8]>) {
         let token = self.next_token;
         self.next_token += 1;
         let on_ready = self.on_ready.clone();
         let notify: CompletionNotify = Arc::new(move || on_ready(token));
-        match dispatch_async(frame, &self.pool, self.default_conv_threshold, Some(notify)) {
-            Dispatched::Immediate(json) => self.enqueue(&json),
-            Dispatched::Pending { ticket, return_samples, tag, handle } => {
+        match dispatch_parsed(
+            &header,
+            payload,
+            &self.pool,
+            self.default_conv_threshold,
+            Some(notify),
+        ) {
+            Dispatched::Immediate(json) => self.enqueue_json(&json),
+            Dispatched::Pending { ticket, return_samples, tag, handle, encoding } => {
                 // The notify may already have fired (completion raced
                 // the insert); that is fine — the wake is queued behind
                 // this call on the owning loop, and `on_complete` finds
                 // the entry once we insert it here.
-                self.pending.insert(token, PendingRequest { ticket, return_samples, tag, handle });
+                self.pending.insert(
+                    token,
+                    PendingRequest { ticket, return_samples, tag, handle, encoding },
+                );
             }
         }
     }
@@ -199,13 +379,42 @@ impl Session {
                 if let Some(tag) = p.tag {
                     self.pool.deregister_tag(tag, &p.handle);
                 }
-                self.enqueue(&sample_reply(out, p.return_samples));
+                match out {
+                    Err(e) => self.enqueue_json(&err_json(&e)),
+                    Ok(res) => self.enqueue_result(res, p.return_samples, p.encoding),
+                }
             }
         }
     }
 
-    fn enqueue(&mut self, reply: &Json) {
-        encode_frame(&reply.to_string(), &mut self.out.buf);
+    /// Serialise a control/error reply into a pooled buffer.
+    fn enqueue_json(&mut self, reply: &Json) {
+        let mut buf = self.encode_pool.take();
+        reply.write_to(&mut buf);
+        buf.push('\n');
+        self.out.push(OutSeg::Text(buf));
+    }
+
+    /// Serialise a finished sample. Binary encoding with samples
+    /// requested emits a header line plus the tensor itself as a
+    /// zero-copy payload segment; everything else is a plain JSON
+    /// frame written by the allocation-free result writer.
+    fn enqueue_result(&mut self, res: SamplingResult, return_samples: bool, encoding: Encoding) {
+        let mut buf = self.encode_pool.take();
+        if encoding == Encoding::Bin && return_samples {
+            let payload_bytes = res.samples.len() * 4;
+            write_result_header(&res, payload_bytes, &mut buf);
+            buf.push('\n');
+            self.out.push(OutSeg::Text(buf));
+            #[cfg(target_endian = "little")]
+            self.out.push(OutSeg::Samples(Arc::new(res.samples)));
+            #[cfg(not(target_endian = "little"))]
+            self.out.push(OutSeg::Blob(res.samples.to_le_bytes()));
+        } else {
+            write_result_json(&res, return_samples, &mut buf);
+            buf.push('\n');
+            self.out.push(OutSeg::Text(buf));
+        }
     }
 
     /// False while the write queue is over cap (or the session is
@@ -218,13 +427,20 @@ impl Session {
         self.out.len() > 0
     }
 
+    /// The front segment's unconsumed bytes (the single-buffer write
+    /// path; [`Session::out_vectored`] gathers across segments).
     pub fn out_slice(&self) -> &[u8] {
-        self.out.slice()
+        self.out.front_slice()
+    }
+
+    /// Gather up to `out.len()` outgoing slices for one vectored write.
+    pub fn out_vectored<'a>(&'a self, out: &mut [&'a [u8]]) -> usize {
+        self.out.vectored(out)
     }
 
     /// Mark `n` outgoing bytes as written to the socket.
     pub fn consume_out(&mut self, n: usize) {
-        self.out.consume(n);
+        self.out.consume(n, &self.encode_pool);
     }
 
     /// True once a fatal protocol error's reply has fully drained.
@@ -238,7 +454,10 @@ impl Session {
 
     /// Drop all in-flight state on disconnect: cancel pending tickets
     /// (their replies are undeliverable; freeing pool capacity early
-    /// beats computing into the void) and release their tags.
+    /// beats computing into the void), release their tags, recycle
+    /// queued reply buffers, and reset the decoder — a half-received
+    /// payload or sticky announce error must not poison shared state
+    /// for the next connection drawing from the same pools.
     pub fn abort(&mut self) {
         for (_, p) in self.pending.drain() {
             if let Some(tag) = p.tag {
@@ -246,6 +465,9 @@ impl Session {
             }
             p.ticket.cancel();
         }
+        self.decoder.reset();
+        self.pending_header = None;
+        self.out.clear(&self.encode_pool);
         self.closed = true;
     }
 }
@@ -267,10 +489,18 @@ mod tests {
         Arc::new(WorkerPool::start(bank, PoolConfig::default()))
     }
 
+    fn drain_bytes(s: &mut Session) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        while s.has_output() {
+            let n = s.out_slice().len();
+            bytes.extend_from_slice(s.out_slice());
+            s.consume_out(n);
+        }
+        bytes
+    }
+
     fn drain(s: &mut Session) -> Vec<String> {
-        let text = String::from_utf8(s.out_slice().to_vec()).unwrap();
-        let n = s.out_slice().len();
-        s.consume_out(n);
+        let text = String::from_utf8(drain_bytes(s)).unwrap();
         text.lines().map(|l| l.to_string()).collect()
     }
 
@@ -316,6 +546,56 @@ mod tests {
     }
 
     #[test]
+    fn binary_sample_reply_is_header_plus_bitwise_payload() {
+        let p = pool();
+        let (ready, rx) = ready_channel();
+        let mut s = Session::new(p.clone(), &SessionConfig::default(), ready);
+        s.on_bytes(
+            b"{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":4,\"seed\":1,\
+              \"return_samples\":true,\"encoding\":\"bin\"}\n",
+        );
+        let token = rx.recv_timeout(Duration::from_secs(10)).expect("completion notify");
+        s.on_complete(token);
+        let bytes = drain_bytes(&mut s);
+        let nl = bytes.iter().position(|&b| b == b'\n').expect("header line");
+        let header = json::parse(std::str::from_utf8(&bytes[..nl]).unwrap()).unwrap();
+        let rows = header.get("rows").as_usize().unwrap();
+        let dim = header.get("dim").as_usize().unwrap();
+        let payload = header.get("payload_bytes").as_usize().unwrap();
+        assert_eq!((rows, dim), (4, 2));
+        assert_eq!(payload, rows * dim * 4);
+        assert_eq!(bytes.len(), nl + 1 + payload, "payload is counted, not framed");
+        assert!(header.get("samples").as_arr().is_none(), "no inline samples in bin mode");
+        let t = crate::tensor::Tensor::from_le_bytes(&bytes[nl + 1..], rows, dim).unwrap();
+        assert!(t.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn binary_init_upload_splits_across_reads() {
+        let p = pool();
+        let (ready, rx) = ready_channel();
+        let mut s = Session::new(p.clone(), &SessionConfig::default(), ready);
+        let init = crate::tensor::Tensor::from_vec(vec![0.5f32; 8], 4, 2);
+        let payload = init.to_le_bytes();
+        s.on_bytes(
+            b"{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":4,\"seed\":3,\
+              \"strength\":0.5,\"init_rows\":4,\"init_bytes\":32,\
+              \"return_samples\":true}\n",
+        );
+        assert_eq!(s.pending_requests(), 0, "request must wait for its payload");
+        s.on_bytes(&payload[..13]);
+        assert_eq!(s.pending_requests(), 0);
+        s.on_bytes(&payload[13..]);
+        assert_eq!(s.pending_requests(), 1, "payload completion dispatches the request");
+        let token = rx.recv_timeout(Duration::from_secs(10)).expect("completion notify");
+        s.on_complete(token);
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].contains("\"ok\":true"), "{}", replies[0]);
+        assert!(replies[0].contains("\"rows\":4"), "{}", replies[0]);
+    }
+
+    #[test]
     fn bad_request_line_gets_error_reply() {
         let p = pool();
         let (ready, _rx) = ready_channel();
@@ -345,6 +625,67 @@ mod tests {
     }
 
     #[test]
+    fn oversized_payload_announce_is_refused_and_fatal() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let cfg = SessionConfig { max_frame_len: 256, ..SessionConfig::default() };
+        let mut s = Session::new(p, &cfg, ready);
+        s.on_bytes(b"{\"op\":\"sample\",\"init_rows\":4,\"init_bytes\":100000}\n");
+        assert!(!s.wants_read());
+        let replies = drain(&mut s);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].contains("frame exceeds"), "{}", replies[0]);
+        assert!(s.should_close(), "hostile announce cannot be resynced past");
+        assert_eq!(s.pending_requests(), 0);
+    }
+
+    #[test]
+    fn abort_mid_payload_resets_decoder_and_recycles_buffers() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let encode_pool = Arc::new(EncodePool::new());
+        let cfg = SessionConfig::default();
+        let mut s =
+            Session::with_encode_pool(p.clone(), &cfg, ready.clone(), encode_pool.clone());
+        // A ping reply queued but never written, then a disconnect
+        // mid-payload: abort must recycle the reply buffer and clear
+        // the half-armed counted mode.
+        s.on_bytes(b"{\"op\":\"ping\"}\n{\"op\":\"sample\",\"init_rows\":2,\"init_bytes\":16}\n");
+        s.on_bytes(b"\x01\x02\x03"); // 3 of 16 announced payload bytes
+        assert!(s.has_output());
+        s.abort();
+        assert!(s.should_close());
+        assert!(!s.has_output(), "undeliverable replies are dropped");
+        assert_eq!(encode_pool.idle(), 1, "queued reply buffer returned to the pool");
+        // A fresh session sharing the pool starts clean.
+        let (ready2, _rx2) = ready_channel();
+        let mut s2 = Session::with_encode_pool(p, &cfg, ready2, encode_pool);
+        s2.on_bytes(b"{\"op\":\"ping\"}\n");
+        let replies = drain(&mut s2);
+        assert_eq!(replies.len(), 1);
+        assert!(replies[0].contains("\"pong\":true"), "{}", replies[0]);
+    }
+
+    #[test]
+    fn pooled_buffers_recycle_across_replies() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let encode_pool = Arc::new(EncodePool::new());
+        let mut s = Session::with_encode_pool(
+            p,
+            &SessionConfig::default(),
+            ready,
+            encode_pool.clone(),
+        );
+        for _ in 0..5 {
+            s.on_bytes(b"{\"op\":\"ping\"}\n");
+            let replies = drain(&mut s);
+            assert_eq!(replies.len(), 1);
+        }
+        assert_eq!(encode_pool.idle(), 1, "one buffer serves all sequential replies");
+    }
+
+    #[test]
     fn full_write_queue_parks_read_interest_until_drained() {
         let p = pool();
         let (ready, _rx) = ready_channel();
@@ -356,6 +697,29 @@ mod tests {
         let n = s.out_slice().len();
         s.consume_out(n);
         assert!(s.wants_read(), "drained queue resumes reads");
+    }
+
+    #[test]
+    fn vectored_gather_spans_segments() {
+        let p = pool();
+        let (ready, _rx) = ready_channel();
+        let mut s = Session::new(p, &SessionConfig::default(), ready);
+        s.on_bytes(b"{\"op\":\"ping\"}\n{\"op\":\"ping\"}\n{\"op\":\"ping\"}\n");
+        let mut slices: [&[u8]; 8] = [&[]; 8];
+        let n = s.out_vectored(&mut slices);
+        assert_eq!(n, 3, "one segment per reply frame");
+        let total: usize = slices[..n].iter().map(|sl| sl.len()).sum();
+        // Partially consume into the second segment; the gather must
+        // resume from the exact offset.
+        let cut = slices[0].len() + 2;
+        s.consume_out(cut);
+        let mut slices2: [&[u8]; 8] = [&[]; 8];
+        let n2 = s.out_vectored(&mut slices2);
+        assert_eq!(n2, 2);
+        let total2: usize = slices2[..n2].iter().map(|sl| sl.len()).sum();
+        assert_eq!(total2, total - cut);
+        s.consume_out(total2);
+        assert!(!s.has_output());
     }
 
     #[test]

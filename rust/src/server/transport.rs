@@ -53,11 +53,48 @@ impl EpollEvent {
     }
 }
 
+/// `struct iovec` (uapi/linux/uio.h): one gather entry for `writev`.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct IoVec {
+    base: *const u8,
+    len: usize,
+}
+
+/// Gather-write entry cap per `writev` call. The kernel allows 1024
+/// (`UIO_MAXIOV`); a reply burst rarely exceeds a handful of segments,
+/// so a small fixed array keeps the gather allocation-free.
+pub const MAX_IOVECS: usize = 16;
+
 extern "C" {
     fn epoll_create1(flags: i32) -> i32;
     fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
     fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
     fn close(fd: i32) -> i32;
+    fn writev(fd: i32, iov: *const IoVec, iovcnt: i32) -> isize;
+}
+
+/// Vectored write: submit up to [`MAX_IOVECS`] buffers in one syscall
+/// (header + zero-copy payload + pipelined next frame). Returns the
+/// bytes written, which may cover only a prefix of the slices — the
+/// caller consumes its queue by count, exactly as with `write`.
+/// `EAGAIN` surfaces as `WouldBlock`, like `TcpStream::write`.
+pub fn writev_fd(fd: RawFd, slices: &[&[u8]]) -> io::Result<usize> {
+    debug_assert!(!slices.is_empty() && slices.len() <= MAX_IOVECS);
+    let mut iov = [IoVec { base: std::ptr::null(), len: 0 }; MAX_IOVECS];
+    let n = slices.len().min(MAX_IOVECS);
+    for (entry, s) in iov.iter_mut().zip(slices.iter()) {
+        entry.base = s.as_ptr();
+        entry.len = s.len();
+    }
+    // SAFETY: the iovec array points at `n` live slices whose borrows
+    // outlast this call; the kernel only reads them.
+    let rc = unsafe { writev(fd, iov.as_ptr(), n as i32) };
+    if rc < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(rc as usize)
+    }
 }
 
 /// An owned epoll instance. One per event-loop thread; not `Sync` by
@@ -204,6 +241,30 @@ mod tests {
 
         waker.drain();
         assert_eq!(ep.wait(&mut events, 0).unwrap(), 0, "drained waker is quiet");
+    }
+
+    #[test]
+    fn writev_gathers_multiple_slices_in_one_call() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let n = writev_fd(a.as_raw_fd(), &[b"hel", b"lo ", b"world"]).unwrap();
+        assert_eq!(n, 11);
+        let mut buf = [0u8; 16];
+        let got = (&b).read(&mut buf).unwrap();
+        assert_eq!(&buf[..got], b"hello world");
+    }
+
+    #[test]
+    fn writev_on_a_full_pipe_is_would_block() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let chunk = [0u8; 64 * 1024];
+        let err = loop {
+            match writev_fd(a.as_raw_fd(), &[&chunk, &chunk]) {
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
     }
 
     #[test]

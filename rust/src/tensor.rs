@@ -65,6 +65,52 @@ impl Tensor {
         self.data
     }
 
+    /// The raw element bytes, little-endian, without copying. Only
+    /// available on little-endian targets, where the in-memory f32
+    /// layout *is* the wire layout — the binary delivery path sends
+    /// these straight from the engine-owned buffer to the socket.
+    #[cfg(target_endian = "little")]
+    pub fn as_le_bytes(&self) -> &[u8] {
+        // SAFETY: f32 has no padding or invalid bit patterns when viewed
+        // as bytes, the slice covers exactly `len * 4` initialised bytes,
+        // and u8 has alignment 1.
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        }
+    }
+
+    /// Owned little-endian element bytes (works on any endianness; the
+    /// big-endian fallback for encode paths that cannot reinterpret).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Rebuild a tensor from a counted little-endian f32 payload, as
+    /// received on the wire. Validates the byte count against the
+    /// announced shape.
+    pub fn from_le_bytes(bytes: &[u8], rows: usize, cols: usize) -> Result<Tensor, String> {
+        if bytes.len() % 4 != 0 {
+            return Err(format!("payload length {} is not a multiple of 4", bytes.len()));
+        }
+        if bytes.len() != rows * cols * 4 {
+            return Err(format!(
+                "payload holds {} f32s but shape is {}x{}",
+                bytes.len() / 4,
+                rows,
+                cols
+            ));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { data, rows, cols })
+    }
+
     /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]

@@ -17,8 +17,11 @@ use era_solver::metrics;
 use era_solver::pool::{PlacementPolicy, PoolConfig, WorkerPool};
 use era_solver::server::client::{generate_load, Client};
 use era_solver::server::gateway::{Gateway, GatewayConfig};
+use era_solver::server::protocol::Encoding;
 use era_solver::solvers::eps_model::AnalyticGmm;
 use era_solver::solvers::schedule::VpSchedule;
+use era_solver::solvers::TaskSpec;
+use era_solver::tensor::Tensor;
 
 fn mock_pool(shards: usize, config: CoordinatorConfig) -> Arc<WorkerPool> {
     let sched = VpSchedule::default();
@@ -339,5 +342,90 @@ fn oversized_request_line_is_refused_and_the_connection_closed() {
     // The server closes after the error: next read is EOF.
     line.clear();
     assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close");
+    gw.shutdown();
+}
+
+#[test]
+fn binary_and_json_deliveries_are_bitwise_identical() {
+    // The binary payload carries the result's raw f32 bits; the JSON
+    // path's shortest-round-trip decimals decode to the same bits — so
+    // the two encodings of one seeded request must agree exactly.
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let s = spec(64, 21);
+    let mut jc = Client::connect(gw.local_addr()).unwrap();
+    let (json_samples, _) = jc.sample(&s).unwrap();
+    let mut bc = Client::connect(gw.local_addr()).unwrap();
+    bc.set_encoding(Encoding::Bin);
+    let (bin_samples, _) = bc.sample(&s).unwrap();
+    assert_eq!((bin_samples.rows(), bin_samples.cols()), (64, 2));
+    assert_eq!(bin_samples.as_slice(), json_samples.as_slice());
+    gw.shutdown();
+}
+
+#[test]
+fn binary_init_upload_matches_json_init_through_the_gateway() {
+    // img2img with the init batch uploaded as a counted binary payload
+    // must land on the same trajectory as the JSON-rows upload.
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let init = Tensor::from_vec((0..64).map(|i| (i as f32) * 0.25 - 8.0).collect(), 32, 2);
+    let task = TaskSpec { strength: 0.5, init: Some(init), ..Default::default() };
+    let s = RequestSpec { n_samples: 32, seed: 3, task, ..Default::default() };
+    let mut jc = Client::connect(gw.local_addr()).unwrap();
+    let (json_samples, _) = jc.sample(&s).unwrap();
+    let mut bc = Client::connect(gw.local_addr()).unwrap();
+    bc.set_encoding(Encoding::Bin);
+    let (bin_samples, _) = bc.sample(&s).unwrap();
+    assert_eq!(bin_samples.as_slice(), json_samples.as_slice());
+    gw.shutdown();
+}
+
+#[test]
+fn cross_encoding_pipelining_on_one_connection_routes_correctly() {
+    // One connection pipelines a binary sample, a JSON sample (same
+    // seed), and a ping without reading. The ping answers first (it is
+    // enqueued while the samples are still in flight); each sample
+    // reply then self-identifies — `payload_bytes` means a counted
+    // binary payload follows, inline `samples` means JSON rows — and
+    // both decode to identical bits.
+    use std::io::{BufRead, BufReader, Read, Write};
+    let (gw, _pool) = gw_stack(1, CoordinatorConfig::default());
+    let stream = std::net::TcpStream::connect(gw.local_addr()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let req = |enc: &str| {
+        format!(
+            "{{\"op\":\"sample\",\"dataset\":\"gmm8\",\"n_samples\":32,\"seed\":7,\
+             \"return_samples\":true,\"encoding\":\"{enc}\"}}\n"
+        )
+    };
+    writer.write_all(req("bin").as_bytes()).unwrap();
+    writer.write_all(req("json").as_bytes()).unwrap();
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    writer.flush().unwrap();
+
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let pong = era_solver::json::parse(&line).unwrap();
+    assert_eq!(pong.get("pong").as_bool(), Some(true), "ping must overtake the samples");
+
+    let mut bin: Option<Tensor> = None;
+    let mut json_t: Option<Tensor> = None;
+    for _ in 0..2 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = era_solver::json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(true), "{line}");
+        let rows = j.get("rows").as_usize().unwrap();
+        let dim = j.get("dim").as_usize().unwrap();
+        if let Some(n) = j.get("payload_bytes").as_usize() {
+            let mut bytes = vec![0u8; n];
+            reader.read_exact(&mut bytes).unwrap();
+            bin = Some(Tensor::from_le_bytes(&bytes, rows, dim).unwrap());
+        } else {
+            json_t = Some(era_solver::server::protocol::samples_from_json(&j).unwrap());
+        }
+    }
+    let (bin, json_t) = (bin.expect("one binary reply"), json_t.expect("one JSON reply"));
+    assert_eq!(bin.as_slice(), json_t.as_slice(), "same seed, same bits across encodings");
     gw.shutdown();
 }

@@ -11,7 +11,7 @@ use era_solver::kernels::{PlanView, TrajectoryPlan};
 use era_solver::linalg;
 use era_solver::metrics::{self, Moments};
 use era_solver::rng::Rng;
-use era_solver::server::codec::{encode_frame, CodecError, FrameDecoder};
+use era_solver::server::codec::{encode_frame, CodecError, Frame, FrameDecoder};
 use era_solver::solvers::era::select_indices;
 use era_solver::solvers::lagrange;
 use era_solver::solvers::schedule::{make_grid, GridKind, VpSchedule};
@@ -834,5 +834,120 @@ fn prop_codec_never_panics_on_binary_garbage() {
             }
         }
         assert_eq!(frames, newlines, "case {case}: frame count vs newline count");
+    }
+}
+
+#[test]
+fn prop_codec_counted_payloads_reassemble_under_arbitrary_splits() {
+    // A mixed script of text lines and announced binary payloads
+    // (arbitrary bytes — embedded `\n`, NULs, invalid UTF-8) survives
+    // any chunking: after a header line of the form `P<len>` the test
+    // arms counted mode, the payload comes back byte-exact in one
+    // frame, and the decoder drops back to line scanning afterwards.
+    let mut rng = Rng::new(0xB1A0B);
+    for case in 0..CASES {
+        let n_items = 1 + rng.below(6) as usize;
+        let mut want: Vec<Frame> = Vec::new();
+        let mut bytes = Vec::new();
+        for _ in 0..n_items {
+            if rng.below(2) == 0 {
+                let line = random_frame_line(&mut rng);
+                bytes.extend_from_slice(line.as_bytes());
+                bytes.push(b'\n');
+                want.push(Frame::Line(line));
+            } else {
+                let len = rng.below(96) as usize;
+                let payload: Vec<u8> =
+                    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                let header = format!("P{len}");
+                bytes.extend_from_slice(header.as_bytes());
+                bytes.push(b'\n');
+                bytes.extend_from_slice(&payload);
+                want.push(Frame::Line(header));
+                want.push(Frame::Payload(payload));
+            }
+        }
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut at = 0;
+        while at < bytes.len() {
+            let chunk = match rng.below(3) {
+                0 => 1,
+                1 => 1 + rng.below(9) as usize,
+                _ => bytes.len() - at,
+            };
+            let end = (at + chunk).min(bytes.len());
+            d.push(&bytes[at..end]);
+            at = end;
+            while let Some(f) = d.next_any().expect("script stays under the cap") {
+                if let Frame::Line(l) = &f {
+                    if let Some(n) = l.strip_prefix('P').and_then(|n| n.parse::<usize>().ok()) {
+                        d.expect_payload(n).expect("announced length is under the cap");
+                    }
+                }
+                got.push(f);
+            }
+        }
+        assert_eq!(got, want, "case {case}");
+        assert_eq!(d.buffered(), 0, "case {case}: bytes left over");
+        assert!(!d.awaiting_payload(), "case {case}: counted mode leaked");
+    }
+}
+
+#[test]
+fn prop_codec_truncated_payload_is_need_more_never_partial() {
+    // An announced payload is `Ok(None)` at every strict prefix — never
+    // a short frame — and the final byte delivers it whole, leaving the
+    // decoder back in line mode.
+    let mut rng = Rng::new(0x7A710AD);
+    for case in 0..CASES {
+        let len = 1 + rng.below(128) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let mut d = FrameDecoder::new();
+        d.expect_payload(len).unwrap();
+        assert!(d.awaiting_payload(), "case {case}");
+        let mut at = 0;
+        while at < len {
+            let end = (at + 1 + rng.below(7) as usize).min(len);
+            if end < len {
+                d.push(&payload[at..end]);
+                assert_eq!(d.next_any(), Ok(None), "case {case}: partial at byte {end}");
+            } else {
+                d.push(&payload[at..end]);
+            }
+            at = end;
+        }
+        assert_eq!(d.next_any(), Ok(Some(Frame::Payload(payload))), "case {case}");
+        assert!(!d.awaiting_payload(), "case {case}: counted mode leaked");
+        assert_eq!(d.next_any(), Ok(None), "case {case}: trailing frame");
+    }
+}
+
+#[test]
+fn prop_codec_oversized_payload_announce_is_sticky_until_reset() {
+    // Announcing a payload above the cap errors immediately, the error
+    // repeats on every later call no matter what bytes arrive (the
+    // stream cannot resync past an unframed blob), and only `reset`
+    // returns the decoder to service.
+    let mut rng = Rng::new(0x51C4B);
+    for case in 0..CASES {
+        let cap = 1 + rng.below(64) as usize;
+        let announced = cap + 1 + rng.below(64) as usize;
+        let mut d = FrameDecoder::with_cap(cap);
+        let Err(CodecError::Oversized { len, cap: seen }) = d.expect_payload(announced) else {
+            panic!("case {case}: over-cap announce accepted");
+        };
+        assert_eq!((len, seen), (announced, cap), "case {case}");
+        for _ in 0..3 {
+            d.push(&vec![b'x'; 1 + rng.below(16) as usize]);
+            assert!(d.next_any().is_err(), "case {case}: error not sticky");
+        }
+        d.reset();
+        d.push(b"ok\n");
+        assert_eq!(
+            d.next_any(),
+            Ok(Some(Frame::Line("ok".into()))),
+            "case {case}: reset did not clear the failure"
+        );
     }
 }
